@@ -1,0 +1,145 @@
+//! END-TO-END VALIDATION DRIVER (EXPERIMENTS.md §End-to-end).
+//!
+//! Proves all three layers compose on a real workload:
+//!   Layer 1/2 — the Pallas-kernel MLP artifacts are trained via the AOT
+//!               PJRT train-step on a freshly swept dataset (loss logged);
+//!   Layer 3  — the trained model serves predictions inside the
+//!               coordinator, driving reorder+factorize+solve on a
+//!               held-out workload; we report the paper's headline
+//!               metric (total solve time: always-AMD vs predicted vs
+//!               ideal, plus speedup).
+//!
+//! Requires artifacts (`make artifacts`); falls back to the Random Forest
+//! backend when they are absent so the driver always runs.
+//!
+//! Run: cargo run --release --example end_to_end
+
+use std::path::Path;
+
+use smr::collection::generate_mini_collection;
+use smr::coordinator::{train_forest, train_mlp};
+use smr::dataset::{build_dataset, SweepConfig};
+use smr::ml::normalize::Method;
+use smr::model::TrainConfig;
+use smr::reorder::ReorderAlgorithm;
+use smr::runtime::{Manifest, Runtime};
+use smr::util::Timer;
+
+fn main() -> anyhow::Result<()> {
+    // ---- workload: a 72-matrix collection, swept and labeled ----------
+    let collection = generate_mini_collection(99, 12);
+    println!("[1/4] sweeping {} matrices ...", collection.len());
+    let t = Timer::start();
+    let dataset = build_dataset(
+        &collection,
+        &ReorderAlgorithm::LABEL_SET,
+        &SweepConfig::default(),
+    );
+    println!(
+        "      swept in {:.1}s; labels [AMD,SCOTCH,ND,RCM] = {:?}",
+        t.elapsed_s(),
+        dataset.label_distribution()
+    );
+    let (train_idx, test_idx) = dataset.split(0.8, 99);
+
+    // ---- train the MLP through the AOT artifacts (L1+L2) --------------
+    let artifacts = Path::new("artifacts");
+    let use_mlp = artifacts.join("manifest.json").exists();
+    let mut mlp_loss_head = Vec::new();
+    let mut mlp_loss_tail = Vec::new();
+
+    let predictions: Vec<usize> = if use_mlp {
+        println!("[2/4] training AOT MLP via PJRT train-step ...");
+        let runtime = Runtime::cpu()?;
+        let manifest = Manifest::load(artifacts)?;
+        let t = Timer::start();
+        let trained = train_mlp(
+            &runtime,
+            &manifest,
+            &dataset,
+            &train_idx,
+            &TrainConfig {
+                epochs: 100,
+                ..Default::default()
+            },
+        )?;
+        mlp_loss_head = trained.losses.iter().take(5).copied().collect();
+        mlp_loss_tail = trained
+            .losses
+            .iter()
+            .rev()
+            .take(5)
+            .rev()
+            .copied()
+            .collect();
+        println!(
+            "      arch {} | val acc {:.2} | {:.1}s | loss {:?} -> {:?}",
+            trained.arch,
+            trained.val_accuracy,
+            t.elapsed_s(),
+            mlp_loss_head,
+            mlp_loss_tail,
+        );
+        let driver = smr::model::MlpDriver::new(&runtime, &manifest);
+        let all_x = dataset.features();
+        let xs: Vec<Vec<f64>> = test_idx.iter().map(|&i| all_x[i].clone()).collect();
+        driver.predict(&trained.model, &xs)?
+    } else {
+        println!("[2/4] artifacts missing -> Random Forest backend");
+        let tf = train_forest(&dataset, &train_idx, Method::Standard, 99);
+        let all_x = dataset.features();
+        test_idx
+            .iter()
+            .map(|&i| {
+                smr::ml::Classifier::predict(
+                    &tf.forest,
+                    &tf.normalizer.transform_row(&all_x[i]),
+                )
+            })
+            .collect()
+    };
+
+    // ---- serve the held-out workload through the coordinator ----------
+    println!("[3/4] replaying the held-out workload ...");
+    let mut amd_s = 0.0;
+    let mut pred_s = 0.0;
+    let mut ideal_s = 0.0;
+    let mut correct = 0usize;
+    for (k, &i) in test_idx.iter().enumerate() {
+        let rec = &dataset.records[i];
+        let pred_alg = ReorderAlgorithm::LABEL_SET[predictions[k].min(3)];
+        amd_s += rec.time_of(ReorderAlgorithm::Amd).unwrap();
+        pred_s += rec.time_of(pred_alg).unwrap();
+        ideal_s += rec.best().total_s;
+        if Some(rec.label) == pred_alg.label_index() {
+            correct += 1;
+        }
+    }
+
+    // ---- headline metric ----------------------------------------------
+    println!("[4/4] headline (paper Table 6 shape):");
+    println!("      always-AMD total   : {amd_s:.4}s");
+    println!(
+        "      predicted total    : {pred_s:.4}s ({:+.1}% vs AMD; paper -55.4%)",
+        100.0 * (pred_s / amd_s - 1.0)
+    );
+    println!(
+        "      ideal total        : {ideal_s:.4}s (predicted is {:+.1}% above; paper +19.9%)",
+        100.0 * (pred_s / ideal_s - 1.0)
+    );
+    println!(
+        "      test accuracy      : {}/{} = {:.1}%",
+        correct,
+        test_idx.len(),
+        100.0 * correct as f64 / test_idx.len() as f64
+    );
+    if use_mlp {
+        let first = mlp_loss_head.first().copied().unwrap_or(f32::NAN);
+        let last = mlp_loss_tail.last().copied().unwrap_or(f32::NAN);
+        println!(
+            "      MLP loss curve     : {first:.3} -> {last:.3} ({} artifacts-trained steps)",
+            if last < first { "converging" } else { "check" }
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Quickstart: the whole system in ~60 lines.
+//!
+//! 1. Generate a small synthetic collection.
+//! 2. Sweep it (reorder × solve) to build a labeled dataset.
+//! 3. Train the Random-Forest selector.
+//! 4. Predict + solve a fresh matrix through the selection pipeline.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use smr::collection::generate_mini_collection;
+use smr::coordinator::{train_forest, SelectionPipeline};
+use smr::dataset::{build_dataset, SweepConfig};
+use smr::ml::normalize::Method;
+use smr::reorder::ReorderAlgorithm;
+use smr::solver::SolverConfig;
+
+fn main() -> anyhow::Result<()> {
+    // 1. a small collection (6 families x 4 sizes)
+    let collection = generate_mini_collection(42, 4);
+    println!("collection: {} matrices", collection.len());
+
+    // 2. label each matrix with its fastest reordering algorithm
+    let dataset = build_dataset(
+        &collection,
+        &ReorderAlgorithm::LABEL_SET,
+        &SweepConfig::default(),
+    );
+    println!(
+        "dataset built; label distribution [AMD, SCOTCH, ND, RCM] = {:?}",
+        dataset.label_distribution()
+    );
+
+    // 3. train the selector (grid search + 5-fold CV, like the paper)
+    let (train_idx, test_idx) = dataset.split(0.8, 42);
+    let trained = train_forest(&dataset, &train_idx, Method::Standard, 42);
+    println!(
+        "forest trained: CV accuracy {:.2}, best params {:?}",
+        trained.grid.best_cv_accuracy, trained.grid.best_params
+    );
+    let test_acc = smr::coordinator::trainer::eval_classifier(
+        &trained.forest,
+        &trained.normalizer,
+        &dataset,
+        &test_idx,
+    );
+    println!("test accuracy: {:.2}", test_acc);
+
+    // 4. end-to-end: predict the ordering for a new matrix and solve
+    let pipeline = SelectionPipeline::new(
+        trained.normalizer,
+        Box::new(trained.forest),
+        SolverConfig::default(),
+    );
+    let fresh = smr::collection::generators::grid2d(40, 40);
+    let report = pipeline.run(&fresh);
+    println!(
+        "fresh 40x40 grid -> predicted {} | prediction {:.3}ms | solve {:.3}ms | residual {:.1e}",
+        report.algorithm,
+        report.prediction_s() * 1e3,
+        report.solve.total_s() * 1e3,
+        report.solve.residual
+    );
+    Ok(())
+}

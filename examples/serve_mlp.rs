@@ -1,0 +1,125 @@
+//! End-to-end serving demo with the AOT MLP (Pallas kernels via PJRT):
+//! train the MLP through the AOT train-step executable, stand up the
+//! batched prediction service, fire concurrent requests at it, and report
+//! latency/throughput — the serving-paper-style driver for this system.
+//!
+//! Requires artifacts: `make artifacts` first.
+//! Run: `cargo run --release --example serve_mlp`
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use smr::collection::generate_mini_collection;
+use smr::coordinator::service::Backend;
+use smr::coordinator::{train_mlp, BatcherConfig, PredictionService};
+use smr::dataset::{build_dataset, SweepConfig};
+use smr::features;
+use smr::model::TrainConfig;
+use smr::reorder::ReorderAlgorithm;
+use smr::runtime::{Manifest, Runtime};
+use smr::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("artifacts/manifest.json missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    // dataset + MLP training through the AOT train-step executable
+    let collection = generate_mini_collection(7, 4);
+    let dataset = build_dataset(
+        &collection,
+        &ReorderAlgorithm::LABEL_SET,
+        &SweepConfig::default(),
+    );
+    let (train_idx, test_idx) = dataset.split(0.8, 7);
+    let trained = {
+        let runtime = Runtime::cpu()?;
+        println!("PJRT platform: {}", runtime.platform());
+        let manifest = Manifest::load(artifacts)?;
+        println!(
+            "artifacts: {} ({} archs)",
+            manifest.artifacts.len(),
+            manifest.archs().len()
+        );
+        let cfg = TrainConfig {
+            epochs: 80,
+            ..Default::default()
+        };
+        train_mlp(&runtime, &manifest, &dataset, &train_idx, &cfg)?
+    };
+    println!(
+        "MLP[{}] trained: val accuracy {:.2}, final loss {:.3}",
+        trained.arch,
+        trained.val_accuracy,
+        trained.losses.last().copied().unwrap_or(f32::NAN)
+    );
+
+    // serving: dedicated runtime thread + dynamic batcher
+    let svc = Arc::new(PredictionService::spawn(
+        Backend::Mlp {
+            artifacts_dir: artifacts.to_path_buf(),
+            model: trained.model,
+        },
+        BatcherConfig {
+            max_batch: 64,
+            max_wait: std::time::Duration::from_millis(2),
+        },
+    )?);
+
+    // concurrent client load: 8 client threads x 50 requests
+    let feats: Vec<Vec<f64>> = collection
+        .iter()
+        .map(|m| features::extract(&m.matrix).to_vec())
+        .collect();
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..8 {
+        let svc = svc.clone();
+        let feats = feats.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut lat = Vec::new();
+            for k in 0..50 {
+                let t = Instant::now();
+                let _alg = svc.predict(&feats[(c * 50 + k) % feats.len()]).unwrap();
+                lat.push(t.elapsed().as_secs_f64());
+            }
+            lat
+        }));
+    }
+    let mut latencies = Vec::new();
+    for h in handles {
+        latencies.extend(h.join().unwrap());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "served {} concurrent predictions in {:.3}s -> {:.0} req/s",
+        latencies.len(),
+        wall,
+        latencies.len() as f64 / wall
+    );
+    println!(
+        "latency p50 {:.2}ms  p99 {:.2}ms  mean batch size {:.1}",
+        stats::percentile(&latencies, 50.0) * 1e3,
+        stats::percentile(&latencies, 99.0) * 1e3,
+        svc.stats.mean_batch_size()
+    );
+
+    // sanity: test-split accuracy served through the batcher
+    let all_x = dataset.features();
+    let mut correct = 0;
+    for &i in &test_idx {
+        let alg = svc.predict(&all_x[i])?;
+        if alg.label_index() == Some(dataset.records[i].label) {
+            correct += 1;
+        }
+    }
+    println!(
+        "served test accuracy: {}/{} (same model as offline eval)",
+        correct,
+        test_idx.len()
+    );
+    Ok(())
+}

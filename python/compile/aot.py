@@ -1,0 +1,122 @@
+"""AOT lowering: JAX/Pallas model -> HLO *text* artifacts for the Rust runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 (what the
+published `xla` 0.1.6 crate links) rejects (`proto.id() <= INT_MAX`). The
+text parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md and gen_hlo.py there.
+
+Emits, per architecture variant in `model.ARCHS`:
+    artifacts/mlp_<arch>_predict_b<B>.hlo.txt   for B in PREDICT_BATCHES
+    artifacts/mlp_<arch>_train_b<B>.hlo.txt     for B in TRAIN_BATCHES
+plus artifacts/manifest.json describing every artifact's input/output
+layout so the Rust runtime can load them without re-deriving shapes.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.linear import vmem_bytes
+
+PREDICT_BATCHES = (1, 8, 64, 256)
+TRAIN_BATCHES = (64,)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_predict(arch: str, batch: int) -> str:
+    specs = model.predict_specs(arch, batch)
+    return to_hlo_text(jax.jit(model.predict_fn).lower(*specs))
+
+
+def lower_train(arch: str, batch: int) -> str:
+    specs = model.train_specs(arch, batch)
+    return to_hlo_text(jax.jit(model.train_step_fn).lower(*specs))
+
+
+def manifest_entry(kind: str, arch: str, batch: int, path: str) -> dict:
+    h1, h2 = model.ARCHS[arch]
+    pshapes = [list(s) for _, s in model.param_shapes(arch)]
+    entry = {
+        "kind": kind,
+        "arch": arch,
+        "h1": h1,
+        "h2": h2,
+        "batch": batch,
+        "path": path,
+        "n_features": model.N_FEATURES,
+        "n_classes": model.N_CLASSES,
+        "param_shapes": pshapes,
+        # worst-case single-step VMEM estimate across the three layers
+        "vmem_bytes": max(
+            vmem_bytes(batch, model.N_FEATURES, h1),
+            vmem_bytes(batch, h1, h2),
+            vmem_bytes(batch, h2, model.N_CLASSES),
+        ),
+    }
+    if kind == "predict":
+        entry["inputs"] = (
+            [n for n, _ in model.param_shapes(arch)]
+            + ["mean", "std", "x"]
+        )
+        entry["outputs"] = ["probs"]
+    else:
+        pnames = [n for n, _ in model.param_shapes(arch)]
+        entry["inputs"] = (
+            pnames
+            + ["v_" + n for n in pnames]
+            + ["mean", "std", "x", "onehot", "lr", "momentum"]
+        )
+        entry["outputs"] = pnames + ["v_" + n for n in pnames] + ["loss"]
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--archs", default=",".join(model.ARCHS))
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    entries = []
+    for arch in args.archs.split(","):
+        for batch in PREDICT_BATCHES:
+            name = f"mlp_{arch}_predict_b{batch}.hlo.txt"
+            path = os.path.join(args.out_dir, name)
+            text = lower_predict(arch, batch)
+            with open(path, "w") as f:
+                f.write(text)
+            entries.append(manifest_entry("predict", arch, batch, name))
+            print(f"wrote {path} ({len(text)} chars)")
+        for batch in TRAIN_BATCHES:
+            name = f"mlp_{arch}_train_b{batch}.hlo.txt"
+            path = os.path.join(args.out_dir, name)
+            text = lower_train(arch, batch)
+            with open(path, "w") as f:
+                f.write(text)
+            entries.append(manifest_entry("train", arch, batch, name))
+            print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = {"artifacts": entries}
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(entries)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

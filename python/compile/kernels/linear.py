@@ -1,0 +1,82 @@
+"""Layer-1 Pallas kernel: fused dense layer (matmul + bias + optional ReLU).
+
+This is the compute hot-spot of the MLP classifier: every predict and
+train-step invocation is dominated by three of these layers. The kernel
+fuses the bias add and ReLU epilogue into the matmul tile so the
+activation never round-trips through HBM between ops.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid tiles the
+batch dimension; each program instance holds an (bm, K) slab of the
+input and the full (K, N) weight panel in VMEM and issues an MXU-shaped
+``jnp.dot`` with float32 accumulation. For this model K, N <= 128, so
+weights always fit a single VMEM panel and only the batch needs tiling —
+the BlockSpec below is exactly the HBM->VMEM schedule a CUDA kernel
+would express with threadblocks over rows.
+
+Must be lowered with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    """One grid step: o = act(x_tile @ W + b) for a (bm, K) input tile."""
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...].astype(jnp.float32)[None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def pick_block_m(batch: int) -> int:
+    """Batch-tile size: one tile for small batches, 128-row tiles (an
+    MXU-friendly sublane multiple) for large ones."""
+    if batch <= 128:
+        return batch
+    for bm in (128, 64, 32, 16, 8):
+        if batch % bm == 0:
+            return bm
+    return batch  # odd large batch: single tile, still correct
+
+
+def linear(x, w, b, *, relu: bool = False, block_m: int | None = None):
+    """Fused ``act(x @ w + b)`` as a Pallas call.
+
+    x: (B, K), w: (K, N), b: (N,) -> (B, N), dtype follows x.
+    """
+    batch, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+    bm = block_m or pick_block_m(batch)
+    grid = (pl.cdiv(batch, bm),)
+    return pl.pallas_call(
+        functools.partial(_linear_kernel, relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),   # input: batch-tiled
+            pl.BlockSpec((k, n), lambda i: (0, 0)),    # weights: resident panel
+            pl.BlockSpec((n,), lambda i: (0,)),        # bias: resident
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, n), x.dtype),
+        interpret=True,
+    )(x, w, b)
+
+
+def vmem_bytes(batch: int, k: int, n: int, *, block_m: int | None = None,
+               itemsize: int = 4) -> int:
+    """Estimated VMEM footprint of one grid step (input tile + weight
+    panel + bias + output tile + f32 accumulator). Used by DESIGN.md
+    §Perf to check each variant against the ~16 MiB/core VMEM budget."""
+    bm = block_m or pick_block_m(batch)
+    tiles = bm * k + k * n + n + bm * n
+    acc = bm * n  # f32 accumulator
+    return (tiles + acc) * itemsize

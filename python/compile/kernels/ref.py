@@ -1,0 +1,58 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has an exact (up to float tolerance)
+pure ``jax.numpy`` counterpart here. The pytest suite sweeps shapes and
+dtypes (hypothesis) and asserts ``allclose`` between kernel and oracle —
+this file is the single source of numerical truth for Layer 1.
+"""
+
+import jax.numpy as jnp
+
+
+def linear_ref(x, w, b, *, relu: bool = False):
+    """Dense layer oracle: ``x @ w + b`` with optional ReLU epilogue.
+
+    x: (B, K), w: (K, N), b: (N,). Accumulation in float32 (matches the
+    kernel's accumulator dtype).
+    """
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    y = y + b.astype(jnp.float32)[None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def standardize_ref(x, mean, std, *, eps: float = 1e-8):
+    """Feature standardization oracle: ``(x - mean) / (std + eps)``.
+
+    x: (B, F), mean/std: (F,). The epsilon guards constant features
+    (std == 0), which occur for e.g. ``nnz_min`` on diagonal collections.
+    """
+    return (x - mean[None, :]) / (std[None, :] + eps)
+
+
+def softmax_ref(logits):
+    """Row-wise numerically-stable softmax oracle. logits: (B, C)."""
+    z = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(z)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def xent_ref(logits, onehot):
+    """Mean softmax cross-entropy oracle. logits/onehot: (B, C)."""
+    z = logits - jnp.max(logits, axis=-1, keepdims=True)
+    logsumexp = jnp.log(jnp.sum(jnp.exp(z), axis=-1))
+    ll = jnp.sum(z * onehot, axis=-1) - logsumexp
+    return -jnp.mean(ll)
+
+
+def mlp_forward_ref(params, x, mean, std):
+    """Full forward-pass oracle for the 3-layer MLP classifier.
+
+    params: (w1, b1, w2, b2, w3, b3). Returns logits (B, 4).
+    """
+    w1, b1, w2, b2, w3, b3 = params
+    h = standardize_ref(x, mean, std)
+    h = linear_ref(h, w1, b1, relu=True)
+    h = linear_ref(h, w2, b2, relu=True)
+    return linear_ref(h, w3, b3, relu=False)

@@ -1,0 +1,67 @@
+"""Layer-1 Pallas kernels: row-wise softmax and softmax cross-entropy.
+
+``softmax`` closes the predict path (logits -> class probabilities that
+the Rust coordinator argmaxes); ``xent_per_row`` provides the per-row
+loss for the train-step artifact (the mean reduction happens at Layer 2
+so jax.grad differentiates through a plain jnp.mean).
+
+Both are numerically stable (max-subtracted) and computed in float32.
+The class dimension here is 4 (RCM/AMD/ND/SCOTCH), so a whole (bm, C)
+tile trivially fits VMEM; the grid only tiles the batch.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .linear import pick_block_m
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    z = x - jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(z)
+    o_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+def softmax(logits, *, block_m: int | None = None):
+    """Row-wise stable softmax. logits: (B, C) -> (B, C)."""
+    batch, c = logits.shape
+    bm = block_m or pick_block_m(batch)
+    grid = (pl.cdiv(batch, bm),)
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, c), logits.dtype),
+        interpret=True,
+    )(logits)
+
+
+def _xent_kernel(x_ref, y_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+    z = x - jnp.max(x, axis=-1, keepdims=True)
+    logsumexp = jnp.log(jnp.sum(jnp.exp(z), axis=-1))
+    ll = jnp.sum(z * y, axis=-1) - logsumexp
+    o_ref[...] = (-ll).astype(o_ref.dtype)
+
+
+def xent_per_row(logits, onehot, *, block_m: int | None = None):
+    """Per-row softmax cross-entropy. logits/onehot: (B, C) -> (B,)."""
+    batch, c = logits.shape
+    assert onehot.shape == (batch, c)
+    bm = block_m or pick_block_m(batch)
+    grid = (pl.cdiv(batch, bm),)
+    return pl.pallas_call(
+        _xent_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, c), lambda i: (i, 0)),
+            pl.BlockSpec((bm, c), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((batch,), logits.dtype),
+        interpret=True,
+    )(logits, onehot)

@@ -1,0 +1,46 @@
+"""Layer-1 Pallas kernel: feature standardization ``(x - mean) / (std + eps)``.
+
+This runs on the serving hot path: raw Table-3 feature vectors arrive
+from the Rust coordinator and are standardized inside the same HLO module
+as the MLP forward pass, so normalization statistics travel with the
+model artifact instead of living in separate Rust-side state.
+
+Elementwise over a (bm, F) tile with the (F,) statistics resident; the
+epsilon guards constant features (std == 0).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .linear import pick_block_m
+
+
+def _standardize_kernel(x_ref, mean_ref, std_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    mean = mean_ref[...].astype(jnp.float32)[None, :]
+    std = std_ref[...].astype(jnp.float32)[None, :]
+    o_ref[...] = ((x - mean) / (std + eps)).astype(o_ref.dtype)
+
+
+def standardize(x, mean, std, *, eps: float = 1e-8,
+                block_m: int | None = None):
+    """Standardize features. x: (B, F), mean/std: (F,) -> (B, F)."""
+    batch, f = x.shape
+    assert mean.shape == (f,) and std.shape == (f,)
+    bm = block_m or pick_block_m(batch)
+    grid = (pl.cdiv(batch, bm),)
+    return pl.pallas_call(
+        functools.partial(_standardize_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, f), lambda i: (i, 0)),
+            pl.BlockSpec((f,), lambda i: (0,)),
+            pl.BlockSpec((f,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, f), x.dtype),
+        interpret=True,
+    )(x, mean, std)

@@ -1,0 +1,210 @@
+"""Layer-2 JAX model: the MLP reordering-algorithm classifier.
+
+The paper trains seven scikit-learn classifiers; six classical ones are
+reimplemented in Rust (`rust/src/ml/`), and the MLP — the only one with a
+dense-compute hot path — lives here as a JAX computation built from the
+Layer-1 Pallas kernels. Both the forward (predict) pass and a full
+SGD+momentum training step are AOT-lowered to HLO text by `aot.py` and
+executed from Rust via PJRT; Python never runs at dataset-build, train,
+or serve time.
+
+Architecture (per the paper's setup: 12 Table-3 features -> 4 labels):
+
+    standardize -> Linear(12, h1) + ReLU -> Linear(h1, h2) + ReLU
+                -> Linear(h2, 4) -> softmax
+
+Grid search over architectures happens Rust-side by training one AOT
+variant per (h1, h2) candidate — "one compiled executable per model
+variant".
+
+Autodiff: `pallas_call` has no transpose rule, so each fused kernel is
+wrapped in `jax.custom_vjp` whose backward pass *also* calls the Pallas
+linear kernel (dx and dw are themselves matmuls) — the whole train step
+lowers to Pallas-structured HLO.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.linear import linear
+from .kernels.softmax_xent import softmax, xent_per_row
+from .kernels.standardize import standardize
+
+N_FEATURES = 12  # Table 3
+N_CLASSES = 4    # RCM / AMD / ND / SCOTCH (Table 2 category representatives)
+
+# Grid-search candidates for the MLP architecture (h1, h2). Mirrors the
+# paper's scikit-learn grid-search stage; each entry becomes its own AOT
+# artifact set.
+ARCHS = {
+    "h32x16": (32, 16),
+    "h64x32": (64, 32),
+    "h128x64": (128, 64),
+}
+
+PARAM_NAMES = ("w1", "b1", "w2", "b2", "w3", "b3")
+
+
+def param_shapes(arch: str):
+    """Ordered (name, shape) list for one architecture variant."""
+    h1, h2 = ARCHS[arch]
+    return [
+        ("w1", (N_FEATURES, h1)),
+        ("b1", (h1,)),
+        ("w2", (h1, h2)),
+        ("b2", (h2,)),
+        ("w3", (h2, N_CLASSES)),
+        ("b3", (N_CLASSES,)),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wrappers: Pallas forward + Pallas backward
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def fused_linear_relu(x, w, b):
+    return linear(x, w, b, relu=True)
+
+
+def _flr_fwd(x, w, b):
+    out = linear(x, w, b, relu=True)
+    return out, (x, w, out)
+
+
+def _flr_bwd(res, g):
+    x, w, out = res
+    g = jnp.where(out > 0, g, 0.0)
+    zk = jnp.zeros((w.shape[0],), g.dtype)
+    zn = jnp.zeros((w.shape[1],), g.dtype)
+    dx = linear(g, w.T, zk)          # (B,N) @ (N,K)
+    dw = linear(x.T, g, zn)          # (K,B) @ (B,N)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+fused_linear_relu.defvjp(_flr_fwd, _flr_bwd)
+
+
+@jax.custom_vjp
+def fused_linear(x, w, b):
+    return linear(x, w, b, relu=False)
+
+
+def _fl_fwd(x, w, b):
+    return linear(x, w, b, relu=False), (x, w)
+
+
+def _fl_bwd(res, g):
+    x, w = res
+    zk = jnp.zeros((w.shape[0],), g.dtype)
+    zn = jnp.zeros((w.shape[1],), g.dtype)
+    return linear(g, w.T, zk), linear(x.T, g, zn), jnp.sum(g, axis=0)
+
+
+fused_linear.defvjp(_fl_fwd, _fl_bwd)
+
+
+@jax.custom_vjp
+def standardize_f(x, mean, std):
+    return standardize(x, mean, std)
+
+
+def _std_fwd(x, mean, std):
+    return standardize(x, mean, std), (std,)
+
+
+def _std_bwd(res, g):
+    (std,) = res
+    dx = g / (std[None, :] + 1e-8)
+    # statistics are constants of the artifact: zero grads
+    return dx, jnp.zeros_like(std), jnp.zeros_like(std)
+
+
+standardize_f.defvjp(_std_fwd, _std_bwd)
+
+
+@jax.custom_vjp
+def xent_mean(logits, onehot):
+    return jnp.mean(xent_per_row(logits, onehot))
+
+
+def _xent_fwd(logits, onehot):
+    return jnp.mean(xent_per_row(logits, onehot)), (logits, onehot)
+
+
+def _xent_bwd(res, g):
+    logits, onehot = res
+    p = softmax(logits)
+    scale = g / logits.shape[0]
+    return (scale * (p - onehot), jnp.zeros_like(onehot))
+
+
+xent_mean.defvjp(_xent_fwd, _xent_bwd)
+
+
+# ---------------------------------------------------------------------------
+# model functions (AOT entry points)
+# ---------------------------------------------------------------------------
+
+def forward(params, x, mean, std):
+    """Logits for a batch of raw (unnormalized) feature vectors."""
+    w1, b1, w2, b2, w3, b3 = params
+    h = standardize_f(x, mean, std)
+    h = fused_linear_relu(h, w1, b1)
+    h = fused_linear_relu(h, w2, b2)
+    return fused_linear(h, w3, b3)
+
+
+def predict_fn(w1, b1, w2, b2, w3, b3, mean, std, x):
+    """AOT predict entry: raw features -> class probabilities.
+
+    Returned as a 1-tuple (the lowering uses return_tuple=True; Rust
+    unwraps with to_tuple1).
+    """
+    logits = forward((w1, b1, w2, b2, w3, b3), x, mean, std)
+    return (softmax(logits),)
+
+
+def loss_fn(params, x, onehot, mean, std):
+    return xent_mean(forward(params, x, mean, std), onehot)
+
+
+def train_step_fn(w1, b1, w2, b2, w3, b3,
+                  v1, vb1, v2, vb2, v3, vb3,
+                  mean, std, x, onehot, lr, momentum):
+    """AOT train entry: one SGD+momentum step over a fixed-size batch.
+
+    Returns (w1', b1', ..., v3', vb3', loss) — 13 outputs. The Rust
+    training loop threads params+velocities through repeated executions.
+    """
+    params = (w1, b1, w2, b2, w3, b3)
+    vels = (v1, vb1, v2, vb2, v3, vb3)
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, onehot, mean, std)
+    new_vels = tuple(momentum * v - lr * g for v, g in zip(vels, grads))
+    new_params = tuple(p + v for p, v in zip(params, new_vels))
+    return (*new_params, *new_vels, loss)
+
+
+def predict_specs(arch: str, batch: int):
+    """ShapeDtypeStructs for predict_fn inputs, in call order."""
+    f32 = jnp.float32
+    specs = [jax.ShapeDtypeStruct(s, f32) for _, s in param_shapes(arch)]
+    specs.append(jax.ShapeDtypeStruct((N_FEATURES,), f32))  # mean
+    specs.append(jax.ShapeDtypeStruct((N_FEATURES,), f32))  # std
+    specs.append(jax.ShapeDtypeStruct((batch, N_FEATURES), f32))  # x
+    return specs
+
+
+def train_specs(arch: str, batch: int):
+    """ShapeDtypeStructs for train_step_fn inputs, in call order."""
+    f32 = jnp.float32
+    pshapes = [jax.ShapeDtypeStruct(s, f32) for _, s in param_shapes(arch)]
+    specs = list(pshapes) + list(pshapes)  # params then velocities
+    specs.append(jax.ShapeDtypeStruct((N_FEATURES,), f32))       # mean
+    specs.append(jax.ShapeDtypeStruct((N_FEATURES,), f32))       # std
+    specs.append(jax.ShapeDtypeStruct((batch, N_FEATURES), f32)) # x
+    specs.append(jax.ShapeDtypeStruct((batch, N_CLASSES), f32))  # onehot
+    specs.append(jax.ShapeDtypeStruct((), f32))                  # lr
+    specs.append(jax.ShapeDtypeStruct((), f32))                  # momentum
+    return specs

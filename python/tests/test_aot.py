@@ -1,0 +1,88 @@
+"""AOT path: lowering produces loadable HLO text + a consistent manifest.
+
+Executing the lowered HLO is covered Rust-side (rust/tests/
+integration_runtime.rs); here we validate the text artifacts and that
+round-tripping through XlaComputation preserves numerics in-process.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+def test_lower_predict_has_entry():
+    text = aot.lower_predict("h32x16", 1)
+    assert "ENTRY" in text
+    assert "HloModule" in text
+
+
+def test_lower_train_has_entry():
+    text = aot.lower_train("h32x16", 64)
+    assert "ENTRY" in text
+
+
+def test_predict_hlo_parameter_count():
+    """9 inputs: 6 params + mean + std + x."""
+    text = aot.lower_predict("h64x32", 8)
+    n_params = text.count("parameter(")
+    assert n_params >= 9
+
+
+def test_manifest_entry_fields():
+    e = aot.manifest_entry("predict", "h32x16", 8, "p.hlo.txt")
+    assert e["inputs"][-1] == "x"
+    assert e["outputs"] == ["probs"]
+    assert e["n_features"] == model.N_FEATURES
+    assert e["n_classes"] == model.N_CLASSES
+    assert e["vmem_bytes"] > 0
+    t = aot.manifest_entry("train", "h32x16", 64, "t.hlo.txt")
+    assert t["inputs"][-2:] == ["lr", "momentum"]
+    assert t["outputs"][-1] == "loss"
+    assert len(t["inputs"]) == 18
+    assert len(t["outputs"]) == 13
+
+
+def test_artifacts_dir_matches_manifest():
+    """If `make artifacts` has run, every manifest entry must exist and
+    be non-trivial HLO text."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    mpath = os.path.join(art, "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built yet")
+    manifest = json.load(open(mpath))
+    assert len(manifest["artifacts"]) >= len(model.ARCHS) * (
+        len(aot.PREDICT_BATCHES) + len(aot.TRAIN_BATCHES))
+    for e in manifest["artifacts"]:
+        path = os.path.join(art, e["path"])
+        assert os.path.exists(path), e["path"]
+        head = open(path).read(4096)
+        assert "HloModule" in head
+
+
+def test_lowered_predict_numerics_roundtrip():
+    """Compile the lowered StableHLO with jax and compare against a direct
+    model call — guards against lowering-order bugs in the entry point."""
+    arch = "h32x16"
+    batch = 4
+    key = jax.random.PRNGKey(5)
+    params = tuple(
+        jax.random.normal(jax.random.fold_in(key, i), shape) * 0.4
+        for i, (_, shape) in enumerate(model.param_shapes(arch))
+    )
+    mean = jnp.zeros((model.N_FEATURES,))
+    std = jnp.ones((model.N_FEATURES,))
+    x = jax.random.normal(jax.random.fold_in(key, 9),
+                          (batch, model.N_FEATURES))
+    specs = model.predict_specs(arch, batch)
+    lowered = jax.jit(model.predict_fn).lower(*specs)
+    compiled = lowered.compile()
+    (got,) = compiled(*params, mean, std, x)
+    (want,) = model.predict_fn(*params, mean, std, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)

@@ -1,0 +1,208 @@
+"""Layer-1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (batch/in/out dims, including non-divisible
+batch-tile cases) and dtypes; assert_allclose against ref.py is the core
+correctness signal for the kernels that end up inside every AOT artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.linear import linear, pick_block_m, vmem_bytes
+from compile.kernels.softmax_xent import softmax, xent_per_row
+from compile.kernels.standardize import standardize
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rng_array(seed, shape, dtype=jnp.float32, scale=1.0):
+    key = jax.random.PRNGKey(seed)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused linear
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 300),
+    k=st.integers(1, 64),
+    n=st.integers(1, 64),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linear_matches_ref(b, k, n, relu, seed):
+    x = rng_array(seed, (b, k))
+    w = rng_array(seed + 1, (k, n), scale=0.5)
+    bias = rng_array(seed + 2, (n,))
+    got = linear(x, w, bias, relu=relu)
+    want = ref.linear_ref(x, w, bias, relu=relu)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 7, 64, 129, 256]),
+    bm=st.sampled_from([None, 8, 32, 128]),
+)
+def test_linear_block_m_invariant(b, bm):
+    """Result must not depend on the batch-tile size."""
+    if bm is not None and bm > b:
+        bm = None
+    x = rng_array(3, (b, 12))
+    w = rng_array(4, (12, 32), scale=0.5)
+    bias = rng_array(5, (32,))
+    base = linear(x, w, bias, relu=True)
+    got = linear(x, w, bias, relu=True, block_m=bm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_linear_dtypes(dtype):
+    x = rng_array(7, (16, 12), dtype=dtype)
+    w = rng_array(8, (12, 8), dtype=dtype, scale=0.5)
+    bias = rng_array(9, (8,), dtype=dtype)
+    got = linear(x, w, bias, relu=True).astype(jnp.float32)
+    want = ref.linear_ref(x, w, bias, relu=True)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_linear_relu_clamps_negative():
+    x = -jnp.ones((4, 3))
+    w = jnp.eye(3)
+    b = jnp.zeros((3,))
+    out = linear(x, w, b, relu=True)
+    assert float(jnp.max(jnp.abs(out))) == 0.0
+
+
+def test_linear_shape_mismatch_raises():
+    with pytest.raises(AssertionError):
+        linear(jnp.ones((2, 3)), jnp.ones((4, 5)), jnp.ones((5,)))
+    with pytest.raises(AssertionError):
+        linear(jnp.ones((2, 3)), jnp.ones((3, 5)), jnp.ones((4,)))
+
+
+def test_pick_block_m():
+    assert pick_block_m(1) == 1
+    assert pick_block_m(64) == 64
+    assert pick_block_m(128) == 128
+    assert pick_block_m(256) == 128
+    assert pick_block_m(192) == 64
+    # odd large batch falls back to a single tile
+    assert pick_block_m(257) == 257
+
+
+def test_vmem_bytes_monotone_in_block():
+    small = vmem_bytes(256, 12, 64, block_m=32)
+    big = vmem_bytes(256, 12, 64, block_m=128)
+    assert small < big
+    # every model variant must fit a 16 MiB VMEM budget
+    assert vmem_bytes(256, 128, 64) < 16 * 2**20
+
+
+# ---------------------------------------------------------------------------
+# standardize
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 300),
+    f=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_standardize_matches_ref(b, f, seed):
+    x = rng_array(seed, (b, f), scale=3.0)
+    mean = rng_array(seed + 1, (f,))
+    std = jnp.abs(rng_array(seed + 2, (f,))) + 0.1
+    got = standardize(x, mean, std)
+    want = ref.standardize_ref(x, mean, std)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_standardize_zero_std_is_finite():
+    """Constant features (std == 0) must not produce inf/nan."""
+    x = jnp.ones((5, 3)) * 2.0
+    mean = jnp.ones((3,)) * 2.0
+    std = jnp.zeros((3,))
+    out = standardize(x, mean, std)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)
+
+
+def test_standardize_identity_stats():
+    x = rng_array(11, (9, 4), scale=2.0)
+    out = standardize(x, jnp.zeros((4,)), jnp.ones((4,)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# softmax / cross-entropy
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 300),
+    c=st.integers(2, 16),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([1.0, 10.0, 100.0]),
+)
+def test_softmax_matches_ref(b, c, seed, scale):
+    logits = rng_array(seed, (b, c), scale=scale)
+    got = softmax(logits)
+    want = ref.softmax_ref(logits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_softmax_rows_sum_to_one():
+    logits = rng_array(13, (33, 4), scale=50.0)
+    p = np.asarray(softmax(logits))
+    np.testing.assert_allclose(p.sum(axis=1), 1.0, rtol=1e-5)
+    assert (p >= 0).all()
+
+
+def test_softmax_extreme_logits_stable():
+    logits = jnp.array([[1e4, -1e4, 0.0, 0.0]], jnp.float32)
+    p = np.asarray(softmax(logits))
+    assert np.isfinite(p).all()
+    assert abs(p[0, 0] - 1.0) < 1e-5
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 200),
+    c=st.integers(2, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_xent_matches_ref(b, c, seed, ):
+    logits = rng_array(seed, (b, c), scale=4.0)
+    labels = np.asarray(rng_array(seed + 1, (b,))).argsort() % c
+    onehot = jax.nn.one_hot(jnp.asarray(labels), c)
+    got = float(jnp.mean(xent_per_row(logits, onehot)))
+    want = float(ref.xent_ref(logits, onehot))
+    assert got == pytest.approx(want, rel=2e-5, abs=2e-6)
+
+
+def test_xent_perfect_prediction_near_zero():
+    onehot = jnp.eye(4)
+    logits = onehot * 100.0
+    loss = float(jnp.mean(xent_per_row(logits, onehot)))
+    assert loss < 1e-4
+
+
+def test_xent_uniform_logits_is_log_c():
+    logits = jnp.zeros((6, 4))
+    onehot = jax.nn.one_hot(jnp.arange(6) % 4, 4)
+    loss = float(jnp.mean(xent_per_row(logits, onehot)))
+    assert loss == pytest.approx(float(np.log(4.0)), rel=1e-5)

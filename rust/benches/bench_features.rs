@@ -1,0 +1,28 @@
+//! Feature-extraction benchmarks — this sits in front of every
+//! prediction, so it must stay far below solve cost.
+//! Run with `cargo bench --bench bench_features`.
+
+use smr::collection::generators as g;
+use smr::features;
+use smr::util::bench::{section, Bencher};
+use smr::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let cases = vec![
+        ("grid2d_32x32 (n=1k)", g::grid2d(32, 32)),
+        ("grid2d_64x64 (n=4k)", g::grid2d(64, 64)),
+        ("circuit_3000", g::circuit(3000, 5, &mut rng)),
+        ("powerlaw_3000", g::powerlaw(3000, 4, &mut rng)),
+        ("banded_5000", g::banded(5000, 10, &mut rng)),
+    ];
+    section("features::extract (12 Table-3 features)");
+    let mut b = Bencher::new();
+    for (name, m) in &cases {
+        b.bench(&format!("extract/{name}"), || features::extract(m));
+    }
+
+    section("batch extraction");
+    let batch: Vec<_> = (0..32).map(|k| g::grid2d(20 + k, 20)).collect();
+    b.bench("extract_batch/32 grids", || features::extract_batch(&batch));
+}

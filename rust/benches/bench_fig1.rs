@@ -1,0 +1,34 @@
+//! Bench for paper Fig. 1: the 30-matrix × 4-algorithm normalized-time
+//! sweep — measures how long regenerating the figure's data takes and
+//! prints the heat rows. Run with `cargo bench --bench bench_fig1`.
+
+use smr::collection::generate_mini_collection;
+use smr::dataset::{build_dataset, SweepConfig};
+use smr::experiments::fig1::shade;
+use smr::reorder::ReorderAlgorithm;
+use smr::util::bench::{section, Bencher};
+
+fn main() {
+    section("Fig. 1 data generation (30-matrix sweep)");
+    let coll: Vec<_> = generate_mini_collection(3, 5)
+        .into_iter()
+        .take(30)
+        .collect();
+    let mut b = Bencher::coarse();
+    b.bench("sweep 30 matrices x 4 algorithms", || {
+        build_dataset(&coll, &ReorderAlgorithm::LABEL_SET, &SweepConfig::default())
+    });
+
+    // print one instance of the heatmap rows
+    let ds = build_dataset(&coll, &ReorderAlgorithm::LABEL_SET, &SweepConfig::default());
+    section("heat rows (AMD SCOTCH ND RCM; # fastest)");
+    for rec in &ds.records {
+        let times: Vec<f64> = ReorderAlgorithm::LABEL_SET
+            .iter()
+            .map(|a| rec.time_of(*a).unwrap())
+            .collect();
+        let mn = times.iter().copied().fold(f64::MAX, f64::min).max(1e-12);
+        let heat: String = times.iter().map(|&t| shade(t / mn)).collect();
+        println!("{:<22} {}", rec.name, heat);
+    }
+}

@@ -1,0 +1,64 @@
+//! Bench for paper Fig. 4: training cost of each classifier family on a
+//! labeled dataset (the figure itself is accuracy; this bench tracks the
+//! cost of producing it). Run with `cargo bench --bench bench_fig4`.
+
+use smr::collection::generate_mini_collection;
+use smr::dataset::{build_dataset, SweepConfig};
+use smr::ml::forest::{ForestParams, RandomForest};
+use smr::ml::knn::{Knn, KnnParams};
+use smr::ml::logreg::{LogRegParams, LogisticRegression};
+use smr::ml::naive_bayes::GaussianNB;
+use smr::ml::normalize::{Method, Normalizer};
+use smr::ml::svm::{LinearSvm, SvmParams};
+use smr::ml::tree::{DecisionTree, TreeParams};
+use smr::ml::Classifier;
+use smr::reorder::ReorderAlgorithm;
+use smr::util::bench::{section, Bencher};
+
+fn main() {
+    let coll = generate_mini_collection(3, 6);
+    let ds = build_dataset(&coll, &ReorderAlgorithm::LABEL_SET, &SweepConfig::default());
+    let x_raw = ds.features();
+    let y = ds.labels();
+    let norm = Normalizer::fit(Method::Standard, &x_raw);
+    let x = norm.transform(&x_raw);
+    section(&format!("Fig. 4 model training ({} rows)", x.len()));
+
+    let mut b = Bencher::new();
+    b.bench("fit RandomForest(100)", || {
+        let mut m = RandomForest::new(ForestParams::default(), 1);
+        m.fit(&x, &y, 4);
+        m
+    });
+    b.bench("fit DecisionTree", || {
+        let mut m = DecisionTree::new(TreeParams::default(), 1);
+        m.fit(&x, &y, 4);
+        m
+    });
+    b.bench("fit LogisticRegression", || {
+        let mut m = LogisticRegression::new(LogRegParams::default());
+        m.fit(&x, &y, 4);
+        m
+    });
+    b.bench("fit GaussianNB", || {
+        let mut m = GaussianNB::new();
+        m.fit(&x, &y, 4);
+        m
+    });
+    b.bench("fit LinearSvm", || {
+        let mut m = LinearSvm::new(SvmParams::default());
+        m.fit(&x, &y, 4);
+        m
+    });
+    b.bench("fit KNN", || {
+        let mut m = Knn::new(KnnParams::default());
+        m.fit(&x, &y, 4);
+        m
+    });
+
+    section("inference (single row)");
+    let mut forest = RandomForest::new(ForestParams::default(), 1);
+    forest.fit(&x, &y, 4);
+    let mut b = Bencher::new();
+    b.bench("RandomForest predict", || forest.predict(&x[0]));
+}

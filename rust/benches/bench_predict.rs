@@ -1,0 +1,98 @@
+//! Bench for paper Table 5's prediction-time column: single-prediction
+//! latency (features + inference) and batched service throughput — for
+//! both the Random-Forest backend and, when artifacts exist, the AOT MLP
+//! through PJRT. Run with `cargo bench --bench bench_predict`.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use smr::collection::generate_mini_collection;
+use smr::coordinator::service::Backend;
+use smr::coordinator::{train_forest, BatcherConfig, PredictionService};
+use smr::dataset::{build_dataset, SweepConfig};
+use smr::features;
+use smr::ml::normalize::Method;
+use smr::ml::Classifier;
+use smr::model::{MlpDriver, MlpModel};
+use smr::reorder::ReorderAlgorithm;
+use smr::runtime::{Manifest, Runtime};
+use smr::util::bench::{section, Bencher};
+
+fn main() {
+    let coll = generate_mini_collection(3, 4);
+    let ds = build_dataset(&coll, &ReorderAlgorithm::LABEL_SET, &SweepConfig::default());
+    let (tr, _) = ds.split(0.8, 3);
+    let tf = train_forest(&ds, &tr, Method::Standard, 3);
+    let feats: Vec<Vec<f64>> = coll
+        .iter()
+        .map(|m| features::extract(&m.matrix).to_vec())
+        .collect();
+
+    section("prediction latency (features precomputed)");
+    let mut b = Bencher::new();
+    b.bench("forest predict x1", || {
+        Classifier::predict(&tf.forest, &tf.normalizer.transform_row(&feats[0]))
+    });
+
+    section("feature extraction + predict (full Table-5 prediction path)");
+    b.bench("features+predict (grid 32x32)", || {
+        let f = features::extract(&coll[0].matrix);
+        Classifier::predict(&tf.forest, &tf.normalizer.transform_row(&f))
+    });
+
+    // MLP through PJRT
+    let artifacts = Path::new("artifacts");
+    if artifacts.join("manifest.json").exists() {
+        section("AOT MLP predict via PJRT (batch variants)");
+        let runtime = Runtime::cpu().unwrap();
+        let manifest = Manifest::load(artifacts).unwrap();
+        let arch = manifest.archs().into_iter().next().unwrap();
+        let meta = manifest
+            .artifacts
+            .iter()
+            .find(|a| a.arch == arch)
+            .unwrap();
+        let model = MlpModel::init(&arch, meta.h1, meta.h2, 1);
+        let driver = MlpDriver::new(&runtime, &manifest);
+        // warm the executable cache
+        let _ = driver.predict(&model, &feats[..1.min(feats.len())].to_vec());
+        let mut b = Bencher::new();
+        for batch in [1usize, 8, 64] {
+            let xs: Vec<Vec<f64>> = (0..batch).map(|k| feats[k % feats.len()].clone()).collect();
+            b.bench(&format!("mlp predict b{batch}"), || {
+                driver.predict(&model, &xs).unwrap()
+            });
+        }
+    } else {
+        eprintln!("(artifacts missing: skipping MLP latency — run `make artifacts`)");
+    }
+
+    section("batched service throughput (forest backend)");
+    let svc = Arc::new(
+        PredictionService::spawn(
+            Backend::Forest {
+                normalizer: tf.normalizer,
+                forest: tf.forest,
+            },
+            BatcherConfig::default(),
+        )
+        .unwrap(),
+    );
+    let mut b = Bencher::coarse();
+    b.bench("256 concurrent predictions (8 clients)", || {
+        let mut handles = Vec::new();
+        for c in 0..8 {
+            let svc = svc.clone();
+            let f = feats[c % feats.len()].clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..32 {
+                    svc.predict(&f).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    println!("mean service batch size: {:.2}", svc.stats.mean_batch_size());
+}

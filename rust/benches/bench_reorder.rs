@@ -1,0 +1,48 @@
+//! Per-algorithm reordering benchmarks over representative structures.
+//! Run with `cargo bench --bench bench_reorder`.
+
+use smr::collection::generators as g;
+use smr::graph::Graph;
+use smr::reorder::ReorderAlgorithm;
+use smr::util::bench::{section, Bencher};
+use smr::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let cases = vec![
+        ("grid2d_48x48", g::grid2d(48, 48)),
+        ("grid3d_12", g::grid3d(12, 12, 12)),
+        ("scrambled_band_2000", g::scrambled_banded(2000, 4, &mut rng)),
+        ("circuit_2000", g::circuit(2000, 4, &mut rng)),
+        ("powerlaw_2000", g::powerlaw(2000, 3, &mut rng)),
+    ];
+    let algorithms = [
+        ReorderAlgorithm::Rcm,
+        ReorderAlgorithm::Md,
+        ReorderAlgorithm::Amd,
+        ReorderAlgorithm::Amf,
+        ReorderAlgorithm::Qamd,
+        ReorderAlgorithm::Nd,
+        ReorderAlgorithm::Scotch,
+        ReorderAlgorithm::Pord,
+    ];
+    for (name, matrix) in &cases {
+        section(&format!(
+            "reorder: {name} (n={}, nnz={})",
+            matrix.nrows,
+            matrix.nnz()
+        ));
+        let graph = Graph::from_matrix(matrix);
+        let mut b = Bencher::new();
+        for alg in algorithms {
+            b.bench(&format!("{name}/{alg}"), || {
+                alg.compute_on_graph(&graph, 42)
+            });
+        }
+    }
+
+    section("graph construction");
+    let big = g::grid2d(64, 64);
+    let mut b = Bencher::new();
+    b.bench("Graph::from_matrix(grid 64x64)", || Graph::from_matrix(&big));
+}

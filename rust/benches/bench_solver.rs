@@ -1,0 +1,56 @@
+//! Direct-solver phase benchmarks: analyze / factorize / solve, plus the
+//! ordering-sensitivity of factor time (the effect the whole paper is
+//! built on). Run with `cargo bench --bench bench_solver`.
+
+use smr::collection::generators as g;
+use smr::reorder::ReorderAlgorithm;
+use smr::solver::{self, SolverConfig};
+use smr::util::bench::{section, Bencher};
+
+fn main() {
+    let cfg = SolverConfig::default();
+    let cases = vec![
+        ("grid2d_40x40", g::grid2d(40, 40)),
+        ("grid2d_64x64", g::grid2d(64, 64)),
+        ("grid3d_12", g::grid3d(12, 12, 12)),
+    ];
+    for (name, raw) in &cases {
+        let a = solver::prepare(raw, &cfg);
+        let perm = ReorderAlgorithm::Amd.compute(&a, 1);
+        let pa = perm.apply(&a);
+        let sym = solver::analyze(&pa);
+        section(&format!(
+            "solver: {name} (n={}, nnz={}, fill={})",
+            a.nrows,
+            a.nnz(),
+            sym.cost.fill
+        ));
+        let mut b = Bencher::new();
+        b.bench(&format!("{name}/analyze"), || solver::analyze(&pa));
+        let f = solver::factorize(&pa, &sym).unwrap();
+        b.bench(&format!("{name}/factorize"), || {
+            solver::factorize(&pa, &sym).unwrap()
+        });
+        let rhs = vec![1.0; a.nrows];
+        b.bench(&format!("{name}/solve"), || f.solve(&rhs));
+    }
+
+    section("ordering sensitivity (factor time, grid2d 56x56)");
+    let a = solver::prepare(&g::grid2d(56, 56), &cfg);
+    let mut b = Bencher::new();
+    for alg in [
+        ReorderAlgorithm::Natural,
+        ReorderAlgorithm::Rcm,
+        ReorderAlgorithm::Amd,
+        ReorderAlgorithm::Nd,
+        ReorderAlgorithm::Scotch,
+    ] {
+        let perm = alg.compute(&a, 1);
+        let pa = perm.apply(&a);
+        let sym = solver::analyze(&pa);
+        b.bench(
+            &format!("factor under {alg} (fill {})", sym.cost.fill),
+            || solver::factorize(&pa, &sym).unwrap(),
+        );
+    }
+}

@@ -1,0 +1,44 @@
+//! Bench for paper Table 1: end-to-end solve time of each named analog
+//! under the four label algorithms. Prints the table rows (one criterion
+//! measurement per cell). Run with `cargo bench --bench bench_table1`.
+
+use smr::collection::paper_table1_analogs;
+use smr::reorder::ReorderAlgorithm;
+use smr::solver::{prepare, solve_ordered, SolverConfig};
+use smr::util::bench::{fmt_time, section};
+
+fn main() {
+    let cfg = SolverConfig {
+        measure_repeats: 3,
+        ..Default::default()
+    };
+    section("Table 1 regeneration (min-of-3 measured solution times)");
+    println!(
+        "{:<16} {:>12} {:>12} {:>12} {:>12}   best",
+        "matrix", "AMD", "SCOTCH", "ND", "RCM"
+    );
+    for nm in paper_table1_analogs(42) {
+        let spd = prepare(&nm.matrix, &cfg);
+        let mut times = Vec::new();
+        for alg in ReorderAlgorithm::LABEL_SET {
+            let perm = alg.compute(&spd, 42);
+            let r = solve_ordered(&spd, &perm, &cfg).unwrap();
+            times.push(r.total_s());
+        }
+        let best = ReorderAlgorithm::LABEL_SET[times
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0];
+        println!(
+            "{:<16} {:>12} {:>12} {:>12} {:>12}   {}",
+            nm.name,
+            fmt_time(times[0]),
+            fmt_time(times[1]),
+            fmt_time(times[2]),
+            fmt_time(times[3]),
+            best.name()
+        );
+    }
+}

@@ -1,0 +1,54 @@
+//! Bench for paper Table 6: the three-scenario comparison (always-AMD vs
+//! predicted vs ideal) over a held-out split — regenerates the summary
+//! and times the full evaluation. Run with `cargo bench --bench bench_table6`.
+
+use smr::collection::generate_mini_collection;
+use smr::coordinator::train_forest;
+use smr::dataset::{build_dataset, SweepConfig};
+use smr::ml::normalize::Method;
+use smr::ml::Classifier;
+use smr::reorder::ReorderAlgorithm;
+use smr::util::bench::{section, Bencher};
+
+fn main() {
+    let coll = generate_mini_collection(11, 8);
+    let ds = build_dataset(&coll, &ReorderAlgorithm::LABEL_SET, &SweepConfig::default());
+    let (tr, te) = ds.split(0.8, 11);
+    let tf = train_forest(&ds, &tr, Method::Standard, 11);
+    let x = ds.features();
+
+    section("Table 6 evaluation over the test split");
+    let mut b = Bencher::new();
+    let m = b.bench("evaluate 3 scenarios", || {
+        let mut amd = 0.0;
+        let mut pred = 0.0;
+        let mut ideal = 0.0;
+        for &i in &te {
+            let rec = &ds.records[i];
+            let label = Classifier::predict(&tf.forest, &tf.normalizer.transform_row(&x[i]));
+            let alg = ReorderAlgorithm::LABEL_SET[label.min(3)];
+            amd += rec.time_of(ReorderAlgorithm::Amd).unwrap();
+            pred += rec.time_of(alg).unwrap();
+            ideal += rec.best().total_s;
+        }
+        (amd, pred, ideal)
+    });
+    let _ = m;
+
+    // print the actual summary once
+    let mut amd = 0.0;
+    let mut pred = 0.0;
+    let mut ideal = 0.0;
+    for &i in &te {
+        let rec = &ds.records[i];
+        let label = Classifier::predict(&tf.forest, &tf.normalizer.transform_row(&x[i]));
+        let alg = ReorderAlgorithm::LABEL_SET[label.min(3)];
+        amd += rec.time_of(ReorderAlgorithm::Amd).unwrap();
+        pred += rec.time_of(alg).unwrap();
+        ideal += rec.best().total_s;
+    }
+    println!(
+        "summary: AMD {amd:.4}s | predicted {pred:.4}s ({:+.1}%) | ideal {ideal:.4}s",
+        100.0 * (pred / amd - 1.0)
+    );
+}

@@ -1,0 +1,35 @@
+//! Bench for paper Table 7: AMD-vs-predicted speedups on the largest
+//! matrices (the Table-7 analogs), end-to-end with fresh measurement.
+//! Run with `cargo bench --bench bench_table7`.
+
+use smr::collection::paper_table7_analogs;
+use smr::dataset::{sweep_one, SweepConfig};
+use smr::reorder::ReorderAlgorithm;
+use smr::util::bench::{fmt_time, section};
+
+fn main() {
+    section("Table 7 analogs: AMD vs best-label solution time");
+    let cfg = SweepConfig::default();
+    println!(
+        "{:<20} {:>8} {:>12} {:>12} {:>9}",
+        "matrix", "n", "AMD", "best", "speedup"
+    );
+    let mut speedups = Vec::new();
+    for nm in paper_table7_analogs(42) {
+        let rec = sweep_one(&nm, &ReorderAlgorithm::LABEL_SET, &cfg);
+        let amd = rec.time_of(ReorderAlgorithm::Amd).unwrap();
+        let best = rec.best();
+        let speedup = amd / best.total_s.max(1e-12);
+        speedups.push(speedup);
+        println!(
+            "{:<20} {:>8} {:>12} {:>12} {:>8.2}x",
+            rec.name,
+            rec.dimension,
+            fmt_time(amd),
+            fmt_time(best.total_s),
+            speedup
+        );
+    }
+    let avg = speedups.iter().sum::<f64>() / speedups.len() as f64;
+    println!("average ideal speedup vs AMD on the largest analogs: {avg:.2}x");
+}

@@ -1,0 +1,361 @@
+//! Synthetic sparse-matrix generators — the Florida-collection substitute.
+//!
+//! Each generator mimics the dominant structure of one application family
+//! present in the paper's dataset (fluid dynamics meshes, structural
+//! banded systems, circuit netlists, web graphs, quantum-chemistry
+//! blocks, …). The Table-3 features — and therefore the label structure
+//! the classifier learns — are driven exactly by these structural axes:
+//!
+//! * narrow (possibly scrambled) bands → RCM territory;
+//! * large 2D/3D meshes → ND / SCOTCH territory;
+//! * irregular, small, or quasi-dense-row patterns → AMD territory;
+//! * mid-size meshes and coupled blocks → hybrid (SCOTCH) territory.
+//!
+//! All generators are deterministic functions of their `Rng`.
+
+use crate::sparse::{CooMatrix, CsrMatrix};
+use crate::util::rng::Rng;
+
+/// 5-point 2D grid Laplacian (FEM/fluid problems, e.g. `obstclae`).
+pub fn grid2d(nx: usize, ny: usize) -> CsrMatrix {
+    let idx = |x: usize, y: usize| y * nx + x;
+    let n = nx * ny;
+    let mut coo = CooMatrix::with_capacity(n, n, 5 * n);
+    for y in 0..ny {
+        for x in 0..nx {
+            let v = idx(x, y);
+            coo.push(v, v, 4.0);
+            if x + 1 < nx {
+                coo.push_sym(v, idx(x + 1, y), -1.0);
+            }
+            if y + 1 < ny {
+                coo.push_sym(v, idx(x, y + 1), -1.0);
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// 7-point 3D grid Laplacian (volume meshes, e.g. the `Barrier2` family).
+pub fn grid3d(nx: usize, ny: usize, nz: usize) -> CsrMatrix {
+    let idx = |x: usize, y: usize, z: usize| (z * ny + y) * nx + x;
+    let n = nx * ny * nz;
+    let mut coo = CooMatrix::with_capacity(n, n, 7 * n);
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                let v = idx(x, y, z);
+                coo.push(v, v, 6.0);
+                if x + 1 < nx {
+                    coo.push_sym(v, idx(x + 1, y, z), -1.0);
+                }
+                if y + 1 < ny {
+                    coo.push_sym(v, idx(x, y + 1, z), -1.0);
+                }
+                if z + 1 < nz {
+                    coo.push_sym(v, idx(x, y, z + 1), -1.0);
+                }
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// Banded matrix with the given half-bandwidth (structural mechanics,
+/// 1D discretizations; `nemeth*` are banded quantum-chemistry systems).
+pub fn banded(n: usize, band: usize, rng: &mut Rng) -> CsrMatrix {
+    let mut coo = CooMatrix::with_capacity(n, n, n * (band + 1));
+    for i in 0..n {
+        coo.push(i, i, (2 * band) as f64 + 2.0);
+        for d in 1..=band {
+            if i + d < n && rng.chance(0.9) {
+                coo.push_sym(i, i + d, -rng.range_f64(0.2, 1.0));
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// Banded matrix whose labels were scrambled by a random permutation —
+/// the structure RCM is designed to recover.
+pub fn scrambled_banded(n: usize, band: usize, rng: &mut Rng) -> CsrMatrix {
+    let mut relabel: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut relabel);
+    let mut coo = CooMatrix::with_capacity(n, n, n * (band + 1));
+    for i in 0..n {
+        coo.push(relabel[i], relabel[i], (2 * band) as f64 + 2.0);
+        for d in 1..=band {
+            if i + d < n && rng.chance(0.9) {
+                coo.push_sym(relabel[i], relabel[i + d], -rng.range_f64(0.2, 1.0));
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// Scale-free graph via preferential attachment (web link graphs:
+/// `NotreDame_www`, `Stanford`).
+pub fn powerlaw(n: usize, edges_per_node: usize, rng: &mut Rng) -> CsrMatrix {
+    let mut targets: Vec<usize> = Vec::new(); // endpoint multiset (pref. attachment)
+    let mut coo = CooMatrix::with_capacity(n, n, n * (edges_per_node + 1));
+    let mut seen = std::collections::HashSet::new();
+    for i in 0..n {
+        coo.push(i, i, 1.0);
+        let m = edges_per_node.min(i);
+        for _ in 0..m {
+            let j = if targets.is_empty() || rng.chance(0.2) {
+                rng.below(i.max(1))
+            } else {
+                targets[rng.below(targets.len())]
+            };
+            if j != i && seen.insert((i.min(j), i.max(j))) {
+                coo.push_sym(i, j, -rng.range_f64(0.1, 1.0));
+                targets.push(j);
+                targets.push(i);
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// Circuit-like netlist (`ASIC_320k`, `dc3`): mostly very sparse rows with
+/// a few quasi-dense "net" rows (power/ground/clock) — the structure that
+/// defeats plain minimum degree and favors dissection / postponement.
+pub fn circuit(n: usize, n_dense: usize, rng: &mut Rng) -> CsrMatrix {
+    let mut coo = CooMatrix::with_capacity(n, n, 6 * n + n_dense * (n / 8));
+    let mut seen = std::collections::HashSet::new();
+    let mut add = |coo: &mut CooMatrix, i: usize, j: usize, v: f64| {
+        if i != j && seen.insert((i.min(j), i.max(j))) {
+            coo.push_sym(i, j, v);
+        }
+    };
+    for i in 0..n {
+        coo.push(i, i, 4.0);
+    }
+    // local device connectivity: short-range random edges
+    for i in 0..n {
+        let k = 1 + rng.below(3);
+        for _ in 0..k {
+            let span = 1 + rng.below(12);
+            let j = if rng.chance(0.5) {
+                i.saturating_sub(span)
+            } else {
+                (i + span).min(n - 1)
+            };
+            add(&mut coo, i, j, -rng.range_f64(0.1, 1.0));
+        }
+    }
+    // quasi-dense nets touching a large vertex fraction
+    for d in 0..n_dense {
+        let hub = rng.below(n);
+        let fan = n / 8 + rng.below(n / 8 + 1);
+        for _ in 0..fan {
+            let j = rng.below(n);
+            add(&mut coo, hub, j, -0.05 - 0.01 * d as f64);
+        }
+    }
+    coo.to_csr()
+}
+
+/// Block-coupled system (quantum chemistry / crystal FEM: `SiH4`,
+/// `crystk02`, `pf2177`): dense diagonal blocks with sparse inter-block
+/// coupling in a chain.
+pub fn block_chain(n_blocks: usize, block: usize, coupling: usize, rng: &mut Rng) -> CsrMatrix {
+    let n = n_blocks * block;
+    let mut coo = CooMatrix::with_capacity(n, n, n_blocks * block * block);
+    for b in 0..n_blocks {
+        let base = b * block;
+        // dense symmetric block
+        for i in 0..block {
+            coo.push(base + i, base + i, block as f64 + 2.0);
+            for j in (i + 1)..block {
+                if rng.chance(0.8) {
+                    coo.push_sym(base + i, base + j, -rng.range_f64(0.05, 0.5));
+                }
+            }
+        }
+        // sparse coupling to next block
+        if b + 1 < n_blocks {
+            for _ in 0..coupling {
+                let i = base + rng.below(block);
+                let j = base + block + rng.below(block);
+                coo.push_sym(i, j, -rng.range_f64(0.05, 0.3));
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// Arrow matrix: `heads` dense rows/columns bordering a banded core
+/// (optimization KKT systems, coupled constraints).
+pub fn arrow(n: usize, heads: usize, band: usize, rng: &mut Rng) -> CsrMatrix {
+    let mut coo = CooMatrix::with_capacity(n, n, n * (band + 2) + heads * n);
+    for i in 0..n {
+        coo.push(i, i, (2 * band + n / 4) as f64);
+        for d in 1..=band {
+            if i + d < n {
+                coo.push_sym(i, i + d, -rng.range_f64(0.2, 1.0));
+            }
+        }
+    }
+    let mut seen = std::collections::HashSet::new();
+    for h in 0..heads.min(n) {
+        for j in (heads..n).step_by(2) {
+            if h != j && seen.insert((h.min(j), h.max(j))) {
+                coo.push_sym(h, j, -rng.range_f64(0.01, 0.1));
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// Uniform random sparse symmetric matrix (unstructured — the "misc"
+/// tail of the collection).
+pub fn random_sym(n: usize, avg_deg: f64, rng: &mut Rng) -> CsrMatrix {
+    let mut coo = CooMatrix::with_capacity(n, n, (n as f64 * (avg_deg + 1.0)) as usize);
+    for i in 0..n {
+        coo.push(i, i, avg_deg + 2.0);
+    }
+    let target = (n as f64 * avg_deg / 2.0) as usize;
+    let mut seen = std::collections::HashSet::new();
+    let mut placed = 0;
+    let mut guard = 0;
+    while placed < target && guard < 20 * target + 100 {
+        guard += 1;
+        let i = rng.below(n);
+        let j = rng.below(n);
+        if i != j && seen.insert((i.min(j), i.max(j))) {
+            coo.push_sym(i, j, -rng.range_f64(0.1, 1.0));
+            placed += 1;
+        }
+    }
+    coo.to_csr()
+}
+
+/// Anisotropic stretched grid (e.g. `Torso2`, `t2em`-like field problems):
+/// a 2D grid with long-range skips in one direction.
+pub fn stretched_grid(nx: usize, ny: usize, skip: usize, rng: &mut Rng) -> CsrMatrix {
+    let base = grid2d(nx, ny);
+    let n = base.nrows;
+    let mut coo = CooMatrix::with_capacity(n, n, base.nnz() + 2 * n);
+    for r in 0..n {
+        for (k, &c) in base.row_indices(r).iter().enumerate() {
+            coo.push(r, c, base.row_data(r)[k]);
+        }
+    }
+    let idx = |x: usize, y: usize| y * nx + x;
+    let mut seen = std::collections::HashSet::new();
+    for y in 0..ny {
+        for x in 0..nx {
+            if x + skip < nx && rng.chance(0.6) {
+                let (i, j) = (idx(x, y), idx(x + skip, y));
+                if seen.insert((i, j)) {
+                    coo.push_sym(i, j, -0.2);
+                }
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid2d_shape_and_symmetry() {
+        let a = grid2d(7, 5);
+        assert_eq!(a.nrows, 35);
+        assert!(a.is_pattern_symmetric());
+        assert!(a.has_full_diagonal());
+        assert_eq!(a.nnz(), 35 + 2 * (6 * 5 + 7 * 4));
+    }
+
+    #[test]
+    fn grid3d_shape() {
+        let a = grid3d(4, 3, 2);
+        assert_eq!(a.nrows, 24);
+        assert!(a.is_pattern_symmetric());
+    }
+
+    #[test]
+    fn banded_has_expected_bandwidth() {
+        let mut rng = Rng::new(1);
+        let a = banded(100, 4, &mut rng);
+        assert!(crate::sparse::pattern::bandwidth(&a) <= 4);
+        assert!(a.is_pattern_symmetric());
+    }
+
+    #[test]
+    fn scrambled_banded_hides_band() {
+        let mut rng = Rng::new(2);
+        let a = scrambled_banded(150, 2, &mut rng);
+        // scrambling should blow the apparent bandwidth way up
+        assert!(crate::sparse::pattern::bandwidth(&a) > 20);
+        assert!(a.is_pattern_symmetric());
+    }
+
+    #[test]
+    fn powerlaw_has_hubs() {
+        let mut rng = Rng::new(3);
+        let a = powerlaw(400, 3, &mut rng);
+        let g = crate::graph::Graph::from_matrix(&a);
+        let max_deg = (0..400).map(|v| g.degree(v)).max().unwrap();
+        let avg: f64 = (0..400).map(|v| g.degree(v)).sum::<usize>() as f64 / 400.0;
+        assert!(
+            max_deg as f64 > 4.0 * avg,
+            "no hub: max {max_deg}, avg {avg}"
+        );
+    }
+
+    #[test]
+    fn circuit_has_quasi_dense_rows() {
+        let mut rng = Rng::new(4);
+        let a = circuit(600, 3, &mut rng);
+        let g = crate::graph::Graph::from_matrix(&a);
+        let max_deg = (0..600).map(|v| g.degree(v)).max().unwrap();
+        assert!(max_deg > 50, "max degree {max_deg}");
+    }
+
+    #[test]
+    fn block_chain_is_blocky() {
+        let mut rng = Rng::new(5);
+        let a = block_chain(6, 20, 4, &mut rng);
+        assert_eq!(a.nrows, 120);
+        assert!(a.is_pattern_symmetric());
+        // density within blocks far exceeds overall density
+        assert!(a.nnz() > 6 * 20 * 10);
+    }
+
+    #[test]
+    fn arrow_has_dense_heads() {
+        let mut rng = Rng::new(6);
+        let a = arrow(200, 2, 2, &mut rng);
+        assert!(a.row_nnz(0) > 50);
+        assert!(a.is_pattern_symmetric());
+    }
+
+    #[test]
+    fn random_sym_density_close_to_target() {
+        let mut rng = Rng::new(7);
+        let a = random_sym(500, 6.0, &mut rng);
+        let offdiag = a.nnz() - 500;
+        let avg = offdiag as f64 / 500.0;
+        assert!((4.0..8.0).contains(&avg), "avg degree {avg}");
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a1 = circuit(300, 2, &mut Rng::new(42));
+        let a2 = circuit(300, 2, &mut Rng::new(42));
+        assert_eq!(a1, a2);
+    }
+
+    #[test]
+    fn stretched_grid_valid() {
+        let mut rng = Rng::new(8);
+        let a = stretched_grid(12, 8, 4, &mut rng);
+        assert_eq!(a.nrows, 96);
+        assert!(a.is_pattern_symmetric());
+    }
+}

@@ -1,0 +1,17 @@
+//! Synthetic matrix collection — the Florida-collection substitute.
+//!
+//! The paper draws 936 usable matrices from the first 2000 entries of the
+//! University of Florida collection. That archive is not available in
+//! this offline environment, so [`registry::generate_collection`]
+//! synthesizes a 936-matrix collection spanning the same structural
+//! families (see [`generators`]), including named analogs of every matrix
+//! the paper's tables cite. DESIGN.md §Substitutions discusses why this
+//! preserves the experiment's signal.
+
+pub mod generators;
+pub mod registry;
+
+pub use registry::{
+    generate_collection, generate_mini_collection, paper_table1_analogs,
+    paper_table7_analogs, NamedMatrix, COLLECTION_SIZE,
+};

@@ -1,0 +1,376 @@
+//! The synthetic collection registry: 936 named matrices (the number of
+//! usable matrices the paper distilled from the first 2000 Florida
+//! entries), spanning the same structural families, plus named analogs of
+//! every matrix the paper calls out in Tables 1, 5 and 7.
+//!
+//! Everything is a pure function of the collection seed, so the entire
+//! dataset — and therefore every downstream table — is reproducible.
+
+use super::generators as g;
+use crate::sparse::CsrMatrix;
+use crate::util::rng::Rng;
+
+/// A named matrix with its family tag.
+#[derive(Clone, Debug)]
+pub struct NamedMatrix {
+    pub name: String,
+    pub family: &'static str,
+    pub matrix: CsrMatrix,
+}
+
+/// Number of matrices in the standard collection (papers' usable count).
+pub const COLLECTION_SIZE: usize = 936;
+
+/// Analogs of the nine matrices in the paper's Table 1 / Table 5.
+/// Scaled to this testbed (see DESIGN.md §Substitutions); the structural
+/// family of each is chosen to mirror the original's application domain.
+pub fn paper_table1_analogs(seed: u64) -> Vec<NamedMatrix> {
+    let mut rng = Rng::new(seed ^ 0x7ab1e1);
+    vec![
+        NamedMatrix {
+            // ASIC_320k: circuit simulation with quasi-dense nets
+            name: "asic_like".into(),
+            family: "circuit",
+            matrix: g::circuit(4000, 8, &mut rng.fork(1)),
+        },
+        NamedMatrix {
+            // pf2177: power-flow block system
+            name: "pf_like".into(),
+            family: "block_chain",
+            matrix: g::block_chain(30, 64, 10, &mut rng.fork(2)),
+        },
+        NamedMatrix {
+            // crystk02: crystal FEM stiffness blocks
+            name: "crystk_like".into(),
+            family: "block_chain",
+            matrix: g::block_chain(60, 36, 8, &mut rng.fork(3)),
+        },
+        NamedMatrix {
+            // SiH4: quantum chemistry block system
+            name: "sih4_like".into(),
+            family: "block_chain",
+            matrix: g::block_chain(24, 48, 6, &mut rng.fork(4)),
+        },
+        NamedMatrix {
+            // obstclae: obstacle problem on a square grid
+            name: "obstclae_like".into(),
+            family: "fem2d",
+            matrix: g::grid2d(64, 64),
+        },
+        NamedMatrix {
+            // lhr07c: light-hydrocarbon recovery (irregular sparse)
+            name: "lhr_like".into(),
+            family: "random",
+            matrix: g::random_sym(1800, 7.0, &mut rng.fork(5)),
+        },
+        NamedMatrix {
+            // nemeth17: banded quantum-chemistry sequence
+            name: "nemeth_like".into(),
+            family: "banded",
+            matrix: g::banded(5000, 10, &mut rng.fork(6)),
+        },
+        NamedMatrix {
+            // af23560: CFD on a stretched mesh
+            name: "af_like".into(),
+            family: "stretched",
+            matrix: g::stretched_grid(150, 40, 6, &mut rng.fork(7)),
+        },
+        NamedMatrix {
+            // pli: coupled block problem
+            name: "pli_like".into(),
+            family: "block_chain",
+            matrix: g::block_chain(40, 40, 12, &mut rng.fork(8)),
+        },
+    ]
+}
+
+/// Analogs of the "ten largest" matrices of the paper's Table 7. These
+/// are the biggest members of the collection so the Table-7 harness
+/// (which takes the largest test-split matrices) naturally selects them.
+pub fn paper_table7_analogs(seed: u64) -> Vec<NamedMatrix> {
+    let mut rng = Rng::new(seed ^ 0x7ab1e7);
+    vec![
+        NamedMatrix {
+            name: "t2em_like".into(),
+            family: "stretched",
+            matrix: g::stretched_grid(90, 70, 8, &mut rng.fork(1)),
+        },
+        NamedMatrix {
+            name: "af_shell_like".into(),
+            family: "fem2d",
+            matrix: g::grid2d(85, 70),
+        },
+        NamedMatrix {
+            name: "notredame_like".into(),
+            family: "powerlaw",
+            matrix: g::powerlaw(5000, 3, &mut rng.fork(2)),
+        },
+        NamedMatrix {
+            name: "stanford_like".into(),
+            family: "powerlaw",
+            matrix: g::powerlaw(4500, 4, &mut rng.fork(3)),
+        },
+        NamedMatrix {
+            name: "benelechi_like".into(),
+            family: "fem2d",
+            matrix: g::grid2d(78, 78),
+        },
+        NamedMatrix {
+            name: "dc_like".into(),
+            family: "circuit",
+            matrix: g::circuit(4500, 10, &mut rng.fork(4)),
+        },
+        NamedMatrix {
+            name: "torso_like".into(),
+            family: "stretched",
+            matrix: g::stretched_grid(100, 60, 5, &mut rng.fork(5)),
+        },
+        NamedMatrix {
+            name: "barrier2_4_like".into(),
+            family: "fem3d_xl",
+            matrix: g::grid3d(30, 30, 26),
+        },
+        NamedMatrix {
+            name: "barrier2_9_like".into(),
+            family: "fem3d_xl",
+            matrix: g::grid3d(32, 28, 27),
+        },
+        NamedMatrix {
+            name: "barrier2_11_like".into(),
+            family: "fem3d_xl",
+            matrix: g::grid3d(28, 28, 31),
+        },
+    ]
+}
+
+/// Generate the full 936-matrix collection. Deterministic in `seed`.
+pub fn generate_collection(seed: u64) -> Vec<NamedMatrix> {
+    let mut rng = Rng::new(seed);
+    let mut out: Vec<NamedMatrix> = Vec::with_capacity(COLLECTION_SIZE);
+
+    // Family quotas tuned so each of the four labels wins a meaningful
+    // share of the collection (paper Fig. 1: AMD most often, all four
+    // represented). 917 generated + 9 Table-1 + 10 Table-7 = 936.
+    let quotas: [(&'static str, usize); 11] = [
+        ("fem2d", 80),
+        ("fem3d", 110),
+        ("banded", 110),
+        ("scrambled_banded", 90),
+        ("powerlaw", 90),
+        ("circuit", 90),
+        ("block_chain", 90),
+        ("arrow", 67),
+        ("random", 78),
+        ("stretched", 100),
+        // XL volume meshes: the regime where dissection-family orderings
+        // decisively beat minimum degree (the paper's large-matrix rows).
+        // These exceed the flop cap, so their solution times come from the
+        // deterministic symbolic estimate — see solver::SolverConfig.
+        ("fem3d_xl", 12),
+    ];
+    debug_assert_eq!(
+        quotas.iter().map(|(_, q)| q).sum::<usize>() + 9 + 10,
+        COLLECTION_SIZE
+    );
+
+    for (family, quota) in quotas {
+        for k in 0..quota {
+            let mut frng = rng.fork((family.len() * 1000 + k) as u64);
+            let matrix = match family {
+                "fem2d" => {
+                    let nx = frng.range(22, 62);
+                    let ny = frng.range(22, 62);
+                    g::grid2d(nx, ny)
+                }
+                "fem3d" => {
+                    // skewed toward larger volumes, where dissection-family
+                    // orderings overtake minimum degree (George's regime)
+                    let s = frng.range(9, 19);
+                    let t = frng.range(9, 19);
+                    let u = frng.range(9, 17);
+                    g::grid3d(s, t, u)
+                }
+                "banded" => {
+                    let n = frng.range(200, 2600);
+                    let band = frng.range(1, 25);
+                    g::banded(n, band, &mut frng)
+                }
+                "scrambled_banded" => {
+                    let n = frng.range(200, 2200);
+                    let band = frng.range(1, 12);
+                    g::scrambled_banded(n, band, &mut frng)
+                }
+                "powerlaw" => {
+                    let n = frng.range(250, 2600);
+                    let epn = frng.range(2, 6);
+                    g::powerlaw(n, epn, &mut frng)
+                }
+                "circuit" => {
+                    let n = frng.range(300, 2800);
+                    let dense = frng.range(1, 8);
+                    g::circuit(n, dense, &mut frng)
+                }
+                "block_chain" => {
+                    let blocks = frng.range(8, 60);
+                    let bs = frng.range(8, 50);
+                    let coupling = frng.range(2, 12);
+                    g::block_chain(blocks, bs, coupling, &mut frng)
+                }
+                "arrow" => {
+                    let n = frng.range(300, 2000);
+                    let heads = frng.range(1, 6);
+                    let band = frng.range(1, 8);
+                    g::arrow(n, heads, band, &mut frng)
+                }
+                "random" => {
+                    let n = frng.range(150, 1700);
+                    let deg = frng.range_f64(2.0, 10.0);
+                    g::random_sym(n, deg, &mut frng)
+                }
+                "stretched" => {
+                    let nx = frng.range(40, 115);
+                    let ny = frng.range(30, 75);
+                    let skip = frng.range(3, 10);
+                    g::stretched_grid(nx, ny, skip, &mut frng)
+                }
+                "fem3d_xl" => {
+                    let s = frng.range(24, 37);
+                    g::grid3d(s, s, frng.range(22, 33))
+                }
+                _ => unreachable!(),
+            };
+            out.push(NamedMatrix {
+                name: format!("{family}_{k:03}"),
+                family,
+                matrix,
+            });
+        }
+    }
+    out.extend(paper_table1_analogs(seed));
+    out.extend(paper_table7_analogs(seed));
+    debug_assert_eq!(out.len(), COLLECTION_SIZE);
+    out
+}
+
+/// A small sub-collection for fast tests and the quickstart example.
+pub fn generate_mini_collection(seed: u64, per_family: usize) -> Vec<NamedMatrix> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    for k in 0..per_family {
+        let mut f = rng.fork(k as u64);
+        out.push(NamedMatrix {
+            name: format!("mini_fem2d_{k}"),
+            family: "fem2d",
+            matrix: g::grid2d(10 + 3 * k, 10 + 2 * k),
+        });
+        out.push(NamedMatrix {
+            name: format!("mini_banded_{k}"),
+            family: "banded",
+            matrix: g::banded(150 + 60 * k, 2 + k, &mut f),
+        });
+        out.push(NamedMatrix {
+            name: format!("mini_scrambled_{k}"),
+            family: "scrambled_banded",
+            matrix: g::scrambled_banded(140 + 50 * k, 2 + k % 3, &mut f),
+        });
+        out.push(NamedMatrix {
+            name: format!("mini_powerlaw_{k}"),
+            family: "powerlaw",
+            matrix: g::powerlaw(160 + 70 * k, 2 + k % 3, &mut f),
+        });
+        out.push(NamedMatrix {
+            name: format!("mini_circuit_{k}"),
+            family: "circuit",
+            matrix: g::circuit(180 + 80 * k, 1 + k % 4, &mut f),
+        });
+        out.push(NamedMatrix {
+            name: format!("mini_block_{k}"),
+            family: "block_chain",
+            matrix: g::block_chain(4 + k, 10 + 2 * k, 3, &mut f),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collection_has_exact_size_and_unique_names() {
+        let c = generate_collection(7);
+        assert_eq!(c.len(), COLLECTION_SIZE);
+        let mut names: Vec<&str> = c.iter().map(|m| m.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), COLLECTION_SIZE, "duplicate names");
+    }
+
+    #[test]
+    fn collection_is_deterministic() {
+        let a = generate_collection(11);
+        let b = generate_collection(11);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.matrix, y.matrix);
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = generate_collection(1);
+        let b = generate_collection(2);
+        let same = a
+            .iter()
+            .zip(&b)
+            .filter(|(x, y)| x.matrix == y.matrix)
+            .count();
+        // deterministic-size families (pure grids) coincide; randomized ones must not
+        assert!(same < a.len() / 2, "{same} identical matrices");
+    }
+
+    #[test]
+    fn all_matrices_square_and_nonempty() {
+        for m in generate_collection(3) {
+            assert_eq!(m.matrix.nrows, m.matrix.ncols, "{}", m.name);
+            assert!(m.matrix.nrows >= 32, "{} too small", m.name);
+            assert!(m.matrix.nnz() > m.matrix.nrows, "{} too sparse", m.name);
+        }
+    }
+
+    #[test]
+    fn table1_analogs_present_and_named() {
+        let t1 = paper_table1_analogs(5);
+        assert_eq!(t1.len(), 9);
+        assert!(t1.iter().any(|m| m.name == "asic_like"));
+        assert!(t1.iter().any(|m| m.name == "nemeth_like"));
+    }
+
+    #[test]
+    fn table7_analogs_are_among_largest() {
+        let c = generate_collection(5);
+        let t7_names: Vec<String> = paper_table7_analogs(5)
+            .iter()
+            .map(|m| m.name.clone())
+            .collect();
+        let mut dims: Vec<(usize, &str)> = c
+            .iter()
+            .map(|m| (m.matrix.nrows, m.name.as_str()))
+            .collect();
+        dims.sort_unstable_by_key(|&(n, _)| std::cmp::Reverse(n));
+        let top30: Vec<&str> = dims.iter().take(30).map(|&(_, n)| n).collect();
+        let hits = t7_names
+            .iter()
+            .filter(|n| top30.contains(&n.as_str()))
+            .count();
+        assert!(hits >= 6, "only {hits} table-7 analogs in the top 30");
+    }
+
+    #[test]
+    fn mini_collection_small_and_fast() {
+        let c = generate_mini_collection(1, 3);
+        assert_eq!(c.len(), 18);
+        assert!(c.iter().all(|m| m.matrix.nrows <= 1200));
+    }
+}

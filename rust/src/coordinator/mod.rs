@@ -1,0 +1,20 @@
+//! Layer-3 coordinator: the selection system itself.
+//!
+//! * [`pipeline`] — the synchronous selection pipeline: features →
+//!   normalize → classifier → chosen reordering → direct solve. This is
+//!   what the experiment harnesses drive.
+//! * [`service`] — the serving front: a dedicated runtime thread that
+//!   owns the PJRT executables and dynamically batches concurrent
+//!   prediction requests (max-batch / max-wait policy, like a vLLM-style
+//!   router's admission loop scaled to this problem).
+//! * [`trainer`] — end-to-end training orchestration: dataset → grid
+//!   search over the classical models (and the AOT MLP variants) →
+//!   fitted predictor.
+
+pub mod pipeline;
+pub mod service;
+pub mod trainer;
+
+pub use pipeline::{PipelineReport, SelectionPipeline};
+pub use service::{BatcherConfig, PredictionService, ServiceStats};
+pub use trainer::{train_forest, train_mlp, TrainedForest, TrainedMlp};

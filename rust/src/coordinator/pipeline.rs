@@ -1,0 +1,161 @@
+//! The synchronous selection pipeline: matrix → features → predicted
+//! reordering algorithm → direct solve.
+//!
+//! This is the end-to-end path the paper evaluates: Table 5 (prediction +
+//! its cost), Table 6 (total solve time AMD vs predicted vs ideal), and
+//! Table 7 (speedups on the largest matrices) all run through here.
+
+use crate::features;
+use crate::ml::normalize::Normalizer;
+use crate::ml::Classifier;
+use crate::reorder::ReorderAlgorithm;
+use crate::solver::{prepare, solve_ordered, SolveReport, SolverConfig};
+use crate::sparse::CsrMatrix;
+use crate::util::Timer;
+
+/// Full report of one selection-then-solve run.
+#[derive(Clone, Debug)]
+pub struct PipelineReport {
+    /// Chosen algorithm.
+    pub algorithm: ReorderAlgorithm,
+    /// Feature-extraction time (part of prediction cost).
+    pub feature_s: f64,
+    /// Classifier inference time.
+    pub predict_s: f64,
+    /// The solve under the chosen ordering.
+    pub solve: SolveReport,
+}
+
+impl PipelineReport {
+    /// Prediction overhead (features + inference) — the paper's
+    /// "prediction time" column.
+    pub fn prediction_s(&self) -> f64 {
+        self.feature_s + self.predict_s
+    }
+
+    /// End-to-end time including prediction.
+    pub fn end_to_end_s(&self) -> f64 {
+        self.prediction_s() + self.solve.total_s()
+    }
+}
+
+/// A fitted predictor wired to the solver — the deployable object.
+pub struct SelectionPipeline {
+    pub normalizer: Normalizer,
+    pub classifier: Box<dyn Classifier>,
+    pub solver: SolverConfig,
+    pub reorder_seed: u64,
+}
+
+impl SelectionPipeline {
+    pub fn new(
+        normalizer: Normalizer,
+        classifier: Box<dyn Classifier>,
+        solver: SolverConfig,
+    ) -> Self {
+        SelectionPipeline {
+            normalizer,
+            classifier,
+            solver,
+            reorder_seed: 0xDA7A,
+        }
+    }
+
+    /// Predict the best reordering algorithm for a matrix.
+    pub fn select(&self, a: &CsrMatrix) -> (ReorderAlgorithm, f64, f64) {
+        let t_f = Timer::start();
+        let feats = features::extract(a);
+        let feature_s = t_f.elapsed_s();
+        let t_p = Timer::start();
+        let x = self.normalizer.transform_row(&feats);
+        let label = self.classifier.predict(&x);
+        let predict_s = t_p.elapsed_s();
+        (
+            ReorderAlgorithm::LABEL_SET[label.min(3)],
+            feature_s,
+            predict_s,
+        )
+    }
+
+    /// Full pipeline: select, reorder, solve.
+    pub fn run(&self, a: &CsrMatrix) -> PipelineReport {
+        let (algorithm, feature_s, predict_s) = self.select(a);
+        let spd = prepare(a, &self.solver);
+        let t_r = Timer::start();
+        let perm = algorithm.compute(&spd, self.reorder_seed);
+        let reorder_s = t_r.elapsed_s();
+        let mut solve =
+            solve_ordered(&spd, &perm, &self.solver).expect("prepared matrix factorizes");
+        solve.reorder_s = reorder_s;
+        PipelineReport {
+            algorithm,
+            feature_s,
+            predict_s,
+            solve,
+        }
+    }
+
+    /// Solve under a *fixed* algorithm (baseline comparisons).
+    pub fn run_fixed(&self, a: &CsrMatrix, algorithm: ReorderAlgorithm) -> SolveReport {
+        let spd = prepare(a, &self.solver);
+        let t_r = Timer::start();
+        let perm = algorithm.compute(&spd, self.reorder_seed);
+        let reorder_s = t_r.elapsed_s();
+        let mut solve =
+            solve_ordered(&spd, &perm, &self.solver).expect("prepared matrix factorizes");
+        solve.reorder_s = reorder_s;
+        solve
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collection::generate_mini_collection;
+    use crate::dataset::{build_dataset, SweepConfig};
+    use crate::ml::knn::{Knn, KnnParams};
+    use crate::ml::normalize::Method;
+
+    #[test]
+    fn pipeline_runs_end_to_end() {
+        let coll = generate_mini_collection(2, 2);
+        let ds = build_dataset(
+            &coll,
+            &ReorderAlgorithm::LABEL_SET,
+            &SweepConfig::default(),
+        );
+        let x = ds.features();
+        let y = ds.labels();
+        let norm = Normalizer::fit(Method::Standard, &x);
+        let xn = norm.transform(&x);
+        let mut knn = Knn::new(KnnParams::default());
+        knn.fit(&xn, &y, 4);
+        let pipe = SelectionPipeline::new(norm, Box::new(knn), SolverConfig::default());
+
+        let report = pipe.run(&coll[0].matrix);
+        assert!(report.prediction_s() >= 0.0);
+        assert!(report.solve.total_s() > 0.0);
+        assert!(!report.solve.estimated);
+        assert!(report.solve.residual < 1e-6);
+        // prediction must be vastly cheaper than solving (paper's point)
+        assert!(report.prediction_s() < 10.0 * report.solve.total_s() + 0.1);
+    }
+
+    #[test]
+    fn fixed_baseline_matches_algorithm() {
+        let coll = generate_mini_collection(2, 1);
+        let ds = build_dataset(
+            &coll,
+            &ReorderAlgorithm::LABEL_SET,
+            &SweepConfig::default(),
+        );
+        let x = ds.features();
+        let y = ds.labels();
+        let norm = Normalizer::fit(Method::Standard, &x);
+        let mut knn = Knn::new(KnnParams::default());
+        knn.fit(&norm.transform(&x), &y, 4);
+        let pipe = SelectionPipeline::new(norm, Box::new(knn), SolverConfig::default());
+        let r = pipe.run_fixed(&coll[0].matrix, ReorderAlgorithm::Amd);
+        assert!(r.total_s() > 0.0);
+    }
+}

@@ -1,0 +1,314 @@
+//! Batched prediction service — the serving front of the coordinator.
+//!
+//! PJRT handles (client, executables) are not `Send`, so a dedicated
+//! runtime thread owns them; callers submit feature vectors over a
+//! channel and block on a reply. The runtime thread applies a dynamic
+//! batching policy (flush at `max_batch` or after `max_wait`), packing
+//! concurrent requests into one fixed-shape predict execution — the same
+//! admission/batching structure a serving router uses, scaled to this
+//! model.
+//!
+//! Backends: the AOT MLP (PJRT, the paper's deployed model path) or a
+//! pure-Rust Random Forest (no artifacts needed) — both behind
+//! [`PredictionService`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::features::N_FEATURES;
+use crate::ml::forest::RandomForest;
+use crate::ml::normalize::Normalizer;
+use crate::ml::Classifier;
+use crate::model::{MlpDriver, MlpModel};
+use crate::reorder::ReorderAlgorithm;
+use crate::runtime::{Manifest, Runtime};
+
+/// Dynamic-batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Flush when this many requests are pending.
+    pub max_batch: usize,
+    /// Flush when the oldest pending request has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+struct Request {
+    features: Vec<f64>,
+    reply: SyncSender<usize>,
+}
+
+/// Service counters (lock-free reads).
+#[derive(Default)]
+pub struct ServiceStats {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    /// Sum of batch sizes (for mean batch size).
+    pub batched_requests: AtomicU64,
+}
+
+impl ServiceStats {
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+}
+
+/// Model backend the runtime thread instantiates *on its own thread*.
+pub enum Backend {
+    /// AOT MLP: artifacts directory + trained model.
+    Mlp { artifacts_dir: std::path::PathBuf, model: MlpModel },
+    /// Pure-Rust forest (normalizer applied in-thread).
+    Forest { normalizer: Normalizer, forest: RandomForest },
+}
+
+/// Handle to the running service. Cloneable senders allow many client
+/// threads; dropping the last handle shuts the runtime thread down.
+pub struct PredictionService {
+    tx: Sender<Request>,
+    pub stats: Arc<ServiceStats>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl PredictionService {
+    /// Spawn the runtime thread.
+    pub fn spawn(backend: Backend, cfg: BatcherConfig) -> Result<PredictionService> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let stats = Arc::new(ServiceStats::default());
+        let tstats = stats.clone();
+        let handle = std::thread::Builder::new()
+            .name("smr-predict".into())
+            .spawn(move || runtime_loop(backend, cfg, rx, tstats))?;
+        Ok(PredictionService {
+            tx,
+            stats,
+            handle: Some(handle),
+        })
+    }
+
+    /// Blocking predict: returns the selected algorithm.
+    pub fn predict(&self, features: &[f64]) -> Result<ReorderAlgorithm> {
+        assert_eq!(features.len(), N_FEATURES);
+        let (rtx, rrx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request {
+                features: features.to_vec(),
+                reply: rtx,
+            })
+            .map_err(|_| anyhow::anyhow!("service stopped"))?;
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        let label = rrx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("service dropped request"))?;
+        Ok(ReorderAlgorithm::LABEL_SET[label.min(3)])
+    }
+
+    /// Shut down and join the runtime thread.
+    pub fn shutdown(mut self) {
+        drop(self.tx.clone()); // no-op; real close happens on Drop below
+        let handle = self.handle.take();
+        drop(self); // closes the channel
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for PredictionService {
+    fn drop(&mut self) {
+        // channel closes when tx drops; thread exits its recv loop
+        if let Some(h) = self.handle.take() {
+            // replace tx with a dummy closed channel by dropping self.tx
+            // (it drops with self); just detach-join best effort
+            let _ = h; // joined in shutdown(); detached otherwise
+        }
+    }
+}
+
+fn runtime_loop(
+    backend: Backend,
+    cfg: BatcherConfig,
+    rx: Receiver<Request>,
+    stats: Arc<ServiceStats>,
+) {
+    // Instantiate the backend on this thread (PJRT handles live here).
+    enum Live<'a> {
+        Mlp {
+            runtime: Runtime,
+            manifest: Manifest,
+            model: MlpModel,
+            _marker: std::marker::PhantomData<&'a ()>,
+        },
+        Forest {
+            normalizer: Normalizer,
+            forest: RandomForest,
+        },
+    }
+    let mut live = match backend {
+        Backend::Mlp { artifacts_dir, model } => {
+            let runtime = match Runtime::cpu() {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("smr-predict: PJRT init failed: {e}");
+                    return;
+                }
+            };
+            let manifest = match Manifest::load(&artifacts_dir) {
+                Ok(m) => m,
+                Err(e) => {
+                    eprintln!("smr-predict: manifest load failed: {e}");
+                    return;
+                }
+            };
+            Live::Mlp {
+                runtime,
+                manifest,
+                model,
+                _marker: std::marker::PhantomData,
+            }
+        }
+        Backend::Forest { normalizer, forest } => Live::Forest { normalizer, forest },
+    };
+
+    let mut pending: Vec<Request> = Vec::new();
+    loop {
+        // Wait for the first request (blocking), then batch-collect.
+        if pending.is_empty() {
+            match rx.recv() {
+                Ok(r) => pending.push(r),
+                Err(_) => break, // all senders dropped
+            }
+        }
+        let deadline = Instant::now() + cfg.max_wait;
+        while pending.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => pending.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // Execute the batch.
+        let xs: Vec<Vec<f64>> = pending.iter().map(|r| r.features.clone()).collect();
+        let labels: Vec<usize> = match &mut live {
+            Live::Mlp {
+                runtime,
+                manifest,
+                model,
+                ..
+            } => {
+                let driver = MlpDriver::new(runtime, manifest);
+                match driver.predict(model, &xs) {
+                    Ok(l) => l,
+                    Err(e) => {
+                        eprintln!("smr-predict: inference failed: {e}");
+                        vec![0; xs.len()]
+                    }
+                }
+            }
+            Live::Forest { normalizer, forest } => {
+                let xn = normalizer.transform(&xs);
+                forest.predict_batch(&xn)
+            }
+        };
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        stats
+            .batched_requests
+            .fetch_add(pending.len() as u64, Ordering::Relaxed);
+        for (req, label) in pending.drain(..).zip(labels) {
+            let _ = req.reply.send(label);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::forest::ForestParams;
+    use crate::ml::normalize::Method;
+    use crate::ml::testutil::blobs;
+
+    fn forest_backend() -> Backend {
+        // map blob classes onto the 4 labels
+        let (x, y) = blobs(30, N_FEATURES, 0.5, 1);
+        let normalizer = Normalizer::fit(Method::Standard, &x);
+        let mut forest = RandomForest::new(
+            ForestParams {
+                n_estimators: 15,
+                ..Default::default()
+            },
+            3,
+        );
+        forest.fit(&normalizer.transform(&x), &y, 4);
+        Backend::Forest { normalizer, forest }
+    }
+
+    #[test]
+    fn service_answers_requests() {
+        let svc = PredictionService::spawn(forest_backend(), BatcherConfig::default()).unwrap();
+        let mut f = vec![0.0; N_FEATURES];
+        f[0] = 5.0;
+        f[1] = 5.0;
+        let alg = svc.predict(&f).unwrap();
+        assert!(ReorderAlgorithm::LABEL_SET.contains(&alg));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn service_batches_concurrent_requests() {
+        let svc = Arc::new(
+            PredictionService::spawn(
+                forest_backend(),
+                BatcherConfig {
+                    max_batch: 16,
+                    max_wait: Duration::from_millis(20),
+                },
+            )
+            .unwrap(),
+        );
+        let mut handles = Vec::new();
+        for k in 0..32 {
+            let svc = svc.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut f = vec![0.0; N_FEATURES];
+                f[0] = if k % 2 == 0 { 5.0 } else { -5.0 };
+                f[1] = 5.0;
+                svc.predict(&f).unwrap()
+            }));
+        }
+        for h in handles {
+            let alg = h.join().unwrap();
+            assert!(ReorderAlgorithm::LABEL_SET.contains(&alg));
+        }
+        assert_eq!(svc.stats.requests.load(Ordering::Relaxed), 32);
+        // batching must have coalesced at least some requests
+        let batches = svc.stats.batches.load(Ordering::Relaxed);
+        assert!(batches <= 32);
+        assert!(svc.stats.mean_batch_size() >= 1.0);
+    }
+
+    #[test]
+    fn stats_mean_batch_empty_is_zero() {
+        let s = ServiceStats::default();
+        assert_eq!(s.mean_batch_size(), 0.0);
+    }
+}

@@ -1,0 +1,476 @@
+//! Dataset pipeline: the reorder × solve sweep, labeling, splits, and
+//! persistence (paper §3.2 "Data Preprocessing").
+//!
+//! For every collection matrix: prepare it for the solver, extract the
+//! Table-3 features, then for each candidate reordering algorithm time
+//! `reorder + analyze + factorize + solve`. The label is the algorithm
+//! with the shortest total solution time (paper: "the reordering
+//! algorithm with the shortest solving time ... as its label").
+//!
+//! The sweep is embarrassingly parallel over matrices and runs on the
+//! in-tree thread pool; with the flop-cap guard a full 936-matrix × 4
+//! label-algorithm build takes minutes, not hours.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::collection::NamedMatrix;
+use crate::features::{self, N_FEATURES};
+use crate::reorder::ReorderAlgorithm;
+use crate::solver::{prepare, solve_ordered, SolverConfig};
+use crate::util::json::{self, Json};
+use crate::util::pool::{default_workers, parallel_map};
+use crate::util::rng::Rng;
+use crate::util::Timer;
+
+/// Per-(matrix, algorithm) sweep measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct AlgoResult {
+    pub algorithm: ReorderAlgorithm,
+    /// Total solution time (reorder + analyze + factor + solve), seconds.
+    pub total_s: f64,
+    pub reorder_s: f64,
+    pub fill: u64,
+    pub flops: f64,
+    pub estimated: bool,
+}
+
+/// One dataset row.
+#[derive(Clone, Debug)]
+pub struct MatrixRecord {
+    pub name: String,
+    pub family: String,
+    pub dimension: usize,
+    pub nnz: usize,
+    pub features: [f64; N_FEATURES],
+    pub results: Vec<AlgoResult>,
+    /// Index into [`ReorderAlgorithm::LABEL_SET`] of the fastest algorithm.
+    pub label: usize,
+}
+
+impl MatrixRecord {
+    /// Time under a specific algorithm (if swept).
+    pub fn time_of(&self, alg: ReorderAlgorithm) -> Option<f64> {
+        self.results
+            .iter()
+            .find(|r| r.algorithm == alg)
+            .map(|r| r.total_s)
+    }
+
+    /// Fastest swept algorithm (the label algorithm).
+    pub fn best(&self) -> &AlgoResult {
+        self.results
+            .iter()
+            .min_by(|a, b| a.total_s.partial_cmp(&b.total_s).unwrap())
+            .expect("non-empty results")
+    }
+}
+
+/// The assembled dataset.
+#[derive(Clone, Debug, Default)]
+pub struct Dataset {
+    pub records: Vec<MatrixRecord>,
+    /// Algorithms swept (in result order).
+    pub algorithms: Vec<ReorderAlgorithm>,
+}
+
+/// Sweep configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepConfig {
+    pub solver: SolverConfig,
+    /// Seed for ND-family bisection randomness.
+    pub reorder_seed: u64,
+    pub workers: usize,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            solver: SolverConfig {
+                // labels are argmin over phase times: denoise with min-of-2
+                measure_repeats: 2,
+                ..SolverConfig::default()
+            },
+            reorder_seed: 0xDA7A,
+            workers: default_workers(),
+        }
+    }
+}
+
+/// Run the sweep and label every matrix.
+pub fn build_dataset(
+    collection: &[NamedMatrix],
+    algorithms: &[ReorderAlgorithm],
+    cfg: &SweepConfig,
+) -> Dataset {
+    let records = parallel_map(collection, cfg.workers, |_, nm| {
+        sweep_one(nm, algorithms, cfg)
+    });
+    Dataset {
+        records,
+        algorithms: algorithms.to_vec(),
+    }
+}
+
+/// Sweep a single matrix.
+pub fn sweep_one(
+    nm: &NamedMatrix,
+    algorithms: &[ReorderAlgorithm],
+    cfg: &SweepConfig,
+) -> MatrixRecord {
+    let a = prepare(&nm.matrix, &cfg.solver);
+    let feats = features::extract(&nm.matrix);
+    let mut results = Vec::with_capacity(algorithms.len());
+    for &alg in algorithms {
+        let t = Timer::start();
+        let perm = alg.compute(&a, cfg.reorder_seed);
+        let reorder_s = t.elapsed_s();
+        let mut report = solve_ordered(&a, &perm, &cfg.solver)
+            .expect("prepared matrices always factorize");
+        report.reorder_s = reorder_s;
+        results.push(AlgoResult {
+            algorithm: alg,
+            total_s: report.total_s(),
+            reorder_s,
+            fill: report.fill,
+            flops: report.flops,
+            estimated: report.estimated,
+        });
+    }
+    // label: fastest among the 4 label representatives present
+    let label_alg = results
+        .iter()
+        .filter(|r| r.algorithm.label_index().is_some())
+        .min_by(|a, b| a.total_s.partial_cmp(&b.total_s).unwrap())
+        .map(|r| r.algorithm)
+        .unwrap_or(ReorderAlgorithm::Amd);
+    MatrixRecord {
+        name: nm.name.clone(),
+        family: nm.family.to_string(),
+        dimension: nm.matrix.nrows,
+        nnz: nm.matrix.nnz(),
+        features: feats,
+        results,
+        label: label_alg.label_index().unwrap_or(0),
+    }
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Feature matrix (row per record).
+    pub fn features(&self) -> Vec<Vec<f64>> {
+        self.records
+            .iter()
+            .map(|r| r.features.to_vec())
+            .collect()
+    }
+
+    /// Label vector (indices into `ReorderAlgorithm::LABEL_SET`).
+    pub fn labels(&self) -> Vec<usize> {
+        self.records.iter().map(|r| r.label).collect()
+    }
+
+    /// Label distribution (share of each of the 4 classes).
+    pub fn label_distribution(&self) -> [f64; 4] {
+        let mut c = [0usize; 4];
+        for r in &self.records {
+            c[r.label] += 1;
+        }
+        let n = self.records.len().max(1) as f64;
+        [
+            c[0] as f64 / n,
+            c[1] as f64 / n,
+            c[2] as f64 / n,
+            c[3] as f64 / n,
+        ]
+    }
+
+    /// Stratified train/test split (paper: 8:2). Returns index vectors.
+    pub fn split(&self, train_fraction: f64, seed: u64) -> (Vec<usize>, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let mut train = Vec::new();
+        let mut test = Vec::new();
+        for c in 0..4usize {
+            let mut idx: Vec<usize> = (0..self.records.len())
+                .filter(|&i| self.records[i].label == c)
+                .collect();
+            rng.shuffle(&mut idx);
+            let n_train = ((idx.len() as f64) * train_fraction).round() as usize;
+            for (k, &i) in idx.iter().enumerate() {
+                if k < n_train {
+                    train.push(i);
+                } else {
+                    test.push(i);
+                }
+            }
+        }
+        train.sort_unstable();
+        test.sort_unstable();
+        (train, test)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let algo_names: Vec<Json> = self
+            .algorithms
+            .iter()
+            .map(|a| json::s(a.name()))
+            .collect();
+        let records: Vec<Json> = self
+            .records
+            .iter()
+            .map(|r| {
+                json::obj(vec![
+                    ("name", json::s(&r.name)),
+                    ("family", json::s(&r.family)),
+                    ("dimension", json::num(r.dimension as f64)),
+                    ("nnz", json::num(r.nnz as f64)),
+                    (
+                        "features",
+                        Json::Arr(r.features.iter().map(|&f| json::num(f)).collect()),
+                    ),
+                    ("label", json::num(r.label as f64)),
+                    (
+                        "results",
+                        Json::Arr(
+                            r.results
+                                .iter()
+                                .map(|ar| {
+                                    json::obj(vec![
+                                        ("algorithm", json::s(ar.algorithm.name())),
+                                        ("total_s", json::num(ar.total_s)),
+                                        ("reorder_s", json::num(ar.reorder_s)),
+                                        ("fill", json::num(ar.fill as f64)),
+                                        ("flops", json::num(ar.flops)),
+                                        (
+                                            "estimated",
+                                            Json::Bool(ar.estimated),
+                                        ),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("algorithms", Json::Arr(algo_names)),
+            ("records", Json::Arr(records)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Dataset> {
+        let algorithms = j
+            .get("algorithms")
+            .and_then(|a| a.as_arr())
+            .context("algorithms")?
+            .iter()
+            .filter_map(|v| v.as_str().and_then(ReorderAlgorithm::from_name))
+            .collect();
+        let mut records = Vec::new();
+        for r in j.get("records").and_then(|a| a.as_arr()).context("records")? {
+            let feats_v: Vec<f64> = r
+                .get("features")
+                .and_then(|a| a.as_arr())
+                .context("features")?
+                .iter()
+                .filter_map(|v| v.as_f64())
+                .collect();
+            if feats_v.len() != N_FEATURES {
+                return Err(anyhow!("bad feature count {}", feats_v.len()));
+            }
+            let mut features = [0.0; N_FEATURES];
+            features.copy_from_slice(&feats_v);
+            let results = r
+                .get("results")
+                .and_then(|a| a.as_arr())
+                .context("results")?
+                .iter()
+                .map(|ar| -> Result<AlgoResult> {
+                    Ok(AlgoResult {
+                        algorithm: ar
+                            .get("algorithm")
+                            .and_then(|v| v.as_str())
+                            .and_then(ReorderAlgorithm::from_name)
+                            .context("algorithm")?,
+                        total_s: ar.get("total_s").and_then(|v| v.as_f64()).context("t")?,
+                        reorder_s: ar
+                            .get("reorder_s")
+                            .and_then(|v| v.as_f64())
+                            .unwrap_or(0.0),
+                        fill: ar.get("fill").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+                        flops: ar.get("flops").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                        estimated: ar
+                            .get("estimated")
+                            .and_then(|v| v.as_bool())
+                            .unwrap_or(false),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            records.push(MatrixRecord {
+                name: r
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .context("name")?
+                    .to_string(),
+                family: r
+                    .get("family")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+                dimension: r
+                    .get("dimension")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(0),
+                nnz: r.get("nnz").and_then(|v| v.as_usize()).unwrap_or(0),
+                features,
+                results,
+                label: r.get("label").and_then(|v| v.as_usize()).context("label")?,
+            });
+        }
+        Ok(Dataset {
+            records,
+            algorithms,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("write {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Dataset> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let j = json::parse(&text).map_err(|e| anyhow!("parse dataset: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    /// CSV export: features + label + per-algorithm time.
+    pub fn to_csv(&self) -> String {
+        let mut t = crate::util::table::Table::new(
+            &[
+                &["name", "family"][..],
+                &features::FEATURE_NAMES[..],
+                &["label"],
+                &self
+                    .algorithms
+                    .iter()
+                    .map(|a| a.name())
+                    .collect::<Vec<_>>()[..],
+            ]
+            .concat(),
+        );
+        for r in &self.records {
+            let mut row = vec![r.name.clone(), r.family.clone()];
+            row.extend(r.features.iter().map(|f| format!("{f}")));
+            row.push(ReorderAlgorithm::LABEL_SET[r.label].name().to_string());
+            for alg in &self.algorithms {
+                row.push(
+                    r.time_of(*alg)
+                        .map(|t| format!("{t:.6}"))
+                        .unwrap_or_default(),
+                );
+            }
+            t.row(row);
+        }
+        t.to_csv()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collection::generate_mini_collection;
+
+    fn mini_dataset() -> Dataset {
+        let coll = generate_mini_collection(1, 2);
+        let cfg = SweepConfig {
+            workers: 2,
+            ..Default::default()
+        };
+        build_dataset(&coll, &ReorderAlgorithm::LABEL_SET, &cfg)
+    }
+
+    #[test]
+    fn sweep_labels_every_record() {
+        let ds = mini_dataset();
+        assert_eq!(ds.len(), 12);
+        for r in &ds.records {
+            assert!(r.label < 4, "{}", r.name);
+            assert_eq!(r.results.len(), 4);
+            assert!(r.results.iter().all(|ar| ar.total_s > 0.0));
+            // label algorithm really is the fastest
+            let best = r.best();
+            assert_eq!(
+                best.algorithm.label_index().unwrap(),
+                r.label,
+                "{}: label mismatch",
+                r.name
+            );
+        }
+    }
+
+    #[test]
+    fn split_is_stratified_partition() {
+        let ds = mini_dataset();
+        let (tr, te) = ds.split(0.8, 1);
+        assert_eq!(tr.len() + te.len(), ds.len());
+        let mut all: Vec<usize> = tr.iter().chain(&te).copied().collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), ds.len());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let ds = mini_dataset();
+        let j = ds.to_json();
+        let back = Dataset::from_json(&j).unwrap();
+        assert_eq!(back.len(), ds.len());
+        assert_eq!(back.algorithms, ds.algorithms);
+        for (a, b) in ds.records.iter().zip(&back.records) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.features, b.features);
+            assert_eq!(a.results.len(), b.results.len());
+            assert!((a.results[0].total_s - b.results[0].total_s).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let ds = mini_dataset();
+        let csv = ds.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), ds.len() + 1);
+        assert!(lines[0].starts_with("name,family,dimension"));
+        assert!(lines[0].contains("bandwidth"));
+    }
+
+    #[test]
+    fn label_distribution_sums_to_one() {
+        let ds = mini_dataset();
+        let d = ds.label_distribution();
+        assert!((d.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let ds = mini_dataset();
+        let path = std::env::temp_dir().join("smr_dataset_test.json");
+        ds.save(&path).unwrap();
+        let back = Dataset::load(&path).unwrap();
+        assert_eq!(back.len(), ds.len());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,85 @@
+//! Fig. 1: heatmap of normalized solution times for 30 randomly selected
+//! matrices under the four reordering algorithms.
+//!
+//! Values are per-matrix min-normalized (1.0 = fastest, higher = slower);
+//! the paper renders darker = faster. We emit the numeric matrix as CSV
+//! (for plotting) and an ASCII shading where `#` = fastest band.
+
+use anyhow::Result;
+
+use super::Context;
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+
+/// One heatmap row.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub name: String,
+    /// Per-algorithm time normalized by the row minimum (>= 1.0).
+    pub normalized: [f64; 4],
+}
+
+/// Shade for a normalized value (darker = faster, like the paper).
+pub fn shade(v: f64) -> char {
+    match v {
+        x if x < 1.05 => '#',
+        x if x < 1.5 => '*',
+        x if x < 3.0 => '+',
+        x if x < 10.0 => '-',
+        _ => '.',
+    }
+}
+
+pub fn run(ctx: &Context) -> Result<Vec<Row>> {
+    // 30 random dataset records (the sweep already measured their times)
+    let mut rng = Rng::new(ctx.seed ^ 0xF161);
+    let n = ctx.dataset.len();
+    let picks = rng.sample_indices(n, n.min(30));
+
+    let mut rows = Vec::new();
+    for &i in &picks {
+        let rec = &ctx.dataset.records[i];
+        let mut times = [f64::NAN; 4];
+        for r in &rec.results {
+            if let Some(k) = r.algorithm.label_index() {
+                times[k] = r.total_s;
+            }
+        }
+        let mn = times.iter().copied().fold(f64::MAX, f64::min).max(1e-12);
+        let normalized = [
+            times[0] / mn,
+            times[1] / mn,
+            times[2] / mn,
+            times[3] / mn,
+        ];
+        rows.push(Row {
+            name: rec.name.clone(),
+            normalized,
+        });
+    }
+
+    let mut t = Table::new(&["Matrix", "AMD", "SCOTCH", "ND", "RCM", "heat"]);
+    for r in &rows {
+        let heat: String = r.normalized.iter().map(|&v| shade(v)).collect();
+        t.row(vec![
+            r.name.clone(),
+            format!("{:.2}", r.normalized[0]),
+            format!("{:.2}", r.normalized[1]),
+            format!("{:.2}", r.normalized[2]),
+            format!("{:.2}", r.normalized[3]),
+            heat,
+        ]);
+    }
+    println!("\nFig. 1: normalized solution times (1.00 = fastest; # fast … . slow)");
+    println!("          columns: AMD | SCOTCH | ND | RCM");
+    t.print();
+    ctx.write_csv("fig1.csv", &t.to_csv())?;
+
+    // paper observation: AMD is most often the winner
+    let amd_wins = rows
+        .iter()
+        .filter(|r| r.normalized[0] <= 1.0 + 1e-9)
+        .count();
+    println!("AMD fastest on {amd_wins}/30 sampled matrices");
+    Ok(rows)
+}

@@ -1,0 +1,184 @@
+//! Fig. 4: prediction accuracy of the seven ML models under the two
+//! normalization methods (Max-Min vs Standardization).
+//!
+//! Six classical models train in-process; the MLP trains through the AOT
+//! PJRT train-step executables when an artifacts directory is supplied
+//! (its normalization is the Pallas standardize kernel, so it appears in
+//! the Standardization column; Max-Min for the MLP is emulated by feeding
+//! max-min-scaled features with identity standardization statistics).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::Context;
+use crate::coordinator::trainer::N_CLASSES;
+use crate::ml::forest::{ForestParams, RandomForest};
+use crate::ml::knn::{Knn, KnnParams};
+use crate::ml::logreg::{LogRegParams, LogisticRegression};
+use crate::ml::metrics::accuracy;
+use crate::ml::naive_bayes::GaussianNB;
+use crate::ml::normalize::{Method, Normalizer};
+use crate::ml::svm::{LinearSvm, SvmParams};
+use crate::ml::tree::{DecisionTree, TreeParams};
+use crate::ml::Classifier;
+use crate::model::{MlpDriver, MlpModel, TrainConfig};
+use crate::runtime::{ArtifactKind, Manifest, Runtime};
+use crate::util::table::Table;
+
+/// One accuracy measurement.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub model: String,
+    pub method: Method,
+    pub accuracy: f64,
+}
+
+fn classical_models(seed: u64) -> Vec<Box<dyn Classifier>> {
+    vec![
+        Box::new(RandomForest::new(ForestParams::default(), seed)),
+        Box::new(DecisionTree::new(TreeParams::default(), seed)),
+        Box::new(LogisticRegression::new(LogRegParams::default())),
+        Box::new(GaussianNB::new()),
+        Box::new(LinearSvm::new(SvmParams::default())),
+        Box::new(Knn::new(KnnParams::default())),
+    ]
+}
+
+pub fn run(ctx: &Context, artifacts_dir: Option<&Path>) -> Result<Vec<Cell>> {
+    let all_x = ctx.dataset.features();
+    let all_y = ctx.dataset.labels();
+    let xtr_raw: Vec<Vec<f64>> = ctx.train_idx.iter().map(|&i| all_x[i].clone()).collect();
+    let ytr: Vec<usize> = ctx.train_idx.iter().map(|&i| all_y[i]).collect();
+    let xte_raw: Vec<Vec<f64>> = ctx.test_idx.iter().map(|&i| all_x[i].clone()).collect();
+    let yte: Vec<usize> = ctx.test_idx.iter().map(|&i| all_y[i]).collect();
+
+    let mut cells = Vec::new();
+    for method in [Method::MaxMin, Method::Standard] {
+        let norm = Normalizer::fit(method, &xtr_raw);
+        let xtr = norm.transform(&xtr_raw);
+        let xte = norm.transform(&xte_raw);
+        for mut model in classical_models(ctx.seed) {
+            model.fit(&xtr, &ytr, N_CLASSES);
+            let acc = accuracy(&model.predict_batch(&xte), &yte);
+            cells.push(Cell {
+                model: model.name(),
+                method,
+                accuracy: acc,
+            });
+        }
+        // MLP through PJRT (if artifacts available)
+        if let Some(dir) = artifacts_dir {
+            match mlp_accuracy(ctx, dir, method, &xtr_raw, &ytr, &xte_raw, &yte) {
+                Ok(acc) => cells.push(Cell {
+                    model: "MLP".into(),
+                    method,
+                    accuracy: acc,
+                }),
+                Err(e) => eprintln!("[fig4] MLP ({}) skipped: {e}", method.name()),
+            }
+        }
+    }
+
+    // render: model rows, one column per method
+    let models: Vec<String> = {
+        let mut m: Vec<String> = cells.iter().map(|c| c.model.clone()).collect();
+        m.dedup();
+        m.sort();
+        m.dedup();
+        m
+    };
+    let mut t = Table::new(&["Model", "MaxMin acc", "Standardization acc"]);
+    for m in &models {
+        let get = |method: Method| {
+            cells
+                .iter()
+                .find(|c| &c.model == m && c.method == method)
+                .map(|c| format!("{:.3}", c.accuracy))
+                .unwrap_or_else(|| "-".into())
+        };
+        t.row(vec![m.clone(), get(Method::MaxMin), get(Method::Standard)]);
+    }
+    println!("\nFig. 4: prediction accuracy by model and normalization");
+    t.print();
+    ctx.write_csv("fig4.csv", &t.to_csv())?;
+
+    if let Some(best) = cells
+        .iter()
+        .max_by(|a, b| a.accuracy.partial_cmp(&b.accuracy).unwrap())
+    {
+        println!(
+            "best: {} under {} at {:.1}% (paper: RandomForest / Standardization, 86.7%)",
+            best.model,
+            best.method.name(),
+            100.0 * best.accuracy
+        );
+    }
+    Ok(cells)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn mlp_accuracy(
+    ctx: &Context,
+    dir: &Path,
+    method: Method,
+    xtr_raw: &[Vec<f64>],
+    ytr: &[usize],
+    xte_raw: &[Vec<f64>],
+    yte: &[usize],
+) -> Result<f64> {
+    let runtime = Runtime::cpu()?;
+    let manifest = Manifest::load(dir)?;
+    let driver = MlpDriver::new(&runtime, &manifest);
+    let arch = manifest
+        .archs()
+        .into_iter()
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("no artifacts"))?;
+    let meta = manifest
+        .artifacts
+        .iter()
+        .find(|a| a.arch == arch && a.kind == ArtifactKind::Train)
+        .ok_or_else(|| anyhow::anyhow!("no train artifact"))?;
+    let mut model = MlpModel::init(&arch, meta.h1, meta.h2, ctx.seed);
+    let cfg = TrainConfig {
+        epochs: 60,
+        ..Default::default()
+    };
+    match method {
+        Method::Standard => {
+            // standardization handled inside the artifact (Pallas kernel)
+            let mut mean = vec![0.0; xtr_raw[0].len()];
+            let mut std = vec![0.0; xtr_raw[0].len()];
+            for row in xtr_raw {
+                for (j, &v) in row.iter().enumerate() {
+                    mean[j] += v;
+                }
+            }
+            for m in mean.iter_mut() {
+                *m /= xtr_raw.len() as f64;
+            }
+            for row in xtr_raw {
+                for (j, &v) in row.iter().enumerate() {
+                    std[j] += (v - mean[j]).powi(2);
+                }
+            }
+            for s in std.iter_mut() {
+                *s = (*s / xtr_raw.len() as f64).sqrt();
+            }
+            model.set_standardization(&mean, &std);
+            driver.train(&mut model, xtr_raw, ytr, &cfg)?;
+            let pred = driver.predict(&model, xte_raw)?;
+            Ok(accuracy(&pred, yte))
+        }
+        Method::MaxMin => {
+            // scale features host-side, identity stats inside the artifact
+            let norm = Normalizer::fit(Method::MaxMin, xtr_raw);
+            let xtr = norm.transform(xtr_raw);
+            let xte = norm.transform(xte_raw);
+            driver.train(&mut model, &xtr, ytr, &cfg)?;
+            let pred = driver.predict(&model, &xte)?;
+            Ok(accuracy(&pred, yte))
+        }
+    }
+}

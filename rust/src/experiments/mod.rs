@@ -1,0 +1,155 @@
+//! Experiment harnesses — one module per paper table/figure.
+//!
+//! | module   | paper artifact | output |
+//! |----------|----------------|--------|
+//! | [`table1`] | Table 1: solve times of 9 named matrices × 4 algorithms | table + CSV |
+//! | [`fig1`]   | Fig. 1: 30-matrix normalized-time heatmap | ASCII heatmap + CSV |
+//! | [`fig4`]   | Fig. 4: accuracy of 7 ML models × 2 normalizations | table + CSV |
+//! | [`table4`] | Table 4: grid-searched RF hyperparameters | table |
+//! | [`table5`] | Table 5: predictions + prediction time for Table-1 matrices | table + CSV |
+//! | [`table6`] | Table 6: Σ solve time AMD vs predicted vs ideal | table |
+//! | [`table7`] | Table 7: speedup on the 10 largest test matrices | table + CSV |
+//!
+//! Each `run` returns the rows it printed so integration tests can assert
+//! on shape properties (who wins, ratios) rather than parsing stdout.
+
+pub mod fig1;
+pub mod fig4;
+pub mod table1;
+pub mod table4;
+pub mod table5;
+pub mod table6;
+pub mod table7;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::collection::{self, NamedMatrix};
+use crate::coordinator::{train_forest, SelectionPipeline, TrainedForest};
+use crate::dataset::{build_dataset, Dataset, SweepConfig};
+use crate::ml::normalize::Method;
+use crate::reorder::ReorderAlgorithm;
+use crate::solver::SolverConfig;
+
+/// Everything the experiment harnesses share: the collection, the swept
+/// dataset, the 8:2 split, and a trained forest pipeline.
+pub struct Context {
+    pub collection: Vec<NamedMatrix>,
+    pub dataset: Dataset,
+    pub train_idx: Vec<usize>,
+    pub test_idx: Vec<usize>,
+    pub forest: TrainedForest,
+    pub seed: u64,
+    pub out_dir: PathBuf,
+}
+
+/// Context configuration.
+pub struct ContextConfig {
+    pub seed: u64,
+    /// Cached dataset path: loaded if present, rebuilt + saved otherwise.
+    pub dataset_path: Option<PathBuf>,
+    /// Mini mode: small collection for smoke runs/tests.
+    pub mini: bool,
+    pub out_dir: PathBuf,
+}
+
+impl Default for ContextConfig {
+    fn default() -> Self {
+        ContextConfig {
+            seed: 42,
+            dataset_path: None,
+            mini: false,
+            out_dir: PathBuf::from("results"),
+        }
+    }
+}
+
+impl Context {
+    /// Build (or load) everything needed by the experiments.
+    pub fn build(cfg: &ContextConfig) -> Result<Context> {
+        std::fs::create_dir_all(&cfg.out_dir)?;
+        let collection = if cfg.mini {
+            collection::generate_mini_collection(cfg.seed, 4)
+        } else {
+            collection::generate_collection(cfg.seed)
+        };
+        let dataset = match &cfg.dataset_path {
+            Some(p) if p.exists() => {
+                eprintln!("[context] loading cached dataset {}", p.display());
+                Dataset::load(p)?
+            }
+            maybe => {
+                eprintln!(
+                    "[context] sweeping {} matrices x {} algorithms ...",
+                    collection.len(),
+                    ReorderAlgorithm::LABEL_SET.len()
+                );
+                let ds = build_dataset(
+                    &collection,
+                    &ReorderAlgorithm::LABEL_SET,
+                    &SweepConfig::default(),
+                );
+                if let Some(p) = maybe {
+                    ds.save(p)?;
+                    eprintln!("[context] dataset cached to {}", p.display());
+                }
+                ds
+            }
+        };
+        let (train_idx, test_idx) = dataset.split(0.8, cfg.seed);
+        eprintln!(
+            "[context] dataset: {} records, split {}/{} (labels: {:?})",
+            dataset.len(),
+            train_idx.len(),
+            test_idx.len(),
+            dataset.label_distribution()
+        );
+        let forest = train_forest(&dataset, &train_idx, Method::Standard, cfg.seed);
+        Ok(Context {
+            collection,
+            dataset,
+            train_idx,
+            test_idx,
+            forest,
+            seed: cfg.seed,
+            out_dir: cfg.out_dir.clone(),
+        })
+    }
+
+    /// A ready-to-run selection pipeline around the trained forest.
+    pub fn pipeline(&self) -> SelectionPipeline {
+        // Re-fit a fresh forest clone-free: reuse params via grid result.
+        // (RandomForest isn't Clone; retrain deterministically instead.)
+        let tf = train_forest(
+            &self.dataset,
+            &self.train_idx,
+            Method::Standard,
+            self.seed,
+        );
+        SelectionPipeline::new(tf.normalizer, Box::new(tf.forest), SolverConfig::default())
+    }
+
+    /// Write a CSV artifact into the output directory.
+    pub fn write_csv(&self, name: &str, csv: &str) -> Result<()> {
+        let p = self.out_dir.join(name);
+        std::fs::write(&p, csv)?;
+        eprintln!("[context] wrote {}", p.display());
+        Ok(())
+    }
+
+    /// Look up a collection matrix by name.
+    pub fn matrix(&self, name: &str) -> Option<&NamedMatrix> {
+        self.collection.iter().find(|m| m.name == name)
+    }
+}
+
+/// Convenience for tests: a fast mini context.
+pub fn mini_context(out_dir: &Path) -> Result<Context> {
+    Context::build(&ContextConfig {
+        seed: 7,
+        dataset_path: None,
+        mini: true,
+        out_dir: out_dir.to_path_buf(),
+    })
+}

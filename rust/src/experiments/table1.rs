@@ -1,0 +1,92 @@
+//! Table 1: solution times of the nine named matrices under the four
+//! label reordering algorithms (AMD, SCOTCH, ND, RCM).
+//!
+//! The paper's point: per-matrix spread across algorithms is enormous
+//! (up to 10³×) and no single algorithm wins everywhere. The integration
+//! test asserts exactly those two shape properties.
+
+use anyhow::Result;
+
+use super::Context;
+use crate::collection::paper_table1_analogs;
+use crate::dataset::{sweep_one, SweepConfig};
+use crate::reorder::ReorderAlgorithm;
+use crate::util::table::{fmt_s, Table};
+
+/// One output row.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub name: String,
+    /// Times aligned with [`ReorderAlgorithm::LABEL_SET`] = AMD, SCOTCH, ND, RCM.
+    pub times: [f64; 4],
+    pub nnz: usize,
+    pub dimension: usize,
+}
+
+impl Row {
+    pub fn best(&self) -> ReorderAlgorithm {
+        let k = self
+            .times
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(k, _)| k)
+            .unwrap();
+        ReorderAlgorithm::LABEL_SET[k]
+    }
+
+    pub fn spread(&self) -> f64 {
+        let mx = self.times.iter().copied().fold(f64::MIN, f64::max);
+        let mn = self.times.iter().copied().fold(f64::MAX, f64::min);
+        mx / mn.max(1e-12)
+    }
+}
+
+/// Run Table 1 over the named analogs (fresh sweep, measured timings).
+pub fn run(ctx: &Context) -> Result<Vec<Row>> {
+    let analogs = paper_table1_analogs(ctx.seed);
+    let cfg = SweepConfig::default();
+    let mut rows = Vec::new();
+    for nm in &analogs {
+        let rec = sweep_one(nm, &ReorderAlgorithm::LABEL_SET, &cfg);
+        let mut times = [0.0; 4];
+        for r in &rec.results {
+            if let Some(k) = r.algorithm.label_index() {
+                times[k] = r.total_s;
+            }
+        }
+        rows.push(Row {
+            name: nm.name.clone(),
+            times,
+            nnz: nm.matrix.nnz(),
+            dimension: nm.matrix.nrows,
+        });
+    }
+
+    let mut t = Table::new(&[
+        "Matrix Name",
+        "AMD(s)",
+        "SCOTCH(s)",
+        "ND(s)",
+        "RCM(s)",
+        "Nnz",
+        "Dimension",
+        "Best",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            r.name.clone(),
+            fmt_s(r.times[0]),
+            fmt_s(r.times[1]),
+            fmt_s(r.times[2]),
+            fmt_s(r.times[3]),
+            r.nnz.to_string(),
+            r.dimension.to_string(),
+            r.best().name().to_string(),
+        ]);
+    }
+    println!("\nTable 1: Matrix Solution Times with Various Reordering Algorithms");
+    t.print();
+    ctx.write_csv("table1.csv", &t.to_csv())?;
+    Ok(rows)
+}

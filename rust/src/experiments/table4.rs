@@ -1,0 +1,23 @@
+//! Table 4: hyperparameters of the Random Forest selected by grid search
+//! (criterion, min_samples_leaf, min_samples_split, n_estimators).
+
+use anyhow::Result;
+
+use super::Context;
+use crate::util::table::Table;
+
+pub fn run(ctx: &Context) -> Result<Vec<(String, String)>> {
+    let params = ctx.forest.grid.best_params.clone();
+    let mut t = Table::new(&["Hyperparameter Name", "Value"]);
+    for (k, v) in &params {
+        t.row(vec![k.clone(), v.clone()]);
+    }
+    println!(
+        "\nTable 4: Hyperparameters of the Random Forest (grid CV accuracy {:.3}, {} candidates)",
+        ctx.forest.grid.best_cv_accuracy,
+        ctx.forest.grid.all.len()
+    );
+    t.print();
+    ctx.write_csv("table4.csv", &t.to_csv())?;
+    Ok(params)
+}

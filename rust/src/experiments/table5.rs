@@ -1,0 +1,57 @@
+//! Table 5: model predictions, prediction times, and true labels for the
+//! Table-1 matrices.
+//!
+//! The paper's point: predictions match the true (measured-fastest)
+//! labels, and prediction cost is negligible next to solve cost.
+
+use anyhow::Result;
+
+use super::Context;
+use crate::collection::paper_table1_analogs;
+use crate::dataset::{sweep_one, SweepConfig};
+use crate::reorder::ReorderAlgorithm;
+use crate::util::table::Table;
+
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub name: String,
+    pub predicted: ReorderAlgorithm,
+    pub predict_s: f64,
+    pub true_label: ReorderAlgorithm,
+}
+
+pub fn run(ctx: &Context) -> Result<Vec<Row>> {
+    let pipe = ctx.pipeline();
+    let analogs = paper_table1_analogs(ctx.seed);
+    let cfg = SweepConfig::default();
+    let mut rows = Vec::new();
+    for nm in &analogs {
+        // prediction (features + inference timed)
+        let (predicted, feature_s, predict_s) = pipe.select(&nm.matrix);
+        // ground truth by measurement
+        let rec = sweep_one(nm, &ReorderAlgorithm::LABEL_SET, &cfg);
+        let true_label = ReorderAlgorithm::LABEL_SET[rec.label];
+        rows.push(Row {
+            name: nm.name.clone(),
+            predicted,
+            predict_s: feature_s + predict_s,
+            true_label,
+        });
+    }
+
+    let mut t = Table::new(&["Matrix Name", "Predict Label", "Predict Time(s)", "True Label"]);
+    for r in &rows {
+        t.row(vec![
+            r.name.clone(),
+            r.predicted.name().to_string(),
+            format!("{:.4}", r.predict_s),
+            r.true_label.name().to_string(),
+        ]);
+    }
+    println!("\nTable 5: Model Prediction Results and Prediction Times");
+    t.print();
+    let hits = rows.iter().filter(|r| r.predicted == r.true_label).count();
+    println!("correct: {hits}/{} (paper: 9/9)", rows.len());
+    ctx.write_csv("table5.csv", &t.to_csv())?;
+    Ok(rows)
+}

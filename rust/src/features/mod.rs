@@ -1,0 +1,241 @@
+//! Table-3 feature extraction: the 12 structural features the classifier
+//! consumes.
+//!
+//! | # | feature    | description                      |
+//! |---|------------|----------------------------------|
+//! | 0 | dimension  | matrix dimension N               |
+//! | 1 | nnz        | stored nonzeros                  |
+//! | 2 | nnz_ratio  | nnz / N²                         |
+//! | 3 | nnz_max    | max nonzeros per row             |
+//! | 4 | nnz_min    | min nonzeros per row             |
+//! | 5 | nnz_avg    | mean nonzeros per row            |
+//! | 6 | nnz_std    | std of nonzeros per row          |
+//! | 7 | degree_max | max node degree (A + Aᵀ graph)   |
+//! | 8 | degree_min | min node degree                  |
+//! | 9 | degree_avg | mean node degree                 |
+//! |10 | bandwidth  | Eq. (2)                          |
+//! |11 | profile    | Eq. (3)                          |
+//!
+//! Extraction is a single pass over the CSR structure plus one
+//! symmetrization for the degree features — this sits on the serving hot
+//! path in front of the MLP artifact, so it is allocation-lean.
+
+use crate::graph::Graph;
+use crate::sparse::{pattern, CsrMatrix};
+use crate::util::stats;
+
+/// Number of features (must match `python/compile/model.py::N_FEATURES`).
+pub const N_FEATURES: usize = 12;
+
+/// Feature names in vector order (CSV headers, docs).
+pub const FEATURE_NAMES: [&str; N_FEATURES] = [
+    "dimension",
+    "nnz",
+    "nnz_ratio",
+    "nnz_max",
+    "nnz_min",
+    "nnz_avg",
+    "nnz_std",
+    "degree_max",
+    "degree_min",
+    "degree_avg",
+    "bandwidth",
+    "profile",
+];
+
+/// The Table-3 feature vector of a square sparse matrix.
+pub fn extract(a: &CsrMatrix) -> [f64; N_FEATURES] {
+    assert_eq!(a.nrows, a.ncols, "features need a square matrix");
+    let n = a.nrows;
+    let nnz = a.nnz();
+
+    // per-row nnz moments in one pass (no per-row Vec allocation)
+    let mut row_max = 0usize;
+    let mut row_min = usize::MAX;
+    let mut sum = 0f64;
+    let mut sumsq = 0f64;
+    for r in 0..n {
+        let c = a.row_nnz(r);
+        row_max = row_max.max(c);
+        row_min = row_min.min(c);
+        sum += c as f64;
+        sumsq += (c * c) as f64;
+    }
+    if n == 0 {
+        row_min = 0;
+    }
+    let nnz_avg = if n > 0 { sum / n as f64 } else { 0.0 };
+    let nnz_var = if n > 0 {
+        (sumsq / n as f64 - nnz_avg * nnz_avg).max(0.0)
+    } else {
+        0.0
+    };
+
+    // degrees on the symmetrized adjacency graph
+    let g = Graph::from_matrix(a);
+    let mut deg_max = 0usize;
+    let mut deg_min = usize::MAX;
+    let mut deg_sum = 0f64;
+    for v in 0..n {
+        let d = g.degree(v);
+        deg_max = deg_max.max(d);
+        deg_min = deg_min.min(d);
+        deg_sum += d as f64;
+    }
+    if n == 0 {
+        deg_min = 0;
+    }
+
+    [
+        n as f64,
+        nnz as f64,
+        if n > 0 {
+            nnz as f64 / (n as f64 * n as f64)
+        } else {
+            0.0
+        },
+        row_max as f64,
+        row_min as f64,
+        nnz_avg,
+        nnz_var.sqrt(),
+        deg_max as f64,
+        deg_min as f64,
+        if n > 0 { deg_sum / n as f64 } else { 0.0 },
+        pattern::bandwidth(a) as f64,
+        pattern::profile(a) as f64,
+    ]
+}
+
+/// Batch extraction (one row per matrix).
+pub fn extract_batch(mats: &[CsrMatrix]) -> Vec<[f64; N_FEATURES]> {
+    mats.iter().map(extract).collect()
+}
+
+/// Per-column statistics of a feature matrix, used by the normalizers
+/// (and exported into the MLP artifact's mean/std inputs).
+#[derive(Clone, Debug)]
+pub struct FeatureStats {
+    pub mean: [f64; N_FEATURES],
+    pub std: [f64; N_FEATURES],
+    pub min: [f64; N_FEATURES],
+    pub max: [f64; N_FEATURES],
+}
+
+impl FeatureStats {
+    pub fn compute(rows: &[[f64; N_FEATURES]]) -> FeatureStats {
+        let mut mean = [0.0; N_FEATURES];
+        let mut std = [0.0; N_FEATURES];
+        let mut mn = [f64::INFINITY; N_FEATURES];
+        let mut mx = [f64::NEG_INFINITY; N_FEATURES];
+        let mut col = Vec::with_capacity(rows.len());
+        for f in 0..N_FEATURES {
+            col.clear();
+            col.extend(rows.iter().map(|r| r[f]));
+            mean[f] = stats::mean(&col);
+            std[f] = stats::std_dev(&col);
+            mn[f] = stats::min(&col);
+            mx[f] = stats::max(&col);
+        }
+        if rows.is_empty() {
+            mn = [0.0; N_FEATURES];
+            mx = [0.0; N_FEATURES];
+        }
+        FeatureStats {
+            mean,
+            std,
+            min: mn,
+            max: mx,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CooMatrix;
+
+    fn band(n: usize, b: usize) -> CsrMatrix {
+        let mut coo = CooMatrix::new(n, n);
+        for i in 0..n {
+            coo.push(i, i, 2.0);
+            for d in 1..=b {
+                if i + d < n {
+                    coo.push_sym(i, i + d, -1.0);
+                }
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn features_of_tridiagonal() {
+        let a = band(10, 1);
+        let f = extract(&a);
+        assert_eq!(f[0], 10.0); // dimension
+        assert_eq!(f[1], 28.0); // nnz = 10 + 2*9
+        assert!((f[2] - 0.28).abs() < 1e-12);
+        assert_eq!(f[3], 3.0); // max per row
+        assert_eq!(f[4], 2.0); // min per row (end rows)
+        assert!((f[5] - 2.8).abs() < 1e-12);
+        assert_eq!(f[7], 2.0); // degree max
+        assert_eq!(f[8], 1.0); // degree min
+        assert_eq!(f[10], 1.0); // bandwidth
+        assert_eq!(f[11], 9.0); // profile: rows 1..9 contribute 1 each
+    }
+
+    #[test]
+    fn features_of_diagonal() {
+        let a = CooMatrix::identity(5).to_csr();
+        let f = extract(&a);
+        assert_eq!(f[3], 1.0);
+        assert_eq!(f[4], 1.0);
+        assert_eq!(f[6], 0.0); // nnz_std
+        assert_eq!(f[7], 0.0); // no off-diagonal -> degree 0
+        assert_eq!(f[10], 0.0);
+        assert_eq!(f[11], 0.0);
+    }
+
+    #[test]
+    fn degree_counts_symmetrized() {
+        // one directed entry still yields degree 1 on both endpoints
+        let mut coo = CooMatrix::new(3, 3);
+        coo.push(0, 2, 1.0);
+        for i in 0..3 {
+            coo.push(i, i, 1.0);
+        }
+        let f = extract(&coo.to_csr());
+        assert_eq!(f[7], 1.0);
+        assert_eq!(f[8], 0.0); // node 1 isolated
+    }
+
+    #[test]
+    fn names_align_with_vector() {
+        assert_eq!(FEATURE_NAMES.len(), N_FEATURES);
+        assert_eq!(FEATURE_NAMES[10], "bandwidth");
+    }
+
+    #[test]
+    fn stats_cover_columns() {
+        let rows = vec![extract(&band(10, 1)), extract(&band(20, 2))];
+        let st = FeatureStats::compute(&rows);
+        assert!((st.mean[0] - 15.0).abs() < 1e-12);
+        assert_eq!(st.min[0], 10.0);
+        assert_eq!(st.max[0], 20.0);
+        assert!(st.std[0] > 0.0);
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let mats = vec![band(8, 1), band(12, 3)];
+        let batch = extract_batch(&mats);
+        assert_eq!(batch[0], extract(&mats[0]));
+        assert_eq!(batch[1], extract(&mats[1]));
+    }
+
+    #[test]
+    fn empty_matrix_is_all_zero() {
+        let a = CooMatrix::new(0, 0).to_csr();
+        let f = extract(&a);
+        assert!(f.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,206 @@
+//! Adjacency-graph substrate for the reordering algorithms.
+//!
+//! A sparse matrix's pattern (of `A + Aᵀ`) is viewed as an undirected
+//! graph; every reordering algorithm in `reorder/` consumes this
+//! [`Graph`]. The submodules provide the traversal and partitioning
+//! machinery: BFS level structures and pseudo-peripheral vertices
+//! ([`traversal`], used by RCM and ND bisection), and multilevel
+//! coarsening + FM-refined bisection with vertex-separator extraction
+//! ([`partition`], used by ND and the SCOTCH-like hybrid).
+
+pub mod partition;
+pub mod traversal;
+
+use crate::sparse::pattern::symmetrized_pattern;
+use crate::sparse::CsrMatrix;
+
+/// Undirected graph in CSR adjacency form (no self loops, both directions
+/// stored, rows sorted).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Graph {
+    pub indptr: Vec<usize>,
+    pub indices: Vec<usize>,
+}
+
+impl Graph {
+    /// Adjacency of the symmetrized pattern of a square matrix.
+    pub fn from_matrix(a: &CsrMatrix) -> Self {
+        let (indptr, indices) = symmetrized_pattern(a);
+        Graph { indptr, indices }
+    }
+
+    /// Build from an undirected edge list over `n` vertices (self loops
+    /// ignored, duplicates deduped).
+    pub fn from_edges(n: usize, edges: &[(usize, usize)]) -> Self {
+        let mut counts = vec![0usize; n + 1];
+        for &(a, b) in edges {
+            if a == b {
+                continue;
+            }
+            assert!(a < n && b < n, "edge ({a},{b}) out of range");
+            counts[a + 1] += 1;
+            counts[b + 1] += 1;
+        }
+        for i in 0..n {
+            counts[i + 1] += counts[i];
+        }
+        let mut indices = vec![0usize; counts[n]];
+        let mut next = counts.clone();
+        for &(a, b) in edges {
+            if a == b {
+                continue;
+            }
+            indices[next[a]] = b;
+            next[a] += 1;
+            indices[next[b]] = a;
+            next[b] += 1;
+        }
+        let mut indptr = vec![0usize; n + 1];
+        let mut out = Vec::with_capacity(indices.len());
+        for v in 0..n {
+            let seg = &mut indices[counts[v]..counts[v + 1]];
+            seg.sort_unstable();
+            let mut last = usize::MAX;
+            for &u in seg.iter() {
+                if u != last {
+                    out.push(u);
+                    last = u;
+                }
+            }
+            indptr[v + 1] = out.len();
+        }
+        Graph {
+            indptr,
+            indices: out,
+        }
+    }
+
+    pub fn n_vertices(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.indices.len() / 2
+    }
+
+    pub fn neighbors(&self, v: usize) -> &[usize] {
+        &self.indices[self.indptr[v]..self.indptr[v + 1]]
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        self.indptr[v + 1] - self.indptr[v]
+    }
+
+    /// Connected components: returns (component id per vertex, count).
+    pub fn components(&self) -> (Vec<usize>, usize) {
+        let n = self.n_vertices();
+        let mut comp = vec![usize::MAX; n];
+        let mut queue = Vec::new();
+        let mut n_comp = 0;
+        for start in 0..n {
+            if comp[start] != usize::MAX {
+                continue;
+            }
+            comp[start] = n_comp;
+            queue.clear();
+            queue.push(start);
+            while let Some(v) = queue.pop() {
+                for &u in self.neighbors(v) {
+                    if comp[u] == usize::MAX {
+                        comp[u] = n_comp;
+                        queue.push(u);
+                    }
+                }
+            }
+            n_comp += 1;
+        }
+        (comp, n_comp)
+    }
+
+    /// Induced subgraph on `verts` (returns the subgraph and the mapping
+    /// from subgraph vertex id to original id).
+    pub fn subgraph(&self, verts: &[usize]) -> (Graph, Vec<usize>) {
+        let n = self.n_vertices();
+        let mut local = vec![usize::MAX; n];
+        for (k, &v) in verts.iter().enumerate() {
+            local[v] = k;
+        }
+        let mut edges = Vec::new();
+        for (k, &v) in verts.iter().enumerate() {
+            for &u in self.neighbors(v) {
+                let lu = local[u];
+                if lu != usize::MAX && lu > k {
+                    edges.push((k, lu));
+                }
+            }
+        }
+        (Graph::from_edges(verts.len(), &edges), verts.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CooMatrix;
+
+    fn path_graph(n: usize) -> Graph {
+        let edges: Vec<(usize, usize)> = (0..n - 1).map(|i| (i, i + 1)).collect();
+        Graph::from_edges(n, &edges)
+    }
+
+    #[test]
+    fn from_edges_sorted_dedup() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 0), (1, 2), (2, 2)]);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.n_edges(), 2);
+    }
+
+    #[test]
+    fn from_matrix_symmetrizes() {
+        let mut m = CooMatrix::new(3, 3);
+        m.push(0, 1, 1.0); // only one direction stored
+        m.push(1, 1, 5.0); // diagonal dropped
+        m.push(2, 0, 1.0);
+        let g = Graph::from_matrix(&m.to_csr());
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(1), &[0]);
+        assert_eq!(g.neighbors(2), &[0]);
+    }
+
+    #[test]
+    fn components_of_disconnected() {
+        let g = Graph::from_edges(5, &[(0, 1), (2, 3)]);
+        let (comp, n) = g.components();
+        assert_eq!(n, 3);
+        assert_eq!(comp[0], comp[1]);
+        assert_eq!(comp[2], comp[3]);
+        assert_ne!(comp[0], comp[2]);
+        assert_ne!(comp[4], comp[0]);
+    }
+
+    #[test]
+    fn path_is_connected() {
+        let (_, n) = path_graph(10).components();
+        assert_eq!(n, 1);
+    }
+
+    #[test]
+    fn subgraph_induces_edges() {
+        let g = Graph::from_edges(5, &[(0, 1), (1, 2), (2, 3), (3, 4)]);
+        let (sub, map) = g.subgraph(&[1, 2, 4]);
+        assert_eq!(sub.n_vertices(), 3);
+        // only edge 1-2 is induced
+        assert_eq!(sub.n_edges(), 1);
+        assert_eq!(sub.neighbors(0), &[1]);
+        assert_eq!(map, vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Graph::from_edges(3, &[]);
+        assert_eq!(g.n_edges(), 0);
+        let (_, n) = g.components();
+        assert_eq!(n, 3);
+    }
+}

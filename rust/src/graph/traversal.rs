@@ -1,0 +1,148 @@
+//! BFS level structures and pseudo-peripheral vertex search.
+//!
+//! RCM's quality depends on starting from a vertex of (near-)maximal
+//! eccentricity; the George–Liu pseudo-peripheral procedure below is the
+//! standard way to find one. ND's BFS-based bisection reuses the same
+//! level structure.
+
+use super::Graph;
+
+/// BFS level structure rooted at `start`, restricted to vertices where
+/// `mask[v]` is true (pass all-true for the whole graph).
+#[derive(Clone, Debug)]
+pub struct LevelStructure {
+    /// Vertices in BFS order.
+    pub order: Vec<usize>,
+    /// `levels[k]` = vertices at distance k (indices into nothing —
+    /// actual vertex ids).
+    pub levels: Vec<Vec<usize>>,
+}
+
+impl LevelStructure {
+    pub fn eccentricity(&self) -> usize {
+        self.levels.len().saturating_sub(1)
+    }
+
+    pub fn width(&self) -> usize {
+        self.levels.iter().map(|l| l.len()).max().unwrap_or(0)
+    }
+
+    pub fn n_reached(&self) -> usize {
+        self.order.len()
+    }
+}
+
+/// BFS from `start` over the masked graph.
+pub fn bfs_levels(g: &Graph, start: usize, mask: &[bool]) -> LevelStructure {
+    debug_assert!(mask[start]);
+    let n = g.n_vertices();
+    let mut visited = vec![false; n];
+    let mut order = Vec::new();
+    let mut levels = Vec::new();
+    let mut frontier = vec![start];
+    visited[start] = true;
+    while !frontier.is_empty() {
+        order.extend_from_slice(&frontier);
+        let mut next = Vec::new();
+        for &v in &frontier {
+            for &u in g.neighbors(v) {
+                if mask[u] && !visited[u] {
+                    visited[u] = true;
+                    next.push(u);
+                }
+            }
+        }
+        levels.push(frontier);
+        frontier = next;
+    }
+    LevelStructure { order, levels }
+}
+
+/// George–Liu pseudo-peripheral vertex: start anywhere, repeatedly BFS
+/// and move to a minimum-degree vertex of the last level until the
+/// eccentricity stops growing. Returns (vertex, its level structure).
+pub fn pseudo_peripheral(g: &Graph, start: usize, mask: &[bool]) -> (usize, LevelStructure) {
+    let mut v = start;
+    let mut ls = bfs_levels(g, v, mask);
+    loop {
+        let last = ls.levels.last().expect("non-empty BFS");
+        // min-degree vertex in the last level
+        let &cand = last
+            .iter()
+            .min_by_key(|&&u| g.degree(u))
+            .expect("non-empty level");
+        if cand == v {
+            return (v, ls);
+        }
+        let ls2 = bfs_levels(g, cand, mask);
+        if ls2.eccentricity() > ls.eccentricity() {
+            v = cand;
+            ls = ls2;
+        } else {
+            return (v, ls);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path_graph(n: usize) -> Graph {
+        let edges: Vec<(usize, usize)> = (0..n - 1).map(|i| (i, i + 1)).collect();
+        Graph::from_edges(n, &edges)
+    }
+
+    fn star_graph(n: usize) -> Graph {
+        let edges: Vec<(usize, usize)> = (1..n).map(|i| (0, i)).collect();
+        Graph::from_edges(n, &edges)
+    }
+
+    #[test]
+    fn bfs_levels_on_path() {
+        let g = path_graph(5);
+        let mask = vec![true; 5];
+        let ls = bfs_levels(&g, 2, &mask);
+        assert_eq!(ls.eccentricity(), 2);
+        assert_eq!(ls.levels[0], vec![2]);
+        assert_eq!(ls.levels[1].len(), 2);
+        assert_eq!(ls.n_reached(), 5);
+    }
+
+    #[test]
+    fn bfs_respects_mask() {
+        let g = path_graph(5);
+        let mut mask = vec![true; 5];
+        mask[2] = false; // cut the path
+        let ls = bfs_levels(&g, 0, &mask);
+        assert_eq!(ls.n_reached(), 2); // 0, 1
+    }
+
+    #[test]
+    fn pseudo_peripheral_on_path_finds_endpoint() {
+        let g = path_graph(9);
+        let mask = vec![true; 9];
+        let (v, ls) = pseudo_peripheral(&g, 4, &mask);
+        assert!(v == 0 || v == 8, "got {v}");
+        assert_eq!(ls.eccentricity(), 8);
+    }
+
+    #[test]
+    fn pseudo_peripheral_on_star_is_leaf() {
+        let g = star_graph(6);
+        let mask = vec![true; 6];
+        let (v, ls) = pseudo_peripheral(&g, 0, &mask);
+        assert!(v != 0);
+        assert_eq!(ls.eccentricity(), 2);
+    }
+
+    #[test]
+    fn bfs_order_is_permutation_of_component() {
+        let g = path_graph(7);
+        let mask = vec![true; 7];
+        let ls = bfs_levels(&g, 3, &mask);
+        let mut o = ls.order.clone();
+        o.sort_unstable();
+        assert_eq!(o, (0..7).collect::<Vec<_>>());
+    }
+}

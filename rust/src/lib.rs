@@ -1,0 +1,36 @@
+//! # smr — Supervised learning-based Selection of sparse Matrix Reordering algorithms
+//!
+//! A from-scratch reproduction of Tang et al., *"Selection of Supervised
+//! Learning-based Sparse Matrix Reordering Algorithms"* (CS.DC 2025), as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the selection system: sparse-matrix
+//!   substrate, seven reordering algorithms, a direct LDLᵀ solver (the
+//!   MUMPS substitute), Table-3 feature extraction, six classical
+//!   classifiers, the dataset/training pipeline, and a batched prediction
+//!   service.
+//! * **Layer 2** — a JAX MLP classifier (`python/compile/model.py`)
+//!   AOT-lowered to HLO text per (architecture, batch) variant.
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) fused into
+//!   those artifacts; executed from Rust through the PJRT CPU client
+//!   (`runtime`), so Python never runs after `make artifacts`.
+//!
+//! See `DESIGN.md` for the experiment index (every paper table/figure maps
+//! to a module in [`experiments`] and a bench in `rust/benches/`).
+
+pub mod collection;
+pub mod coordinator;
+pub mod dataset;
+pub mod experiments;
+pub mod features;
+pub mod graph;
+pub mod ml;
+pub mod model;
+pub mod reorder;
+pub mod runtime;
+pub mod solver;
+pub mod sparse;
+pub mod util;
+
+pub use reorder::{Permutation, ReorderAlgorithm};
+pub use sparse::{CooMatrix, CsrMatrix};

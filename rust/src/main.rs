@@ -1,0 +1,368 @@
+//! `smr` — CLI launcher for the reordering-selection system.
+//!
+//! Subcommands:
+//!   collection  — generate the synthetic collection, print stats / export .mtx
+//!   dataset     — run the reorder × solve sweep, save the labeled dataset
+//!   train       — grid-search + train the forest (and the AOT MLP)
+//!   predict     — predict the best ordering for a MatrixMarket file
+//!   serve       — run the batched prediction service on a demo workload
+//!   experiment  — regenerate a paper table/figure (table1|fig1|fig4|table4|table5|table6|table7|all)
+//!
+//! Argument parsing is hand-rolled (offline environment, no clap); every
+//! flag has the form `--key value` or `--flag`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context as _, Result};
+
+use smr::collection;
+use smr::coordinator::service::Backend;
+use smr::coordinator::{train_mlp, BatcherConfig, PredictionService};
+use smr::dataset::{build_dataset, Dataset, SweepConfig};
+use smr::experiments::{self, Context, ContextConfig};
+use smr::features;
+use smr::model::TrainConfig;
+use smr::reorder::ReorderAlgorithm;
+use smr::runtime::{Manifest, Runtime};
+use smr::sparse::matrix_market;
+use smr::util::Timer;
+
+struct Args {
+    flags: HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut flags = HashMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".into());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { flags, positional }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: smr <command> [flags]\n\
+         commands:\n\
+           collection [--seed N] [--mini] [--export DIR]\n\
+           dataset    [--seed N] [--mini] [--out FILE] [--algos label|paper]\n\
+           train      [--dataset FILE] [--seed N] [--artifacts DIR] [--model-out FILE]\n\
+           predict    --matrix FILE.mtx [--dataset FILE] [--seed N]\n\
+           serve      [--dataset FILE] [--requests N] [--seed N]\n\
+           experiment <table1|fig1|fig4|table4|table5|table6|table7|all>\n\
+                      [--seed N] [--mini] [--dataset FILE] [--artifacts DIR] [--out DIR]"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "collection" => cmd_collection(&args),
+        "dataset" => cmd_dataset(&args),
+        "train" => cmd_train(&args),
+        "predict" => cmd_predict(&args),
+        "serve" => cmd_serve(&args),
+        "experiment" => cmd_experiment(&args),
+        _ => usage(),
+    }
+}
+
+fn cmd_collection(args: &Args) -> Result<()> {
+    let seed = args.get_u64("seed", 42);
+    let coll = if args.has("mini") {
+        collection::generate_mini_collection(seed, 4)
+    } else {
+        collection::generate_collection(seed)
+    };
+    println!("collection: {} matrices (seed {seed})", coll.len());
+    let mut by_family: HashMap<&str, (usize, usize, usize)> = HashMap::new();
+    for m in &coll {
+        let e = by_family.entry(m.family).or_default();
+        e.0 += 1;
+        e.1 += m.matrix.nrows;
+        e.2 += m.matrix.nnz();
+    }
+    let mut fams: Vec<_> = by_family.into_iter().collect();
+    fams.sort();
+    for (fam, (count, dims, nnz)) in fams {
+        println!(
+            "  {fam:<18} {count:>4} matrices  avg n={:<6} avg nnz={}",
+            dims / count,
+            nnz / count
+        );
+    }
+    if let Some(dir) = args.get("export") {
+        let dir = PathBuf::from(dir);
+        std::fs::create_dir_all(&dir)?;
+        for m in &coll {
+            matrix_market::write_file(&m.matrix, &dir.join(format!("{}.mtx", m.name)))?;
+        }
+        println!("exported to {}", dir.display());
+    }
+    Ok(())
+}
+
+fn cmd_dataset(args: &Args) -> Result<()> {
+    let seed = args.get_u64("seed", 42);
+    let coll = if args.has("mini") {
+        collection::generate_mini_collection(seed, 4)
+    } else {
+        collection::generate_collection(seed)
+    };
+    let algos: &[ReorderAlgorithm] = match args.get("algos") {
+        Some("paper") => &ReorderAlgorithm::PAPER_SET,
+        _ => &ReorderAlgorithm::LABEL_SET,
+    };
+    println!(
+        "sweeping {} matrices x {} algorithms ...",
+        coll.len(),
+        algos.len()
+    );
+    let t = Timer::start();
+    let ds = build_dataset(&coll, algos, &SweepConfig::default());
+    println!("sweep done in {:.1}s", t.elapsed_s());
+    println!(
+        "label distribution [AMD, SCOTCH, ND, RCM]: {:?}",
+        ds.label_distribution()
+    );
+    let out = PathBuf::from(args.get("out").unwrap_or("data/dataset.json"));
+    if let Some(parent) = out.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    ds.save(&out)?;
+    std::fs::write(out.with_extension("csv"), ds.to_csv())?;
+    println!("saved {} (+ .csv)", out.display());
+    Ok(())
+}
+
+fn load_or_build_dataset(args: &Args, seed: u64) -> Result<Dataset> {
+    if let Some(p) = args.get("dataset") {
+        let p = Path::new(p);
+        if p.exists() {
+            return Dataset::load(p);
+        }
+        bail!(
+            "dataset file {} not found (run `smr dataset` first)",
+            p.display()
+        );
+    }
+    eprintln!("[no --dataset given: building a mini dataset]");
+    let coll = collection::generate_mini_collection(seed, 4);
+    Ok(build_dataset(
+        &coll,
+        &ReorderAlgorithm::LABEL_SET,
+        &SweepConfig::default(),
+    ))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let seed = args.get_u64("seed", 42);
+    let ds = load_or_build_dataset(args, seed)?;
+    let (train_idx, test_idx) = ds.split(0.8, seed);
+    println!(
+        "dataset: {} records (train {}, test {})",
+        ds.len(),
+        train_idx.len(),
+        test_idx.len()
+    );
+
+    let t = Timer::start();
+    let tf = smr::coordinator::train_forest(
+        &ds,
+        &train_idx,
+        smr::ml::normalize::Method::Standard,
+        seed,
+    );
+    println!(
+        "forest: grid CV accuracy {:.3} in {:.1}s, best {:?}",
+        tf.grid.best_cv_accuracy,
+        t.elapsed_s(),
+        tf.grid.best_params
+    );
+    let acc = smr::coordinator::trainer::eval_classifier(
+        &tf.forest,
+        &tf.normalizer,
+        &ds,
+        &test_idx,
+    );
+    println!("forest test accuracy: {:.3} (paper: 0.867)", acc);
+
+    if let Some(dir) = args.get("artifacts") {
+        let runtime = Runtime::cpu()?;
+        let manifest = Manifest::load(Path::new(dir))?;
+        let t = Timer::start();
+        let tm = train_mlp(&runtime, &manifest, &ds, &train_idx, &TrainConfig::default())?;
+        println!(
+            "mlp[{}]: val accuracy {:.3} in {:.1}s ({} train steps)",
+            tm.arch,
+            tm.val_accuracy,
+            t.elapsed_s(),
+            tm.losses.len()
+        );
+        if let Some(out) = args.get("model-out") {
+            tm.model.save(Path::new(out))?;
+            println!("mlp model saved to {out}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let seed = args.get_u64("seed", 42);
+    let path = args.get("matrix").context("--matrix FILE.mtx required")?;
+    let m = matrix_market::read_file(Path::new(path))?;
+    println!(
+        "matrix: {} ({}x{}, {} nnz)",
+        path,
+        m.nrows,
+        m.ncols,
+        m.nnz()
+    );
+    let ds = load_or_build_dataset(args, seed)?;
+    let (train_idx, _) = ds.split(0.8, seed);
+    let tf = smr::coordinator::train_forest(
+        &ds,
+        &train_idx,
+        smr::ml::normalize::Method::Standard,
+        seed,
+    );
+    let pipe = smr::coordinator::SelectionPipeline::new(
+        tf.normalizer,
+        Box::new(tf.forest),
+        smr::solver::SolverConfig::default(),
+    );
+    let (alg, fs, ps) = pipe.select(&m);
+    println!(
+        "predicted reordering: {} (features {:.2}ms + inference {:.2}ms)",
+        alg,
+        fs * 1e3,
+        ps * 1e3
+    );
+    let report = pipe.run(&m);
+    println!(
+        "solved with {}: total {:.4}s (reorder {:.4}s, analyze {:.4}s, factor {:.4}s, solve {:.4}s), fill {}, residual {:.2e}",
+        report.algorithm,
+        report.solve.total_s(),
+        report.solve.reorder_s,
+        report.solve.analyze_s,
+        report.solve.factor_s,
+        report.solve.solve_s,
+        report.solve.fill,
+        report.solve.residual
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let seed = args.get_u64("seed", 42);
+    let n_requests = args.get_u64("requests", 200) as usize;
+    let ds = load_or_build_dataset(args, seed)?;
+    let (train_idx, _) = ds.split(0.8, seed);
+    let tf = smr::coordinator::train_forest(
+        &ds,
+        &train_idx,
+        smr::ml::normalize::Method::Standard,
+        seed,
+    );
+    let svc = PredictionService::spawn(
+        Backend::Forest {
+            normalizer: tf.normalizer,
+            forest: tf.forest,
+        },
+        BatcherConfig::default(),
+    )?;
+    let coll = collection::generate_mini_collection(seed, 3);
+    let feats: Vec<Vec<f64>> = coll
+        .iter()
+        .map(|m| features::extract(&m.matrix).to_vec())
+        .collect();
+    let t = Timer::start();
+    let mut counts: HashMap<&'static str, usize> = HashMap::new();
+    for k in 0..n_requests {
+        let alg = svc.predict(&feats[k % feats.len()])?;
+        *counts.entry(alg.name()).or_default() += 1;
+    }
+    let secs = t.elapsed_s();
+    println!(
+        "served {n_requests} predictions in {:.3}s ({:.0} req/s, mean batch {:.2})",
+        secs,
+        n_requests as f64 / secs,
+        svc.stats.mean_batch_size()
+    );
+    println!("prediction mix: {counts:?}");
+    svc.shutdown();
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let cfg = ContextConfig {
+        seed: args.get_u64("seed", 42),
+        dataset_path: args.get("dataset").map(PathBuf::from),
+        mini: args.has("mini"),
+        out_dir: PathBuf::from(args.get("out").unwrap_or("results")),
+    };
+    let ctx = Context::build(&cfg)?;
+    let artifacts = args.get("artifacts").map(Path::new);
+    let run_one = |name: &str, ctx: &Context| -> Result<()> {
+        match name {
+            "table1" => experiments::table1::run(ctx).map(|_| ()),
+            "fig1" => experiments::fig1::run(ctx).map(|_| ()),
+            "fig4" => experiments::fig4::run(ctx, artifacts).map(|_| ()),
+            "table4" => experiments::table4::run(ctx).map(|_| ()),
+            "table5" => experiments::table5::run(ctx).map(|_| ()),
+            "table6" => experiments::table6::run(ctx).map(|_| ()),
+            "table7" => experiments::table7::run(ctx).map(|_| ()),
+            other => bail!("unknown experiment {other}"),
+        }
+    };
+    if which == "all" {
+        for name in [
+            "table1", "fig1", "fig4", "table4", "table5", "table6", "table7",
+        ] {
+            run_one(name, &ctx)?;
+        }
+    } else {
+        run_one(which, &ctx)?;
+    }
+    Ok(())
+}

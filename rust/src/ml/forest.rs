@@ -1,0 +1,174 @@
+//! Random forest — bagged CART trees with per-split feature subsampling;
+//! the model the paper ultimately selects (86.7% accuracy, Table 4).
+
+use super::tree::{Criterion, DecisionTree, TreeParams};
+use super::Classifier;
+use crate::util::pool::parallel_map;
+use crate::util::rng::Rng;
+
+/// Hyperparameters — the exact knobs of the paper's Table 4 grid
+/// (`criterion`, `min_samples_leaf`, `min_samples_split`, `n_estimators`).
+#[derive(Clone, Copy, Debug)]
+pub struct ForestParams {
+    pub n_estimators: usize,
+    pub criterion: Criterion,
+    pub min_samples_split: usize,
+    pub min_samples_leaf: usize,
+    pub max_depth: usize,
+    /// Per-split feature subsample; `None` = sqrt(n_features)
+    /// (sklearn's default for classification).
+    pub max_features: Option<usize>,
+}
+
+impl Default for ForestParams {
+    fn default() -> Self {
+        ForestParams {
+            n_estimators: 100,
+            criterion: Criterion::Gini,
+            min_samples_split: 2,
+            min_samples_leaf: 1,
+            max_depth: 32,
+            max_features: None,
+        }
+    }
+}
+
+pub struct RandomForest {
+    pub params: ForestParams,
+    trees: Vec<DecisionTree>,
+    n_classes: usize,
+    seed: u64,
+}
+
+impl RandomForest {
+    pub fn new(params: ForestParams, seed: u64) -> Self {
+        RandomForest {
+            params,
+            trees: Vec::new(),
+            n_classes: 0,
+            seed,
+        }
+    }
+
+    /// Class votes for one sample.
+    pub fn votes(&self, x: &[f64]) -> Vec<usize> {
+        let mut v = vec![0usize; self.n_classes];
+        for t in &self.trees {
+            v[t.predict(x)] += 1;
+        }
+        v
+    }
+}
+
+impl Classifier for RandomForest {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[usize], n_classes: usize) {
+        assert_eq!(x.len(), y.len());
+        self.n_classes = n_classes;
+        let m = x.len();
+        let n_features = x[0].len();
+        let max_features = self
+            .params
+            .max_features
+            .unwrap_or_else(|| (n_features as f64).sqrt().round() as usize)
+            .max(1);
+        let tree_params = TreeParams {
+            criterion: self.params.criterion,
+            max_depth: self.params.max_depth,
+            min_samples_split: self.params.min_samples_split,
+            min_samples_leaf: self.params.min_samples_leaf,
+            max_features: Some(max_features),
+        };
+        // bootstrap + fit, parallel over trees
+        let seeds: Vec<u64> = (0..self.params.n_estimators)
+            .map(|t| self.seed.wrapping_add(0x9E3779B97F4A7C15u64.wrapping_mul(t as u64 + 1)))
+            .collect();
+        self.trees = parallel_map(&seeds, crate::util::pool::default_workers(), |_, &s| {
+            let mut rng = Rng::new(s);
+            // bootstrap sample (with replacement)
+            let bx_idx: Vec<usize> = (0..m).map(|_| rng.below(m)).collect();
+            let bx: Vec<Vec<f64>> = bx_idx.iter().map(|&i| x[i].clone()).collect();
+            let by: Vec<usize> = bx_idx.iter().map(|&i| y[i]).collect();
+            let mut tree = DecisionTree::new(tree_params, s ^ 0xF0F0);
+            tree.fit(&bx, &by, n_classes);
+            tree
+        });
+    }
+
+    fn predict(&self, x: &[f64]) -> usize {
+        let v = self.votes(x);
+        v.iter()
+            .enumerate()
+            .max_by_key(|&(_, c)| *c)
+            .map(|(k, _)| k)
+            .unwrap_or(0)
+    }
+
+    fn name(&self) -> String {
+        "RandomForest".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::metrics::accuracy;
+    use crate::ml::testutil::blobs;
+
+    fn small_forest() -> RandomForest {
+        RandomForest::new(
+            ForestParams {
+                n_estimators: 25,
+                ..Default::default()
+            },
+            7,
+        )
+    }
+
+    #[test]
+    fn fits_and_generalizes() {
+        let (xtr, ytr) = blobs(50, 5, 0.8, 1);
+        let (xte, yte) = blobs(20, 5, 0.8, 2);
+        let mut f = small_forest();
+        f.fit(&xtr, &ytr, 4);
+        assert!(accuracy(&f.predict_batch(&xte), &yte) > 0.92);
+    }
+
+    #[test]
+    fn beats_single_stump_on_noisy_data() {
+        let (xtr, ytr) = blobs(60, 6, 2.5, 3);
+        let (xte, yte) = blobs(25, 6, 2.5, 4);
+        let mut f = small_forest();
+        f.fit(&xtr, &ytr, 4);
+        let facc = accuracy(&f.predict_batch(&xte), &yte);
+        let mut stump = DecisionTree::new(
+            TreeParams {
+                max_depth: 1,
+                ..Default::default()
+            },
+            0,
+        );
+        stump.fit(&xtr, &ytr, 4);
+        let sacc = accuracy(&stump.predict_batch(&xte), &yte);
+        assert!(facc > sacc, "forest {facc} <= stump {sacc}");
+    }
+
+    #[test]
+    fn votes_sum_to_n_estimators() {
+        let (x, y) = blobs(20, 4, 0.5, 5);
+        let mut f = small_forest();
+        f.fit(&x, &y, 4);
+        let v = f.votes(&x[0]);
+        assert_eq!(v.iter().sum::<usize>(), 25);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (x, y) = blobs(30, 4, 1.0, 6);
+        let mut f1 = RandomForest::new(ForestParams { n_estimators: 10, ..Default::default() }, 3);
+        let mut f2 = RandomForest::new(ForestParams { n_estimators: 10, ..Default::default() }, 3);
+        f1.fit(&x, &y, 4);
+        f2.fit(&x, &y, 4);
+        let (xt, _) = blobs(10, 4, 1.0, 7);
+        assert_eq!(f1.predict_batch(&xt), f2.predict_batch(&xt));
+    }
+}

@@ -1,0 +1,227 @@
+//! Exhaustive grid search with k-fold CV (paper §3.4, Fig. 3).
+//!
+//! Enumerates every hyperparameter combination, scores each with
+//! stratified 5-fold cross-validation, and keeps the best — the procedure
+//! behind the paper's Table 4 (the selected Random Forest combination).
+
+use super::forest::{ForestParams, RandomForest};
+use super::kfold::cross_val_accuracy;
+use super::knn::{Knn, KnnParams};
+use super::logreg::{LogRegParams, LogisticRegression};
+use super::naive_bayes::GaussianNB;
+use super::svm::{LinearSvm, SvmParams};
+use super::tree::{Criterion, DecisionTree, TreeParams};
+use super::Classifier;
+use crate::util::pool::{default_workers, parallel_map};
+
+/// One point of a hyperparameter grid.
+pub struct Candidate {
+    /// (name, value) pairs, e.g. `[("criterion","gini"),("n_estimators","100")]`.
+    pub params: Vec<(String, String)>,
+    /// Fresh-model factory.
+    pub factory: Box<dyn Fn() -> Box<dyn Classifier> + Sync + Send>,
+}
+
+/// Grid-search outcome.
+pub struct GridResult {
+    pub best_index: usize,
+    pub best_params: Vec<(String, String)>,
+    pub best_cv_accuracy: f64,
+    /// CV accuracy per candidate (same order as input).
+    pub all: Vec<f64>,
+}
+
+/// Run the grid: CV-score every candidate (parallel), pick the best.
+/// Ties break toward the earlier candidate (stable, deterministic).
+pub fn grid_search(
+    x: &[Vec<f64>],
+    y: &[usize],
+    n_classes: usize,
+    k: usize,
+    seed: u64,
+    candidates: &[Candidate],
+) -> GridResult {
+    assert!(!candidates.is_empty());
+    let accs = parallel_map(candidates, default_workers(), |_, cand| {
+        cross_val_accuracy(x, y, n_classes, k, seed, || (cand.factory)())
+    });
+    let mut best = 0usize;
+    for (i, &a) in accs.iter().enumerate() {
+        if a > accs[best] + 1e-12 {
+            best = i;
+        }
+    }
+    GridResult {
+        best_index: best,
+        best_params: candidates[best].params.clone(),
+        best_cv_accuracy: accs[best],
+        all: accs,
+    }
+}
+
+/// The paper's Random-Forest grid (Table 4 knobs).
+pub fn forest_grid(seed: u64) -> Vec<Candidate> {
+    let mut out = Vec::new();
+    for criterion in [Criterion::Gini, Criterion::Entropy] {
+        for min_samples_leaf in [1usize, 2] {
+            for min_samples_split in [2usize, 5] {
+                for n_estimators in [50usize, 100] {
+                    let params = ForestParams {
+                        n_estimators,
+                        criterion,
+                        min_samples_split,
+                        min_samples_leaf,
+                        ..Default::default()
+                    };
+                    out.push(Candidate {
+                        params: vec![
+                            ("criterion".into(), criterion.name().into()),
+                            ("min_samples_leaf".into(), min_samples_leaf.to_string()),
+                            ("min_samples_split".into(), min_samples_split.to_string()),
+                            ("n_estimators".into(), n_estimators.to_string()),
+                        ],
+                        factory: Box::new(move || {
+                            Box::new(RandomForest::new(params, seed))
+                        }),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+pub fn tree_grid(seed: u64) -> Vec<Candidate> {
+    let mut out = Vec::new();
+    for criterion in [Criterion::Gini, Criterion::Entropy] {
+        for max_depth in [8usize, 16, 32] {
+            for min_samples_leaf in [1usize, 2, 4] {
+                let params = TreeParams {
+                    criterion,
+                    max_depth,
+                    min_samples_leaf,
+                    ..Default::default()
+                };
+                out.push(Candidate {
+                    params: vec![
+                        ("criterion".into(), criterion.name().into()),
+                        ("max_depth".into(), max_depth.to_string()),
+                        ("min_samples_leaf".into(), min_samples_leaf.to_string()),
+                    ],
+                    factory: Box::new(move || Box::new(DecisionTree::new(params, seed))),
+                });
+            }
+        }
+    }
+    out
+}
+
+pub fn knn_grid() -> Vec<Candidate> {
+    let mut out = Vec::new();
+    for k in [3usize, 5, 7, 11] {
+        for weighted in [false, true] {
+            let params = KnnParams {
+                k,
+                distance_weighted: weighted,
+            };
+            out.push(Candidate {
+                params: vec![
+                    ("k".into(), k.to_string()),
+                    ("weights".into(), if weighted { "distance" } else { "uniform" }.into()),
+                ],
+                factory: Box::new(move || Box::new(Knn::new(params))),
+            });
+        }
+    }
+    out
+}
+
+pub fn svm_grid() -> Vec<Candidate> {
+    let mut out = Vec::new();
+    for l2 in [1e-4f64, 1e-3, 1e-2] {
+        for lr in [0.01f64, 0.05] {
+            let params = SvmParams {
+                l2,
+                lr,
+                ..Default::default()
+            };
+            out.push(Candidate {
+                params: vec![
+                    ("l2".into(), format!("{l2}")),
+                    ("lr".into(), format!("{lr}")),
+                ],
+                factory: Box::new(move || Box::new(LinearSvm::new(params))),
+            });
+        }
+    }
+    out
+}
+
+pub fn logreg_grid() -> Vec<Candidate> {
+    let mut out = Vec::new();
+    for l2 in [0.0f64, 1e-4, 1e-2] {
+        for lr in [0.05f64, 0.1, 0.3] {
+            let params = LogRegParams {
+                l2,
+                lr,
+                ..Default::default()
+            };
+            out.push(Candidate {
+                params: vec![
+                    ("l2".into(), format!("{l2}")),
+                    ("lr".into(), format!("{lr}")),
+                ],
+                factory: Box::new(move || Box::new(LogisticRegression::new(params))),
+            });
+        }
+    }
+    out
+}
+
+pub fn nb_grid() -> Vec<Candidate> {
+    vec![Candidate {
+        params: vec![],
+        factory: Box::new(|| Box::new(GaussianNB::new())),
+    }]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::testutil::blobs;
+
+    #[test]
+    fn grid_search_picks_a_sane_knn() {
+        let (x, y) = blobs(25, 4, 0.7, 1);
+        let g = knn_grid();
+        let r = grid_search(&x, &y, 4, 5, 3, &g);
+        assert!(r.best_cv_accuracy > 0.9, "acc {}", r.best_cv_accuracy);
+        assert_eq!(r.all.len(), g.len());
+        assert!(r.best_params.iter().any(|(k, _)| k == "k"));
+    }
+
+    #[test]
+    fn forest_grid_has_table4_shape() {
+        let g = forest_grid(1);
+        assert_eq!(g.len(), 2 * 2 * 2 * 2);
+        let names: Vec<&str> = g[0].params.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "criterion",
+                "min_samples_leaf",
+                "min_samples_split",
+                "n_estimators"
+            ]
+        );
+    }
+
+    #[test]
+    fn grid_result_best_matches_all() {
+        let (x, y) = blobs(15, 3, 0.8, 2);
+        let g = svm_grid();
+        let r = grid_search(&x, &y, 4, 3, 5, &g);
+        let max = r.all.iter().copied().fold(f64::MIN, f64::max);
+        assert!((r.best_cv_accuracy - max).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,121 @@
+//! Stratified k-fold cross-validation (paper §3.4: 5-fold CV inside the
+//! grid search).
+
+use crate::util::rng::Rng;
+
+/// Stratified fold assignment: returns `fold[i]` in `0..k` such that each
+/// class's samples are spread evenly across folds.
+pub fn stratified_folds(y: &[usize], k: usize, seed: u64) -> Vec<usize> {
+    assert!(k >= 2, "need at least 2 folds");
+    let mut rng = Rng::new(seed);
+    let n_classes = y.iter().copied().max().map_or(0, |m| m + 1);
+    let mut fold = vec![0usize; y.len()];
+    for c in 0..n_classes {
+        let mut idx: Vec<usize> = (0..y.len()).filter(|&i| y[i] == c).collect();
+        rng.shuffle(&mut idx);
+        for (pos, &i) in idx.iter().enumerate() {
+            fold[i] = pos % k;
+        }
+    }
+    fold
+}
+
+/// Train/validation index split for one fold.
+pub fn fold_split(fold: &[usize], f: usize) -> (Vec<usize>, Vec<usize>) {
+    let mut train = Vec::new();
+    let mut val = Vec::new();
+    for (i, &fi) in fold.iter().enumerate() {
+        if fi == f {
+            val.push(i);
+        } else {
+            train.push(i);
+        }
+    }
+    (train, val)
+}
+
+/// Cross-validated accuracy of a model factory: builds a fresh model per
+/// fold, fits on the train part, scores on the validation part.
+pub fn cross_val_accuracy<F>(
+    x: &[Vec<f64>],
+    y: &[usize],
+    n_classes: usize,
+    k: usize,
+    seed: u64,
+    make_model: F,
+) -> f64
+where
+    F: Fn() -> Box<dyn super::Classifier>,
+{
+    let folds = stratified_folds(y, k, seed);
+    let mut accs = Vec::with_capacity(k);
+    for f in 0..k {
+        let (tr, va) = fold_split(&folds, f);
+        if tr.is_empty() || va.is_empty() {
+            continue;
+        }
+        let xtr: Vec<Vec<f64>> = tr.iter().map(|&i| x[i].clone()).collect();
+        let ytr: Vec<usize> = tr.iter().map(|&i| y[i]).collect();
+        let mut model = make_model();
+        model.fit(&xtr, &ytr, n_classes);
+        let correct = va
+            .iter()
+            .filter(|&&i| model.predict(&x[i]) == y[i])
+            .count();
+        accs.push(correct as f64 / va.len() as f64);
+    }
+    if accs.is_empty() {
+        0.0
+    } else {
+        accs.iter().sum::<f64>() / accs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::knn::{Knn, KnnParams};
+    use crate::ml::testutil::blobs;
+
+    #[test]
+    fn folds_cover_all_and_stratify() {
+        let y = vec![0, 0, 0, 0, 0, 1, 1, 1, 1, 1];
+        let fold = stratified_folds(&y, 5, 1);
+        assert_eq!(fold.len(), 10);
+        // each fold gets exactly one of each class
+        for f in 0..5 {
+            let (_, va) = fold_split(&fold, f);
+            assert_eq!(va.len(), 2);
+            let classes: Vec<usize> = va.iter().map(|&i| y[i]).collect();
+            assert!(classes.contains(&0) && classes.contains(&1));
+        }
+    }
+
+    #[test]
+    fn split_partitions_indices() {
+        let y = vec![0, 1, 0, 1, 0, 1, 0, 1];
+        let fold = stratified_folds(&y, 4, 2);
+        for f in 0..4 {
+            let (tr, va) = fold_split(&fold, f);
+            assert_eq!(tr.len() + va.len(), 8);
+            let mut all: Vec<usize> = tr.iter().chain(&va).copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..8).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn cv_accuracy_high_on_separable_data() {
+        let (x, y) = blobs(25, 4, 0.6, 3);
+        let acc = cross_val_accuracy(&x, &y, 4, 5, 7, || {
+            Box::new(Knn::new(KnnParams::default()))
+        });
+        assert!(acc > 0.9, "cv accuracy {acc}");
+    }
+
+    #[test]
+    fn deterministic_folds() {
+        let y: Vec<usize> = (0..50).map(|i| i % 4).collect();
+        assert_eq!(stratified_folds(&y, 5, 9), stratified_folds(&y, 5, 9));
+    }
+}

@@ -1,0 +1,134 @@
+//! K-nearest-neighbors classifier — sklearn's `KNeighborsClassifier`
+//! substitute (brute-force Euclidean; our datasets are ≤ 10³ rows).
+
+use super::Classifier;
+
+#[derive(Clone, Copy, Debug)]
+pub struct KnnParams {
+    pub k: usize,
+    /// Inverse-distance weighted voting (sklearn `weights="distance"`).
+    pub distance_weighted: bool,
+}
+
+impl Default for KnnParams {
+    fn default() -> Self {
+        KnnParams {
+            k: 5,
+            distance_weighted: false,
+        }
+    }
+}
+
+pub struct Knn {
+    pub params: KnnParams,
+    x: Vec<Vec<f64>>,
+    y: Vec<usize>,
+    n_classes: usize,
+}
+
+impl Knn {
+    pub fn new(params: KnnParams) -> Self {
+        Knn {
+            params,
+            x: Vec::new(),
+            y: Vec::new(),
+            n_classes: 0,
+        }
+    }
+}
+
+fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(ai, bi)| (ai - bi).powi(2)).sum()
+}
+
+impl Classifier for Knn {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[usize], n_classes: usize) {
+        self.x = x.to_vec();
+        self.y = y.to_vec();
+        self.n_classes = n_classes;
+    }
+
+    fn predict(&self, x: &[f64]) -> usize {
+        let k = self.params.k.min(self.x.len()).max(1);
+        // partial selection of the k nearest
+        let mut dists: Vec<(f64, usize)> = self
+            .x
+            .iter()
+            .zip(&self.y)
+            .map(|(xi, &yi)| (sq_dist(xi, x), yi))
+            .collect();
+        dists.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut votes = vec![0.0f64; self.n_classes];
+        for &(d, c) in dists.iter().take(k) {
+            let w = if self.params.distance_weighted {
+                1.0 / (d.sqrt() + 1e-9)
+            } else {
+                1.0
+            };
+            votes[c] += w;
+        }
+        votes
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(c, _)| c)
+            .unwrap_or(0)
+    }
+
+    fn name(&self) -> String {
+        "KNN".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::metrics::accuracy;
+    use crate::ml::testutil::blobs;
+
+    #[test]
+    fn separates_blobs() {
+        let (xtr, ytr) = blobs(50, 4, 0.8, 1);
+        let (xte, yte) = blobs(20, 4, 0.8, 2);
+        let mut knn = Knn::new(KnnParams::default());
+        knn.fit(&xtr, &ytr, 4);
+        assert!(accuracy(&knn.predict_batch(&xte), &yte) > 0.92);
+    }
+
+    #[test]
+    fn k1_memorizes_training_set() {
+        let (x, y) = blobs(20, 3, 1.5, 3);
+        let mut knn = Knn::new(KnnParams {
+            k: 1,
+            ..Default::default()
+        });
+        knn.fit(&x, &y, 4);
+        assert_eq!(accuracy(&knn.predict_batch(&x), &y), 1.0);
+    }
+
+    #[test]
+    fn distance_weighting_breaks_ties() {
+        // two far points of class 0, one adjacent point of class 1
+        let x = vec![vec![10.0], vec![-10.0], vec![0.1]];
+        let y = vec![0, 0, 1];
+        let mut knn = Knn::new(KnnParams {
+            k: 3,
+            distance_weighted: true,
+        });
+        knn.fit(&x, &y, 2);
+        assert_eq!(knn.predict(&[0.0]), 1);
+    }
+
+    #[test]
+    fn k_larger_than_dataset_is_clamped() {
+        let x = vec![vec![0.0], vec![1.0]];
+        let y = vec![0, 1];
+        let mut knn = Knn::new(KnnParams {
+            k: 99,
+            ..Default::default()
+        });
+        knn.fit(&x, &y, 2);
+        let p = knn.predict(&[0.4]);
+        assert!(p < 2);
+    }
+}

@@ -1,0 +1,149 @@
+//! Multinomial logistic regression (softmax + cross-entropy, full-batch
+//! gradient descent with L2) — sklearn's `LogisticRegression` substitute.
+
+use super::Classifier;
+
+#[derive(Clone, Copy, Debug)]
+pub struct LogRegParams {
+    pub lr: f64,
+    pub epochs: usize,
+    pub l2: f64,
+}
+
+impl Default for LogRegParams {
+    fn default() -> Self {
+        LogRegParams {
+            lr: 0.1,
+            epochs: 300,
+            l2: 1e-4,
+        }
+    }
+}
+
+pub struct LogisticRegression {
+    pub params: LogRegParams,
+    /// weights[c][f] + bias[c]
+    w: Vec<Vec<f64>>,
+    b: Vec<f64>,
+    n_classes: usize,
+}
+
+impl LogisticRegression {
+    pub fn new(params: LogRegParams) -> Self {
+        LogisticRegression {
+            params,
+            w: Vec::new(),
+            b: Vec::new(),
+            n_classes: 0,
+        }
+    }
+
+    fn scores(&self, x: &[f64]) -> Vec<f64> {
+        (0..self.n_classes)
+            .map(|c| {
+                self.b[c]
+                    + self.w[c]
+                        .iter()
+                        .zip(x)
+                        .map(|(wi, xi)| wi * xi)
+                        .sum::<f64>()
+            })
+            .collect()
+    }
+
+    fn softmax(scores: &[f64]) -> Vec<f64> {
+        let mx = scores.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        let e: Vec<f64> = scores.iter().map(|s| (s - mx).exp()).collect();
+        let z: f64 = e.iter().sum();
+        e.iter().map(|v| v / z).collect()
+    }
+
+    /// Class probabilities for one sample.
+    pub fn predict_proba(&self, x: &[f64]) -> Vec<f64> {
+        Self::softmax(&self.scores(x))
+    }
+}
+
+impl Classifier for LogisticRegression {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[usize], n_classes: usize) {
+        let m = x.len();
+        let f = x[0].len();
+        self.n_classes = n_classes;
+        self.w = vec![vec![0.0; f]; n_classes];
+        self.b = vec![0.0; n_classes];
+        let inv_m = 1.0 / m as f64;
+        for _ in 0..self.params.epochs {
+            let mut gw = vec![vec![0.0; f]; n_classes];
+            let mut gb = vec![0.0; n_classes];
+            for (xi, &yi) in x.iter().zip(y) {
+                let p = Self::softmax(&self.scores(xi));
+                for c in 0..n_classes {
+                    let err = p[c] - if c == yi { 1.0 } else { 0.0 };
+                    gb[c] += err;
+                    for (gwj, xj) in gw[c].iter_mut().zip(xi) {
+                        *gwj += err * xj;
+                    }
+                }
+            }
+            for c in 0..n_classes {
+                self.b[c] -= self.params.lr * gb[c] * inv_m;
+                for j in 0..f {
+                    let grad = gw[c][j] * inv_m + self.params.l2 * self.w[c][j];
+                    self.w[c][j] -= self.params.lr * grad;
+                }
+            }
+        }
+    }
+
+    fn predict(&self, x: &[f64]) -> usize {
+        let s = self.scores(x);
+        s.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(k, _)| k)
+            .unwrap_or(0)
+    }
+
+    fn name(&self) -> String {
+        "LogisticRegression".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::metrics::accuracy;
+    use crate::ml::testutil::blobs;
+
+    #[test]
+    fn separates_blobs() {
+        let (xtr, ytr) = blobs(50, 4, 0.7, 1);
+        let (xte, yte) = blobs(20, 4, 0.7, 2);
+        let mut lr = LogisticRegression::new(LogRegParams::default());
+        lr.fit(&xtr, &ytr, 4);
+        assert!(accuracy(&lr.predict_batch(&xte), &yte) > 0.9);
+    }
+
+    #[test]
+    fn probabilities_sum_to_one() {
+        let (x, y) = blobs(20, 3, 0.5, 3);
+        let mut lr = LogisticRegression::new(LogRegParams::default());
+        lr.fit(&x, &y, 4);
+        let p = lr.predict_proba(&x[0]);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(p.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn l2_shrinks_weights() {
+        let (x, y) = blobs(30, 3, 0.5, 4);
+        let mut weak = LogisticRegression::new(LogRegParams { l2: 0.0, ..Default::default() });
+        let mut strong = LogisticRegression::new(LogRegParams { l2: 1.0, ..Default::default() });
+        weak.fit(&x, &y, 4);
+        strong.fit(&x, &y, 4);
+        let norm = |m: &LogisticRegression| {
+            m.w.iter().flatten().map(|v| v * v).sum::<f64>()
+        };
+        assert!(norm(&strong) < norm(&weak));
+    }
+}

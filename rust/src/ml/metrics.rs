@@ -1,0 +1,63 @@
+//! Classification metrics: accuracy (the paper's Eq. 4) and the
+//! confusion matrix used in the experiment reports.
+
+/// Accuracy = correct / total (paper Eq. 4).
+pub fn accuracy(pred: &[usize], truth: &[usize]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let correct = pred.iter().zip(truth).filter(|(p, t)| p == t).count();
+    correct as f64 / pred.len() as f64
+}
+
+/// Confusion matrix `c[truth][pred]`.
+pub fn confusion(pred: &[usize], truth: &[usize], n_classes: usize) -> Vec<Vec<usize>> {
+    let mut c = vec![vec![0usize; n_classes]; n_classes];
+    for (&p, &t) in pred.iter().zip(truth) {
+        c[t][p] += 1;
+    }
+    c
+}
+
+/// Per-class recall from a confusion matrix.
+pub fn per_class_recall(conf: &[Vec<usize>]) -> Vec<f64> {
+    (0..conf.len())
+        .map(|i| {
+            let total: usize = conf[i].iter().sum();
+            if total == 0 {
+                0.0
+            } else {
+                conf[i][i] as f64 / total as f64
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[0, 1, 2, 2], &[0, 1, 1, 2]), 0.75);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn confusion_counts() {
+        let c = confusion(&[0, 1, 1, 2], &[0, 1, 2, 2], 3);
+        assert_eq!(c[0][0], 1);
+        assert_eq!(c[1][1], 1);
+        assert_eq!(c[2][1], 1);
+        assert_eq!(c[2][2], 1);
+    }
+
+    #[test]
+    fn recall_from_confusion() {
+        let c = confusion(&[0, 0, 1, 1], &[0, 1, 1, 1], 2);
+        let r = per_class_recall(&c);
+        assert!((r[0] - 1.0).abs() < 1e-12);
+        assert!((r[1] - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,81 @@
+//! Classical classifiers + model-selection machinery (the scikit-learn
+//! substitute).
+//!
+//! The paper trains seven scikit-learn models; the six classical ones are
+//! implemented here from scratch — [`forest`] (Random Forest), [`tree`]
+//! (Decision Tree), [`logreg`] (Logistic Regression), [`naive_bayes`]
+//! (Gaussian NB), [`svm`] (linear SVM), [`knn`] (K-Nearest Neighbors) —
+//! behind one [`Classifier`] trait. The seventh (MLP) is the JAX/Pallas
+//! AOT model driven by `crate::model`.
+//!
+//! Model selection mirrors the paper §3.4: two normalizations
+//! ([`normalize`]), stratified k-fold cross-validation ([`kfold`]), and
+//! exhaustive grid search ([`gridsearch`]) scored by accuracy
+//! ([`metrics`]).
+
+pub mod forest;
+pub mod gridsearch;
+pub mod kfold;
+pub mod knn;
+pub mod logreg;
+pub mod metrics;
+pub mod naive_bayes;
+pub mod normalize;
+pub mod svm;
+pub mod tree;
+
+/// A trained multi-class classifier over dense feature vectors.
+pub trait Classifier: Send + Sync {
+    /// Fit on rows `x` (shape m×f) with labels `y` in `0..n_classes`.
+    fn fit(&mut self, x: &[Vec<f64>], y: &[usize], n_classes: usize);
+
+    /// Predict the class of one feature vector.
+    fn predict(&self, x: &[f64]) -> usize;
+
+    /// Human-readable name (Fig. 4 row label).
+    fn name(&self) -> String;
+
+    /// Predict a batch (overridable for vectorized models).
+    fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<usize> {
+        xs.iter().map(|x| self.predict(x)).collect()
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::util::rng::Rng;
+
+    /// Four well-separated Gaussian blobs in `dim` dimensions — every
+    /// sane classifier should reach >90% accuracy on this.
+    pub fn blobs(
+        n_per_class: usize,
+        dim: usize,
+        spread: f64,
+        seed: u64,
+    ) -> (Vec<Vec<f64>>, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for c in 0..4usize {
+            // center: +-5 on two axes per class
+            let cx = if c & 1 == 0 { 5.0 } else { -5.0 };
+            let cy = if c & 2 == 0 { 5.0 } else { -5.0 };
+            for _ in 0..n_per_class {
+                let mut row = vec![0.0; dim];
+                row[0] = cx + spread * rng.normal();
+                row[1 % dim] = cy + spread * rng.normal();
+                for d in 2..dim {
+                    row[d] = rng.normal();
+                }
+                x.push(row);
+                y.push(c);
+            }
+        }
+        // shuffle consistently
+        let mut idx: Vec<usize> = (0..x.len()).collect();
+        rng.shuffle(&mut idx);
+        let xs = idx.iter().map(|&i| x[i].clone()).collect();
+        let ys = idx.iter().map(|&i| y[i]).collect();
+        (xs, ys)
+    }
+}

@@ -1,0 +1,157 @@
+//! Gaussian naive Bayes — sklearn's `GaussianNB` substitute (the paper's
+//! "Bayesian Algorithm").
+
+use super::Classifier;
+
+pub struct GaussianNB {
+    /// per-class log prior
+    log_prior: Vec<f64>,
+    /// per-class per-feature mean
+    mean: Vec<Vec<f64>>,
+    /// per-class per-feature variance (smoothed)
+    var: Vec<Vec<f64>>,
+    n_classes: usize,
+}
+
+impl GaussianNB {
+    pub fn new() -> Self {
+        GaussianNB {
+            log_prior: Vec::new(),
+            mean: Vec::new(),
+            var: Vec::new(),
+            n_classes: 0,
+        }
+    }
+
+    fn log_likelihood(&self, c: usize, x: &[f64]) -> f64 {
+        let mut ll = self.log_prior[c];
+        for (j, &xj) in x.iter().enumerate() {
+            let v = self.var[c][j];
+            let d = xj - self.mean[c][j];
+            ll += -0.5 * ((2.0 * std::f64::consts::PI * v).ln() + d * d / v);
+        }
+        ll
+    }
+}
+
+impl Default for GaussianNB {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Classifier for GaussianNB {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[usize], n_classes: usize) {
+        let f = x[0].len();
+        self.n_classes = n_classes;
+        let mut counts = vec![0usize; n_classes];
+        let mut mean = vec![vec![0.0; f]; n_classes];
+        for (xi, &yi) in x.iter().zip(y) {
+            counts[yi] += 1;
+            for j in 0..f {
+                mean[yi][j] += xi[j];
+            }
+        }
+        for c in 0..n_classes {
+            for j in 0..f {
+                mean[c][j] /= counts[c].max(1) as f64;
+            }
+        }
+        let mut var = vec![vec![0.0; f]; n_classes];
+        for (xi, &yi) in x.iter().zip(y) {
+            for j in 0..f {
+                var[yi][j] += (xi[j] - mean[yi][j]).powi(2);
+            }
+        }
+        // sklearn-style variance smoothing: 1e-9 * max feature variance
+        let mut global_max_var = 0f64;
+        for c in 0..n_classes {
+            for j in 0..f {
+                var[c][j] /= counts[c].max(1) as f64;
+                global_max_var = global_max_var.max(var[c][j]);
+            }
+        }
+        let eps = 1e-9 * global_max_var.max(1e-12);
+        for c in 0..n_classes {
+            for j in 0..f {
+                var[c][j] += eps;
+                if var[c][j] <= 0.0 {
+                    var[c][j] = eps.max(1e-12);
+                }
+            }
+        }
+        let m = x.len() as f64;
+        self.log_prior = counts
+            .iter()
+            .map(|&c| ((c.max(1)) as f64 / m).ln())
+            .collect();
+        self.mean = mean;
+        self.var = var;
+    }
+
+    fn predict(&self, x: &[f64]) -> usize {
+        (0..self.n_classes)
+            .map(|c| (c, self.log_likelihood(c, x)))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|(c, _)| c)
+            .unwrap_or(0)
+    }
+
+    fn name(&self) -> String {
+        "GaussianNB".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::metrics::accuracy;
+    use crate::ml::testutil::blobs;
+
+    #[test]
+    fn separates_blobs() {
+        let (xtr, ytr) = blobs(50, 4, 0.8, 1);
+        let (xte, yte) = blobs(20, 4, 0.8, 2);
+        let mut nb = GaussianNB::new();
+        nb.fit(&xtr, &ytr, 4);
+        assert!(accuracy(&nb.predict_batch(&xte), &yte) > 0.9);
+    }
+
+    #[test]
+    fn handles_constant_feature() {
+        let x = vec![
+            vec![1.0, 5.0],
+            vec![1.0, 6.0],
+            vec![1.0, -5.0],
+            vec![1.0, -6.0],
+        ];
+        let y = vec![0, 0, 1, 1];
+        let mut nb = GaussianNB::new();
+        nb.fit(&x, &y, 2);
+        assert_eq!(nb.predict(&[1.0, 5.5]), 0);
+        assert_eq!(nb.predict(&[1.0, -5.5]), 1);
+    }
+
+    #[test]
+    fn empty_class_does_not_crash() {
+        // class 2 never appears
+        let x = vec![vec![0.0], vec![1.0], vec![0.1], vec![0.9]];
+        let y = vec![0, 1, 0, 1];
+        let mut nb = GaussianNB::new();
+        nb.fit(&x, &y, 3);
+        let p = nb.predict(&[0.05]);
+        assert!(p < 3);
+    }
+
+    #[test]
+    fn priors_influence_prediction() {
+        // heavily imbalanced classes with overlapping features
+        let mut x = vec![vec![0.0]; 99];
+        x.push(vec![0.0]);
+        let mut y = vec![0usize; 99];
+        y.push(1);
+        let mut nb = GaussianNB::new();
+        nb.fit(&x, &y, 2);
+        assert_eq!(nb.predict(&[0.0]), 0);
+    }
+}

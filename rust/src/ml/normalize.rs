@@ -1,0 +1,127 @@
+//! Feature normalization: Max-Min scaling and Standardization — the two
+//! methods the paper compares in Fig. 4.
+
+/// Normalization method.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// `(x - min) / (max - min)` into `[0, 1]`.
+    MaxMin,
+    /// `(x - mean) / std` (z-score); what the paper ultimately selects.
+    Standard,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::MaxMin => "MaxMin",
+            Method::Standard => "Standardization",
+        }
+    }
+}
+
+/// A fitted normalizer (per-column affine transform).
+#[derive(Clone, Debug)]
+pub struct Normalizer {
+    pub method: Method,
+    /// Per-column offset (min or mean).
+    pub offset: Vec<f64>,
+    /// Per-column scale (range or std); zero-variance columns get 1.
+    pub scale: Vec<f64>,
+}
+
+const EPS: f64 = 1e-12;
+
+impl Normalizer {
+    /// Fit on training rows (never on test rows — the split leaks
+    /// otherwise, a classic evaluation bug).
+    pub fn fit(method: Method, rows: &[Vec<f64>]) -> Normalizer {
+        assert!(!rows.is_empty(), "cannot fit a normalizer on no rows");
+        let f = rows[0].len();
+        let mut offset = vec![0.0; f];
+        let mut scale = vec![1.0; f];
+        for j in 0..f {
+            let col: Vec<f64> = rows.iter().map(|r| r[j]).collect();
+            match method {
+                Method::MaxMin => {
+                    let mn = col.iter().copied().fold(f64::INFINITY, f64::min);
+                    let mx = col.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+                    offset[j] = mn;
+                    scale[j] = if (mx - mn).abs() < EPS { 1.0 } else { mx - mn };
+                }
+                Method::Standard => {
+                    let mean = col.iter().sum::<f64>() / col.len() as f64;
+                    let var = col.iter().map(|v| (v - mean).powi(2)).sum::<f64>()
+                        / col.len() as f64;
+                    offset[j] = mean;
+                    scale[j] = if var.sqrt() < EPS { 1.0 } else { var.sqrt() };
+                }
+            }
+        }
+        Normalizer {
+            method,
+            offset,
+            scale,
+        }
+    }
+
+    pub fn transform_row(&self, row: &[f64]) -> Vec<f64> {
+        row.iter()
+            .zip(self.offset.iter().zip(&self.scale))
+            .map(|(v, (o, s))| (v - o) / s)
+            .collect()
+    }
+
+    pub fn transform(&self, rows: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        rows.iter().map(|r| self.transform_row(r)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows() -> Vec<Vec<f64>> {
+        vec![
+            vec![0.0, 10.0, 5.0],
+            vec![2.0, 20.0, 5.0],
+            vec![4.0, 30.0, 5.0],
+        ]
+    }
+
+    #[test]
+    fn maxmin_maps_to_unit_interval() {
+        let n = Normalizer::fit(Method::MaxMin, &rows());
+        let t = n.transform(&rows());
+        assert_eq!(t[0][0], 0.0);
+        assert_eq!(t[2][0], 1.0);
+        assert!((t[1][0] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn standard_zero_mean_unit_var() {
+        let n = Normalizer::fit(Method::Standard, &rows());
+        let t = n.transform(&rows());
+        for j in 0..2 {
+            let mean: f64 = t.iter().map(|r| r[j]).sum::<f64>() / 3.0;
+            let var: f64 = t.iter().map(|r| r[j].powi(2)).sum::<f64>() / 3.0;
+            assert!(mean.abs() < 1e-12);
+            assert!((var - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn constant_column_is_safe() {
+        for m in [Method::MaxMin, Method::Standard] {
+            let n = Normalizer::fit(m, &rows());
+            let t = n.transform(&rows());
+            assert!(t.iter().all(|r| r[2].is_finite()));
+        }
+    }
+
+    #[test]
+    fn transform_unseen_row_extrapolates() {
+        let n = Normalizer::fit(Method::MaxMin, &rows());
+        let t = n.transform_row(&[8.0, 40.0, 5.0]);
+        assert!((t[0] - 2.0).abs() < 1e-12); // outside the fit range: fine
+    }
+}

@@ -1,0 +1,136 @@
+//! Linear SVM (one-vs-rest, hinge loss, SGD with L2) — sklearn's
+//! `LinearSVC`/`SGDClassifier(hinge)` substitute.
+
+use super::Classifier;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SvmParams {
+    pub lr: f64,
+    pub epochs: usize,
+    /// L2 regularization strength (λ).
+    pub l2: f64,
+    pub seed: u64,
+}
+
+impl Default for SvmParams {
+    fn default() -> Self {
+        SvmParams {
+            lr: 0.05,
+            epochs: 200,
+            l2: 1e-4,
+            seed: 0x51e,
+        }
+    }
+}
+
+pub struct LinearSvm {
+    pub params: SvmParams,
+    /// one binary classifier per class: w[c], b[c]
+    w: Vec<Vec<f64>>,
+    b: Vec<f64>,
+    n_classes: usize,
+}
+
+impl LinearSvm {
+    pub fn new(params: SvmParams) -> Self {
+        LinearSvm {
+            w: Vec::new(),
+            b: Vec::new(),
+            n_classes: 0,
+            params,
+        }
+    }
+
+    fn margin(&self, c: usize, x: &[f64]) -> f64 {
+        self.b[c]
+            + self.w[c]
+                .iter()
+                .zip(x)
+                .map(|(wi, xi)| wi * xi)
+                .sum::<f64>()
+    }
+}
+
+impl Classifier for LinearSvm {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[usize], n_classes: usize) {
+        let m = x.len();
+        let f = x[0].len();
+        self.n_classes = n_classes;
+        self.w = vec![vec![0.0; f]; n_classes];
+        self.b = vec![0.0; n_classes];
+        let mut rng = Rng::new(self.params.seed);
+        let mut idx: Vec<usize> = (0..m).collect();
+        for epoch in 0..self.params.epochs {
+            rng.shuffle(&mut idx);
+            // simple 1/(1+epoch) step decay
+            let lr = self.params.lr / (1.0 + 0.01 * epoch as f64);
+            for &i in &idx {
+                let xi = &x[i];
+                for c in 0..n_classes {
+                    let t = if y[i] == c { 1.0 } else { -1.0 };
+                    let marg = t * self.margin(c, xi);
+                    // L2 shrink
+                    for wj in self.w[c].iter_mut() {
+                        *wj *= 1.0 - lr * self.params.l2;
+                    }
+                    if marg < 1.0 {
+                        for (wj, xj) in self.w[c].iter_mut().zip(xi) {
+                            *wj += lr * t * xj;
+                        }
+                        self.b[c] += lr * t;
+                    }
+                }
+            }
+        }
+    }
+
+    fn predict(&self, x: &[f64]) -> usize {
+        (0..self.n_classes)
+            .map(|c| (c, self.margin(c, x)))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|(c, _)| c)
+            .unwrap_or(0)
+    }
+
+    fn name(&self) -> String {
+        "SVM".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::metrics::accuracy;
+    use crate::ml::testutil::blobs;
+
+    #[test]
+    fn separates_blobs() {
+        let (xtr, ytr) = blobs(50, 4, 0.7, 1);
+        let (xte, yte) = blobs(20, 4, 0.7, 2);
+        let mut svm = LinearSvm::new(SvmParams::default());
+        svm.fit(&xtr, &ytr, 4);
+        assert!(accuracy(&svm.predict_batch(&xte), &yte) > 0.9);
+    }
+
+    #[test]
+    fn binary_margin_signs() {
+        let x = vec![vec![2.0], vec![3.0], vec![-2.0], vec![-3.0]];
+        let y = vec![0, 0, 1, 1];
+        let mut svm = LinearSvm::new(SvmParams::default());
+        svm.fit(&x, &y, 2);
+        assert_eq!(svm.predict(&[2.5]), 0);
+        assert_eq!(svm.predict(&[-2.5]), 1);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (x, y) = blobs(30, 3, 1.0, 5);
+        let mut a = LinearSvm::new(SvmParams::default());
+        let mut b = LinearSvm::new(SvmParams::default());
+        a.fit(&x, &y, 4);
+        b.fit(&x, &y, 4);
+        let (xt, _) = blobs(10, 3, 1.0, 6);
+        assert_eq!(a.predict_batch(&xt), b.predict_batch(&xt));
+    }
+}

@@ -1,0 +1,338 @@
+//! CART decision tree (gini / entropy) — scikit-learn's
+//! `DecisionTreeClassifier` substitute, and the base learner of the
+//! random forest.
+
+use super::Classifier;
+use crate::util::rng::Rng;
+
+/// Split criterion (the paper's Table 4 grid includes `gini`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Criterion {
+    Gini,
+    Entropy,
+}
+
+impl Criterion {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Criterion::Gini => "gini",
+            Criterion::Entropy => "entropy",
+        }
+    }
+
+    fn impurity(&self, counts: &[usize], total: usize) -> f64 {
+        if total == 0 {
+            return 0.0;
+        }
+        let t = total as f64;
+        match self {
+            Criterion::Gini => {
+                1.0 - counts
+                    .iter()
+                    .map(|&c| {
+                        let p = c as f64 / t;
+                        p * p
+                    })
+                    .sum::<f64>()
+            }
+            Criterion::Entropy => counts
+                .iter()
+                .filter(|&&c| c > 0)
+                .map(|&c| {
+                    let p = c as f64 / t;
+                    -p * p.log2()
+                })
+                .sum(),
+        }
+    }
+}
+
+/// Hyperparameters (mirrors the sklearn names used in paper Table 4).
+#[derive(Clone, Copy, Debug)]
+pub struct TreeParams {
+    pub criterion: Criterion,
+    pub max_depth: usize,
+    pub min_samples_split: usize,
+    pub min_samples_leaf: usize,
+    /// Features considered per split: `None` = all (plain tree),
+    /// `Some(k)` = random k (forest mode).
+    pub max_features: Option<usize>,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        TreeParams {
+            criterion: Criterion::Gini,
+            max_depth: 32,
+            min_samples_split: 2,
+            min_samples_leaf: 1,
+            max_features: None,
+        }
+    }
+}
+
+enum Node {
+    Leaf {
+        class: usize,
+    },
+    Split {
+        feature: usize,
+        threshold: f64,
+        left: Box<Node>,
+        right: Box<Node>,
+    },
+}
+
+/// A fitted decision tree.
+pub struct DecisionTree {
+    pub params: TreeParams,
+    root: Option<Node>,
+    n_classes: usize,
+    seed: u64,
+}
+
+impl DecisionTree {
+    pub fn new(params: TreeParams, seed: u64) -> Self {
+        DecisionTree {
+            params,
+            root: None,
+            n_classes: 0,
+            seed,
+        }
+    }
+
+    fn majority(y: &[usize], idx: &[usize], n_classes: usize) -> usize {
+        let mut counts = vec![0usize; n_classes];
+        for &i in idx {
+            counts[y[i]] += 1;
+        }
+        counts
+            .iter()
+            .enumerate()
+            .max_by_key(|&(_, c)| *c)
+            .map(|(k, _)| k)
+            .unwrap_or(0)
+    }
+
+    /// Find the best (feature, threshold) split of `idx` by scanning each
+    /// candidate feature's sorted values — O(f · m log m).
+    fn best_split(
+        &self,
+        x: &[Vec<f64>],
+        y: &[usize],
+        idx: &[usize],
+        rng: &mut Rng,
+    ) -> Option<(usize, f64, Vec<usize>, Vec<usize>)> {
+        let n_features = x[0].len();
+        let mut feats: Vec<usize> = (0..n_features).collect();
+        if let Some(k) = self.params.max_features {
+            rng.shuffle(&mut feats);
+            feats.truncate(k.max(1).min(n_features));
+        }
+        let parent_counts = {
+            let mut c = vec![0usize; self.n_classes];
+            for &i in idx {
+                c[y[i]] += 1;
+            }
+            c
+        };
+        let total = idx.len();
+        let parent_imp = self.params.criterion.impurity(&parent_counts, total);
+        if parent_imp <= 1e-12 {
+            return None; // pure node
+        }
+
+        let mut best: Option<(f64, usize, f64)> = None; // (gain, feat, thr)
+        let mut sorted = idx.to_vec();
+        for &f in &feats {
+            sorted.sort_by(|&a, &b| x[a][f].partial_cmp(&x[b][f]).unwrap());
+            let mut left_counts = vec![0usize; self.n_classes];
+            let mut left_n = 0usize;
+            let mut right_counts = parent_counts.clone();
+            for w in 0..total - 1 {
+                let i = sorted[w];
+                left_counts[y[i]] += 1;
+                right_counts[y[i]] -= 1;
+                left_n += 1;
+                let right_n = total - left_n;
+                // can't split between equal values
+                if x[sorted[w]][f] == x[sorted[w + 1]][f] {
+                    continue;
+                }
+                if left_n < self.params.min_samples_leaf
+                    || right_n < self.params.min_samples_leaf
+                {
+                    continue;
+                }
+                let imp = (left_n as f64 * self.params.criterion.impurity(&left_counts, left_n)
+                    + right_n as f64
+                        * self.params.criterion.impurity(&right_counts, right_n))
+                    / total as f64;
+                let gain = parent_imp - imp;
+                let thr = (x[sorted[w]][f] + x[sorted[w + 1]][f]) / 2.0;
+                if best.map_or(true, |(g, _, _)| gain > g + 1e-15) {
+                    best = Some((gain, f, thr));
+                }
+            }
+        }
+        let (gain, f, thr) = best?;
+        if gain <= 1e-12 {
+            return None;
+        }
+        let (mut li, mut ri) = (Vec::new(), Vec::new());
+        for &i in idx {
+            if x[i][f] <= thr {
+                li.push(i);
+            } else {
+                ri.push(i);
+            }
+        }
+        if li.is_empty() || ri.is_empty() {
+            return None;
+        }
+        Some((f, thr, li, ri))
+    }
+
+    fn build(
+        &self,
+        x: &[Vec<f64>],
+        y: &[usize],
+        idx: &[usize],
+        depth: usize,
+        rng: &mut Rng,
+    ) -> Node {
+        let leaf = || Node::Leaf {
+            class: Self::majority(y, idx, self.n_classes),
+        };
+        if depth >= self.params.max_depth
+            || idx.len() < self.params.min_samples_split
+        {
+            return leaf();
+        }
+        match self.best_split(x, y, idx, rng) {
+            None => leaf(),
+            Some((feature, threshold, li, ri)) => Node::Split {
+                feature,
+                threshold,
+                left: Box::new(self.build(x, y, &li, depth + 1, rng)),
+                right: Box::new(self.build(x, y, &ri, depth + 1, rng)),
+            },
+        }
+    }
+}
+
+impl Classifier for DecisionTree {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[usize], n_classes: usize) {
+        assert!(!x.is_empty());
+        assert_eq!(x.len(), y.len());
+        self.n_classes = n_classes;
+        let idx: Vec<usize> = (0..x.len()).collect();
+        let mut rng = Rng::new(self.seed);
+        self.root = Some(self.build(x, y, &idx, 0, &mut rng));
+    }
+
+    fn predict(&self, x: &[f64]) -> usize {
+        let mut node = self.root.as_ref().expect("tree not fitted");
+        loop {
+            match node {
+                Node::Leaf { class } => return *class,
+                Node::Split {
+                    feature,
+                    threshold,
+                    left,
+                    right,
+                } => {
+                    node = if x[*feature] <= *threshold { left } else { right };
+                }
+            }
+        }
+    }
+
+    fn name(&self) -> String {
+        "DecisionTree".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::metrics::accuracy;
+    use crate::ml::testutil::blobs;
+
+    #[test]
+    fn fits_blobs_perfectly() {
+        let (x, y) = blobs(40, 5, 0.5, 1);
+        let mut t = DecisionTree::new(TreeParams::default(), 0);
+        t.fit(&x, &y, 4);
+        let pred = t.predict_batch(&x);
+        assert!(accuracy(&pred, &y) > 0.98);
+    }
+
+    #[test]
+    fn generalizes_on_blobs() {
+        let (xtr, ytr) = blobs(50, 4, 0.8, 2);
+        let (xte, yte) = blobs(20, 4, 0.8, 3);
+        let mut t = DecisionTree::new(TreeParams::default(), 0);
+        t.fit(&xtr, &ytr, 4);
+        assert!(accuracy(&t.predict_batch(&xte), &yte) > 0.9);
+    }
+
+    #[test]
+    fn depth_one_is_a_stump() {
+        let (x, y) = blobs(30, 3, 0.5, 4);
+        let mut t = DecisionTree::new(
+            TreeParams {
+                max_depth: 1,
+                ..Default::default()
+            },
+            0,
+        );
+        t.fit(&x, &y, 4);
+        // a stump on 4 classes can't exceed 50%
+        let acc = accuracy(&t.predict_batch(&x), &y);
+        assert!(acc <= 0.55, "stump acc {acc}");
+    }
+
+    #[test]
+    fn min_samples_leaf_respected() {
+        let (x, y) = blobs(10, 3, 2.0, 5);
+        let mut t = DecisionTree::new(
+            TreeParams {
+                min_samples_leaf: 15,
+                ..Default::default()
+            },
+            0,
+        );
+        t.fit(&x, &y, 4);
+        // with such a large leaf requirement the tree stays shallow but
+        // must still predict valid classes
+        for p in t.predict_batch(&x) {
+            assert!(p < 4);
+        }
+    }
+
+    #[test]
+    fn constant_features_yield_leaf() {
+        let x = vec![vec![1.0, 1.0]; 10];
+        let y = vec![0, 1, 0, 1, 0, 1, 0, 1, 0, 1];
+        let mut t = DecisionTree::new(TreeParams::default(), 0);
+        t.fit(&x, &y, 2);
+        // no split possible: majority class everywhere
+        let p = t.predict(&[1.0, 1.0]);
+        assert!(p < 2);
+    }
+
+    #[test]
+    fn entropy_criterion_works() {
+        let (x, y) = blobs(30, 4, 0.6, 6);
+        let mut t = DecisionTree::new(
+            TreeParams {
+                criterion: Criterion::Entropy,
+                ..Default::default()
+            },
+            0,
+        );
+        t.fit(&x, &y, 4);
+        assert!(accuracy(&t.predict_batch(&x), &y) > 0.95);
+    }
+}

@@ -1,0 +1,429 @@
+//! The MLP classifier driver: Rust-side parameter state + training and
+//! prediction through the AOT PJRT artifacts.
+//!
+//! The scikit-learn MLP of the paper is replaced by a JAX/Pallas MLP
+//! whose *train step* and *predict* functions are compiled ahead of time
+//! (`python/compile/aot.py`) — this module owns the parameters, feeds
+//! them through the train-step executable epoch by epoch, and serves
+//! predictions through the batch-variant predict executables. Python is
+//! never invoked here.
+
+use anyhow::{bail, Context, Result};
+
+use crate::features::N_FEATURES;
+use crate::runtime::{lit, ArtifactKind, Manifest, Runtime};
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+/// Number of label classes (RCM/AMD/ND/SCOTCH).
+pub const N_CLASSES: usize = 4;
+
+/// MLP parameter state (host side).
+#[derive(Clone, Debug)]
+pub struct MlpModel {
+    pub arch: String,
+    pub h1: usize,
+    pub h2: usize,
+    /// w1, b1, w2, b2, w3, b3 (row-major, f32).
+    pub params: Vec<Vec<f32>>,
+    /// Shapes of `params`, e.g. `[[12,32],[32],...]`.
+    pub shapes: Vec<Vec<usize>>,
+    /// Standardization statistics baked into every call.
+    pub mean: Vec<f32>,
+    pub std: Vec<f32>,
+}
+
+impl MlpModel {
+    /// Glorot-uniform initialization, deterministic in `seed`.
+    pub fn init(arch: &str, h1: usize, h2: usize, seed: u64) -> MlpModel {
+        let shapes: Vec<Vec<usize>> = vec![
+            vec![N_FEATURES, h1],
+            vec![h1],
+            vec![h1, h2],
+            vec![h2],
+            vec![h2, N_CLASSES],
+            vec![N_CLASSES],
+        ];
+        let mut rng = Rng::new(seed);
+        let params = shapes
+            .iter()
+            .map(|s| {
+                let n: usize = s.iter().product();
+                if s.len() == 1 {
+                    vec![0.0f32; n] // biases start at zero
+                } else {
+                    let limit = (6.0 / (s[0] + s[1]) as f64).sqrt();
+                    (0..n)
+                        .map(|_| rng.range_f64(-limit, limit) as f32)
+                        .collect()
+                }
+            })
+            .collect();
+        MlpModel {
+            arch: arch.to_string(),
+            h1,
+            h2,
+            params,
+            shapes,
+            mean: vec![0.0; N_FEATURES],
+            std: vec![1.0; N_FEATURES],
+        }
+    }
+
+    /// Set the standardization statistics (from training-split features).
+    pub fn set_standardization(&mut self, mean: &[f64], std: &[f64]) {
+        assert_eq!(mean.len(), N_FEATURES);
+        assert_eq!(std.len(), N_FEATURES);
+        self.mean = mean.iter().map(|&v| v as f32).collect();
+        // zero-std columns guard (constant features)
+        self.std = std
+            .iter()
+            .map(|&v| if v.abs() < 1e-12 { 1.0 } else { v as f32 })
+            .collect();
+    }
+
+    /// Serialize to JSON (persistable trained model).
+    pub fn to_json(&self) -> Json {
+        let arr_f32 = |v: &[f32]| {
+            Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+        };
+        json::obj(vec![
+            ("arch", json::s(&self.arch)),
+            ("h1", json::num(self.h1 as f64)),
+            ("h2", json::num(self.h2 as f64)),
+            (
+                "params",
+                Json::Arr(self.params.iter().map(|p| arr_f32(p)).collect()),
+            ),
+            (
+                "shapes",
+                Json::Arr(
+                    self.shapes
+                        .iter()
+                        .map(|s| {
+                            Json::Arr(s.iter().map(|&d| Json::Num(d as f64)).collect())
+                        })
+                        .collect(),
+                ),
+            ),
+            ("mean", arr_f32(&self.mean)),
+            ("std", arr_f32(&self.std)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<MlpModel> {
+        let nums = |v: &Json| -> Vec<f32> {
+            v.as_arr()
+                .map(|a| a.iter().filter_map(|x| x.as_f64()).map(|x| x as f32).collect())
+                .unwrap_or_default()
+        };
+        Ok(MlpModel {
+            arch: j
+                .get("arch")
+                .and_then(|v| v.as_str())
+                .context("arch")?
+                .to_string(),
+            h1: j.get("h1").and_then(|v| v.as_usize()).context("h1")?,
+            h2: j.get("h2").and_then(|v| v.as_usize()).context("h2")?,
+            params: j
+                .get("params")
+                .and_then(|v| v.as_arr())
+                .context("params")?
+                .iter()
+                .map(nums)
+                .collect(),
+            shapes: j
+                .get("shapes")
+                .and_then(|v| v.as_arr())
+                .context("shapes")?
+                .iter()
+                .map(|s| {
+                    s.as_arr()
+                        .map(|a| a.iter().filter_map(|d| d.as_usize()).collect())
+                        .unwrap_or_default()
+                })
+                .collect(),
+            mean: nums(j.get("mean").context("mean")?),
+            std: nums(j.get("std").context("std")?),
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<MlpModel> {
+        let text = std::fs::read_to_string(path)?;
+        let j = json::parse(&text).map_err(|e| anyhow::anyhow!(e))?;
+        Self::from_json(&j)
+    }
+
+    fn param_literals(&self) -> Result<Vec<xla::Literal>> {
+        self.params
+            .iter()
+            .zip(&self.shapes)
+            .map(|(p, s)| {
+                if s.len() == 2 {
+                    lit::mat_f32(p, s[0], s[1])
+                } else {
+                    Ok(lit::vec_f32(p))
+                }
+            })
+            .collect()
+    }
+}
+
+/// Training configuration for the AOT train-step loop.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            epochs: 120,
+            lr: 0.05,
+            momentum: 0.9,
+            seed: 0x713a1,
+        }
+    }
+}
+
+/// Pad/wrap `idx` to an exact multiple of `batch` by wrapping around
+/// (standard drop-free minibatching for fixed-shape executables).
+pub fn batch_indices(n: usize, batch: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    assert!(n > 0);
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let n_batches = n.div_ceil(batch);
+    let mut out = Vec::with_capacity(n_batches);
+    for b in 0..n_batches {
+        let mut chunk = Vec::with_capacity(batch);
+        for k in 0..batch {
+            chunk.push(idx[(b * batch + k) % n]);
+        }
+        out.push(chunk);
+    }
+    out
+}
+
+/// Driver binding a [`Runtime`] + [`Manifest`] to an [`MlpModel`].
+pub struct MlpDriver<'a> {
+    pub runtime: &'a Runtime,
+    pub manifest: &'a Manifest,
+}
+
+impl<'a> MlpDriver<'a> {
+    pub fn new(runtime: &'a Runtime, manifest: &'a Manifest) -> Self {
+        MlpDriver { runtime, manifest }
+    }
+
+    /// Train in place; returns the per-step loss curve.
+    pub fn train(
+        &self,
+        model: &mut MlpModel,
+        x: &[Vec<f64>],
+        y: &[usize],
+        cfg: &TrainConfig,
+    ) -> Result<Vec<f32>> {
+        assert_eq!(x.len(), y.len());
+        if x.is_empty() {
+            bail!("empty training set");
+        }
+        // the train artifact for this arch (one batch size is exported)
+        let meta = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.kind == ArtifactKind::Train && a.arch == model.arch)
+            .with_context(|| format!("no train artifact for arch {}", model.arch))?
+            .clone();
+        let exe = self.runtime.load(self.manifest, &meta)?;
+        let batch = meta.batch;
+
+        let mut vels: Vec<Vec<f32>> = model.params.iter().map(|p| vec![0.0; p.len()]).collect();
+        let mut losses = Vec::new();
+        let mut rng = Rng::new(cfg.seed);
+        let mean_l = lit::vec_f32(&model.mean);
+        let std_l = lit::vec_f32(&model.std);
+        let lr_l = lit::scalar_f32(cfg.lr);
+        let mom_l = lit::scalar_f32(cfg.momentum);
+
+        for _epoch in 0..cfg.epochs {
+            for chunk in batch_indices(x.len(), batch, &mut rng) {
+                // pack batch
+                let mut xb = vec![0f32; batch * N_FEATURES];
+                let mut yb = vec![0f32; batch * N_CLASSES];
+                for (r, &i) in chunk.iter().enumerate() {
+                    for f in 0..N_FEATURES {
+                        xb[r * N_FEATURES + f] = x[i][f] as f32;
+                    }
+                    yb[r * N_CLASSES + y[i]] = 1.0;
+                }
+                let mut inputs = model.param_literals()?;
+                for (v, s) in vels.iter().zip(&model.shapes) {
+                    inputs.push(if s.len() == 2 {
+                        lit::mat_f32(v, s[0], s[1])?
+                    } else {
+                        lit::vec_f32(v)
+                    });
+                }
+                inputs.push(mean_l.clone());
+                inputs.push(std_l.clone());
+                inputs.push(lit::mat_f32(&xb, batch, N_FEATURES)?);
+                inputs.push(lit::mat_f32(&yb, batch, N_CLASSES)?);
+                inputs.push(lr_l.clone());
+                inputs.push(mom_l.clone());
+
+                let out = exe.execute(&inputs)?;
+                // outputs: 6 params, 6 vels, loss
+                for (k, o) in out.iter().take(6).enumerate() {
+                    model.params[k] = lit::to_vec_f32(o)?;
+                }
+                for (k, o) in out.iter().skip(6).take(6).enumerate() {
+                    vels[k] = lit::to_vec_f32(o)?;
+                }
+                let loss = lit::to_vec_f32(&out[12])?[0];
+                losses.push(loss);
+            }
+        }
+        Ok(losses)
+    }
+
+    /// Class probabilities for raw (unnormalized) feature rows.
+    pub fn predict_probs(&self, model: &MlpModel, xs: &[Vec<f64>]) -> Result<Vec<Vec<f32>>> {
+        if xs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let batches = self.manifest.predict_batches(&model.arch);
+        if batches.is_empty() {
+            bail!("no predict artifacts for arch {}", model.arch);
+        }
+        let mut out = Vec::with_capacity(xs.len());
+        let mut pos = 0usize;
+        while pos < xs.len() {
+            let remaining = xs.len() - pos;
+            // smallest batch variant that covers the remainder, else largest
+            let batch = *batches
+                .iter()
+                .find(|&&b| b >= remaining)
+                .unwrap_or(batches.last().unwrap());
+            let take = remaining.min(batch);
+            let meta = self
+                .manifest
+                .find(ArtifactKind::Predict, &model.arch, batch)
+                .context("predict artifact vanished")?
+                .clone();
+            let exe = self.runtime.load(self.manifest, &meta)?;
+            let mut xb = vec![0f32; batch * N_FEATURES];
+            for r in 0..take {
+                for f in 0..N_FEATURES {
+                    xb[r * N_FEATURES + f] = xs[pos + r][f] as f32;
+                }
+            }
+            let mut inputs = model.param_literals()?;
+            inputs.push(lit::vec_f32(&model.mean));
+            inputs.push(lit::vec_f32(&model.std));
+            inputs.push(lit::mat_f32(&xb, batch, N_FEATURES)?);
+            let res = exe.execute(&inputs)?;
+            let probs = lit::to_vec_f32(&res[0])?;
+            for r in 0..take {
+                out.push(probs[r * N_CLASSES..(r + 1) * N_CLASSES].to_vec());
+            }
+            pos += take;
+        }
+        Ok(out)
+    }
+
+    /// Hard class predictions.
+    pub fn predict(&self, model: &MlpModel, xs: &[Vec<f64>]) -> Result<Vec<usize>> {
+        Ok(self
+            .predict_probs(model, xs)?
+            .iter()
+            .map(|p| {
+                p.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(k, _)| k)
+                    .unwrap_or(0)
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_shapes_and_glorot_bounds() {
+        let m = MlpModel::init("h32x16", 32, 16, 1);
+        assert_eq!(m.params.len(), 6);
+        assert_eq!(m.params[0].len(), 12 * 32);
+        assert_eq!(m.params[5].len(), 4);
+        // biases zero
+        assert!(m.params[1].iter().all(|&v| v == 0.0));
+        // weights within the glorot limit
+        let limit = (6.0f64 / (12 + 32) as f64).sqrt() as f32;
+        assert!(m.params[0].iter().all(|&v| v.abs() <= limit));
+        // not all zero
+        assert!(m.params[0].iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn init_deterministic() {
+        let a = MlpModel::init("h32x16", 32, 16, 9);
+        let b = MlpModel::init("h32x16", 32, 16, 9);
+        assert_eq!(a.params, b.params);
+    }
+
+    #[test]
+    fn standardization_guards_zero_std() {
+        let mut m = MlpModel::init("h32x16", 32, 16, 1);
+        let mean = vec![1.0; 12];
+        let mut std = vec![2.0; 12];
+        std[3] = 0.0;
+        m.set_standardization(&mean, &std);
+        assert_eq!(m.std[3], 1.0);
+        assert_eq!(m.std[0], 2.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut m = MlpModel::init("h64x32", 64, 32, 5);
+        m.set_standardization(&vec![0.5; 12], &vec![1.5; 12]);
+        let j = m.to_json();
+        let back = MlpModel::from_json(&j).unwrap();
+        assert_eq!(back.arch, "h64x32");
+        assert_eq!(back.params, m.params);
+        assert_eq!(back.mean, m.mean);
+        assert_eq!(back.shapes, m.shapes);
+    }
+
+    #[test]
+    fn batch_indices_cover_all_and_exact_size() {
+        let mut rng = Rng::new(3);
+        let chunks = batch_indices(10, 4, &mut rng);
+        assert_eq!(chunks.len(), 3);
+        assert!(chunks.iter().all(|c| c.len() == 4));
+        let mut seen: Vec<usize> = chunks.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn batch_indices_small_n() {
+        let mut rng = Rng::new(4);
+        let chunks = batch_indices(2, 8, &mut rng);
+        assert_eq!(chunks.len(), 1);
+        assert_eq!(chunks[0].len(), 8); // wrapped
+    }
+
+    // Train/predict through PJRT covered by rust/tests/integration_runtime.rs.
+}

@@ -1,0 +1,123 @@
+//! Hybrid orderings combining nested dissection with minimum-degree —
+//! the paper's fourth category (Table 2: SCOTCH, PORD).
+//!
+//! * [`scotch_like`] mirrors SCOTCH's `esmumps` ordering strategy:
+//!   multilevel nested dissection on the top levels, switching to
+//!   (approximate) minimum degree once subgraphs fall below a threshold
+//!   (SCOTCH's default "nd with amd on small domains").
+//! * [`pord_like`] mirrors PORD's bottom-up/top-down blend: dissection
+//!   with a larger switch threshold and a min-*fill* local ordering,
+//!   which is the distinguishing heuristic of Schulze's PORD.
+//!
+//! Both differ from pure [`super::nd`] (tiny leaves, exact-MD local
+//! ordering) and from pure AMD, giving the four label classes genuinely
+//! different behaviour across matrix families.
+
+use super::mindeg::{min_degree, Variant};
+use super::nd::dissection_with;
+use super::Permutation;
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+/// Subgraph size below which SCOTCH-like ordering switches to AMD.
+const SCOTCH_SWITCH: usize = 240;
+
+/// Subgraph size below which PORD-like ordering switches to min-fill.
+const PORD_SWITCH: usize = 480;
+
+/// SCOTCH-style hybrid: ND on top, AMD below `SCOTCH_SWITCH`.
+pub fn scotch_like(g: &Graph, rng: &mut Rng) -> Permutation {
+    dissection_with(g, rng, SCOTCH_SWITCH, &|sub| {
+        min_degree(sub, Variant::Approximate)
+    })
+}
+
+/// PORD-style hybrid: ND on top (coarser), min-fill below `PORD_SWITCH`.
+pub fn pord_like(g: &Graph, rng: &mut Rng) -> Permutation {
+    dissection_with(g, rng, PORD_SWITCH, &|sub| {
+        min_degree(sub, Variant::MinFill)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reorder::metrics;
+    use crate::reorder::{Permutation, ReorderAlgorithm};
+    use crate::sparse::CooMatrix;
+    use crate::util::prop;
+
+    fn grid_matrix(nx: usize, ny: usize) -> crate::sparse::CsrMatrix {
+        let idx = |x: usize, y: usize| y * nx + x;
+        let n = nx * ny;
+        let mut coo = CooMatrix::new(n, n);
+        for y in 0..ny {
+            for x in 0..nx {
+                let v = idx(x, y);
+                coo.push(v, v, 4.0);
+                if x + 1 < nx {
+                    coo.push_sym(v, idx(x + 1, y), -1.0);
+                }
+                if y + 1 < ny {
+                    coo.push_sym(v, idx(x, y + 1), -1.0);
+                }
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn hybrids_yield_valid_permutations() {
+        let a = grid_matrix(18, 18);
+        let g = Graph::from_matrix(&a);
+        let mut rng = Rng::new(1);
+        assert_eq!(scotch_like(&g, &mut rng).len(), 324);
+        assert_eq!(pord_like(&g, &mut rng).len(), 324);
+    }
+
+    #[test]
+    fn scotch_reduces_fill_vs_natural() {
+        let a = grid_matrix(22, 22);
+        let g = Graph::from_matrix(&a);
+        let mut rng = Rng::new(2);
+        let s_fill = metrics::symbolic_fill(&a, &scotch_like(&g, &mut rng));
+        let nat = metrics::symbolic_fill(&a, &Permutation::identity(484));
+        assert!(s_fill < nat, "scotch {s_fill} >= natural {nat}");
+    }
+
+    #[test]
+    fn hybrids_differ_from_pure_nd_and_amd() {
+        let a = grid_matrix(17, 17);
+        let s = ReorderAlgorithm::Scotch.compute(&a, 9);
+        let p = ReorderAlgorithm::Pord.compute(&a, 9);
+        let n = ReorderAlgorithm::Nd.compute(&a, 9);
+        let amd = ReorderAlgorithm::Amd.compute(&a, 9);
+        assert_ne!(s, n);
+        assert_ne!(s, amd);
+        assert_ne!(p, n);
+        assert_ne!(p, s);
+    }
+
+    #[test]
+    fn small_graph_degenerates_to_local_order() {
+        // below the switch threshold the hybrid IS the local ordering
+        let a = grid_matrix(5, 5);
+        let g = Graph::from_matrix(&a);
+        let mut rng = Rng::new(3);
+        let s = scotch_like(&g, &mut rng);
+        let amd = min_degree(&g, Variant::Approximate);
+        assert_eq!(s, amd);
+    }
+
+    #[test]
+    fn prop_hybrids_valid_on_random() {
+        prop::check("hybrid-valid", 10, |rng_p| {
+            let n = rng_p.range(5, 300);
+            let edges = prop::random_connected_edges(rng_p, n, 0.01);
+            let g = Graph::from_edges(n, &edges);
+            let mut rng = Rng::new(rng_p.next_u64());
+            assert_eq!(scotch_like(&g, &mut rng).len(), n);
+            assert_eq!(pord_like(&g, &mut rng).len(), n);
+        });
+    }
+}

@@ -1,0 +1,318 @@
+//! Sparse matrix reordering algorithms — the seven orderings the paper
+//! evaluates (Table 2), plus the natural (identity) ordering.
+//!
+//! | Category (paper Table 2)      | Algorithms  | Module      |
+//! |-------------------------------|-------------|-------------|
+//! | bandwidth reduction           | RCM (+CM)   | [`rcm`]     |
+//! | fill-in reduction             | MD, AMD, AMF, QAMD | [`mindeg`] |
+//! | graph-based                   | ND          | [`nd`]      |
+//! | hybrid fill-in + graph        | SCOTCH, PORD | [`hybrid`] |
+//!
+//! All algorithms consume the symmetrized adjacency [`crate::graph::Graph`]
+//! and produce a [`Permutation`]; quality metrics (bandwidth, profile,
+//! symbolic fill/flops) live in [`metrics`].
+
+pub mod hybrid;
+pub mod metrics;
+pub mod mindeg;
+pub mod nd;
+pub mod rcm;
+
+use crate::graph::Graph;
+use crate::sparse::CsrMatrix;
+use crate::util::rng::Rng;
+
+/// A permutation of `0..n`. `perm[old] = new`: old index `i` moves to
+/// position `perm[i]` (scatter form, matching `CsrMatrix::permute_sym`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Permutation {
+    perm: Vec<usize>,
+}
+
+impl Permutation {
+    /// Build from scatter form, validating it is a bijection on `0..n`.
+    pub fn new(perm: Vec<usize>) -> Self {
+        let n = perm.len();
+        let mut seen = vec![false; n];
+        for &p in &perm {
+            assert!(p < n, "permutation value {p} out of range");
+            assert!(!seen[p], "duplicate permutation value {p}");
+            seen[p] = true;
+        }
+        Permutation { perm }
+    }
+
+    /// Build from an elimination/visit *order*: `order[k]` is the old
+    /// index placed at new position `k` (gather form).
+    pub fn from_order(order: &[usize]) -> Self {
+        let n = order.len();
+        let mut perm = vec![usize::MAX; n];
+        for (new, &old) in order.iter().enumerate() {
+            assert!(old < n, "order value {old} out of range");
+            assert_eq!(perm[old], usize::MAX, "duplicate order value {old}");
+            perm[old] = new;
+        }
+        Permutation { perm }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        Permutation {
+            perm: (0..n).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.perm.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.perm.is_empty()
+    }
+
+    /// Scatter form (`old -> new`).
+    pub fn as_slice(&self) -> &[usize] {
+        &self.perm
+    }
+
+    /// Gather form (`order[k]` = old index at new position k).
+    pub fn order(&self) -> Vec<usize> {
+        let mut order = vec![0usize; self.perm.len()];
+        for (old, &new) in self.perm.iter().enumerate() {
+            order[new] = old;
+        }
+        order
+    }
+
+    pub fn inverse(&self) -> Permutation {
+        Permutation { perm: self.order() }
+    }
+
+    /// Reverse the ordering (CM -> RCM).
+    pub fn reversed(&self) -> Permutation {
+        let n = self.perm.len();
+        Permutation {
+            perm: self.perm.iter().map(|&p| n - 1 - p).collect(),
+        }
+    }
+
+    /// Apply to a square matrix: `B = P A Pᵀ`.
+    pub fn apply(&self, a: &CsrMatrix) -> CsrMatrix {
+        a.permute_sym(&self.perm)
+    }
+}
+
+/// The reordering algorithms under study. `Natural` is the no-op
+/// baseline; the other seven are the paper's Table 2 set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ReorderAlgorithm {
+    Natural,
+    Cm,
+    Rcm,
+    Md,
+    Amd,
+    Amf,
+    Qamd,
+    Nd,
+    Scotch,
+    Pord,
+}
+
+impl ReorderAlgorithm {
+    /// The seven algorithms the paper benchmarks (Table 2).
+    pub const PAPER_SET: [ReorderAlgorithm; 7] = [
+        ReorderAlgorithm::Rcm,
+        ReorderAlgorithm::Amd,
+        ReorderAlgorithm::Amf,
+        ReorderAlgorithm::Qamd,
+        ReorderAlgorithm::Nd,
+        ReorderAlgorithm::Scotch,
+        ReorderAlgorithm::Pord,
+    ];
+
+    /// The four category representatives used as prediction labels
+    /// (paper §3.2: RCM, AMD, ND, SCOTCH).
+    pub const LABEL_SET: [ReorderAlgorithm; 4] = [
+        ReorderAlgorithm::Amd,
+        ReorderAlgorithm::Scotch,
+        ReorderAlgorithm::Nd,
+        ReorderAlgorithm::Rcm,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReorderAlgorithm::Natural => "NATURAL",
+            ReorderAlgorithm::Cm => "CM",
+            ReorderAlgorithm::Rcm => "RCM",
+            ReorderAlgorithm::Md => "MD",
+            ReorderAlgorithm::Amd => "AMD",
+            ReorderAlgorithm::Amf => "AMF",
+            ReorderAlgorithm::Qamd => "QAMD",
+            ReorderAlgorithm::Nd => "ND",
+            ReorderAlgorithm::Scotch => "SCOTCH",
+            ReorderAlgorithm::Pord => "PORD",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<ReorderAlgorithm> {
+        let up = name.to_ascii_uppercase();
+        Some(match up.as_str() {
+            "NATURAL" => ReorderAlgorithm::Natural,
+            "CM" => ReorderAlgorithm::Cm,
+            "RCM" => ReorderAlgorithm::Rcm,
+            "MD" => ReorderAlgorithm::Md,
+            "AMD" => ReorderAlgorithm::Amd,
+            "AMF" => ReorderAlgorithm::Amf,
+            "QAMD" => ReorderAlgorithm::Qamd,
+            "ND" => ReorderAlgorithm::Nd,
+            "SCOTCH" => ReorderAlgorithm::Scotch,
+            "PORD" => ReorderAlgorithm::Pord,
+            _ => return None,
+        })
+    }
+
+    /// Label index in [`Self::LABEL_SET`] (classifier class id), if this
+    /// algorithm is one of the four representatives.
+    pub fn label_index(&self) -> Option<usize> {
+        Self::LABEL_SET.iter().position(|a| a == self)
+    }
+
+    /// Compute the ordering for a matrix. Deterministic given `seed`
+    /// (only ND/SCOTCH/PORD use randomness, in their bisection).
+    pub fn compute(&self, a: &CsrMatrix, seed: u64) -> Permutation {
+        let g = Graph::from_matrix(a);
+        self.compute_on_graph(&g, seed)
+    }
+
+    /// Compute the ordering on a prebuilt adjacency graph.
+    pub fn compute_on_graph(&self, g: &Graph, seed: u64) -> Permutation {
+        let mut rng = Rng::new(seed ^ 0x5ee_d);
+        match self {
+            ReorderAlgorithm::Natural => Permutation::identity(g.n_vertices()),
+            ReorderAlgorithm::Cm => rcm::cuthill_mckee(g),
+            ReorderAlgorithm::Rcm => rcm::reverse_cuthill_mckee(g),
+            ReorderAlgorithm::Md => mindeg::min_degree(g, mindeg::Variant::Exact),
+            ReorderAlgorithm::Amd => mindeg::min_degree(g, mindeg::Variant::Approximate),
+            ReorderAlgorithm::Amf => mindeg::min_degree(g, mindeg::Variant::MinFill),
+            ReorderAlgorithm::Qamd => mindeg::min_degree(g, mindeg::Variant::QuasiDense),
+            ReorderAlgorithm::Nd => nd::nested_dissection(g, &mut rng),
+            ReorderAlgorithm::Scotch => hybrid::scotch_like(g, &mut rng),
+            ReorderAlgorithm::Pord => hybrid::pord_like(g, &mut rng),
+        }
+    }
+}
+
+impl std::fmt::Display for ReorderAlgorithm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CooMatrix;
+
+    #[test]
+    fn permutation_roundtrip() {
+        let p = Permutation::new(vec![2, 0, 1]);
+        assert_eq!(p.order(), vec![1, 2, 0]);
+        let inv = p.inverse();
+        // p ∘ p⁻¹ = id
+        let composed: Vec<usize> = (0..3).map(|i| p.as_slice()[inv.as_slice()[i]]).collect();
+        assert_eq!(composed, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn from_order_matches_new() {
+        // order: position 0 gets old 1, position 1 gets old 2, position 2 gets old 0
+        let p = Permutation::from_order(&[1, 2, 0]);
+        assert_eq!(p.as_slice(), &[2, 0, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate")]
+    fn rejects_non_bijection() {
+        Permutation::new(vec![0, 0, 1]);
+    }
+
+    #[test]
+    fn reversed_flips_positions() {
+        let p = Permutation::identity(4).reversed();
+        assert_eq!(p.as_slice(), &[3, 2, 1, 0]);
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for a in ReorderAlgorithm::PAPER_SET {
+            assert_eq!(ReorderAlgorithm::from_name(a.name()), Some(a));
+        }
+        assert_eq!(ReorderAlgorithm::from_name("amd"), Some(ReorderAlgorithm::Amd));
+        assert_eq!(ReorderAlgorithm::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn label_indices_cover_0_to_3() {
+        let mut idx: Vec<usize> = ReorderAlgorithm::LABEL_SET
+            .iter()
+            .map(|a| a.label_index().unwrap())
+            .collect();
+        idx.sort_unstable();
+        assert_eq!(idx, vec![0, 1, 2, 3]);
+        assert_eq!(ReorderAlgorithm::Md.label_index(), None);
+    }
+
+    #[test]
+    fn every_algorithm_yields_valid_permutation() {
+        // 5x5 grid Laplacian-ish pattern
+        let n = 25;
+        let mut coo = CooMatrix::new(n, n);
+        for i in 0..n {
+            coo.push(i, i, 4.0);
+            if i % 5 != 4 {
+                coo.push_sym(i, i + 1, -1.0);
+            }
+            if i + 5 < n {
+                coo.push_sym(i, i + 5, -1.0);
+            }
+        }
+        let a = coo.to_csr();
+        for alg in [
+            ReorderAlgorithm::Natural,
+            ReorderAlgorithm::Cm,
+            ReorderAlgorithm::Rcm,
+            ReorderAlgorithm::Md,
+            ReorderAlgorithm::Amd,
+            ReorderAlgorithm::Amf,
+            ReorderAlgorithm::Qamd,
+            ReorderAlgorithm::Nd,
+            ReorderAlgorithm::Scotch,
+            ReorderAlgorithm::Pord,
+        ] {
+            let p = alg.compute(&a, 42);
+            assert_eq!(p.len(), n, "{alg}");
+            // Permutation::new already validates bijection on construction
+            let b = p.apply(&a);
+            assert_eq!(b.nnz(), a.nnz(), "{alg}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut coo = CooMatrix::new(30, 30);
+        for i in 0..30 {
+            coo.push(i, i, 2.0);
+            if i > 0 {
+                coo.push_sym(i, i - 1, -1.0);
+            }
+            if i >= 6 {
+                coo.push_sym(i, i - 6, -0.5);
+            }
+        }
+        let a = coo.to_csr();
+        for alg in ReorderAlgorithm::PAPER_SET {
+            let p1 = alg.compute(&a, 7);
+            let p2 = alg.compute(&a, 7);
+            assert_eq!(p1, p2, "{alg} not deterministic");
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! Nested dissection ordering (George 1973), multilevel (METIS-style).
+//!
+//! Recursively: bisect the graph (multilevel heavy-edge coarsening + FM,
+//! `graph::partition`), extract a vertex separator, order the two parts
+//! first and the separator last. Leaf subgraphs below `LEAF_SIZE` are
+//! ordered by local minimum degree — the same leaf strategy METIS'
+//! `METIS_NodeND` uses (MMD on the leaves).
+
+use super::mindeg::{min_degree, Variant};
+use super::Permutation;
+use crate::graph::partition::{bisect, vertex_separator};
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+/// Leaf threshold for pure ND (METIS stops dissecting around ~100).
+const LEAF_SIZE: usize = 64;
+
+/// Nested dissection with MD-ordered leaves.
+pub fn nested_dissection(g: &Graph, rng: &mut Rng) -> Permutation {
+    dissection_with(g, rng, LEAF_SIZE, &|sub| {
+        min_degree(sub, Variant::Exact)
+    })
+}
+
+/// Generic dissection driver, shared with the SCOTCH/PORD hybrids: leaf
+/// subgraphs of size ≤ `leaf_size` are ordered by `leaf_order`.
+pub fn dissection_with(
+    g: &Graph,
+    rng: &mut Rng,
+    leaf_size: usize,
+    leaf_order: &dyn Fn(&Graph) -> Permutation,
+) -> Permutation {
+    let n = g.n_vertices();
+    let mut order = Vec::with_capacity(n);
+    let verts: Vec<usize> = (0..n).collect();
+    recurse(g, &verts, rng, leaf_size, leaf_order, &mut order, 0);
+    debug_assert_eq!(order.len(), n);
+    Permutation::from_order(&order)
+}
+
+fn order_leaf(
+    g: &Graph,
+    verts: &[usize],
+    leaf_order: &dyn Fn(&Graph) -> Permutation,
+    out: &mut Vec<usize>,
+) {
+    let (sub, map) = g.subgraph(verts);
+    let p = leaf_order(&sub);
+    for &local_old in &p.order() {
+        out.push(map[local_old]);
+    }
+}
+
+fn recurse(
+    g: &Graph,
+    verts: &[usize],
+    rng: &mut Rng,
+    leaf_size: usize,
+    leaf_order: &dyn Fn(&Graph) -> Permutation,
+    out: &mut Vec<usize>,
+    depth: usize,
+) {
+    if verts.len() <= leaf_size || depth > 64 {
+        order_leaf(g, verts, leaf_order, out);
+        return;
+    }
+    let (sub, map) = g.subgraph(verts);
+    let b = bisect(&sub, rng);
+    let (sep, a, bb) = vertex_separator(&sub, &b.side);
+    // Degenerate bisection (e.g. a clique where one side swallowed
+    // everything): fall back to leaf ordering to guarantee progress.
+    if a.is_empty() && bb.is_empty() {
+        order_leaf(g, verts, leaf_order, out);
+        return;
+    }
+    if sep.is_empty() && (a.is_empty() || bb.is_empty()) {
+        order_leaf(g, verts, leaf_order, out);
+        return;
+    }
+    let to_global = |locals: &[usize]| locals.iter().map(|&l| map[l]).collect::<Vec<_>>();
+    let ga = to_global(&a);
+    let gb = to_global(&bb);
+    let gsep = to_global(&sep);
+    if !ga.is_empty() {
+        recurse(g, &ga, rng, leaf_size, leaf_order, out, depth + 1);
+    }
+    if !gb.is_empty() {
+        recurse(g, &gb, rng, leaf_size, leaf_order, out, depth + 1);
+    }
+    // Separator vertices are eliminated last (they border both halves).
+    // Order within the separator: by degree (small first) — a cheap local
+    // minimum-degree pass over the separator clique.
+    let mut s = gsep;
+    s.sort_by_key(|&v| (g.degree(v), v));
+    out.extend(s);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reorder::metrics;
+    use crate::reorder::ReorderAlgorithm;
+    use crate::sparse::CooMatrix;
+    use crate::util::prop;
+
+    fn grid_matrix(nx: usize, ny: usize) -> crate::sparse::CsrMatrix {
+        let idx = |x: usize, y: usize| y * nx + x;
+        let n = nx * ny;
+        let mut coo = CooMatrix::new(n, n);
+        for y in 0..ny {
+            for x in 0..nx {
+                let v = idx(x, y);
+                coo.push(v, v, 4.0);
+                if x + 1 < nx {
+                    coo.push_sym(v, idx(x + 1, y), -1.0);
+                }
+                if y + 1 < ny {
+                    coo.push_sym(v, idx(x, y + 1), -1.0);
+                }
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn nd_valid_permutation_on_grid() {
+        let a = grid_matrix(15, 15);
+        let g = Graph::from_matrix(&a);
+        let mut rng = Rng::new(1);
+        let p = nested_dissection(&g, &mut rng);
+        assert_eq!(p.len(), 225);
+    }
+
+    #[test]
+    fn nd_reduces_fill_vs_natural_on_grid() {
+        // George's theorem: ND fill on an s×s grid is O(n log n) vs the
+        // natural (banded) ordering's O(n^{1.5}).
+        let a = grid_matrix(20, 20);
+        let g = Graph::from_matrix(&a);
+        let mut rng = Rng::new(2);
+        let p = nested_dissection(&g, &mut rng);
+        let nd_fill = metrics::symbolic_fill(&a, &p);
+        let nat_fill = metrics::symbolic_fill(&a, &Permutation::identity(400));
+        assert!(
+            nd_fill < nat_fill,
+            "nd {nd_fill} >= natural {nat_fill}"
+        );
+    }
+
+    #[test]
+    fn nd_competitive_with_amd_on_large_grid() {
+        let a = grid_matrix(24, 24);
+        let g = Graph::from_matrix(&a);
+        let mut rng = Rng::new(3);
+        let nd_fill = metrics::symbolic_fill(&a, &nested_dissection(&g, &mut rng));
+        let amd = ReorderAlgorithm::Amd.compute(&a, 1);
+        let amd_fill = metrics::symbolic_fill(&a, &amd);
+        // On 2D meshes ND should be within ~2x of AMD (often better).
+        assert!(
+            (nd_fill as f64) < 2.0 * amd_fill as f64,
+            "nd {nd_fill} vs amd {amd_fill}"
+        );
+    }
+
+    #[test]
+    fn nd_handles_disconnected() {
+        let g = Graph::from_edges(200, &(0..99).map(|i| (i, i + 1)).collect::<Vec<_>>());
+        let mut rng = Rng::new(4);
+        let p = nested_dissection(&g, &mut rng);
+        assert_eq!(p.len(), 200);
+    }
+
+    #[test]
+    fn nd_handles_clique() {
+        // Worst case for bisection: complete graph — must still terminate.
+        let n = 90;
+        let mut edges = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                edges.push((i, j));
+            }
+        }
+        let g = Graph::from_edges(n, &edges);
+        let mut rng = Rng::new(5);
+        let p = nested_dissection(&g, &mut rng);
+        assert_eq!(p.len(), n);
+    }
+
+    #[test]
+    fn prop_nd_valid_on_random_connected() {
+        prop::check("nd-valid", 15, |rng_p| {
+            let n = rng_p.range(10, 200);
+            let edges = prop::random_connected_edges(rng_p, n, 0.02);
+            let g = Graph::from_edges(n, &edges);
+            let mut rng = Rng::new(rng_p.next_u64());
+            let p = nested_dissection(&g, &mut rng);
+            assert_eq!(p.len(), n);
+        });
+    }
+}

@@ -1,0 +1,159 @@
+//! Cuthill–McKee and Reverse Cuthill–McKee bandwidth-reducing orderings.
+//!
+//! CM (Cuthill & McKee 1969): BFS from a pseudo-peripheral vertex,
+//! visiting each level's vertices in ascending-degree order. RCM (Liu &
+//! Sherman 1976) reverses the CM order, which provably never increases —
+//! and usually reduces — the envelope/profile. Handles disconnected
+//! graphs by restarting from a fresh pseudo-peripheral vertex per
+//! component (what SciPy's `reverse_cuthill_mckee` does).
+
+use super::Permutation;
+use crate::graph::traversal::pseudo_peripheral;
+use crate::graph::Graph;
+
+/// Cuthill–McKee visit order over all components.
+fn cm_order(g: &Graph) -> Vec<usize> {
+    let n = g.n_vertices();
+    let mut order = Vec::with_capacity(n);
+    let mut placed = vec![false; n];
+    let mut mask = vec![true; n]; // not-yet-ordered vertices
+
+    // Components are processed in order of their lowest-index vertex;
+    // within a component, BFS from a pseudo-peripheral start.
+    for seed in 0..n {
+        if placed[seed] {
+            continue;
+        }
+        let (start, _) = pseudo_peripheral(g, seed, &mask);
+        // classic CM queue: visit in FIFO order, appending each vertex's
+        // unvisited neighbors in ascending-degree order
+        let mut queue = std::collections::VecDeque::new();
+        queue.push_back(start);
+        placed[start] = true;
+        let mut children = Vec::new();
+        while let Some(v) = queue.pop_front() {
+            order.push(v);
+            mask[v] = false;
+            children.clear();
+            for &u in g.neighbors(v) {
+                if !placed[u] {
+                    placed[u] = true;
+                    children.push(u);
+                }
+            }
+            children.sort_by_key(|&u| (g.degree(u), u));
+            for &u in &children {
+                queue.push_back(u);
+            }
+        }
+    }
+    order
+}
+
+/// Cuthill–McKee ordering.
+pub fn cuthill_mckee(g: &Graph) -> Permutation {
+    Permutation::from_order(&cm_order(g))
+}
+
+/// Reverse Cuthill–McKee ordering.
+pub fn reverse_cuthill_mckee(g: &Graph) -> Permutation {
+    let mut order = cm_order(g);
+    order.reverse();
+    Permutation::from_order(&order)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::pattern::{bandwidth, profile};
+    use crate::sparse::CooMatrix;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    /// Random-permuted banded matrix: RCM should recover a small bandwidth.
+    fn scrambled_band(n: usize, band: usize, seed: u64) -> crate::sparse::CsrMatrix {
+        let mut rng = Rng::new(seed);
+        let mut scramble: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut scramble);
+        let mut coo = CooMatrix::new(n, n);
+        for i in 0..n {
+            coo.push(scramble[i], scramble[i], 4.0);
+            for d in 1..=band {
+                if i + d < n {
+                    coo.push_sym(scramble[i], scramble[i + d], -1.0);
+                }
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn rcm_recovers_band_structure() {
+        let a = scrambled_band(200, 2, 11);
+        let before = bandwidth(&a);
+        let p = reverse_cuthill_mckee(&Graph::from_matrix(&a));
+        let after = bandwidth(&p.apply(&a));
+        assert!(after <= 4, "bandwidth {before} -> {after}");
+        assert!(after < before);
+    }
+
+    #[test]
+    fn rcm_profile_not_worse_than_cm() {
+        let a = scrambled_band(150, 3, 13);
+        let g = Graph::from_matrix(&a);
+        let cm = cuthill_mckee(&g);
+        let rcm = reverse_cuthill_mckee(&g);
+        let p_cm = profile(&cm.apply(&a));
+        let p_rcm = profile(&rcm.apply(&a));
+        assert!(p_rcm <= p_cm, "rcm {p_rcm} > cm {p_cm}");
+    }
+
+    #[test]
+    fn rcm_is_reverse_of_cm() {
+        let a = scrambled_band(60, 2, 17);
+        let g = Graph::from_matrix(&a);
+        let cm = cuthill_mckee(&g);
+        let rcm = reverse_cuthill_mckee(&g);
+        assert_eq!(cm.reversed(), rcm);
+    }
+
+    #[test]
+    fn handles_disconnected_graphs() {
+        let g = Graph::from_edges(7, &[(0, 1), (1, 2), (4, 5), (5, 6)]);
+        let p = reverse_cuthill_mckee(&g);
+        assert_eq!(p.len(), 7); // validated bijection by construction
+    }
+
+    #[test]
+    fn handles_isolated_vertices_and_empty() {
+        let g = Graph::from_edges(3, &[]);
+        let p = reverse_cuthill_mckee(&g);
+        assert_eq!(p.len(), 3);
+        let g0 = Graph::from_edges(0, &[]);
+        assert_eq!(reverse_cuthill_mckee(&g0).len(), 0);
+    }
+
+    #[test]
+    fn prop_rcm_valid_on_random_graphs() {
+        prop::check("rcm-valid", 30, |rng| {
+            let n = rng.range(2, 120);
+            let edges = prop::random_sym_edges(rng, n, 0.1);
+            let g = Graph::from_edges(n, &edges);
+            let p = reverse_cuthill_mckee(&g);
+            assert_eq!(p.len(), n);
+        });
+    }
+
+    #[test]
+    fn prop_rcm_never_wildly_worse_on_connected(){
+        // On connected graphs RCM bandwidth should be <= n-1 trivially and
+        // beat a random scramble on banded inputs (checked above); here we
+        // assert it is deterministic and stable.
+        prop::check("rcm-deterministic", 10, |rng| {
+            let n = rng.range(5, 80);
+            let edges = prop::random_connected_edges(rng, n, 0.05);
+            let g = Graph::from_edges(n, &edges);
+            assert_eq!(reverse_cuthill_mckee(&g), reverse_cuthill_mckee(&g));
+        });
+    }
+}

@@ -1,0 +1,326 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from Rust.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, CPU PJRT plugin):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+//! The interchange format is HLO *text* — see `python/compile/aot.py` for
+//! why serialized protos from jax ≥ 0.5 are rejected by this XLA build.
+//!
+//! One [`LoadedArtifact`] per (arch, kind, batch) model variant; the
+//! [`Runtime`] caches compiled executables keyed by artifact path, so the
+//! serving hot path never recompiles.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Artifact kind (matches the manifest `kind` field).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    Predict,
+    Train,
+}
+
+impl ArtifactKind {
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "predict" => Ok(ArtifactKind::Predict),
+            "train" => Ok(ArtifactKind::Train),
+            other => bail!("unknown artifact kind {other}"),
+        }
+    }
+}
+
+/// Metadata of one AOT artifact (one manifest entry).
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub kind: ArtifactKind,
+    pub arch: String,
+    pub h1: usize,
+    pub h2: usize,
+    pub batch: usize,
+    pub path: String,
+    pub n_features: usize,
+    pub n_classes: usize,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+    pub vmem_bytes: usize,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+fn strs(j: &Json) -> Vec<String> {
+    j.as_arr()
+        .map(|a| {
+            a.iter()
+                .filter_map(|v| v.as_str().map(|s| s.to_string()))
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("read {}", mpath.display()))?;
+        let root = json::parse(&text).map_err(|e| anyhow!("parse manifest: {e}"))?;
+        let arts = root
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .context("manifest missing 'artifacts'")?;
+        let mut out = Vec::new();
+        for e in arts {
+            let get_s = |k: &str| -> Result<String> {
+                Ok(e.get(k)
+                    .and_then(|v| v.as_str())
+                    .with_context(|| format!("artifact missing {k}"))?
+                    .to_string())
+            };
+            let get_n = |k: &str| -> Result<usize> {
+                e.get(k)
+                    .and_then(|v| v.as_usize())
+                    .with_context(|| format!("artifact missing {k}"))
+            };
+            let param_shapes = e
+                .get("param_shapes")
+                .and_then(|v| v.as_arr())
+                .context("missing param_shapes")?
+                .iter()
+                .map(|s| {
+                    s.as_arr()
+                        .map(|dims| dims.iter().filter_map(|d| d.as_usize()).collect())
+                        .unwrap_or_default()
+                })
+                .collect();
+            out.push(ArtifactMeta {
+                kind: ArtifactKind::from_str(&get_s("kind")?)?,
+                arch: get_s("arch")?,
+                h1: get_n("h1")?,
+                h2: get_n("h2")?,
+                batch: get_n("batch")?,
+                path: get_s("path")?,
+                n_features: get_n("n_features")?,
+                n_classes: get_n("n_classes")?,
+                param_shapes,
+                inputs: strs(e.get("inputs").unwrap_or(&Json::Null)),
+                outputs: strs(e.get("outputs").unwrap_or(&Json::Null)),
+                vmem_bytes: get_n("vmem_bytes").unwrap_or(0),
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts: out,
+        })
+    }
+
+    /// Find an artifact by (kind, arch, batch).
+    pub fn find(&self, kind: ArtifactKind, arch: &str, batch: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == kind && a.arch == arch && a.batch == batch)
+    }
+
+    /// All predict batch sizes available for an arch, ascending.
+    pub fn predict_batches(&self, arch: &str) -> Vec<usize> {
+        let mut b: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Predict && a.arch == arch)
+            .map(|a| a.batch)
+            .collect();
+        b.sort_unstable();
+        b
+    }
+
+    /// All architectures present.
+    pub fn archs(&self) -> Vec<String> {
+        let mut a: Vec<String> = self.artifacts.iter().map(|m| m.arch.clone()).collect();
+        a.sort();
+        a.dedup();
+        a
+    }
+}
+
+/// A compiled executable plus its metadata.
+pub struct LoadedArtifact {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedArtifact {
+    /// Execute with positional inputs; returns the flattened output tuple.
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "artifact {} expects {} inputs, got {}",
+                self.meta.path,
+                self.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("execute {}", self.meta.path))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        // aot.py lowers with return_tuple=True: always a tuple
+        let parts = lit.to_tuple().context("untuple result")?;
+        if parts.len() != self.meta.outputs.len() {
+            bail!(
+                "artifact {} declared {} outputs, got {}",
+                self.meta.path,
+                self.meta.outputs.len(),
+                parts.len()
+            );
+        }
+        Ok(parts)
+    }
+}
+
+/// PJRT client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<LoadedArtifact>>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu().context("create PJRT CPU client")?,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (or fetch from cache) one artifact.
+    pub fn load(
+        &self,
+        manifest: &Manifest,
+        meta: &ArtifactMeta,
+    ) -> Result<std::sync::Arc<LoadedArtifact>> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(a) = cache.get(&meta.path) {
+                return Ok(a.clone());
+            }
+        }
+        let full = manifest.dir.join(&meta.path);
+        let proto = xla::HloModuleProto::from_text_file(
+            full.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", full.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", meta.path))?;
+        let loaded = std::sync::Arc::new(LoadedArtifact {
+            meta: meta.clone(),
+            exe,
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(meta.path.clone(), loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+/// Helpers to build literals from Rust data.
+pub mod lit {
+    use anyhow::Result;
+
+    /// f32 vector literal.
+    pub fn vec_f32(data: &[f32]) -> xla::Literal {
+        xla::Literal::vec1(data)
+    }
+
+    /// f32 matrix literal (row-major).
+    pub fn mat_f32(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        assert_eq!(data.len(), rows * cols);
+        Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+    }
+
+    /// f32 scalar literal.
+    pub fn scalar_f32(v: f32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+
+    /// Read an f32 literal back into a Vec.
+    pub fn to_vec_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+        Ok(l.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_text() -> &'static str {
+        r#"{"artifacts":[
+            {"kind":"predict","arch":"h32x16","h1":32,"h2":16,"batch":8,
+             "path":"mlp_h32x16_predict_b8.hlo.txt","n_features":12,
+             "n_classes":4,"param_shapes":[[12,32],[32],[32,16],[16],[16,4],[4]],
+             "inputs":["w1","b1","w2","b2","w3","b3","mean","std","x"],
+             "outputs":["probs"],"vmem_bytes":4096}
+        ]}"#
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let dir = std::env::temp_dir().join("smr_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), manifest_text()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = &m.artifacts[0];
+        assert_eq!(a.kind, ArtifactKind::Predict);
+        assert_eq!(a.batch, 8);
+        assert_eq!(a.param_shapes[0], vec![12, 32]);
+        assert_eq!(a.inputs.len(), 9);
+        assert!(m.find(ArtifactKind::Predict, "h32x16", 8).is_some());
+        assert!(m.find(ArtifactKind::Train, "h32x16", 8).is_none());
+        assert_eq!(m.predict_batches("h32x16"), vec![8]);
+        assert_eq!(m.archs(), vec!["h32x16".to_string()]);
+    }
+
+    #[test]
+    fn manifest_missing_file_errors() {
+        let dir = std::env::temp_dir().join("smr_manifest_missing");
+        std::fs::create_dir_all(&dir).unwrap();
+        let _ = std::fs::remove_file(dir.join("manifest.json"));
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn lit_roundtrip() {
+        let m = lit::mat_f32(&[1.0, 2.0, 3.0, 4.0], 2, 2).unwrap();
+        let back = lit::to_vec_f32(&m).unwrap();
+        assert_eq!(back, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    // Real artifact loading/execution is covered by
+    // rust/tests/integration_runtime.rs (requires `make artifacts`).
+}

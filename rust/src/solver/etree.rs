@@ -1,0 +1,226 @@
+//! Elimination tree and factor column counts (symbolic analysis core).
+//!
+//! Liu's elimination-tree algorithm with path compression, plus the
+//! row-subtree walk that yields per-column factor counts in O(nnz(L))
+//! time and O(n) space — enough to compute fill/flops for a candidate
+//! ordering *without* allocating the factor, which is what the
+//! reordering-quality metrics and the solver's flop-cap guard use.
+//!
+//! All functions take the symmetric adjacency pattern `(indptr, indices)`
+//! of the (permuted) matrix — self-loops optional, both triangles stored.
+
+/// Sentinel for "no parent" (tree root).
+pub const NONE: usize = usize::MAX;
+
+/// Elimination tree: `parent[v]` of each column, `NONE` for roots.
+pub fn etree(indptr: &[usize], indices: &[usize]) -> Vec<usize> {
+    let n = indptr.len() - 1;
+    let mut parent = vec![NONE; n];
+    let mut ancestor = vec![NONE; n];
+    for i in 0..n {
+        for &j in &indices[indptr[i]..indptr[i + 1]] {
+            if j >= i {
+                continue; // lower triangle only
+            }
+            // walk from j to the root of its current subtree, compressing
+            let mut k = j;
+            while ancestor[k] != NONE && ancestor[k] != i {
+                let next = ancestor[k];
+                ancestor[k] = i;
+                k = next;
+            }
+            if ancestor[k] == NONE {
+                ancestor[k] = i;
+                parent[k] = i;
+            }
+        }
+    }
+    parent
+}
+
+/// Post-order of the elimination forest (children before parents).
+pub fn postorder(parent: &[usize]) -> Vec<usize> {
+    let n = parent.len();
+    // build child lists
+    let mut head = vec![NONE; n];
+    let mut next = vec![NONE; n];
+    // iterate in reverse so children lists come out ascending
+    for v in (0..n).rev() {
+        let p = parent[v];
+        if p != NONE {
+            next[v] = head[p];
+            head[p] = v;
+        }
+    }
+    let mut order = Vec::with_capacity(n);
+    let mut stack = Vec::new();
+    for root in 0..n {
+        if parent[root] != NONE {
+            continue;
+        }
+        // iterative DFS emitting post-order
+        stack.push((root, false));
+        while let Some((v, expanded)) = stack.pop() {
+            if expanded {
+                order.push(v);
+                continue;
+            }
+            stack.push((v, true));
+            let mut c = head[v];
+            while c != NONE {
+                stack.push((c, false));
+                c = next[c];
+            }
+        }
+    }
+    order
+}
+
+/// Factor column counts: `counts[j]` = nnz of column j of L *excluding*
+/// the diagonal. Row-subtree marking walk (Liu).
+pub fn col_counts(indptr: &[usize], indices: &[usize], parent: &[usize]) -> Vec<usize> {
+    let n = indptr.len() - 1;
+    let mut counts = vec![0usize; n];
+    let mut mark = vec![NONE; n];
+    for i in 0..n {
+        mark[i] = i;
+        for &j in &indices[indptr[i]..indptr[i + 1]] {
+            if j >= i {
+                continue;
+            }
+            let mut k = j;
+            while mark[k] != i {
+                mark[k] = i;
+                counts[k] += 1;
+                k = parent[k];
+                debug_assert!(k != NONE, "walk escaped the row subtree");
+            }
+        }
+    }
+    counts
+}
+
+/// Symbolic cost summary for an ordering.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SymbolicCost {
+    /// nnz(L) including the unit diagonal.
+    pub fill: u64,
+    /// Multiply-add count of an LDLᵀ factorization with this pattern:
+    /// Σ_j c_j (c_j + 3) / 2  (c_j = offdiag count of column j).
+    pub flops: f64,
+    /// Maximum column count (frontal-size proxy).
+    pub max_col: usize,
+}
+
+/// Fill and flops from column counts.
+pub fn symbolic_cost(counts: &[usize]) -> SymbolicCost {
+    let n = counts.len() as u64;
+    let mut fill = n;
+    let mut flops = 0f64;
+    let mut max_col = 0usize;
+    for &c in counts {
+        fill += c as u64;
+        let cf = c as f64;
+        flops += cf * (cf + 3.0) / 2.0;
+        max_col = max_col.max(c);
+    }
+    SymbolicCost {
+        fill,
+        flops,
+        max_col,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    /// dense pattern helper: full lower+upper adjacency from edges
+    fn adj(n: usize, edges: &[(usize, usize)]) -> (Vec<usize>, Vec<usize>) {
+        let g = Graph::from_edges(n, edges);
+        (g.indptr, g.indices)
+    }
+
+    #[test]
+    fn etree_of_tridiagonal_is_path() {
+        let edges: Vec<(usize, usize)> = (0..5).map(|i| (i, i + 1)).collect();
+        let (ip, ix) = adj(6, &edges);
+        let parent = etree(&ip, &ix);
+        assert_eq!(parent, vec![1, 2, 3, 4, 5, NONE]);
+    }
+
+    #[test]
+    fn etree_of_arrow_points_to_hub() {
+        // arrow with hub at the LAST index: no fill, every column's parent
+        // is the hub
+        let n = 6;
+        let edges: Vec<(usize, usize)> = (0..5).map(|i| (i, 5)).collect();
+        let (ip, ix) = adj(n, &edges);
+        let parent = etree(&ip, &ix);
+        assert_eq!(parent, vec![5, 5, 5, 5, 5, NONE]);
+    }
+
+    #[test]
+    fn col_counts_tridiagonal_no_fill() {
+        let edges: Vec<(usize, usize)> = (0..7).map(|i| (i, i + 1)).collect();
+        let (ip, ix) = adj(8, &edges);
+        let parent = etree(&ip, &ix);
+        let counts = col_counts(&ip, &ix, &parent);
+        assert_eq!(counts, vec![1, 1, 1, 1, 1, 1, 1, 0]);
+        let cost = symbolic_cost(&counts);
+        assert_eq!(cost.fill, 8 + 7);
+        assert_eq!(cost.max_col, 1);
+    }
+
+    #[test]
+    fn col_counts_arrow_reversed_fills_completely() {
+        // hub at index 0: eliminating the hub first makes L dense
+        let n = 5;
+        let edges: Vec<(usize, usize)> = (1..n).map(|i| (0, i)).collect();
+        let (ip, ix) = adj(n, &edges);
+        let parent = etree(&ip, &ix);
+        let counts = col_counts(&ip, &ix, &parent);
+        // column 0 connects to all, then the quotient is a clique
+        assert_eq!(counts[0], n - 1);
+        let cost = symbolic_cost(&counts);
+        assert_eq!(cost.fill, (n * (n + 1) / 2) as u64);
+    }
+
+    #[test]
+    fn postorder_children_before_parents() {
+        let edges: Vec<(usize, usize)> = vec![(0, 2), (1, 2), (2, 4), (3, 4)];
+        let (ip, ix) = adj(5, &edges);
+        let parent = etree(&ip, &ix);
+        let post = postorder(&parent);
+        assert_eq!(post.len(), 5);
+        let mut pos = vec![0; 5];
+        for (k, &v) in post.iter().enumerate() {
+            pos[v] = k;
+        }
+        for v in 0..5 {
+            if parent[v] != NONE {
+                assert!(pos[v] < pos[parent[v]], "{v} after parent");
+            }
+        }
+    }
+
+    #[test]
+    fn postorder_handles_forest() {
+        let (ip, ix) = adj(4, &[(0, 1), (2, 3)]);
+        let parent = etree(&ip, &ix);
+        let post = postorder(&parent);
+        let mut sorted = post.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn symbolic_cost_flops_formula() {
+        let counts = vec![3, 0];
+        let c = symbolic_cost(&counts);
+        assert_eq!(c.flops, 3.0 * 6.0 / 2.0);
+        assert_eq!(c.fill, 2 + 3);
+        assert_eq!(c.max_col, 3);
+    }
+}

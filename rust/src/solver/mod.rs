@@ -1,0 +1,317 @@
+//! Sparse direct solver — the MUMPS substitute.
+//!
+//! Pipeline mirrors a direct solver's phases: **analyze** (elimination
+//! tree + column counts on the permuted pattern, [`etree`]), **factorize**
+//! (up-looking numeric LDLᵀ, [`numeric`]), **solve** (triangular solves).
+//! The solve *time* under a given reordering is the label signal the
+//! whole paper is built on; this module measures it.
+//!
+//! ## Flop-cap guard
+//! A bad ordering on a mid-size matrix can demand 10¹⁰+ multiply-adds
+//! (the paper's Table 1 shows 1000× spreads). To keep the 936-matrix ×
+//! 7-algorithm sweep tractable, factorizations whose *symbolic* flop
+//! count exceeds [`SolverConfig::flop_cap`] are not run numerically;
+//! their time is estimated as `flops / rate` with `rate` calibrated once
+//! on this machine by timing a real mid-size factorization. Reports are
+//! flagged [`SolveReport::estimated`] and the estimate is continuous with
+//! the measured regime (same rate model). DESIGN.md §Substitutions
+//! documents this.
+
+pub mod etree;
+pub mod numeric;
+
+use std::sync::OnceLock;
+
+use crate::reorder::Permutation;
+use crate::sparse::pattern::symmetrize_spd_like;
+use crate::sparse::{CooMatrix, CsrMatrix};
+use crate::util::rng::Rng;
+use crate::util::Timer;
+
+pub use numeric::{analyze, factorize, FactorError, LdlFactor, Symbolic};
+
+/// Solver configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SolverConfig {
+    /// Diagonal dominance factor applied by [`prepare`].
+    pub diag_boost: f64,
+    /// Factorizations above this many multiply-adds are estimated, not run.
+    pub flop_cap: f64,
+    /// Seed for the right-hand side.
+    pub seed: u64,
+    /// Measure factor+solve this many times and keep the fastest run —
+    /// the standard noise-robust estimator for sub-millisecond phases
+    /// (labels are decided by these times, so scheduler noise matters).
+    pub measure_repeats: usize,
+}
+
+impl Default for SolverConfig {
+    fn default() -> Self {
+        SolverConfig {
+            diag_boost: 2.0,
+            flop_cap: 2.0e9,
+            seed: 0x5eed,
+            measure_repeats: 1,
+        }
+    }
+}
+
+/// Timing + cost report for one (matrix, ordering) solve.
+#[derive(Clone, Copy, Debug)]
+pub struct SolveReport {
+    /// Time to compute the ordering itself (filled by the caller).
+    pub reorder_s: f64,
+    pub analyze_s: f64,
+    pub factor_s: f64,
+    pub solve_s: f64,
+    /// nnz(L) including diagonal.
+    pub fill: u64,
+    /// Symbolic multiply-add count.
+    pub flops: f64,
+    /// Largest factor column (frontal-size proxy).
+    pub max_col: usize,
+    /// True if factor+solve times are rate-model estimates (flop cap hit).
+    pub estimated: bool,
+    /// ‖Ax − b‖₂ of the actual solve (0 when estimated).
+    pub residual: f64,
+}
+
+impl SolveReport {
+    /// The paper's "solution time": analyze + factorize + solve.
+    ///
+    /// Computing the *ordering itself* is excluded, exactly as in the
+    /// paper's setup: RCM and ND orderings are precomputed by external
+    /// tools (SciPy/METIS) and "specified as input" to MUMPS (§3.2), so
+    /// the recorded MUMPS solve time never includes ordering work. We
+    /// apply the same accounting uniformly to all four algorithms (the
+    /// ordering cost is still recorded in [`SolveReport::reorder_s`]).
+    /// This also keeps labels meaningful on our scaled-down matrices,
+    /// where ordering cost would otherwise swamp the factorization cost
+    /// the paper's full-size matrices are dominated by.
+    pub fn total_s(&self) -> f64 {
+        self.analyze_s + self.factor_s + self.solve_s
+    }
+
+    /// End-to-end time including computing the ordering.
+    pub fn with_reorder_s(&self) -> f64 {
+        self.reorder_s + self.total_s()
+    }
+}
+
+/// Make an arbitrary square matrix solvable by the LDLᵀ kernel:
+/// symmetrize and force strict diagonal dominance (see
+/// `sparse::pattern::symmetrize_spd_like`).
+pub fn prepare(a: &CsrMatrix, cfg: &SolverConfig) -> CsrMatrix {
+    symmetrize_spd_like(a, cfg.diag_boost)
+}
+
+/// Measured factorization rate (multiply-adds per second), calibrated
+/// once per process by factorizing a banded test matrix.
+pub fn calibrated_flop_rate() -> f64 {
+    static RATE: OnceLock<f64> = OnceLock::new();
+    *RATE.get_or_init(|| {
+        // band matrix: n=1200, half-bandwidth 40 -> ~2.9M flops, dense
+        // enough inner loops to reflect the numeric kernel's throughput.
+        let n = 1200;
+        let band = 40;
+        let mut coo = CooMatrix::new(n, n);
+        for i in 0..n {
+            coo.push(i, i, (2 * band + 2) as f64);
+            for d in 1..=band {
+                if i + d < n {
+                    coo.push_sym(i, i + d, -1.0);
+                }
+            }
+        }
+        let a = coo.to_csr();
+        let sym = numeric::analyze(&a);
+        // warm once, then time
+        let _ = numeric::factorize(&a, &sym);
+        let t = Timer::start();
+        let f = numeric::factorize(&a, &sym).expect("calibration factorize");
+        let secs = t.elapsed_s().max(1e-6);
+        (f.flops / secs).max(1e6)
+    })
+}
+
+/// Solve the prepared matrix under `perm`, measuring each phase.
+/// `a_spd` must already be [`prepare`]d (symmetric, dominant diagonal).
+pub fn solve_ordered(
+    a_spd: &CsrMatrix,
+    perm: &Permutation,
+    cfg: &SolverConfig,
+) -> Result<SolveReport, FactorError> {
+    let t_an = Timer::start();
+    let pa = perm.apply(a_spd);
+    let sym = numeric::analyze(&pa);
+    let analyze_s = t_an.elapsed_s();
+    let cost = sym.cost;
+
+    if cost.flops > cfg.flop_cap {
+        let rate = calibrated_flop_rate();
+        // solve streams L twice (fwd+bwd): ~4 ops per factor entry
+        let factor_s = cost.flops / rate;
+        let solve_s = 4.0 * cost.fill as f64 / rate;
+        return Ok(SolveReport {
+            reorder_s: 0.0,
+            analyze_s,
+            factor_s,
+            solve_s,
+            fill: cost.fill,
+            flops: cost.flops,
+            max_col: cost.max_col,
+            estimated: true,
+            residual: 0.0,
+        });
+    }
+
+    let t_f = Timer::start();
+    let mut f = numeric::factorize(&pa, &sym)?;
+    let mut factor_s = t_f.elapsed_s();
+
+    // random RHS, as the paper's preprocessing scripts generate
+    let n = pa.nrows;
+    let mut rng = Rng::new(cfg.seed);
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let t_s = Timer::start();
+    let mut x = f.solve(&b);
+    let mut solve_s = t_s.elapsed_s();
+
+    // extra timed repeats: keep the fastest measurement of each phase
+    for _ in 1..cfg.measure_repeats.max(1) {
+        let t_f = Timer::start();
+        f = numeric::factorize(&pa, &sym)?;
+        factor_s = factor_s.min(t_f.elapsed_s());
+        let t_s = Timer::start();
+        x = f.solve(&b);
+        solve_s = solve_s.min(t_s.elapsed_s());
+    }
+
+    let ax = pa.matvec(&x);
+    let residual = ax
+        .iter()
+        .zip(&b)
+        .map(|(axi, bi)| (axi - bi).powi(2))
+        .sum::<f64>()
+        .sqrt();
+
+    Ok(SolveReport {
+        reorder_s: 0.0,
+        analyze_s,
+        factor_s,
+        solve_s,
+        fill: f.fill(),
+        flops: f.flops,
+        max_col: cost.max_col,
+        estimated: false,
+        residual,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reorder::ReorderAlgorithm;
+
+    fn grid_matrix(nx: usize, ny: usize) -> CsrMatrix {
+        let idx = |x: usize, y: usize| y * nx + x;
+        let n = nx * ny;
+        let mut coo = CooMatrix::new(n, n);
+        for y in 0..ny {
+            for x in 0..nx {
+                let v = idx(x, y);
+                coo.push(v, v, 4.0);
+                if x + 1 < nx {
+                    coo.push_sym(v, idx(x + 1, y), -1.0);
+                }
+                if y + 1 < ny {
+                    coo.push_sym(v, idx(x, y + 1), -1.0);
+                }
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn solve_ordered_accurate_under_all_orderings() {
+        let cfg = SolverConfig::default();
+        let a = prepare(&grid_matrix(12, 12), &cfg);
+        for alg in [
+            ReorderAlgorithm::Natural,
+            ReorderAlgorithm::Rcm,
+            ReorderAlgorithm::Amd,
+            ReorderAlgorithm::Nd,
+            ReorderAlgorithm::Scotch,
+        ] {
+            let p = alg.compute(&a, 3);
+            let r = solve_ordered(&a, &p, &cfg).unwrap();
+            assert!(!r.estimated);
+            assert!(r.residual < 1e-8, "{alg}: residual {}", r.residual);
+            assert!(r.fill >= 144);
+            assert!(r.total_s() > 0.0);
+        }
+    }
+
+    #[test]
+    fn fill_depends_on_ordering() {
+        let cfg = SolverConfig::default();
+        let a = prepare(&grid_matrix(16, 16), &cfg);
+        let nat = solve_ordered(&a, &Permutation::identity(256), &cfg)
+            .unwrap()
+            .fill;
+        let amd = solve_ordered(
+            &a,
+            &ReorderAlgorithm::Amd.compute(&a, 1),
+            &cfg,
+        )
+        .unwrap()
+        .fill;
+        assert!(amd < nat, "amd fill {amd} >= natural {nat}");
+    }
+
+    #[test]
+    fn flop_cap_switches_to_estimate() {
+        let cfg = SolverConfig {
+            flop_cap: 10.0, // absurdly low: force the estimate path
+            ..Default::default()
+        };
+        let a = prepare(&grid_matrix(10, 10), &cfg);
+        let r = solve_ordered(&a, &Permutation::identity(100), &cfg).unwrap();
+        assert!(r.estimated);
+        assert!(r.factor_s > 0.0);
+        assert_eq!(r.residual, 0.0);
+    }
+
+    #[test]
+    fn estimate_continuous_with_measurement() {
+        // measured and estimated times for the same matrix should agree
+        // within an order of magnitude (the rate model is coarse but sane)
+        let a = {
+            let cfg = SolverConfig::default();
+            prepare(&grid_matrix(30, 30), &cfg)
+        };
+        let p = ReorderAlgorithm::Amd.compute(&a, 1);
+        let measured = solve_ordered(&a, &p, &SolverConfig::default()).unwrap();
+        let estimated = solve_ordered(
+            &a,
+            &p,
+            &SolverConfig {
+                flop_cap: 1.0,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(estimated.estimated && !measured.estimated);
+        let ratio = estimated.factor_s / measured.factor_s.max(1e-9);
+        assert!(
+            (0.02..50.0).contains(&ratio),
+            "estimate off by {ratio}x"
+        );
+    }
+
+    #[test]
+    fn calibration_rate_is_plausible() {
+        let r = calibrated_flop_rate();
+        assert!(r > 1e6 && r < 1e12, "rate {r}");
+    }
+}

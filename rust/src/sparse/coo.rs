@@ -1,0 +1,170 @@
+//! COO (triplet) format — assembly and interchange.
+
+use super::csr::CsrMatrix;
+
+/// Coordinate-format sparse matrix. Duplicate entries are summed on
+/// conversion to CSR (the MatrixMarket convention).
+#[derive(Clone, Debug)]
+pub struct CooMatrix {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub rows: Vec<usize>,
+    pub cols: Vec<usize>,
+    pub vals: Vec<f64>,
+}
+
+impl CooMatrix {
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        CooMatrix {
+            nrows,
+            ncols,
+            rows: Vec::new(),
+            cols: Vec::new(),
+            vals: Vec::new(),
+        }
+    }
+
+    pub fn with_capacity(nrows: usize, ncols: usize, cap: usize) -> Self {
+        CooMatrix {
+            nrows,
+            ncols,
+            rows: Vec::with_capacity(cap),
+            cols: Vec::with_capacity(cap),
+            vals: Vec::with_capacity(cap),
+        }
+    }
+
+    /// Append one entry. Panics on out-of-range indices.
+    pub fn push(&mut self, i: usize, j: usize, v: f64) {
+        assert!(i < self.nrows && j < self.ncols, "entry ({i},{j}) out of range");
+        self.rows.push(i);
+        self.cols.push(j);
+        self.vals.push(v);
+    }
+
+    /// Append both (i,j,v) and (j,i,v) (skips the mirror when i == j).
+    pub fn push_sym(&mut self, i: usize, j: usize, v: f64) {
+        self.push(i, j, v);
+        if i != j {
+            self.push(j, i, v);
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Convert to CSR, summing duplicates. O(nnz + n).
+    pub fn to_csr(&self) -> CsrMatrix {
+        let n = self.nrows;
+        // counting sort by row
+        let mut counts = vec![0usize; n + 1];
+        for &r in &self.rows {
+            counts[r + 1] += 1;
+        }
+        for i in 0..n {
+            counts[i + 1] += counts[i];
+        }
+        let mut order: Vec<usize> = vec![0; self.nnz()];
+        {
+            let mut next = counts.clone();
+            for (k, &r) in self.rows.iter().enumerate() {
+                order[next[r]] = k;
+                next[r] += 1;
+            }
+        }
+        // per-row sort by column, merge duplicates
+        let mut indptr = Vec::with_capacity(n + 1);
+        let mut indices = Vec::with_capacity(self.nnz());
+        let mut data = Vec::with_capacity(self.nnz());
+        indptr.push(0);
+        let mut rowbuf: Vec<(usize, f64)> = Vec::new();
+        for r in 0..n {
+            rowbuf.clear();
+            for &k in &order[counts[r]..counts[r + 1]] {
+                rowbuf.push((self.cols[k], self.vals[k]));
+            }
+            rowbuf.sort_unstable_by_key(|&(c, _)| c);
+            let mut last: Option<usize> = None;
+            for &(c, v) in rowbuf.iter() {
+                if last == Some(c) {
+                    *data.last_mut().unwrap() += v;
+                } else {
+                    indices.push(c);
+                    data.push(v);
+                    last = Some(c);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        CsrMatrix {
+            nrows: self.nrows,
+            ncols: self.ncols,
+            indptr,
+            indices,
+            data,
+        }
+    }
+
+    /// Identity matrix in COO form.
+    pub fn identity(n: usize) -> Self {
+        let mut m = CooMatrix::with_capacity(n, n, n);
+        for i in 0..n {
+            m.push(i, i, 1.0);
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn to_csr_sorts_and_sums_duplicates() {
+        let mut m = CooMatrix::new(3, 3);
+        m.push(0, 2, 1.0);
+        m.push(0, 0, 2.0);
+        m.push(0, 2, 3.0); // duplicate of (0,2)
+        m.push(2, 1, 4.0);
+        let csr = m.to_csr();
+        assert_eq!(csr.indptr, vec![0, 2, 2, 3]);
+        assert_eq!(csr.indices, vec![0, 2, 1]);
+        assert_eq!(csr.data, vec![2.0, 4.0, 4.0]);
+    }
+
+    #[test]
+    fn push_sym_mirrors_offdiag_only() {
+        let mut m = CooMatrix::new(3, 3);
+        m.push_sym(0, 1, 5.0);
+        m.push_sym(2, 2, 7.0);
+        assert_eq!(m.nnz(), 3);
+        let csr = m.to_csr();
+        assert_eq!(csr.get(0, 1), 5.0);
+        assert_eq!(csr.get(1, 0), 5.0);
+        assert_eq!(csr.get(2, 2), 7.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn push_out_of_range_panics() {
+        let mut m = CooMatrix::new(2, 2);
+        m.push(2, 0, 1.0);
+    }
+
+    #[test]
+    fn identity_roundtrip() {
+        let csr = CooMatrix::identity(4).to_csr();
+        assert_eq!(csr.nnz(), 4);
+        for i in 0..4 {
+            assert_eq!(csr.get(i, i), 1.0);
+        }
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let csr = CooMatrix::new(3, 3).to_csr();
+        assert_eq!(csr.nnz(), 0);
+        assert_eq!(csr.indptr, vec![0, 0, 0, 0]);
+    }
+}

@@ -1,0 +1,354 @@
+//! CSR format — the compute format for reordering, features, and solving.
+
+/// Compressed sparse row matrix over `f64`.
+///
+/// Invariants (checked by [`CsrMatrix::validate`]):
+/// * `indptr.len() == nrows + 1`, monotonically non-decreasing;
+/// * column indices within each row are strictly increasing and `< ncols`;
+/// * `indices.len() == data.len() == indptr[nrows]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<usize>,
+    pub data: Vec<f64>,
+}
+
+impl CsrMatrix {
+    /// Build from raw parts, validating invariants.
+    pub fn new(
+        nrows: usize,
+        ncols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<usize>,
+        data: Vec<f64>,
+    ) -> Self {
+        let m = CsrMatrix {
+            nrows,
+            ncols,
+            indptr,
+            indices,
+            data,
+        };
+        m.validate().expect("invalid CSR");
+        m
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.indptr.len() != self.nrows + 1 {
+            return Err(format!(
+                "indptr len {} != nrows+1 {}",
+                self.indptr.len(),
+                self.nrows + 1
+            ));
+        }
+        if self.indptr[0] != 0 {
+            return Err("indptr[0] != 0".into());
+        }
+        if *self.indptr.last().unwrap() != self.indices.len() {
+            return Err("indptr[-1] != nnz".into());
+        }
+        if self.indices.len() != self.data.len() {
+            return Err("indices/data length mismatch".into());
+        }
+        for r in 0..self.nrows {
+            if self.indptr[r] > self.indptr[r + 1] {
+                return Err(format!("indptr decreases at row {r}"));
+            }
+            let row = &self.indices[self.indptr[r]..self.indptr[r + 1]];
+            for w in row.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("row {r} not strictly increasing"));
+                }
+            }
+            if let Some(&last) = row.last() {
+                if last >= self.ncols {
+                    return Err(format!("row {r} col {last} >= ncols"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Column indices of row `r`.
+    pub fn row_indices(&self, r: usize) -> &[usize] {
+        &self.indices[self.indptr[r]..self.indptr[r + 1]]
+    }
+
+    /// Values of row `r`.
+    pub fn row_data(&self, r: usize) -> &[f64] {
+        &self.data[self.indptr[r]..self.indptr[r + 1]]
+    }
+
+    /// Number of stored entries in row `r`.
+    pub fn row_nnz(&self, r: usize) -> usize {
+        self.indptr[r + 1] - self.indptr[r]
+    }
+
+    /// Value at `(i, j)` (0 if not stored). Binary search per row.
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let row = self.row_indices(i);
+        match row.binary_search(&j) {
+            Ok(pos) => self.data[self.indptr[i] + pos],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// y = A * x (dense vector).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.ncols);
+        let mut y = vec![0.0; self.nrows];
+        for r in 0..self.nrows {
+            let mut acc = 0.0;
+            for (k, &c) in self.row_indices(r).iter().enumerate() {
+                acc += self.data[self.indptr[r] + k] * x[c];
+            }
+            y[r] = acc;
+        }
+        y
+    }
+
+    /// Transpose. O(nnz + n).
+    pub fn transpose(&self) -> CsrMatrix {
+        let mut counts = vec![0usize; self.ncols + 1];
+        for &c in &self.indices {
+            counts[c + 1] += 1;
+        }
+        for i in 0..self.ncols {
+            counts[i + 1] += counts[i];
+        }
+        let indptr = counts.clone();
+        let mut indices = vec![0usize; self.nnz()];
+        let mut data = vec![0.0; self.nnz()];
+        let mut next = counts;
+        for r in 0..self.nrows {
+            for (k, &c) in self.row_indices(r).iter().enumerate() {
+                let pos = next[c];
+                indices[pos] = r;
+                data[pos] = self.data[self.indptr[r] + k];
+                next[c] += 1;
+            }
+        }
+        CsrMatrix {
+            nrows: self.ncols,
+            ncols: self.nrows,
+            indptr,
+            indices,
+            data,
+        }
+    }
+
+    /// Structural symmetry check (pattern only).
+    pub fn is_pattern_symmetric(&self) -> bool {
+        if self.nrows != self.ncols {
+            return false;
+        }
+        let t = self.transpose();
+        self.indptr == t.indptr && self.indices == t.indices
+    }
+
+    /// True if every diagonal entry is stored.
+    pub fn has_full_diagonal(&self) -> bool {
+        (0..self.nrows.min(self.ncols))
+            .all(|i| self.row_indices(i).binary_search(&i).is_ok())
+    }
+
+    /// Symmetric permutation `B = P A Pᵀ`: `B[p[i], p[j]] = A[i, j]`,
+    /// where `perm[i]` is the new index of old row/col `i`.
+    pub fn permute_sym(&self, perm: &[usize]) -> CsrMatrix {
+        assert_eq!(self.nrows, self.ncols);
+        assert_eq!(perm.len(), self.nrows);
+        let n = self.nrows;
+        let mut counts = vec![0usize; n + 1];
+        for r in 0..n {
+            counts[perm[r] + 1] += self.row_nnz(r);
+        }
+        for i in 0..n {
+            counts[i + 1] += counts[i];
+        }
+        let indptr = counts.clone();
+        let mut entries: Vec<(usize, f64)> = vec![(0, 0.0); self.nnz()];
+        let mut next = counts;
+        for r in 0..n {
+            let nr = perm[r];
+            for (k, &c) in self.row_indices(r).iter().enumerate() {
+                let pos = next[nr];
+                entries[pos] = (perm[c], self.data[self.indptr[r] + k]);
+                next[nr] += 1;
+            }
+        }
+        // sort each new row by column
+        let mut indices = vec![0usize; self.nnz()];
+        let mut data = vec![0.0; self.nnz()];
+        for r in 0..n {
+            let seg = &mut entries[indptr[r]..indptr[r + 1]];
+            seg.sort_unstable_by_key(|&(c, _)| c);
+            for (k, &(c, v)) in seg.iter().enumerate() {
+                indices[indptr[r] + k] = c;
+                data[indptr[r] + k] = v;
+            }
+        }
+        CsrMatrix {
+            nrows: n,
+            ncols: n,
+            indptr,
+            indices,
+            data,
+        }
+    }
+
+    /// Dense representation (tests / tiny matrices only).
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        let mut d = vec![vec![0.0; self.ncols]; self.nrows];
+        for r in 0..self.nrows {
+            for (k, &c) in self.row_indices(r).iter().enumerate() {
+                d[r][c] = self.data[self.indptr[r] + k];
+            }
+        }
+        d
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CooMatrix;
+
+    fn sample() -> CsrMatrix {
+        // [[1, 0, 2],
+        //  [0, 3, 0],
+        //  [4, 0, 5]]
+        let mut m = CooMatrix::new(3, 3);
+        m.push(0, 0, 1.0);
+        m.push(0, 2, 2.0);
+        m.push(1, 1, 3.0);
+        m.push(2, 0, 4.0);
+        m.push(2, 2, 5.0);
+        m.to_csr()
+    }
+
+    #[test]
+    fn validate_accepts_sample() {
+        assert!(sample().validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_unsorted_row() {
+        let m = CsrMatrix {
+            nrows: 1,
+            ncols: 3,
+            indptr: vec![0, 2],
+            indices: vec![2, 0],
+            data: vec![1.0, 2.0],
+        };
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_indptr() {
+        let m = CsrMatrix {
+            nrows: 2,
+            ncols: 2,
+            indptr: vec![0, 2, 1],
+            indices: vec![0, 1],
+            data: vec![1.0, 1.0],
+        };
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let m = sample();
+        let y = m.matvec(&[1.0, 2.0, 3.0]);
+        assert_eq!(y, vec![7.0, 6.0, 19.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = sample();
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn transpose_moves_entries() {
+        let t = sample().transpose();
+        assert_eq!(t.get(0, 2), 4.0);
+        assert_eq!(t.get(2, 0), 2.0);
+    }
+
+    #[test]
+    fn pattern_symmetry() {
+        // sample stores (0,2) and (2,0): pattern-symmetric
+        assert!(sample().is_pattern_symmetric());
+        // drop one direction -> asymmetric
+        let mut asym = CooMatrix::new(2, 2);
+        asym.push(0, 1, 1.0);
+        asym.push(0, 0, 1.0);
+        assert!(!asym.to_csr().is_pattern_symmetric());
+        let mut m = CooMatrix::new(2, 2);
+        m.push_sym(0, 1, 5.0);
+        m.push(0, 0, 1.0);
+        m.push(1, 1, 1.0);
+        assert!(m.to_csr().is_pattern_symmetric());
+    }
+
+    #[test]
+    fn permute_sym_identity_is_noop() {
+        let m = sample();
+        assert_eq!(m.permute_sym(&[0, 1, 2]), m);
+    }
+
+    #[test]
+    fn permute_sym_reverses() {
+        let m = sample();
+        let p = m.permute_sym(&[2, 1, 0]);
+        // B[p[i],p[j]] = A[i,j]; p = reverse
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(p.get(2 - i, 2 - j), m.get(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn permute_preserves_matvec_semantics() {
+        // (P A Pt)(P x) = P (A x)
+        let m = sample();
+        let perm = [1usize, 2, 0];
+        let pm = m.permute_sym(&perm);
+        let x = [0.5, -1.0, 2.0];
+        let mut px = [0.0; 3];
+        for i in 0..3 {
+            px[perm[i]] = x[i];
+        }
+        let y = m.matvec(&x);
+        let py = pm.matvec(&px);
+        for i in 0..3 {
+            assert!((py[perm[i]] - y[i]).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn full_diagonal_detection() {
+        let m = sample();
+        assert!(m.has_full_diagonal());
+        let mut c = CooMatrix::new(2, 2);
+        c.push(0, 1, 1.0);
+        assert!(!c.to_csr().has_full_diagonal());
+    }
+
+    #[test]
+    fn get_missing_is_zero() {
+        assert_eq!(sample().get(0, 1), 0.0);
+    }
+}

@@ -1,0 +1,198 @@
+//! MatrixMarket (.mtx) reader/writer.
+//!
+//! The Florida collection distributes matrices in this format; our
+//! synthetic collection round-trips through it so examples can operate on
+//! files exactly as the paper's Python scripts did. Supports
+//! `matrix coordinate real|integer|pattern general|symmetric` (complex is
+//! rejected — the paper filters complex matrices out too).
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{CooMatrix, CsrMatrix};
+
+/// Parse MatrixMarket text into COO form.
+pub fn parse(text: &str) -> Result<CooMatrix> {
+    let mut lines = text.lines();
+    let header = lines.next().context("empty file")?;
+    let h: Vec<&str> = header.split_whitespace().collect();
+    if h.len() < 5 || !h[0].starts_with("%%MatrixMarket") {
+        bail!("bad MatrixMarket header: {header}");
+    }
+    let (object, format, field, symmetry) = (h[1], h[2], h[3], h[4]);
+    if !object.eq_ignore_ascii_case("matrix") {
+        bail!("unsupported object {object}");
+    }
+    if !format.eq_ignore_ascii_case("coordinate") {
+        bail!("only coordinate format supported, got {format}");
+    }
+    let pattern = field.eq_ignore_ascii_case("pattern");
+    if field.eq_ignore_ascii_case("complex") {
+        bail!("complex matrices are filtered out (paper §3.2)");
+    }
+    if !(pattern
+        || field.eq_ignore_ascii_case("real")
+        || field.eq_ignore_ascii_case("integer"))
+    {
+        bail!("unsupported field {field}");
+    }
+    let symmetric = symmetry.eq_ignore_ascii_case("symmetric");
+    if !(symmetric || symmetry.eq_ignore_ascii_case("general")) {
+        bail!("unsupported symmetry {symmetry}");
+    }
+
+    // skip comments, read size line
+    let mut size_line = None;
+    for line in lines.by_ref() {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        size_line = Some(t.to_string());
+        break;
+    }
+    let size_line = size_line.context("missing size line")?;
+    let dims: Vec<usize> = size_line
+        .split_whitespace()
+        .map(|t| t.parse::<usize>().context("bad size line"))
+        .collect::<Result<_>>()?;
+    if dims.len() != 3 {
+        bail!("size line must have 3 fields: {size_line}");
+    }
+    let (nrows, ncols, nnz) = (dims[0], dims[1], dims[2]);
+    let mut coo = CooMatrix::with_capacity(nrows, ncols, nnz * 2);
+    let mut seen = 0usize;
+    for line in lines {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let i: usize = it.next().context("bad entry")?.parse()?;
+        let j: usize = it.next().context("bad entry")?.parse()?;
+        let v: f64 = if pattern {
+            1.0
+        } else {
+            it.next().context("missing value")?.parse()?
+        };
+        if i == 0 || j == 0 || i > nrows || j > ncols {
+            bail!("entry ({i},{j}) out of 1-based range");
+        }
+        let (i, j) = (i - 1, j - 1);
+        if symmetric {
+            coo.push_sym(i, j, v);
+        } else {
+            coo.push(i, j, v);
+        }
+        seen += 1;
+    }
+    if seen != nnz {
+        bail!("declared {nnz} entries, found {seen}");
+    }
+    Ok(coo)
+}
+
+pub fn read_file(path: &Path) -> Result<CsrMatrix> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut text = String::new();
+    let mut reader = std::io::BufReader::new(file);
+    // Stream line-by-line to avoid holding both text and COO for huge files
+    let mut buf = String::new();
+    while reader.read_line(&mut buf)? > 0 {
+        text.push_str(&buf);
+        buf.clear();
+    }
+    Ok(parse(&text)?.to_csr())
+}
+
+/// Write a CSR matrix in `coordinate real general` form.
+pub fn write_file(m: &CsrMatrix, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(w, "% written by smr (paper reproduction)")?;
+    writeln!(w, "{} {} {}", m.nrows, m.ncols, m.nnz())?;
+    for r in 0..m.nrows {
+        for (k, &c) in m.row_indices(r).iter().enumerate() {
+            writeln!(w, "{} {} {:.17e}", r + 1, c + 1, m.data[m.indptr[r] + k])?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_general_real() {
+        let text = "%%MatrixMarket matrix coordinate real general\n\
+                    % comment\n\
+                    3 3 2\n\
+                    1 1 1.5\n\
+                    3 2 -2.0\n";
+        let csr = parse(text).unwrap().to_csr();
+        assert_eq!(csr.nnz(), 2);
+        assert_eq!(csr.get(0, 0), 1.5);
+        assert_eq!(csr.get(2, 1), -2.0);
+    }
+
+    #[test]
+    fn parses_symmetric_mirrors() {
+        let text = "%%MatrixMarket matrix coordinate real symmetric\n\
+                    2 2 2\n\
+                    1 1 1.0\n\
+                    2 1 3.0\n";
+        let csr = parse(text).unwrap().to_csr();
+        assert_eq!(csr.get(0, 1), 3.0);
+        assert_eq!(csr.get(1, 0), 3.0);
+        assert_eq!(csr.nnz(), 3);
+    }
+
+    #[test]
+    fn parses_pattern_as_ones() {
+        let text = "%%MatrixMarket matrix coordinate pattern general\n\
+                    2 2 1\n\
+                    1 2\n";
+        let csr = parse(text).unwrap().to_csr();
+        assert_eq!(csr.get(0, 1), 1.0);
+    }
+
+    #[test]
+    fn rejects_complex() {
+        let text = "%%MatrixMarket matrix coordinate complex general\n1 1 1\n1 1 1 0\n";
+        assert!(parse(text).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_count() {
+        let text = "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n";
+        assert!(parse(text).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        let text = "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n";
+        assert!(parse(text).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut coo = CooMatrix::new(4, 4);
+        coo.push(0, 0, 1.25);
+        coo.push(1, 3, -2.5);
+        coo.push(3, 3, 1e-9);
+        let m = coo.to_csr();
+        let dir = std::env::temp_dir().join("smr_mm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.mtx");
+        write_file(&m, &path).unwrap();
+        let back = read_file(&path).unwrap();
+        assert_eq!(back, m);
+        std::fs::remove_file(&path).ok();
+    }
+}

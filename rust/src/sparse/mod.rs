@@ -1,0 +1,15 @@
+//! Sparse-matrix substrate: storage formats, conversions, pattern ops, I/O.
+//!
+//! The paper's pipeline consumes Florida-collection matrices through
+//! MUMPS; ours consumes [`CsrMatrix`] values through the in-tree solver.
+//! COO is the assembly/interchange format (and what MatrixMarket maps to);
+//! CSR is the compute format used by reordering, feature extraction, and
+//! factorization.
+
+pub mod coo;
+pub mod csr;
+pub mod matrix_market;
+pub mod pattern;
+
+pub use coo::CooMatrix;
+pub use csr::CsrMatrix;

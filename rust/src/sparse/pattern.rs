@@ -1,0 +1,254 @@
+//! Structural (pattern) operations used by reordering and the solver.
+//!
+//! Reordering algorithms and symbolic factorization work on the pattern of
+//! `A + Aᵀ` (MUMPS does the same for unsymmetric inputs): all algorithms
+//! here operate on structure only, values are ignored.
+
+use super::CsrMatrix;
+
+/// Pattern of `A + Aᵀ` without the diagonal, as CSR-like adjacency
+/// (indptr + indices). This is the adjacency-graph form every reordering
+/// algorithm consumes.
+pub fn symmetrized_pattern(a: &CsrMatrix) -> (Vec<usize>, Vec<usize>) {
+    assert_eq!(a.nrows, a.ncols, "pattern ops need a square matrix");
+    let n = a.nrows;
+    // count degrees (both directions), excluding the diagonal
+    let mut counts = vec![0usize; n + 1];
+    for r in 0..n {
+        for &c in a.row_indices(r) {
+            if c != r {
+                counts[r + 1] += 1;
+                counts[c + 1] += 1;
+            }
+        }
+    }
+    for i in 0..n {
+        counts[i + 1] += counts[i];
+    }
+    let mut indices = vec![0usize; counts[n]];
+    let mut next = counts.clone();
+    for r in 0..n {
+        for &c in a.row_indices(r) {
+            if c != r {
+                indices[next[r]] = c;
+                next[r] += 1;
+                indices[next[c]] = r;
+                next[c] += 1;
+            }
+        }
+    }
+    // sort + dedup each row
+    let mut indptr = vec![0usize; n + 1];
+    let mut out = Vec::with_capacity(indices.len());
+    for r in 0..n {
+        let seg = &mut indices[counts[r]..counts[r + 1]];
+        seg.sort_unstable();
+        let mut last = usize::MAX;
+        for &c in seg.iter() {
+            if c != last {
+                out.push(c);
+                last = c;
+            }
+        }
+        indptr[r + 1] = out.len();
+    }
+    (indptr, out)
+}
+
+/// Make a structurally-symmetric matrix with a full positive diagonal:
+/// `B = (A + Aᵀ)/2` pattern-wise, with the diagonal forced to
+/// `diag_boost * (1 + max row abs-sum)` so the result is strictly
+/// diagonally dominant — the solver factorizes without pivoting, exactly
+/// the "random RHS, well-posed solve" setup the paper's driver scripts
+/// create. Values off-diagonal are `(a_ij + a_ji) / 2`.
+pub fn symmetrize_spd_like(a: &CsrMatrix, diag_boost: f64) -> CsrMatrix {
+    assert_eq!(a.nrows, a.ncols);
+    let n = a.nrows;
+    let t = a.transpose();
+    let mut indptr = vec![0usize; n + 1];
+    let mut indices = Vec::with_capacity(a.nnz() * 2 + n);
+    let mut data = Vec::with_capacity(a.nnz() * 2 + n);
+    let mut offdiag_sums = vec![0.0f64; n];
+
+    for r in 0..n {
+        let (ra, rb) = (a.row_indices(r), t.row_indices(r));
+        let (da, db) = (a.row_data(r), t.row_data(r));
+        let (mut i, mut j) = (0usize, 0usize);
+        let push = |c: usize, v: f64, indices: &mut Vec<usize>, data: &mut Vec<f64>| {
+            indices.push(c);
+            data.push(v);
+        };
+        let mut diag_seen = false;
+        let mut merge_push = |c: usize, v: f64,
+                              indices: &mut Vec<usize>, data: &mut Vec<f64>| {
+            if c == r {
+                diag_seen = true;
+            }
+            push(c, v, indices, data);
+        };
+        while i < ra.len() || j < rb.len() {
+            let ca = ra.get(i).copied().unwrap_or(usize::MAX);
+            let cb = rb.get(j).copied().unwrap_or(usize::MAX);
+            if ca == cb {
+                merge_push(ca, (da[i] + db[j]) / 2.0, &mut indices, &mut data);
+                i += 1;
+                j += 1;
+            } else if ca < cb {
+                merge_push(ca, da[i] / 2.0, &mut indices, &mut data);
+                i += 1;
+            } else {
+                merge_push(cb, db[j] / 2.0, &mut indices, &mut data);
+                j += 1;
+            }
+        }
+        if !diag_seen {
+            // insert a structural diagonal (value fixed below)
+            let row_start = indptr[r];
+            let pos = indices[row_start..]
+                .binary_search(&r)
+                .unwrap_err()
+                + row_start;
+            indices.insert(pos, r);
+            data.insert(pos, 0.0);
+        }
+        indptr[r + 1] = indices.len();
+        // accumulate |offdiag| sum for dominance
+        for k in indptr[r]..indptr[r + 1] {
+            if indices[k] != r {
+                offdiag_sums[r] += data[k].abs();
+            }
+        }
+    }
+    // set dominant diagonal
+    let mut m = CsrMatrix {
+        nrows: n,
+        ncols: n,
+        indptr,
+        indices,
+        data,
+    };
+    for r in 0..n {
+        let start = m.indptr[r];
+        let pos = m.row_indices(r).binary_search(&r).expect("diag present") + start;
+        m.data[pos] = diag_boost * (1.0 + offdiag_sums[r]);
+    }
+    m
+}
+
+/// Bandwidth: max |i - j| over stored entries (0 for diagonal/empty).
+pub fn bandwidth(a: &CsrMatrix) -> usize {
+    let mut bw = 0usize;
+    for r in 0..a.nrows {
+        for &c in a.row_indices(r) {
+            bw = bw.max(r.abs_diff(c));
+        }
+    }
+    bw
+}
+
+/// Profile (envelope): Σᵢ (i - min{j : a_ij ≠ 0}) over non-empty rows with
+/// a stored entry at or left of the diagonal — Eq. (3) of the paper.
+pub fn profile(a: &CsrMatrix) -> u64 {
+    let mut p = 0u64;
+    for r in 0..a.nrows {
+        if let Some(&first) = a.row_indices(r).first() {
+            if first <= r {
+                p += (r - first) as u64;
+            }
+        }
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CooMatrix;
+
+    fn asym() -> CsrMatrix {
+        // [[1, 2, 0],
+        //  [0, 0, 3],
+        //  [0, 0, 4]]
+        let mut m = CooMatrix::new(3, 3);
+        m.push(0, 0, 1.0);
+        m.push(0, 1, 2.0);
+        m.push(1, 2, 3.0);
+        m.push(2, 2, 4.0);
+        m.to_csr()
+    }
+
+    #[test]
+    fn symmetrized_pattern_is_symmetric_no_diag() {
+        let (indptr, indices) = symmetrized_pattern(&asym());
+        // adjacency: 0-1, 1-2
+        assert_eq!(indptr, vec![0, 1, 3, 4]);
+        assert_eq!(indices, vec![1, 0, 2, 1]);
+    }
+
+    #[test]
+    fn symmetrized_pattern_dedups() {
+        let mut m = CooMatrix::new(2, 2);
+        m.push(0, 1, 1.0);
+        m.push(1, 0, 2.0); // both directions present
+        let (indptr, indices) = symmetrized_pattern(&m.to_csr());
+        assert_eq!(indptr, vec![0, 1, 2]);
+        assert_eq!(indices, vec![1, 0]);
+    }
+
+    #[test]
+    fn spd_like_is_symmetric_and_dominant() {
+        let s = symmetrize_spd_like(&asym(), 2.0);
+        assert!(s.is_pattern_symmetric());
+        assert!(s.has_full_diagonal());
+        for r in 0..s.nrows {
+            let diag = s.get(r, r);
+            let off: f64 = s
+                .row_indices(r)
+                .iter()
+                .enumerate()
+                .filter(|(_, &c)| c != r)
+                .map(|(k, _)| s.row_data(r)[k].abs())
+                .sum();
+            assert!(diag > off, "row {r}: diag {diag} <= off {off}");
+        }
+        // numeric symmetry too
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!((s.get(i, j) - s.get(j, i)).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn bandwidth_and_profile() {
+        // [[x, 0, 0],
+        //  [x, x, 0],
+        //  [0, 0, x]]
+        let mut m = CooMatrix::new(3, 3);
+        m.push(0, 0, 1.0);
+        m.push(1, 0, 1.0);
+        m.push(1, 1, 1.0);
+        m.push(2, 2, 1.0);
+        let csr = m.to_csr();
+        assert_eq!(bandwidth(&csr), 1);
+        assert_eq!(profile(&csr), 1);
+    }
+
+    #[test]
+    fn profile_matches_paper_formula() {
+        // row i with leftmost nonzero at column 0 contributes i
+        let mut m = CooMatrix::new(4, 4);
+        for i in 0..4 {
+            m.push(i, 0, 1.0);
+            m.push(i, i, 1.0);
+        }
+        assert_eq!(profile(&m.to_csr()), 0 + 1 + 2 + 3);
+    }
+
+    #[test]
+    fn bandwidth_of_diagonal_is_zero() {
+        let m = CooMatrix::identity(5).to_csr();
+        assert_eq!(bandwidth(&m), 0);
+        assert_eq!(profile(&m), 0);
+    }
+}

@@ -1,0 +1,156 @@
+//! Micro-benchmark harness used by every `rust/benches/bench_*.rs`.
+//!
+//! criterion is unavailable offline, so this provides the subset we need:
+//! warmup, timed iterations with a target measurement time, and
+//! mean/p50/p99 reporting — plus grouped "paper table" output where a
+//! bench's job is to regenerate a table's rows rather than time a
+//! nanosecond-scale closure. Invoked through `cargo bench` (benches are
+//! `harness = false` binaries).
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use super::stats;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub min_s: f64,
+}
+
+impl Measurement {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>10} iters   mean {:>12}   p50 {:>12}   p99 {:>12}",
+            self.name,
+            self.iters,
+            fmt_time(self.mean_s),
+            fmt_time(self.p50_s),
+            fmt_time(self.p99_s),
+        );
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{:.3} s", s)
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark runner with a total time budget per case.
+pub struct Bencher {
+    warmup_s: f64,
+    measure_s: f64,
+    min_iters: usize,
+    max_iters: usize,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup_s: 0.3,
+            measure_s: 1.5,
+            min_iters: 5,
+            max_iters: 100_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick harness for expensive end-to-end cases (seconds per iter).
+    pub fn coarse() -> Self {
+        Bencher {
+            warmup_s: 0.0,
+            measure_s: 2.0,
+            min_iters: 2,
+            max_iters: 50,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, keeping its output from being optimized away.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Measurement {
+        // Warmup until the budget elapses.
+        let w = Instant::now();
+        while w.elapsed().as_secs_f64() < self.warmup_s {
+            black_box(f());
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while (samples.len() < self.min_iters
+            || start.elapsed().as_secs_f64() < self.measure_s)
+            && samples.len() < self.max_iters
+        {
+            let t = Instant::now();
+            black_box(f());
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean_s: stats::mean(&samples),
+            p50_s: stats::percentile(&samples, 50.0),
+            p99_s: stats::percentile(&samples, 99.0),
+            min_s: stats::min(&samples),
+        };
+        m.report();
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+/// Print a section header in the style criterion groups use.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut b = Bencher {
+            warmup_s: 0.0,
+            measure_s: 0.05,
+            min_iters: 3,
+            max_iters: 1000,
+            results: Vec::new(),
+        };
+        let m = b.bench("sum", || (0..1000u64).sum::<u64>()).clone();
+        assert!(m.iters >= 3);
+        assert!(m.mean_s > 0.0);
+        assert!(m.p99_s >= m.p50_s * 0.5);
+        assert!(m.min_s <= m.mean_s + 1e-9);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" us"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

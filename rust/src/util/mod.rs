@@ -1,0 +1,56 @@
+//! Cross-cutting utilities.
+//!
+//! The build environment is offline with only the `xla` crate's dependency
+//! closure available, so the usual ecosystem crates are reimplemented here
+//! at the size this project needs: a seedable PRNG ([`rng`]), a minimal
+//! JSON reader/writer ([`json`]), descriptive statistics ([`stats`]), a
+//! fixed-width table printer ([`table`]), a micro-benchmark harness used
+//! by `cargo bench` ([`bench`]), a scoped thread-pool `parallel_map`
+//! ([`pool`]), and randomized property-test helpers ([`prop`]).
+
+pub mod bench;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+use std::time::Instant;
+
+/// Wall-clock timer returning seconds as `f64`.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(Instant::now())
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Time a closure, returning `(result, seconds)`.
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    let s = t.elapsed_s();
+    (out, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_measures_positive_time() {
+        let (v, s) = timed(|| (0..1000).sum::<u64>());
+        assert_eq!(v, 499500);
+        assert!(s >= 0.0);
+    }
+}

@@ -1,0 +1,112 @@
+//! Scoped-thread `parallel_map` — the dataset sweep's worker pool.
+//!
+//! The dataset build runs `|collection| x |algorithms|` reorder+factorize
+//! jobs; this distributes them over `n_workers` OS threads with a shared
+//! atomic work index (self-balancing: expensive matrices don't stall a
+//! static partition). No external runtime: `std::thread::scope` only.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Map `f` over `items` in parallel, preserving order of results.
+///
+/// `f` must be `Sync` (called concurrently); results are written into
+/// per-slot storage so no locking is needed on the output path.
+pub fn parallel_map<T, R, F>(items: &[T], n_workers: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = n_workers.max(1).min(n);
+    if workers == 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    // Hand each worker a disjoint set of &mut slots via raw parts is
+    // unsafe; instead collect (index, result) pairs per worker and
+    // scatter afterwards — simpler and the results are small.
+    let mut collected: Vec<Vec<(usize, R)>> = Vec::new();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                let next = &next;
+                let f = &f;
+                scope.spawn(move || {
+                    let mut out = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        out.push((i, f(i, &items[i])));
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            collected.push(h.join().expect("worker panicked"));
+        }
+    });
+    for chunk in collected {
+        for (i, r) in chunk {
+            slots[i] = Some(r);
+        }
+    }
+    slots.into_iter().map(|s| s.expect("missing slot")).collect()
+}
+
+/// Default worker count: available parallelism minus one (leave a core
+/// for the coordinator thread), at least 1.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<usize> = (0..1000).collect();
+        let out = parallel_map(&items, 8, |_, &x| x * 2);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_matches_serial() {
+        let items = vec![1u64, 2, 3];
+        assert_eq!(parallel_map(&items, 1, |i, &x| x + i as u64), vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let items: Vec<u32> = vec![];
+        let out: Vec<u32> = parallel_map(&items, 4, |_, &x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn uneven_work_balances() {
+        // 100 jobs with wildly different costs must all complete.
+        let items: Vec<usize> = (0..100).collect();
+        let out = parallel_map(&items, 4, |_, &x| {
+            let spin = if x % 17 == 0 { 100_000 } else { 10 };
+            (0..spin).fold(x as u64, |a, b| a.wrapping_add(b))
+        });
+        assert_eq!(out.len(), 100);
+    }
+
+    #[test]
+    fn default_workers_positive() {
+        assert!(default_workers() >= 1);
+    }
+}

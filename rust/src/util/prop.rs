@@ -1,0 +1,146 @@
+//! Randomized property-test helpers (offline stand-in for proptest).
+//!
+//! `check` runs a property over `cases` deterministic random seeds and, on
+//! failure, reports the failing case index + seed so it can be replayed
+//! exactly. Generators for the domain (random sparse patterns,
+//! permutations) live here so unit and integration tests share them.
+
+use super::rng::Rng;
+
+/// Run `prop` for `cases` seeded cases; panic with the failing seed.
+pub fn check(name: &str, cases: usize, prop: impl Fn(&mut Rng)) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng)
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Random symmetric sparse pattern in upper-triangle edge-list form:
+/// `n` nodes, roughly `density * n * (n-1) / 2` edges, no self loops.
+pub fn random_sym_edges(rng: &mut Rng, n: usize, density: f64) -> Vec<(usize, usize)> {
+    let mut edges = Vec::new();
+    if n < 2 {
+        return edges;
+    }
+    let target = ((n * (n - 1) / 2) as f64 * density).ceil() as usize;
+    let mut seen = std::collections::HashSet::new();
+    let mut guard = 0;
+    while edges.len() < target && guard < target * 20 + 100 {
+        guard += 1;
+        let i = rng.below(n);
+        let j = rng.below(n);
+        if i == j {
+            continue;
+        }
+        let (a, b) = (i.min(j), i.max(j));
+        if seen.insert((a, b)) {
+            edges.push((a, b));
+        }
+    }
+    edges
+}
+
+/// Random connected symmetric pattern: a random spanning tree plus extra
+/// random edges — guarantees one connected component, which several
+/// reordering algorithms exercise differently from multi-component input.
+pub fn random_connected_edges(
+    rng: &mut Rng,
+    n: usize,
+    extra_density: f64,
+) -> Vec<(usize, usize)> {
+    let mut edges = Vec::new();
+    if n < 2 {
+        return edges;
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut seen = std::collections::HashSet::new();
+    for k in 1..n {
+        let parent = order[rng.below(k)];
+        let child = order[k];
+        let (a, b) = (parent.min(child), parent.max(child));
+        seen.insert((a, b));
+        edges.push((a, b));
+    }
+    for (a, b) in random_sym_edges(rng, n, extra_density) {
+        if seen.insert((a, b)) {
+            edges.push((a, b));
+        }
+    }
+    edges
+}
+
+/// Random permutation of `0..n`.
+pub fn random_perm(rng: &mut Rng, n: usize) -> Vec<usize> {
+    let mut p: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut p);
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivially() {
+        check("tautology", 20, |rng| {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn check_reports_failure() {
+        check("always-fails", 3, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn sym_edges_are_upper_and_unique() {
+        let mut rng = Rng::new(3);
+        let edges = random_sym_edges(&mut rng, 40, 0.2);
+        let mut set = std::collections::HashSet::new();
+        for &(a, b) in &edges {
+            assert!(a < b && b < 40);
+            assert!(set.insert((a, b)));
+        }
+        assert!(!edges.is_empty());
+    }
+
+    #[test]
+    fn connected_edges_span_graph() {
+        let mut rng = Rng::new(5);
+        let n = 50;
+        let edges = random_connected_edges(&mut rng, n, 0.05);
+        // union-find connectivity check
+        let mut parent: Vec<usize> = (0..n).collect();
+        fn find(p: &mut Vec<usize>, x: usize) -> usize {
+            if p[x] != x {
+                let r = find(p, p[x]);
+                p[x] = r;
+            }
+            p[x]
+        }
+        for &(a, b) in &edges {
+            let (ra, rb) = (find(&mut parent, a), find(&mut parent, b));
+            parent[ra] = rb;
+        }
+        let root = find(&mut parent, 0);
+        for v in 1..n {
+            assert_eq!(find(&mut parent, v), root);
+        }
+    }
+}

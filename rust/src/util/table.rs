@@ -1,0 +1,146 @@
+//! Fixed-width table printer for experiment output.
+//!
+//! Every `experiments::*` module renders its paper table through this so
+//! the CLI output lines up with the paper's layout, and the same rows are
+//! exported as CSV for plotting.
+
+/// A simple column-aligned table.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width mismatch: {cells:?}"
+        );
+        self.rows.push(cells);
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        let line = |out: &mut String| {
+            for wi in &w {
+                out.push('+');
+                out.push_str(&"-".repeat(wi + 2));
+            }
+            out.push_str("+\n");
+        };
+        line(&mut out);
+        out.push('|');
+        for (h, wi) in self.headers.iter().zip(&w) {
+            out.push_str(&format!(" {:<width$} |", h, width = wi));
+        }
+        out.push('\n');
+        line(&mut out);
+        for row in &self.rows {
+            out.push('|');
+            for (c, wi) in row.iter().zip(&w) {
+                out.push_str(&format!(" {:<width$} |", c, width = wi));
+            }
+            out.push('\n');
+        }
+        line(&mut out);
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// Render as CSV (RFC-4180-ish quoting).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') || c.contains('\n') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        out.push_str(
+            &self
+                .headers
+                .iter()
+                .map(|h| esc(h))
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+}
+
+/// Format seconds like the paper's tables (4 decimal places).
+pub fn fmt_s(x: f64) -> String {
+    format!("{:.4}", x)
+}
+
+/// Format a ratio/speedup with 2 decimals.
+pub fn fmt_x(x: f64) -> String {
+    format!("{:.2}", x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["Matrix", "AMD(s)"]);
+        t.row(vec!["asic_like_0".into(), "1.2294".into()]);
+        t.row(vec!["x".into(), "141.7080".into()]);
+        let r = t.render();
+        assert!(r.contains("| Matrix "));
+        assert!(r.lines().count() >= 6);
+        // all data lines same width
+        let widths: Vec<usize> = r.lines().map(|l| l.len()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn csv_quotes_commas() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x,y".into(), "q\"z".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"q\"\"z\""));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        let mut t = Table::new(&["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+}

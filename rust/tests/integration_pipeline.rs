@@ -1,0 +1,125 @@
+//! Integration: the full selection pipeline (dataset → train → predict →
+//! solve) and the paper's experiment harnesses in mini mode.
+
+use smr::collection::generate_mini_collection;
+use smr::coordinator::train_forest;
+use smr::dataset::{build_dataset, SweepConfig};
+use smr::experiments::{self, mini_context};
+use smr::ml::normalize::Method;
+use smr::reorder::ReorderAlgorithm;
+
+fn out_dir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("smr_it_{name}"));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn experiment_harnesses_run_and_have_paper_shape() {
+    let ctx = mini_context(&out_dir("harness")).unwrap();
+
+    // Table 1: spread across algorithms must be material (paper: up to
+    // 1000x; at our scale demand >= 2x on at least one matrix) and no
+    // single algorithm may win every row.
+    let t1 = experiments::table1::run(&ctx).unwrap();
+    assert_eq!(t1.len(), 9);
+    assert!(
+        t1.iter().any(|r| r.spread() > 2.0),
+        "no matrix shows a material spread"
+    );
+    let winners: std::collections::HashSet<_> =
+        t1.iter().map(|r| r.best().name()).collect();
+    assert!(winners.len() >= 2, "a single algorithm won everywhere");
+
+    // Fig 1: normalized rows have min exactly 1.0
+    let f1 = experiments::fig1::run(&ctx).unwrap();
+    for row in &f1 {
+        let mn = row.normalized.iter().copied().fold(f64::MAX, f64::min);
+        assert!((mn - 1.0).abs() < 1e-9);
+    }
+
+    // Fig 4: all six classical models produce accuracies in [0, 1]
+    let f4 = experiments::fig4::run(&ctx, None).unwrap();
+    assert_eq!(f4.len(), 12); // 6 models x 2 normalizations
+    assert!(f4.iter().all(|c| (0.0..=1.0).contains(&c.accuracy)));
+
+    // Table 4: grid search reports the Table-4 hyperparameter names
+    let t4 = experiments::table4::run(&ctx).unwrap();
+    let keys: Vec<&str> = t4.iter().map(|(k, _)| k.as_str()).collect();
+    assert!(keys.contains(&"criterion"));
+    assert!(keys.contains(&"n_estimators"));
+
+    // Table 5: predictions are valid labels
+    let t5 = experiments::table5::run(&ctx).unwrap();
+    assert_eq!(t5.len(), 9);
+    for row in &t5 {
+        assert!(ReorderAlgorithm::LABEL_SET.contains(&row.predicted));
+        assert!(row.predict_s < 1.0, "prediction took {}s", row.predict_s);
+    }
+
+    // Table 6: ideal <= predicted (by definition), prediction cheap
+    let t6 = experiments::table6::run(&ctx).unwrap();
+    assert!(t6.ideal_s <= t6.predicted_s + 1e-12);
+    assert!(t6.prediction_s < t6.amd_s.max(0.5));
+
+    // Table 7: rows sorted by dimension descending, speedups positive
+    let (t7, avg) = experiments::table7::run(&ctx).unwrap();
+    assert!(t7.windows(2).all(|w| w[0].dimension >= w[1].dimension));
+    assert!(t7.iter().all(|r| r.speedup > 0.0));
+    assert!(avg > 0.0);
+
+    // CSV artifacts were written
+    for f in [
+        "table1.csv",
+        "fig1.csv",
+        "fig4.csv",
+        "table4.csv",
+        "table5.csv",
+        "table6.csv",
+        "table7.csv",
+    ] {
+        assert!(ctx.out_dir.join(f).exists(), "{f} missing");
+    }
+}
+
+#[test]
+fn trained_pipeline_beats_always_worst_choice() {
+    // selection should never be (much) worse than the single worst
+    // fixed algorithm over a held-out set
+    let coll = generate_mini_collection(17, 6);
+    let ds = build_dataset(&coll, &ReorderAlgorithm::LABEL_SET, &SweepConfig::default());
+    let (tr, te) = ds.split(0.8, 17);
+    let tf = train_forest(&ds, &tr, Method::Standard, 17);
+
+    let x = ds.features();
+    let mut predicted_total = 0.0;
+    let mut worst_total = 0.0;
+    for &i in &te {
+        let rec = &ds.records[i];
+        let label = smr::ml::Classifier::predict(
+            &tf.forest,
+            &tf.normalizer.transform_row(&x[i]),
+        );
+        let alg = ReorderAlgorithm::LABEL_SET[label.min(3)];
+        predicted_total += rec.time_of(alg).unwrap();
+        worst_total += rec
+            .results
+            .iter()
+            .map(|r| r.total_s)
+            .fold(f64::MIN, f64::max);
+    }
+    assert!(
+        predicted_total < worst_total,
+        "selection ({predicted_total}) no better than worst fixed ({worst_total})"
+    );
+}
+
+#[test]
+fn dataset_split_ratio_matches_paper() {
+    let coll = generate_mini_collection(23, 5);
+    let ds = build_dataset(&coll, &ReorderAlgorithm::LABEL_SET, &SweepConfig::default());
+    let (tr, te) = ds.split(0.8, 1);
+    let ratio = tr.len() as f64 / ds.len() as f64;
+    assert!((0.7..=0.9).contains(&ratio), "ratio {ratio}");
+    assert_eq!(tr.len() + te.len(), ds.len());
+}

@@ -1,0 +1,189 @@
+//! Integration: the AOT bridge — load HLO-text artifacts, execute them
+//! via PJRT, train the MLP through the train-step executable, and check
+//! numerics against the pure-Rust oracle.
+//!
+//! These tests require `make artifacts`; they are skipped (with a note)
+//! when the artifacts directory is absent so `cargo test` stays green on
+//! a fresh checkout.
+
+use std::path::{Path, PathBuf};
+
+use smr::features::N_FEATURES;
+use smr::model::{MlpDriver, MlpModel, TrainConfig, N_CLASSES};
+use smr::runtime::{ArtifactKind, Manifest, Runtime};
+use smr::util::rng::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        None
+    }
+}
+
+/// Pure-Rust forward oracle mirroring ref.py / model.py.
+fn forward_oracle(model: &MlpModel, x: &[f64]) -> Vec<f64> {
+    let std_x: Vec<f64> = (0..N_FEATURES)
+        .map(|j| (x[j] - model.mean[j] as f64) / (model.std[j] as f64 + 1e-8))
+        .collect();
+    let dense = |inp: &[f64], w: &[f32], b: &[f32], rows: usize, cols: usize, relu: bool| {
+        let mut out = vec![0.0f64; cols];
+        for c in 0..cols {
+            let mut acc = b[c] as f64;
+            for r in 0..rows {
+                acc += inp[r] * w[r * cols + c] as f64;
+            }
+            out[c] = if relu { acc.max(0.0) } else { acc };
+        }
+        out
+    };
+    let h1 = model.h1;
+    let h2 = model.h2;
+    let a1 = dense(&std_x, &model.params[0], &model.params[1], N_FEATURES, h1, true);
+    let a2 = dense(&a1, &model.params[2], &model.params[3], h1, h2, true);
+    let logits = dense(&a2, &model.params[4], &model.params[5], h2, N_CLASSES, false);
+    // softmax
+    let mx = logits.iter().copied().fold(f64::MIN, f64::max);
+    let e: Vec<f64> = logits.iter().map(|v| (v - mx).exp()).collect();
+    let z: f64 = e.iter().sum();
+    e.iter().map(|v| v / z).collect()
+}
+
+#[test]
+fn manifest_covers_all_variants() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    assert!(m.archs().len() >= 3, "expected >=3 arch variants");
+    for arch in m.archs() {
+        assert!(
+            !m.predict_batches(&arch).is_empty(),
+            "{arch} has no predict artifacts"
+        );
+        assert!(
+            m.artifacts
+                .iter()
+                .any(|a| a.arch == arch && a.kind == ArtifactKind::Train),
+            "{arch} has no train artifact"
+        );
+    }
+}
+
+#[test]
+fn predict_matches_rust_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let runtime = Runtime::cpu().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let arch = manifest.archs().into_iter().next().unwrap();
+    let meta = manifest.artifacts.iter().find(|a| a.arch == arch).unwrap();
+    let mut model = MlpModel::init(&arch, meta.h1, meta.h2, 11);
+    model.set_standardization(&vec![0.3; N_FEATURES], &vec![1.7; N_FEATURES]);
+
+    let mut rng = Rng::new(5);
+    let xs: Vec<Vec<f64>> = (0..5)
+        .map(|_| (0..N_FEATURES).map(|_| rng.normal() * 2.0).collect())
+        .collect();
+    let driver = MlpDriver::new(&runtime, &manifest);
+    let probs = driver.predict_probs(&model, &xs).unwrap();
+    assert_eq!(probs.len(), 5);
+    for (x, p) in xs.iter().zip(&probs) {
+        let want = forward_oracle(&model, x);
+        let sum: f32 = p.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "probs sum {sum}");
+        for (a, b) in p.iter().zip(&want) {
+            assert!(
+                (*a as f64 - b).abs() < 1e-4,
+                "prob mismatch: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn predict_batch_variants_agree() {
+    let Some(dir) = artifacts_dir() else { return };
+    let runtime = Runtime::cpu().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let arch = manifest.archs().into_iter().next().unwrap();
+    let meta = manifest.artifacts.iter().find(|a| a.arch == arch).unwrap();
+    let model = MlpModel::init(&arch, meta.h1, meta.h2, 3);
+    let driver = MlpDriver::new(&runtime, &manifest);
+
+    let mut rng = Rng::new(9);
+    let xs: Vec<Vec<f64>> = (0..70)
+        .map(|_| (0..N_FEATURES).map(|_| rng.normal()).collect())
+        .collect();
+    // full batch (chunked over variants) vs one-at-a-time must agree
+    let all = driver.predict_probs(&model, &xs).unwrap();
+    for (k, x) in xs.iter().enumerate().step_by(17) {
+        let single = driver.predict_probs(&model, &[x.clone()]).unwrap();
+        for c in 0..N_CLASSES {
+            assert!(
+                (all[k][c] - single[0][c]).abs() < 1e-5,
+                "row {k} class {c}: {} vs {}",
+                all[k][c],
+                single[0][c]
+            );
+        }
+    }
+}
+
+#[test]
+fn train_step_reduces_loss_on_separable_task() {
+    let Some(dir) = artifacts_dir() else { return };
+    let runtime = Runtime::cpu().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let arch = manifest.archs().into_iter().next().unwrap();
+    let meta = manifest.artifacts.iter().find(|a| a.arch == arch).unwrap();
+    let mut model = MlpModel::init(&arch, meta.h1, meta.h2, 21);
+
+    // learnable synthetic rule: class = quadrant of (x0, x1)
+    let mut rng = Rng::new(33);
+    let n = 256;
+    let xs: Vec<Vec<f64>> = (0..n)
+        .map(|_| (0..N_FEATURES).map(|_| rng.normal() * 3.0).collect())
+        .collect();
+    let ys: Vec<usize> = xs
+        .iter()
+        .map(|x| match (x[0] > 0.0, x[1] > 0.0) {
+            (true, true) => 0,
+            (true, false) => 1,
+            (false, true) => 2,
+            (false, false) => 3,
+        })
+        .collect();
+
+    let driver = MlpDriver::new(&runtime, &manifest);
+    let cfg = TrainConfig {
+        epochs: 60,
+        lr: 0.05,
+        momentum: 0.9,
+        seed: 3,
+    };
+    let losses = driver.train(&mut model, &xs, &ys, &cfg).unwrap();
+    let head: f32 = losses[..4].iter().sum::<f32>() / 4.0;
+    let tail: f32 = losses[losses.len() - 4..].iter().sum::<f32>() / 4.0;
+    assert!(
+        tail < 0.5 * head,
+        "loss did not converge: {head} -> {tail}"
+    );
+
+    // trained model must beat chance comfortably on its training data
+    let pred = driver.predict(&model, &xs).unwrap();
+    let acc = pred.iter().zip(&ys).filter(|(p, y)| p == y).count() as f64 / n as f64;
+    assert!(acc > 0.7, "train accuracy {acc}");
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(dir) = artifacts_dir() else { return };
+    let runtime = Runtime::cpu().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let meta = manifest.artifacts[0].clone();
+    let a1 = runtime.load(&manifest, &meta).unwrap();
+    let count = runtime.cached_count();
+    let a2 = runtime.load(&manifest, &meta).unwrap();
+    assert_eq!(runtime.cached_count(), count);
+    assert!(std::sync::Arc::ptr_eq(&a1, &a2));
+}

@@ -1,0 +1,157 @@
+//! Cross-module randomized property tests (seeded, replayable — see
+//! `util::prop`): the invariants the whole system rests on.
+
+use smr::graph::partition::{bisect, vertex_separator};
+use smr::graph::Graph;
+use smr::reorder::{metrics, Permutation, ReorderAlgorithm};
+use smr::solver::etree::{col_counts, etree, NONE};
+use smr::sparse::pattern::symmetrize_spd_like;
+use smr::sparse::CooMatrix;
+use smr::util::prop::{self, check};
+use smr::util::rng::Rng;
+
+fn random_matrix(rng: &mut Rng, n: usize, density: f64) -> smr::sparse::CsrMatrix {
+    let edges = prop::random_sym_edges(rng, n, density);
+    let mut coo = CooMatrix::new(n, n);
+    for i in 0..n {
+        coo.push(i, i, 1.0);
+    }
+    for (i, j) in edges {
+        coo.push_sym(i, j, rng.range_f64(-1.0, 1.0));
+    }
+    coo.to_csr()
+}
+
+/// Symbolic fill is invariant under relabeling by the inverse permutation
+/// (fill is a function of the quotient structure, not the labels).
+#[test]
+fn prop_fill_of_inverse_roundtrip() {
+    check("fill-inverse-roundtrip", 20, |rng| {
+        let n = rng.range(5, 80);
+        let a = random_matrix(rng, n, 0.1);
+        let p = Permutation::new(prop::random_perm(rng, n));
+        let pa = p.apply(&a);
+        // applying p then its inverse restores the original fill exactly
+        let back = p.inverse().apply(&pa);
+        assert_eq!(
+            metrics::symbolic_fill(&back, &Permutation::identity(n)),
+            metrics::symbolic_fill(&a, &Permutation::identity(n)),
+        );
+    });
+}
+
+/// Fill under any ordering is bounded below by nnz of the lower triangle
+/// of A+Aᵀ (factorization never destroys structural entries).
+#[test]
+fn prop_fill_lower_bound() {
+    check("fill-lower-bound", 20, |rng| {
+        let n = rng.range(4, 60);
+        let a = symmetrize_spd_like(&random_matrix(rng, n, 0.15), 2.0);
+        let lower_nnz: u64 = (0..n)
+            .map(|r| a.row_indices(r).iter().filter(|&&c| c <= r).count() as u64)
+            .sum();
+        for alg in ReorderAlgorithm::LABEL_SET {
+            let p = alg.compute(&a, rng.next_u64());
+            let fill = metrics::symbolic_fill(&a, &p);
+            assert!(fill >= lower_nnz, "{alg}: fill {fill} < {lower_nnz}");
+        }
+    });
+}
+
+/// The etree parent of every vertex is strictly larger (etree is over
+/// elimination order), and col_counts sums to fill minus n.
+#[test]
+fn prop_etree_well_formed() {
+    check("etree-well-formed", 25, |rng| {
+        let n = rng.range(3, 100);
+        let g = Graph::from_edges(n, &prop::random_sym_edges(rng, n, 0.1));
+        let parent = etree(&g.indptr, &g.indices);
+        for v in 0..n {
+            if parent[v] != NONE {
+                assert!(parent[v] > v, "parent[{v}] = {} <= {v}", parent[v]);
+            }
+        }
+        let counts = col_counts(&g.indptr, &g.indices, &parent);
+        // every count bounded by the number of later vertices
+        for (v, &c) in counts.iter().enumerate() {
+            assert!(c <= n - v - 1, "count[{v}] = {c}");
+        }
+    });
+}
+
+/// Separators separate: after removing the separator, no edge crosses
+/// between the two sides.
+#[test]
+fn prop_separator_is_valid() {
+    check("separator-valid", 15, |rng| {
+        let n = rng.range(8, 150);
+        let g = Graph::from_edges(n, &prop::random_connected_edges(rng, n, 0.03));
+        let mut brng = Rng::new(rng.next_u64());
+        let b = bisect(&g, &mut brng);
+        let (sep, a, bb) = vertex_separator(&g, &b.side);
+        assert_eq!(sep.len() + a.len() + bb.len(), n);
+        let in_a: std::collections::HashSet<_> = a.iter().copied().collect();
+        for &v in &bb {
+            for &u in g.neighbors(v) {
+                assert!(!in_a.contains(&u), "edge {v}-{u} crosses the separator");
+            }
+        }
+    });
+}
+
+/// Solving with any label ordering gives the same answer (up to fp noise).
+#[test]
+fn prop_orderings_agree_on_solution() {
+    check("orderings-agree", 10, |rng| {
+        let n = rng.range(5, 60);
+        let a = symmetrize_spd_like(&random_matrix(rng, n, 0.12), 2.0);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut solutions: Vec<Vec<f64>> = Vec::new();
+        for alg in ReorderAlgorithm::LABEL_SET {
+            let perm = alg.compute(&a, 5);
+            let pa = perm.apply(&a);
+            let p = perm.as_slice();
+            let mut pb = vec![0.0; n];
+            for i in 0..n {
+                pb[p[i]] = b[i];
+            }
+            let sym = smr::solver::analyze(&pa);
+            let px = smr::solver::factorize(&pa, &sym).unwrap().solve(&pb);
+            let mut x = vec![0.0; n];
+            for i in 0..n {
+                x[i] = px[p[i]];
+            }
+            solutions.push(x);
+        }
+        for s in &solutions[1..] {
+            for i in 0..n {
+                assert!(
+                    (s[i] - solutions[0][i]).abs() < 1e-7,
+                    "solutions diverge at {i}"
+                );
+            }
+        }
+    });
+}
+
+/// Feature extraction is permutation-covariant in the right places:
+/// dimension/nnz/degree stats are invariant; bandwidth/profile change.
+#[test]
+fn prop_feature_invariance_classes() {
+    check("feature-invariance", 15, |rng| {
+        let n = rng.range(10, 80);
+        let a = random_matrix(rng, n, 0.1);
+        let p = Permutation::new(prop::random_perm(rng, n));
+        let fa = smr::features::extract(&a);
+        let fb = smr::features::extract(&p.apply(&a));
+        // invariant features: dimension, nnz, nnz_ratio, degree min/max/avg
+        for idx in [0usize, 1, 2, 7, 8, 9] {
+            assert!(
+                (fa[idx] - fb[idx]).abs() < 1e-9,
+                "feature {idx} should be invariant"
+            );
+        }
+        // row-nnz max is invariant under symmetric permutation too
+        assert!((fa[3] - fb[3]).abs() < 1e-9);
+    });
+}
