@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 verification (see ROADMAP.md): release build + full test suite.
+# Run from anywhere; the crate lives in rust/.
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+cargo build --release
+cargo test -q

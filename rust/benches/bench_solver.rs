@@ -1,41 +1,113 @@
-//! Direct-solver phase benchmarks: analyze / factorize / solve, plus the
-//! ordering-sensitivity of factor time (the effect the whole paper is
-//! built on). Run with `cargo bench --bench bench_solver`.
+//! Direct-solver benchmarks: scalar up-looking vs supernodal
+//! multifrontal (sequential and subtree-parallel) on the generated
+//! suite, plus the ordering-sensitivity of factor time (the effect the
+//! whole paper is built on).
+//!
+//! Run with `cargo bench --bench bench_solver`. Besides the console
+//! report it writes a machine-readable `BENCH_solver.json` (override the
+//! path with `BENCH_OUT`) so future PRs can diff the perf trajectory:
+//! one record per (matrix, factor mode) with wall times, flop counts,
+//! and achieved flop rates, plus per-matrix supernodal speedups.
 
 use smr::collection::generators as g;
 use smr::reorder::ReorderAlgorithm;
-use smr::solver::{self, SolverConfig};
-use smr::util::bench::{section, Bencher};
+use smr::solver::{self, FactorConfig, FactorMode, SolverConfig};
+use smr::util::bench::{section, Bencher, JsonReport};
+use smr::util::json;
+use smr::util::pool;
+use smr::util::rng::Rng;
+
+fn mode_cfg(mode: FactorMode) -> FactorConfig {
+    FactorConfig {
+        mode,
+        parallel_flop_min: 0.0,
+        ..FactorConfig::default()
+    }
+}
+
+fn mode_name(mode: FactorMode) -> &'static str {
+    match mode {
+        FactorMode::Scalar => "scalar",
+        FactorMode::Supernodal => "supernodal",
+        FactorMode::SupernodalParallel => "supernodal_parallel",
+    }
+}
 
 fn main() {
     let cfg = SolverConfig::default();
+    let mut rng = Rng::new(0xBE7C);
+    // the acceptance suite: 2D/3D grid Laplacians and random SPD, n >= 10k,
+    // plus two smaller smoke cases for quick eyeballing
     let cases = vec![
-        ("grid2d_40x40", g::grid2d(40, 40)),
-        ("grid2d_64x64", g::grid2d(64, 64)),
-        ("grid3d_12", g::grid3d(12, 12, 12)),
+        ("grid2d_64x64", "grid2d", g::grid2d(64, 64)),
+        ("grid3d_12", "grid3d", g::grid3d(12, 12, 12)),
+        ("grid2d_100x100", "grid2d", g::grid2d(100, 100)),
+        ("grid3d_22", "grid3d", g::grid3d(22, 22, 22)),
+        // avg degree kept low: ER-random graphs have no good separators,
+        // so denser ones blow the scalar baseline's bench time out
+        ("random_spd_10k", "random_spd", g::random_sym(10_000, 2.5, &mut rng)),
     ];
-    for (name, raw) in &cases {
+    let modes = [
+        FactorMode::Scalar,
+        FactorMode::Supernodal,
+        FactorMode::SupernodalParallel,
+    ];
+
+    let mut report = JsonReport::new();
+    report.set("bench", json::s("bench_solver"));
+    report.set("workers", json::num(pool::default_workers() as f64));
+
+    for (name, family, raw) in &cases {
         let a = solver::prepare(raw, &cfg);
         let perm = ReorderAlgorithm::Amd.compute(&a, 1);
         let pa = perm.apply(&a);
         let sym = solver::analyze(&pa);
         section(&format!(
-            "solver: {name} (n={}, nnz={}, fill={})",
+            "solver: {name} (n={}, nnz={}, fill={}, flops={:.3e})",
             a.nrows,
             a.nnz(),
-            sym.cost.fill
+            sym.cost.fill,
+            sym.cost.flops
         ));
-        let mut b = Bencher::new();
-        b.bench(&format!("{name}/analyze"), || solver::analyze(&pa));
-        let f = solver::factorize(&pa, &sym).unwrap();
-        b.bench(&format!("{name}/factorize"), || {
-            solver::factorize(&pa, &sym).unwrap()
-        });
+        let mut b = Bencher::coarse();
+        let mut scalar_min = f64::NAN;
+        for mode in modes {
+            let fcfg = mode_cfg(mode);
+            let an = solver::analyze_with(&pa, &fcfg);
+            let f = solver::factorize_with(&pa, &an, &fcfg).unwrap();
+            assert_eq!(f.fill(), sym.cost.fill, "fill must not depend on mode");
+            let label = format!("{name}/factorize/{}", mode_name(mode));
+            let m = b
+                .bench(&label, || {
+                    solver::factorize_with(&pa, &an, &fcfg).unwrap()
+                })
+                .clone();
+            if mode == FactorMode::Scalar {
+                scalar_min = m.min_s;
+            }
+            report.push(json::obj(vec![
+                ("name", json::s(&label)),
+                ("family", json::s(family)),
+                ("n", json::num(a.nrows as f64)),
+                ("nnz", json::num(a.nnz() as f64)),
+                ("fill", json::num(sym.cost.fill as f64)),
+                ("mode", json::s(mode_name(mode))),
+                ("wall_s", json::num(m.min_s)),
+                ("mean_s", json::num(m.mean_s)),
+                ("flops", json::num(f.flops)),
+                ("flop_rate", json::num(f.flops / m.min_s.max(1e-12))),
+                ("speedup_vs_scalar", json::num(scalar_min / m.min_s.max(1e-12))),
+            ]));
+        }
+        // solve cost rides along (shared by every mode)
+        let an = solver::analyze_with(&pa, &mode_cfg(FactorMode::Supernodal));
+        let f = solver::factorize_with(&pa, &an, &mode_cfg(FactorMode::Supernodal))
+            .unwrap();
         let rhs = vec![1.0; a.nrows];
         b.bench(&format!("{name}/solve"), || f.solve(&rhs));
     }
 
-    section("ordering sensitivity (factor time, grid2d 56x56)");
+    section("ordering sensitivity (factor time, grid2d 56x56, default path)");
     let a = solver::prepare(&g::grid2d(56, 56), &cfg);
     let mut b = Bencher::new();
     for alg in [
@@ -47,10 +119,17 @@ fn main() {
     ] {
         let perm = alg.compute(&a, 1);
         let pa = perm.apply(&a);
-        let sym = solver::analyze(&pa);
+        let fcfg = FactorConfig::default();
+        let an = solver::analyze_with(&pa, &fcfg);
         b.bench(
-            &format!("factor under {alg} (fill {})", sym.cost.fill),
-            || solver::factorize(&pa, &sym).unwrap(),
+            &format!("factor under {alg} (fill {})", an.cost.fill),
+            || solver::factorize_with(&pa, &an, &fcfg).unwrap(),
         );
+    }
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_solver.json".into());
+    match report.write(&out) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\nfailed to write {out}: {e}"),
     }
 }

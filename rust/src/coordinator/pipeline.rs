@@ -4,6 +4,11 @@
 //! This is the end-to-end path the paper evaluates: Table 5 (prediction +
 //! its cost), Table 6 (total solve time AMD vs predicted vs ideal), and
 //! Table 7 (speedups on the largest matrices) all run through here.
+//!
+//! The numeric factorization path is selected by the `SolverConfig`
+//! handed to [`SelectionPipeline::new`] (`solver::FactorConfig`:
+//! scalar / supernodal / supernodal-parallel) — the default routes every
+//! solve through the parallel supernodal multifrontal kernel.
 
 use crate::features;
 use crate::ml::normalize::Normalizer;

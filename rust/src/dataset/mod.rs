@@ -18,7 +18,7 @@ use anyhow::{anyhow, Context, Result};
 use crate::collection::NamedMatrix;
 use crate::features::{self, N_FEATURES};
 use crate::reorder::ReorderAlgorithm;
-use crate::solver::{prepare, solve_ordered, SolverConfig};
+use crate::solver::{prepare, solve_ordered, FactorConfig, FactorMode, SolverConfig};
 use crate::util::json::{self, Json};
 use crate::util::pool::{default_workers, parallel_map};
 use crate::util::rng::Rng;
@@ -90,6 +90,13 @@ impl Default for SweepConfig {
             solver: SolverConfig {
                 // labels are argmin over phase times: denoise with min-of-2
                 measure_repeats: 2,
+                // the sweep already runs one matrix per worker thread;
+                // sequential supernodal inside each job keeps the machine
+                // at one thread per core and the timing labels contention-free
+                factor: FactorConfig {
+                    mode: FactorMode::Supernodal,
+                    ..FactorConfig::default()
+                },
                 ..SolverConfig::default()
             },
             reorder_seed: 0xDA7A,

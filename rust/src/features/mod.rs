@@ -16,13 +16,13 @@
 //! |10 | bandwidth  | Eq. (2)                          |
 //! |11 | profile    | Eq. (3)                          |
 //!
-//! Extraction is a single pass over the CSR structure plus one
-//! symmetrization for the degree features — this sits on the serving hot
-//! path in front of the MLP artifact, so it is allocation-lean.
+//! Extraction is a single pass over the CSR structure plus a degree-only
+//! sweep of the symmetrized pattern (`pattern::symmetrized_degrees` — no
+//! adjacency graph or transpose is materialized, O(n) extra memory) —
+//! this sits on the serving hot path in front of the MLP artifact, so it
+//! is allocation-lean.
 
-use crate::graph::Graph;
 use crate::sparse::{pattern, CsrMatrix};
-use crate::util::stats;
 
 /// Number of features (must match `python/compile/model.py::N_FEATURES`).
 pub const N_FEATURES: usize = 12;
@@ -71,13 +71,12 @@ pub fn extract(a: &CsrMatrix) -> [f64; N_FEATURES] {
         0.0
     };
 
-    // degrees on the symmetrized adjacency graph
-    let g = Graph::from_matrix(a);
+    // degrees of the symmetrized adjacency, without building the graph
+    let degrees = pattern::symmetrized_degrees(a);
     let mut deg_max = 0usize;
     let mut deg_min = usize::MAX;
     let mut deg_sum = 0f64;
-    for v in 0..n {
-        let d = g.degree(v);
+    for &d in &degrees {
         deg_max = deg_max.max(d);
         deg_min = deg_min.min(d);
         deg_sum += d as f64;
@@ -122,24 +121,55 @@ pub struct FeatureStats {
 }
 
 impl FeatureStats {
+    /// Streaming over rows, no per-column scratch. Accumulation order per
+    /// feature is exactly the per-column order `stats::{mean, std_dev,
+    /// min, max}` would see (Neumaier sum for the mean, naive
+    /// squared-deviation sum for the variance, `f64::min`/`max` folds),
+    /// so the results are bit-identical to the old column-copy version.
     pub fn compute(rows: &[[f64; N_FEATURES]]) -> FeatureStats {
         let mut mean = [0.0; N_FEATURES];
         let mut std = [0.0; N_FEATURES];
-        let mut mn = [f64::INFINITY; N_FEATURES];
-        let mut mx = [f64::NEG_INFINITY; N_FEATURES];
-        let mut col = Vec::with_capacity(rows.len());
-        for f in 0..N_FEATURES {
-            col.clear();
-            col.extend(rows.iter().map(|r| r[f]));
-            mean[f] = stats::mean(&col);
-            std[f] = stats::std_dev(&col);
-            mn[f] = stats::min(&col);
-            mx[f] = stats::max(&col);
-        }
+        let mut mn = [0.0; N_FEATURES];
+        let mut mx = [0.0; N_FEATURES];
         if rows.is_empty() {
-            mn = [0.0; N_FEATURES];
-            mx = [0.0; N_FEATURES];
+            return FeatureStats { mean, std, min: mn, max: mx };
         }
+
+        // pass 1: Neumaier-compensated sums (see stats::sum) + min/max
+        let mut s = [0.0f64; N_FEATURES];
+        let mut c = [0.0f64; N_FEATURES];
+        mn = [f64::INFINITY; N_FEATURES];
+        mx = [f64::NEG_INFINITY; N_FEATURES];
+        for row in rows {
+            for f in 0..N_FEATURES {
+                let x = row[f];
+                let t = s[f] + x;
+                if s[f].abs() >= x.abs() {
+                    c[f] += (s[f] - t) + x;
+                } else {
+                    c[f] += (x - t) + s[f];
+                }
+                s[f] = t;
+                mn[f] = mn[f].min(x);
+                mx[f] = mx[f].max(x);
+            }
+        }
+        let len = rows.len() as f64;
+        for f in 0..N_FEATURES {
+            mean[f] = (s[f] + c[f]) / len;
+        }
+
+        // pass 2: population variance around the pass-1 mean
+        let mut sq = [0.0f64; N_FEATURES];
+        for row in rows {
+            for f in 0..N_FEATURES {
+                sq[f] += (row[f] - mean[f]).powi(2);
+            }
+        }
+        for f in 0..N_FEATURES {
+            std[f] = (sq[f] / len).sqrt();
+        }
+
         FeatureStats {
             mean,
             std,
@@ -222,6 +252,36 @@ mod tests {
         assert_eq!(st.min[0], 10.0);
         assert_eq!(st.max[0], 20.0);
         assert!(st.std[0] > 0.0);
+    }
+
+    #[test]
+    fn stats_bit_identical_to_column_reference() {
+        use crate::util::stats;
+        let rows = vec![
+            extract(&band(10, 1)),
+            extract(&band(20, 2)),
+            extract(&band(33, 4)),
+            extract(&band(7, 3)),
+        ];
+        let st = FeatureStats::compute(&rows);
+        for f in 0..N_FEATURES {
+            let col: Vec<f64> = rows.iter().map(|r| r[f]).collect();
+            // exact equality on purpose: the streaming pass must replay
+            // the per-column accumulation order bit for bit
+            assert_eq!(st.mean[f], stats::mean(&col), "mean[{f}]");
+            assert_eq!(st.std[f], stats::std_dev(&col), "std[{f}]");
+            assert_eq!(st.min[f], stats::min(&col), "min[{f}]");
+            assert_eq!(st.max[f], stats::max(&col), "max[{f}]");
+        }
+    }
+
+    #[test]
+    fn stats_of_empty_rows_are_zero() {
+        let st = FeatureStats::compute(&[]);
+        assert_eq!(st.mean, [0.0; N_FEATURES]);
+        assert_eq!(st.std, [0.0; N_FEATURES]);
+        assert_eq!(st.min, [0.0; N_FEATURES]);
+        assert_eq!(st.max, [0.0; N_FEATURES]);
     }
 
     #[test]

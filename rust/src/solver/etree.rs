@@ -76,6 +76,30 @@ pub fn postorder(parent: &[usize]) -> Vec<usize> {
     order
 }
 
+/// First descendants in a postordered forest: `fd[v]` is the smallest
+/// label in the subtree rooted at `v`. Only meaningful when the labels
+/// themselves are a postorder (every `parent[v] > v`), which is how the
+/// supernodal analysis calls it — after relabeling by [`postorder`].
+///
+/// Fundamental-supernode detection needs this: columns `j-1, j` can share
+/// a supernode only if `fd[j] == fd[j-1]`, i.e. `j-1` is the *only* child
+/// of `j` (otherwise `j` merges several subtrees and its frontal matrix
+/// assembles more than one child update).
+pub fn first_descendants(parent: &[usize]) -> Vec<usize> {
+    let n = parent.len();
+    let mut fd: Vec<usize> = (0..n).collect();
+    for v in 0..n {
+        let p = parent[v];
+        if p != NONE {
+            debug_assert!(p > v, "first_descendants needs a postordered tree");
+            if fd[v] < fd[p] {
+                fd[p] = fd[v];
+            }
+        }
+    }
+    fd
+}
+
 /// Factor column counts: `counts[j]` = nnz of column j of L *excluding*
 /// the diagonal. Row-subtree marking walk (Liu).
 pub fn col_counts(indptr: &[usize], indices: &[usize], parent: &[usize]) -> Vec<usize> {
@@ -213,6 +237,15 @@ mod tests {
         let mut sorted = post.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn first_descendants_of_path_and_fork() {
+        // path 0->1->2 (postordered): fd = [0, 0, 0]
+        assert_eq!(first_descendants(&[1, 2, NONE]), vec![0, 0, 0]);
+        // fork: 0->2, 1->2: node 2 has two children, fd[2] = 0 but
+        // fd[1] = 1, so columns 1 and 2 must not share a supernode.
+        assert_eq!(first_descendants(&[2, 2, NONE]), vec![0, 1, 0]);
     }
 
     #[test]

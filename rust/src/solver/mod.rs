@@ -1,10 +1,33 @@
 //! Sparse direct solver — the MUMPS substitute.
 //!
 //! Pipeline mirrors a direct solver's phases: **analyze** (elimination
-//! tree + column counts on the permuted pattern, [`etree`]), **factorize**
-//! (up-looking numeric LDLᵀ, [`numeric`]), **solve** (triangular solves).
-//! The solve *time* under a given reordering is the label signal the
-//! whole paper is built on; this module measures it.
+//! tree + column counts on the permuted pattern, [`etree`]; plus the
+//! assembly tree, [`supernode`], when a supernodal mode is selected),
+//! **factorize** (numeric LDLᵀ), **solve** (triangular solves). The
+//! solve *time* under a given reordering is the label signal the whole
+//! paper is built on; this module measures it.
+//!
+//! ## Numeric paths ([`FactorConfig`])
+//! Three factorization kernels share identical pivot-free LDLᵀ
+//! semantics (same `fill()`, residual-equivalent solutions):
+//!
+//! * [`FactorMode::Scalar`] — up-looking, one column at a time
+//!   ([`numeric`]); the reference implementation.
+//! * [`FactorMode::Supernodal`] — multifrontal over the postordered
+//!   assembly tree with dense cache-blocked panel kernels
+//!   ([`supernodal`], [`kernels`]). Relaxed amalgamation
+//!   ([`FactorConfig::relax_ratio`]) merges a child supernode into its
+//!   parent while the padding it introduces stays under the given
+//!   fraction of the exact entries — bigger panels, more BLAS-shaped
+//!   work, unchanged stored fill.
+//! * [`FactorMode::SupernodalParallel`] — same numerics, with
+//!   independent assembly subtrees scheduled across threads
+//!   (`util::pool`); bit-identical to the sequential supernodal factor.
+//!
+//! [`SolverConfig::factor`] selects the path for every consumer
+//! (dataset sweep, selection pipeline, experiments, benches); the
+//! default is the parallel supernodal path with a flop floor below
+//! which it degrades to sequential (thread spawn would dominate).
 //!
 //! ## Flop-cap guard
 //! A bad ordering on a mid-size matrix can demand 10¹⁰+ multiply-adds
@@ -18,7 +41,10 @@
 //! documents this.
 
 pub mod etree;
+pub mod kernels;
 pub mod numeric;
+pub mod supernode;
+pub mod supernodal;
 
 use std::sync::OnceLock;
 
@@ -29,6 +55,8 @@ use crate::util::rng::Rng;
 use crate::util::Timer;
 
 pub use numeric::{analyze, factorize, FactorError, LdlFactor, Symbolic};
+pub use supernode::{FactorConfig, FactorMode, SupernodalPlan};
+pub use supernodal::factorize_supernodal;
 
 /// Solver configuration.
 #[derive(Clone, Copy, Debug)]
@@ -43,6 +71,8 @@ pub struct SolverConfig {
     /// the standard noise-robust estimator for sub-millisecond phases
     /// (labels are decided by these times, so scheduler noise matters).
     pub measure_repeats: usize,
+    /// Which numeric factorization to run (and its supernodal knobs).
+    pub factor: FactorConfig,
 }
 
 impl Default for SolverConfig {
@@ -52,7 +82,53 @@ impl Default for SolverConfig {
             flop_cap: 2.0e9,
             seed: 0x5eed,
             measure_repeats: 1,
+            factor: FactorConfig::default(),
         }
+    }
+}
+
+/// Symbolic analysis bundle for a chosen factor path: the symbolic cost
+/// (always), plus exactly one of the scalar symbolic (parent/counts) or
+/// the supernodal assembly tree — the two paths never both pay their
+/// analysis.
+pub struct Analysis {
+    pub cost: etree::SymbolicCost,
+    pub sym: Option<Symbolic>,
+    pub plan: Option<SupernodalPlan>,
+}
+
+/// Analyze the (already permuted) matrix for the given factor config.
+pub fn analyze_with(a: &CsrMatrix, cfg: &FactorConfig) -> Analysis {
+    match cfg.mode {
+        FactorMode::Scalar => {
+            let sym = numeric::analyze(a);
+            Analysis {
+                cost: sym.cost,
+                sym: Some(sym),
+                plan: None,
+            }
+        }
+        FactorMode::Supernodal | FactorMode::SupernodalParallel => {
+            let plan = supernode::plan(a, cfg);
+            Analysis {
+                cost: plan.cost,
+                sym: None,
+                plan: Some(plan),
+            }
+        }
+    }
+}
+
+/// Factorize along the path the analysis was built for.
+pub fn factorize_with(
+    a: &CsrMatrix,
+    an: &Analysis,
+    cfg: &FactorConfig,
+) -> Result<LdlFactor, FactorError> {
+    match (&an.sym, &an.plan) {
+        (Some(sym), _) => numeric::factorize(a, sym),
+        (None, Some(plan)) => supernodal::factorize_supernodal(a, plan, cfg),
+        (None, None) => unreachable!("analysis carries neither path"),
     }
 }
 
@@ -124,11 +200,14 @@ pub fn calibrated_flop_rate() -> f64 {
             }
         }
         let a = coo.to_csr();
-        let sym = numeric::analyze(&a);
+        // calibrate the same path real factorizations take, so estimated
+        // and measured times stay continuous
+        let cfg = FactorConfig::default();
+        let an = analyze_with(&a, &cfg);
         // warm once, then time
-        let _ = numeric::factorize(&a, &sym);
+        let _ = factorize_with(&a, &an, &cfg);
         let t = Timer::start();
-        let f = numeric::factorize(&a, &sym).expect("calibration factorize");
+        let f = factorize_with(&a, &an, &cfg).expect("calibration factorize");
         let secs = t.elapsed_s().max(1e-6);
         (f.flops / secs).max(1e6)
     })
@@ -143,11 +222,14 @@ pub fn solve_ordered(
 ) -> Result<SolveReport, FactorError> {
     let t_an = Timer::start();
     let pa = perm.apply(a_spd);
+    // scalar symbolic first (O(n + nnz) space): the flop-cap guard must
+    // decide *before* the supernodal plan allocates the O(nnz(L)) exact
+    // structure a capped factorization would never use
     let sym = numeric::analyze(&pa);
-    let analyze_s = t_an.elapsed_s();
     let cost = sym.cost;
 
     if cost.flops > cfg.flop_cap {
+        let analyze_s = t_an.elapsed_s();
         let rate = calibrated_flop_rate();
         // solve streams L twice (fwd+bwd): ~4 ops per factor entry
         let factor_s = cost.flops / rate;
@@ -165,8 +247,22 @@ pub fn solve_ordered(
         });
     }
 
+    let an = match cfg.factor.mode {
+        FactorMode::Scalar => Analysis {
+            cost,
+            sym: Some(sym),
+            plan: None,
+        },
+        FactorMode::Supernodal | FactorMode::SupernodalParallel => Analysis {
+            cost,
+            sym: None,
+            plan: Some(supernode::plan_with(&pa, &sym, &cfg.factor)),
+        },
+    };
+    let analyze_s = t_an.elapsed_s();
+
     let t_f = Timer::start();
-    let mut f = numeric::factorize(&pa, &sym)?;
+    let mut f = factorize_with(&pa, &an, &cfg.factor)?;
     let mut factor_s = t_f.elapsed_s();
 
     // random RHS, as the paper's preprocessing scripts generate
@@ -180,7 +276,7 @@ pub fn solve_ordered(
     // extra timed repeats: keep the fastest measurement of each phase
     for _ in 1..cfg.measure_repeats.max(1) {
         let t_f = Timer::start();
-        f = numeric::factorize(&pa, &sym)?;
+        f = factorize_with(&pa, &an, &cfg.factor)?;
         factor_s = factor_s.min(t_f.elapsed_s());
         let t_s = Timer::start();
         x = f.solve(&b);
@@ -313,5 +409,35 @@ mod tests {
     fn calibration_rate_is_plausible() {
         let r = calibrated_flop_rate();
         assert!(r > 1e6 && r < 1e12, "rate {r}");
+    }
+
+    #[test]
+    fn all_factor_modes_agree_through_solve_ordered() {
+        let base = SolverConfig::default();
+        let a = prepare(&grid_matrix(20, 17), &base);
+        let p = ReorderAlgorithm::Amd.compute(&a, 7);
+        let mut fills = Vec::new();
+        for mode in [
+            FactorMode::Scalar,
+            FactorMode::Supernodal,
+            FactorMode::SupernodalParallel,
+        ] {
+            let cfg = SolverConfig {
+                factor: FactorConfig {
+                    mode,
+                    parallel_flop_min: 0.0,
+                    ..FactorConfig::default()
+                },
+                ..base
+            };
+            let r = solve_ordered(&a, &p, &cfg).unwrap();
+            assert!(!r.estimated);
+            assert!(r.residual < 1e-8, "{mode:?}: residual {}", r.residual);
+            fills.push(r.fill);
+        }
+        assert!(
+            fills.windows(2).all(|w| w[0] == w[1]),
+            "fill differs across modes: {fills:?}"
+        );
     }
 }

@@ -29,6 +29,12 @@ pub struct LdlFactor {
     pub d: Vec<f64>,
     /// Multiply-add operations actually performed.
     pub flops: f64,
+    /// Internal relabeling used by the supernodal path: when set, the
+    /// stored factor is of `Q·A·Qᵀ` where `post[k]` is the input column
+    /// at internal position `k` (an elimination-tree postorder — an
+    /// equivalent reordering, so `fill()` is unchanged). [`Self::solve`]
+    /// applies/undoes it transparently; `None` for the scalar path.
+    pub post: Option<Vec<usize>>,
 }
 
 /// Numeric factorization error.
@@ -158,6 +164,7 @@ pub fn factorize(a: &CsrMatrix, sym: &Symbolic) -> Result<LdlFactor, FactorError
         lx,
         d,
         flops,
+        post: None,
     })
 }
 
@@ -165,7 +172,10 @@ impl LdlFactor {
     /// Solve `L D Lᵀ x = b`.
     pub fn solve(&self, b: &[f64]) -> Vec<f64> {
         assert_eq!(b.len(), self.n);
-        let mut x = b.to_vec();
+        let mut x = match &self.post {
+            Some(post) => post.iter().map(|&o| b[o]).collect(),
+            None => b.to_vec(),
+        };
         // forward: L z = b  (L unit lower, column-major)
         for j in 0..self.n {
             let xj = x[j];
@@ -187,7 +197,16 @@ impl LdlFactor {
             }
             x[j] = acc;
         }
-        x
+        match &self.post {
+            Some(post) => {
+                let mut out = vec![0.0; self.n];
+                for (k, &o) in post.iter().enumerate() {
+                    out[o] = x[k];
+                }
+                out
+            }
+            None => x,
+        }
     }
 
     /// nnz(L) including the unit diagonal.
@@ -199,6 +218,7 @@ impl LdlFactor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::solver::{FactorConfig, FactorMode};
     use crate::sparse::pattern::symmetrize_spd_like;
     use crate::sparse::CooMatrix;
     use crate::util::prop;
@@ -293,6 +313,25 @@ mod tests {
         assert!(f.flops > 0.0);
     }
 
+    /// The three factor paths every cross-path property must cover.
+    fn all_mode_configs() -> [FactorConfig; 3] {
+        [
+            FactorConfig {
+                mode: FactorMode::Scalar,
+                ..FactorConfig::default()
+            },
+            FactorConfig {
+                mode: FactorMode::Supernodal,
+                ..FactorConfig::default()
+            },
+            FactorConfig {
+                mode: FactorMode::SupernodalParallel,
+                parallel_flop_min: 0.0, // engage threads even on tiny inputs
+                ..FactorConfig::default()
+            },
+        ]
+    }
+
     #[test]
     fn prop_random_spd_solves_accurately() {
         prop::check("ldl-random-spd", 15, |rng_p| {
@@ -306,21 +345,28 @@ mod tests {
                 coo.push_sym(i, j, rng_p.range_f64(-1.0, 1.0));
             }
             let a = symmetrize_spd_like(&coo.to_csr(), 2.0);
-            let f = factorize(&a, &analyze(&a)).unwrap();
             let mut rng = Rng::new(rng_p.next_u64());
             let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-            let x = f.solve(&b);
             let bnorm: f64 = b.iter().map(|v| v * v).sum::<f64>().sqrt();
-            assert!(
-                residual_norm(&a, &x, &b) < 1e-8 * (1.0 + bnorm),
-                "residual too large (n={n})"
-            );
+            let sym_fill = analyze(&a).cost.fill;
+            for cfg in all_mode_configs() {
+                let an = crate::solver::analyze_with(&a, &cfg);
+                let f = crate::solver::factorize_with(&a, &an, &cfg).unwrap();
+                assert_eq!(f.fill(), sym_fill, "{:?} fill", cfg.mode);
+                let x = f.solve(&b);
+                assert!(
+                    residual_norm(&a, &x, &b) < 1e-8 * (1.0 + bnorm),
+                    "{:?}: residual too large (n={n})",
+                    cfg.mode
+                );
+            }
         });
     }
 
     #[test]
     fn prop_solution_invariant_under_permutation() {
-        // solving PAP' (Py) = Pb must give the same x after unpermuting
+        // solving PAP' (Py) = Pb must give the same x after unpermuting,
+        // on every factor path
         prop::check("ldl-perm-invariant", 10, |rng_p| {
             let n = rng_p.range(3, 50);
             let edges = prop::random_connected_edges(rng_p, n, 0.1);
@@ -341,12 +387,18 @@ mod tests {
             for i in 0..n {
                 pb[perm[i]] = b[i];
             }
-            let px = factorize(&pa, &analyze(&pa)).unwrap().solve(&pb);
-            for i in 0..n {
-                assert!(
-                    (px[perm[i]] - x_ref[i]).abs() < 1e-7,
-                    "mismatch at {i}"
-                );
+            for cfg in all_mode_configs() {
+                let an = crate::solver::analyze_with(&pa, &cfg);
+                let px = crate::solver::factorize_with(&pa, &an, &cfg)
+                    .unwrap()
+                    .solve(&pb);
+                for i in 0..n {
+                    assert!(
+                        (px[perm[i]] - x_ref[i]).abs() < 1e-7,
+                        "{:?}: mismatch at {i}",
+                        cfg.mode
+                    );
+                }
             }
         });
     }

@@ -1,0 +1,517 @@
+//! Supernodal multifrontal LDLᵀ — the cache-blocked, parallel numeric
+//! phase.
+//!
+//! Consumes a [`SupernodalPlan`] (postorder relabeling + assembly tree,
+//! see [`super::supernode`]) and factors `Q·A·Qᵀ` front by front in
+//! assembly-tree postorder:
+//!
+//! * each supernode assembles a dense **frontal matrix** from its columns
+//!   of the permuted matrix plus its children's **update matrices**
+//!   (extend-add), eliminates its pivot columns with the blocked kernels
+//!   in [`super::kernels`], scatters the exact-pattern entries into the
+//!   factor, and passes the trailing Schur complement up the tree;
+//! * in [`FactorMode::SupernodalParallel`], independent subtrees run on
+//!   worker threads (each task owns disjoint `&mut` column ranges of the
+//!   shared factor arrays — no locks on the output path), then the
+//!   sequential "top" of the tree consumes the subtree root updates.
+//!
+//! The returned [`LdlFactor`] stores the factor of the *postordered*
+//! matrix together with the postorder itself (`LdlFactor::post`), which
+//! `solve` applies transparently. Because a postorder is an equivalent
+//! reordering and panels are scattered onto the exact symbolic pattern,
+//! `fill()` is identical to the scalar path, and the parallel schedule
+//! performs bit-identical arithmetic to the sequential one (same fronts,
+//! same assembly order — threads only change *when* disjoint fronts run).
+
+use super::etree::NONE;
+use super::kernels;
+use super::numeric::{FactorError, LdlFactor};
+use super::supernode::{schedule, FactorConfig, FactorMode, SupernodalPlan};
+use crate::sparse::CsrMatrix;
+use crate::util::pool;
+
+/// Schur-complement contribution passed from a supernode to its assembly
+/// parent: dense column-major `m × m` block (lower triangle filled) over
+/// the producing supernode's boundary rows (`plan.rows[snode]`).
+struct Update {
+    snode: usize,
+    vals: Vec<f64>,
+}
+
+/// Per-worker scratch reused across the fronts of one task.
+struct Scratch {
+    /// Global row -> local front row. Only entries belonging to the
+    /// current front are ever read, so no per-front reset is needed.
+    map: Vec<usize>,
+    front: Vec<f64>,
+}
+
+impl Scratch {
+    fn new(n: usize) -> Self {
+        Scratch {
+            map: vec![0; n],
+            front: Vec::new(),
+        }
+    }
+}
+
+/// Assemble, eliminate, and scatter one supernode. `bx` holds the
+/// postordered matrix values (gathered through `plan.b_from`); `lx_s` /
+/// `d_s` are the supernode's slices of the factor arrays (columns
+/// `first[s]..first[s+1]`).
+#[allow(clippy::too_many_arguments)]
+fn process_snode(
+    s: usize,
+    bx: &[f64],
+    plan: &SupernodalPlan,
+    cfg: &FactorConfig,
+    scratch: &mut Scratch,
+    child_updates: Vec<Update>,
+    lx_s: &mut [f64],
+    d_s: &mut [f64],
+    flops: &mut f64,
+) -> Result<Option<Update>, FactorError> {
+    let a0 = plan.first[s];
+    let e = plan.first[s + 1];
+    let w = e - a0;
+    let rows = &plan.rows[s];
+    let m = rows.len();
+    let ld = w + m;
+
+    for (k, j) in (a0..e).enumerate() {
+        scratch.map[j] = k;
+    }
+    for (k, &r) in rows.iter().enumerate() {
+        scratch.map[r] = w + k;
+    }
+    scratch.front.clear();
+    scratch.front.resize(ld * ld, 0.0);
+    let f = &mut scratch.front[..];
+
+    // assemble the supernode's columns of B: by symmetry, the lower part
+    // of column j is row j's entries at or beyond the diagonal
+    for j in a0..e {
+        let jl = j - a0;
+        let (s0, s1) = (plan.b_indptr[j], plan.b_indptr[j + 1]);
+        let idx = &plan.b_indices[s0..s1];
+        let start = idx.partition_point(|&i| i < j);
+        for (&i, &v) in idx[start..].iter().zip(&bx[s0 + start..s1]) {
+            debug_assert!(
+                i < e || rows.binary_search(&i).is_ok(),
+                "entry ({i},{j}) outside the front"
+            );
+            f[jl * ld + scratch.map[i]] += v;
+        }
+    }
+
+    // extend-add the children's update matrices
+    for up in &child_updates {
+        let urows = &plan.rows[up.snode];
+        let mc = urows.len();
+        for q in 0..mc {
+            let jl = scratch.map[urows[q]];
+            debug_assert!(jl < ld);
+            let col = &up.vals[q * mc..(q + 1) * mc];
+            for p in q..mc {
+                f[jl * ld + scratch.map[urows[p]]] += col[p];
+            }
+        }
+    }
+    drop(child_updates); // children's memory released before eliminating
+
+    kernels::factor_front(f, ld, w, cfg.panel_block.max(1))
+        .map_err(|k| FactorError::ZeroPivot(plan.post[a0 + k]))?;
+    for k in 0..w {
+        let h = (ld - 1 - k) as f64;
+        *flops += h * (h + 3.0) / 2.0;
+    }
+
+    // scatter the exact-pattern entries (padding positions are exact
+    // zeros — see the module docs in `supernode`) and the pivots
+    let base = plan.lp[a0];
+    for j in a0..e {
+        let jl = j - a0;
+        d_s[jl] = f[jl * ld + jl];
+        for (t, &i) in plan.li[plan.lp[j]..plan.lp[j + 1]].iter().enumerate() {
+            lx_s[plan.lp[j] - base + t] = f[jl * ld + scratch.map[i]];
+        }
+    }
+
+    if m == 0 {
+        return Ok(None);
+    }
+    let mut vals = vec![0.0; m * m];
+    for q in 0..m {
+        let src = &f[(w + q) * ld + w + q..(w + q) * ld + ld];
+        vals[q * m + q..(q + 1) * m].copy_from_slice(src);
+    }
+    Ok(Some(Update { snode: s, vals }))
+}
+
+/// One parallel task: a complete assembly subtree plus the factor slices
+/// its supernodes write.
+struct SubtreeTask<'a> {
+    root: usize,
+    /// `(supernode, lx slice, d slice)` in ascending (postorder) order.
+    snodes: Vec<(usize, &'a mut [f64], &'a mut [f64])>,
+    est_flops: f64,
+}
+
+/// Run one subtree sequentially; returns the root's update matrix.
+fn run_subtree(
+    task: SubtreeTask<'_>,
+    bx: &[f64],
+    plan: &SupernodalPlan,
+    cfg: &FactorConfig,
+) -> Result<(usize, Option<Update>, f64), FactorError> {
+    let mut scratch = Scratch::new(plan.n);
+    let mut pending: std::collections::HashMap<usize, Update> =
+        std::collections::HashMap::new();
+    let mut flops = 0.0;
+    let root = task.root;
+    let mut root_up = None;
+    for (s, lx_s, d_s) in task.snodes {
+        let ups: Vec<Update> = plan.children[s]
+            .iter()
+            .filter_map(|c| pending.remove(c))
+            .collect();
+        let up = process_snode(
+            s, bx, plan, cfg, &mut scratch, ups, lx_s, d_s, &mut flops,
+        )?;
+        if s == root {
+            root_up = up;
+        } else if let Some(u) = up {
+            pending.insert(s, u);
+        }
+    }
+    Ok((root, root_up, flops))
+}
+
+/// Supernodal multifrontal factorization. Sequential or subtree-parallel
+/// per `cfg.mode`; both produce identical factors.
+pub fn factorize_supernodal(
+    a: &CsrMatrix,
+    plan: &SupernodalPlan,
+    cfg: &FactorConfig,
+) -> Result<LdlFactor, FactorError> {
+    let n = a.nrows;
+    if a.nrows != a.ncols {
+        return Err(FactorError::Shape(format!("{}x{}", a.nrows, a.ncols)));
+    }
+    assert_eq!(plan.n, n, "plan built for a different matrix");
+    assert_eq!(
+        plan.b_from.len(),
+        a.nnz(),
+        "plan built for a different pattern"
+    );
+    // refresh the postordered values through the gather map (the pattern
+    // was permuted once, at plan time)
+    let bx: Vec<f64> = plan.b_from.iter().map(|&src| a.data[src]).collect();
+    let ns = plan.n_supernodes();
+    let nnz_l = plan.lp[n];
+    let mut lx = vec![0f64; nnz_l];
+    let mut d = vec![0f64; n];
+    let mut total_flops = 0.0;
+
+    let workers = if cfg.workers == 0 {
+        pool::default_workers()
+    } else {
+        cfg.workers
+    };
+    let parallel = cfg.mode == FactorMode::SupernodalParallel
+        && workers > 1
+        && ns > 1
+        && plan.total_flops() >= cfg.parallel_flop_min;
+
+    if !parallel {
+        // sequential: walk all supernodes in postorder with one scratch
+        let mut scratch = Scratch::new(n);
+        let mut updates: Vec<Option<Update>> = (0..ns).map(|_| None).collect();
+        for s in 0..ns {
+            let ups: Vec<Update> = plan.children[s]
+                .iter()
+                .filter_map(|&c| updates[c].take())
+                .collect();
+            let (a0, e) = (plan.first[s], plan.first[s + 1]);
+            let (l0, l1) = (plan.lp[a0], plan.lp[e]);
+            let up = process_snode(
+                s,
+                &bx,
+                plan,
+                cfg,
+                &mut scratch,
+                ups,
+                &mut lx[l0..l1],
+                &mut d[a0..e],
+                &mut total_flops,
+            )?;
+            updates[s] = up;
+        }
+        return Ok(finish(plan, lx, d, total_flops));
+    }
+
+    // --- parallel: split the factor into per-supernode slices, hand
+    // complete subtrees to workers, then finish the top sequentially
+    let sch = schedule(plan, 2 * workers);
+    let n_tasks = sch.task_roots.len();
+    let mut lx_parts: Vec<Option<&mut [f64]>> = Vec::with_capacity(ns);
+    let mut d_parts: Vec<Option<&mut [f64]>> = Vec::with_capacity(ns);
+    {
+        let mut rest_lx: &mut [f64] = &mut lx;
+        let mut rest_d: &mut [f64] = &mut d;
+        for s in 0..ns {
+            let (a0, e) = (plan.first[s], plan.first[s + 1]);
+            let (head, tail) =
+                std::mem::take(&mut rest_lx).split_at_mut(plan.lp[e] - plan.lp[a0]);
+            lx_parts.push(Some(head));
+            rest_lx = tail;
+            let (hd, td) = std::mem::take(&mut rest_d).split_at_mut(e - a0);
+            d_parts.push(Some(hd));
+            rest_d = td;
+        }
+    }
+    let mut tasks: Vec<SubtreeTask<'_>> = sch
+        .task_roots
+        .iter()
+        .map(|&root| SubtreeTask {
+            root,
+            snodes: Vec::new(),
+            est_flops: plan.subtree_flops[root],
+        })
+        .collect();
+    for s in 0..ns {
+        let t = sch.task_of[s];
+        if t != NONE {
+            tasks[t].snodes.push((
+                s,
+                lx_parts[s].take().expect("slice claimed twice"),
+                d_parts[s].take().expect("slice claimed twice"),
+            ));
+        }
+    }
+    // longest-processing-time order: heaviest subtrees claimed first
+    tasks.sort_by(|a, b| b.est_flops.partial_cmp(&a.est_flops).unwrap());
+
+    let mut updates: Vec<Option<Update>> = (0..ns).map(|_| None).collect();
+    let results = pool::parallel_consume(tasks, workers.min(n_tasks), |_, task| {
+        run_subtree(task, &bx, plan, cfg)
+    });
+    let mut first_err: Option<(usize, FactorError)> = None;
+    for r in results {
+        match r {
+            Ok((root, up, fl)) => {
+                updates[root] = up;
+                total_flops += fl;
+            }
+            Err(e) => {
+                // order failures by elimination (postorder) position: a
+                // subtree failure is independent of the other subtrees,
+                // so the earliest one is exactly what the sequential
+                // walk would have hit first — the modes stay
+                // interchangeable even in their errors
+                let pos = match &e {
+                    FactorError::ZeroPivot(k) => plan.pnew[*k],
+                    _ => usize::MAX,
+                };
+                if first_err.as_ref().map_or(true, |(p, _)| pos < *p) {
+                    first_err = Some((pos, e));
+                }
+            }
+        }
+    }
+    if let Some((_, e)) = first_err {
+        return Err(e);
+    }
+
+    // sequential top: ascending order is a valid schedule (children
+    // always precede parents), subtree roots' updates are already in place
+    let mut scratch = Scratch::new(n);
+    for s in 0..ns {
+        if sch.task_of[s] != NONE {
+            continue;
+        }
+        let ups: Vec<Update> = plan.children[s]
+            .iter()
+            .filter_map(|&c| updates[c].take())
+            .collect();
+        let up = process_snode(
+            s,
+            &bx,
+            plan,
+            cfg,
+            &mut scratch,
+            ups,
+            lx_parts[s].take().expect("top slice claimed twice"),
+            d_parts[s].take().expect("top slice claimed twice"),
+            &mut total_flops,
+        )?;
+        updates[s] = up;
+    }
+    drop(lx_parts);
+    drop(d_parts);
+    Ok(finish(plan, lx, d, total_flops))
+}
+
+fn finish(plan: &SupernodalPlan, lx: Vec<f64>, d: Vec<f64>, flops: f64) -> LdlFactor {
+    LdlFactor {
+        n: plan.n,
+        lp: plan.lp.clone(),
+        li: plan.li.clone(),
+        lx,
+        d,
+        flops,
+        post: Some(plan.post.clone()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::numeric::{analyze, factorize};
+    use crate::solver::supernode::plan;
+    use crate::sparse::pattern::symmetrize_spd_like;
+    use crate::sparse::CooMatrix;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn residual_norm(a: &CsrMatrix, x: &[f64], b: &[f64]) -> f64 {
+        let ax = a.matvec(x);
+        ax.iter()
+            .zip(b)
+            .map(|(axi, bi)| (axi - bi).powi(2))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    fn serial_cfg() -> FactorConfig {
+        FactorConfig {
+            mode: FactorMode::Supernodal,
+            ..Default::default()
+        }
+    }
+
+    fn parallel_cfg() -> FactorConfig {
+        FactorConfig {
+            mode: FactorMode::SupernodalParallel,
+            parallel_flop_min: 0.0, // engage threads even on tiny inputs
+            ..Default::default()
+        }
+    }
+
+    fn random_spd(rng: &mut Rng, n: usize, density: f64) -> CsrMatrix {
+        let edges = prop::random_sym_edges(rng, n, density);
+        let mut coo = CooMatrix::new(n, n);
+        for i in 0..n {
+            coo.push(i, i, 1.0);
+        }
+        for (i, j) in edges {
+            coo.push_sym(i, j, rng.range_f64(-1.0, 1.0));
+        }
+        symmetrize_spd_like(&coo.to_csr(), 2.0)
+    }
+
+    #[test]
+    fn matches_scalar_on_grid() {
+        let a = symmetrize_spd_like(
+            &crate::collection::generators::grid2d(15, 11),
+            2.0,
+        );
+        let sym = analyze(&a);
+        let p = plan(&a, &serial_cfg());
+        let scalar = factorize(&a, &sym).unwrap();
+        let sn = factorize_supernodal(&a, &p, &serial_cfg()).unwrap();
+        assert_eq!(sn.fill(), scalar.fill());
+        assert_eq!(sn.fill(), sym.cost.fill);
+        let b: Vec<f64> = (0..a.nrows).map(|i| (i as f64 * 0.37).cos()).collect();
+        let xs = scalar.solve(&b);
+        let xn = sn.solve(&b);
+        for (u, v) in xs.iter().zip(&xn) {
+            assert!((u - v).abs() < 1e-10, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn parallel_is_bit_identical_to_serial() {
+        let mut rng = Rng::new(77);
+        let a = random_spd(&mut rng, 300, 0.03);
+        let p = plan(&a, &serial_cfg());
+        let serial = factorize_supernodal(&a, &p, &serial_cfg()).unwrap();
+        let par = factorize_supernodal(&a, &p, &parallel_cfg()).unwrap();
+        assert_eq!(serial.lx, par.lx, "parallel schedule changed the numerics");
+        assert_eq!(serial.d, par.d);
+        assert_eq!(serial.fill(), par.fill());
+    }
+
+    #[test]
+    fn prop_supernodal_agrees_with_scalar() {
+        prop::check("supernodal-vs-scalar", 12, |rng| {
+            let n = rng.range(2, 90);
+            let a = random_spd(rng, n, 0.12);
+            let sym = analyze(&a);
+            let p = plan(&a, &serial_cfg());
+            let scalar = factorize(&a, &sym).unwrap();
+            for cfg in [serial_cfg(), parallel_cfg()] {
+                let f = factorize_supernodal(&a, &p, &cfg).unwrap();
+                assert_eq!(f.fill(), scalar.fill(), "fill diverged (n={n})");
+                let mut r = Rng::new(rng.next_u64());
+                let b: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+                let x = f.solve(&b);
+                let bnorm: f64 = b.iter().map(|v| v * v).sum::<f64>().sqrt();
+                assert!(
+                    residual_norm(&a, &x, &b) < 1e-10 * (1.0 + bnorm) * n as f64,
+                    "residual too large (n={n})"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn zero_pivot_detected_in_original_numbering() {
+        let mut coo = CooMatrix::new(3, 3);
+        coo.push(0, 0, 2.0);
+        coo.push(1, 1, 0.0);
+        coo.push(2, 2, 2.0);
+        let a = coo.to_csr();
+        let p = plan(&a, &serial_cfg());
+        let err = factorize_supernodal(&a, &p, &serial_cfg()).unwrap_err();
+        assert_eq!(err, FactorError::ZeroPivot(1));
+    }
+
+    #[test]
+    fn amalgamated_factor_keeps_exact_fill() {
+        // heavy amalgamation pads panels; the stored factor must not grow
+        let mut rng = Rng::new(5);
+        let raw = crate::collection::generators::banded(200, 5, &mut rng);
+        let a = symmetrize_spd_like(&raw, 2.0);
+        let sym = analyze(&a);
+        let cfg = FactorConfig {
+            relax_ratio: 1.0,
+            ..serial_cfg()
+        };
+        let p = plan(&a, &cfg);
+        assert!(p.padded > 0, "test wants actual amalgamation");
+        let f = factorize_supernodal(&a, &p, &cfg).unwrap();
+        assert_eq!(f.fill(), sym.cost.fill);
+        let b = vec![1.0; a.nrows];
+        let x = f.solve(&b);
+        assert!(residual_norm(&a, &x, &b) < 1e-8);
+    }
+
+    #[test]
+    fn empty_and_unit_matrices() {
+        for n in [0usize, 1] {
+            let mut coo = CooMatrix::new(n, n);
+            for i in 0..n {
+                coo.push(i, i, 3.0);
+            }
+            let a = coo.to_csr();
+            let p = plan(&a, &serial_cfg());
+            let f = factorize_supernodal(&a, &p, &serial_cfg()).unwrap();
+            assert_eq!(f.fill(), n as u64);
+            let x = f.solve(&vec![6.0; n]);
+            for v in x {
+                assert!((v - 2.0).abs() < 1e-14);
+            }
+        }
+    }
+}

@@ -55,6 +55,34 @@ pub fn symmetrized_pattern(a: &CsrMatrix) -> (Vec<usize>, Vec<usize>) {
     (indptr, out)
 }
 
+/// Node degrees of the symmetrized adjacency (`A + Aᵀ`, diagonal
+/// excluded) **without materializing the graph**: one pass over the
+/// stored entries with O(n) extra memory. For every stored `(u, v)` the
+/// transpose direction contributes only when `(v, u)` is *not* stored
+/// (checked by binary search in row `v`), which is exactly the dedup
+/// [`symmetrized_pattern`] performs — the counts match
+/// `Graph::from_matrix(a).degree(v)` for every `v`.
+///
+/// This is the serving-path replacement for building a full `Graph` just
+/// to read degrees in `features::extract`.
+pub fn symmetrized_degrees(a: &CsrMatrix) -> Vec<usize> {
+    assert_eq!(a.nrows, a.ncols, "pattern ops need a square matrix");
+    let n = a.nrows;
+    let mut deg = vec![0usize; n];
+    for u in 0..n {
+        for &v in a.row_indices(u) {
+            if v == u {
+                continue;
+            }
+            deg[u] += 1;
+            if a.row_indices(v).binary_search(&u).is_err() {
+                deg[v] += 1;
+            }
+        }
+    }
+    deg
+}
+
 /// Make a structurally-symmetric matrix with a full positive diagonal:
 /// `B = (A + Aᵀ)/2` pattern-wise, with the diagonal forced to
 /// `diag_boost * (1 + max row abs-sum)` so the result is strictly
@@ -193,6 +221,34 @@ mod tests {
         let (indptr, indices) = symmetrized_pattern(&m.to_csr());
         assert_eq!(indptr, vec![0, 1, 2]);
         assert_eq!(indices, vec![1, 0]);
+    }
+
+    #[test]
+    fn symmetrized_degrees_match_graph() {
+        use crate::util::prop;
+        prop::check("symmetrized-degrees", 10, |rng| {
+            let n = rng.range(1, 60);
+            let mut m = CooMatrix::new(n, n);
+            // random *directed* entries: exercises one-sided, two-sided,
+            // and diagonal storage
+            for _ in 0..(3 * n) {
+                let i = rng.below(n);
+                let j = rng.below(n);
+                m.push(i, j, 1.0);
+            }
+            let a = m.to_csr();
+            let g = crate::graph::Graph::from_matrix(&a);
+            let deg = symmetrized_degrees(&a);
+            for v in 0..n {
+                assert_eq!(deg[v], g.degree(v), "vertex {v}");
+            }
+        });
+    }
+
+    #[test]
+    fn symmetrized_degrees_on_asym_sample() {
+        // adjacency of `asym()` is 0-1, 1-2
+        assert_eq!(symmetrized_degrees(&asym()), vec![1, 2, 1]);
     }
 
     #[test]

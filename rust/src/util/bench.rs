@@ -10,6 +10,7 @@
 use std::hint::black_box;
 use std::time::Instant;
 
+use super::json::{self, Json};
 use super::stats;
 
 /// One benchmark measurement.
@@ -121,9 +122,63 @@ impl Bencher {
     }
 }
 
+impl Measurement {
+    /// Machine-readable form for `BENCH_*.json` artifacts.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            ("iters", json::num(self.iters as f64)),
+            ("mean_s", json::num(self.mean_s)),
+            ("p50_s", json::num(self.p50_s)),
+            ("p99_s", json::num(self.p99_s)),
+            ("min_s", json::num(self.min_s)),
+        ])
+    }
+}
+
 /// Print a section header in the style criterion groups use.
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
+}
+
+/// Accumulator for a machine-readable bench artifact (`BENCH_*.json`):
+/// top-level metadata plus a `results` array of records. Future PRs diff
+/// these files to track the perf trajectory.
+#[derive(Default)]
+pub struct JsonReport {
+    meta: Vec<(String, Json)>,
+    records: Vec<Json>,
+}
+
+impl JsonReport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Set a top-level metadata field (machine info, config, …).
+    pub fn set(&mut self, key: &str, value: Json) {
+        self.meta.push((key.to_string(), value));
+    }
+
+    /// Append one result record.
+    pub fn push(&mut self, record: Json) {
+        self.records.push(record);
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut map: std::collections::BTreeMap<String, Json> = self
+            .meta
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
+        map.insert("results".to_string(), Json::Arr(self.records.clone()));
+        Json::Obj(map)
+    }
+
+    /// Write the artifact; returns the path it was written to.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+    }
 }
 
 #[cfg(test)]
@@ -144,6 +199,41 @@ mod tests {
         assert!(m.mean_s > 0.0);
         assert!(m.p99_s >= m.p50_s * 0.5);
         assert!(m.min_s <= m.mean_s + 1e-9);
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        let mut rep = JsonReport::new();
+        rep.set("workers", json::num(4.0));
+        rep.push(json::obj(vec![
+            ("name", json::s("case/factorize")),
+            ("n", json::num(100.0)),
+            ("min_s", json::num(0.25)),
+        ]));
+        let parsed = json::parse(&rep.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("workers").unwrap().as_usize(), Some(4));
+        let results = parsed.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(
+            results[0].get("name").unwrap().as_str(),
+            Some("case/factorize")
+        );
+    }
+
+    #[test]
+    fn measurement_to_json_has_all_fields() {
+        let m = Measurement {
+            name: "x".into(),
+            iters: 3,
+            mean_s: 1.0,
+            p50_s: 1.0,
+            p99_s: 2.0,
+            min_s: 0.5,
+        };
+        let j = m.to_json();
+        for key in ["name", "iters", "mean_s", "p50_s", "p99_s", "min_s"] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
     }
 
     #[test]

@@ -62,6 +62,36 @@ where
     slots.into_iter().map(|s| s.expect("missing slot")).collect()
 }
 
+/// Like [`parallel_map`], but each task is handed to its worker *by
+/// value* — the shape the supernodal solver needs, where a task owns
+/// `&mut` slices of the shared factor (disjoint column ranges split off
+/// up front, so no locking on the output arrays).
+///
+/// Tasks are claimed in order through a shared atomic index, so callers
+/// that sort tasks most-expensive-first get longest-processing-time
+/// scheduling for free. Results are returned in input order.
+pub fn parallel_consume<T, R, F>(tasks: Vec<T>, n_workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    // wrap each task in a cell so the shared-reference scheduling of
+    // parallel_map can hand out owned values
+    let cells: Vec<std::sync::Mutex<Option<T>>> = tasks
+        .into_iter()
+        .map(|t| std::sync::Mutex::new(Some(t)))
+        .collect();
+    parallel_map(&cells, n_workers, |i, cell| {
+        let task = cell
+            .lock()
+            .expect("task cell poisoned")
+            .take()
+            .expect("task claimed twice");
+        f(i, task)
+    })
+}
+
 /// Default worker count: available parallelism minus one (leave a core
 /// for the coordinator thread), at least 1.
 pub fn default_workers() -> usize {
@@ -108,5 +138,49 @@ mod tests {
     #[test]
     fn default_workers_positive() {
         assert!(default_workers() >= 1);
+    }
+
+    #[test]
+    fn consume_moves_tasks_and_preserves_order() {
+        // tasks own mutable state; results come back in input order
+        let tasks: Vec<Vec<u64>> = (0..64).map(|i| vec![i as u64; 3]).collect();
+        let out = parallel_consume(tasks, 4, |i, mut v| {
+            v.push(i as u64);
+            v.iter().sum::<u64>()
+        });
+        assert_eq!(out.len(), 64);
+        for (i, &s) in out.iter().enumerate() {
+            assert_eq!(s, 4 * i as u64);
+        }
+    }
+
+    #[test]
+    fn consume_with_disjoint_mut_slices() {
+        // the supernodal use case: tasks own disjoint &mut chunks of one
+        // shared buffer, written concurrently without locks
+        let mut buf = vec![0u64; 40];
+        {
+            let mut parts: Vec<&mut [u64]> = Vec::new();
+            let mut rest: &mut [u64] = &mut buf;
+            for _ in 0..8 {
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut(5);
+                parts.push(head);
+                rest = tail;
+            }
+            let tasks: Vec<(usize, &mut [u64])> =
+                parts.into_iter().enumerate().collect();
+            parallel_consume(tasks, 4, |_, (k, part)| {
+                for (j, x) in part.iter_mut().enumerate() {
+                    *x = (k * 5 + j) as u64;
+                }
+            });
+        }
+        assert_eq!(buf, (0..40).map(|x| x as u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn consume_single_worker_sequential() {
+        let out = parallel_consume(vec![1u32, 2, 3], 1, |i, x| x + i as u32);
+        assert_eq!(out, vec![1, 3, 5]);
     }
 }

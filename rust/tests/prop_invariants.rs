@@ -134,6 +134,75 @@ fn prop_orderings_agree_on_solution() {
     });
 }
 
+/// The three factor paths (scalar up-looking, supernodal multifrontal
+/// sequential and parallel) are interchangeable: identical `fill()`
+/// (always equal to the symbolic count) and residual-equivalent
+/// solutions, under every label ordering.
+#[test]
+fn prop_factor_paths_agree() {
+    use smr::solver::{analyze_with, factorize_with, FactorConfig, FactorMode};
+    let configs = [
+        FactorConfig {
+            mode: FactorMode::Scalar,
+            ..FactorConfig::default()
+        },
+        FactorConfig {
+            mode: FactorMode::Supernodal,
+            ..FactorConfig::default()
+        },
+        FactorConfig {
+            mode: FactorMode::SupernodalParallel,
+            parallel_flop_min: 0.0,
+            ..FactorConfig::default()
+        },
+    ];
+    check("factor-paths-agree", 10, |rng| {
+        let n = rng.range(4, 100);
+        let a = symmetrize_spd_like(&random_matrix(rng, n, 0.1), 2.0);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let bnorm: f64 = b.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let perm = ReorderAlgorithm::Amd.compute(&a, rng.next_u64());
+        let pa = perm.apply(&a);
+        let p = perm.as_slice();
+        let mut pb = vec![0.0; n];
+        for i in 0..n {
+            pb[p[i]] = b[i];
+        }
+        let sym_fill = smr::solver::analyze(&pa).cost.fill;
+        let mut reference: Option<Vec<f64>> = None;
+        for cfg in &configs {
+            let an = analyze_with(&pa, cfg);
+            let f = factorize_with(&pa, &an, cfg).unwrap();
+            assert_eq!(f.fill(), sym_fill, "{:?}: fill", cfg.mode);
+            let px = f.solve(&pb);
+            let ax = pa.matvec(&px);
+            let res: f64 = ax
+                .iter()
+                .zip(&pb)
+                .map(|(axi, bi)| (axi - bi).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            assert!(
+                res < 1e-10 * (1.0 + bnorm) * n as f64,
+                "{:?}: residual {res} (n={n})",
+                cfg.mode
+            );
+            match &reference {
+                None => reference = Some(px),
+                Some(x0) => {
+                    for i in 0..n {
+                        assert!(
+                            (px[i] - x0[i]).abs() < 1e-8,
+                            "{:?}: solution diverges at {i}",
+                            cfg.mode
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
 /// Feature extraction is permutation-covariant in the right places:
 /// dimension/nnz/degree stats are invariant; bandwidth/profile change.
 #[test]
