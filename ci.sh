@@ -1,8 +1,18 @@
 #!/usr/bin/env bash
-# Tier-1 verification (see ROADMAP.md): release build + full test suite.
-# Run from anywhere; the crate lives in rust/.
+# Verification tiers (see ROADMAP.md). Run from anywhere; the crate
+# lives in rust/.
+#
+#   tier 1 (always, the hard gate): release build + full test suite
+#   tier 2 (style/lint, opt in):    cargo fmt --check + clippy -D warnings
+#                                   enable with `CI_TIER2=1 ./ci.sh`
+#                                   or `./ci.sh --tier2`
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
 cargo build --release
 cargo test -q
+
+if [[ "${CI_TIER2:-0}" == "1" || "${1:-}" == "--tier2" ]]; then
+  cargo fmt --check
+  cargo clippy --all-targets -- -D warnings
+fi

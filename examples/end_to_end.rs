@@ -107,7 +107,7 @@ fn main() -> anyhow::Result<()> {
     let mut correct = 0usize;
     for (k, &i) in test_idx.iter().enumerate() {
         let rec = &dataset.records[i];
-        let pred_alg = ReorderAlgorithm::LABEL_SET[predictions[k].min(3)];
+        let pred_alg = ReorderAlgorithm::from_label(predictions[k]);
         amd_s += rec.time_of(ReorderAlgorithm::Amd).unwrap();
         pred_s += rec.time_of(pred_alg).unwrap();
         ideal_s += rec.best().total_s;

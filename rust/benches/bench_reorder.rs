@@ -1,11 +1,23 @@
-//! Per-algorithm reordering benchmarks over representative structures.
-//! Run with `cargo bench --bench bench_reorder`.
+//! Reordering benchmarks: the legacy sequential per-algorithm path
+//! (graph rebuilt + scratch reallocated per call) against the
+//! analysis/plan/execute `ReorderEngine` (one `MatrixAnalysis`, warm
+//! per-worker `Workspace`s, pool-parallel sweep).
+//!
+//! Run with `cargo bench --bench bench_reorder`. Besides the console
+//! report it writes a machine-readable `BENCH_reorder.json` (override
+//! the path with `BENCH_OUT`) so future PRs can diff the perf
+//! trajectory: one record per matrix with the sequential 7-algorithm
+//! sweep wall time, the engine-swept wall time, and the speedup, plus
+//! per-algorithm warm-workspace timings.
 
 use smr::collection::generators as g;
-use smr::graph::Graph;
-use smr::reorder::ReorderAlgorithm;
-use smr::util::bench::{section, Bencher};
+use smr::reorder::{MatrixAnalysis, ReorderAlgorithm, ReorderEngine, Workspace};
+use smr::util::bench::{section, Bencher, JsonReport};
+use smr::util::json;
+use smr::util::pool;
 use smr::util::rng::Rng;
+
+const SEED: u64 = 42;
 
 fn main() {
     let mut rng = Rng::new(1);
@@ -16,33 +28,91 @@ fn main() {
         ("circuit_2000", g::circuit(2000, 4, &mut rng)),
         ("powerlaw_2000", g::powerlaw(2000, 3, &mut rng)),
     ];
-    let algorithms = [
-        ReorderAlgorithm::Rcm,
-        ReorderAlgorithm::Md,
-        ReorderAlgorithm::Amd,
-        ReorderAlgorithm::Amf,
-        ReorderAlgorithm::Qamd,
-        ReorderAlgorithm::Nd,
-        ReorderAlgorithm::Scotch,
-        ReorderAlgorithm::Pord,
-    ];
+    let workers = pool::default_workers();
+    let engine = ReorderEngine::new(workers);
+
+    let mut report = JsonReport::new();
+    report.set("bench", json::s("bench_reorder"));
+    report.set("workers", json::num(workers as f64));
+    report.set("algorithms", json::num(ReorderAlgorithm::PAPER_SET.len() as f64));
+
     for (name, matrix) in &cases {
         section(&format!(
-            "reorder: {name} (n={}, nnz={})",
+            "reorder sweep: {name} (n={}, nnz={})",
             matrix.nrows,
             matrix.nnz()
         ));
-        let graph = Graph::from_matrix(matrix);
         let mut b = Bencher::new();
-        for alg in algorithms {
-            b.bench(&format!("{name}/{alg}"), || {
-                alg.compute_on_graph(&graph, 42)
-            });
+
+        // Legacy offline path: every algorithm re-symmetrizes the matrix
+        // and allocates its own scratch — what `dataset::sweep_one` did
+        // before the engine existed.
+        let seq = b
+            .bench(&format!("{name}/sweep7/sequential"), || {
+                ReorderAlgorithm::PAPER_SET
+                    .iter()
+                    .map(|alg| alg.compute(matrix, SEED).len())
+                    .sum::<usize>()
+            })
+            .clone();
+
+        // Engine path: one analysis, pool-parallel sweep, one warm
+        // workspace per worker. The analysis is built INSIDE the timed
+        // closure so both sides pay their symmetrization cost (the
+        // sequential baseline pays seven, a real engine sweep pays one).
+        let eng = b
+            .bench(&format!("{name}/sweep7/engine_x{workers}"), || {
+                let analysis = MatrixAnalysis::of(matrix);
+                engine.sweep(&analysis, &ReorderAlgorithm::PAPER_SET, SEED)
+            })
+            .clone();
+
+        report.push(json::obj(vec![
+            ("name", json::s(&format!("{name}/sweep7"))),
+            ("n", json::num(matrix.nrows as f64)),
+            ("nnz", json::num(matrix.nnz() as f64)),
+            ("sequential_s", json::num(seq.min_s)),
+            ("engine_s", json::num(eng.min_s)),
+            (
+                "speedup",
+                json::num(seq.min_s / eng.min_s.max(1e-12)),
+            ),
+        ]));
+
+        // Per-algorithm warm-workspace timings (shared analysis, reused
+        // scratch — the per-candidate cost the engine sweep is built of).
+        let analysis = MatrixAnalysis::of(matrix);
+        let mut ws = Workspace::new();
+        for alg in ReorderAlgorithm::PAPER_SET {
+            let m = b
+                .bench(&format!("{name}/{alg}/warm"), || {
+                    alg.compute_with(analysis.graph(), SEED, &mut ws)
+                })
+                .clone();
+            report.push(json::obj(vec![
+                ("name", json::s(&format!("{name}/{alg}/warm"))),
+                ("n", json::num(matrix.nrows as f64)),
+                ("algorithm", json::s(alg.name())),
+                ("wall_s", json::num(m.min_s)),
+            ]));
         }
     }
 
-    section("graph construction");
+    section("analysis construction");
     let big = g::grid2d(64, 64);
     let mut b = Bencher::new();
-    b.bench("Graph::from_matrix(grid 64x64)", || Graph::from_matrix(&big));
+    let m = b
+        .bench("MatrixAnalysis::of(grid 64x64)", || MatrixAnalysis::of(&big))
+        .clone();
+    report.push(json::obj(vec![
+        ("name", json::s("analysis/grid2d_64x64")),
+        ("n", json::num(big.nrows as f64)),
+        ("wall_s", json::num(m.min_s)),
+    ]));
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_reorder.json".into());
+    match report.write(&out) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\nfailed to write {out}: {e}"),
+    }
 }

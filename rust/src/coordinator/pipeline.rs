@@ -9,11 +9,16 @@
 //! handed to [`SelectionPipeline::new`] (`solver::FactorConfig`:
 //! scalar / supernodal / supernodal-parallel) — the default routes every
 //! solve through the parallel supernodal multifrontal kernel.
+//!
+//! [`SelectionPipeline::run`] builds one `reorder::MatrixAnalysis` per
+//! matrix and feeds it to both the feature extractor (shared degrees)
+//! and the chosen ordering, so selection and execution pay a single
+//! symmetrization.
 
 use crate::features;
 use crate::ml::normalize::Normalizer;
 use crate::ml::Classifier;
-use crate::reorder::ReorderAlgorithm;
+use crate::reorder::{MatrixAnalysis, ReorderAlgorithm, Workspace};
 use crate::solver::{prepare, solve_ordered, SolveReport, SolverConfig};
 use crate::sparse::CsrMatrix;
 use crate::util::Timer;
@@ -66,32 +71,40 @@ impl SelectionPipeline {
         }
     }
 
-    /// Predict the best reordering algorithm for a matrix.
+    /// Classifier inference on an extracted feature vector (label id
+    /// mapped through the clamped `ReorderAlgorithm::from_label`).
+    fn predict_from_features(&self, feats: &[f64]) -> (ReorderAlgorithm, f64) {
+        let t_p = Timer::start();
+        let x = self.normalizer.transform_row(feats);
+        let label = self.classifier.predict(&x);
+        let predict_s = t_p.elapsed_s();
+        (ReorderAlgorithm::from_label(label), predict_s)
+    }
+
+    /// Predict the best reordering algorithm for a matrix (standalone:
+    /// extracts features itself; `run` shares the reorder analysis).
     pub fn select(&self, a: &CsrMatrix) -> (ReorderAlgorithm, f64, f64) {
         let t_f = Timer::start();
         let feats = features::extract(a);
         let feature_s = t_f.elapsed_s();
-        let t_p = Timer::start();
-        let x = self.normalizer.transform_row(&feats);
-        let label = self.classifier.predict(&x);
-        let predict_s = t_p.elapsed_s();
-        (
-            ReorderAlgorithm::LABEL_SET[label.min(3)],
-            feature_s,
-            predict_s,
-        )
+        let (algorithm, predict_s) = self.predict_from_features(&feats);
+        (algorithm, feature_s, predict_s)
     }
 
-    /// Full pipeline: select, reorder, solve.
+    /// Full pipeline: analyze once, select, reorder, solve — the feature
+    /// degrees and the ordering both come from the same
+    /// [`MatrixAnalysis`], so the symmetrization is paid exactly once.
+    /// Its cost is charged to `feature_s` (it replaces the degree sweep
+    /// [`Self::select`] pays there), keeping every phase of the
+    /// end-to-end accounting covered by a timer.
     pub fn run(&self, a: &CsrMatrix) -> PipelineReport {
-        let (algorithm, feature_s, predict_s) = self.select(a);
         let spd = prepare(a, &self.solver);
-        let t_r = Timer::start();
-        let perm = algorithm.compute(&spd, self.reorder_seed);
-        let reorder_s = t_r.elapsed_s();
-        let mut solve =
-            solve_ordered(&spd, &perm, &self.solver).expect("prepared matrix factorizes");
-        solve.reorder_s = reorder_s;
+        let t_f = Timer::start();
+        let analysis = MatrixAnalysis::of(&spd);
+        let feats = features::extract_with_degrees(a, analysis.degrees());
+        let feature_s = t_f.elapsed_s();
+        let (algorithm, predict_s) = self.predict_from_features(&feats);
+        let solve = self.solve_on_analysis(&spd, &analysis, algorithm, 0.0);
         PipelineReport {
             algorithm,
             feature_s,
@@ -100,14 +113,34 @@ impl SelectionPipeline {
         }
     }
 
-    /// Solve under a *fixed* algorithm (baseline comparisons).
+    /// Solve under a *fixed* algorithm (baseline comparisons). No
+    /// feature pass here, so the analysis cost is charged to the
+    /// report's `reorder_s` — the phase it belonged to before the
+    /// ordering and the graph build were split.
     pub fn run_fixed(&self, a: &CsrMatrix, algorithm: ReorderAlgorithm) -> SolveReport {
         let spd = prepare(a, &self.solver);
+        let t_a = Timer::start();
+        let analysis = MatrixAnalysis::of(&spd);
+        let analysis_s = t_a.elapsed_s();
+        self.solve_on_analysis(&spd, &analysis, algorithm, analysis_s)
+    }
+
+    /// Reorder on a shared analysis, then solve, timing both;
+    /// `analysis_s` is folded into the reported reorder time when the
+    /// caller hasn't already accounted for the analysis elsewhere.
+    fn solve_on_analysis(
+        &self,
+        spd: &CsrMatrix,
+        analysis: &MatrixAnalysis,
+        algorithm: ReorderAlgorithm,
+        analysis_s: f64,
+    ) -> SolveReport {
+        let mut ws = Workspace::new();
         let t_r = Timer::start();
-        let perm = algorithm.compute(&spd, self.reorder_seed);
-        let reorder_s = t_r.elapsed_s();
+        let perm = algorithm.compute_with(analysis.graph(), self.reorder_seed, &mut ws);
+        let reorder_s = analysis_s + t_r.elapsed_s();
         let mut solve =
-            solve_ordered(&spd, &perm, &self.solver).expect("prepared matrix factorizes");
+            solve_ordered(spd, &perm, &self.solver).expect("prepared matrix factorizes");
         solve.reorder_s = reorder_s;
         solve
     }

@@ -116,7 +116,7 @@ impl PredictionService {
         let label = rrx
             .recv()
             .map_err(|_| anyhow::anyhow!("service dropped request"))?;
-        Ok(ReorderAlgorithm::LABEL_SET[label.min(3)])
+        Ok(ReorderAlgorithm::from_label(label))
     }
 
     /// Shut down and join the runtime thread.

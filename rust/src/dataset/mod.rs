@@ -7,9 +7,17 @@
 //! with the shortest total solution time (paper: "the reordering
 //! algorithm with the shortest solving time ... as its label").
 //!
-//! The sweep is embarrassingly parallel over matrices and runs on the
-//! in-tree thread pool; with the flop-cap guard a full 936-matrix × 4
-//! label-algorithm build takes minutes, not hours.
+//! The sweep can parallelize at two levels, both on the in-tree thread
+//! pool: `build_dataset` fans matrices out over `workers`, and inside
+//! each matrix `sweep_one` analyzes the pattern once
+//! (`reorder::MatrixAnalysis`) and dispatches the candidate orderings +
+//! their solves over `ReorderEngine::sweep_map` (`reorder_workers`,
+//! default 1 so the timed labels stay contention-free). Nesting is
+//! pinned: when the outer pool already runs one matrix per core, the
+//! inner engine degrades to sequential — the same one-thread-per-core
+//! discipline the supernodal factor mode uses here. With the flop-cap
+//! guard a full 936-matrix × 4 label-algorithm build takes minutes, not
+//! hours.
 
 use std::path::Path;
 
@@ -17,12 +25,11 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::collection::NamedMatrix;
 use crate::features::{self, N_FEATURES};
-use crate::reorder::ReorderAlgorithm;
+use crate::reorder::{MatrixAnalysis, ReorderAlgorithm, ReorderEngine};
 use crate::solver::{prepare, solve_ordered, FactorConfig, FactorMode, SolverConfig};
 use crate::util::json::{self, Json};
 use crate::util::pool::{default_workers, parallel_map};
 use crate::util::rng::Rng;
-use crate::util::Timer;
 
 /// Per-(matrix, algorithm) sweep measurement.
 #[derive(Clone, Copy, Debug)]
@@ -58,11 +65,13 @@ impl MatrixRecord {
             .map(|r| r.total_s)
     }
 
-    /// Fastest swept algorithm (the label algorithm).
+    /// Fastest swept algorithm (the label algorithm). Ranked by
+    /// [`faster`] — the same rule that assigns the label, so the two
+    /// always agree.
     pub fn best(&self) -> &AlgoResult {
         self.results
             .iter()
-            .min_by(|a, b| a.total_s.partial_cmp(&b.total_s).unwrap())
+            .min_by(|a, b| faster(a, b))
             .expect("non-empty results")
     }
 }
@@ -81,7 +90,17 @@ pub struct SweepConfig {
     pub solver: SolverConfig,
     /// Seed for ND-family bisection randomness.
     pub reorder_seed: u64,
+    /// Outer parallelism: matrices swept concurrently.
     pub workers: usize,
+    /// Inner parallelism: candidate orderings (and their solves) of one
+    /// matrix dispatched concurrently by `ReorderEngine`. Defaults to 1:
+    /// the per-algorithm wall times are the label signal, and concurrent
+    /// solves would contend for cores and contaminate them. Raise it for
+    /// throughput when timings don't matter (symbolic sweeps, warmups);
+    /// permutations and fills are identical either way (property
+    /// tested). `build_dataset` pins this to 1 whenever the outer pool
+    /// already has more than one matrix in flight.
+    pub reorder_workers: usize,
 }
 
 impl Default for SweepConfig {
@@ -101,6 +120,9 @@ impl Default for SweepConfig {
             },
             reorder_seed: 0xDA7A,
             workers: default_workers(),
+            // timed label sweeps stay contention-free by default; the
+            // pool-parallel dispatch is an explicit opt-in
+            reorder_workers: 1,
         }
     }
 }
@@ -111,8 +133,17 @@ pub fn build_dataset(
     algorithms: &[ReorderAlgorithm],
     cfg: &SweepConfig,
 ) -> Dataset {
+    // Nested-pool pinning (same reasoning as the sequential supernodal
+    // factor above): if the matrix-level pool runs more than one job at
+    // once the cores are spoken for, so each job's inner ordering sweep
+    // runs sequentially instead of oversubscribing.
+    let outer = cfg.workers.max(1).min(collection.len().max(1));
+    let mut inner_cfg = *cfg;
+    if outer > 1 {
+        inner_cfg.reorder_workers = 1;
+    }
     let records = parallel_map(collection, cfg.workers, |_, nm| {
-        sweep_one(nm, algorithms, cfg)
+        sweep_one(nm, algorithms, &inner_cfg)
     });
     Dataset {
         records,
@@ -120,36 +151,57 @@ pub fn build_dataset(
     }
 }
 
-/// Sweep a single matrix.
+/// Total-order ranking of sweep results: shorter total time wins, NaN
+/// timings lose (instead of panicking), and ties break on `LABEL_SET`
+/// index (non-label algorithms after all representatives) — the single
+/// rule both the labeler and `MatrixRecord::best` apply, so labels are
+/// stable across runs and result orderings.
+fn faster(a: &AlgoResult, b: &AlgoResult) -> std::cmp::Ordering {
+    let rank = |alg: ReorderAlgorithm| alg.label_index().unwrap_or(usize::MAX);
+    a.total_s
+        .total_cmp(&b.total_s)
+        .then_with(|| rank(a.algorithm).cmp(&rank(b.algorithm)))
+}
+
+/// Sweep a single matrix: analyze the pattern once, then dispatch every
+/// candidate ordering — and its timed solve — over the reorder engine.
 pub fn sweep_one(
     nm: &NamedMatrix,
     algorithms: &[ReorderAlgorithm],
     cfg: &SweepConfig,
 ) -> MatrixRecord {
     let a = prepare(&nm.matrix, &cfg.solver);
-    let feats = features::extract(&nm.matrix);
-    let mut results = Vec::with_capacity(algorithms.len());
-    for &alg in algorithms {
-        let t = Timer::start();
-        let perm = alg.compute(&a, cfg.reorder_seed);
-        let reorder_s = t.elapsed_s();
-        let mut report = solve_ordered(&a, &perm, &cfg.solver)
-            .expect("prepared matrices always factorize");
-        report.reorder_s = reorder_s;
-        results.push(AlgoResult {
-            algorithm: alg,
-            total_s: report.total_s(),
-            reorder_s,
-            fill: report.fill,
-            flops: report.flops,
-            estimated: report.estimated,
-        });
-    }
-    // label: fastest among the 4 label representatives present
+    // One symmetrization feeds everything: the prepared matrix has the
+    // symmetrized off-diagonal pattern of the raw one, so the analysis
+    // degrees are exactly `symmetrized_degrees(&nm.matrix)` and the
+    // feature extractor reuses them bit-for-bit.
+    let analysis = MatrixAnalysis::of(&a);
+    let feats = features::extract_with_degrees(&nm.matrix, analysis.degrees());
+    let engine = ReorderEngine::new(cfg.reorder_workers);
+    let results = engine.sweep_map(
+        &analysis,
+        algorithms,
+        cfg.reorder_seed,
+        |alg, perm, reorder_s| {
+            let mut report = solve_ordered(&a, &perm, &cfg.solver)
+                .expect("prepared matrices always factorize");
+            report.reorder_s = reorder_s;
+            AlgoResult {
+                algorithm: alg,
+                total_s: report.total_s(),
+                reorder_s,
+                fill: report.fill,
+                flops: report.flops,
+                estimated: report.estimated,
+            }
+        },
+    );
+    // Label: fastest among the 4 label representatives present, ranked
+    // by the shared `faster` rule (NaN-safe, LABEL_SET tie-break).
     let label_alg = results
         .iter()
         .filter(|r| r.algorithm.label_index().is_some())
-        .min_by(|a, b| a.total_s.partial_cmp(&b.total_s).unwrap())
+        .min_by(|a, b| faster(a, b))
         .map(|r| r.algorithm)
         .unwrap_or(ReorderAlgorithm::Amd);
     MatrixRecord {
@@ -424,6 +476,57 @@ mod tests {
                 "{}: label mismatch",
                 r.name
             );
+        }
+    }
+
+    #[test]
+    fn best_is_nan_safe_with_stable_tie_break() {
+        let mk = |algorithm, total_s| AlgoResult {
+            algorithm,
+            total_s,
+            reorder_s: 0.0,
+            fill: 1,
+            flops: 1.0,
+            estimated: false,
+        };
+        let r = MatrixRecord {
+            name: "t".into(),
+            family: "f".into(),
+            dimension: 1,
+            nnz: 1,
+            features: [0.0; N_FEATURES],
+            results: vec![
+                mk(ReorderAlgorithm::Scotch, f64::NAN), // NaN must lose, not panic
+                mk(ReorderAlgorithm::Rcm, 1.0),
+                mk(ReorderAlgorithm::Amd, 1.0), // tied: lower LABEL_SET index wins
+            ],
+            label: 0,
+        };
+        assert_eq!(r.best().algorithm, ReorderAlgorithm::Amd);
+    }
+
+    #[test]
+    fn sweep_one_parallel_inner_matches_sequential() {
+        let coll = generate_mini_collection(3, 1);
+        let base = SweepConfig::default();
+        let seq = SweepConfig {
+            reorder_workers: 1,
+            ..base
+        };
+        let par = SweepConfig {
+            reorder_workers: 4,
+            ..base
+        };
+        for nm in &coll {
+            let a = sweep_one(nm, &ReorderAlgorithm::LABEL_SET, &seq);
+            let b = sweep_one(nm, &ReorderAlgorithm::LABEL_SET, &par);
+            assert_eq!(a.features, b.features);
+            for (x, y) in a.results.iter().zip(&b.results) {
+                assert_eq!(x.algorithm, y.algorithm);
+                // permutations are identical, so symbolic outcomes are too
+                assert_eq!(x.fill, y.fill, "{}", nm.name);
+                assert_eq!(x.flops, y.flops, "{}", nm.name);
+            }
         }
     }
 

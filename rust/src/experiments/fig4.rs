@@ -103,9 +103,12 @@ pub fn run(ctx: &Context, artifacts_dir: Option<&Path>) -> Result<Vec<Cell>> {
     t.print();
     ctx.write_csv("fig4.csv", &t.to_csv())?;
 
+    // NaN accuracies (degenerate splits) are excluded rather than
+    // winning the total_cmp max
     if let Some(best) = cells
         .iter()
-        .max_by(|a, b| a.accuracy.partial_cmp(&b.accuracy).unwrap())
+        .filter(|c| !c.accuracy.is_nan())
+        .max_by(|a, b| a.accuracy.total_cmp(&b.accuracy))
     {
         println!(
             "best: {} under {} at {:.1}% (paper: RandomForest / Standardization, 86.7%)",

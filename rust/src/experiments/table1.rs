@@ -25,11 +25,13 @@ pub struct Row {
 
 impl Row {
     pub fn best(&self) -> ReorderAlgorithm {
+        // total order (NaN loses) with ties going to the lower LABEL_SET
+        // index — the same rule the dataset labeler applies
         let k = self
             .times
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(b.1))
             .map(|(k, _)| k)
             .unwrap();
         ReorderAlgorithm::LABEL_SET[k]

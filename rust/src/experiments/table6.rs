@@ -52,7 +52,7 @@ pub fn run(ctx: &Context) -> Result<Summary> {
         let x = ctx.forest.normalizer.transform_row(&all_x[i]);
         let label = crate::ml::Classifier::predict(&ctx.forest.forest, &x);
         prediction_s += t.elapsed_s();
-        let pred_alg = ReorderAlgorithm::LABEL_SET[label.min(3)];
+        let pred_alg = ReorderAlgorithm::from_label(label);
         let pred_time = rec.time_of(pred_alg).expect("label algo in sweep");
         let best = rec.best();
         amd_s += amd;

@@ -33,7 +33,7 @@ pub fn run(ctx: &Context) -> Result<(Vec<Row>, f64)> {
         let rec = &ctx.dataset.records[i];
         let x = ctx.forest.normalizer.transform_row(&all_x[i]);
         let label = crate::ml::Classifier::predict(&ctx.forest.forest, &x);
-        let pred_alg = ReorderAlgorithm::LABEL_SET[label.min(3)];
+        let pred_alg = ReorderAlgorithm::from_label(label);
         let amd_s = rec.time_of(ReorderAlgorithm::Amd).expect("amd");
         let predicted_s = rec.time_of(pred_alg).expect("pred");
         rows.push(Row {
@@ -53,7 +53,7 @@ pub fn run(ctx: &Context) -> Result<(Vec<Row>, f64)> {
             let rec = &ctx.dataset.records[i];
             let x = ctx.forest.normalizer.transform_row(&all_x[i]);
             let label = crate::ml::Classifier::predict(&ctx.forest.forest, &x);
-            let pred_alg = ReorderAlgorithm::LABEL_SET[label.min(3)];
+            let pred_alg = ReorderAlgorithm::from_label(label);
             rec.time_of(ReorderAlgorithm::Amd).unwrap()
                 / rec.time_of(pred_alg).unwrap().max(1e-12)
         })

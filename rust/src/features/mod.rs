@@ -45,7 +45,17 @@ pub const FEATURE_NAMES: [&str; N_FEATURES] = [
 
 /// The Table-3 feature vector of a square sparse matrix.
 pub fn extract(a: &CsrMatrix) -> [f64; N_FEATURES] {
+    let degrees = pattern::symmetrized_degrees(a);
+    extract_with_degrees(a, &degrees)
+}
+
+/// [`extract`] with caller-supplied symmetrized degrees — bit-identical
+/// output. `reorder::MatrixAnalysis::degrees` is exactly this vector, so
+/// a pipeline that already analyzed the matrix for reordering shares the
+/// symmetrization instead of re-deriving it here.
+pub fn extract_with_degrees(a: &CsrMatrix, degrees: &[usize]) -> [f64; N_FEATURES] {
     assert_eq!(a.nrows, a.ncols, "features need a square matrix");
+    assert_eq!(degrees.len(), a.nrows, "one degree per vertex");
     let n = a.nrows;
     let nnz = a.nnz();
 
@@ -71,12 +81,12 @@ pub fn extract(a: &CsrMatrix) -> [f64; N_FEATURES] {
         0.0
     };
 
-    // degrees of the symmetrized adjacency, without building the graph
-    let degrees = pattern::symmetrized_degrees(a);
+    // degrees of the symmetrized adjacency (computed by the caller —
+    // either the degree-only sweep or a shared reorder analysis)
     let mut deg_max = 0usize;
     let mut deg_min = usize::MAX;
     let mut deg_sum = 0f64;
-    for &d in &degrees {
+    for &d in degrees {
         deg_max = deg_max.max(d);
         deg_min = deg_min.min(d);
         deg_sum += d as f64;
@@ -236,6 +246,15 @@ mod tests {
         let f = extract(&coo.to_csr());
         assert_eq!(f[7], 1.0);
         assert_eq!(f[8], 0.0); // node 1 isolated
+    }
+
+    #[test]
+    fn extract_with_shared_degrees_is_bit_identical() {
+        use crate::reorder::MatrixAnalysis;
+        for a in [band(10, 1), band(33, 4), band(7, 3)] {
+            let ma = MatrixAnalysis::of(&a);
+            assert_eq!(extract(&a), extract_with_degrees(&a, ma.degrees()));
+        }
     }
 
     #[test]

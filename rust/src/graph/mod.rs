@@ -91,6 +91,14 @@ impl Graph {
         self.indptr[v + 1] - self.indptr[v]
     }
 
+    /// All vertex degrees. Equals `sparse::pattern::symmetrized_degrees`
+    /// of the originating matrix — `reorder::MatrixAnalysis` hands this
+    /// vector to `features::extract_with_degrees` so the feature path and
+    /// the ordering sweep share one symmetrization.
+    pub fn degrees(&self) -> Vec<usize> {
+        (0..self.n_vertices()).map(|v| self.degree(v)).collect()
+    }
+
     /// Connected components: returns (component id per vertex, count).
     pub fn components(&self) -> (Vec<usize>, usize) {
         let n = self.n_vertices();
@@ -120,8 +128,22 @@ impl Graph {
     /// Induced subgraph on `verts` (returns the subgraph and the mapping
     /// from subgraph vertex id to original id).
     pub fn subgraph(&self, verts: &[usize]) -> (Graph, Vec<usize>) {
+        let mut local = Vec::new();
+        (self.subgraph_in(verts, &mut local), verts.to_vec())
+    }
+
+    /// Induced subgraph on `verts`, reusing `local` as the global→local
+    /// scratch map (the mapping from subgraph vertex `k` back to the
+    /// original id is simply `verts[k]`). `local` must hold `usize::MAX`
+    /// at every index it has — the all-MAX invariant is restored before
+    /// returning, so one buffer serves every call of a recursive
+    /// dissection without O(n) re-initialization.
+    pub fn subgraph_in(&self, verts: &[usize], local: &mut Vec<usize>) -> Graph {
         let n = self.n_vertices();
-        let mut local = vec![usize::MAX; n];
+        debug_assert!(local.iter().all(|&x| x == usize::MAX));
+        if local.len() < n {
+            local.resize(n, usize::MAX);
+        }
         for (k, &v) in verts.iter().enumerate() {
             local[v] = k;
         }
@@ -134,7 +156,10 @@ impl Graph {
                 }
             }
         }
-        (Graph::from_edges(verts.len(), &edges), verts.to_vec())
+        for &v in verts {
+            local[v] = usize::MAX;
+        }
+        Graph::from_edges(verts.len(), &edges)
     }
 }
 
@@ -194,6 +219,30 @@ mod tests {
         assert_eq!(sub.n_edges(), 1);
         assert_eq!(sub.neighbors(0), &[1]);
         assert_eq!(map, vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn degrees_match_per_vertex_degree() {
+        let g = Graph::from_edges(5, &[(0, 1), (1, 2), (2, 3), (3, 4), (0, 4)]);
+        let d = g.degrees();
+        assert_eq!(d.len(), 5);
+        for v in 0..5 {
+            assert_eq!(d[v], g.degree(v));
+        }
+    }
+
+    #[test]
+    fn subgraph_in_reuses_scratch_across_calls() {
+        let g = Graph::from_edges(6, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5)]);
+        let mut local = Vec::new();
+        let s1 = g.subgraph_in(&[1, 2, 4], &mut local);
+        let (ref1, _) = g.subgraph(&[1, 2, 4]);
+        assert_eq!(s1, ref1);
+        // invariant restored: a second call on different vertices agrees
+        let s2 = g.subgraph_in(&[0, 3, 4, 5], &mut local);
+        let (ref2, _) = g.subgraph(&[0, 3, 4, 5]);
+        assert_eq!(s2, ref2);
+        assert!(local.iter().all(|&x| x == usize::MAX));
     }
 
     #[test]

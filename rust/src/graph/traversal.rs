@@ -32,11 +32,39 @@ impl LevelStructure {
     }
 }
 
+/// Reusable BFS scratch: the visited bitmap is the one O(n) allocation a
+/// BFS needs; the pseudo-peripheral search re-BFSes several times per
+/// component, and RCM restarts per component, so a `reorder::Workspace`
+/// carries one of these across all of them.
+#[derive(Clone, Debug, Default)]
+pub struct BfsScratch {
+    visited: Vec<bool>,
+}
+
+impl BfsScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// BFS from `start` over the masked graph.
 pub fn bfs_levels(g: &Graph, start: usize, mask: &[bool]) -> LevelStructure {
+    bfs_levels_in(g, start, mask, &mut BfsScratch::new())
+}
+
+/// [`bfs_levels`] with caller-owned scratch (no per-call allocation of
+/// the visited bitmap).
+pub fn bfs_levels_in(
+    g: &Graph,
+    start: usize,
+    mask: &[bool],
+    scratch: &mut BfsScratch,
+) -> LevelStructure {
     debug_assert!(mask[start]);
     let n = g.n_vertices();
-    let mut visited = vec![false; n];
+    scratch.visited.clear();
+    scratch.visited.resize(n, false);
+    let visited = &mut scratch.visited;
     let mut order = Vec::new();
     let mut levels = Vec::new();
     let mut frontier = vec![start];
@@ -62,8 +90,18 @@ pub fn bfs_levels(g: &Graph, start: usize, mask: &[bool]) -> LevelStructure {
 /// and move to a minimum-degree vertex of the last level until the
 /// eccentricity stops growing. Returns (vertex, its level structure).
 pub fn pseudo_peripheral(g: &Graph, start: usize, mask: &[bool]) -> (usize, LevelStructure) {
+    pseudo_peripheral_in(g, start, mask, &mut BfsScratch::new())
+}
+
+/// [`pseudo_peripheral`] with caller-owned BFS scratch.
+pub fn pseudo_peripheral_in(
+    g: &Graph,
+    start: usize,
+    mask: &[bool],
+    scratch: &mut BfsScratch,
+) -> (usize, LevelStructure) {
     let mut v = start;
-    let mut ls = bfs_levels(g, v, mask);
+    let mut ls = bfs_levels_in(g, v, mask, scratch);
     loop {
         let last = ls.levels.last().expect("non-empty BFS");
         // min-degree vertex in the last level
@@ -74,7 +112,7 @@ pub fn pseudo_peripheral(g: &Graph, start: usize, mask: &[bool]) -> (usize, Leve
         if cand == v {
             return (v, ls);
         }
-        let ls2 = bfs_levels(g, cand, mask);
+        let ls2 = bfs_levels_in(g, cand, mask, scratch);
         if ls2.eccentricity() > ls.eccentricity() {
             v = cand;
             ls = ls2;
@@ -134,6 +172,22 @@ mod tests {
         let (v, ls) = pseudo_peripheral(&g, 0, &mask);
         assert!(v != 0);
         assert_eq!(ls.eccentricity(), 2);
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_calls() {
+        let g = path_graph(9);
+        let mask = vec![true; 9];
+        let mut scratch = BfsScratch::new();
+        for start in [0usize, 4, 8] {
+            let a = bfs_levels(&g, start, &mask);
+            let b = bfs_levels_in(&g, start, &mask, &mut scratch);
+            assert_eq!(a.order, b.order);
+            assert_eq!(a.levels, b.levels);
+            let (va, _) = pseudo_peripheral(&g, start, &mask);
+            let (vb, _) = pseudo_peripheral_in(&g, start, &mask, &mut scratch);
+            assert_eq!(va, vb);
+        }
     }
 
     #[test]

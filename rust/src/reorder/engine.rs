@@ -1,0 +1,319 @@
+//! Analysis / plan / execute: the shared-analysis reordering engine.
+//!
+//! * **Analyze** — [`MatrixAnalysis::of`] symmetrizes the matrix pattern
+//!   once into the adjacency [`Graph`], reads off the vertex degrees
+//!   (shared with `features::extract_with_degrees` so the classifier's
+//!   feature pass and the ordering sweep pay one symmetrization), and
+//!   lazily labels connected components.
+//! * **Plan** — each algorithm is a [`Reorderer`]: a stateless strategy
+//!   that turns the analysis into a [`Permutation`] using a caller-owned
+//!   [`Workspace`] for all O(n) scratch.
+//! * **Execute** — [`ReorderEngine::sweep`] runs many candidate
+//!   orderings over the in-tree thread pool, one warm workspace per
+//!   worker; [`ReorderEngine::sweep_map`] additionally times each
+//!   ordering and pipes it straight into a caller continuation (the
+//!   dataset sweep factorizes there, the benches record there).
+//!
+//! Permutations are bit-identical to the legacy
+//! `ReorderAlgorithm::compute` path: the graph is the same
+//! symmetrization, each algorithm derives its RNG from the same
+//! `seed ^ 0x5ee_d`, and workspace reuse is observation-free (property
+//! tested in `tests/prop_reorder_engine.rs`).
+
+use std::sync::OnceLock;
+
+use super::workspace::Workspace;
+use super::{hybrid, mindeg, nd, rcm, Permutation, ReorderAlgorithm};
+use crate::graph::Graph;
+use crate::sparse::CsrMatrix;
+use crate::util::pool::parallel_map_init;
+use crate::util::Timer;
+
+/// Everything the ordering layer derives from a matrix exactly once:
+/// the symmetrized adjacency, its degrees, and (on demand) connected
+/// components. Shared by every candidate ordering of a sweep and by the
+/// feature extractor.
+pub struct MatrixAnalysis {
+    graph: Graph,
+    degrees: Vec<usize>,
+    components: OnceLock<(Vec<usize>, usize)>,
+}
+
+impl MatrixAnalysis {
+    /// Analyze a square matrix (one symmetrization, O(nnz)).
+    pub fn of(a: &CsrMatrix) -> Self {
+        Self::from_graph(Graph::from_matrix(a))
+    }
+
+    /// Wrap a prebuilt adjacency graph.
+    pub fn from_graph(graph: Graph) -> Self {
+        let degrees = graph.degrees();
+        MatrixAnalysis {
+            graph,
+            degrees,
+            components: OnceLock::new(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.graph.n_vertices()
+    }
+
+    /// The symmetrized adjacency every ordering consumes.
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// Vertex degrees of the symmetrized pattern — identical to
+    /// `sparse::pattern::symmetrized_degrees` of the originating matrix,
+    /// so `features::extract_with_degrees` can reuse them verbatim.
+    pub fn degrees(&self) -> &[usize] {
+        &self.degrees
+    }
+
+    /// Connected components (computed on first use, then cached):
+    /// `(component id per vertex, component count)`.
+    pub fn components(&self) -> (&[usize], usize) {
+        let c = self.components.get_or_init(|| self.graph.components());
+        (&c.0, c.1)
+    }
+}
+
+/// A reordering strategy in the plan phase: stateless, scratch-free
+/// (all O(n) working memory lives in the caller's [`Workspace`]), and
+/// deterministic given `seed`.
+pub trait Reorderer: Sync {
+    /// Which [`ReorderAlgorithm`] this strategy implements.
+    fn algorithm(&self) -> ReorderAlgorithm;
+
+    /// Compute the ordering on the analyzed adjacency.
+    fn order(&self, g: &Graph, ws: &mut Workspace, seed: u64) -> Permutation;
+}
+
+/// The no-op baseline.
+struct Natural;
+
+impl Reorderer for Natural {
+    fn algorithm(&self) -> ReorderAlgorithm {
+        ReorderAlgorithm::Natural
+    }
+
+    fn order(&self, g: &Graph, _ws: &mut Workspace, _seed: u64) -> Permutation {
+        Permutation::identity(g.n_vertices())
+    }
+}
+
+static NATURAL: Natural = Natural;
+static CM: rcm::Cm = rcm::Cm;
+static RCM: rcm::Rcm = rcm::Rcm;
+static MD: mindeg::MinDeg = mindeg::MinDeg(mindeg::Variant::Exact);
+static AMD: mindeg::MinDeg = mindeg::MinDeg(mindeg::Variant::Approximate);
+static AMF: mindeg::MinDeg = mindeg::MinDeg(mindeg::Variant::MinFill);
+static QAMD: mindeg::MinDeg = mindeg::MinDeg(mindeg::Variant::QuasiDense);
+static ND: nd::NestedDissection = nd::NestedDissection;
+static SCOTCH: hybrid::ScotchLike = hybrid::ScotchLike;
+static PORD: hybrid::PordLike = hybrid::PordLike;
+
+/// The [`Reorderer`] implementing a given algorithm.
+pub fn reorderer(alg: ReorderAlgorithm) -> &'static dyn Reorderer {
+    match alg {
+        ReorderAlgorithm::Natural => &NATURAL,
+        ReorderAlgorithm::Cm => &CM,
+        ReorderAlgorithm::Rcm => &RCM,
+        ReorderAlgorithm::Md => &MD,
+        ReorderAlgorithm::Amd => &AMD,
+        ReorderAlgorithm::Amf => &AMF,
+        ReorderAlgorithm::Qamd => &QAMD,
+        ReorderAlgorithm::Nd => &ND,
+        ReorderAlgorithm::Scotch => &SCOTCH,
+        ReorderAlgorithm::Pord => &PORD,
+    }
+}
+
+/// Execute phase: run candidate orderings over one shared analysis,
+/// concurrently over the in-tree pool, one warm [`Workspace`] per
+/// worker. `workers == 1` degrades to an in-place sequential sweep —
+/// the shape nested callers use (e.g. `dataset::build_dataset` already
+/// runs one matrix per core, so its inner engine is pinned sequential
+/// exactly like the dataset sweep pins the supernodal factorization).
+pub struct ReorderEngine {
+    workers: usize,
+}
+
+impl ReorderEngine {
+    pub fn new(workers: usize) -> Self {
+        ReorderEngine {
+            workers: workers.max(1),
+        }
+    }
+
+    /// Single-threaded engine (for nested contexts: the caller's pool
+    /// already owns the cores).
+    pub fn sequential() -> Self {
+        Self::new(1)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// One ordering on a caller-owned workspace.
+    pub fn compute(
+        &self,
+        ma: &MatrixAnalysis,
+        alg: ReorderAlgorithm,
+        seed: u64,
+        ws: &mut Workspace,
+    ) -> Permutation {
+        reorderer(alg).order(ma.graph(), ws, seed)
+    }
+
+    /// All candidate orderings, in input order.
+    pub fn sweep(
+        &self,
+        ma: &MatrixAnalysis,
+        algorithms: &[ReorderAlgorithm],
+        seed: u64,
+    ) -> Vec<Permutation> {
+        self.sweep_map(ma, algorithms, seed, |_, perm, _| perm)
+    }
+
+    /// Sweep with a per-ordering continuation: `f(algorithm, permutation,
+    /// reorder_seconds)` runs on the worker that computed the ordering
+    /// (the dataset sweep factorizes+solves there, so the whole
+    /// label-generation job for one matrix fans out over the pool).
+    /// Results come back in `algorithms` order.
+    ///
+    /// Fair timing: when a worker will serve several candidates from one
+    /// workspace, its scratch is warmed by an untimed throwaway ordering
+    /// first, so the first timed candidate doesn't pay the cold O(n)
+    /// buffer growth the later ones skip. With `workers >=
+    /// algorithms.len()` every candidate gets a cold workspace
+    /// (symmetric, like the legacy per-call path) and no warm-up runs.
+    pub fn sweep_map<R, F>(
+        &self,
+        ma: &MatrixAnalysis,
+        algorithms: &[ReorderAlgorithm],
+        seed: u64,
+        f: F,
+    ) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(ReorderAlgorithm, Permutation, f64) -> R + Sync,
+    {
+        let warm = self.workers < algorithms.len();
+        let init = || {
+            let mut ws = Workspace::new();
+            if warm {
+                if let Some(&first) = algorithms.first() {
+                    let _ = reorderer(first).order(ma.graph(), &mut ws, seed);
+                }
+            }
+            ws
+        };
+        parallel_map_init(algorithms, self.workers, init, |ws, _, &alg| {
+            let t = Timer::start();
+            let perm = reorderer(alg).order(ma.graph(), ws, seed);
+            let reorder_s = t.elapsed_s();
+            f(alg, perm, reorder_s)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CooMatrix;
+
+    fn mesh(nx: usize, ny: usize) -> CsrMatrix {
+        let idx = |x: usize, y: usize| y * nx + x;
+        let n = nx * ny;
+        let mut coo = CooMatrix::new(n, n);
+        for y in 0..ny {
+            for x in 0..nx {
+                let v = idx(x, y);
+                coo.push(v, v, 4.0);
+                if x + 1 < nx {
+                    coo.push_sym(v, idx(x + 1, y), -1.0);
+                }
+                if y + 1 < ny {
+                    coo.push_sym(v, idx(x, y + 1), -1.0);
+                }
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn analysis_shares_graph_and_degrees() {
+        let a = mesh(8, 6);
+        let ma = MatrixAnalysis::of(&a);
+        let g = Graph::from_matrix(&a);
+        assert_eq!(*ma.graph(), g);
+        assert_eq!(ma.degrees(), &g.degrees()[..]);
+        assert_eq!(
+            ma.degrees(),
+            &crate::sparse::pattern::symmetrized_degrees(&a)[..]
+        );
+        let (comp, k) = ma.components();
+        assert_eq!(k, 1);
+        assert_eq!(comp.len(), ma.n());
+    }
+
+    #[test]
+    fn every_reorderer_reports_its_algorithm() {
+        for alg in [
+            ReorderAlgorithm::Natural,
+            ReorderAlgorithm::Cm,
+            ReorderAlgorithm::Rcm,
+            ReorderAlgorithm::Md,
+            ReorderAlgorithm::Amd,
+            ReorderAlgorithm::Amf,
+            ReorderAlgorithm::Qamd,
+            ReorderAlgorithm::Nd,
+            ReorderAlgorithm::Scotch,
+            ReorderAlgorithm::Pord,
+        ] {
+            assert_eq!(reorderer(alg).algorithm(), alg);
+        }
+    }
+
+    #[test]
+    fn sweep_matches_legacy_compute() {
+        let a = mesh(11, 9);
+        let ma = MatrixAnalysis::of(&a);
+        let engine = ReorderEngine::new(4);
+        let perms = engine.sweep(&ma, &ReorderAlgorithm::PAPER_SET, 42);
+        assert_eq!(perms.len(), ReorderAlgorithm::PAPER_SET.len());
+        for (alg, perm) in ReorderAlgorithm::PAPER_SET.iter().zip(&perms) {
+            assert_eq!(*perm, alg.compute(&a, 42), "{alg}");
+        }
+    }
+
+    #[test]
+    fn parallel_and_sequential_sweeps_agree() {
+        let a = mesh(13, 13);
+        let ma = MatrixAnalysis::of(&a);
+        let par = ReorderEngine::new(8).sweep(&ma, &ReorderAlgorithm::PAPER_SET, 7);
+        let seq = ReorderEngine::sequential().sweep(&ma, &ReorderAlgorithm::PAPER_SET, 7);
+        assert_eq!(par, seq);
+    }
+
+    #[test]
+    fn sweep_map_times_and_orders_results() {
+        let a = mesh(6, 6);
+        let ma = MatrixAnalysis::of(&a);
+        let engine = ReorderEngine::new(2);
+        let out = engine.sweep_map(
+            &ma,
+            &ReorderAlgorithm::LABEL_SET,
+            1,
+            |alg, perm, reorder_s| {
+                assert!(reorder_s >= 0.0);
+                assert_eq!(perm.len(), 36);
+                alg
+            },
+        );
+        assert_eq!(out, ReorderAlgorithm::LABEL_SET.to_vec());
+    }
+}

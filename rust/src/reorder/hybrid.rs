@@ -13,9 +13,11 @@
 //! ordering) and from pure AMD, giving the four label classes genuinely
 //! different behaviour across matrix families.
 
-use super::mindeg::{min_degree, Variant};
+use super::engine::Reorderer;
+use super::mindeg::{min_degree_in, Variant};
 use super::nd::dissection_with;
-use super::Permutation;
+use super::workspace::Workspace;
+use super::{seed_rng, Permutation, ReorderAlgorithm};
 use crate::graph::Graph;
 use crate::util::rng::Rng;
 
@@ -27,22 +29,61 @@ const PORD_SWITCH: usize = 480;
 
 /// SCOTCH-style hybrid: ND on top, AMD below `SCOTCH_SWITCH`.
 pub fn scotch_like(g: &Graph, rng: &mut Rng) -> Permutation {
-    dissection_with(g, rng, SCOTCH_SWITCH, &|sub| {
-        min_degree(sub, Variant::Approximate)
+    scotch_like_in(g, rng, &mut Workspace::new())
+}
+
+/// [`scotch_like`] on a reusable workspace.
+pub fn scotch_like_in(g: &Graph, rng: &mut Rng, ws: &mut Workspace) -> Permutation {
+    dissection_with(g, rng, SCOTCH_SWITCH, ws, &|sub, ws| {
+        min_degree_in(sub, Variant::Approximate, &mut ws.mindeg)
     })
 }
 
 /// PORD-style hybrid: ND on top (coarser), min-fill below `PORD_SWITCH`.
 pub fn pord_like(g: &Graph, rng: &mut Rng) -> Permutation {
-    dissection_with(g, rng, PORD_SWITCH, &|sub| {
-        min_degree(sub, Variant::MinFill)
+    pord_like_in(g, rng, &mut Workspace::new())
+}
+
+/// [`pord_like`] on a reusable workspace.
+pub fn pord_like_in(g: &Graph, rng: &mut Rng, ws: &mut Workspace) -> Permutation {
+    dissection_with(g, rng, PORD_SWITCH, ws, &|sub, ws| {
+        min_degree_in(sub, Variant::MinFill, &mut ws.mindeg)
     })
+}
+
+/// SCOTCH-like hybrid as a plan-phase [`Reorderer`].
+pub struct ScotchLike;
+
+impl Reorderer for ScotchLike {
+    fn algorithm(&self) -> ReorderAlgorithm {
+        ReorderAlgorithm::Scotch
+    }
+
+    fn order(&self, g: &Graph, ws: &mut Workspace, seed: u64) -> Permutation {
+        let mut rng = seed_rng(seed);
+        scotch_like_in(g, &mut rng, ws)
+    }
+}
+
+/// PORD-like hybrid as a plan-phase [`Reorderer`].
+pub struct PordLike;
+
+impl Reorderer for PordLike {
+    fn algorithm(&self) -> ReorderAlgorithm {
+        ReorderAlgorithm::Pord
+    }
+
+    fn order(&self, g: &Graph, ws: &mut Workspace, seed: u64) -> Permutation {
+        let mut rng = seed_rng(seed);
+        pord_like_in(g, &mut rng, ws)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::reorder::metrics;
+    use crate::reorder::mindeg::min_degree;
     use crate::reorder::{Permutation, ReorderAlgorithm};
     use crate::sparse::CooMatrix;
     use crate::util::prop;

@@ -19,7 +19,9 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-use super::Permutation;
+use super::engine::Reorderer;
+use super::workspace::Workspace;
+use super::{Permutation, ReorderAlgorithm};
 use crate::graph::Graph;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -30,6 +32,7 @@ pub enum Variant {
     QuasiDense,
 }
 
+#[derive(Default)]
 struct State {
     /// Variable-variable adjacency (original edges, pruned as elements form).
     adj: Vec<Vec<usize>>,
@@ -53,21 +56,33 @@ struct State {
 }
 
 impl State {
-    fn new(g: &Graph) -> Self {
+    /// Re-initialize for a fresh elimination of `g`, reusing every
+    /// allocation a previous run left behind. A reset state is
+    /// indistinguishable from a newly constructed one (same contents,
+    /// capacities may differ), so reuse cannot change the ordering.
+    fn reset(&mut self, g: &Graph) {
         let n = g.n_vertices();
-        State {
-            adj: (0..n).map(|v| g.neighbors(v).to_vec()).collect(),
-            elems: vec![Vec::new(); n],
-            elem_vars: Vec::new(),
-            elem_alive: Vec::new(),
-            elem_weight: Vec::new(),
-            alive: vec![true; n],
-            weight: vec![1; n],
-            followers: vec![Vec::new(); n],
-            score: vec![0; n],
-            marker: vec![0; n],
-            mark: 0,
+        self.adj.resize_with(n, Vec::new);
+        self.elems.resize_with(n, Vec::new);
+        self.followers.resize_with(n, Vec::new);
+        for v in 0..n {
+            self.adj[v].clear();
+            self.adj[v].extend_from_slice(g.neighbors(v));
+            self.elems[v].clear();
+            self.followers[v].clear();
         }
+        self.elem_vars.clear();
+        self.elem_alive.clear();
+        self.elem_weight.clear();
+        self.alive.clear();
+        self.alive.resize(n, true);
+        self.weight.clear();
+        self.weight.resize(n, 1);
+        self.score.clear();
+        self.score.resize(n, 0);
+        self.marker.clear();
+        self.marker.resize(n, 0);
+        self.mark = 0;
     }
 
     fn n(&self) -> usize {
@@ -189,26 +204,45 @@ impl State {
     }
 }
 
+/// Reusable scratch for the quotient-graph elimination: the per-vertex
+/// state, the pivot heap, and the output order buffer. One instance
+/// serves any number of [`min_degree_in`] calls (it is the workhorse
+/// behind every ND/hybrid leaf ordering in a dissection sweep).
+#[derive(Default)]
+pub struct MinDegScratch {
+    st: State,
+    order: Vec<usize>,
+    heap: BinaryHeap<Reverse<(i64, usize)>>,
+}
+
 /// Compute a minimum-degree-family ordering.
 pub fn min_degree(g: &Graph, variant: Variant) -> Permutation {
+    min_degree_in(g, variant, &mut MinDegScratch::default())
+}
+
+/// [`min_degree`] on reusable scratch (no per-call allocation once the
+/// scratch has warmed up to the largest graph seen).
+pub fn min_degree_in(g: &Graph, variant: Variant, scratch: &mut MinDegScratch) -> Permutation {
     let n = g.n_vertices();
     if n == 0 {
         return Permutation::identity(0);
     }
-    let mut st = State::new(g);
+    let MinDegScratch { st, order, heap } = scratch;
+    st.reset(g);
 
     // QAMD dense-row threshold: 10·avg degree, at least 16 (MUMPS uses a
     // similar multiple-of-average heuristic).
     let avg_deg = (2 * g.n_edges()) as f64 / n as f64;
     let dense_threshold = ((10.0 * avg_deg) as i64).max(16);
 
-    let mut heap: BinaryHeap<Reverse<(i64, usize)>> = BinaryHeap::with_capacity(n * 2);
+    heap.clear();
     for v in 0..n {
         let s = st.rescore(v, variant, dense_threshold);
         heap.push(Reverse((s, v)));
     }
 
-    let mut order = Vec::with_capacity(n);
+    order.clear();
+    order.reserve(n);
     let mut eliminated = 0usize;
 
     while eliminated < n {
@@ -286,7 +320,7 @@ pub fn min_degree(g: &Graph, variant: Variant) -> Permutation {
 
         // Supervariable detection (mass elimination): merge boundary vars
         // with identical quotient-graph adjacency.
-        merge_indistinguishable(&mut st, &lp);
+        merge_indistinguishable(st, &lp);
 
         // Rescore and re-push boundary variables.
         for &v in &lp {
@@ -297,7 +331,26 @@ pub fn min_degree(g: &Graph, variant: Variant) -> Permutation {
         }
     }
 
-    Permutation::from_order(&order)
+    Permutation::from_order(order)
+}
+
+/// The min-degree family as plan-phase [`Reorderer`]s: one unit value
+/// per scoring rule (MD / AMD / AMF / QAMD).
+pub struct MinDeg(pub Variant);
+
+impl Reorderer for MinDeg {
+    fn algorithm(&self) -> ReorderAlgorithm {
+        match self.0 {
+            Variant::Exact => ReorderAlgorithm::Md,
+            Variant::Approximate => ReorderAlgorithm::Amd,
+            Variant::MinFill => ReorderAlgorithm::Amf,
+            Variant::QuasiDense => ReorderAlgorithm::Qamd,
+        }
+    }
+
+    fn order(&self, g: &Graph, ws: &mut Workspace, _seed: u64) -> Permutation {
+        min_degree_in(g, self.0, &mut ws.mindeg)
+    }
 }
 
 /// Merge indistinguishable variables among `candidates`: same adj set and
@@ -489,6 +542,28 @@ mod tests {
     fn empty_graph_ok() {
         let g = Graph::from_edges(0, &[]);
         assert_eq!(min_degree(&g, Variant::Approximate).len(), 0);
+    }
+
+    #[test]
+    fn reused_scratch_is_bit_identical() {
+        // one scratch across variants AND across graphs of different
+        // sizes must replay the fresh-scratch orderings exactly
+        let mut scratch = MinDegScratch::default();
+        for (nx, ny) in [(9usize, 9usize), (5, 4), (12, 7)] {
+            let g = grid_graph(nx, ny);
+            for variant in [
+                Variant::Exact,
+                Variant::Approximate,
+                Variant::MinFill,
+                Variant::QuasiDense,
+            ] {
+                assert_eq!(
+                    min_degree_in(&g, variant, &mut scratch),
+                    min_degree(&g, variant),
+                    "{variant:?} on {nx}x{ny}"
+                );
+            }
+        }
     }
 
     #[test]

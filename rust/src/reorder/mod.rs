@@ -1,5 +1,23 @@
-//! Sparse matrix reordering algorithms — the seven orderings the paper
-//! evaluates (Table 2), plus the natural (identity) ordering.
+//! Sparse matrix reordering — the seven orderings the paper evaluates
+//! (Table 2) plus the natural (identity) baseline, structured as an
+//! **analysis / plan / execute** flow:
+//!
+//! 1. **Analyze** ([`engine::MatrixAnalysis`]): symmetrize the matrix
+//!    pattern into the adjacency [`crate::graph::Graph`] *once* per
+//!    matrix, capture its degrees (shared with
+//!    `features::extract_with_degrees`), and lazily label connected
+//!    components. Every candidate ordering — and the classifier's
+//!    feature pass — consumes this one analysis.
+//! 2. **Plan** ([`engine::Reorderer`]): each algorithm is a stateless
+//!    strategy whose O(n) scratch (BFS queues, degree buckets, quotient
+//!    graph, partition maps) lives in a reusable
+//!    [`workspace::Workspace`], so repeated orderings don't touch the
+//!    allocator.
+//! 3. **Execute** ([`engine::ReorderEngine`]): sweep many candidates
+//!    concurrently over `util::pool` with one warm workspace per worker
+//!    — the offline label-generation path the paper's selector
+//!    amortizes — or run a single predicted ordering on the serving
+//!    path.
 //!
 //! | Category (paper Table 2)      | Algorithms  | Module      |
 //! |-------------------------------|-------------|-------------|
@@ -8,19 +26,33 @@
 //! | graph-based                   | ND          | [`nd`]      |
 //! | hybrid fill-in + graph        | SCOTCH, PORD | [`hybrid`] |
 //!
-//! All algorithms consume the symmetrized adjacency [`crate::graph::Graph`]
-//! and produce a [`Permutation`]; quality metrics (bandwidth, profile,
-//! symbolic fill/flops) live in [`metrics`].
+//! The legacy entry points ([`ReorderAlgorithm::compute`] /
+//! [`ReorderAlgorithm::compute_on_graph`]) remain and are bit-identical
+//! to the engine path — same symmetrization, same per-algorithm seeding
+//! (`seed ^ 0x5ee_d`), same tie-breaking — they simply run the same
+//! [`engine::Reorderer`]s on a fresh workspace. Quality metrics
+//! (bandwidth, profile, symbolic fill/flops) live in [`metrics`].
 
+pub mod engine;
 pub mod hybrid;
 pub mod metrics;
 pub mod mindeg;
 pub mod nd;
 pub mod rcm;
+pub mod workspace;
+
+pub use engine::{reorderer, MatrixAnalysis, Reorderer, ReorderEngine};
+pub use workspace::Workspace;
 
 use crate::graph::Graph;
 use crate::sparse::CsrMatrix;
 use crate::util::rng::Rng;
+
+/// Per-run RNG derivation shared by the legacy and engine paths (only
+/// ND/SCOTCH/PORD draw from it, in their bisection).
+pub(crate) fn seed_rng(seed: u64) -> Rng {
+    Rng::new(seed ^ 0x5ee_d)
+}
 
 /// A permutation of `0..n`. `perm[old] = new`: old index `i` moves to
 /// position `perm[i]` (scatter form, matching `CsrMatrix::permute_sym`).
@@ -176,6 +208,16 @@ impl ReorderAlgorithm {
         Self::LABEL_SET.iter().position(|a| a == self)
     }
 
+    /// Map a classifier class id back to its algorithm. Clamped against
+    /// the actual label-set size — an out-of-range id is a bug upstream
+    /// (debug-asserted); in release it degrades to the last class
+    /// instead of silently remapping everything past 3 to RCM.
+    pub fn from_label(label: usize) -> ReorderAlgorithm {
+        let n_labels = Self::LABEL_SET.len();
+        debug_assert!(label < n_labels, "classifier label {label} out of range");
+        Self::LABEL_SET[label.min(n_labels - 1)]
+    }
+
     /// Compute the ordering for a matrix. Deterministic given `seed`
     /// (only ND/SCOTCH/PORD use randomness, in their bisection).
     pub fn compute(&self, a: &CsrMatrix, seed: u64) -> Permutation {
@@ -183,21 +225,16 @@ impl ReorderAlgorithm {
         self.compute_on_graph(&g, seed)
     }
 
-    /// Compute the ordering on a prebuilt adjacency graph.
+    /// Compute the ordering on a prebuilt adjacency graph (fresh
+    /// workspace; see [`Self::compute_with`] for the reusing form).
     pub fn compute_on_graph(&self, g: &Graph, seed: u64) -> Permutation {
-        let mut rng = Rng::new(seed ^ 0x5ee_d);
-        match self {
-            ReorderAlgorithm::Natural => Permutation::identity(g.n_vertices()),
-            ReorderAlgorithm::Cm => rcm::cuthill_mckee(g),
-            ReorderAlgorithm::Rcm => rcm::reverse_cuthill_mckee(g),
-            ReorderAlgorithm::Md => mindeg::min_degree(g, mindeg::Variant::Exact),
-            ReorderAlgorithm::Amd => mindeg::min_degree(g, mindeg::Variant::Approximate),
-            ReorderAlgorithm::Amf => mindeg::min_degree(g, mindeg::Variant::MinFill),
-            ReorderAlgorithm::Qamd => mindeg::min_degree(g, mindeg::Variant::QuasiDense),
-            ReorderAlgorithm::Nd => nd::nested_dissection(g, &mut rng),
-            ReorderAlgorithm::Scotch => hybrid::scotch_like(g, &mut rng),
-            ReorderAlgorithm::Pord => hybrid::pord_like(g, &mut rng),
-        }
+        self.compute_with(g, seed, &mut Workspace::new())
+    }
+
+    /// Compute the ordering on a prebuilt graph with caller-owned
+    /// scratch — the execute-phase primitive [`ReorderEngine`] uses.
+    pub fn compute_with(&self, g: &Graph, seed: u64, ws: &mut Workspace) -> Permutation {
+        engine::reorderer(*self).order(g, ws, seed)
     }
 }
 
@@ -248,6 +285,20 @@ mod tests {
         }
         assert_eq!(ReorderAlgorithm::from_name("amd"), Some(ReorderAlgorithm::Amd));
         assert_eq!(ReorderAlgorithm::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn from_label_roundtrips_and_clamps() {
+        for (k, &alg) in ReorderAlgorithm::LABEL_SET.iter().enumerate() {
+            assert_eq!(ReorderAlgorithm::from_label(k), alg);
+        }
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "out of range")]
+    fn from_label_asserts_out_of_range_in_debug() {
+        ReorderAlgorithm::from_label(ReorderAlgorithm::LABEL_SET.len());
     }
 
     #[test]

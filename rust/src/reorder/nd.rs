@@ -6,8 +6,10 @@
 //! ordered by local minimum degree — the same leaf strategy METIS'
 //! `METIS_NodeND` uses (MMD on the leaves).
 
-use super::mindeg::{min_degree, Variant};
-use super::Permutation;
+use super::engine::Reorderer;
+use super::mindeg::{min_degree_in, Variant};
+use super::workspace::Workspace;
+use super::{seed_rng, Permutation, ReorderAlgorithm};
 use crate::graph::partition::{bisect, vertex_separator};
 use crate::graph::Graph;
 use crate::util::rng::Rng;
@@ -17,23 +19,31 @@ const LEAF_SIZE: usize = 64;
 
 /// Nested dissection with MD-ordered leaves.
 pub fn nested_dissection(g: &Graph, rng: &mut Rng) -> Permutation {
-    dissection_with(g, rng, LEAF_SIZE, &|sub| {
-        min_degree(sub, Variant::Exact)
+    nested_dissection_in(g, rng, &mut Workspace::new())
+}
+
+/// [`nested_dissection`] on a reusable workspace: the MD leaf orderings
+/// share one quotient-graph scratch across every leaf of the recursion.
+pub fn nested_dissection_in(g: &Graph, rng: &mut Rng, ws: &mut Workspace) -> Permutation {
+    dissection_with(g, rng, LEAF_SIZE, ws, &|sub, ws| {
+        min_degree_in(sub, Variant::Exact, &mut ws.mindeg)
     })
 }
 
 /// Generic dissection driver, shared with the SCOTCH/PORD hybrids: leaf
-/// subgraphs of size ≤ `leaf_size` are ordered by `leaf_order`.
+/// subgraphs of size ≤ `leaf_size` are ordered by `leaf_order`, which
+/// receives the shared workspace (so leaf orderers reuse its scratch).
 pub fn dissection_with(
     g: &Graph,
     rng: &mut Rng,
     leaf_size: usize,
-    leaf_order: &dyn Fn(&Graph) -> Permutation,
+    ws: &mut Workspace,
+    leaf_order: &dyn Fn(&Graph, &mut Workspace) -> Permutation,
 ) -> Permutation {
     let n = g.n_vertices();
     let mut order = Vec::with_capacity(n);
     let verts: Vec<usize> = (0..n).collect();
-    recurse(g, &verts, rng, leaf_size, leaf_order, &mut order, 0);
+    recurse(g, &verts, rng, leaf_size, leaf_order, &mut order, 0, ws);
     debug_assert_eq!(order.len(), n);
     Permutation::from_order(&order)
 }
@@ -41,51 +51,55 @@ pub fn dissection_with(
 fn order_leaf(
     g: &Graph,
     verts: &[usize],
-    leaf_order: &dyn Fn(&Graph) -> Permutation,
+    leaf_order: &dyn Fn(&Graph, &mut Workspace) -> Permutation,
     out: &mut Vec<usize>,
+    ws: &mut Workspace,
 ) {
-    let (sub, map) = g.subgraph(verts);
-    let p = leaf_order(&sub);
+    let sub = g.subgraph_in(verts, &mut ws.nd_local);
+    let p = leaf_order(&sub, ws);
+    // subgraph vertex k is verts[k] — no separate id map needed
     for &local_old in &p.order() {
-        out.push(map[local_old]);
+        out.push(verts[local_old]);
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn recurse(
     g: &Graph,
     verts: &[usize],
     rng: &mut Rng,
     leaf_size: usize,
-    leaf_order: &dyn Fn(&Graph) -> Permutation,
+    leaf_order: &dyn Fn(&Graph, &mut Workspace) -> Permutation,
     out: &mut Vec<usize>,
     depth: usize,
+    ws: &mut Workspace,
 ) {
     if verts.len() <= leaf_size || depth > 64 {
-        order_leaf(g, verts, leaf_order, out);
+        order_leaf(g, verts, leaf_order, out, ws);
         return;
     }
-    let (sub, map) = g.subgraph(verts);
+    let sub = g.subgraph_in(verts, &mut ws.nd_local);
     let b = bisect(&sub, rng);
     let (sep, a, bb) = vertex_separator(&sub, &b.side);
     // Degenerate bisection (e.g. a clique where one side swallowed
     // everything): fall back to leaf ordering to guarantee progress.
     if a.is_empty() && bb.is_empty() {
-        order_leaf(g, verts, leaf_order, out);
+        order_leaf(g, verts, leaf_order, out, ws);
         return;
     }
     if sep.is_empty() && (a.is_empty() || bb.is_empty()) {
-        order_leaf(g, verts, leaf_order, out);
+        order_leaf(g, verts, leaf_order, out, ws);
         return;
     }
-    let to_global = |locals: &[usize]| locals.iter().map(|&l| map[l]).collect::<Vec<_>>();
+    let to_global = |locals: &[usize]| locals.iter().map(|&l| verts[l]).collect::<Vec<_>>();
     let ga = to_global(&a);
     let gb = to_global(&bb);
     let gsep = to_global(&sep);
     if !ga.is_empty() {
-        recurse(g, &ga, rng, leaf_size, leaf_order, out, depth + 1);
+        recurse(g, &ga, rng, leaf_size, leaf_order, out, depth + 1, ws);
     }
     if !gb.is_empty() {
-        recurse(g, &gb, rng, leaf_size, leaf_order, out, depth + 1);
+        recurse(g, &gb, rng, leaf_size, leaf_order, out, depth + 1, ws);
     }
     // Separator vertices are eliminated last (they border both halves).
     // Order within the separator: by degree (small first) — a cheap local
@@ -93,6 +107,21 @@ fn recurse(
     let mut s = gsep;
     s.sort_by_key(|&v| (g.degree(v), v));
     out.extend(s);
+}
+
+/// Nested dissection as a plan-phase [`Reorderer`] (the only randomness
+/// is the bisection's, seeded per run exactly like the legacy path).
+pub struct NestedDissection;
+
+impl Reorderer for NestedDissection {
+    fn algorithm(&self) -> ReorderAlgorithm {
+        ReorderAlgorithm::Nd
+    }
+
+    fn order(&self, g: &Graph, ws: &mut Workspace, seed: u64) -> Permutation {
+        let mut rng = seed_rng(seed);
+        nested_dissection_in(g, &mut rng, ws)
+    }
 }
 
 #[cfg(test)]

@@ -7,59 +7,100 @@
 //! graphs by restarting from a fresh pseudo-peripheral vertex per
 //! component (what SciPy's `reverse_cuthill_mckee` does).
 
-use super::Permutation;
-use crate::graph::traversal::pseudo_peripheral;
+use super::engine::Reorderer;
+use super::workspace::Workspace;
+use super::{Permutation, ReorderAlgorithm};
+use crate::graph::traversal::pseudo_peripheral_in;
 use crate::graph::Graph;
 
-/// Cuthill–McKee visit order over all components.
-fn cm_order(g: &Graph) -> Vec<usize> {
+/// Cuthill–McKee visit order over all components, written into
+/// `ws.order` (scratch buffers reused, no per-call allocation).
+fn cm_order_in(g: &Graph, ws: &mut Workspace) {
     let n = g.n_vertices();
-    let mut order = Vec::with_capacity(n);
-    let mut placed = vec![false; n];
-    let mut mask = vec![true; n]; // not-yet-ordered vertices
+    ws.order.clear();
+    ws.order.reserve(n);
+    ws.placed.clear();
+    ws.placed.resize(n, false);
+    ws.mask.clear();
+    ws.mask.resize(n, true); // not-yet-ordered vertices
+    ws.queue.clear();
 
     // Components are processed in order of their lowest-index vertex;
     // within a component, BFS from a pseudo-peripheral start.
     for seed in 0..n {
-        if placed[seed] {
+        if ws.placed[seed] {
             continue;
         }
-        let (start, _) = pseudo_peripheral(g, seed, &mask);
+        let (start, _) = pseudo_peripheral_in(g, seed, &ws.mask, &mut ws.bfs);
         // classic CM queue: visit in FIFO order, appending each vertex's
         // unvisited neighbors in ascending-degree order
-        let mut queue = std::collections::VecDeque::new();
-        queue.push_back(start);
-        placed[start] = true;
-        let mut children = Vec::new();
-        while let Some(v) = queue.pop_front() {
-            order.push(v);
-            mask[v] = false;
-            children.clear();
+        ws.queue.push_back(start);
+        ws.placed[start] = true;
+        while let Some(v) = ws.queue.pop_front() {
+            ws.order.push(v);
+            ws.mask[v] = false;
+            ws.children.clear();
             for &u in g.neighbors(v) {
-                if !placed[u] {
-                    placed[u] = true;
-                    children.push(u);
+                if !ws.placed[u] {
+                    ws.placed[u] = true;
+                    ws.children.push(u);
                 }
             }
-            children.sort_by_key(|&u| (g.degree(u), u));
-            for &u in &children {
-                queue.push_back(u);
+            ws.children.sort_by_key(|&u| (g.degree(u), u));
+            for &u in &ws.children {
+                ws.queue.push_back(u);
             }
         }
     }
-    order
 }
 
 /// Cuthill–McKee ordering.
 pub fn cuthill_mckee(g: &Graph) -> Permutation {
-    Permutation::from_order(&cm_order(g))
+    cuthill_mckee_in(g, &mut Workspace::new())
+}
+
+/// [`cuthill_mckee`] on a reusable workspace.
+pub fn cuthill_mckee_in(g: &Graph, ws: &mut Workspace) -> Permutation {
+    cm_order_in(g, ws);
+    Permutation::from_order(&ws.order)
 }
 
 /// Reverse Cuthill–McKee ordering.
 pub fn reverse_cuthill_mckee(g: &Graph) -> Permutation {
-    let mut order = cm_order(g);
-    order.reverse();
-    Permutation::from_order(&order)
+    reverse_cuthill_mckee_in(g, &mut Workspace::new())
+}
+
+/// [`reverse_cuthill_mckee`] on a reusable workspace.
+pub fn reverse_cuthill_mckee_in(g: &Graph, ws: &mut Workspace) -> Permutation {
+    cm_order_in(g, ws);
+    ws.order.reverse();
+    Permutation::from_order(&ws.order)
+}
+
+/// Cuthill–McKee as a plan-phase [`Reorderer`].
+pub struct Cm;
+
+impl Reorderer for Cm {
+    fn algorithm(&self) -> ReorderAlgorithm {
+        ReorderAlgorithm::Cm
+    }
+
+    fn order(&self, g: &Graph, ws: &mut Workspace, _seed: u64) -> Permutation {
+        cuthill_mckee_in(g, ws)
+    }
+}
+
+/// Reverse Cuthill–McKee as a plan-phase [`Reorderer`].
+pub struct Rcm;
+
+impl Reorderer for Rcm {
+    fn algorithm(&self) -> ReorderAlgorithm {
+        ReorderAlgorithm::Rcm
+    }
+
+    fn order(&self, g: &Graph, ws: &mut Workspace, _seed: u64) -> Permutation {
+        reverse_cuthill_mckee_in(g, ws)
+    }
 }
 
 #[cfg(test)]
@@ -131,6 +172,17 @@ mod tests {
         assert_eq!(p.len(), 3);
         let g0 = Graph::from_edges(0, &[]);
         assert_eq!(reverse_cuthill_mckee(&g0).len(), 0);
+    }
+
+    #[test]
+    fn reused_workspace_is_bit_identical() {
+        let mut ws = Workspace::new();
+        for (n, band, seed) in [(120usize, 2usize, 3u64), (60, 4, 5), (200, 1, 9)] {
+            let a = scrambled_band(n, band, seed);
+            let g = Graph::from_matrix(&a);
+            assert_eq!(reverse_cuthill_mckee_in(&g, &mut ws), reverse_cuthill_mckee(&g));
+            assert_eq!(cuthill_mckee_in(&g, &mut ws), cuthill_mckee(&g));
+        }
     }
 
     #[test]

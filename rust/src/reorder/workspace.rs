@@ -1,0 +1,51 @@
+//! Reusable scratch memory for the reordering algorithms.
+//!
+//! Every ordering needs the same O(n) working set — BFS visit flags and
+//! queues (RCM), the quotient-graph elimination state (the min-degree
+//! family, plus the leaf orderings of ND and the hybrids), and the
+//! global→local map of recursive dissection. A [`Workspace`] owns all of
+//! it once; algorithms reset the buffers they use instead of allocating,
+//! so a sweep of many orderings (or many matrices) touches the allocator
+//! only when a buffer must grow. One workspace belongs to one worker
+//! thread — `ReorderEngine::sweep` hands each pool worker its own.
+//!
+//! Reuse is observation-free by construction: every algorithm fully
+//! re-initializes the prefix of each buffer it reads, so a reused
+//! workspace yields bit-identical permutations to a fresh one (property
+//! tested in `tests/prop_reorder_engine.rs`).
+
+use std::collections::VecDeque;
+
+use super::mindeg::MinDegScratch;
+use crate::graph::traversal::BfsScratch;
+
+/// Scratch buffers shared by all reordering algorithms. Create once per
+/// worker thread with [`Workspace::new`]; any algorithm can run on it in
+/// any sequence.
+#[derive(Default)]
+pub struct Workspace {
+    /// RCM: per-vertex "already queued" flags.
+    pub(crate) placed: Vec<bool>,
+    /// RCM: not-yet-ordered mask for the pseudo-peripheral search.
+    pub(crate) mask: Vec<bool>,
+    /// RCM: the classic Cuthill–McKee FIFO.
+    pub(crate) queue: VecDeque<usize>,
+    /// RCM: per-vertex unvisited-neighbor buffer (sorted by degree).
+    pub(crate) children: Vec<usize>,
+    /// RCM: the visit order under construction.
+    pub(crate) order: Vec<usize>,
+    /// BFS / pseudo-peripheral visited bitmap.
+    pub(crate) bfs: BfsScratch,
+    /// Quotient-graph minimum-degree engine state (also the leaf orderer
+    /// of ND/SCOTCH/PORD — reused across every leaf of a dissection).
+    pub(crate) mindeg: MinDegScratch,
+    /// Dissection: global→local vertex map for induced subgraphs.
+    /// Invariant: all `usize::MAX` between uses (`Graph::subgraph_in`).
+    pub(crate) nd_local: Vec<usize>,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}

@@ -17,13 +17,33 @@ where
     R: Send,
     F: Fn(usize, &T) -> R + Sync,
 {
+    parallel_map_init(items, n_workers, || (), |_, i, t| f(i, t))
+}
+
+/// [`parallel_map`] with per-worker state: each worker thread calls
+/// `init()` once and threads the resulting value (mutably) through every
+/// item it claims. This is how the reorder sweep hands each worker its
+/// own warm `Workspace` — scratch reuse without locks, because state
+/// never crosses threads.
+pub fn parallel_map_init<T, R, S, I, F>(items: &[T], n_workers: usize, init: I, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, &T) -> R + Sync,
+{
     let n = items.len();
     if n == 0 {
         return Vec::new();
     }
     let workers = n_workers.max(1).min(n);
     if workers == 1 {
-        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        let mut state = init();
+        return items
+            .iter()
+            .enumerate()
+            .map(|(i, t)| f(&mut state, i, t))
+            .collect();
     }
 
     let next = AtomicUsize::new(0);
@@ -37,14 +57,16 @@ where
             .map(|_| {
                 let next = &next;
                 let f = &f;
+                let init = &init;
                 scope.spawn(move || {
+                    let mut state = init();
                     let mut out = Vec::new();
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
                         if i >= n {
                             break;
                         }
-                        out.push((i, f(i, &items[i])));
+                        out.push((i, f(&mut state, i, &items[i])));
                     }
                     out
                 })
@@ -133,6 +155,41 @@ mod tests {
             (0..spin).fold(x as u64, |a, b| a.wrapping_add(b))
         });
         assert_eq!(out.len(), 100);
+    }
+
+    #[test]
+    fn init_state_is_per_worker_and_reused() {
+        // each worker's state accumulates only the items it processed;
+        // the union over workers must cover every item exactly once
+        use std::sync::Mutex;
+        let log = Mutex::new(Vec::<Vec<usize>>::new());
+        let items: Vec<usize> = (0..200).collect();
+        let out = parallel_map_init(
+            &items,
+            4,
+            Vec::new,
+            |seen: &mut Vec<usize>, i, &x| {
+                seen.push(i);
+                if seen.len() == 1 {
+                    // first item this worker claims: one init per worker
+                    log.lock().unwrap().push(Vec::new());
+                }
+                x + 1
+            },
+        );
+        assert_eq!(out, (1..=200).collect::<Vec<_>>());
+        // at most 4 workers ever created state
+        assert!(log.lock().unwrap().len() <= 4);
+    }
+
+    #[test]
+    fn init_single_worker_runs_inline() {
+        let items = vec![10u32, 20, 30];
+        let out = parallel_map_init(&items, 1, || 0u32, |acc, _, &x| {
+            *acc += x;
+            *acc
+        });
+        assert_eq!(out, vec![10, 30, 60]);
     }
 
     #[test]

@@ -1,0 +1,115 @@
+//! Property tests for the analysis/plan/execute reorder engine: every
+//! permutation it produces must be bit-identical to the legacy
+//! `ReorderAlgorithm::compute(&matrix, seed)` path, across the mini
+//! collection, every algorithm, every test seed — with one workspace
+//! reused across the whole run (the reuse is exactly what could go
+//! wrong).
+
+use smr::collection::generate_mini_collection;
+use smr::dataset::{build_dataset, SweepConfig};
+use smr::features;
+use smr::reorder::{MatrixAnalysis, ReorderAlgorithm, ReorderEngine, Workspace};
+use smr::solver::{prepare, SolverConfig};
+
+const ALL_ALGORITHMS: [ReorderAlgorithm; 10] = [
+    ReorderAlgorithm::Natural,
+    ReorderAlgorithm::Cm,
+    ReorderAlgorithm::Rcm,
+    ReorderAlgorithm::Md,
+    ReorderAlgorithm::Amd,
+    ReorderAlgorithm::Amf,
+    ReorderAlgorithm::Qamd,
+    ReorderAlgorithm::Nd,
+    ReorderAlgorithm::Scotch,
+    ReorderAlgorithm::Pord,
+];
+
+const SEEDS: [u64; 3] = [7, 42, 0xDA7A];
+
+/// One workspace, reused across every (matrix, algorithm, seed) in the
+/// mini collection, must replay the fresh-path permutations exactly.
+#[test]
+fn engine_bit_identical_to_legacy_compute() {
+    let coll = generate_mini_collection(1, 2);
+    let engine = ReorderEngine::sequential();
+    let mut ws = Workspace::new();
+    for nm in &coll {
+        let analysis = MatrixAnalysis::of(&nm.matrix);
+        for &seed in &SEEDS {
+            for alg in ALL_ALGORITHMS {
+                let legacy = alg.compute(&nm.matrix, seed);
+                let engined = engine.compute(&analysis, alg, seed, &mut ws);
+                assert_eq!(legacy, engined, "{}/{alg}/seed {seed}", nm.name);
+            }
+        }
+    }
+}
+
+/// The pool-parallel sweep must agree with the sequential one (and with
+/// the legacy path) for the paper's seven algorithms.
+#[test]
+fn parallel_sweep_bit_identical_to_sequential() {
+    let coll = generate_mini_collection(3, 1);
+    for nm in &coll {
+        let analysis = MatrixAnalysis::of(&nm.matrix);
+        for &seed in &SEEDS {
+            let par = ReorderEngine::new(8).sweep(&analysis, &ReorderAlgorithm::PAPER_SET, seed);
+            let seq =
+                ReorderEngine::sequential().sweep(&analysis, &ReorderAlgorithm::PAPER_SET, seed);
+            assert_eq!(par, seq, "{}/seed {seed}", nm.name);
+            for (alg, perm) in ReorderAlgorithm::PAPER_SET.iter().zip(&par) {
+                assert_eq!(*perm, alg.compute(&nm.matrix, seed), "{}/{alg}", nm.name);
+            }
+        }
+    }
+}
+
+/// The sweep analyzes the *prepared* (solver-ready) matrix but extracts
+/// features from the raw one; the shared degrees must still be exactly
+/// the raw matrix's symmetrized degrees, keeping features bit-identical.
+#[test]
+fn shared_analysis_preserves_features_of_prepared_matrices() {
+    let coll = generate_mini_collection(5, 1);
+    let solver = SolverConfig::default();
+    for nm in &coll {
+        let spd = prepare(&nm.matrix, &solver);
+        let analysis = MatrixAnalysis::of(&spd);
+        assert_eq!(
+            features::extract(&nm.matrix),
+            features::extract_with_degrees(&nm.matrix, analysis.degrees()),
+            "{}",
+            nm.name
+        );
+    }
+}
+
+/// End to end: two dataset builds over the engine (one outer-parallel,
+/// one with inner-parallel ordering sweeps) agree on every
+/// seed-deterministic output — features, permutation-derived fills and
+/// flops, and therefore the candidate set the labeler ranks.
+#[test]
+fn dataset_builds_agree_across_parallelism_shapes() {
+    let coll = generate_mini_collection(9, 1);
+    let outer = SweepConfig {
+        workers: 4,
+        ..SweepConfig::default()
+    };
+    let inner = SweepConfig {
+        workers: 1,
+        reorder_workers: 4,
+        ..SweepConfig::default()
+    };
+    let a = build_dataset(&coll, &ReorderAlgorithm::LABEL_SET, &outer);
+    let b = build_dataset(&coll, &ReorderAlgorithm::LABEL_SET, &inner);
+    assert_eq!(a.len(), b.len());
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.name, rb.name);
+        assert_eq!(ra.features, rb.features);
+        assert!(ra.label < ReorderAlgorithm::LABEL_SET.len());
+        for (x, y) in ra.results.iter().zip(&rb.results) {
+            assert_eq!(x.algorithm, y.algorithm, "{}", ra.name);
+            assert_eq!(x.fill, y.fill, "{}", ra.name);
+            assert_eq!(x.flops, y.flops, "{}", ra.name);
+        }
+    }
+}
