@@ -2,7 +2,11 @@
 # Verification tiers (see ROADMAP.md). Run from anywhere; the crate
 # lives in rust/.
 #
-#   tier 1 (always, the hard gate): release build + full test suite
+#   tier 1 (always, the hard gate): release build + full test suite,
+#                                   with the serving-path property and
+#                                   integration suites run explicitly,
+#                                   and BENCH_serving.json schema-checked
+#                                   whenever the bench has been run
 #   tier 2 (style/lint, opt in):    cargo fmt --check + clippy -D warnings
 #                                   enable with `CI_TIER2=1 ./ci.sh`
 #                                   or `./ci.sh --tier2`
@@ -11,6 +15,19 @@ cd "$(dirname "$0")/rust"
 
 cargo build --release
 cargo test -q
+
+# Serving-path suites, named explicitly: a filter or harness change that
+# silently dropped them would otherwise pass tier 1 without the cache
+# bit-identity and end-to-end determinism guarantees ever running.
+cargo test -q --test prop_ordering_cache
+cargo test -q --test integration_serving
+
+# Bench-artifact schema gate: if the serving bench has been run, its
+# JSON must parse and carry the cold/warm + cache-counter schema
+# (validated via util/json.rs by examples/check_bench.rs).
+if [[ -f BENCH_serving.json ]]; then
+  cargo run --release --quiet --example check_bench -- BENCH_serving.json
+fi
 
 if [[ "${CI_TIER2:-0}" == "1" || "${1:-}" == "--tier2" ]]; then
   cargo fmt --check

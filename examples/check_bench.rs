@@ -1,0 +1,94 @@
+//! Schema sanity-checker for `BENCH_*.json` artifacts (used by `ci.sh`).
+//!
+//! Usage: `cargo run --release --example check_bench -- BENCH_serving.json ...`
+//!
+//! Every argument must parse as a bench artifact: a JSON object with a
+//! non-empty `results` array of records. For `bench_serving` artifacts
+//! the serving schema is enforced too: per-record cold/warm latencies
+//! and top-level cache hit/miss/evict counters. Exits non-zero (listing
+//! every violation) on malformed input, so a bench that wrote garbage
+//! fails CI instead of silently polluting the perf trajectory.
+
+use smr::util::json::{self, Json};
+
+fn check_num(obj: &Json, key: &str, errs: &mut Vec<String>, ctx: &str) {
+    match obj.get(key).and_then(|v| v.as_f64()) {
+        Some(v) if v.is_finite() => {}
+        Some(v) => errs.push(format!("{ctx}: `{key}` is not finite ({v})")),
+        None => errs.push(format!("{ctx}: missing numeric `{key}`")),
+    }
+}
+
+fn check_file(path: &str) -> Vec<String> {
+    let mut errs = Vec::new();
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => return vec![format!("{path}: unreadable: {e}")],
+    };
+    let v = match json::parse(&text) {
+        Ok(v) => v,
+        Err(e) => return vec![format!("{path}: invalid JSON: {e}")],
+    };
+    let Some(results) = v.get("results").and_then(|r| r.as_arr()) else {
+        return vec![format!("{path}: missing `results` array")];
+    };
+    if results.is_empty() {
+        errs.push(format!("{path}: empty `results`"));
+    }
+    for (i, rec) in results.iter().enumerate() {
+        if rec.get("name").and_then(|n| n.as_str()).is_none() {
+            errs.push(format!("{path}: results[{i}]: missing string `name`"));
+        }
+    }
+
+    // serving-specific schema
+    if v.get("bench").and_then(|b| b.as_str()) == Some("bench_serving") {
+        for (i, rec) in results.iter().enumerate() {
+            let ctx = format!("{path}: results[{i}]");
+            for key in ["n", "nnz", "cold_s", "warm_s", "speedup"] {
+                check_num(rec, key, &mut errs, &ctx);
+            }
+        }
+        match v.get("cache") {
+            Some(cache) => {
+                for key in ["hits", "misses", "evictions", "inserts", "hit_rate"] {
+                    check_num(cache, key, &mut errs, &format!("{path}: cache"));
+                }
+            }
+            None => errs.push(format!("{path}: missing `cache` object")),
+        }
+        match v.get("workspaces") {
+            Some(ws) => {
+                for key in ["checkouts", "creates", "reuses"] {
+                    check_num(ws, key, &mut errs, &format!("{path}: workspaces"));
+                }
+            }
+            None => errs.push(format!("{path}: missing `workspaces` object")),
+        }
+        check_num(&v, "requests", &mut errs, path);
+    }
+    errs
+}
+
+fn main() {
+    let paths: Vec<String> = std::env::args().skip(1).collect();
+    if paths.is_empty() {
+        eprintln!("usage: check_bench <BENCH_*.json> ...");
+        std::process::exit(2);
+    }
+    let mut failed = false;
+    for path in &paths {
+        let errs = check_file(path);
+        if errs.is_empty() {
+            println!("{path}: ok");
+        } else {
+            failed = true;
+            for e in &errs {
+                eprintln!("{e}");
+            }
+        }
+    }
+    if failed {
+        std::process::exit(1);
+    }
+}

@@ -1,7 +1,9 @@
 //! End-to-end serving demo with the AOT MLP (Pallas kernels via PJRT):
-//! train the MLP through the AOT train-step executable, stand up the
-//! batched prediction service, fire concurrent requests at it, and report
-//! latency/throughput — the serving-paper-style driver for this system.
+//! train the MLP through the AOT train-step executable, stand the full
+//! `ServingEngine` up on it (batched prediction service + pattern-keyed
+//! ordering cache + pooled workspaces), fire concurrent *matrix*
+//! requests at it, and report cold/warm latency, cache hit rate, and
+//! workspace reuse — the serving-paper-style driver for this system.
 //!
 //! Requires artifacts: `make artifacts` first.
 //! Run: `cargo run --release --example serve_mlp`
@@ -12,9 +14,8 @@ use std::time::Instant;
 
 use smr::collection::generate_mini_collection;
 use smr::coordinator::service::Backend;
-use smr::coordinator::{train_mlp, BatcherConfig, PredictionService};
+use smr::coordinator::{train_mlp, BatcherConfig, ServingConfig, ServingEngine};
 use smr::dataset::{build_dataset, SweepConfig};
-use smr::features;
 use smr::model::TrainConfig;
 use smr::reorder::ReorderAlgorithm;
 use smr::runtime::{Manifest, Runtime};
@@ -34,7 +35,7 @@ fn main() -> anyhow::Result<()> {
         &ReorderAlgorithm::LABEL_SET,
         &SweepConfig::default(),
     );
-    let (train_idx, test_idx) = dataset.split(0.8, 7);
+    let (train_idx, _test_idx) = dataset.split(0.8, 7);
     let trained = {
         let runtime = Runtime::cpu()?;
         println!("PJRT platform: {}", runtime.platform());
@@ -57,33 +58,45 @@ fn main() -> anyhow::Result<()> {
         trained.losses.last().copied().unwrap_or(f32::NAN)
     );
 
-    // serving: dedicated runtime thread + dynamic batcher
-    let svc = Arc::new(PredictionService::spawn(
+    // the serving engine: batched MLP predictions + ordering cache +
+    // pooled workspaces behind one object
+    let engine = Arc::new(ServingEngine::spawn(
         Backend::Mlp {
             artifacts_dir: artifacts.to_path_buf(),
             model: trained.model,
         },
-        BatcherConfig {
-            max_batch: 64,
-            max_wait: std::time::Duration::from_millis(2),
+        ServingConfig {
+            batcher: BatcherConfig {
+                max_batch: 64,
+                max_wait: std::time::Duration::from_millis(2),
+            },
+            ..Default::default()
         },
     )?);
 
-    // concurrent client load: 8 client threads x 50 requests
-    let feats: Vec<Vec<f64>> = collection
-        .iter()
-        .map(|m| features::extract(&m.matrix).to_vec())
-        .collect();
+    // cold pass: every pattern is new, orderings are computed
     let t0 = Instant::now();
+    for nm in collection.iter() {
+        let r = engine.serve(&nm.matrix)?;
+        assert!(!r.cache_hit);
+    }
+    let cold_wall = t0.elapsed().as_secs_f64();
+
+    // warm concurrent client load: 8 client threads x 50 requests over
+    // the same patterns — steady state is all cache hits
+    let t0 = Instant::now();
+    let matrices: Arc<Vec<_>> =
+        Arc::new(collection.iter().map(|nm| nm.matrix.clone()).collect());
     let mut handles = Vec::new();
-    for c in 0..8 {
-        let svc = svc.clone();
-        let feats = feats.clone();
+    for c in 0..8usize {
+        let engine = engine.clone();
+        let matrices = matrices.clone();
         handles.push(std::thread::spawn(move || {
             let mut lat = Vec::new();
             for k in 0..50 {
                 let t = Instant::now();
-                let _alg = svc.predict(&feats[(c * 50 + k) % feats.len()]).unwrap();
+                let r = engine.serve(&matrices[(c * 50 + k) % matrices.len()]).unwrap();
+                assert!(ReorderAlgorithm::LABEL_SET.contains(&r.algorithm));
                 lat.push(t.elapsed().as_secs_f64());
             }
             lat
@@ -95,31 +108,33 @@ fn main() -> anyhow::Result<()> {
     }
     let wall = t0.elapsed().as_secs_f64();
     println!(
-        "served {} concurrent predictions in {:.3}s -> {:.0} req/s",
+        "cold pass: {} requests in {:.3}s | warm: {} concurrent requests in {:.3}s -> {:.0} req/s",
+        collection.len(),
+        cold_wall,
         latencies.len(),
         wall,
         latencies.len() as f64 / wall
     );
     println!(
-        "latency p50 {:.2}ms  p99 {:.2}ms  mean batch size {:.1}",
+        "warm latency p50 {:.2}ms  p99 {:.2}ms",
         stats::percentile(&latencies, 50.0) * 1e3,
         stats::percentile(&latencies, 99.0) * 1e3,
-        svc.stats.mean_batch_size()
     );
 
-    // sanity: test-split accuracy served through the batcher
-    let all_x = dataset.features();
-    let mut correct = 0;
-    for &i in &test_idx {
-        let alg = svc.predict(&all_x[i])?;
-        if alg.label_index() == Some(dataset.records[i].label) {
-            correct += 1;
-        }
-    }
+    let s = engine.stats();
     println!(
-        "served test accuracy: {}/{} (same model as offline eval)",
-        correct,
-        test_idx.len()
+        "stats: {} requests | cache {} hits / {} misses / {} evictions ({:.1}% hit) | \
+         workspaces {} checkouts ({} created, {} reused) | {} predict batches (mean {:.1})",
+        s.requests,
+        s.cache.hits,
+        s.cache.misses,
+        s.cache.evictions,
+        100.0 * s.cache.hit_rate(),
+        s.workspaces.checkouts,
+        s.workspaces.creates,
+        s.workspaces.reuses,
+        s.service.batches,
+        s.service.mean_batch_size,
     );
     Ok(())
 }

@@ -1,0 +1,140 @@
+//! Serving-path benchmark: cold (cache-miss) vs warm (cache-hit)
+//! request latency through the full `ServingEngine` path — matrix →
+//! features → batched predict → reorder → solve.
+//!
+//! Run with `cargo bench --bench bench_serving`. Besides the console
+//! report it writes a machine-readable `BENCH_serving.json` (override
+//! the path with `BENCH_OUT`): one record per matrix with cold and warm
+//! end-to-end latency and the warm speedup, plus the engine's cache
+//! hit/miss/evict counters and workspace-pool create/reuse counters.
+//! `ci.sh` validates this artifact's schema (via `examples/check_bench`)
+//! whenever it is present.
+
+use smr::collection::generate_mini_collection;
+use smr::coordinator::service::Backend;
+use smr::coordinator::{ServingConfig, ServingEngine};
+use smr::dataset::{build_dataset, SweepConfig};
+use smr::ml::forest::{ForestParams, RandomForest};
+use smr::ml::normalize::{Method, Normalizer};
+use smr::ml::Classifier;
+use smr::reorder::ReorderAlgorithm;
+use smr::util::bench::{section, Bencher, JsonReport};
+use smr::util::json;
+use smr::util::Timer;
+
+fn main() {
+    // Train a forest backend on a small labeled sweep (pure Rust: the
+    // bench needs no AOT artifacts).
+    section("setup: sweep + train forest backend");
+    let train_coll = generate_mini_collection(5, 2);
+    let ds = build_dataset(
+        &train_coll,
+        &ReorderAlgorithm::LABEL_SET,
+        &SweepConfig::default(),
+    );
+    let normalizer = Normalizer::fit(Method::Standard, &ds.features());
+    let mut forest = RandomForest::new(
+        ForestParams {
+            n_estimators: 30,
+            ..Default::default()
+        },
+        5,
+    );
+    forest.fit(&normalizer.transform(&ds.features()), &ds.labels(), 4);
+
+    let cfg = ServingConfig::default();
+    let engine = ServingEngine::spawn(Backend::Forest { normalizer, forest }, cfg)
+        .expect("serving engine spawns");
+
+    let mut report = JsonReport::new();
+    report.set("bench", json::s("bench_serving"));
+    report.set("cache_capacity", json::num(engine.cache().capacity() as f64));
+
+    // Serve a distinct request mix (different seed than training).
+    let serve_coll = generate_mini_collection(17, 2);
+    for nm in &serve_coll {
+        section(&format!(
+            "serve: {} (n={}, nnz={})",
+            nm.name,
+            nm.matrix.nrows,
+            nm.matrix.nnz()
+        ));
+        // Cold: first-ever request for this pattern (one shot — a cold
+        // miss only exists once per pattern).
+        let t = Timer::start();
+        let cold_report = engine.serve(&nm.matrix).expect("cold request serves");
+        let cold_s = t.elapsed_s();
+        assert!(!cold_report.cache_hit, "{}: cold request hit", nm.name);
+
+        // Warm: steady-state repeats of the identical request.
+        let mut b = Bencher::coarse();
+        let warm = b
+            .bench(&format!("{}/warm", nm.name), || {
+                engine.serve(&nm.matrix).expect("warm request serves")
+            })
+            .clone();
+        println!(
+            "    cold {:.3} ms -> warm {:.3} ms ({:.1}x)",
+            cold_s * 1e3,
+            warm.min_s * 1e3,
+            cold_s / warm.min_s.max(1e-12)
+        );
+
+        report.push(json::obj(vec![
+            ("name", json::s(&nm.name)),
+            ("n", json::num(nm.matrix.nrows as f64)),
+            ("nnz", json::num(nm.matrix.nnz() as f64)),
+            ("cold_s", json::num(cold_s)),
+            ("warm_s", json::num(warm.min_s)),
+            ("speedup", json::num(cold_s / warm.min_s.max(1e-12))),
+        ]));
+    }
+
+    // Global per-stage counters.
+    let stats = engine.stats();
+    section("serving stats");
+    println!(
+        "requests {}  cache hits {} / misses {} / evictions {} (hit rate {:.1}%)",
+        stats.requests,
+        stats.cache.hits,
+        stats.cache.misses,
+        stats.cache.evictions,
+        100.0 * stats.cache.hit_rate()
+    );
+    println!(
+        "workspaces: checkouts {}  creates {}  reuses {}  | predict batches {} (mean size {:.1})",
+        stats.workspaces.checkouts,
+        stats.workspaces.creates,
+        stats.workspaces.reuses,
+        stats.service.batches,
+        stats.service.mean_batch_size
+    );
+    report.set(
+        "cache",
+        json::obj(vec![
+            ("hits", json::num(stats.cache.hits as f64)),
+            ("misses", json::num(stats.cache.misses as f64)),
+            ("inserts", json::num(stats.cache.inserts as f64)),
+            ("evictions", json::num(stats.cache.evictions as f64)),
+            ("entries", json::num(stats.cache.entries as f64)),
+            ("hit_rate", json::num(stats.cache.hit_rate())),
+        ]),
+    );
+    report.set(
+        "workspaces",
+        json::obj(vec![
+            ("checkouts", json::num(stats.workspaces.checkouts as f64)),
+            ("creates", json::num(stats.workspaces.creates as f64)),
+            ("reuses", json::num(stats.workspaces.reuses as f64)),
+        ]),
+    );
+    report.set("requests", json::num(stats.requests as f64));
+
+    engine.shutdown();
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_serving.json".into());
+    match report.write(&out) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\nfailed to write {out}: {e}"),
+    }
+}

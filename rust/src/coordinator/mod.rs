@@ -7,14 +7,41 @@
 //!   owns the PJRT executables and dynamically batches concurrent
 //!   prediction requests (max-batch / max-wait policy, like a vLLM-style
 //!   router's admission loop scaled to this problem).
+//! * [`serving`] — the full serving engine around that front: matrix →
+//!   features → batched predict → reorder → solve, with a pattern-keyed
+//!   ordering cache and a pooled-workspace miss path.
 //! * [`trainer`] — end-to-end training orchestration: dataset → grid
 //!   search over the classical models (and the AOT MLP variants) →
 //!   fitted predictor.
+//!
+//! ## Serving architecture
+//!
+//! The hot path is allocation-light and repeat-request-fast by stacking
+//! three reuse layers (see `reorder/mod.rs` for the ordering-side
+//! details):
+//!
+//! * **Cache keying** — orderings are memoized under `(PatternKey of the
+//!   symmetrized adjacency, algorithm, seed)`. Values never enter an
+//!   ordering and every algorithm is seed-deterministic, so a cache hit
+//!   is bit-identical to a fresh compute; numerically-different matrices
+//!   with one structure share entries — exactly the
+//!   factorization-in-loop workload shape.
+//! * **Invalidation / eviction** — entries are immutable facts about a
+//!   pattern, so there is no invalidation protocol at all; bounded
+//!   capacity is enforced per shard with LRU-ish (recency-tick) eviction
+//!   and lock-free hit/miss/evict counters.
+//! * **Workspace checkout discipline** — the ordering scratch
+//!   (`reorder::WorkspacePool`) is checked out per request, held only
+//!   across the ordering call (never across the solve), and returned by
+//!   the RAII guard on every exit path, so steady-state requests touch
+//!   the allocator zero times in the reorder stage.
 
 pub mod pipeline;
 pub mod service;
+pub mod serving;
 pub mod trainer;
 
 pub use pipeline::{PipelineReport, SelectionPipeline};
-pub use service::{BatcherConfig, PredictionService, ServiceStats};
+pub use service::{BatcherConfig, PredictionService, ServiceStats, ServiceStatsSnapshot};
+pub use serving::{ServingConfig, ServingEngine, ServingReport, ServingStats};
 pub use trainer::{train_forest, train_mlp, TrainedForest, TrainedMlp};

@@ -13,12 +13,20 @@
 //! [`SelectionPipeline::run`] builds one `reorder::MatrixAnalysis` per
 //! matrix and feeds it to both the feature extractor (shared degrees)
 //! and the chosen ordering, so selection and execution pay a single
-//! symmetrization.
+//! symmetrization. The remaining per-request allocations are gone too:
+//! ordering scratch is checked out of a [`WorkspacePool`] (warm in
+//! steady state) and the normalizer runs in place on the stack-resident
+//! feature array. Attach a shared ordering cache with
+//! [`SelectionPipeline::with_ordering_cache`] to make repeat-pattern
+//! requests skip the ordering entirely.
 
-use crate::features;
+use std::sync::Arc;
+
+use crate::features::{self, N_FEATURES};
 use crate::ml::normalize::Normalizer;
 use crate::ml::Classifier;
-use crate::reorder::{MatrixAnalysis, ReorderAlgorithm, Workspace};
+use crate::reorder::cache::OrderingCache;
+use crate::reorder::{reorderer, MatrixAnalysis, Permutation, ReorderAlgorithm, WorkspacePool};
 use crate::solver::{prepare, solve_ordered, SolveReport, SolverConfig};
 use crate::sparse::CsrMatrix;
 use crate::util::Timer;
@@ -55,6 +63,13 @@ pub struct SelectionPipeline {
     pub classifier: Box<dyn Classifier>,
     pub solver: SolverConfig,
     pub reorder_seed: u64,
+    /// Warm ordering scratch shared by every request through this
+    /// pipeline (checkout/return per request, zero steady-state
+    /// allocation).
+    workspaces: WorkspacePool,
+    /// Optional pattern-keyed ordering cache (shareable with a
+    /// `ServingEngine` fronting the same traffic).
+    cache: Option<Arc<OrderingCache>>,
 }
 
 impl SelectionPipeline {
@@ -68,14 +83,26 @@ impl SelectionPipeline {
             classifier,
             solver,
             reorder_seed: 0xDA7A,
+            workspaces: WorkspacePool::default(),
+            cache: None,
         }
     }
 
+    /// Consult (and fill) a pattern-keyed ordering cache in
+    /// [`Self::run`] / [`Self::run_fixed`].
+    pub fn with_ordering_cache(mut self, cache: Arc<OrderingCache>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
     /// Classifier inference on an extracted feature vector (label id
-    /// mapped through the clamped `ReorderAlgorithm::from_label`).
-    fn predict_from_features(&self, feats: &[f64]) -> (ReorderAlgorithm, f64) {
+    /// mapped through the clamped `ReorderAlgorithm::from_label`). The
+    /// feature array is normalized in place on the stack — no per-request
+    /// heap copy.
+    fn predict_from_features(&self, feats: &[f64; N_FEATURES]) -> (ReorderAlgorithm, f64) {
         let t_p = Timer::start();
-        let x = self.normalizer.transform_row(feats);
+        let mut x = *feats;
+        self.normalizer.transform_in_place(&mut x);
         let label = self.classifier.predict(&x);
         let predict_s = t_p.elapsed_s();
         (ReorderAlgorithm::from_label(label), predict_s)
@@ -127,7 +154,10 @@ impl SelectionPipeline {
 
     /// Reorder on a shared analysis, then solve, timing both;
     /// `analysis_s` is folded into the reported reorder time when the
-    /// caller hasn't already accounted for the analysis elsewhere.
+    /// caller hasn't already accounted for the analysis elsewhere. The
+    /// ordering runs on a pooled workspace (checked out only for the
+    /// ordering call) and goes through the ordering cache when one is
+    /// attached.
     fn solve_on_analysis(
         &self,
         spd: &CsrMatrix,
@@ -135,9 +165,22 @@ impl SelectionPipeline {
         algorithm: ReorderAlgorithm,
         analysis_s: f64,
     ) -> SolveReport {
-        let mut ws = Workspace::new();
         let t_r = Timer::start();
-        let perm = algorithm.compute_with(analysis.graph(), self.reorder_seed, &mut ws);
+        let perm: Arc<Permutation> = match &self.cache {
+            Some(cache) => {
+                cache
+                    .fetch_or_order(analysis, algorithm, self.reorder_seed, &self.workspaces)
+                    .0
+            }
+            None => {
+                let mut ws = self.workspaces.checkout();
+                Arc::new(reorderer(algorithm).order(
+                    analysis.graph(),
+                    &mut ws,
+                    self.reorder_seed,
+                ))
+            }
+        };
         let reorder_s = analysis_s + t_r.elapsed_s();
         let mut solve =
             solve_ordered(spd, &perm, &self.solver).expect("prepared matrix factorizes");
@@ -195,5 +238,60 @@ mod tests {
         let pipe = SelectionPipeline::new(norm, Box::new(knn), SolverConfig::default());
         let r = pipe.run_fixed(&coll[0].matrix, ReorderAlgorithm::Amd);
         assert!(r.total_s() > 0.0);
+    }
+
+    #[test]
+    fn repeated_runs_reuse_pooled_workspaces() {
+        let coll = generate_mini_collection(2, 1);
+        let ds = build_dataset(
+            &coll,
+            &ReorderAlgorithm::LABEL_SET,
+            &SweepConfig::default(),
+        );
+        let norm = Normalizer::fit(Method::Standard, &ds.features());
+        let mut knn = Knn::new(KnnParams::default());
+        knn.fit(&norm.transform(&ds.features()), &ds.labels(), 4);
+        let pipe = SelectionPipeline::new(norm, Box::new(knn), SolverConfig::default());
+        for _ in 0..3 {
+            pipe.run_fixed(&coll[0].matrix, ReorderAlgorithm::Amd);
+        }
+        let s = pipe.workspaces.stats();
+        assert_eq!(s.checkouts, 3);
+        assert_eq!(s.creates, 1, "sequential requests must reuse scratch");
+        assert_eq!(s.reuses, 2);
+    }
+
+    #[test]
+    fn cached_pipeline_matches_uncached_and_hits_on_repeats() {
+        use crate::reorder::cache::{CacheConfig, OrderingCache};
+        let coll = generate_mini_collection(2, 1);
+        let ds = build_dataset(
+            &coll,
+            &ReorderAlgorithm::LABEL_SET,
+            &SweepConfig::default(),
+        );
+        let norm = Normalizer::fit(Method::Standard, &ds.features());
+        // two identically-fitted classifiers (Knn fit is deterministic)
+        let mut knn_a = Knn::new(KnnParams::default());
+        knn_a.fit(&norm.transform(&ds.features()), &ds.labels(), 4);
+        let mut knn_b = Knn::new(KnnParams::default());
+        knn_b.fit(&norm.transform(&ds.features()), &ds.labels(), 4);
+        let plain =
+            SelectionPipeline::new(norm.clone(), Box::new(knn_a), SolverConfig::default());
+        let cache = Arc::new(OrderingCache::new(CacheConfig::default()));
+        let cached = SelectionPipeline::new(norm, Box::new(knn_b), SolverConfig::default())
+            .with_ordering_cache(cache.clone());
+
+        for nm in &coll {
+            let a = plain.run_fixed(&nm.matrix, ReorderAlgorithm::Amd);
+            let b = cached.run_fixed(&nm.matrix, ReorderAlgorithm::Amd);
+            let c = cached.run_fixed(&nm.matrix, ReorderAlgorithm::Amd); // hit
+            assert_eq!(a.fill, b.fill, "{}", nm.name);
+            assert_eq!(b.fill, c.fill, "{}", nm.name);
+            assert_eq!(a.flops, c.flops, "{}", nm.name);
+        }
+        let s = cache.stats();
+        assert_eq!(s.misses, coll.len() as u64);
+        assert_eq!(s.hits, coll.len() as u64);
     }
 }

@@ -68,6 +68,24 @@ impl ServiceStats {
             self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
         }
     }
+
+    /// One consistent read of the counters — what `ServingEngine::stats`
+    /// folds into its per-stage report.
+    pub fn snapshot(&self) -> ServiceStatsSnapshot {
+        ServiceStatsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            mean_batch_size: self.mean_batch_size(),
+        }
+    }
+}
+
+/// Plain-value snapshot of [`ServiceStats`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServiceStatsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
 }
 
 /// Model backend the runtime thread instantiates *on its own thread*.

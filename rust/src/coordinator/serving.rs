@@ -1,0 +1,286 @@
+//! The serving engine: the full request path (matrix → features →
+//! predict → reorder → solve), allocation-light and repeat-request-fast.
+//!
+//! [`ServingEngine`] composes the pieces the serving papers' routers
+//! compose, scaled to this system:
+//!
+//! * the batched [`PredictionService`] (dedicated runtime thread,
+//!   max-batch/max-wait admission) answers "which ordering?";
+//! * the pattern-keyed [`OrderingCache`] answers repeat requests without
+//!   re-running the ordering at all — the workloads the paper's
+//!   selector targets re-solve one structural pattern under many
+//!   numerics, so steady state is nearly all hits;
+//! * the [`WorkspacePool`] makes the remaining cold-path orderings
+//!   allocation-free (checkout a warm O(n) scratch, return on drop).
+//!
+//! Every stage is timed per request ([`ServingReport`]) and counted
+//! globally ([`ServingStats`]): request count, cache hit/miss/evict,
+//! workspace create/reuse, and the prediction service's batching
+//! counters. Cached orderings are bit-identical to fresh computes — the
+//! cache key carries everything an ordering is a function of (pattern
+//! fingerprint, algorithm, seed); `tests/integration_serving.rs` and
+//! `tests/prop_ordering_cache.rs` hold that line.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::service::{Backend, BatcherConfig, PredictionService, ServiceStatsSnapshot};
+use crate::features;
+use crate::reorder::cache::{CacheConfig, CacheStats, OrderingCache};
+use crate::reorder::{MatrixAnalysis, Permutation, ReorderAlgorithm, WorkspacePool};
+use crate::solver::{prepare, solve_ordered, SolveReport, SolverConfig};
+use crate::sparse::CsrMatrix;
+use crate::util::pool::PoolStats;
+use crate::util::Timer;
+
+/// Knobs for [`ServingEngine::spawn`].
+#[derive(Clone, Copy, Debug)]
+pub struct ServingConfig {
+    /// Ordering-cache sizing.
+    pub cache: CacheConfig,
+    /// Dynamic-batching policy for the prediction service.
+    pub batcher: BatcherConfig,
+    /// Solver configuration for the downstream direct solve.
+    pub solver: SolverConfig,
+    /// Seed every served ordering derives from (part of the cache key).
+    pub reorder_seed: u64,
+    /// Warm workspaces kept parked between requests.
+    pub max_idle_workspaces: usize,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            cache: CacheConfig::default(),
+            batcher: BatcherConfig::default(),
+            solver: SolverConfig::default(),
+            reorder_seed: 0xDA7A, // same stream as SelectionPipeline
+            max_idle_workspaces: crate::util::pool::default_workers() + 1,
+        }
+    }
+}
+
+/// Per-request report: every stage timed, plus where the ordering came
+/// from.
+#[derive(Clone, Debug)]
+pub struct ServingReport {
+    /// Algorithm the service selected.
+    pub algorithm: ReorderAlgorithm,
+    /// Analysis + feature extraction time.
+    pub feature_s: f64,
+    /// Batched classifier round trip.
+    pub predict_s: f64,
+    /// Ordering time (≈0 on a cache hit).
+    pub reorder_s: f64,
+    /// Whether the ordering came from the cache.
+    pub cache_hit: bool,
+    /// The ordering itself (shared with the cache).
+    pub permutation: Arc<Permutation>,
+    /// The downstream solve (its `reorder_s` mirrors the field above).
+    pub solve: SolveReport,
+}
+
+impl ServingReport {
+    /// Prediction overhead (features + inference).
+    pub fn prediction_s(&self) -> f64 {
+        self.feature_s + self.predict_s
+    }
+
+    /// Full request latency: predict + reorder + solve.
+    pub fn end_to_end_s(&self) -> f64 {
+        self.prediction_s() + self.reorder_s + self.solve.total_s()
+    }
+}
+
+/// Per-stage counter snapshot of a running [`ServingEngine`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServingStats {
+    /// Requests served end to end.
+    pub requests: u64,
+    /// Ordering-cache counters (hits/misses/evictions/entries).
+    pub cache: CacheStats,
+    /// Workspace-pool counters (checkouts/creates/reuses).
+    pub workspaces: PoolStats,
+    /// Prediction-service counters (requests/batches/mean batch).
+    pub service: ServiceStatsSnapshot,
+}
+
+/// The deployable serving object: spawn once, [`ServingEngine::serve`]
+/// from any number of threads, read [`ServingEngine::stats`], shut down.
+pub struct ServingEngine {
+    service: PredictionService,
+    cache: Arc<OrderingCache>,
+    workspaces: WorkspacePool,
+    solver: SolverConfig,
+    reorder_seed: u64,
+    requests: AtomicU64,
+}
+
+impl ServingEngine {
+    /// Stand the engine up on a model backend (spawns the prediction
+    /// service's runtime thread).
+    pub fn spawn(backend: Backend, cfg: ServingConfig) -> Result<ServingEngine> {
+        let service = PredictionService::spawn(backend, cfg.batcher)?;
+        Ok(Self::new(service, cfg))
+    }
+
+    /// Wrap an already-running prediction service.
+    pub fn new(service: PredictionService, cfg: ServingConfig) -> ServingEngine {
+        ServingEngine {
+            service,
+            cache: Arc::new(OrderingCache::new(cfg.cache)),
+            workspaces: WorkspacePool::new(cfg.max_idle_workspaces.max(1)),
+            solver: cfg.solver,
+            reorder_seed: cfg.reorder_seed,
+            requests: AtomicU64::new(0),
+        }
+    }
+
+    /// The ordering cache (shareable with other consumers, e.g. a
+    /// `SelectionPipeline` serving the same traffic).
+    pub fn cache(&self) -> &Arc<OrderingCache> {
+        &self.cache
+    }
+
+    /// Serve one request end to end: prepare + analyze once, extract
+    /// features off the shared degrees, predict through the batcher,
+    /// fetch-or-compute the ordering (pooled workspace on the miss
+    /// path), then factorize + solve.
+    pub fn serve(&self, a: &CsrMatrix) -> Result<ServingReport> {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let spd = prepare(a, &self.solver);
+
+        let t_f = Timer::start();
+        let analysis = MatrixAnalysis::of(&spd);
+        let feats = features::extract_with_degrees(a, analysis.degrees());
+        let feature_s = t_f.elapsed_s();
+
+        let t_p = Timer::start();
+        let algorithm = self.service.predict(&feats)?;
+        let predict_s = t_p.elapsed_s();
+
+        let t_r = Timer::start();
+        let (permutation, cache_hit) =
+            self.cache
+                .fetch_or_order(&analysis, algorithm, self.reorder_seed, &self.workspaces);
+        let reorder_s = t_r.elapsed_s();
+
+        let mut solve =
+            solve_ordered(&spd, &permutation, &self.solver).map_err(anyhow::Error::msg)?;
+        solve.reorder_s = reorder_s;
+
+        Ok(ServingReport {
+            algorithm,
+            feature_s,
+            predict_s,
+            reorder_s,
+            cache_hit,
+            permutation,
+            solve,
+        })
+    }
+
+    /// Per-stage counters across the engine's lifetime.
+    pub fn stats(&self) -> ServingStats {
+        ServingStats {
+            requests: self.requests.load(Ordering::Relaxed),
+            cache: self.cache.stats(),
+            workspaces: self.workspaces.stats(),
+            service: self.service.stats.snapshot(),
+        }
+    }
+
+    /// Shut the prediction service's runtime thread down and join it.
+    pub fn shutdown(self) {
+        self.service.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::N_FEATURES;
+    use crate::ml::forest::{ForestParams, RandomForest};
+    use crate::ml::normalize::{Method, Normalizer};
+    use crate::ml::testutil::blobs;
+    use crate::sparse::CooMatrix;
+
+    fn forest_backend() -> Backend {
+        let (x, y) = blobs(30, N_FEATURES, 0.5, 1);
+        let normalizer = Normalizer::fit(Method::Standard, &x);
+        let mut forest = RandomForest::new(
+            ForestParams {
+                n_estimators: 15,
+                ..Default::default()
+            },
+            3,
+        );
+        forest.fit(&normalizer.transform(&x), &y, 4);
+        Backend::Forest { normalizer, forest }
+    }
+
+    fn mesh(nx: usize, ny: usize) -> CsrMatrix {
+        let idx = |x: usize, y: usize| y * nx + x;
+        let n = nx * ny;
+        let mut coo = CooMatrix::new(n, n);
+        for y in 0..ny {
+            for x in 0..nx {
+                let v = idx(x, y);
+                coo.push(v, v, 4.0);
+                if x + 1 < nx {
+                    coo.push_sym(v, idx(x + 1, y), -1.0);
+                }
+                if y + 1 < ny {
+                    coo.push_sym(v, idx(x, y + 1), -1.0);
+                }
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn repeat_requests_hit_the_cache_and_replay_the_ordering() {
+        let engine = ServingEngine::spawn(forest_backend(), ServingConfig::default()).unwrap();
+        let a = mesh(11, 9);
+        let cold = engine.serve(&a).unwrap();
+        assert!(!cold.cache_hit);
+        assert!(cold.solve.residual < 1e-6);
+        let warm = engine.serve(&a).unwrap();
+        assert!(warm.cache_hit, "identical request missed the cache");
+        assert_eq!(warm.algorithm, cold.algorithm);
+        assert_eq!(warm.permutation, cold.permutation);
+        assert_eq!(warm.solve.fill, cold.solve.fill);
+
+        let s = engine.stats();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.cache.hits, 1);
+        assert_eq!(s.cache.misses, 1);
+        assert_eq!(s.service.requests, 2);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn served_ordering_is_bit_identical_to_fresh_compute() {
+        let cfg = ServingConfig::default();
+        let engine = ServingEngine::spawn(forest_backend(), cfg).unwrap();
+        let a = mesh(8, 8);
+        let r = engine.serve(&a).unwrap();
+        let spd = prepare(&a, &cfg.solver);
+        assert_eq!(*r.permutation, r.algorithm.compute(&spd, cfg.reorder_seed));
+        engine.shutdown();
+    }
+
+    #[test]
+    fn distinct_patterns_get_distinct_entries() {
+        let engine = ServingEngine::spawn(forest_backend(), ServingConfig::default()).unwrap();
+        let (a, b) = (mesh(6, 6), mesh(7, 5));
+        let ra = engine.serve(&a).unwrap();
+        let rb = engine.serve(&b).unwrap();
+        assert!(!ra.cache_hit && !rb.cache_hit);
+        assert_eq!(ra.permutation.len(), 36);
+        assert_eq!(rb.permutation.len(), 35);
+        engine.shutdown();
+    }
+}

@@ -65,10 +65,19 @@ impl Normalizer {
     }
 
     pub fn transform_row(&self, row: &[f64]) -> Vec<f64> {
-        row.iter()
-            .zip(self.offset.iter().zip(&self.scale))
-            .map(|(v, (o, s))| (v - o) / s)
-            .collect()
+        let mut out = row.to_vec();
+        self.transform_in_place(&mut out);
+        out
+    }
+
+    /// Borrowed-slice form of [`Self::transform_row`]: normalize in
+    /// place, no allocation. The serving path calls this on a
+    /// stack-resident feature array, so per-request prediction does not
+    /// copy the row onto the heap.
+    pub fn transform_in_place(&self, row: &mut [f64]) {
+        for (v, (o, s)) in row.iter_mut().zip(self.offset.iter().zip(&self.scale)) {
+            *v = (*v - o) / s;
+        }
     }
 
     pub fn transform(&self, rows: &[Vec<f64>]) -> Vec<Vec<f64>> {
@@ -115,6 +124,17 @@ mod tests {
             let n = Normalizer::fit(m, &rows());
             let t = n.transform(&rows());
             assert!(t.iter().all(|r| r[2].is_finite()));
+        }
+    }
+
+    #[test]
+    fn in_place_matches_allocating_transform() {
+        for m in [Method::MaxMin, Method::Standard] {
+            let n = Normalizer::fit(m, &rows());
+            let row = [3.0, 25.0, 5.0];
+            let mut inplace = row;
+            n.transform_in_place(&mut inplace);
+            assert_eq!(inplace.to_vec(), n.transform_row(&row));
         }
     }
 

@@ -1,0 +1,401 @@
+//! Pattern-keyed ordering cache — the serving path's repeat-request
+//! fast lane.
+//!
+//! Reordering is a pure function of `(pattern, algorithm, seed)`: values
+//! never enter an ordering, and every algorithm here is deterministic
+//! given its seed. Workloads that re-solve the *same structural pattern*
+//! under different numerics (factorization-in-loop, time stepping,
+//! Newton iterations) therefore recompute byte-identical permutations on
+//! every request. [`OrderingCache`] memoizes them:
+//!
+//! * **Keying** ([`OrderingKey`]): the [`PatternKey`] structural
+//!   fingerprint (order + nnz + row-ptr/col-idx hash) plus the algorithm
+//!   and the reorder seed. Including the seed keeps the ND/SCOTCH/PORD
+//!   bisection randomness inside the key, so a hit is bit-identical to a
+//!   fresh compute by construction (property tested in
+//!   `tests/prop_ordering_cache.rs`).
+//! * **Sharding**: entries are spread over `shards` independent
+//!   mutex-protected maps selected by the key hash, so concurrent
+//!   requests for different patterns rarely contend on one lock.
+//! * **Eviction**: bounded, LRU-ish. Every hit stamps the entry with a
+//!   global monotone tick; when a shard is full the stalest entry in
+//!   that shard is dropped. Total residency never exceeds the configured
+//!   capacity (shard capacities are floored so `shards * per_shard <=
+//!   capacity`).
+//! * **Counters**: lock-free hit/miss/insert/evict atomics, snapshotted
+//!   by [`OrderingCache::stats`]; `hits + misses == lookups` always.
+//!
+//! Values are `Arc<Permutation>` so a hit is one atomic increment — the
+//! caller, the cache, and an in-flight solve can all hold the same
+//! ordering without copying the O(n) vector.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::engine::{reorderer, MatrixAnalysis};
+use super::workspace::WorkspacePool;
+use super::{Permutation, ReorderAlgorithm};
+use crate::sparse::PatternKey;
+
+/// Cache identity of one ordering: the structural fingerprint, which
+/// algorithm ran, and the seed its randomness derived from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct OrderingKey {
+    pub pattern: PatternKey,
+    pub algorithm: ReorderAlgorithm,
+    pub seed: u64,
+}
+
+impl OrderingKey {
+    /// The canonical key for an ordering of an analyzed matrix — every
+    /// cache consumer builds keys through here, so the keying policy
+    /// (fingerprint of the *symmetrized adjacency*, not the raw matrix)
+    /// lives in one place.
+    pub fn for_analysis(
+        analysis: &MatrixAnalysis,
+        algorithm: ReorderAlgorithm,
+        seed: u64,
+    ) -> OrderingKey {
+        OrderingKey {
+            pattern: analysis.pattern_key(),
+            algorithm,
+            seed,
+        }
+    }
+
+    /// 64-bit mix used for shard selection (the pattern hash already has
+    /// full entropy; fold in the algorithm and seed).
+    fn mix(&self) -> u64 {
+        let alg = self.algorithm as u64;
+        let mut h = self
+            .pattern
+            .hash
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .rotate_left(17);
+        h ^= alg.wrapping_mul(0xBF58476D1CE4E5B9);
+        h ^= self.seed.wrapping_mul(0x94D049BB133111EB);
+        h
+    }
+}
+
+/// Sizing knobs for [`OrderingCache`].
+#[derive(Clone, Copy, Debug)]
+pub struct CacheConfig {
+    /// Maximum resident permutations across all shards.
+    pub capacity: usize,
+    /// Number of independently-locked shards (clamped to `capacity`).
+    pub shards: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            capacity: 256,
+            shards: 8,
+        }
+    }
+}
+
+/// Counter snapshot (one consistent read of the atomics).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub inserts: u64,
+    pub evictions: u64,
+    /// Resident entries at snapshot time.
+    pub entries: usize,
+}
+
+impl CacheStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let l = self.lookups();
+        if l == 0 {
+            0.0
+        } else {
+            self.hits as f64 / l as f64
+        }
+    }
+}
+
+struct Entry {
+    perm: Arc<Permutation>,
+    /// Global tick of the last hit/insert (the LRU-ish recency stamp).
+    last_used: u64,
+}
+
+/// Bounded, sharded `(PatternKey, algorithm, seed) → Arc<Permutation>`
+/// map with LRU-ish eviction. See the module docs for the design.
+pub struct OrderingCache {
+    shards: Vec<Mutex<HashMap<OrderingKey, Entry>>>,
+    per_shard: usize,
+    tick: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    inserts: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl OrderingCache {
+    pub fn new(cfg: CacheConfig) -> Self {
+        let capacity = cfg.capacity.max(1);
+        let shards = cfg.shards.clamp(1, capacity);
+        // floor division: shards * per_shard <= capacity, so the bound
+        // the eviction test asserts holds exactly
+        let per_shard = (capacity / shards).max(1);
+        OrderingCache {
+            shards: (0..shards).map(|_| Mutex::new(HashMap::new())).collect(),
+            per_shard,
+            tick: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            inserts: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    pub fn with_default_config() -> Self {
+        Self::new(CacheConfig::default())
+    }
+
+    /// Effective capacity (`shards * per_shard`, ≤ the configured one).
+    pub fn capacity(&self) -> usize {
+        self.shards.len() * self.per_shard
+    }
+
+    /// Resident entries (sums shard sizes; momentary under concurrency).
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().expect("cache shard poisoned").len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn shard(&self, key: &OrderingKey) -> &Mutex<HashMap<OrderingKey, Entry>> {
+        let i = (key.mix() % self.shards.len() as u64) as usize;
+        &self.shards[i]
+    }
+
+    fn next_tick(&self) -> u64 {
+        self.tick.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Counted lookup: `Some` stamps recency and counts a hit, `None`
+    /// counts a miss.
+    pub fn get(&self, key: &OrderingKey) -> Option<Arc<Permutation>> {
+        let mut shard = self.shard(key).lock().expect("cache shard poisoned");
+        match shard.get_mut(key) {
+            Some(e) => {
+                e.last_used = self.next_tick();
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(e.perm.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (idempotent: an existing entry for `key` is kept — the
+    /// value is a pure function of the key, so both are identical and
+    /// keeping the resident one preserves its recency). Evicts the
+    /// stalest entry of the target shard when it is full.
+    pub fn insert(&self, key: OrderingKey, perm: Arc<Permutation>) -> Arc<Permutation> {
+        let mut shard = self.shard(&key).lock().expect("cache shard poisoned");
+        if let Some(e) = shard.get(&key) {
+            return e.perm.clone();
+        }
+        if shard.len() >= self.per_shard {
+            if let Some(stale) = shard
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+            {
+                shard.remove(&stale);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let tick = self.next_tick();
+        shard.insert(
+            key,
+            Entry {
+                perm: perm.clone(),
+                last_used: tick,
+            },
+        );
+        self.inserts.fetch_add(1, Ordering::Relaxed);
+        perm
+    }
+
+    /// The serving primitive: one counted lookup; on miss, compute
+    /// *outside* the shard lock and insert. Returns the permutation and
+    /// whether this call was a hit. Two threads missing the same key
+    /// concurrently both compute (deterministically identical values);
+    /// the first insert wins and the loser adopts the resident `Arc`, so
+    /// every caller still observes one canonical permutation.
+    pub fn get_or_compute(
+        &self,
+        key: OrderingKey,
+        compute: impl FnOnce() -> Permutation,
+    ) -> (Arc<Permutation>, bool) {
+        if let Some(p) = self.get(&key) {
+            return (p, true);
+        }
+        let perm = self.insert(key, Arc::new(compute()));
+        (perm, false)
+    }
+
+    /// The request-path composition of cache + pool, shared by the
+    /// serving engine and the selection pipeline so the key construction
+    /// and the checkout discipline live in exactly one place: one
+    /// counted lookup keyed off the analysis fingerprint; on miss, the
+    /// algorithm runs on a workspace checked out of `pool` — the
+    /// checkout happens only on the miss path, so warm traffic never
+    /// touches the pool.
+    pub fn fetch_or_order(
+        &self,
+        analysis: &MatrixAnalysis,
+        algorithm: ReorderAlgorithm,
+        seed: u64,
+        pool: &WorkspacePool,
+    ) -> (Arc<Permutation>, bool) {
+        let key = OrderingKey::for_analysis(analysis, algorithm, seed);
+        self.get_or_compute(key, || {
+            let mut ws = pool.checkout();
+            reorderer(algorithm).order(analysis.graph(), &mut ws, seed)
+        })
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            inserts: self.inserts.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: self.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(pattern_hash: u64, n: usize, alg: ReorderAlgorithm, seed: u64) -> OrderingKey {
+        OrderingKey {
+            pattern: PatternKey {
+                n,
+                nnz: 3 * n,
+                hash: pattern_hash,
+            },
+            algorithm: alg,
+            seed,
+        }
+    }
+
+    #[test]
+    fn miss_then_hit_round_trip() {
+        let cache = OrderingCache::with_default_config();
+        let k = key(0xABCD, 5, ReorderAlgorithm::Amd, 7);
+        let (p1, hit1) = cache.get_or_compute(k, || Permutation::identity(5));
+        assert!(!hit1);
+        let (p2, hit2) = cache.get_or_compute(k, || panic!("must not recompute"));
+        assert!(hit2);
+        assert!(Arc::ptr_eq(&p1, &p2));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.inserts), (1, 1, 1));
+        assert_eq!(s.lookups(), 2);
+        assert_eq!(s.entries, 1);
+    }
+
+    #[test]
+    fn distinct_algorithms_and_seeds_are_distinct_entries() {
+        let cache = OrderingCache::with_default_config();
+        let mut n_entries = 0;
+        for alg in [ReorderAlgorithm::Amd, ReorderAlgorithm::Rcm] {
+            for seed in [1u64, 2] {
+                let (_, hit) =
+                    cache.get_or_compute(key(9, 4, alg, seed), || Permutation::identity(4));
+                assert!(!hit);
+                n_entries += 1;
+            }
+        }
+        assert_eq!(cache.len(), n_entries);
+    }
+
+    #[test]
+    fn capacity_is_never_exceeded_and_evictions_count() {
+        let cache = OrderingCache::new(CacheConfig {
+            capacity: 6,
+            shards: 3,
+        });
+        assert!(cache.capacity() <= 6);
+        for i in 0..50u64 {
+            cache.insert(
+                key(i, 4, ReorderAlgorithm::Amd, 0),
+                Arc::new(Permutation::identity(4)),
+            );
+            assert!(cache.len() <= cache.capacity(), "overflow at insert {i}");
+        }
+        let s = cache.stats();
+        assert!(s.evictions > 0);
+        assert_eq!(s.inserts, 50);
+        assert_eq!(s.entries, cache.len());
+    }
+
+    #[test]
+    fn lru_ish_keeps_the_recently_used_entry() {
+        // single shard, capacity 2: touch A, insert C -> B (stale) evicted
+        let cache = OrderingCache::new(CacheConfig {
+            capacity: 2,
+            shards: 1,
+        });
+        let (ka, kb, kc) = (
+            key(1, 3, ReorderAlgorithm::Amd, 0),
+            key(2, 3, ReorderAlgorithm::Amd, 0),
+            key(3, 3, ReorderAlgorithm::Amd, 0),
+        );
+        cache.insert(ka, Arc::new(Permutation::identity(3)));
+        cache.insert(kb, Arc::new(Permutation::identity(3)));
+        assert!(cache.get(&ka).is_some()); // A is now most recent
+        cache.insert(kc, Arc::new(Permutation::identity(3)));
+        assert!(cache.get(&ka).is_some(), "recently-used entry evicted");
+        assert!(cache.get(&kb).is_none(), "stale entry survived");
+        assert!(cache.get(&kc).is_some());
+    }
+
+    #[test]
+    fn insert_is_idempotent() {
+        let cache = OrderingCache::with_default_config();
+        let k = key(7, 4, ReorderAlgorithm::Nd, 3);
+        let first = cache.insert(k, Arc::new(Permutation::identity(4)));
+        let second = cache.insert(k, Arc::new(Permutation::identity(4)));
+        assert!(Arc::ptr_eq(&first, &second));
+        assert_eq!(cache.stats().inserts, 1);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn degenerate_configs_are_clamped() {
+        let cache = OrderingCache::new(CacheConfig {
+            capacity: 0,
+            shards: 0,
+        });
+        assert_eq!(cache.capacity(), 1);
+        let tiny = OrderingCache::new(CacheConfig {
+            capacity: 2,
+            shards: 16,
+        });
+        assert!(tiny.capacity() <= 2);
+    }
+}

@@ -20,23 +20,26 @@
 //! `seed ^ 0x5ee_d`, and workspace reuse is observation-free (property
 //! tested in `tests/prop_reorder_engine.rs`).
 
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 
+use super::cache::{OrderingCache, OrderingKey};
 use super::workspace::Workspace;
 use super::{hybrid, mindeg, nd, rcm, Permutation, ReorderAlgorithm};
 use crate::graph::Graph;
-use crate::sparse::CsrMatrix;
+use crate::sparse::{CsrMatrix, PatternKey};
 use crate::util::pool::parallel_map_init;
 use crate::util::Timer;
 
 /// Everything the ordering layer derives from a matrix exactly once:
-/// the symmetrized adjacency, its degrees, and (on demand) connected
-/// components. Shared by every candidate ordering of a sweep and by the
-/// feature extractor.
+/// the symmetrized adjacency, its degrees, (on demand) connected
+/// components, and (on demand) the structural fingerprint the ordering
+/// cache keys on. Shared by every candidate ordering of a sweep and by
+/// the feature extractor.
 pub struct MatrixAnalysis {
     graph: Graph,
     degrees: Vec<usize>,
     components: OnceLock<(Vec<usize>, usize)>,
+    key: OnceLock<PatternKey>,
 }
 
 impl MatrixAnalysis {
@@ -52,6 +55,7 @@ impl MatrixAnalysis {
             graph,
             degrees,
             components: OnceLock::new(),
+            key: OnceLock::new(),
         }
     }
 
@@ -76,6 +80,21 @@ impl MatrixAnalysis {
     pub fn components(&self) -> (&[usize], usize) {
         let c = self.components.get_or_init(|| self.graph.components());
         (&c.0, c.1)
+    }
+
+    /// Fingerprint of the symmetrized adjacency (computed on first use,
+    /// then cached). This — not the raw matrix's fingerprint — is what
+    /// orderings are keyed on: every ordering is a pure function of the
+    /// symmetrized graph, so matrices that symmetrize identically share
+    /// cache entries.
+    pub fn pattern_key(&self) -> PatternKey {
+        *self.key.get_or_init(|| {
+            PatternKey::of_parts(
+                self.graph.n_vertices(),
+                &self.graph.indptr,
+                &self.graph.indices,
+            )
+        })
     }
 }
 
@@ -138,12 +157,14 @@ pub fn reorderer(alg: ReorderAlgorithm) -> &'static dyn Reorderer {
 /// exactly like the dataset sweep pins the supernodal factorization).
 pub struct ReorderEngine {
     workers: usize,
+    cache: Option<Arc<OrderingCache>>,
 }
 
 impl ReorderEngine {
     pub fn new(workers: usize) -> Self {
         ReorderEngine {
             workers: workers.max(1),
+            cache: None,
         }
     }
 
@@ -153,11 +174,29 @@ impl ReorderEngine {
         Self::new(1)
     }
 
+    /// Attach a pattern-keyed ordering cache: [`Self::compute`],
+    /// [`Self::compute_shared`], and [`Self::sweep`]/[`Self::sweep_shared`]
+    /// consult it before running an algorithm and publish what they
+    /// compute. Hits are bit-identical to fresh computes (the cache key
+    /// carries the pattern fingerprint, algorithm, and seed — everything
+    /// an ordering is a function of).
+    pub fn with_cache(mut self, cache: Arc<OrderingCache>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    pub fn cache(&self) -> Option<&Arc<OrderingCache>> {
+        self.cache.as_ref()
+    }
+
     pub fn workers(&self) -> usize {
         self.workers
     }
 
-    /// One ordering on a caller-owned workspace.
+    /// One ordering on a caller-owned workspace (through the cache when
+    /// one is attached; the hit path clones out of the shared entry —
+    /// callers that can hold an `Arc` should prefer
+    /// [`Self::compute_shared`], which doesn't copy).
     pub fn compute(
         &self,
         ma: &MatrixAnalysis,
@@ -165,17 +204,64 @@ impl ReorderEngine {
         seed: u64,
         ws: &mut Workspace,
     ) -> Permutation {
-        reorderer(alg).order(ma.graph(), ws, seed)
+        match &self.cache {
+            None => reorderer(alg).order(ma.graph(), ws, seed),
+            Some(_) => (*self.compute_shared(ma, alg, seed, ws).0).clone(),
+        }
     }
 
-    /// All candidate orderings, in input order.
+    /// One ordering as a shared handle, plus whether it was a cache hit.
+    /// Without a cache this is a fresh compute wrapped in an `Arc`
+    /// (`hit == false`).
+    pub fn compute_shared(
+        &self,
+        ma: &MatrixAnalysis,
+        alg: ReorderAlgorithm,
+        seed: u64,
+        ws: &mut Workspace,
+    ) -> (Arc<Permutation>, bool) {
+        match &self.cache {
+            None => (Arc::new(reorderer(alg).order(ma.graph(), ws, seed)), false),
+            Some(cache) => {
+                let key = OrderingKey::for_analysis(ma, alg, seed);
+                cache.get_or_compute(key, || reorderer(alg).order(ma.graph(), ws, seed))
+            }
+        }
+    }
+
+    /// All candidate orderings, in input order (cache-aware when a cache
+    /// is attached: hits skip the algorithm entirely).
     pub fn sweep(
         &self,
         ma: &MatrixAnalysis,
         algorithms: &[ReorderAlgorithm],
         seed: u64,
     ) -> Vec<Permutation> {
-        self.sweep_map(ma, algorithms, seed, |_, perm, _| perm)
+        match &self.cache {
+            None => self.sweep_map(ma, algorithms, seed, |_, perm, _| perm),
+            Some(_) => self
+                .sweep_shared(ma, algorithms, seed)
+                .into_iter()
+                .map(|p| (*p).clone())
+                .collect(),
+        }
+    }
+
+    /// Cache-aware sweep returning shared handles: one counted cache
+    /// lookup per candidate, misses computed over the pool with one warm
+    /// workspace per worker, results in `algorithms` order.
+    pub fn sweep_shared(
+        &self,
+        ma: &MatrixAnalysis,
+        algorithms: &[ReorderAlgorithm],
+        seed: u64,
+    ) -> Vec<Arc<Permutation>> {
+        parallel_map_init(
+            algorithms,
+            self.workers,
+            Workspace::new,
+            |ws, _, &alg| self.compute_shared(ma, alg, seed, ws).0,
+        )
     }
 
     /// Sweep with a per-ordering continuation: `f(algorithm, permutation,
@@ -297,6 +383,64 @@ mod tests {
         let par = ReorderEngine::new(8).sweep(&ma, &ReorderAlgorithm::PAPER_SET, 7);
         let seq = ReorderEngine::sequential().sweep(&ma, &ReorderAlgorithm::PAPER_SET, 7);
         assert_eq!(par, seq);
+    }
+
+    #[test]
+    fn analysis_pattern_key_is_stable_and_symmetrization_canonical() {
+        let a = mesh(7, 5);
+        let ma = MatrixAnalysis::of(&a);
+        assert_eq!(ma.pattern_key(), ma.pattern_key());
+        // a matrix storing only one triangle symmetrizes to the same
+        // adjacency, so it must share the ordering-cache key
+        let mut coo = crate::sparse::CooMatrix::new(a.nrows, a.ncols);
+        for r in 0..a.nrows {
+            for (k, &c) in a.row_indices(r).iter().enumerate() {
+                if c <= r {
+                    coo.push(r, c, a.row_data(r)[k]);
+                }
+            }
+        }
+        let lower = coo.to_csr();
+        assert!(lower.nnz() < a.nnz());
+        assert_eq!(MatrixAnalysis::of(&lower).pattern_key(), ma.pattern_key());
+    }
+
+    #[test]
+    fn cached_engine_matches_uncached_and_counts() {
+        use crate::reorder::cache::{CacheConfig, OrderingCache};
+        let a = mesh(9, 7);
+        let ma = MatrixAnalysis::of(&a);
+        let cache = std::sync::Arc::new(OrderingCache::new(CacheConfig::default()));
+        let cached = ReorderEngine::new(4).with_cache(cache.clone());
+        let plain = ReorderEngine::new(4);
+
+        let first = cached.sweep(&ma, &ReorderAlgorithm::PAPER_SET, 42);
+        let second = cached.sweep(&ma, &ReorderAlgorithm::PAPER_SET, 42);
+        let fresh = plain.sweep(&ma, &ReorderAlgorithm::PAPER_SET, 42);
+        assert_eq!(first, fresh);
+        assert_eq!(second, fresh);
+
+        let s = cache.stats();
+        assert_eq!(s.misses, ReorderAlgorithm::PAPER_SET.len() as u64);
+        assert_eq!(s.hits, ReorderAlgorithm::PAPER_SET.len() as u64);
+        assert_eq!(s.lookups(), s.hits + s.misses);
+
+        // compute() on a cached engine replays the same permutation
+        let mut ws = Workspace::new();
+        let one = cached.compute(&ma, ReorderAlgorithm::Amd, 42, &mut ws);
+        assert_eq!(one, ReorderAlgorithm::Amd.compute(&a, 42));
+        assert_eq!(cache.stats().hits, s.hits + 1);
+    }
+
+    #[test]
+    fn compute_shared_without_cache_is_fresh() {
+        let a = mesh(5, 5);
+        let ma = MatrixAnalysis::of(&a);
+        let engine = ReorderEngine::sequential();
+        let mut ws = Workspace::new();
+        let (p, hit) = engine.compute_shared(&ma, ReorderAlgorithm::Rcm, 7, &mut ws);
+        assert!(!hit);
+        assert_eq!(*p, ReorderAlgorithm::Rcm.compute(&a, 7));
     }
 
     #[test]

@@ -32,7 +32,31 @@
 //! (`seed ^ 0x5ee_d`), same tie-breaking — they simply run the same
 //! [`engine::Reorderer`]s on a fresh workspace. Quality metrics
 //! (bandwidth, profile, symbolic fill/flops) live in [`metrics`].
+//!
+//! ## Serving-path reuse (cache + workspace pool)
+//!
+//! Production serving re-solves the same structural pattern under
+//! different numerics (factorization-in-loop, time stepping), so the
+//! hot path is built around two reuse layers:
+//!
+//! * **Ordering cache** ([`cache::OrderingCache`]) — a bounded, sharded
+//!   map from `(PatternKey, algorithm, seed)` to `Arc<Permutation>`.
+//!   *Keying*: the pattern fingerprint is taken from the symmetrized
+//!   adjacency ([`engine::MatrixAnalysis::pattern_key`]), the canonical
+//!   input every ordering is a pure function of; algorithm and seed
+//!   complete the key, so a hit is bit-identical to a fresh compute by
+//!   construction (property tested in `tests/prop_ordering_cache.rs`).
+//!   *Invalidation*: none is ever needed — entries are immutable facts
+//!   about a pattern; capacity pressure is handled by LRU-ish eviction
+//!   (global recency ticks, stalest entry of the full shard evicted).
+//!   Attach one to an engine with [`engine::ReorderEngine::with_cache`].
+//! * **Workspace pool** ([`workspace::WorkspacePool`]) — serving threads
+//!   check O(n) scratch out per request; the RAII guard returns it on
+//!   drop (panic included). Checkout discipline: hold the checkout only
+//!   for the ordering call, never across a solve, so a small pool serves
+//!   many concurrent requests with zero steady-state allocation.
 
+pub mod cache;
 pub mod engine;
 pub mod hybrid;
 pub mod metrics;
@@ -41,8 +65,9 @@ pub mod nd;
 pub mod rcm;
 pub mod workspace;
 
+pub use cache::{CacheConfig, CacheStats, OrderingCache, OrderingKey};
 pub use engine::{reorderer, MatrixAnalysis, Reorderer, ReorderEngine};
-pub use workspace::Workspace;
+pub use workspace::{PooledWorkspace, Workspace, WorkspacePool};
 
 use crate::graph::Graph;
 use crate::sparse::CsrMatrix;

@@ -13,11 +13,22 @@
 //! re-initializes the prefix of each buffer it reads, so a reused
 //! workspace yields bit-identical permutations to a fresh one (property
 //! tested in `tests/prop_reorder_engine.rs`).
+//!
+//! Two reuse disciplines share the same buffers:
+//!
+//! * **per-worker** — `ReorderEngine::sweep` hands each pool worker its
+//!   own warm workspace for the duration of a sweep (offline shape);
+//! * **checkout/return** ([`WorkspacePool`]) — serving threads check a
+//!   workspace out per request and the RAII [`PooledWorkspace`] guard
+//!   parks it back on drop, so steady-state requests do zero BFS/mindeg
+//!   scratch allocation even though requests hop across threads.
 
 use std::collections::VecDeque;
+use std::ops::{Deref, DerefMut};
 
 use super::mindeg::MinDegScratch;
 use crate::graph::traversal::BfsScratch;
+use crate::util::pool::{ObjectPool, PoolStats};
 
 /// Scratch buffers shared by all reordering algorithms. Create once per
 /// worker thread with [`Workspace::new`]; any algorithm can run on it in
@@ -49,3 +60,114 @@ impl Workspace {
         Self::default()
     }
 }
+
+/// A shared free list of [`Workspace`]s for the serving path.
+///
+/// Checkout discipline: [`WorkspacePool::checkout`] returns a
+/// [`PooledWorkspace`] RAII guard that derefs to `&mut Workspace` and
+/// parks the workspace back into the pool when dropped — including on
+/// panic unwind, so a failed request never leaks its scratch. The idle
+/// list is bounded (`max_idle`), so a burst can temporarily construct
+/// extra workspaces but the pool's steady-state footprint stays fixed.
+///
+/// No reset is performed on return: workspace reuse is observation-free
+/// (see the module docs), so a parked workspace is indistinguishable
+/// from a fresh one to every algorithm — only warmer.
+pub struct WorkspacePool {
+    inner: ObjectPool<Workspace>,
+}
+
+impl WorkspacePool {
+    /// Pool keeping at most `max_idle` warm workspaces parked.
+    pub fn new(max_idle: usize) -> Self {
+        WorkspacePool {
+            inner: ObjectPool::new(max_idle),
+        }
+    }
+
+    /// Check a workspace out (warm if one is parked, fresh otherwise).
+    pub fn checkout(&self) -> PooledWorkspace<'_> {
+        PooledWorkspace {
+            pool: self,
+            ws: Some(self.inner.checkout_with(Workspace::new)),
+        }
+    }
+
+    /// Checkout / create / reuse counters.
+    pub fn stats(&self) -> PoolStats {
+        self.inner.stats()
+    }
+}
+
+impl Default for WorkspacePool {
+    /// Room for one warm workspace per hardware thread.
+    fn default() -> Self {
+        Self::new(crate::util::pool::default_workers() + 1)
+    }
+}
+
+/// RAII checkout from a [`WorkspacePool`]; derefs to [`Workspace`] and
+/// returns it to the pool on drop.
+pub struct PooledWorkspace<'a> {
+    pool: &'a WorkspacePool,
+    ws: Option<Workspace>,
+}
+
+impl Deref for PooledWorkspace<'_> {
+    type Target = Workspace;
+
+    fn deref(&self) -> &Workspace {
+        self.ws.as_ref().expect("workspace present until drop")
+    }
+}
+
+impl DerefMut for PooledWorkspace<'_> {
+    fn deref_mut(&mut self) -> &mut Workspace {
+        self.ws.as_mut().expect("workspace present until drop")
+    }
+}
+
+impl Drop for PooledWorkspace<'_> {
+    fn drop(&mut self) {
+        if let Some(ws) = self.ws.take() {
+            self.pool.inner.give_back(ws);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkout_returns_on_drop_and_reuses() {
+        let pool = WorkspacePool::new(2);
+        {
+            let mut ws = pool.checkout();
+            ws.order.push(7); // dirty it: reuse must be observation-free anyway
+        }
+        assert_eq!(pool.stats().idle, 1);
+        {
+            let _a = pool.checkout();
+            let _b = pool.checkout(); // concurrent checkouts get distinct workspaces
+            assert_eq!(pool.stats().idle, 0);
+        }
+        let s = pool.stats();
+        assert_eq!(s.checkouts, 3);
+        assert_eq!(s.creates, 2);
+        assert_eq!(s.reuses, 1);
+        assert_eq!(s.idle, 2);
+    }
+
+    #[test]
+    fn guard_returns_workspace_on_panic() {
+        let pool = WorkspacePool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ws = pool.checkout();
+            panic!("request failed");
+        }));
+        assert!(r.is_err());
+        assert_eq!(pool.stats().idle, 1, "workspace leaked on unwind");
+    }
+}
+

@@ -13,3 +13,4 @@ pub mod pattern;
 
 pub use coo::CooMatrix;
 pub use csr::CsrMatrix;
+pub use pattern::PatternKey;

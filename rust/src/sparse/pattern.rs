@@ -6,6 +6,58 @@
 
 use super::CsrMatrix;
 
+/// Structural fingerprint of a sparse pattern: order, nnz, and a 64-bit
+/// FNV-1a hash over the row-pointer and column-index arrays. Two
+/// matrices with equal `PatternKey`s have (up to hash collision, ~2⁻⁶⁴
+/// per pair) identical patterns, which is what the serving-path
+/// [`crate::reorder::cache::OrderingCache`] keys on: reordering is a
+/// pure function of the pattern (values never enter), so one fingerprint
+/// identifies the whole family of numerically-different matrices that
+/// share an ordering.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PatternKey {
+    /// Matrix order (rows == cols for every pattern consumer here).
+    pub n: usize,
+    /// Stored entries.
+    pub nnz: usize,
+    /// FNV-1a over indptr then indices.
+    pub hash: u64,
+}
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+fn fnv1a_usizes(mut h: u64, xs: &[usize]) -> u64 {
+    for &x in xs {
+        for b in (x as u64).to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+impl PatternKey {
+    /// Fingerprint a stored CSR pattern (values ignored).
+    pub fn of(a: &CsrMatrix) -> PatternKey {
+        Self::of_parts(a.nrows, &a.indptr, &a.indices)
+    }
+
+    /// Fingerprint any CSR-like `(indptr, indices)` structure — the
+    /// adjacency graph form included, which is how
+    /// `reorder::MatrixAnalysis` keys its symmetrized pattern.
+    pub fn of_parts(n: usize, indptr: &[usize], indices: &[usize]) -> PatternKey {
+        let mut h = fnv1a_usizes(FNV_OFFSET, &[n]);
+        h = fnv1a_usizes(h, indptr);
+        h = fnv1a_usizes(h, indices);
+        PatternKey {
+            n,
+            nnz: indices.len(),
+            hash: h,
+        }
+    }
+}
+
 /// Pattern of `A + Aᵀ` without the diagonal, as CSR-like adjacency
 /// (indptr + indices). This is the adjacency-graph form every reordering
 /// algorithm consumes.
@@ -299,6 +351,47 @@ mod tests {
             m.push(i, i, 1.0);
         }
         assert_eq!(profile(&m.to_csr()), 0 + 1 + 2 + 3);
+    }
+
+    #[test]
+    fn pattern_key_ignores_values_and_sees_structure() {
+        let a = asym();
+        let mut same_structure = asym();
+        for v in same_structure.data.iter_mut() {
+            *v *= 3.5;
+        }
+        assert_eq!(PatternKey::of(&a), PatternKey::of(&same_structure));
+
+        // moving one entry changes the fingerprint
+        let mut m = CooMatrix::new(3, 3);
+        m.push(0, 0, 1.0);
+        m.push(0, 2, 2.0); // was (0,1)
+        m.push(1, 2, 3.0);
+        m.push(2, 2, 4.0);
+        let b = m.to_csr();
+        assert_eq!(b.nnz(), a.nnz());
+        assert_ne!(PatternKey::of(&a), PatternKey::of(&b));
+    }
+
+    #[test]
+    fn pattern_key_distinguishes_order_with_same_nnz() {
+        // same indices content, different n via a trailing empty row
+        let mut m3 = CooMatrix::new(3, 3);
+        m3.push(0, 0, 1.0);
+        let mut m4 = CooMatrix::new(4, 4);
+        m4.push(0, 0, 1.0);
+        let (k3, k4) = (PatternKey::of(&m3.to_csr()), PatternKey::of(&m4.to_csr()));
+        assert_eq!(k3.nnz, k4.nnz);
+        assert_ne!(k3, k4);
+    }
+
+    #[test]
+    fn pattern_key_of_parts_matches_of() {
+        let a = asym();
+        assert_eq!(
+            PatternKey::of(&a),
+            PatternKey::of_parts(a.nrows, &a.indptr, &a.indices)
+        );
     }
 
     #[test]

@@ -1,11 +1,89 @@
-//! Scoped-thread `parallel_map` — the dataset sweep's worker pool.
+//! Scoped-thread `parallel_map` — the dataset sweep's worker pool —
+//! plus [`ObjectPool`], the free-list that backs serving-path scratch
+//! reuse.
 //!
 //! The dataset build runs `|collection| x |algorithms|` reorder+factorize
-//! jobs; this distributes them over `n_workers` OS threads with a shared
-//! atomic work index (self-balancing: expensive matrices don't stall a
-//! static partition). No external runtime: `std::thread::scope` only.
+//! jobs; `parallel_map` distributes them over `n_workers` OS threads with
+//! a shared atomic work index (self-balancing: expensive matrices don't
+//! stall a static partition). No external runtime: `std::thread::scope`
+//! only.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Counter snapshot of an [`ObjectPool`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    /// Total checkouts served.
+    pub checkouts: u64,
+    /// Checkouts that had to construct a fresh object (pool was empty).
+    pub creates: u64,
+    /// Checkouts served from the free list (`checkouts - creates`).
+    pub reuses: u64,
+    /// Idle objects currently parked in the pool.
+    pub idle: usize,
+}
+
+/// A bounded free list of reusable objects. Checkout pops an idle object
+/// (or constructs one when empty); returning pushes it back unless the
+/// idle list is already at `max_idle`, in which case the object is
+/// dropped — the pool never grows without bound under a burst.
+///
+/// This is the allocation-reuse primitive behind
+/// `reorder::WorkspacePool`: steady-state serving requests check a warm
+/// `Workspace` out, run their ordering with zero scratch allocation, and
+/// park it back on drop. One mutex guards the free list; the critical
+/// section is a `Vec` push/pop, so contention is negligible next to the
+/// orderings the checkouts run.
+pub struct ObjectPool<T> {
+    idle: Mutex<Vec<T>>,
+    max_idle: usize,
+    checkouts: AtomicU64,
+    creates: AtomicU64,
+}
+
+impl<T> ObjectPool<T> {
+    pub fn new(max_idle: usize) -> Self {
+        ObjectPool {
+            idle: Mutex::new(Vec::new()),
+            max_idle: max_idle.max(1),
+            checkouts: AtomicU64::new(0),
+            creates: AtomicU64::new(0),
+        }
+    }
+
+    /// Pop an idle object, or build one with `make`.
+    pub fn checkout_with(&self, make: impl FnOnce() -> T) -> T {
+        self.checkouts.fetch_add(1, Ordering::Relaxed);
+        let reused = self.idle.lock().expect("pool poisoned").pop();
+        match reused {
+            Some(obj) => obj,
+            None => {
+                self.creates.fetch_add(1, Ordering::Relaxed);
+                make()
+            }
+        }
+    }
+
+    /// Park an object for reuse (dropped when the free list is full).
+    pub fn give_back(&self, obj: T) {
+        let mut idle = self.idle.lock().expect("pool poisoned");
+        if idle.len() < self.max_idle {
+            idle.push(obj);
+        }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let checkouts = self.checkouts.load(Ordering::Relaxed);
+        let creates = self.creates.load(Ordering::Relaxed);
+        PoolStats {
+            checkouts,
+            creates,
+            reuses: checkouts - creates,
+            idle: self.idle.lock().expect("pool poisoned").len(),
+        }
+    }
+}
 
 /// Map `f` over `items` in parallel, preserving order of results.
 ///
@@ -239,5 +317,41 @@ mod tests {
     fn consume_single_worker_sequential() {
         let out = parallel_consume(vec![1u32, 2, 3], 1, |i, x| x + i as u32);
         assert_eq!(out, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn object_pool_reuses_after_give_back() {
+        let pool: ObjectPool<Vec<u8>> = ObjectPool::new(4);
+        let mut a = pool.checkout_with(Vec::new);
+        a.push(42);
+        pool.give_back(a);
+        let b = pool.checkout_with(|| panic!("must reuse the parked object"));
+        assert_eq!(b, vec![42]); // reuse hands back the same object, as-is
+        let s = pool.stats();
+        assert_eq!((s.checkouts, s.creates, s.reuses), (2, 1, 1));
+    }
+
+    #[test]
+    fn object_pool_bounds_idle_list() {
+        let pool: ObjectPool<u32> = ObjectPool::new(2);
+        for k in 0..5 {
+            pool.give_back(k);
+        }
+        assert_eq!(pool.stats().idle, 2);
+    }
+
+    #[test]
+    fn object_pool_concurrent_checkouts_are_consistent() {
+        let pool: ObjectPool<Vec<u64>> = ObjectPool::new(8);
+        let jobs: Vec<usize> = (0..200).collect();
+        parallel_map(&jobs, 8, |_, &j| {
+            let mut v = pool.checkout_with(Vec::new);
+            v.push(j as u64);
+            pool.give_back(v);
+        });
+        let s = pool.stats();
+        assert_eq!(s.checkouts, 200);
+        assert_eq!(s.creates + s.reuses, s.checkouts);
+        assert!(s.creates <= 8 + s.idle as u64); // never more live than workers allow
     }
 }

@@ -1,0 +1,166 @@
+//! Deterministic end-to-end serving: generated matrices served through
+//! a `ServingEngine` with the pure-Rust RandomForest backend.
+//!
+//! Repeated identical requests must produce identical predictions,
+//! identical orderings, and identical solver fill; warm-path stats must
+//! show cache hits and workspace reuse. No AOT artifacts are required —
+//! this suite always runs.
+
+use std::sync::Arc;
+
+use smr::collection::generate_mini_collection;
+use smr::coordinator::service::Backend;
+use smr::coordinator::{ServingConfig, ServingEngine};
+use smr::dataset::{build_dataset, SweepConfig};
+use smr::ml::forest::{ForestParams, RandomForest};
+use smr::ml::normalize::{Method, Normalizer};
+use smr::ml::Classifier;
+use smr::reorder::ReorderAlgorithm;
+use smr::solver::prepare;
+
+/// Forest backend fitted on a small labeled sweep — the deterministic
+/// pure-Rust serving stack (same backend `end_to_end.rs` falls back to,
+/// without the grid search, which a dataset this small can't stratify).
+fn trained_backend() -> Backend {
+    let coll = generate_mini_collection(3, 1);
+    let ds = build_dataset(&coll, &ReorderAlgorithm::LABEL_SET, &SweepConfig::default());
+    let normalizer = Normalizer::fit(Method::Standard, &ds.features());
+    let mut forest = RandomForest::new(
+        ForestParams {
+            n_estimators: 20,
+            ..Default::default()
+        },
+        7,
+    );
+    forest.fit(&normalizer.transform(&ds.features()), &ds.labels(), 4);
+    Backend::Forest { normalizer, forest }
+}
+
+#[test]
+fn repeated_requests_are_deterministic_and_warm() {
+    let cfg = ServingConfig::default();
+    let engine = ServingEngine::spawn(trained_backend(), cfg).unwrap();
+
+    // a served workload disjoint from the training sweep
+    let workload = generate_mini_collection(11, 1);
+    let n_requests = workload.len();
+
+    // round 1: cold — every pattern is new
+    let cold: Vec<_> = workload
+        .iter()
+        .map(|nm| engine.serve(&nm.matrix).unwrap())
+        .collect();
+    for (nm, r) in workload.iter().zip(&cold) {
+        assert!(!r.cache_hit, "{}: first request hit the cache", nm.name);
+        assert!(
+            ReorderAlgorithm::LABEL_SET.contains(&r.algorithm),
+            "{}: predicted {:?} outside the label set",
+            nm.name,
+            r.algorithm
+        );
+        assert!(!r.solve.estimated, "{}", nm.name);
+        assert!(r.solve.residual < 1e-6, "{}: residual {}", nm.name, r.solve.residual);
+    }
+
+    // rounds 2..4: identical requests — identical predictions,
+    // orderings, and fill, now served warm
+    for _ in 0..3 {
+        for (nm, first) in workload.iter().zip(&cold) {
+            let r = engine.serve(&nm.matrix).unwrap();
+            assert!(r.cache_hit, "{}: repeat request missed", nm.name);
+            assert_eq!(r.algorithm, first.algorithm, "{}: prediction drifted", nm.name);
+            assert_eq!(
+                r.permutation, first.permutation,
+                "{}: ordering drifted",
+                nm.name
+            );
+            assert_eq!(r.solve.fill, first.solve.fill, "{}: fill drifted", nm.name);
+            assert_eq!(r.solve.flops, first.solve.flops, "{}", nm.name);
+        }
+    }
+
+    let s = engine.stats();
+    assert_eq!(s.requests, 4 * n_requests as u64);
+    assert_eq!(s.service.requests, s.requests);
+    // warm path: hits for every repeat, misses only for the cold round
+    assert_eq!(s.cache.misses, n_requests as u64);
+    assert_eq!(s.cache.hits, 3 * n_requests as u64);
+    assert_eq!(s.cache.lookups(), s.cache.hits + s.cache.misses);
+    assert!(s.cache.hits > 0);
+    // workspace reuse: only cache misses check scratch out, and the
+    // single-threaded request stream reuses one warm workspace
+    assert_eq!(s.workspaces.checkouts, s.cache.misses);
+    assert_eq!(s.workspaces.creates, 1, "workspace not reused");
+    assert!(s.workspaces.reuses >= s.workspaces.checkouts - 1);
+    engine.shutdown();
+}
+
+#[test]
+fn served_orderings_match_offline_computes() {
+    let cfg = ServingConfig::default();
+    let engine = ServingEngine::spawn(trained_backend(), cfg).unwrap();
+    for nm in generate_mini_collection(13, 1) {
+        let r = engine.serve(&nm.matrix).unwrap();
+        // the serving path orders the *prepared* matrix with the
+        // pipeline's seed — a fresh offline compute must agree bit-for-bit
+        let spd = prepare(&nm.matrix, &cfg.solver);
+        assert_eq!(
+            *r.permutation,
+            r.algorithm.compute(&spd, cfg.reorder_seed),
+            "{}",
+            nm.name
+        );
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn concurrent_serving_is_deterministic() {
+    let engine = Arc::new(ServingEngine::spawn(trained_backend(), ServingConfig::default()).unwrap());
+    let workload = Arc::new(generate_mini_collection(17, 1));
+
+    // baseline: serve each matrix once, single-threaded
+    let baseline: Vec<_> = workload
+        .iter()
+        .map(|nm| engine.serve(&nm.matrix).unwrap())
+        .collect();
+
+    // hammer the same workload from many client threads
+    let mut handles = Vec::new();
+    for t in 0..6 {
+        let engine = engine.clone();
+        let workload = workload.clone();
+        handles.push(std::thread::spawn(move || {
+            (0..workload.len())
+                .map(|k| {
+                    let nm = &workload[(k + t) % workload.len()];
+                    let r = engine.serve(&nm.matrix).unwrap();
+                    (nm.name.clone(), r)
+                })
+                .collect::<Vec<_>>()
+        }));
+    }
+    for h in handles {
+        for (name, r) in h.join().unwrap() {
+            let base = workload
+                .iter()
+                .zip(&baseline)
+                .find(|(nm, _)| nm.name == name)
+                .map(|(_, b)| b)
+                .unwrap();
+            assert_eq!(r.algorithm, base.algorithm, "{name}");
+            assert_eq!(r.permutation, base.permutation, "{name}");
+            assert_eq!(r.solve.fill, base.solve.fill, "{name}");
+        }
+    }
+
+    let s = engine.stats();
+    let total = (workload.len() * 7) as u64; // 1 baseline + 6 threads
+    assert_eq!(s.requests, total);
+    assert_eq!(s.cache.lookups(), total);
+    // the single-threaded baseline round populated every key before the
+    // clients started, so each pattern misses exactly once and every
+    // concurrent request is a hit
+    assert_eq!(s.cache.misses, workload.len() as u64);
+    assert_eq!(s.cache.hits, total - workload.len() as u64);
+}

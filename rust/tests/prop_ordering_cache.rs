@@ -1,0 +1,212 @@
+//! Property + concurrency tests for the pattern-keyed ordering cache.
+//!
+//! The contract under test: a cache **hit** returns a permutation
+//! bit-identical to a fresh `ReorderEngine::compute` for the same
+//! `(matrix, algorithm, seed)` — across adversarial patterns (duplicate
+//! entries, empty rows, dense rows, disconnected components), all 7
+//! paper algorithms, and under concurrent hammering from `util::pool`
+//! workers — while residency never exceeds the configured capacity and
+//! `hits + misses == lookups` holds exactly.
+
+use std::sync::Arc;
+
+use smr::reorder::{
+    CacheConfig, MatrixAnalysis, OrderingCache, OrderingKey, ReorderAlgorithm, ReorderEngine,
+    Workspace,
+};
+use smr::sparse::{CooMatrix, CsrMatrix, PatternKey};
+use smr::util::pool::parallel_map;
+use smr::util::prop;
+use smr::util::rng::Rng;
+
+/// An adversarial random pattern: several disconnected blocks, each with
+/// random directed entries (one-sided, two-sided, and duplicate
+/// storage), a chance of a dense row and of entirely untouched (empty)
+/// rows, plus a guaranteed diagonal so the matrix is never all-zero.
+fn adversarial_matrix(rng: &mut Rng) -> CsrMatrix {
+    let n_blocks = rng.range(1, 4); // >1 => disconnected components
+    let block = rng.range(3, 25);
+    let n = n_blocks * block;
+    let mut m = CooMatrix::new(n, n);
+    for b in 0..n_blocks {
+        let lo = b * block;
+        // random directed entries confined to the block
+        for _ in 0..(3 * block) {
+            let i = lo + rng.below(block);
+            let j = lo + rng.below(block);
+            m.push(i, j, rng.range_f64(-2.0, 2.0));
+            if rng.chance(0.3) {
+                m.push(i, j, 1.0); // duplicate entry (summed by to_csr)
+            }
+        }
+        // maybe a dense row within the block
+        if rng.chance(0.5) {
+            let r = lo + rng.below(block);
+            for c in 0..block {
+                m.push(r, lo + c, 0.5);
+            }
+        }
+        // leave some rows empty: touch only a prefix of the block with
+        // diagonals
+        let touched = rng.range(1, block + 1);
+        for d in 0..touched {
+            m.push(lo + d, lo + d, 4.0);
+        }
+    }
+    m.to_csr()
+}
+
+/// Orderings fetched through the cache (miss then hit) are bit-identical
+/// to fresh engine computes, for every paper algorithm.
+#[test]
+fn cache_hits_are_bit_identical_to_fresh_compute() {
+    prop::check("cache-bit-identity", 12, |rng| {
+        let a = adversarial_matrix(rng);
+        let seed = rng.next_u64();
+        let cache = Arc::new(OrderingCache::new(CacheConfig::default()));
+        let cached_engine = ReorderEngine::sequential().with_cache(cache.clone());
+        let fresh_engine = ReorderEngine::sequential();
+        let analysis = MatrixAnalysis::of(&a);
+        let mut ws = Workspace::new();
+        for alg in ReorderAlgorithm::PAPER_SET {
+            let fresh = fresh_engine.compute(&analysis, alg, seed, &mut ws);
+            let (miss_perm, hit0) = cached_engine.compute_shared(&analysis, alg, seed, &mut ws);
+            assert!(!hit0, "{alg}: first fetch must miss");
+            let (hit_perm, hit1) = cached_engine.compute_shared(&analysis, alg, seed, &mut ws);
+            assert!(hit1, "{alg}: second fetch must hit");
+            assert_eq!(*miss_perm, fresh, "{alg}: miss-path compute diverged");
+            assert_eq!(*hit_perm, fresh, "{alg}: cached permutation diverged");
+            // legacy path agreement too (graph-level determinism)
+            assert_eq!(fresh, alg.compute(&a, seed), "{alg}: engine vs legacy");
+        }
+        let s = cache.stats();
+        let k = ReorderAlgorithm::PAPER_SET.len() as u64;
+        assert_eq!((s.hits, s.misses), (k, k));
+        assert_eq!(s.lookups(), 2 * k);
+    });
+}
+
+/// Residency never exceeds the configured capacity, whatever the
+/// insertion pattern; evictions are counted.
+#[test]
+fn eviction_never_exceeds_capacity() {
+    prop::check("cache-capacity-bound", 6, |rng| {
+        let capacity = rng.range(1, 10);
+        let shards = rng.range(1, 6);
+        let cache = OrderingCache::new(CacheConfig { capacity, shards });
+        assert!(cache.capacity() <= capacity);
+        let mut inserted = 0u64;
+        for _ in 0..40 {
+            let key = OrderingKey {
+                pattern: PatternKey {
+                    n: 5,
+                    nnz: rng.below(50),
+                    hash: rng.next_u64(),
+                },
+                algorithm: *rng.choose(&ReorderAlgorithm::PAPER_SET),
+                seed: rng.below(3) as u64,
+            };
+            cache.insert(key, Arc::new(smr::Permutation::identity(5)));
+            inserted += 1;
+            assert!(
+                cache.len() <= cache.capacity(),
+                "len {} > capacity {} after {inserted} inserts",
+                cache.len(),
+                cache.capacity()
+            );
+        }
+        let s = cache.stats();
+        assert_eq!(s.entries, cache.len());
+        assert!(s.inserts <= inserted);
+        if s.inserts > cache.capacity() as u64 {
+            assert!(s.evictions > 0, "full cache must evict");
+            assert_eq!(s.entries as u64, s.inserts - s.evictions);
+        }
+    });
+}
+
+/// Hammer one cache from `util::pool` workers with an interleaved
+/// hit/miss mix: stats stay consistent (hits + misses == lookups), the
+/// run terminates (no deadlock), and every returned permutation is a
+/// valid bijection identical to the fresh compute for its job.
+#[test]
+fn concurrent_hammering_is_consistent() {
+    let mut rng = Rng::new(0xCAFE);
+    let matrices: Vec<CsrMatrix> = (0..4).map(|_| adversarial_matrix(&mut rng)).collect();
+    let analyses: Vec<MatrixAnalysis> = matrices.iter().map(MatrixAnalysis::of).collect();
+    let expected: Vec<Vec<smr::Permutation>> = matrices
+        .iter()
+        .map(|a| {
+            ReorderAlgorithm::PAPER_SET
+                .iter()
+                .map(|alg| alg.compute(a, 7))
+                .collect()
+        })
+        .collect();
+
+    let cache = Arc::new(OrderingCache::new(CacheConfig {
+        capacity: 64,
+        shards: 4,
+    }));
+    let engine = ReorderEngine::sequential().with_cache(cache.clone());
+
+    // 320 jobs over 4 matrices x 7 algorithms: every key is requested
+    // many times, so the mix interleaves misses with hits heavily.
+    let jobs: Vec<(usize, usize)> = (0..320)
+        .map(|k| (k % matrices.len(), (k / 3) % ReorderAlgorithm::PAPER_SET.len()))
+        .collect();
+    let perms = parallel_map(&jobs, 8, |_, &(mi, ai)| {
+        let mut ws = Workspace::new();
+        let alg = ReorderAlgorithm::PAPER_SET[ai];
+        engine.compute_shared(&analyses[mi], alg, 7, &mut ws).0
+    });
+
+    for (&(mi, ai), perm) in jobs.iter().zip(&perms) {
+        // valid bijection: scatter form covers 0..n exactly once
+        let n = matrices[mi].nrows;
+        let mut seen = vec![false; n];
+        for &p in perm.as_slice() {
+            assert!(p < n && !seen[p], "invalid bijection");
+            seen[p] = true;
+        }
+        assert_eq!(**perm, expected[mi][ai], "matrix {mi} alg {ai}");
+    }
+
+    let s = cache.stats();
+    assert_eq!(s.lookups(), jobs.len() as u64, "every job is one lookup");
+    assert_eq!(s.hits + s.misses, s.lookups());
+    // concurrent first-fetches may all miss one key, but misses can
+    // never exceed the job count and hits must dominate this mix
+    assert!(s.misses >= 28, "each of the 28 keys misses at least once");
+    assert!(s.hits > 0, "repeat requests must hit");
+    assert_eq!(s.entries, cache.len());
+    assert!(cache.len() <= cache.capacity());
+}
+
+/// Two numerically different matrices with one structure share a cache
+/// entry; structurally different matrices never collide.
+#[test]
+fn keying_is_structural_not_numerical() {
+    let mut rng = Rng::new(42);
+    let a = adversarial_matrix(&mut rng);
+    let mut b = a.clone();
+    for v in b.data.iter_mut() {
+        *v *= -3.25;
+    }
+    let (ka, kb) = (
+        MatrixAnalysis::of(&a).pattern_key(),
+        MatrixAnalysis::of(&b).pattern_key(),
+    );
+    assert_eq!(ka, kb, "values must not enter the key");
+
+    let cache = Arc::new(OrderingCache::new(CacheConfig::default()));
+    let engine = ReorderEngine::sequential().with_cache(cache.clone());
+    let mut ws = Workspace::new();
+    let (_, hit_a) =
+        engine.compute_shared(&MatrixAnalysis::of(&a), ReorderAlgorithm::Amd, 1, &mut ws);
+    let (perm_b, hit_b) =
+        engine.compute_shared(&MatrixAnalysis::of(&b), ReorderAlgorithm::Amd, 1, &mut ws);
+    assert!(!hit_a);
+    assert!(hit_b, "same structure must share the entry");
+    assert_eq!(*perm_b, ReorderAlgorithm::Amd.compute(&b, 1));
+}
