@@ -7,7 +7,8 @@
 #                                   integration suites run explicitly,
 #                                   and BENCH_serving.json schema-checked
 #                                   whenever the bench has been run
-#   tier 2 (style/lint, opt in):    cargo fmt --check + clippy -D warnings
+#   tier 2 (style/lint/docs, opt in): cargo fmt --check + clippy -D warnings
+#                                   + rustdoc -D warnings + doctests
 #                                   enable with `CI_TIER2=1 ./ci.sh`
 #                                   or `./ci.sh --tier2`
 set -euo pipefail
@@ -20,6 +21,7 @@ cargo test -q
 # silently dropped them would otherwise pass tier 1 without the cache
 # bit-identity and end-to-end determinism guarantees ever running.
 cargo test -q --test prop_ordering_cache
+cargo test -q --test prop_symbolic_plan
 cargo test -q --test integration_serving
 
 # Bench-artifact schema gate: if the serving bench has been run, its
@@ -32,4 +34,9 @@ fi
 if [[ "${CI_TIER2:-0}" == "1" || "${1:-}" == "--tier2" ]]; then
   cargo fmt --check
   cargo clippy --all-targets -- -D warnings
+  # documentation gate: broken intra-doc links fail the build, and the
+  # runnable examples (e.g. the ServingEngine cold/warm doctest) must
+  # stay green so the docs can't drift from the code
+  RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+  cargo test -q --doc
 fi

@@ -45,9 +45,18 @@ fn check_file(path: &str) -> Vec<String> {
     if v.get("bench").and_then(|b| b.as_str()) == Some("bench_serving") {
         for (i, rec) in results.iter().enumerate() {
             let ctx = format!("{path}: results[{i}]");
-            for key in ["n", "nnz", "cold_s", "warm_s", "speedup"] {
+            for key in ["n", "nnz", "cold_s", "warm_s", "speedup", "numeric_only_s"] {
                 check_num(rec, key, &mut errs, &ctx);
             }
+        }
+        // symbolic-plan cache counters (the warm path's cache layer)
+        match v.get("plans") {
+            Some(plans) => {
+                for key in ["hits", "misses", "evictions", "inserts", "hit_rate"] {
+                    check_num(plans, key, &mut errs, &format!("{path}: plans"));
+                }
+            }
+            None => errs.push(format!("{path}: missing `plans` object")),
         }
         match v.get("cache") {
             Some(cache) => {

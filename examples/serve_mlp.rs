@@ -1,9 +1,10 @@
 //! End-to-end serving demo with the AOT MLP (Pallas kernels via PJRT):
 //! train the MLP through the AOT train-step executable, stand the full
 //! `ServingEngine` up on it (batched prediction service + pattern-keyed
-//! ordering cache + pooled workspaces), fire concurrent *matrix*
-//! requests at it, and report cold/warm latency, cache hit rate, and
-//! workspace reuse — the serving-paper-style driver for this system.
+//! symbolic-plan and ordering caches + pooled workspaces), fire
+//! concurrent *matrix* requests at it, and report cold/warm latency,
+//! cache hit rates, and workspace reuse — the serving-paper-style
+//! driver for this system.
 //!
 //! Requires artifacts: `make artifacts` first.
 //! Run: `cargo run --release --example serve_mlp`
@@ -74,11 +75,12 @@ fn main() -> anyhow::Result<()> {
         },
     )?);
 
-    // cold pass: every pattern is new, orderings are computed
+    // cold pass: every pattern is new — orderings are computed and
+    // solve plans are frozen into the plan cache
     let t0 = Instant::now();
     for nm in collection.iter() {
         let r = engine.serve(&nm.matrix)?;
-        assert!(!r.cache_hit);
+        assert!(!r.plan_hit);
     }
     let cold_wall = t0.elapsed().as_secs_f64();
 
@@ -123,13 +125,16 @@ fn main() -> anyhow::Result<()> {
 
     let s = engine.stats();
     println!(
-        "stats: {} requests | cache {} hits / {} misses / {} evictions ({:.1}% hit) | \
-         workspaces {} checkouts ({} created, {} reused) | {} predict batches (mean {:.1})",
+        "stats: {} requests | plans {} hits / {} misses / {} evictions ({:.1}% hit) | \
+         orderings {} hits / {} misses | workspaces {} checkouts ({} created, {} reused) | \
+         {} predict batches (mean {:.1})",
         s.requests,
+        s.plans.hits,
+        s.plans.misses,
+        s.plans.evictions,
+        100.0 * s.plans.hit_rate(),
         s.cache.hits,
         s.cache.misses,
-        s.cache.evictions,
-        100.0 * s.cache.hit_rate(),
         s.workspaces.checkouts,
         s.workspaces.creates,
         s.workspaces.reuses,

@@ -7,7 +7,9 @@
 //! report it writes a machine-readable `BENCH_solver.json` (override the
 //! path with `BENCH_OUT`) so future PRs can diff the perf trajectory:
 //! one record per (matrix, factor mode) with wall times, flop counts,
-//! and achieved flop rates, plus per-matrix supernodal speedups.
+//! and achieved flop rates, plus per-matrix supernodal speedups and a
+//! `planned_numeric` lane (frozen `SymbolicFactorization`, value refresh
+//! + factorize only — the serving warm path's solve cost).
 
 use smr::collection::generators as g;
 use smr::reorder::ReorderAlgorithm;
@@ -99,6 +101,38 @@ fn main() {
                 ("speedup_vs_scalar", json::num(scalar_min / m.min_s.max(1e-12))),
             ]));
         }
+        // planned numeric-only path: the symbolic factorization is
+        // frozen once (what the serving plan cache holds), then each
+        // iteration refreshes values + factorizes — the warm-request
+        // cost, with the symmetrize/permute/analyze phases gone
+        let plan_cfg = SolverConfig {
+            factor: mode_cfg(FactorMode::Supernodal),
+            ..cfg
+        };
+        let plan = solver::plan_solve(
+            raw,
+            std::sync::Arc::new(perm.clone()),
+            &plan_cfg,
+        );
+        let mut ws = solver::NumericWorkspace::new();
+        let label = format!("{name}/factorize/planned_numeric");
+        let m = b
+            .bench(&label, || {
+                solver::factorize_with_plan(raw, &plan, &mut ws).unwrap()
+            })
+            .clone();
+        report.push(json::obj(vec![
+            ("name", json::s(&label)),
+            ("family", json::s(family)),
+            ("n", json::num(a.nrows as f64)),
+            ("nnz", json::num(a.nnz() as f64)),
+            ("fill", json::num(sym.cost.fill as f64)),
+            ("mode", json::s("planned_numeric")),
+            ("wall_s", json::num(m.min_s)),
+            ("mean_s", json::num(m.mean_s)),
+            ("speedup_vs_scalar", json::num(scalar_min / m.min_s.max(1e-12))),
+        ]));
+
         // solve cost rides along (shared by every mode)
         let an = solver::analyze_with(&pa, &mode_cfg(FactorMode::Supernodal));
         let f = solver::factorize_with(&pa, &an, &mode_cfg(FactorMode::Supernodal))

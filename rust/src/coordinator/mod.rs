@@ -18,23 +18,29 @@
 //!
 //! The hot path is allocation-light and repeat-request-fast by stacking
 //! three reuse layers (see `reorder/mod.rs` for the ordering-side
-//! details):
+//! details, `solver/plan.rs` for the symbolic side, and
+//! `ARCHITECTURE.md` for the full request-lifecycle diagram):
 //!
-//! * **Cache keying** — orderings are memoized under `(PatternKey of the
-//!   symmetrized adjacency, algorithm, seed)`. Values never enter an
-//!   ordering and every algorithm is seed-deterministic, so a cache hit
-//!   is bit-identical to a fresh compute; numerically-different matrices
-//!   with one structure share entries — exactly the
-//!   factorization-in-loop workload shape.
-//! * **Invalidation / eviction** — entries are immutable facts about a
-//!   pattern, so there is no invalidation protocol at all; bounded
-//!   capacity is enforced per shard with LRU-ish (recency-tick) eviction
-//!   and lock-free hit/miss/evict counters.
-//! * **Workspace checkout discipline** — the ordering scratch
-//!   (`reorder::WorkspacePool`) is checked out per request, held only
-//!   across the ordering call (never across the solve), and returned by
-//!   the RAII guard on every exit path, so steady-state requests touch
-//!   the allocator zero times in the reorder stage.
+//! * **Plan cache** (`solver::plan_cache::PlanCache`) — the whole
+//!   symbolic phase of a solve (permutation, permuted etree +
+//!   postorder, supernode partition, preallocated factor pattern,
+//!   value-refresh gather) is frozen per `(raw PatternKey, algorithm,
+//!   seed, solver knobs)`. A warm request goes predicted label →
+//!   cached plan → numeric-only factorization: zero symbolic work,
+//!   zero symmetrization.
+//! * **Ordering cache** (`reorder::cache::OrderingCache`) — under the
+//!   plan cache on the cold path, orderings are memoized per
+//!   `(PatternKey of the symmetrized adjacency, algorithm, seed)`.
+//!   Both caches memoize pure functions of their keys, so hits are
+//!   bit-identical to fresh computes and there is no invalidation
+//!   protocol at all; bounded capacity is enforced per shard with
+//!   LRU-ish (recency-tick) eviction and lock-free counters
+//!   (`util::cache::ShardedCache`, shared machinery).
+//! * **Scratch pools** — ordering scratch (`reorder::WorkspacePool`) is
+//!   checked out per cold request and returned by an RAII guard on
+//!   every exit path; the warm path's refreshed factor input values
+//!   live in pooled `solver::NumericWorkspace` buffers. Steady-state
+//!   requests touch the allocator only for the factor output itself.
 
 pub mod pipeline;
 pub mod service;

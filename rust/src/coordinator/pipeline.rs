@@ -18,7 +18,10 @@
 //! steady state) and the normalizer runs in place on the stack-resident
 //! feature array. Attach a shared ordering cache with
 //! [`SelectionPipeline::with_ordering_cache`] to make repeat-pattern
-//! requests skip the ordering entirely.
+//! requests skip the ordering, or a symbolic-plan cache with
+//! [`SelectionPipeline::with_plan_cache`] to skip the whole symbolic
+//! phase (etree, supernode partition, factor pattern) and solve
+//! numeric-only — the same two cache layers `ServingEngine` stacks.
 
 use std::sync::Arc;
 
@@ -27,8 +30,13 @@ use crate::ml::normalize::Normalizer;
 use crate::ml::Classifier;
 use crate::reorder::cache::OrderingCache;
 use crate::reorder::{reorderer, MatrixAnalysis, Permutation, ReorderAlgorithm, WorkspacePool};
-use crate::solver::{prepare, solve_ordered, SolveReport, SolverConfig};
+use crate::solver::plan_cache::{PlanCache, PlanKey};
+use crate::solver::{
+    plan_solve_prepared, prepare, solve_ordered, solve_with_plan, NumericWorkspace, SolveReport,
+    SolverConfig,
+};
 use crate::sparse::CsrMatrix;
+use crate::util::pool::ObjectPool;
 use crate::util::Timer;
 
 /// Full report of one selection-then-solve run.
@@ -70,6 +78,12 @@ pub struct SelectionPipeline {
     /// Optional pattern-keyed ordering cache (shareable with a
     /// `ServingEngine` fronting the same traffic).
     cache: Option<Arc<OrderingCache>>,
+    /// Optional symbolic-plan cache: repeat-pattern requests skip the
+    /// whole symbolic phase and solve through the numeric-only plan
+    /// path (shareable with a `ServingEngine` too).
+    plans: Option<Arc<PlanCache>>,
+    /// Pooled numeric scratch for the plan path's refreshed values.
+    numeric: ObjectPool<NumericWorkspace>,
 }
 
 impl SelectionPipeline {
@@ -85,6 +99,8 @@ impl SelectionPipeline {
             reorder_seed: 0xDA7A,
             workspaces: WorkspacePool::default(),
             cache: None,
+            plans: None,
+            numeric: ObjectPool::new(crate::util::pool::default_workers() + 1),
         }
     }
 
@@ -92,6 +108,15 @@ impl SelectionPipeline {
     /// [`Self::run`] / [`Self::run_fixed`].
     pub fn with_ordering_cache(mut self, cache: Arc<OrderingCache>) -> Self {
         self.cache = Some(cache);
+        self
+    }
+
+    /// Consult (and fill) a symbolic-plan cache in [`Self::run`] /
+    /// [`Self::run_fixed`]: repeat-pattern requests replay the frozen
+    /// plan and run numeric-only (bit-identical results — see
+    /// `tests/prop_symbolic_plan.rs`).
+    pub fn with_plan_cache(mut self, plans: Arc<PlanCache>) -> Self {
+        self.plans = Some(plans);
         self
     }
 
@@ -125,6 +150,23 @@ impl SelectionPipeline {
     /// [`Self::select`] pays there), keeping every phase of the
     /// end-to-end accounting covered by a timer.
     pub fn run(&self, a: &CsrMatrix) -> PipelineReport {
+        // with a plan cache, a warm request needs no graph at all:
+        // degree-only features (bit-identical to the shared-analysis
+        // ones) and the fetch-or-plan path — prepare/analysis run only
+        // inside the miss closure
+        if self.plans.is_some() {
+            let t_f = Timer::start();
+            let feats = features::extract(a);
+            let feature_s = t_f.elapsed_s();
+            let (algorithm, predict_s) = self.predict_from_features(&feats);
+            let solve = self.solve_planned(a, algorithm);
+            return PipelineReport {
+                algorithm,
+                feature_s,
+                predict_s,
+                solve,
+            };
+        }
         let spd = prepare(a, &self.solver);
         let t_f = Timer::start();
         let analysis = MatrixAnalysis::of(&spd);
@@ -145,6 +187,12 @@ impl SelectionPipeline {
     /// report's `reorder_s` — the phase it belonged to before the
     /// ordering and the graph build were split.
     pub fn run_fixed(&self, a: &CsrMatrix, algorithm: ReorderAlgorithm) -> SolveReport {
+        // with a plan cache, a warm request needs neither the prepared
+        // matrix nor the adjacency analysis — skip straight to the
+        // fetch-or-plan path (the miss closure builds both lazily)
+        if self.plans.is_some() {
+            return self.solve_planned(a, algorithm);
+        }
         let spd = prepare(a, &self.solver);
         let t_a = Timer::start();
         let analysis = MatrixAnalysis::of(&spd);
@@ -152,12 +200,57 @@ impl SelectionPipeline {
         self.solve_on_analysis(&spd, &analysis, algorithm, analysis_s)
     }
 
+    /// The plan-cache path: one counted lookup; the miss closure
+    /// prepares, analyzes, orders, and freezes the plan; the solve is
+    /// numeric-only on pooled scratch. Phase accounting mirrors the
+    /// plain path so `total_s` stays comparable: the symbolic
+    /// plan-build time lands in the report's `analyze_s` (0 on a hit —
+    /// no symbolic work ran), everything else (preparation, analysis,
+    /// ordering, lookup) in `reorder_s`.
+    fn solve_planned(&self, a: &CsrMatrix, algorithm: ReorderAlgorithm) -> SolveReport {
+        let plans = self.plans.as_ref().expect("called only with a plan cache");
+        let t_r = Timer::start();
+        let key = PlanKey::of(a, algorithm, self.reorder_seed, &self.solver);
+        let mut plan_build_s = 0.0;
+        let (plan, _) = plans.get_or_compute(key, || {
+            let spd = prepare(a, &self.solver);
+            let analysis = MatrixAnalysis::of(&spd);
+            let perm = match &self.cache {
+                Some(cache) => {
+                    cache
+                        .fetch_or_order(&analysis, algorithm, self.reorder_seed, &self.workspaces)
+                        .0
+                }
+                None => {
+                    let mut ws = self.workspaces.checkout();
+                    Arc::new(reorderer(algorithm).order(
+                        analysis.graph(),
+                        &mut ws,
+                        self.reorder_seed,
+                    ))
+                }
+            };
+            let t_plan = Timer::start();
+            let plan = plan_solve_prepared(a, &spd, perm, &self.solver);
+            plan_build_s = t_plan.elapsed_s();
+            plan
+        });
+        let reorder_s = (t_r.elapsed_s() - plan_build_s).max(0.0);
+        let mut scratch = self.numeric.checkout_guard(NumericWorkspace::new);
+        let mut solve = solve_with_plan(a, &plan, &self.solver, &mut scratch)
+            .expect("prepared matrix factorizes");
+        solve.reorder_s = reorder_s;
+        solve.analyze_s = plan_build_s;
+        solve
+    }
+
     /// Reorder on a shared analysis, then solve, timing both;
     /// `analysis_s` is folded into the reported reorder time when the
     /// caller hasn't already accounted for the analysis elsewhere. The
     /// ordering runs on a pooled workspace (checked out only for the
     /// ordering call) and goes through the ordering cache when one is
-    /// attached.
+    /// attached. (The plan-cache path never reaches here — `run` /
+    /// `run_fixed` branch to [`Self::solve_planned`] first.)
     fn solve_on_analysis(
         &self,
         spd: &CsrMatrix,
@@ -291,6 +384,40 @@ mod tests {
             assert_eq!(a.flops, c.flops, "{}", nm.name);
         }
         let s = cache.stats();
+        assert_eq!(s.misses, coll.len() as u64);
+        assert_eq!(s.hits, coll.len() as u64);
+    }
+
+    #[test]
+    fn plan_cached_pipeline_matches_uncached_and_hits_on_repeats() {
+        use crate::solver::plan_cache::PlanCache;
+        let coll = generate_mini_collection(4, 1);
+        let ds = build_dataset(
+            &coll,
+            &ReorderAlgorithm::LABEL_SET,
+            &SweepConfig::default(),
+        );
+        let norm = Normalizer::fit(Method::Standard, &ds.features());
+        let mut knn_a = Knn::new(KnnParams::default());
+        knn_a.fit(&norm.transform(&ds.features()), &ds.labels(), 4);
+        let mut knn_b = Knn::new(KnnParams::default());
+        knn_b.fit(&norm.transform(&ds.features()), &ds.labels(), 4);
+        let plain =
+            SelectionPipeline::new(norm.clone(), Box::new(knn_a), SolverConfig::default());
+        let plans = Arc::new(PlanCache::with_default_config());
+        let planned = SelectionPipeline::new(norm, Box::new(knn_b), SolverConfig::default())
+            .with_plan_cache(plans.clone());
+
+        for nm in &coll {
+            let a = plain.run_fixed(&nm.matrix, ReorderAlgorithm::Amd);
+            let b = planned.run_fixed(&nm.matrix, ReorderAlgorithm::Amd);
+            let c = planned.run_fixed(&nm.matrix, ReorderAlgorithm::Amd); // hit
+            assert_eq!(a.fill, b.fill, "{}", nm.name);
+            assert_eq!(a.flops, b.flops, "{}", nm.name);
+            assert_eq!(b.fill, c.fill, "{}", nm.name);
+            assert_eq!(c.analyze_s, 0.0, "{}: plan path paid symbolic time", nm.name);
+        }
+        let s = plans.stats();
         assert_eq!(s.misses, coll.len() as u64);
         assert_eq!(s.hits, coll.len() as u64);
     }

@@ -6,20 +6,44 @@
 //!
 //! * the batched [`PredictionService`] (dedicated runtime thread,
 //!   max-batch/max-wait admission) answers "which ordering?";
-//! * the pattern-keyed [`OrderingCache`] answers repeat requests without
-//!   re-running the ordering at all — the workloads the paper's
-//!   selector targets re-solve one structural pattern under many
-//!   numerics, so steady state is nearly all hits;
-//! * the [`WorkspacePool`] makes the remaining cold-path orderings
-//!   allocation-free (checkout a warm O(n) scratch, return on drop).
+//! * the pattern-keyed [`PlanCache`] answers repeat requests with a
+//!   frozen [`crate::solver::SymbolicFactorization`] — permutation, permuted etree +
+//!   postorder, supernode partition, preallocated factor pattern, and
+//!   the value-refresh gather — so the warm path goes straight from the
+//!   predicted label to numeric factorization: **zero symbolic work,
+//!   zero symmetrization, zero pattern allocation**;
+//! * the [`OrderingCache`] sits under the plan cache on the cold path
+//!   (and can be shared with a `SelectionPipeline` fronting the same
+//!   traffic), memoizing the permutation itself;
+//! * the [`WorkspacePool`] makes cold-path orderings allocation-free,
+//!   and a pooled [`NumericWorkspace`] does the same for the warm
+//!   path's refreshed factor input values.
 //!
 //! Every stage is timed per request ([`ServingReport`]) and counted
-//! globally ([`ServingStats`]): request count, cache hit/miss/evict,
-//! workspace create/reuse, and the prediction service's batching
-//! counters. Cached orderings are bit-identical to fresh computes — the
-//! cache key carries everything an ordering is a function of (pattern
-//! fingerprint, algorithm, seed); `tests/integration_serving.rs` and
-//! `tests/prop_ordering_cache.rs` hold that line.
+//! globally ([`ServingStats`]): request count, plan- and ordering-cache
+//! hit/miss/evict, workspace and numeric-scratch create/reuse, and the
+//! prediction service's batching counters. Cached plans replay
+//! bit-identically to from-scratch solves — the key carries everything a
+//! plan is a function of (raw-pattern fingerprint, algorithm, seed,
+//! solver knobs); `tests/integration_serving.rs` and
+//! `tests/prop_symbolic_plan.rs` hold that line.
+//!
+//! ## Request lifecycle
+//!
+//! ```text
+//!            ┌ features (degree-only, no graph build)
+//!            ├ predict (batched service)            — every request
+//!            ├ PlanCache lookup ──────────── hit ─┐
+//!  cold only │                                    │
+//!            ├ prepare (symmetrize)                │
+//!            ├ MatrixAnalysis (adjacency graph)    │
+//!            ├ OrderingCache → WorkspacePool       │
+//!            └ plan_solve_prepared (symbolic)      │
+//!                                                  ▼
+//!                   solve_with_plan (numeric only, pooled scratch)
+//! ```
+//!
+//! See `ARCHITECTURE.md` for how this sits in the whole system.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -30,23 +54,29 @@ use super::service::{Backend, BatcherConfig, PredictionService, ServiceStatsSnap
 use crate::features;
 use crate::reorder::cache::{CacheConfig, CacheStats, OrderingCache};
 use crate::reorder::{MatrixAnalysis, Permutation, ReorderAlgorithm, WorkspacePool};
-use crate::solver::{prepare, solve_ordered, SolveReport, SolverConfig};
+use crate::solver::plan_cache::{PlanCache, PlanKey};
+use crate::solver::{
+    plan_solve_prepared, prepare, solve_with_plan, NumericWorkspace, SolveReport, SolverConfig,
+};
 use crate::sparse::CsrMatrix;
-use crate::util::pool::PoolStats;
+use crate::util::pool::{ObjectPool, PoolStats};
 use crate::util::Timer;
 
 /// Knobs for [`ServingEngine::spawn`].
 #[derive(Clone, Copy, Debug)]
 pub struct ServingConfig {
-    /// Ordering-cache sizing.
+    /// Ordering-cache sizing (cold-path permutation memoization).
     pub cache: CacheConfig,
+    /// Symbolic-plan-cache sizing (warm-path solve plans; plans are
+    /// O(nnz(L)) artifacts, so this bound is tighter).
+    pub plan_cache: CacheConfig,
     /// Dynamic-batching policy for the prediction service.
     pub batcher: BatcherConfig,
     /// Solver configuration for the downstream direct solve.
     pub solver: SolverConfig,
-    /// Seed every served ordering derives from (part of the cache key).
+    /// Seed every served ordering derives from (part of both cache keys).
     pub reorder_seed: u64,
-    /// Warm workspaces kept parked between requests.
+    /// Warm reorder workspaces kept parked between requests.
     pub max_idle_workspaces: usize,
 }
 
@@ -54,6 +84,7 @@ impl Default for ServingConfig {
     fn default() -> Self {
         ServingConfig {
             cache: CacheConfig::default(),
+            plan_cache: PlanCache::default_config(),
             batcher: BatcherConfig::default(),
             solver: SolverConfig::default(),
             reorder_seed: 0xDA7A, // same stream as SelectionPipeline
@@ -62,23 +93,25 @@ impl Default for ServingConfig {
     }
 }
 
-/// Per-request report: every stage timed, plus where the ordering came
-/// from.
+/// Per-request report: every stage timed, plus where the plan came from.
 #[derive(Clone, Debug)]
 pub struct ServingReport {
     /// Algorithm the service selected.
     pub algorithm: ReorderAlgorithm,
-    /// Analysis + feature extraction time.
+    /// Feature extraction time (degree-only path, no graph build).
     pub feature_s: f64,
     /// Batched classifier round trip.
     pub predict_s: f64,
-    /// Ordering time (≈0 on a cache hit).
+    /// Ordering + symbolic-planning time (≈0 on a plan-cache hit).
     pub reorder_s: f64,
-    /// Whether the ordering came from the cache.
-    pub cache_hit: bool,
-    /// The ordering itself (shared with the cache).
+    /// Whether the solve plan came from the plan cache — the warm-path
+    /// flag: a hit means this request did no symbolic work at all.
+    pub plan_hit: bool,
+    /// The ordering itself (shared with the plan and ordering caches).
     pub permutation: Arc<Permutation>,
-    /// The downstream solve (its `reorder_s` mirrors the field above).
+    /// The downstream numeric solve (its `reorder_s` mirrors the field
+    /// above; its `analyze_s` is 0 by construction — plans pay no
+    /// symbolic time).
     pub solve: SolveReport,
 }
 
@@ -88,9 +121,15 @@ impl ServingReport {
         self.feature_s + self.predict_s
     }
 
-    /// Full request latency: predict + reorder + solve.
+    /// Full request latency: predict + plan + solve.
     pub fn end_to_end_s(&self) -> f64 {
         self.prediction_s() + self.reorder_s + self.solve.total_s()
+    }
+
+    /// The numeric-only portion (factor + triangular solves) — on a
+    /// warm request this is essentially the whole post-predict latency.
+    pub fn numeric_s(&self) -> f64 {
+        self.solve.factor_s + self.solve.solve_s
     }
 }
 
@@ -99,20 +138,71 @@ impl ServingReport {
 pub struct ServingStats {
     /// Requests served end to end.
     pub requests: u64,
-    /// Ordering-cache counters (hits/misses/evictions/entries).
+    /// Symbolic-plan-cache counters (hits/misses/evictions/entries).
+    pub plans: CacheStats,
+    /// Ordering-cache counters (consulted on plan misses only).
     pub cache: CacheStats,
-    /// Workspace-pool counters (checkouts/creates/reuses).
+    /// Reorder workspace-pool counters (checkouts/creates/reuses).
     pub workspaces: PoolStats,
+    /// Numeric-scratch pool counters (warm-path value buffers).
+    pub numeric: PoolStats,
     /// Prediction-service counters (requests/batches/mean batch).
     pub service: ServiceStatsSnapshot,
 }
 
 /// The deployable serving object: spawn once, [`ServingEngine::serve`]
 /// from any number of threads, read [`ServingEngine::stats`], shut down.
+///
+/// # Example: cold vs warm requests
+///
+/// A repeat request for a structurally-identical matrix skips every
+/// symbolic stage — the plan cache replays the frozen ordering and
+/// factor pattern, and only numeric work runs:
+///
+/// ```
+/// use smr::coordinator::service::Backend;
+/// use smr::coordinator::{ServingConfig, ServingEngine};
+/// use smr::features::N_FEATURES;
+/// use smr::ml::forest::{ForestParams, RandomForest};
+/// use smr::ml::normalize::{Method, Normalizer};
+/// use smr::ml::Classifier;
+///
+/// // a tiny deterministic training set (any fitted backend works)
+/// let x: Vec<Vec<f64>> = (0..24)
+///     .map(|i| (0..N_FEATURES).map(|j| ((i * 7 + j * 3) % 13) as f64).collect())
+///     .collect();
+/// let y: Vec<usize> = (0..24).map(|i| i % 4).collect();
+/// let normalizer = Normalizer::fit(Method::Standard, &x);
+/// let mut forest = RandomForest::new(
+///     ForestParams { n_estimators: 5, ..Default::default() },
+///     3,
+/// );
+/// forest.fit(&normalizer.transform(&x), &y, 4);
+///
+/// let engine = ServingEngine::spawn(
+///     Backend::Forest { normalizer, forest },
+///     ServingConfig::default(),
+/// )
+/// .unwrap();
+///
+/// let a = smr::collection::generators::grid2d(8, 8);
+/// let cold = engine.serve(&a).unwrap(); // plans the solve, caches it
+/// assert!(!cold.plan_hit);
+/// let warm = engine.serve(&a).unwrap(); // numeric-only replay
+/// assert!(warm.plan_hit);
+/// assert_eq!(warm.solve.fill, cold.solve.fill);
+/// assert_eq!(warm.solve.analyze_s, 0.0); // zero symbolic work
+///
+/// let stats = engine.stats();
+/// assert_eq!(stats.plans.hits, 1);
+/// engine.shutdown();
+/// ```
 pub struct ServingEngine {
     service: PredictionService,
     cache: Arc<OrderingCache>,
+    plans: Arc<PlanCache>,
     workspaces: WorkspacePool,
+    numeric: ObjectPool<NumericWorkspace>,
     solver: SolverConfig,
     reorder_seed: u64,
     requests: AtomicU64,
@@ -128,10 +218,13 @@ impl ServingEngine {
 
     /// Wrap an already-running prediction service.
     pub fn new(service: PredictionService, cfg: ServingConfig) -> ServingEngine {
+        let max_idle = cfg.max_idle_workspaces.max(1);
         ServingEngine {
             service,
             cache: Arc::new(OrderingCache::new(cfg.cache)),
-            workspaces: WorkspacePool::new(cfg.max_idle_workspaces.max(1)),
+            plans: Arc::new(PlanCache::new(cfg.plan_cache)),
+            workspaces: WorkspacePool::new(max_idle),
+            numeric: ObjectPool::new(max_idle),
             solver: cfg.solver,
             reorder_seed: cfg.reorder_seed,
             requests: AtomicU64::new(0),
@@ -144,17 +237,22 @@ impl ServingEngine {
         &self.cache
     }
 
-    /// Serve one request end to end: prepare + analyze once, extract
-    /// features off the shared degrees, predict through the batcher,
-    /// fetch-or-compute the ordering (pooled workspace on the miss
-    /// path), then factorize + solve.
+    /// The symbolic-plan cache (shareable the same way).
+    pub fn plans(&self) -> &Arc<PlanCache> {
+        &self.plans
+    }
+
+    /// Serve one request end to end: extract features off the raw
+    /// pattern (degree-only, no graph), predict through the batcher,
+    /// fetch-or-plan the symbolic factorization — the miss path prepares
+    /// the matrix once, shares the analysis between the ordering cache
+    /// and the plan, and runs the ordering on a pooled workspace — then
+    /// replay the plan numerically on pooled scratch.
     pub fn serve(&self, a: &CsrMatrix) -> Result<ServingReport> {
         self.requests.fetch_add(1, Ordering::Relaxed);
-        let spd = prepare(a, &self.solver);
 
         let t_f = Timer::start();
-        let analysis = MatrixAnalysis::of(&spd);
-        let feats = features::extract_with_degrees(a, analysis.degrees());
+        let feats = features::extract(a);
         let feature_s = t_f.elapsed_s();
 
         let t_p = Timer::start();
@@ -162,13 +260,24 @@ impl ServingEngine {
         let predict_s = t_p.elapsed_s();
 
         let t_r = Timer::start();
-        let (permutation, cache_hit) =
-            self.cache
-                .fetch_or_order(&analysis, algorithm, self.reorder_seed, &self.workspaces);
+        let key = PlanKey::of(a, algorithm, self.reorder_seed, &self.solver);
+        let (plan, plan_hit) = self.plans.get_or_compute(key, || {
+            // cold path: one symmetrization feeds the analysis, the
+            // ordering, and the symbolic plan
+            let spd = prepare(a, &self.solver);
+            let analysis = MatrixAnalysis::of(&spd);
+            let (perm, _) =
+                self.cache
+                    .fetch_or_order(&analysis, algorithm, self.reorder_seed, &self.workspaces);
+            plan_solve_prepared(a, &spd, perm, &self.solver)
+        });
         let reorder_s = t_r.elapsed_s();
 
+        // RAII checkout: the scratch returns to the pool on every exit
+        // path, panic unwind included
+        let mut scratch = self.numeric.checkout_guard(NumericWorkspace::new);
         let mut solve =
-            solve_ordered(&spd, &permutation, &self.solver).map_err(anyhow::Error::msg)?;
+            solve_with_plan(a, &plan, &self.solver, &mut scratch).map_err(anyhow::Error::msg)?;
         solve.reorder_s = reorder_s;
 
         Ok(ServingReport {
@@ -176,8 +285,8 @@ impl ServingEngine {
             feature_s,
             predict_s,
             reorder_s,
-            cache_hit,
-            permutation,
+            plan_hit,
+            permutation: plan.perm.clone(),
             solve,
         })
     }
@@ -186,8 +295,10 @@ impl ServingEngine {
     pub fn stats(&self) -> ServingStats {
         ServingStats {
             requests: self.requests.load(Ordering::Relaxed),
+            plans: self.plans.stats(),
             cache: self.cache.stats(),
             workspaces: self.workspaces.stats(),
+            numeric: self.numeric.stats(),
             service: self.service.stats.snapshot(),
         }
     }
@@ -241,22 +352,25 @@ mod tests {
     }
 
     #[test]
-    fn repeat_requests_hit_the_cache_and_replay_the_ordering() {
+    fn repeat_requests_hit_the_plan_cache_and_replay_the_solve() {
         let engine = ServingEngine::spawn(forest_backend(), ServingConfig::default()).unwrap();
         let a = mesh(11, 9);
         let cold = engine.serve(&a).unwrap();
-        assert!(!cold.cache_hit);
+        assert!(!cold.plan_hit);
         assert!(cold.solve.residual < 1e-6);
         let warm = engine.serve(&a).unwrap();
-        assert!(warm.cache_hit, "identical request missed the cache");
+        assert!(warm.plan_hit, "identical request missed the plan cache");
         assert_eq!(warm.algorithm, cold.algorithm);
         assert_eq!(warm.permutation, cold.permutation);
         assert_eq!(warm.solve.fill, cold.solve.fill);
+        assert_eq!(warm.solve.analyze_s, 0.0, "warm request paid symbolic time");
 
         let s = engine.stats();
         assert_eq!(s.requests, 2);
-        assert_eq!(s.cache.hits, 1);
-        assert_eq!(s.cache.misses, 1);
+        assert_eq!(s.plans.hits, 1);
+        assert_eq!(s.plans.misses, 1);
+        // the ordering cache is only consulted on the plan miss
+        assert_eq!(s.cache.lookups(), 1);
         assert_eq!(s.service.requests, 2);
         engine.shutdown();
     }
@@ -273,12 +387,29 @@ mod tests {
     }
 
     #[test]
+    fn warm_requests_track_value_changes() {
+        // same pattern, new numerics: the plan replays, the answer moves
+        let engine = ServingEngine::spawn(forest_backend(), ServingConfig::default()).unwrap();
+        let a = mesh(9, 6);
+        let cold = engine.serve(&a).unwrap();
+        let mut b = a.clone();
+        for v in b.data.iter_mut() {
+            *v *= 3.0;
+        }
+        let warm = engine.serve(&b).unwrap();
+        assert!(warm.plan_hit, "structurally identical request missed");
+        assert_eq!(warm.solve.fill, cold.solve.fill);
+        assert!(warm.solve.residual < 1e-6);
+        engine.shutdown();
+    }
+
+    #[test]
     fn distinct_patterns_get_distinct_entries() {
         let engine = ServingEngine::spawn(forest_backend(), ServingConfig::default()).unwrap();
         let (a, b) = (mesh(6, 6), mesh(7, 5));
         let ra = engine.serve(&a).unwrap();
         let rb = engine.serve(&b).unwrap();
-        assert!(!ra.cache_hit && !rb.cache_hit);
+        assert!(!ra.plan_hit && !rb.plan_hit);
         assert_eq!(ra.permutation.len(), 36);
         assert_eq!(rb.permutation.len(), 35);
         engine.shutdown();

@@ -15,8 +15,24 @@
 //!   those artifacts; executed from Rust through the PJRT CPU client
 //!   (`runtime`), so Python never runs after `make artifacts`.
 //!
-//! See `DESIGN.md` for the experiment index (every paper table/figure maps
-//! to a module in [`experiments`] and a bench in `rust/benches/`).
+//! ## Orientation
+//!
+//! The paper's pipeline maps onto the module tree as
+//! `sparse → features → ml`/`model` `→ reorder → solver → coordinator`:
+//! feature extraction ([`features`], Table 3) feeds a classifier
+//! ([`ml`] classical models, or the AOT MLP via [`model`]/[`runtime`]),
+//! whose label selects a reordering ([`reorder`], Table 2) for the
+//! direct solve ([`solver`], the MUMPS substitute). [`dataset`] builds
+//! the labeled sweep, [`coordinator`] assembles the deployable objects
+//! — the synchronous `SelectionPipeline` and the cache-stacked
+//! `ServingEngine` (ordering cache + symbolic-plan cache + scratch
+//! pools; warm requests run numeric-only).
+//!
+//! **`ARCHITECTURE.md`** (repo root) carries the full map: module tree ↔
+//! paper pipeline, the `ServingEngine` request-lifecycle diagram with
+//! its three cache layers, and which paper table/figure each
+//! [`experiments`] module reproduces. `DESIGN.md` documents the
+//! substitutions (synthetic collection, LDLᵀ in place of MUMPS).
 
 pub mod collection;
 pub mod coordinator;

@@ -6,37 +6,35 @@
 //! given its seed. Workloads that re-solve the *same structural pattern*
 //! under different numerics (factorization-in-loop, time stepping,
 //! Newton iterations) therefore recompute byte-identical permutations on
-//! every request. [`OrderingCache`] memoizes them:
+//! every request. [`OrderingCache`] memoizes them.
 //!
-//! * **Keying** ([`OrderingKey`]): the [`PatternKey`] structural
-//!   fingerprint (order + nnz + row-ptr/col-idx hash) plus the algorithm
-//!   and the reorder seed. Including the seed keeps the ND/SCOTCH/PORD
-//!   bisection randomness inside the key, so a hit is bit-identical to a
-//!   fresh compute by construction (property tested in
+//! The sharded-LRU mechanics (bounded capacity, recency-tick eviction,
+//! lock-free counters, compute-outside-the-lock misses) live in the
+//! generic [`crate::util::cache::ShardedCache`], shared with the
+//! solver's symbolic-plan cache ([`crate::solver::plan_cache`]); this
+//! module owns only the *keying policy*:
+//!
+//! * [`OrderingKey`] is the [`PatternKey`] structural fingerprint of the
+//!   **symmetrized adjacency** (not the raw matrix — see
+//!   [`OrderingKey::for_analysis`]) plus the algorithm and the reorder
+//!   seed. Including the seed keeps the ND/SCOTCH/PORD bisection
+//!   randomness inside the key, so a hit is bit-identical to a fresh
+//!   compute by construction (property tested in
 //!   `tests/prop_ordering_cache.rs`).
-//! * **Sharding**: entries are spread over `shards` independent
-//!   mutex-protected maps selected by the key hash, so concurrent
-//!   requests for different patterns rarely contend on one lock.
-//! * **Eviction**: bounded, LRU-ish. Every hit stamps the entry with a
-//!   global monotone tick; when a shard is full the stalest entry in
-//!   that shard is dropped. Total residency never exceeds the configured
-//!   capacity (shard capacities are floored so `shards * per_shard <=
-//!   capacity`).
-//! * **Counters**: lock-free hit/miss/insert/evict atomics, snapshotted
-//!   by [`OrderingCache::stats`]; `hits + misses == lookups` always.
 //!
 //! Values are `Arc<Permutation>` so a hit is one atomic increment — the
 //! caller, the cache, and an in-flight solve can all hold the same
 //! ordering without copying the O(n) vector.
 
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use super::engine::{reorderer, MatrixAnalysis};
 use super::workspace::WorkspacePool;
 use super::{Permutation, ReorderAlgorithm};
 use crate::sparse::PatternKey;
+use crate::util::cache::ShardedCache;
+
+pub use crate::util::cache::{CacheConfig, CacheStats};
 
 /// Cache identity of one ordering: the structural fingerprint, which
 /// algorithm ran, and the seed its randomness derived from.
@@ -63,99 +61,19 @@ impl OrderingKey {
             seed,
         }
     }
-
-    /// 64-bit mix used for shard selection (the pattern hash already has
-    /// full entropy; fold in the algorithm and seed).
-    fn mix(&self) -> u64 {
-        let alg = self.algorithm as u64;
-        let mut h = self
-            .pattern
-            .hash
-            .wrapping_mul(0x9E3779B97F4A7C15)
-            .rotate_left(17);
-        h ^= alg.wrapping_mul(0xBF58476D1CE4E5B9);
-        h ^= self.seed.wrapping_mul(0x94D049BB133111EB);
-        h
-    }
-}
-
-/// Sizing knobs for [`OrderingCache`].
-#[derive(Clone, Copy, Debug)]
-pub struct CacheConfig {
-    /// Maximum resident permutations across all shards.
-    pub capacity: usize,
-    /// Number of independently-locked shards (clamped to `capacity`).
-    pub shards: usize,
-}
-
-impl Default for CacheConfig {
-    fn default() -> Self {
-        CacheConfig {
-            capacity: 256,
-            shards: 8,
-        }
-    }
-}
-
-/// Counter snapshot (one consistent read of the atomics).
-#[derive(Clone, Copy, Debug, Default)]
-pub struct CacheStats {
-    pub hits: u64,
-    pub misses: u64,
-    pub inserts: u64,
-    pub evictions: u64,
-    /// Resident entries at snapshot time.
-    pub entries: usize,
-}
-
-impl CacheStats {
-    pub fn lookups(&self) -> u64 {
-        self.hits + self.misses
-    }
-
-    pub fn hit_rate(&self) -> f64 {
-        let l = self.lookups();
-        if l == 0 {
-            0.0
-        } else {
-            self.hits as f64 / l as f64
-        }
-    }
-}
-
-struct Entry {
-    perm: Arc<Permutation>,
-    /// Global tick of the last hit/insert (the LRU-ish recency stamp).
-    last_used: u64,
 }
 
 /// Bounded, sharded `(PatternKey, algorithm, seed) → Arc<Permutation>`
-/// map with LRU-ish eviction. See the module docs for the design.
+/// map with LRU-ish eviction (a [`ShardedCache`] instantiation — see
+/// `util::cache` for the mechanics, the module docs for the keying).
 pub struct OrderingCache {
-    shards: Vec<Mutex<HashMap<OrderingKey, Entry>>>,
-    per_shard: usize,
-    tick: AtomicU64,
-    hits: AtomicU64,
-    misses: AtomicU64,
-    inserts: AtomicU64,
-    evictions: AtomicU64,
+    inner: ShardedCache<OrderingKey, Permutation>,
 }
 
 impl OrderingCache {
     pub fn new(cfg: CacheConfig) -> Self {
-        let capacity = cfg.capacity.max(1);
-        let shards = cfg.shards.clamp(1, capacity);
-        // floor division: shards * per_shard <= capacity, so the bound
-        // the eviction test asserts holds exactly
-        let per_shard = (capacity / shards).max(1);
         OrderingCache {
-            shards: (0..shards).map(|_| Mutex::new(HashMap::new())).collect(),
-            per_shard,
-            tick: AtomicU64::new(0),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-            inserts: AtomicU64::new(0),
-            evictions: AtomicU64::new(0),
+            inner: ShardedCache::new(cfg),
         }
     }
 
@@ -165,45 +83,22 @@ impl OrderingCache {
 
     /// Effective capacity (`shards * per_shard`, ≤ the configured one).
     pub fn capacity(&self) -> usize {
-        self.shards.len() * self.per_shard
+        self.inner.capacity()
     }
 
     /// Resident entries (sums shard sizes; momentary under concurrency).
     pub fn len(&self) -> usize {
-        self.shards
-            .iter()
-            .map(|s| s.lock().expect("cache shard poisoned").len())
-            .sum()
+        self.inner.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
-    }
-
-    fn shard(&self, key: &OrderingKey) -> &Mutex<HashMap<OrderingKey, Entry>> {
-        let i = (key.mix() % self.shards.len() as u64) as usize;
-        &self.shards[i]
-    }
-
-    fn next_tick(&self) -> u64 {
-        self.tick.fetch_add(1, Ordering::Relaxed)
+        self.inner.is_empty()
     }
 
     /// Counted lookup: `Some` stamps recency and counts a hit, `None`
     /// counts a miss.
     pub fn get(&self, key: &OrderingKey) -> Option<Arc<Permutation>> {
-        let mut shard = self.shard(key).lock().expect("cache shard poisoned");
-        match shard.get_mut(key) {
-            Some(e) => {
-                e.last_used = self.next_tick();
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                Some(e.perm.clone())
-            }
-            None => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
-                None
-            }
-        }
+        self.inner.get(key)
     }
 
     /// Insert (idempotent: an existing entry for `key` is kept — the
@@ -211,30 +106,7 @@ impl OrderingCache {
     /// keeping the resident one preserves its recency). Evicts the
     /// stalest entry of the target shard when it is full.
     pub fn insert(&self, key: OrderingKey, perm: Arc<Permutation>) -> Arc<Permutation> {
-        let mut shard = self.shard(&key).lock().expect("cache shard poisoned");
-        if let Some(e) = shard.get(&key) {
-            return e.perm.clone();
-        }
-        if shard.len() >= self.per_shard {
-            if let Some(stale) = shard
-                .iter()
-                .min_by_key(|(_, e)| e.last_used)
-                .map(|(k, _)| *k)
-            {
-                shard.remove(&stale);
-                self.evictions.fetch_add(1, Ordering::Relaxed);
-            }
-        }
-        let tick = self.next_tick();
-        shard.insert(
-            key,
-            Entry {
-                perm: perm.clone(),
-                last_used: tick,
-            },
-        );
-        self.inserts.fetch_add(1, Ordering::Relaxed);
-        perm
+        self.inner.insert(key, perm)
     }
 
     /// The serving primitive: one counted lookup; on miss, compute
@@ -248,11 +120,7 @@ impl OrderingCache {
         key: OrderingKey,
         compute: impl FnOnce() -> Permutation,
     ) -> (Arc<Permutation>, bool) {
-        if let Some(p) = self.get(&key) {
-            return (p, true);
-        }
-        let perm = self.insert(key, Arc::new(compute()));
-        (perm, false)
+        self.inner.get_or_compute(key, compute)
     }
 
     /// The request-path composition of cache + pool, shared by the
@@ -277,13 +145,7 @@ impl OrderingCache {
     }
 
     pub fn stats(&self) -> CacheStats {
-        CacheStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            inserts: self.inserts.load(Ordering::Relaxed),
-            evictions: self.evictions.load(Ordering::Relaxed),
-            entries: self.len(),
-        }
+        self.inner.stats()
     }
 }
 
@@ -351,27 +213,6 @@ mod tests {
         assert!(s.evictions > 0);
         assert_eq!(s.inserts, 50);
         assert_eq!(s.entries, cache.len());
-    }
-
-    #[test]
-    fn lru_ish_keeps_the_recently_used_entry() {
-        // single shard, capacity 2: touch A, insert C -> B (stale) evicted
-        let cache = OrderingCache::new(CacheConfig {
-            capacity: 2,
-            shards: 1,
-        });
-        let (ka, kb, kc) = (
-            key(1, 3, ReorderAlgorithm::Amd, 0),
-            key(2, 3, ReorderAlgorithm::Amd, 0),
-            key(3, 3, ReorderAlgorithm::Amd, 0),
-        );
-        cache.insert(ka, Arc::new(Permutation::identity(3)));
-        cache.insert(kb, Arc::new(Permutation::identity(3)));
-        assert!(cache.get(&ka).is_some()); // A is now most recent
-        cache.insert(kc, Arc::new(Permutation::identity(3)));
-        assert!(cache.get(&ka).is_some(), "recently-used entry evicted");
-        assert!(cache.get(&kb).is_none(), "stale entry survived");
-        assert!(cache.get(&kc).is_some());
     }
 
     #[test]

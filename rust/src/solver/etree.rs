@@ -8,6 +8,12 @@
 //!
 //! All functions take the symmetric adjacency pattern `(indptr, indices)`
 //! of the (permuted) matrix — self-loops optional, both triangles stored.
+//!
+//! This is the bottom of the solver's **symbolic** side: everything here
+//! is a pure function of the pattern (values never enter), which is what
+//! lets [`crate::solver::plan`] freeze the outputs — tree, counts,
+//! [`SymbolicCost`] — into a cached, replayable
+//! [`crate::solver::SymbolicFactorization`].
 
 /// Sentinel for "no parent" (tree root).
 pub const NONE: usize = usize::MAX;

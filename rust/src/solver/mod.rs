@@ -7,6 +7,35 @@
 //! solve *time* under a given reordering is the label signal the whole
 //! paper is built on; this module measures it.
 //!
+//! ## Symbolic / numeric split
+//!
+//! Every artifact of the analyze phase is a pure function of the matrix
+//! *pattern* — values never enter the elimination tree, the column
+//! counts, the supernode partition, or the amalgamation decisions. The
+//! module is therefore organized as an explicit plan/execute split:
+//!
+//! * **ad-hoc** ([`solve_ordered`]) — analyze + factorize + solve in one
+//!   timed call; the dataset sweep's label generator.
+//! * **planned** ([`plan`] / [`plan_cache`]) — freeze the whole symbolic
+//!   phase (prepared pattern, permutation, etree + postorder, supernode
+//!   partition, relaxed amalgamation, column counts, preallocated factor
+//!   pattern, and a value-refresh gather) into a
+//!   [`SymbolicFactorization`], cache it per
+//!   `(pattern, ordering, config)`, and replay requests through the
+//!   numeric-only [`factorize_with_plan`] / [`solve_with_plan`]. The
+//!   serving engine's warm path runs entirely on this side of the split.
+//!
+//! ## Invariants
+//!
+//! All numeric kernels are **pivot-free**: inputs must be SPD-like —
+//! structurally symmetric with a strictly dominant positive diagonal,
+//! which is what [`prepare`] (`symmetrize_spd_like`) manufactures from
+//! arbitrary square matrices (MUMPS with default settings also
+//! factorizes such systems without dynamic pivoting). Fill and solve
+//! results are ordering-dependent but *mode*-independent: every
+//! [`FactorMode`] stores the same factor pattern and produces
+//! residual-equivalent solutions.
+//!
 //! ## Numeric paths ([`FactorConfig`])
 //! Three factorization kernels share identical pivot-free LDLᵀ
 //! semantics (same `fill()`, residual-equivalent solutions):
@@ -43,6 +72,8 @@
 pub mod etree;
 pub mod kernels;
 pub mod numeric;
+pub mod plan;
+pub mod plan_cache;
 pub mod supernode;
 pub mod supernodal;
 
@@ -55,6 +86,11 @@ use crate::util::rng::Rng;
 use crate::util::Timer;
 
 pub use numeric::{analyze, factorize, FactorError, LdlFactor, Symbolic};
+pub use plan::{
+    factorize_with_plan, plan_solve, plan_solve_prepared, solve_with_plan, NumericWorkspace,
+    SymbolicFactorization,
+};
+pub use plan_cache::{PlanCache, PlanKey};
 pub use supernode::{FactorConfig, FactorMode, SupernodalPlan};
 pub use supernodal::factorize_supernodal;
 
@@ -84,6 +120,26 @@ impl Default for SolverConfig {
             measure_repeats: 1,
             factor: FactorConfig::default(),
         }
+    }
+}
+
+impl SolverConfig {
+    /// 64-bit fingerprint of every knob a [`SymbolicFactorization`]
+    /// depends on — `diag_boost` (shapes the value map's diagonal),
+    /// `flop_cap` (decides the capped/estimate path), and the whole
+    /// [`FactorConfig`]. Mixed into [`PlanKey`]; `seed` and
+    /// `measure_repeats` are deliberately excluded (they affect how a
+    /// plan is *measured*, never what it contains).
+    pub fn plan_fingerprint(&self) -> u64 {
+        let mut h: u64 = 0x9E3779B97F4A7C15;
+        let mut mix = |x: u64| {
+            h ^= x;
+            h = h.wrapping_mul(0x100000001b3).rotate_left(11);
+        };
+        mix(self.diag_boost.to_bits());
+        mix(self.flop_cap.to_bits());
+        mix(self.factor.fingerprint());
+        h
     }
 }
 

@@ -11,6 +11,13 @@
 //! No pivoting: inputs come from `symmetrize_spd_like`, which makes them
 //! strictly diagonally dominant (MUMPS with default settings also
 //! factorizes such systems without dynamic pivoting).
+//!
+//! This file is the scalar **numeric** side of the solver's
+//! symbolic/numeric split: [`analyze`] produces the symbolic artifact
+//! ([`Symbolic`]: etree parents + column counts — pattern-pure, hence
+//! freezable by [`crate::solver::plan`]), and [`factorize`] /
+//! [`factorize_parts`] consume it. The same `Symbolic` can be replayed
+//! against any values with the matching pattern.
 
 use super::etree::{col_counts, etree, symbolic_cost, SymbolicCost, NONE};
 use crate::sparse::CsrMatrix;
@@ -78,10 +85,26 @@ pub fn analyze(a: &CsrMatrix) -> Symbolic {
 
 /// Up-looking LDLᵀ. `a` must be symmetric with a full diagonal.
 pub fn factorize(a: &CsrMatrix, sym: &Symbolic) -> Result<LdlFactor, FactorError> {
-    let n = a.nrows;
     if a.nrows != a.ncols {
         return Err(FactorError::Shape(format!("{}x{}", a.nrows, a.ncols)));
     }
+    factorize_parts(a.nrows, &a.indptr, &a.indices, &a.data, sym)
+}
+
+/// [`factorize`] on a raw CSR triplet: same algorithm, but the values
+/// need not live inside a [`CsrMatrix`]. This is the numeric-only entry
+/// the plan/execute split ([`crate::solver::plan`]) uses — the pattern
+/// (`indptr`/`indices`) is owned by the cached
+/// [`crate::solver::SymbolicFactorization`] and `data` is refreshed into
+/// a pooled scratch buffer per request, so the warm path factorizes
+/// without materializing a matrix.
+pub fn factorize_parts(
+    n: usize,
+    indptr: &[usize],
+    indices: &[usize],
+    data: &[f64],
+    sym: &Symbolic,
+) -> Result<LdlFactor, FactorError> {
     let parent = &sym.parent;
     // column pointers from counts
     let mut lp = vec![0usize; n + 1];
@@ -104,12 +127,12 @@ pub fn factorize(a: &CsrMatrix, sym: &Symbolic) -> Result<LdlFactor, FactorError
         // --- symbolic: pattern of row i = reach of A(i, 0..i-1) in etree
         flag[i] = i;
         let mut top = n;
-        let row_start = a.indptr[i];
-        for (k, &j) in a.row_indices(i).iter().enumerate() {
+        let row_start = indptr[i];
+        for (k, &j) in indices[indptr[i]..indptr[i + 1]].iter().enumerate() {
             if j > i {
                 break; // CSR rows sorted: done with lower triangle
             }
-            y[j] += a.data[row_start + k]; // scatter A(i,j)
+            y[j] += data[row_start + k]; // scatter A(i,j)
             if j == i {
                 continue;
             }

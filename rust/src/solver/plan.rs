@@ -1,0 +1,591 @@
+//! The solve plan: everything symbolic about one `(pattern, ordering,
+//! factor config)`, computed once and replayed numerically forever.
+//!
+//! [`solve_ordered`](crate::solver::solve_ordered) pays four symbolic
+//! costs on every call even when the answer cannot change: the
+//! symmetrization (`prepare`), the symmetric permutation, the
+//! elimination-tree analysis, and (on the supernodal path) the assembly
+//! tree + exact factor structure. All of them are pure functions of the
+//! *pattern* — values never enter — so a serving path that re-solves one
+//! structural pattern under many numerics recomputes identical artifacts
+//! per request. [`SymbolicFactorization`] freezes them:
+//!
+//! * the ordering itself ([`SymbolicFactorization::perm`], shared with
+//!   the ordering cache as an `Arc`);
+//! * the pattern of the permuted prepared matrix `PA = P·S·Pᵀ`
+//!   (`S = symmetrize_spd_like(A)`) — stored directly for the scalar
+//!   path, or as the postordered [`SupernodalPlan`] (permuted etree,
+//!   postorder, supernode partition, relaxed amalgamation, column
+//!   counts, preallocated factor pattern) for the multifrontal path;
+//! * the scalar symbolic ([`Symbolic`]: etree parents + column counts)
+//!   when the scalar kernel will consume it;
+//! * a **value map**: for every slot of the numeric kernel's input
+//!   layout, which raw `A` slots feed it and how the dominant diagonal
+//!   is rebuilt. Its `refresh` replays `prepare` + permutation
+//!   (+ postorder gather) as one O(nnz) gather into a pooled buffer —
+//!   no transpose, no sort, no graph, no allocation.
+//!
+//! [`factorize_with_plan`] is then *numeric only*: refresh values,
+//! factorize (scalar or supernodal, sequential or parallel — the mode is
+//! frozen in the plan's [`FactorConfig`]). It is bit-identical to the
+//! from-scratch path by construction: the refresh performs the same
+//! floating-point operations in the same order as
+//! `symmetrize_spd_like` + `permute_sym`, and the kernels are the very
+//! same functions (`tests/prop_symbolic_plan.rs` holds that line across
+//! all seven algorithms and all three factor modes).
+//!
+//! Plans are cached per `(PatternKey, algorithm, seed, config)` by
+//! [`crate::solver::plan_cache::PlanCache`]; the serving engine's warm
+//! path goes predicted label → cached plan → [`solve_with_plan`] with
+//! zero symbolic work.
+
+use std::sync::Arc;
+
+use super::etree::SymbolicCost;
+use super::numeric::{self, FactorError, LdlFactor, Symbolic};
+use super::supernode::{self, FactorConfig, FactorMode, SupernodalPlan};
+use super::supernodal;
+use super::{calibrated_flop_rate, prepare, SolveReport, SolverConfig};
+use crate::reorder::Permutation;
+use crate::sparse::CsrMatrix;
+use crate::util::rng::Rng;
+use crate::util::Timer;
+
+/// Sentinel for "no source slot" in a [`ValueMap`].
+const NO_SLOT: usize = usize::MAX;
+
+/// Pooled numeric scratch for plan-based factorization: holds the
+/// refreshed value buffer between requests so the steady-state path
+/// allocates nothing for its input values. Check one out of an
+/// `ObjectPool` (the serving engine does) or keep one per thread.
+#[derive(Default)]
+pub struct NumericWorkspace {
+    /// Refreshed values in the plan's kernel layout (`PA` for scalar,
+    /// postordered `B` for supernodal).
+    pub(crate) vals: Vec<f64>,
+}
+
+impl NumericWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// The value-refresh program: replays `symmetrize_spd_like` + the
+/// symmetric permutation (+ the supernodal postorder gather) as a single
+/// O(nnz) pass from raw `A` values into the numeric kernel's input
+/// layout, bit-identically (same operations, same order — the diagonal's
+/// off-row absolute sums are accumulated in the original row/column
+/// order `symmetrize_spd_like` uses, whatever the target layout).
+#[derive(Clone, Debug)]
+struct ValueMap {
+    /// Target slot count (nnz of the prepared matrix).
+    nnz_target: usize,
+    /// Per target slot, the ≤2 raw `A` slots feeding it: the stored
+    /// `(r,c)` and `(c,r)` entries ([`NO_SLOT`] = absent). Diagonal
+    /// slots are `[NO_SLOT, NO_SLOT]` (their value is derived, pass 2).
+    src: Vec<[usize; 2]>,
+    /// Off-diagonal target slots of prepared row `i`, grouped by row in
+    /// ascending original column order (`sum_ptr[i]..sum_ptr[i+1]`) —
+    /// exactly the accumulation order of `symmetrize_spd_like`'s
+    /// dominance sums.
+    sum_ptr: Vec<usize>,
+    sum_slots: Vec<usize>,
+    /// Target slot of prepared row `i`'s diagonal.
+    diag_of: Vec<usize>,
+    diag_boost: f64,
+}
+
+impl ValueMap {
+    /// Build the map for prepared matrix `spd` of raw `a`, with
+    /// `s2t[k]` = target slot of `spd` slot `k` (identity-composable:
+    /// pass the `spd → PA` map for the scalar layout, or its composition
+    /// with the postorder gather for the supernodal layout).
+    fn build(a: &CsrMatrix, spd: &CsrMatrix, s2t: &[usize], diag_boost: f64) -> ValueMap {
+        let n = a.nrows;
+        let slot_of = |r: usize, c: usize| -> usize {
+            match a.row_indices(r).binary_search(&c) {
+                Ok(p) => a.indptr[r] + p,
+                Err(_) => NO_SLOT,
+            }
+        };
+        let mut src = vec![[NO_SLOT; 2]; spd.nnz()];
+        let mut sum_ptr = vec![0usize; n + 1];
+        let mut sum_slots = Vec::with_capacity(spd.nnz().saturating_sub(n));
+        let mut diag_of = vec![0usize; n];
+        for r in 0..n {
+            for k in spd.indptr[r]..spd.indptr[r + 1] {
+                let c = spd.indices[k];
+                let t = s2t[k];
+                if c == r {
+                    diag_of[r] = t;
+                } else {
+                    sum_slots.push(t);
+                    src[t] = [slot_of(r, c), slot_of(c, r)];
+                }
+            }
+            sum_ptr[r + 1] = sum_slots.len();
+        }
+        ValueMap {
+            nnz_target: spd.nnz(),
+            src,
+            sum_ptr,
+            sum_slots,
+            diag_of,
+            diag_boost,
+        }
+    }
+
+    /// Refresh `out` with the prepared+permuted values of `a` (two
+    /// passes: symmetrized off-diagonals, then the dominant diagonal).
+    fn refresh(&self, a: &CsrMatrix, out: &mut Vec<f64>) {
+        out.clear();
+        out.resize(self.nnz_target, 0.0);
+        let at = |s: usize| if s == NO_SLOT { 0.0 } else { a.data[s] };
+        for (k, s) in self.src.iter().enumerate() {
+            out[k] = (at(s[0]) + at(s[1])) / 2.0;
+        }
+        for (r, &d) in self.diag_of.iter().enumerate() {
+            let mut off = 0.0f64;
+            for &t in &self.sum_slots[self.sum_ptr[r]..self.sum_ptr[r + 1]] {
+                off += out[t].abs();
+            }
+            out[d] = self.diag_boost * (1.0 + off);
+        }
+    }
+}
+
+/// A frozen symbolic factorization: the solve plan for one
+/// `(pattern, ordering, factor config)`. See the module docs for what it
+/// carries; consume it with [`factorize_with_plan`] /
+/// [`solve_with_plan`]. Plans are pattern-pure — numerically-different
+/// matrices with one structure share a plan, which is why the
+/// [`crate::solver::plan_cache::PlanCache`] can hand one `Arc` to every
+/// concurrent request.
+pub struct SymbolicFactorization {
+    n: usize,
+    /// nnz of the raw matrix this plan's value map was built for (guards
+    /// against consuming a plan with a structurally different matrix).
+    raw_nnz: usize,
+    /// The ordering the plan bakes in (shared with the ordering cache).
+    pub perm: Arc<Permutation>,
+    /// The factor configuration the numeric phase will run under.
+    pub factor: FactorConfig,
+    /// Symbolic cost of the factorization (fill / flops / max column).
+    pub cost: SymbolicCost,
+    /// True when `cost.flops` exceeded the planning `flop_cap`: the plan
+    /// carries no numeric structures and [`solve_with_plan`] returns the
+    /// rate-model estimate, exactly like `solve_ordered`.
+    pub capped: bool,
+    /// Scalar path: etree parents + column counts of `PA`.
+    sym: Option<Symbolic>,
+    /// Scalar path: pattern of `PA` (`indptr`, `indices`).
+    pa_pattern: Option<(Vec<usize>, Vec<usize>)>,
+    /// Supernodal path: the postordered assembly-tree plan.
+    snplan: Option<SupernodalPlan>,
+    /// Value-refresh program (`None` only when `capped`).
+    vals: Option<ValueMap>,
+}
+
+impl SymbolicFactorization {
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The supernodal assembly-tree plan, when this plan factors
+    /// multifrontally.
+    pub fn supernodal(&self) -> Option<&SupernodalPlan> {
+        self.snplan.as_ref()
+    }
+
+    /// ‖PA·x − b‖₂ over the plan's stored pattern and the refreshed
+    /// values in `vals` (`x`, `b` in the `PA` numbering).
+    fn residual(&self, vals: &[f64], x: &[f64], b: &[f64]) -> f64 {
+        let mut r2 = 0.0f64;
+        match (&self.pa_pattern, &self.snplan) {
+            (Some((indptr, indices)), _) => {
+                for r in 0..self.n {
+                    let mut acc = 0.0;
+                    for k in indptr[r]..indptr[r + 1] {
+                        acc += vals[k] * x[indices[k]];
+                    }
+                    let d = acc - b[r];
+                    r2 += d * d;
+                }
+            }
+            (None, Some(sn)) => {
+                // row k of the postordered B is row post[k] of PA, its
+                // column j is PA column post[j]
+                for k in 0..self.n {
+                    let mut acc = 0.0;
+                    for t in sn.b_indptr[k]..sn.b_indptr[k + 1] {
+                        acc += vals[t] * x[sn.post[sn.b_indices[t]]];
+                    }
+                    let d = acc - b[sn.post[k]];
+                    r2 += d * d;
+                }
+            }
+            (None, None) => return 0.0,
+        }
+        r2.sqrt()
+    }
+}
+
+/// Plan a solve: prepare (symmetrize) the raw matrix, then freeze every
+/// symbolic artifact of factorizing it under `perm` with `cfg`. This is
+/// the once-per-pattern cost the plan cache amortizes away.
+pub fn plan_solve(
+    a: &CsrMatrix,
+    perm: Arc<Permutation>,
+    cfg: &SolverConfig,
+) -> SymbolicFactorization {
+    let spd = prepare(a, cfg);
+    plan_solve_prepared(a, &spd, perm, cfg)
+}
+
+/// [`plan_solve`] for a caller that already prepared the matrix (`spd`
+/// must be `prepare(a, cfg)` — the serving cold path and the pipeline
+/// share their one symmetrization with the feature extractor this way).
+pub fn plan_solve_prepared(
+    a: &CsrMatrix,
+    spd: &CsrMatrix,
+    perm: Arc<Permutation>,
+    cfg: &SolverConfig,
+) -> SymbolicFactorization {
+    assert_eq!(a.nrows, a.ncols, "plans need a square matrix");
+    assert_eq!(spd.nrows, a.nrows, "prepared matrix shape mismatch");
+    assert_eq!(perm.len(), a.nrows, "permutation length mismatch");
+    let n = a.nrows;
+    let pa = perm.apply(spd);
+    // scalar symbolic first (O(n + nnz) space): the flop-cap guard must
+    // decide before the supernodal plan allocates the O(nnz(L)) exact
+    // structure a capped factorization would never use
+    let sym = numeric::analyze(&pa);
+    let cost = sym.cost;
+    if cost.flops > cfg.flop_cap {
+        return SymbolicFactorization {
+            n,
+            raw_nnz: a.nnz(),
+            perm,
+            factor: cfg.factor,
+            cost,
+            capped: true,
+            sym: None,
+            pa_pattern: None,
+            snplan: None,
+            vals: None,
+        };
+    }
+
+    // spd slot -> PA slot (spd entry (r, c) lands at (perm[r], perm[c]))
+    let p = perm.as_slice();
+    let mut s2pa = vec![0usize; spd.nnz()];
+    for r in 0..n {
+        let nr = p[r];
+        let prow = &pa.indices[pa.indptr[nr]..pa.indptr[nr + 1]];
+        for k in spd.indptr[r]..spd.indptr[r + 1] {
+            let pos = prow
+                .binary_search(&p[spd.indices[k]])
+                .expect("permuted entry present");
+            s2pa[k] = pa.indptr[nr] + pos;
+        }
+    }
+
+    match cfg.factor.mode {
+        FactorMode::Scalar => {
+            let vals = ValueMap::build(a, spd, &s2pa, cfg.diag_boost);
+            SymbolicFactorization {
+                n,
+                raw_nnz: a.nnz(),
+                perm,
+                factor: cfg.factor,
+                cost,
+                capped: false,
+                sym: Some(sym),
+                pa_pattern: Some((pa.indptr, pa.indices)),
+                snplan: None,
+                vals: Some(vals),
+            }
+        }
+        FactorMode::Supernodal | FactorMode::SupernodalParallel => {
+            let snplan = supernode::plan_with(&pa, &sym, &cfg.factor);
+            // compose with the postorder gather: target layout becomes B
+            let mut pa2b = vec![0usize; pa.nnz()];
+            for (kb, &ks) in snplan.b_from.iter().enumerate() {
+                pa2b[ks] = kb;
+            }
+            for t in s2pa.iter_mut() {
+                *t = pa2b[*t];
+            }
+            let vals = ValueMap::build(a, spd, &s2pa, cfg.diag_boost);
+            SymbolicFactorization {
+                n,
+                raw_nnz: a.nnz(),
+                perm,
+                factor: cfg.factor,
+                cost,
+                capped: false,
+                sym: None,
+                pa_pattern: None,
+                snplan: Some(snplan),
+                vals: Some(vals),
+            }
+        }
+    }
+}
+
+/// Numeric-only factorization: refresh the plan's input values from the
+/// raw matrix into the pooled workspace, then run the kernel the plan
+/// was built for (scalar up-looking, or supernodal multifrontal —
+/// sequential or subtree-parallel per the frozen [`FactorConfig`]). No
+/// symmetrization, no permutation, no symbolic analysis, no pattern
+/// allocation. Bit-identical to `analyze_with` + `factorize_with` on the
+/// freshly prepared-and-permuted matrix.
+pub fn factorize_with_plan(
+    a: &CsrMatrix,
+    plan: &SymbolicFactorization,
+    ws: &mut NumericWorkspace,
+) -> Result<LdlFactor, FactorError> {
+    assert!(!plan.capped, "capped plans carry no numeric structure");
+    assert_eq!(a.nrows, plan.n, "plan built for a different order");
+    assert_eq!(a.nnz(), plan.raw_nnz, "plan built for a different pattern");
+    let vals = plan.vals.as_ref().expect("uncapped plans carry a value map");
+    vals.refresh(a, &mut ws.vals);
+    match (&plan.sym, &plan.snplan) {
+        (Some(sym), _) => {
+            let (indptr, indices) = plan
+                .pa_pattern
+                .as_ref()
+                .expect("scalar plans keep the permuted pattern");
+            numeric::factorize_parts(plan.n, indptr, indices, &ws.vals, sym)
+        }
+        (None, Some(sn)) => supernodal::factorize_supernodal_gathered(&ws.vals, sn, &plan.factor),
+        (None, None) => unreachable!("plan carries neither path"),
+    }
+}
+
+/// The plan-consuming counterpart of `solve_ordered`: numeric factorize
+/// + triangular solves + residual, every phase timed, honoring the
+/// flop-cap estimate and `measure_repeats` exactly like the from-scratch
+/// path. `analyze_s` is 0 by construction — that is the point.
+pub fn solve_with_plan(
+    a: &CsrMatrix,
+    plan: &SymbolicFactorization,
+    cfg: &SolverConfig,
+    ws: &mut NumericWorkspace,
+) -> Result<SolveReport, FactorError> {
+    let cost = plan.cost;
+    if plan.capped {
+        let rate = calibrated_flop_rate();
+        return Ok(SolveReport {
+            reorder_s: 0.0,
+            analyze_s: 0.0,
+            factor_s: cost.flops / rate,
+            solve_s: 4.0 * cost.fill as f64 / rate,
+            fill: cost.fill,
+            flops: cost.flops,
+            max_col: cost.max_col,
+            estimated: true,
+            residual: 0.0,
+        });
+    }
+
+    let t_f = Timer::start();
+    let mut f = factorize_with_plan(a, plan, ws)?;
+    let mut factor_s = t_f.elapsed_s();
+
+    // same RHS stream as `solve_ordered`, so solutions compare bitwise
+    let n = plan.n;
+    let mut rng = Rng::new(cfg.seed);
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let t_s = Timer::start();
+    let mut x = f.solve(&b);
+    let mut solve_s = t_s.elapsed_s();
+
+    for _ in 1..cfg.measure_repeats.max(1) {
+        let t_f = Timer::start();
+        f = factorize_with_plan(a, plan, ws)?;
+        factor_s = factor_s.min(t_f.elapsed_s());
+        let t_s = Timer::start();
+        x = f.solve(&b);
+        solve_s = solve_s.min(t_s.elapsed_s());
+    }
+
+    let residual = plan.residual(&ws.vals, &x, &b);
+    Ok(SolveReport {
+        reorder_s: 0.0,
+        analyze_s: 0.0,
+        factor_s,
+        solve_s,
+        fill: f.fill(),
+        flops: f.flops,
+        max_col: cost.max_col,
+        estimated: false,
+        residual,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reorder::ReorderAlgorithm;
+    use crate::solver::{analyze_with, factorize_with, solve_ordered};
+    use crate::sparse::CooMatrix;
+
+    fn mesh(nx: usize, ny: usize) -> CsrMatrix {
+        crate::collection::generators::grid2d(nx, ny)
+    }
+
+    /// An asymmetric matrix with one-sided entries and a partial
+    /// diagonal: exercises every branch of the value map.
+    fn lopsided() -> CsrMatrix {
+        let mut m = CooMatrix::new(6, 6);
+        m.push(0, 0, 3.0);
+        m.push(0, 1, 2.0);
+        m.push(1, 0, -1.0); // (0,1)/(1,0): both directions stored
+        m.push(1, 3, 0.5); // one-sided
+        m.push(2, 4, -2.5); // one-sided, row 2 has no diagonal
+        m.push(3, 3, 1.0);
+        m.push(4, 5, 4.0);
+        m.push(5, 2, 0.25);
+        m.to_csr()
+    }
+
+    fn mode_cfg(mode: FactorMode) -> SolverConfig {
+        SolverConfig {
+            factor: FactorConfig {
+                mode,
+                parallel_flop_min: 0.0,
+                ..FactorConfig::default()
+            },
+            ..SolverConfig::default()
+        }
+    }
+
+    #[test]
+    fn refresh_matches_prepare_and_permute_bitwise() {
+        for raw in [mesh(9, 7), lopsided()] {
+            for mode in [FactorMode::Scalar, FactorMode::Supernodal] {
+                let cfg = mode_cfg(mode);
+                let spd = prepare(&raw, &cfg);
+                let perm = Arc::new(ReorderAlgorithm::Amd.compute(&spd, 3));
+                let plan = plan_solve(&raw, perm.clone(), &cfg);
+                let mut ws = NumericWorkspace::new();
+                plan.vals.as_ref().unwrap().refresh(&raw, &mut ws.vals);
+                let pa = perm.apply(&spd);
+                match mode {
+                    FactorMode::Scalar => assert_eq!(ws.vals, pa.data),
+                    _ => {
+                        let sn = plan.supernodal().unwrap();
+                        let bx: Vec<f64> =
+                            sn.b_from.iter().map(|&s| pa.data[s]).collect();
+                        assert_eq!(ws.vals, bx);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_factor_is_bit_identical_to_scratch_factor() {
+        let raw = mesh(11, 8);
+        for mode in [
+            FactorMode::Scalar,
+            FactorMode::Supernodal,
+            FactorMode::SupernodalParallel,
+        ] {
+            let cfg = mode_cfg(mode);
+            let spd = prepare(&raw, &cfg);
+            let perm = Arc::new(ReorderAlgorithm::Rcm.compute(&spd, 7));
+            let pa = perm.apply(&spd);
+            let an = analyze_with(&pa, &cfg.factor);
+            let reference = factorize_with(&pa, &an, &cfg.factor).unwrap();
+
+            let plan = plan_solve(&raw, perm, &cfg);
+            let mut ws = NumericWorkspace::new();
+            let f = factorize_with_plan(&raw, &plan, &mut ws).unwrap();
+            assert_eq!(f.lp, reference.lp, "{mode:?}");
+            assert_eq!(f.li, reference.li, "{mode:?}");
+            assert_eq!(f.lx, reference.lx, "{mode:?}");
+            assert_eq!(f.d, reference.d, "{mode:?}");
+            assert_eq!(f.fill(), reference.fill());
+        }
+    }
+
+    #[test]
+    fn solve_with_plan_matches_solve_ordered() {
+        let raw = mesh(10, 10);
+        let cfg = SolverConfig::default();
+        let spd = prepare(&raw, &cfg);
+        let perm = Arc::new(ReorderAlgorithm::Amd.compute(&spd, 1));
+        let reference = solve_ordered(&spd, &perm, &cfg).unwrap();
+        let plan = plan_solve(&raw, perm, &cfg);
+        let mut ws = NumericWorkspace::new();
+        let r = solve_with_plan(&raw, &plan, &cfg, &mut ws).unwrap();
+        assert!(!r.estimated);
+        assert_eq!(r.fill, reference.fill);
+        assert_eq!(r.flops, reference.flops);
+        assert_eq!(r.max_col, reference.max_col);
+        assert_eq!(r.analyze_s, 0.0, "plans pay no symbolic time");
+        assert!(r.residual < 1e-8, "residual {}", r.residual);
+    }
+
+    #[test]
+    fn capped_plan_estimates_like_solve_ordered() {
+        let raw = mesh(10, 10);
+        let cfg = SolverConfig {
+            flop_cap: 10.0,
+            ..SolverConfig::default()
+        };
+        let spd = prepare(&raw, &cfg);
+        let perm = Arc::new(Permutation::identity(raw.nrows));
+        let reference = solve_ordered(&spd, &perm, &cfg).unwrap();
+        let plan = plan_solve(&raw, perm, &cfg);
+        assert!(plan.capped);
+        let mut ws = NumericWorkspace::new();
+        let r = solve_with_plan(&raw, &plan, &cfg, &mut ws).unwrap();
+        assert!(r.estimated);
+        assert_eq!(r.fill, reference.fill);
+        assert_eq!(r.flops, reference.flops);
+        assert_eq!(r.residual, 0.0);
+    }
+
+    #[test]
+    fn plan_is_pattern_pure_across_value_changes() {
+        // one plan serves numerically different matrices with one pattern
+        let raw = mesh(8, 9);
+        let cfg = SolverConfig::default();
+        let spd = prepare(&raw, &cfg);
+        let perm = Arc::new(ReorderAlgorithm::Nd.compute(&spd, 5));
+        let plan = plan_solve(&raw, perm.clone(), &cfg);
+
+        let mut other = raw.clone();
+        for v in other.data.iter_mut() {
+            *v *= -1.75;
+        }
+        let mut ws = NumericWorkspace::new();
+        let f = factorize_with_plan(&other, &plan, &mut ws).unwrap();
+        let spd2 = prepare(&other, &cfg);
+        let pa2 = perm.apply(&spd2);
+        let an2 = analyze_with(&pa2, &cfg.factor);
+        let reference = factorize_with(&pa2, &an2, &cfg.factor).unwrap();
+        assert_eq!(f.lx, reference.lx);
+        assert_eq!(f.d, reference.d);
+    }
+
+    #[test]
+    fn tiny_matrices_plan_cleanly() {
+        for n in [0usize, 1, 2] {
+            let mut coo = CooMatrix::new(n, n);
+            for i in 0..n {
+                coo.push(i, i, 2.0);
+            }
+            let raw = coo.to_csr();
+            let cfg = SolverConfig::default();
+            let plan = plan_solve(&raw, Arc::new(Permutation::identity(n)), &cfg);
+            let mut ws = NumericWorkspace::new();
+            let r = solve_with_plan(&raw, &plan, &cfg, &mut ws).unwrap();
+            assert_eq!(r.fill, n as u64);
+        }
+    }
+}

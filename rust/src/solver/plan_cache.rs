@@ -1,0 +1,188 @@
+//! Symbolic-plan cache: `(PatternKey, algorithm, seed, config) →
+//! Arc<SymbolicFactorization>` — the serving path's second cache layer,
+//! sitting behind the ordering cache.
+//!
+//! A [`SymbolicFactorization`] is a pure function of its key: the
+//! *raw* matrix pattern (the value map's gather sources index raw
+//! slots, so the raw fingerprint — not the symmetrized-adjacency one
+//! the ordering cache uses — is the right identity), the reordering
+//! algorithm and seed (they determine the permutation baked into the
+//! plan), and the solver/factor knobs that shape the symbolic
+//! structures ([`PlanKey::config`], a fingerprint over `diag_boost`,
+//! `flop_cap`, and every [`super::FactorConfig`] field). Values never
+//! enter a plan, so numerically-different matrices with one structure
+//! share an entry — the factorization-in-loop workload shape.
+//!
+//! Mechanics (bounded shards, LRU-ish recency eviction, lock-free
+//! hit/miss/insert/evict counters, compute-outside-the-lock misses) are
+//! the shared [`ShardedCache`]; the default capacity is smaller than the
+//! ordering cache's because a plan holds the O(nnz(L)) factor pattern,
+//! not an O(n) permutation.
+
+use std::sync::Arc;
+
+use super::plan::SymbolicFactorization;
+use super::SolverConfig;
+use crate::reorder::ReorderAlgorithm;
+use crate::sparse::{CsrMatrix, PatternKey};
+use crate::util::cache::ShardedCache;
+
+pub use crate::util::cache::{CacheConfig, CacheStats};
+
+/// Cache identity of one solve plan. Build through [`PlanKey::of`] so
+/// the keying policy (raw-pattern fingerprint + config fingerprint)
+/// lives in one place.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// Fingerprint of the *raw* matrix pattern.
+    pub pattern: PatternKey,
+    pub algorithm: ReorderAlgorithm,
+    /// Reorder seed (the permutation is a function of it).
+    pub seed: u64,
+    /// [`SolverConfig::plan_fingerprint`] of the planning knobs.
+    pub config: u64,
+}
+
+impl PlanKey {
+    /// The canonical key for planning `a` under `algorithm` with `cfg`.
+    pub fn of(
+        a: &CsrMatrix,
+        algorithm: ReorderAlgorithm,
+        seed: u64,
+        cfg: &SolverConfig,
+    ) -> PlanKey {
+        PlanKey {
+            pattern: PatternKey::of(a),
+            algorithm,
+            seed,
+            config: cfg.plan_fingerprint(),
+        }
+    }
+}
+
+/// Bounded, sharded plan cache (a [`ShardedCache`] instantiation — see
+/// the module docs for keying, `util::cache` for mechanics).
+pub struct PlanCache {
+    inner: ShardedCache<PlanKey, SymbolicFactorization>,
+}
+
+impl PlanCache {
+    pub fn new(cfg: CacheConfig) -> Self {
+        PlanCache {
+            inner: ShardedCache::new(cfg),
+        }
+    }
+
+    /// Default sizing: plans are O(fill)-sized artifacts, so the bound
+    /// is an order of magnitude tighter than the ordering cache's.
+    pub fn default_config() -> CacheConfig {
+        CacheConfig {
+            capacity: 64,
+            shards: 8,
+        }
+    }
+
+    pub fn with_default_config() -> Self {
+        Self::new(Self::default_config())
+    }
+
+    /// Effective capacity (`shards * per_shard`, ≤ the configured one).
+    pub fn capacity(&self) -> usize {
+        self.inner.capacity()
+    }
+
+    /// Resident entries (sums shard sizes; momentary under concurrency).
+    pub fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.is_empty()
+    }
+
+    /// Counted lookup: `Some` stamps recency and counts a hit, `None`
+    /// counts a miss.
+    pub fn get(&self, key: &PlanKey) -> Option<Arc<SymbolicFactorization>> {
+        self.inner.get(key)
+    }
+
+    /// Idempotent insert (see `util::cache`): the resident entry wins.
+    pub fn insert(
+        &self,
+        key: PlanKey,
+        plan: Arc<SymbolicFactorization>,
+    ) -> Arc<SymbolicFactorization> {
+        self.inner.insert(key, plan)
+    }
+
+    /// One counted lookup; on miss, plan *outside* the shard lock and
+    /// insert. Racing misses both compute identical plans (purity) and
+    /// converge on the first-inserted `Arc`.
+    pub fn get_or_compute(
+        &self,
+        key: PlanKey,
+        compute: impl FnOnce() -> SymbolicFactorization,
+    ) -> (Arc<SymbolicFactorization>, bool) {
+        self.inner.get_or_compute(key, compute)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.inner.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reorder::Permutation;
+    use crate::solver::plan::{factorize_with_plan, plan_solve, NumericWorkspace};
+
+    fn mesh(nx: usize, ny: usize) -> CsrMatrix {
+        crate::collection::generators::grid2d(nx, ny)
+    }
+
+    #[test]
+    fn keys_separate_pattern_algorithm_seed_and_config() {
+        let (a, b) = (mesh(5, 5), mesh(5, 6));
+        let cfg = SolverConfig::default();
+        let other_cfg = SolverConfig {
+            diag_boost: 3.0,
+            ..SolverConfig::default()
+        };
+        let base = PlanKey::of(&a, ReorderAlgorithm::Amd, 1, &cfg);
+        assert_eq!(base, PlanKey::of(&a, ReorderAlgorithm::Amd, 1, &cfg));
+        assert_ne!(base, PlanKey::of(&b, ReorderAlgorithm::Amd, 1, &cfg));
+        assert_ne!(base, PlanKey::of(&a, ReorderAlgorithm::Rcm, 1, &cfg));
+        assert_ne!(base, PlanKey::of(&a, ReorderAlgorithm::Amd, 2, &cfg));
+        assert_ne!(base, PlanKey::of(&a, ReorderAlgorithm::Amd, 1, &other_cfg));
+    }
+
+    #[test]
+    fn cached_plan_replays_for_structurally_equal_matrices() {
+        let a = mesh(7, 6);
+        let cfg = SolverConfig::default();
+        let cache = PlanCache::with_default_config();
+        let key = PlanKey::of(&a, ReorderAlgorithm::Natural, 0, &cfg);
+        let n = a.nrows;
+        let (plan, hit) = cache.get_or_compute(key, || {
+            plan_solve(&a, std::sync::Arc::new(Permutation::identity(n)), &cfg)
+        });
+        assert!(!hit);
+
+        // same pattern, different values: key matches, plan is reused
+        let mut other = a.clone();
+        for v in other.data.iter_mut() {
+            *v *= 2.5;
+        }
+        let key2 = PlanKey::of(&other, ReorderAlgorithm::Natural, 0, &cfg);
+        assert_eq!(key, key2);
+        let (plan2, hit2) = cache.get_or_compute(key2, || unreachable!("must hit"));
+        assert!(hit2);
+        assert!(Arc::ptr_eq(&plan, &plan2));
+        let mut ws = NumericWorkspace::new();
+        let f = factorize_with_plan(&other, &plan2, &mut ws).unwrap();
+        assert_eq!(f.fill(), plan.cost.fill);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+    }
+}

@@ -22,6 +22,13 @@
 //! `fill()` is identical to the scalar path, and the parallel schedule
 //! performs bit-identical arithmetic to the sequential one (same fronts,
 //! same assembly order — threads only change *when* disjoint fronts run).
+//!
+//! This file is purely the **numeric** side of the symbolic/numeric
+//! split: the [`SupernodalPlan`] it consumes is pattern-pure and can be
+//! built ad hoc (per solve) or frozen inside a cached
+//! [`crate::solver::SymbolicFactorization`] and replayed through
+//! [`factorize_supernodal_gathered`] against a stream of value buffers.
+//! Inputs must be SPD-like (no pivoting — see [`super::numeric`]).
 
 use super::etree::NONE;
 use super::kernels;
@@ -194,11 +201,10 @@ pub fn factorize_supernodal(
     plan: &SupernodalPlan,
     cfg: &FactorConfig,
 ) -> Result<LdlFactor, FactorError> {
-    let n = a.nrows;
     if a.nrows != a.ncols {
         return Err(FactorError::Shape(format!("{}x{}", a.nrows, a.ncols)));
     }
-    assert_eq!(plan.n, n, "plan built for a different matrix");
+    assert_eq!(plan.n, a.nrows, "plan built for a different matrix");
     assert_eq!(
         plan.b_from.len(),
         a.nnz(),
@@ -207,6 +213,27 @@ pub fn factorize_supernodal(
     // refresh the postordered values through the gather map (the pattern
     // was permuted once, at plan time)
     let bx: Vec<f64> = plan.b_from.iter().map(|&src| a.data[src]).collect();
+    factorize_supernodal_gathered(&bx, plan, cfg)
+}
+
+/// [`factorize_supernodal`] on values already in the plan's postordered
+/// layout (`bx[k]` is the value of the postordered matrix `B`'s slot
+/// `k`). This is the numeric-only entry the plan/execute split
+/// ([`crate::solver::plan`]) uses: the cached
+/// [`crate::solver::SymbolicFactorization`] refreshes request values
+/// straight into `B` layout in a pooled buffer, skipping both the
+/// symmetrization and the per-call gather above.
+pub fn factorize_supernodal_gathered(
+    bx: &[f64],
+    plan: &SupernodalPlan,
+    cfg: &FactorConfig,
+) -> Result<LdlFactor, FactorError> {
+    let n = plan.n;
+    assert_eq!(
+        bx.len(),
+        plan.b_from.len(),
+        "value buffer does not match the plan's pattern"
+    );
     let ns = plan.n_supernodes();
     let nnz_l = plan.lp[n];
     let mut lx = vec![0f64; nnz_l];

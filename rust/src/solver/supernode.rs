@@ -25,6 +25,12 @@
 //! 5. **The assembly tree + a parallel schedule.** Per-supernode flop
 //!    estimates, subtree aggregates, and a split of the tree into
 //!    independent subtree tasks plus a sequential "top" set.
+//!
+//! Like all of the solver's symbolic side, a [`SupernodalPlan`] is a
+//! pure function of the pattern — build it once per `(pattern, ordering,
+//! config)` and replay it against any values (the plan/execute split in
+//! [`crate::solver::plan`] caches exactly this object, together with the
+//! scalar symbolic and a value-refresh gather).
 
 use super::etree::{first_descendants, postorder, SymbolicCost, NONE};
 use super::numeric::{self, Symbolic};
@@ -71,6 +77,31 @@ impl Default for FactorConfig {
             workers: 0,
             parallel_flop_min: 5e6,
         }
+    }
+}
+
+impl FactorConfig {
+    /// 64-bit fingerprint over every knob, mixed into the
+    /// [`crate::solver::plan_cache::PlanKey`]: two configs with different
+    /// fingerprints may plan differently (mode selects the symbolic
+    /// structure, `relax_*` shape the amalgamation), so they must not
+    /// share a cached [`crate::solver::SymbolicFactorization`]. The
+    /// purely-numeric knobs (`panel_block`, `workers`,
+    /// `parallel_flop_min`) are folded in too — a redundant cache entry
+    /// is cheaper than reasoning about which knobs are plan-neutral.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut mix = |x: u64| {
+            h ^= x;
+            h = h.wrapping_mul(0x100000001b3).rotate_left(7);
+        };
+        mix(self.mode as u64);
+        mix(self.relax_ratio.to_bits());
+        mix(self.relax_max_width as u64);
+        mix(self.panel_block as u64);
+        mix(self.workers as u64);
+        mix(self.parallel_flop_min.to_bits());
+        h
     }
 }
 

@@ -1,0 +1,290 @@
+//! Generic bounded sharded LRU-ish cache — the keyed-artifact memoization
+//! machinery behind [`crate::reorder::cache::OrderingCache`] and
+//! [`crate::solver::plan_cache::PlanCache`].
+//!
+//! Both serving-path caches memoize *pure functions of their key*: an
+//! ordering is a function of `(pattern, algorithm, seed)`, a symbolic
+//! factorization plan of `(pattern, algorithm, seed, solver knobs)`. That
+//! purity is what makes the design this simple:
+//!
+//! * **No invalidation.** Entries are immutable facts about a key; they
+//!   are only ever dropped for capacity, never because they went stale.
+//! * **Sharding.** Entries spread over `shards` independently-locked
+//!   maps selected by the key's hash, so concurrent requests for
+//!   different keys rarely contend on one mutex.
+//! * **Eviction.** Bounded, LRU-ish: every hit stamps the entry with a
+//!   global monotone tick; a full shard drops its stalest entry. Shard
+//!   capacities are floored so `shards * per_shard <= capacity` — total
+//!   residency never exceeds the configured bound.
+//! * **Racing misses are benign.** [`ShardedCache::get_or_compute`] runs
+//!   the compute *outside* the shard lock; two threads missing the same
+//!   key both compute (identical values, by purity), the first insert
+//!   wins, and the loser adopts the resident [`Arc`] — every caller
+//!   observes one canonical value.
+//! * **Counters.** Lock-free hit/miss/insert/evict atomics snapshotted
+//!   by [`ShardedCache::stats`]; `hits + misses == lookups` always.
+//!
+//! Values are handed out as `Arc<V>` so a hit is one atomic increment
+//! regardless of how large the cached artifact is.
+
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Sizing knobs for a [`ShardedCache`].
+#[derive(Clone, Copy, Debug)]
+pub struct CacheConfig {
+    /// Maximum resident entries across all shards.
+    pub capacity: usize,
+    /// Number of independently-locked shards (clamped to `capacity`).
+    pub shards: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            capacity: 256,
+            shards: 8,
+        }
+    }
+}
+
+/// Counter snapshot (one consistent read of the atomics).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub inserts: u64,
+    pub evictions: u64,
+    /// Resident entries at snapshot time.
+    pub entries: usize,
+}
+
+impl CacheStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let l = self.lookups();
+        if l == 0 {
+            0.0
+        } else {
+            self.hits as f64 / l as f64
+        }
+    }
+}
+
+struct Entry<V> {
+    value: Arc<V>,
+    /// Global tick of the last hit/insert (the LRU-ish recency stamp).
+    last_used: u64,
+}
+
+/// Bounded, sharded `K → Arc<V>` map with LRU-ish eviction and lock-free
+/// counters. See the module docs for the design; see
+/// `reorder::cache::OrderingCache` and `solver::plan_cache::PlanCache`
+/// for the two serving-path instantiations.
+pub struct ShardedCache<K, V> {
+    shards: Vec<Mutex<HashMap<K, Entry<V>>>>,
+    per_shard: usize,
+    tick: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    inserts: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl<K: Hash + Eq + Copy, V> ShardedCache<K, V> {
+    pub fn new(cfg: CacheConfig) -> Self {
+        let capacity = cfg.capacity.max(1);
+        let shards = cfg.shards.clamp(1, capacity);
+        // floor division: shards * per_shard <= capacity, so the bound
+        // the eviction tests assert holds exactly
+        let per_shard = (capacity / shards).max(1);
+        ShardedCache {
+            shards: (0..shards).map(|_| Mutex::new(HashMap::new())).collect(),
+            per_shard,
+            tick: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            inserts: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Effective capacity (`shards * per_shard`, ≤ the configured one).
+    pub fn capacity(&self) -> usize {
+        self.shards.len() * self.per_shard
+    }
+
+    /// Resident entries (sums shard sizes; momentary under concurrency).
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().expect("cache shard poisoned").len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn shard(&self, key: &K) -> &Mutex<HashMap<K, Entry<V>>> {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        let i = (h.finish() % self.shards.len() as u64) as usize;
+        &self.shards[i]
+    }
+
+    fn next_tick(&self) -> u64 {
+        self.tick.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Counted lookup: `Some` stamps recency and counts a hit, `None`
+    /// counts a miss.
+    pub fn get(&self, key: &K) -> Option<Arc<V>> {
+        let mut shard = self.shard(key).lock().expect("cache shard poisoned");
+        match shard.get_mut(key) {
+            Some(e) => {
+                e.last_used = self.next_tick();
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(e.value.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (idempotent: an existing entry for `key` is kept — the
+    /// value is a pure function of the key, so both are identical and
+    /// keeping the resident one preserves its recency). Evicts the
+    /// stalest entry of the target shard when it is full.
+    pub fn insert(&self, key: K, value: Arc<V>) -> Arc<V> {
+        let mut shard = self.shard(&key).lock().expect("cache shard poisoned");
+        if let Some(e) = shard.get(&key) {
+            return e.value.clone();
+        }
+        if shard.len() >= self.per_shard {
+            if let Some(stale) = shard
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+            {
+                shard.remove(&stale);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let tick = self.next_tick();
+        shard.insert(
+            key,
+            Entry {
+                value: value.clone(),
+                last_used: tick,
+            },
+        );
+        self.inserts.fetch_add(1, Ordering::Relaxed);
+        value
+    }
+
+    /// The serving primitive: one counted lookup; on miss, compute
+    /// *outside* the shard lock and insert. Returns the value and
+    /// whether this call was a hit.
+    pub fn get_or_compute(&self, key: K, compute: impl FnOnce() -> V) -> (Arc<V>, bool) {
+        if let Some(v) = self.get(&key) {
+            return (v, true);
+        }
+        let value = self.insert(key, Arc::new(compute()));
+        (value, false)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            inserts: self.inserts.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: self.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_then_hit_round_trip() {
+        let cache: ShardedCache<u64, String> = ShardedCache::new(CacheConfig::default());
+        let (v1, hit1) = cache.get_or_compute(7, || "seven".to_string());
+        assert!(!hit1);
+        let (v2, hit2) = cache.get_or_compute(7, || panic!("must not recompute"));
+        assert!(hit2);
+        assert!(Arc::ptr_eq(&v1, &v2));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.inserts), (1, 1, 1));
+        assert_eq!(s.lookups(), 2);
+        assert_eq!(s.entries, 1);
+    }
+
+    #[test]
+    fn capacity_is_never_exceeded_and_evictions_count() {
+        let cache: ShardedCache<u64, u64> = ShardedCache::new(CacheConfig {
+            capacity: 6,
+            shards: 3,
+        });
+        assert!(cache.capacity() <= 6);
+        for i in 0..50u64 {
+            cache.insert(i, Arc::new(i * 2));
+            assert!(cache.len() <= cache.capacity(), "overflow at insert {i}");
+        }
+        let s = cache.stats();
+        assert!(s.evictions > 0);
+        assert_eq!(s.inserts, 50);
+        assert_eq!(s.entries, cache.len());
+    }
+
+    #[test]
+    fn lru_ish_keeps_the_recently_used_entry() {
+        // single shard, capacity 2: touch A, insert C -> B (stale) evicted
+        let cache: ShardedCache<u8, u8> = ShardedCache::new(CacheConfig {
+            capacity: 2,
+            shards: 1,
+        });
+        cache.insert(b'a', Arc::new(1));
+        cache.insert(b'b', Arc::new(2));
+        assert!(cache.get(&b'a').is_some()); // A is now most recent
+        cache.insert(b'c', Arc::new(3));
+        assert!(cache.get(&b'a').is_some(), "recently-used entry evicted");
+        assert!(cache.get(&b'b').is_none(), "stale entry survived");
+        assert!(cache.get(&b'c').is_some());
+    }
+
+    #[test]
+    fn insert_is_idempotent() {
+        let cache: ShardedCache<u32, u32> = ShardedCache::new(CacheConfig::default());
+        let first = cache.insert(9, Arc::new(1));
+        let second = cache.insert(9, Arc::new(2));
+        assert!(Arc::ptr_eq(&first, &second));
+        assert_eq!(*second, 1, "resident value must win");
+        assert_eq!(cache.stats().inserts, 1);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn degenerate_configs_are_clamped() {
+        let cache: ShardedCache<u8, u8> = ShardedCache::new(CacheConfig {
+            capacity: 0,
+            shards: 0,
+        });
+        assert_eq!(cache.capacity(), 1);
+        let tiny: ShardedCache<u8, u8> = ShardedCache::new(CacheConfig {
+            capacity: 2,
+            shards: 16,
+        });
+        assert!(tiny.capacity() <= 2);
+    }
+}

@@ -6,9 +6,11 @@
 //! JSON reader/writer ([`json`]), descriptive statistics ([`stats`]), a
 //! fixed-width table printer ([`table`]), a micro-benchmark harness used
 //! by `cargo bench` ([`bench`]), a scoped thread-pool `parallel_map`
-//! ([`pool`]), and randomized property-test helpers ([`prop`]).
+//! ([`pool`]), a generic bounded sharded cache ([`cache`]), and
+//! randomized property-test helpers ([`prop`]).
 
 pub mod bench;
+pub mod cache;
 pub mod json;
 pub mod pool;
 pub mod prop;

@@ -83,6 +83,46 @@ impl<T> ObjectPool<T> {
             idle: self.idle.lock().expect("pool poisoned").len(),
         }
     }
+
+    /// [`Self::checkout_with`] wrapped in an RAII guard that parks the
+    /// object back on drop — panic unwind included, so a failing request
+    /// never leaks its scratch (the same checkout discipline
+    /// `reorder::WorkspacePool` establishes).
+    pub fn checkout_guard(&self, make: impl FnOnce() -> T) -> PooledObject<'_, T> {
+        PooledObject {
+            pool: self,
+            obj: Some(self.checkout_with(make)),
+        }
+    }
+}
+
+/// RAII checkout from an [`ObjectPool`]; derefs to `T` and returns the
+/// object to the pool on drop.
+pub struct PooledObject<'a, T> {
+    pool: &'a ObjectPool<T>,
+    obj: Option<T>,
+}
+
+impl<T> std::ops::Deref for PooledObject<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        self.obj.as_ref().expect("object present until drop")
+    }
+}
+
+impl<T> std::ops::DerefMut for PooledObject<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.obj.as_mut().expect("object present until drop")
+    }
+}
+
+impl<T> Drop for PooledObject<'_, T> {
+    fn drop(&mut self) {
+        if let Some(obj) = self.obj.take() {
+            self.pool.give_back(obj);
+        }
+    }
 }
 
 /// Map `f` over `items` in parallel, preserving order of results.
@@ -329,6 +369,23 @@ mod tests {
         assert_eq!(b, vec![42]); // reuse hands back the same object, as-is
         let s = pool.stats();
         assert_eq!((s.checkouts, s.creates, s.reuses), (2, 1, 1));
+    }
+
+    #[test]
+    fn object_pool_guard_returns_on_drop_and_panic() {
+        let pool: ObjectPool<Vec<u8>> = ObjectPool::new(2);
+        {
+            let mut g = pool.checkout_guard(Vec::new);
+            g.push(1); // DerefMut
+        }
+        assert_eq!(pool.stats().idle, 1);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = pool.checkout_guard(Vec::new);
+            panic!("request failed");
+        }));
+        assert!(r.is_err());
+        assert_eq!(pool.stats().idle, 1, "object leaked on unwind");
+        assert_eq!(pool.stats().reuses, 1);
     }
 
     #[test]

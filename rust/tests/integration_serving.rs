@@ -3,8 +3,9 @@
 //!
 //! Repeated identical requests must produce identical predictions,
 //! identical orderings, and identical solver fill; warm-path stats must
-//! show cache hits and workspace reuse. No AOT artifacts are required —
-//! this suite always runs.
+//! show **plan-cache** hits (zero symbolic work on repeats) and
+//! workspace reuse. No AOT artifacts are required — this suite always
+//! runs.
 
 use std::sync::Arc;
 
@@ -51,7 +52,7 @@ fn repeated_requests_are_deterministic_and_warm() {
         .map(|nm| engine.serve(&nm.matrix).unwrap())
         .collect();
     for (nm, r) in workload.iter().zip(&cold) {
-        assert!(!r.cache_hit, "{}: first request hit the cache", nm.name);
+        assert!(!r.plan_hit, "{}: first request hit the plan cache", nm.name);
         assert!(
             ReorderAlgorithm::LABEL_SET.contains(&r.algorithm),
             "{}: predicted {:?} outside the label set",
@@ -63,11 +64,12 @@ fn repeated_requests_are_deterministic_and_warm() {
     }
 
     // rounds 2..4: identical requests — identical predictions,
-    // orderings, and fill, now served warm
+    // orderings, and fill, now served warm off the plan cache with
+    // zero symbolic work
     for _ in 0..3 {
         for (nm, first) in workload.iter().zip(&cold) {
             let r = engine.serve(&nm.matrix).unwrap();
-            assert!(r.cache_hit, "{}: repeat request missed", nm.name);
+            assert!(r.plan_hit, "{}: repeat request missed", nm.name);
             assert_eq!(r.algorithm, first.algorithm, "{}: prediction drifted", nm.name);
             assert_eq!(
                 r.permutation, first.permutation,
@@ -76,22 +78,35 @@ fn repeated_requests_are_deterministic_and_warm() {
             );
             assert_eq!(r.solve.fill, first.solve.fill, "{}: fill drifted", nm.name);
             assert_eq!(r.solve.flops, first.solve.flops, "{}", nm.name);
+            assert_eq!(
+                r.solve.analyze_s, 0.0,
+                "{}: warm request paid symbolic time",
+                nm.name
+            );
         }
     }
 
     let s = engine.stats();
     assert_eq!(s.requests, 4 * n_requests as u64);
     assert_eq!(s.service.requests, s.requests);
-    // warm path: hits for every repeat, misses only for the cold round
+    // plan cache: hits for every repeat, misses only for the cold round
+    assert!(s.plans.hits > 0, "warm serving must hit the plan cache");
+    assert_eq!(s.plans.misses, n_requests as u64);
+    assert_eq!(s.plans.hits, 3 * n_requests as u64);
+    assert_eq!(s.plans.lookups(), s.plans.hits + s.plans.misses);
+    // the ordering cache sits under the plan cache: consulted exactly
+    // once per plan miss, never on the warm path
+    assert_eq!(s.cache.lookups(), s.plans.misses);
     assert_eq!(s.cache.misses, n_requests as u64);
-    assert_eq!(s.cache.hits, 3 * n_requests as u64);
-    assert_eq!(s.cache.lookups(), s.cache.hits + s.cache.misses);
-    assert!(s.cache.hits > 0);
-    // workspace reuse: only cache misses check scratch out, and the
-    // single-threaded request stream reuses one warm workspace
+    // workspace reuse: only ordering-cache misses check scratch out, and
+    // the single-threaded request stream reuses one warm workspace
     assert_eq!(s.workspaces.checkouts, s.cache.misses);
     assert_eq!(s.workspaces.creates, 1, "workspace not reused");
     assert!(s.workspaces.reuses >= s.workspaces.checkouts - 1);
+    // numeric scratch: one checkout per request, reused across the
+    // single-threaded stream
+    assert_eq!(s.numeric.checkouts, s.requests);
+    assert_eq!(s.numeric.creates, 1, "numeric scratch not reused");
     engine.shutdown();
 }
 
@@ -110,6 +125,27 @@ fn served_orderings_match_offline_computes() {
             "{}",
             nm.name
         );
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn warm_requests_solve_changed_values_through_the_cached_plan() {
+    // the factorization-in-loop shape: one pattern, a stream of
+    // numerically different matrices — every request after the first is
+    // a plan hit and still solves *its own* values accurately
+    let engine = ServingEngine::spawn(trained_backend(), ServingConfig::default()).unwrap();
+    let nm = &generate_mini_collection(19, 1)[0];
+    let cold = engine.serve(&nm.matrix).unwrap();
+    for step in 1..4 {
+        let mut m = nm.matrix.clone();
+        for v in m.data.iter_mut() {
+            *v *= 1.0 + step as f64 * 0.5;
+        }
+        let r = engine.serve(&m).unwrap();
+        assert!(r.plan_hit, "step {step}: structural repeat missed");
+        assert_eq!(r.solve.fill, cold.solve.fill, "step {step}");
+        assert!(r.solve.residual < 1e-6, "step {step}: residual {}", r.solve.residual);
     }
     engine.shutdown();
 }
@@ -157,10 +193,11 @@ fn concurrent_serving_is_deterministic() {
     let s = engine.stats();
     let total = (workload.len() * 7) as u64; // 1 baseline + 6 threads
     assert_eq!(s.requests, total);
-    assert_eq!(s.cache.lookups(), total);
-    // the single-threaded baseline round populated every key before the
+    assert_eq!(s.plans.lookups(), total);
+    // the single-threaded baseline round populated every plan before the
     // clients started, so each pattern misses exactly once and every
     // concurrent request is a hit
-    assert_eq!(s.cache.misses, workload.len() as u64);
-    assert_eq!(s.cache.hits, total - workload.len() as u64);
+    assert_eq!(s.plans.misses, workload.len() as u64);
+    assert_eq!(s.plans.hits, total - workload.len() as u64);
+    assert_eq!(s.cache.lookups(), s.plans.misses);
 }

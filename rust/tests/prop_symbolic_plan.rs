@@ -1,0 +1,210 @@
+//! Property + concurrency tests for the symbolic-plan split.
+//!
+//! The contract under test: factorizing through a frozen (and cached)
+//! `SymbolicFactorization` is **bit-identical** to the from-scratch
+//! path (`prepare` → permute → `analyze_with` → `factorize_with`) —
+//! factor values, diagonal, pattern, fill, and solve results all match
+//! exactly — across adversarial patterns (duplicate entries, empty
+//! rows, dense rows, disconnected components), all 7 paper algorithms,
+//! all three factor modes ({Scalar, Supernodal, SupernodalParallel}),
+//! and under concurrent plan-cache hammering from `util::pool` workers.
+
+use std::sync::Arc;
+
+use smr::reorder::ReorderAlgorithm;
+use smr::solver::{
+    analyze_with, factorize_with, factorize_with_plan, plan_solve, solve_ordered, solve_with_plan,
+    FactorConfig, FactorMode, LdlFactor, NumericWorkspace, PlanCache, PlanKey, SolverConfig,
+};
+use smr::sparse::{CooMatrix, CsrMatrix};
+use smr::util::pool::parallel_map;
+use smr::util::prop;
+use smr::util::rng::Rng;
+
+/// An adversarial random pattern: several disconnected blocks, each with
+/// random directed entries (one-sided, two-sided, and duplicate
+/// storage), a chance of a dense row and of entirely untouched (empty)
+/// rows, plus a partial diagonal so `prepare` has to insert structural
+/// diagonal entries.
+fn adversarial_matrix(rng: &mut Rng) -> CsrMatrix {
+    let n_blocks = rng.range(1, 4); // >1 => disconnected components
+    let block = rng.range(3, 20);
+    let n = n_blocks * block;
+    let mut m = CooMatrix::new(n, n);
+    for b in 0..n_blocks {
+        let lo = b * block;
+        for _ in 0..(3 * block) {
+            let i = lo + rng.below(block);
+            let j = lo + rng.below(block);
+            m.push(i, j, rng.range_f64(-2.0, 2.0));
+            if rng.chance(0.3) {
+                m.push(i, j, 1.0); // duplicate entry (summed by to_csr)
+            }
+        }
+        if rng.chance(0.5) {
+            let r = lo + rng.below(block);
+            for c in 0..block {
+                m.push(r, lo + c, 0.5);
+            }
+        }
+        // partial diagonal: only a prefix of the block stores one
+        let touched = rng.range(1, block + 1);
+        for d in 0..touched {
+            m.push(lo + d, lo + d, 4.0);
+        }
+    }
+    m.to_csr()
+}
+
+/// The three factor paths every cross-path property must cover.
+fn all_mode_configs() -> [SolverConfig; 3] {
+    let mode = |mode| SolverConfig {
+        factor: FactorConfig {
+            mode,
+            parallel_flop_min: 0.0, // engage threads even on tiny inputs
+            ..FactorConfig::default()
+        },
+        ..SolverConfig::default()
+    };
+    [
+        mode(FactorMode::Scalar),
+        mode(FactorMode::Supernodal),
+        mode(FactorMode::SupernodalParallel),
+    ]
+}
+
+fn assert_factors_identical(a: &LdlFactor, b: &LdlFactor, ctx: &str) {
+    assert_eq!(a.lp, b.lp, "{ctx}: factor column pointers diverged");
+    assert_eq!(a.li, b.li, "{ctx}: factor pattern diverged");
+    assert_eq!(a.lx, b.lx, "{ctx}: factor values diverged");
+    assert_eq!(a.d, b.d, "{ctx}: pivots diverged");
+    assert_eq!(a.fill(), b.fill(), "{ctx}: fill diverged");
+}
+
+/// From-scratch reference factor for `(raw, algorithm, seed, cfg)`.
+fn scratch_factor(
+    raw: &CsrMatrix,
+    alg: ReorderAlgorithm,
+    seed: u64,
+    cfg: &SolverConfig,
+) -> LdlFactor {
+    let spd = smr::solver::prepare(raw, cfg);
+    let perm = alg.compute(&spd, seed);
+    let pa = perm.apply(&spd);
+    let an = analyze_with(&pa, &cfg.factor);
+    factorize_with(&pa, &an, &cfg.factor).expect("prepared matrices factorize")
+}
+
+#[test]
+fn plan_reuse_is_bit_identical_across_algorithms_and_modes() {
+    prop::check("symbolic-plan-bit-identity", 6, |rng| {
+        let raw = adversarial_matrix(rng);
+        let seed = rng.next_u64();
+        for alg in ReorderAlgorithm::PAPER_SET {
+            for cfg in all_mode_configs() {
+                let ctx = format!("{alg} / {:?} (n={})", cfg.factor.mode, raw.nrows);
+                let reference = scratch_factor(&raw, alg, seed, &cfg);
+
+                let spd = smr::solver::prepare(&raw, &cfg);
+                let perm = Arc::new(alg.compute(&spd, seed));
+                let plan = plan_solve(&raw, perm, &cfg);
+                let mut ws = NumericWorkspace::new();
+                // factorize twice through the same plan + workspace:
+                // reuse must be observation-free
+                for round in 0..2 {
+                    let f = factorize_with_plan(&raw, &plan, &mut ws).unwrap();
+                    assert_factors_identical(&reference, &f, &format!("{ctx} round {round}"));
+                }
+
+                // solve results match bitwise too (same factor, same RHS
+                // stream)
+                let mut r = Rng::new(seed ^ 0xB0B);
+                let b: Vec<f64> = (0..raw.nrows).map(|_| r.normal()).collect();
+                let f = factorize_with_plan(&raw, &plan, &mut ws).unwrap();
+                assert_eq!(
+                    reference.solve(&b),
+                    f.solve(&b),
+                    "{ctx}: solve results diverged"
+                );
+
+                // the timed wrappers agree on every symbolic outcome
+                let ordered = solve_ordered(&spd, &plan.perm, &cfg).unwrap();
+                let planned = solve_with_plan(&raw, &plan, &cfg, &mut ws).unwrap();
+                assert_eq!(ordered.fill, planned.fill, "{ctx}");
+                assert_eq!(ordered.flops, planned.flops, "{ctx}");
+                assert_eq!(ordered.max_col, planned.max_col, "{ctx}");
+                assert_eq!(ordered.estimated, planned.estimated, "{ctx}");
+                assert!(
+                    planned.residual < 1e-6 * (1.0 + raw.nrows as f64),
+                    "{ctx}: residual {}",
+                    planned.residual
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn capped_plans_estimate_identically() {
+    let mut rng = Rng::new(0xCA99);
+    let raw = adversarial_matrix(&mut rng);
+    let cfg = SolverConfig {
+        flop_cap: 1.0, // force the estimate path
+        ..SolverConfig::default()
+    };
+    let spd = smr::solver::prepare(&raw, &cfg);
+    for alg in ReorderAlgorithm::PAPER_SET {
+        let perm = Arc::new(alg.compute(&spd, 9));
+        let reference = solve_ordered(&spd, &perm, &cfg).unwrap();
+        let plan = plan_solve(&raw, perm, &cfg);
+        assert!(plan.capped, "{alg}");
+        let mut ws = NumericWorkspace::new();
+        let r = solve_with_plan(&raw, &plan, &cfg, &mut ws).unwrap();
+        assert!(r.estimated && reference.estimated, "{alg}");
+        assert_eq!(r.fill, reference.fill, "{alg}");
+        assert_eq!(r.flops, reference.flops, "{alg}");
+        assert_eq!(r.residual, 0.0, "{alg}");
+    }
+}
+
+#[test]
+fn concurrent_plan_cache_hammering_stays_bit_identical() {
+    // a small cache under concurrent mixed-key load: every returned
+    // plan must factor bit-identically to a fresh from-scratch compute,
+    // and the counters must stay exact
+    let mut rng = Rng::new(0x5EED_CAFE);
+    let matrices: Vec<CsrMatrix> = (0..4).map(|_| adversarial_matrix(&mut rng)).collect();
+    let algorithms = [
+        ReorderAlgorithm::Rcm,
+        ReorderAlgorithm::Amd,
+        ReorderAlgorithm::Nd,
+    ];
+    let cfg = SolverConfig::default();
+    let seed = 0xDA7A;
+    let cache = PlanCache::with_default_config();
+
+    // 96 requests over 12 distinct (matrix, algorithm) keys from 8 workers
+    let jobs: Vec<usize> = (0..96).collect();
+    parallel_map(&jobs, 8, |_, &j| {
+        let raw = &matrices[j % matrices.len()];
+        let alg = algorithms[(j / matrices.len()) % algorithms.len()];
+        let key = PlanKey::of(raw, alg, seed, &cfg);
+        let (plan, _) = cache.get_or_compute(key, || {
+            let spd = smr::solver::prepare(raw, &cfg);
+            let perm = Arc::new(alg.compute(&spd, seed));
+            plan_solve(raw, perm, &cfg)
+        });
+        let mut ws = NumericWorkspace::new();
+        let f = factorize_with_plan(raw, &plan, &mut ws).unwrap();
+        let reference = scratch_factor(raw, alg, seed, &cfg);
+        assert_factors_identical(&reference, &f, &format!("job {j}"));
+    });
+
+    let s = cache.stats();
+    assert_eq!(s.lookups(), 96);
+    assert_eq!(s.hits + s.misses, 96);
+    let distinct = (matrices.len() * algorithms.len()) as u64;
+    assert!(s.misses >= distinct, "every distinct key misses at least once");
+    assert!(s.hits > 0, "repeat keys must hit");
+    assert!(s.entries <= cache.capacity());
+}
