@@ -24,11 +24,22 @@ cargo test -q --test prop_ordering_cache
 cargo test -q --test prop_symbolic_plan
 cargo test -q --test integration_serving
 
-# Bench-artifact schema gate: if the serving bench has been run, its
-# JSON must parse and carry the cold/warm + cache-counter schema
-# (validated via util/json.rs by examples/check_bench.rs).
-if [[ -f BENCH_serving.json ]]; then
-  cargo run --release --quiet --example check_bench -- BENCH_serving.json
+# The parallel_dag stress tests (counters drain, no task before its
+# children, panic safety returns pooled arenas) back the supernodal
+# solver's pipelined schedule — run them by name so a filter change
+# can't silently drop them.
+cargo test -q --lib util::pool::tests::dag
+
+# Bench-artifact schema gates: any bench JSON that has been produced
+# must parse and carry its schema (cold/warm + cache + arena counters
+# for serving; peak_front_bytes/allocs + replay lanes for the solver),
+# validated via util/json.rs by examples/check_bench.rs.
+bench_artifacts=()
+for f in BENCH_serving.json BENCH_solver.json; do
+  [[ -f "$f" ]] && bench_artifacts+=("$f")
+done
+if [[ ${#bench_artifacts[@]} -gt 0 ]]; then
+  cargo run --release --quiet --example check_bench -- "${bench_artifacts[@]}"
 fi
 
 if [[ "${CI_TIER2:-0}" == "1" || "${1:-}" == "--tier2" ]]; then

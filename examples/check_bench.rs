@@ -4,10 +4,14 @@
 //!
 //! Every argument must parse as a bench artifact: a JSON object with a
 //! non-empty `results` array of records. For `bench_serving` artifacts
-//! the serving schema is enforced too: per-record cold/warm latencies
-//! and top-level cache hit/miss/evict counters. Exits non-zero (listing
-//! every violation) on malformed input, so a bench that wrote garbage
-//! fails CI instead of silently polluting the perf trajectory.
+//! the serving schema is enforced too: per-record cold/warm latencies,
+//! the `warm_alloc_free` arena flag, and top-level cache hit/miss/evict
+//! plus front-arena counters. For `bench_solver` artifacts every record
+//! must carry the `peak_front_bytes` / `allocs` columns and the replay
+//! lanes (`planned_numeric`, `arena_numeric`, `pipelined`) must all be
+//! present. Exits non-zero (listing every violation) on malformed
+//! input, so a bench that wrote garbage fails CI instead of silently
+//! polluting the perf trajectory.
 
 use smr::util::json::{self, Json};
 
@@ -16,6 +20,12 @@ fn check_num(obj: &Json, key: &str, errs: &mut Vec<String>, ctx: &str) {
         Some(v) if v.is_finite() => {}
         Some(v) => errs.push(format!("{ctx}: `{key}` is not finite ({v})")),
         None => errs.push(format!("{ctx}: missing numeric `{key}`")),
+    }
+}
+
+fn check_bool(obj: &Json, key: &str, errs: &mut Vec<String>, ctx: &str) {
+    if obj.get(key).and_then(|v| v.as_bool()).is_none() {
+        errs.push(format!("{ctx}: missing boolean `{key}`"));
     }
 }
 
@@ -41,6 +51,34 @@ fn check_file(path: &str) -> Vec<String> {
         }
     }
 
+    // solver-specific schema: arena columns on every record, and the
+    // three numeric-replay lanes all present
+    if v.get("bench").and_then(|b| b.as_str()) == Some("bench_solver") {
+        let mut lanes: Vec<&str> = Vec::new();
+        for (i, rec) in results.iter().enumerate() {
+            let ctx = format!("{path}: results[{i}]");
+            for key in ["n", "nnz", "wall_s", "peak_front_bytes", "allocs"] {
+                check_num(rec, key, &mut errs, &ctx);
+            }
+            if let Some(mode) = rec.get("mode").and_then(|m| m.as_str()) {
+                lanes.push(mode);
+            }
+        }
+        for lane in ["planned_numeric", "arena_numeric", "pipelined"] {
+            if !lanes.contains(&lane) {
+                errs.push(format!("{path}: missing `{lane}` lane in results"));
+            }
+        }
+        match v.get("fronts") {
+            Some(fr) => {
+                for key in ["checkouts", "creates", "reuses", "grows"] {
+                    check_num(fr, key, &mut errs, &format!("{path}: fronts"));
+                }
+            }
+            None => errs.push(format!("{path}: missing `fronts` object")),
+        }
+    }
+
     // serving-specific schema
     if v.get("bench").and_then(|b| b.as_str()) == Some("bench_serving") {
         for (i, rec) in results.iter().enumerate() {
@@ -48,6 +86,15 @@ fn check_file(path: &str) -> Vec<String> {
             for key in ["n", "nnz", "cold_s", "warm_s", "speedup", "numeric_only_s"] {
                 check_num(rec, key, &mut errs, &ctx);
             }
+            check_bool(rec, "warm_alloc_free", &mut errs, &ctx);
+        }
+        match v.get("fronts") {
+            Some(fr) => {
+                for key in ["checkouts", "creates", "reuses", "grows"] {
+                    check_num(fr, key, &mut errs, &format!("{path}: fronts"));
+                }
+            }
+            None => errs.push(format!("{path}: missing `fronts` object")),
         }
         // symbolic-plan cache counters (the warm path's cache layer)
         match v.get("plans") {

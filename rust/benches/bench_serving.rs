@@ -75,7 +75,11 @@ fn main() {
         // Warm: steady-state repeats of the identical request. Every
         // one must replay the cached plan (numeric-only); the
         // numeric-only column is the min over the same iterations that
-        // produce warm_s, so the two stay noise-consistent.
+        // produce warm_s, so the two stay noise-consistent. The cold
+        // request above already sized the front arena for this pattern,
+        // so the whole warm window must be allocation-free for fronts —
+        // `warm_alloc_free` is the arena grow counter staying flat.
+        let grows_before = smr::solver::arena::grow_events();
         let mut numeric_only_s = f64::INFINITY;
         let mut b = Bencher::coarse();
         let warm = b
@@ -86,12 +90,14 @@ fn main() {
                 r
             })
             .clone();
+        let warm_alloc_free = smr::solver::arena::grow_events() == grows_before;
         println!(
-            "    cold {:.3} ms -> warm {:.3} ms ({:.1}x) | numeric-only {:.3} ms",
+            "    cold {:.3} ms -> warm {:.3} ms ({:.1}x) | numeric-only {:.3} ms | alloc-free {}",
             cold_s * 1e3,
             warm.min_s * 1e3,
             cold_s / warm.min_s.max(1e-12),
             numeric_only_s * 1e3,
+            warm_alloc_free,
         );
 
         report.push(json::obj(vec![
@@ -102,6 +108,7 @@ fn main() {
             ("warm_s", json::num(warm.min_s)),
             ("speedup", json::num(cold_s / warm.min_s.max(1e-12))),
             ("numeric_only_s", json::num(numeric_only_s)),
+            ("warm_alloc_free", json::b(warm_alloc_free)),
         ]));
     }
 
@@ -165,6 +172,26 @@ fn main() {
             ("checkouts", json::num(stats.numeric.checkouts as f64)),
             ("creates", json::num(stats.numeric.creates as f64)),
             ("reuses", json::num(stats.numeric.reuses as f64)),
+        ]),
+    );
+    println!(
+        "front arenas: {} checkouts / {} creates / {} reuses | {} grow events",
+        stats.fronts.arenas.checkouts,
+        stats.fronts.arenas.creates,
+        stats.fronts.arenas.reuses,
+        stats.fronts.grows,
+    );
+    report.set(
+        "fronts",
+        json::obj(vec![
+            ("checkouts", json::num(stats.fronts.arenas.checkouts as f64)),
+            ("creates", json::num(stats.fronts.arenas.creates as f64)),
+            ("reuses", json::num(stats.fronts.arenas.reuses as f64)),
+            (
+                "boundary_checkouts",
+                json::num(stats.fronts.boundary.checkouts as f64),
+            ),
+            ("grows", json::num(stats.fronts.grows as f64)),
         ]),
     );
     report.set("requests", json::num(stats.requests as f64));

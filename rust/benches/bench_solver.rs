@@ -7,13 +7,22 @@
 //! report it writes a machine-readable `BENCH_solver.json` (override the
 //! path with `BENCH_OUT`) so future PRs can diff the perf trajectory:
 //! one record per (matrix, factor mode) with wall times, flop counts,
-//! and achieved flop rates, plus per-matrix supernodal speedups and a
-//! `planned_numeric` lane (frozen `SymbolicFactorization`, value refresh
-//! + factorize only — the serving warm path's solve cost).
+//! achieved flop rates, the plan's `peak_front_bytes` (the per-worker
+//! arena sizing) and the lane's observed front `allocs` (arena growth
+//! events during the timed loop), plus per-matrix supernodal speedups
+//! and three numeric-replay lanes:
+//!
+//! * `planned_numeric` — frozen `SymbolicFactorization`, value refresh +
+//!   factorize only, measured **cold** (its alloc count includes the
+//!   one-time arena sizing — the price the first request per plan pays);
+//! * `arena_numeric`  — the same sequential replay after warmup: the
+//!   steady-state serving cost, expected `allocs == 0`;
+//! * `pipelined`      — the DAG-pipelined replay (subtree parallelism +
+//!   pipelined top of the tree) after warmup, also `allocs == 0`.
 
 use smr::collection::generators as g;
 use smr::reorder::ReorderAlgorithm;
-use smr::solver::{self, FactorConfig, FactorMode, SolverConfig};
+use smr::solver::{self, arena, FactorConfig, FactorMode, SolverConfig};
 use smr::util::bench::{section, Bencher, JsonReport};
 use smr::util::json;
 use smr::util::pool;
@@ -76,14 +85,17 @@ fn main() {
         for mode in modes {
             let fcfg = mode_cfg(mode);
             let an = solver::analyze_with(&pa, &fcfg);
+            let peak_front_bytes = an.plan.as_ref().map_or(0, |p| p.peak_front_bytes());
             let f = solver::factorize_with(&pa, &an, &fcfg).unwrap();
             assert_eq!(f.fill(), sym.cost.fill, "fill must not depend on mode");
             let label = format!("{name}/factorize/{}", mode_name(mode));
+            let g0 = arena::grow_events();
             let m = b
                 .bench(&label, || {
                     solver::factorize_with(&pa, &an, &fcfg).unwrap()
                 })
                 .clone();
+            let allocs = arena::grow_events() - g0;
             if mode == FactorMode::Scalar {
                 scalar_min = m.min_s;
             }
@@ -99,12 +111,17 @@ fn main() {
                 ("flops", json::num(f.flops)),
                 ("flop_rate", json::num(f.flops / m.min_s.max(1e-12))),
                 ("speedup_vs_scalar", json::num(scalar_min / m.min_s.max(1e-12))),
+                ("peak_front_bytes", json::num(peak_front_bytes as f64)),
+                ("allocs", json::num(allocs as f64)),
             ]));
         }
-        // planned numeric-only path: the symbolic factorization is
+        // numeric-only replay lanes: the symbolic factorization is
         // frozen once (what the serving plan cache holds), then each
         // iteration refreshes values + factorizes — the warm-request
-        // cost, with the symmetrize/permute/analyze phases gone
+        // cost, with the symmetrize/permute/analyze phases gone.
+        // `planned_numeric` measures from cold (arena sizing included);
+        // `arena_numeric` and `pipelined` warm up first, so their alloc
+        // column is the steady-state claim: zero front allocations.
         let plan_cfg = SolverConfig {
             factor: mode_cfg(FactorMode::Supernodal),
             ..cfg
@@ -114,24 +131,61 @@ fn main() {
             std::sync::Arc::new(perm.clone()),
             &plan_cfg,
         );
+        let pipe_cfg = SolverConfig {
+            factor: mode_cfg(FactorMode::SupernodalParallel),
+            ..cfg
+        };
+        let pipe_plan = solver::plan_solve(
+            raw,
+            std::sync::Arc::new(perm.clone()),
+            &pipe_cfg,
+        );
         let mut ws = solver::NumericWorkspace::new();
-        let label = format!("{name}/factorize/planned_numeric");
-        let m = b
-            .bench(&label, || {
-                solver::factorize_with_plan(raw, &plan, &mut ws).unwrap()
-            })
-            .clone();
-        report.push(json::obj(vec![
-            ("name", json::s(&label)),
-            ("family", json::s(family)),
-            ("n", json::num(a.nrows as f64)),
-            ("nnz", json::num(a.nnz() as f64)),
-            ("fill", json::num(sym.cost.fill as f64)),
-            ("mode", json::s("planned_numeric")),
-            ("wall_s", json::num(m.min_s)),
-            ("mean_s", json::num(m.mean_s)),
-            ("speedup_vs_scalar", json::num(scalar_min / m.min_s.max(1e-12))),
-        ]));
+        let mut push_plan_lane =
+            |b: &mut Bencher,
+             lane: &str,
+             plan: &solver::SymbolicFactorization,
+             ws: &mut solver::NumericWorkspace,
+             warmups: usize| {
+                for _ in 0..warmups {
+                    solver::factorize_with_plan(raw, plan, ws).unwrap();
+                }
+                let label = format!("{name}/factorize/{lane}");
+                let g0 = arena::grow_events();
+                let m = b
+                    .bench(&label, || {
+                        solver::factorize_with_plan(raw, plan, ws).unwrap()
+                    })
+                    .clone();
+                let allocs = arena::grow_events() - g0;
+                report.push(json::obj(vec![
+                    ("name", json::s(&label)),
+                    ("family", json::s(family)),
+                    ("n", json::num(a.nrows as f64)),
+                    ("nnz", json::num(a.nnz() as f64)),
+                    ("fill", json::num(sym.cost.fill as f64)),
+                    ("mode", json::s(lane)),
+                    ("wall_s", json::num(m.min_s)),
+                    ("mean_s", json::num(m.mean_s)),
+                    (
+                        "speedup_vs_scalar",
+                        json::num(scalar_min / m.min_s.max(1e-12)),
+                    ),
+                    ("peak_front_bytes", json::num(plan.peak_front_bytes() as f64)),
+                    ("allocs", json::num(allocs as f64)),
+                ]));
+            };
+        // cold lane on a FRESH thread: its thread-pinned serial arena
+        // has never seen any plan, so the alloc column genuinely counts
+        // the one-time sizing (the mode lanes above already warmed the
+        // main thread's arena for this matrix)
+        std::thread::scope(|sc| {
+            sc.spawn(|| push_plan_lane(&mut b, "planned_numeric", &plan, &mut ws, 0))
+                .join()
+                .expect("cold planned_numeric lane");
+        });
+        push_plan_lane(&mut b, "arena_numeric", &plan, &mut ws, 1);
+        push_plan_lane(&mut b, "pipelined", &pipe_plan, &mut ws, 3);
 
         // solve cost rides along (shared by every mode)
         let an = solver::analyze_with(&pa, &mode_cfg(FactorMode::Supernodal));
@@ -160,6 +214,23 @@ fn main() {
             || solver::factorize_with(&pa, &an, &fcfg).unwrap(),
         );
     }
+
+    // solver-wide front-arena counters (the zero-alloc trajectory)
+    let fr = arena::stats();
+    println!(
+        "\nfront arenas: {} checkouts / {} creates / {} reuses | boundary bufs: {} checkouts | {} grow events",
+        fr.arenas.checkouts, fr.arenas.creates, fr.arenas.reuses, fr.boundary.checkouts, fr.grows
+    );
+    report.set(
+        "fronts",
+        json::obj(vec![
+            ("checkouts", json::num(fr.arenas.checkouts as f64)),
+            ("creates", json::num(fr.arenas.creates as f64)),
+            ("reuses", json::num(fr.arenas.reuses as f64)),
+            ("boundary_checkouts", json::num(fr.boundary.checkouts as f64)),
+            ("grows", json::num(fr.grows as f64)),
+        ]),
+    );
 
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_solver.json".into());
     match report.write(&out) {

@@ -17,7 +17,11 @@
 //!   traffic), memoizing the permutation itself;
 //! * the [`WorkspacePool`] makes cold-path orderings allocation-free,
 //!   and a pooled [`NumericWorkspace`] does the same for the warm
-//!   path's refreshed factor input values.
+//!   path's refreshed factor input values; the multifrontal fronts
+//!   themselves live in the solver's per-worker arenas
+//!   (`crate::solver::arena`), so a warm request's numeric phase makes
+//!   zero heap allocations for fronts and copies no factor pattern
+//!   (`Arc`-shared with the cached plan).
 //!
 //! Every stage is timed per request ([`ServingReport`]) and counted
 //! globally ([`ServingStats`]): request count, plan- and ordering-cache
@@ -146,6 +150,11 @@ pub struct ServingStats {
     pub workspaces: PoolStats,
     /// Numeric-scratch pool counters (warm-path value buffers).
     pub numeric: PoolStats,
+    /// Front-arena counters (solver-wide: arena/boundary pools plus
+    /// backing-buffer growth events). `fronts.grows` flat across a warm
+    /// window ⇔ the numeric phase allocated nothing for fronts — the
+    /// signal `bench_serving` derives `warm_alloc_free` from.
+    pub fronts: crate::solver::arena::ArenaStats,
     /// Prediction-service counters (requests/batches/mean batch).
     pub service: ServiceStatsSnapshot,
 }
@@ -299,6 +308,7 @@ impl ServingEngine {
             cache: self.cache.stats(),
             workspaces: self.workspaces.stats(),
             numeric: self.numeric.stats(),
+            fronts: crate::solver::arena::stats(),
             service: self.service.stats.snapshot(),
         }
     }

@@ -139,6 +139,20 @@ impl Graph {
     /// returning, so one buffer serves every call of a recursive
     /// dissection without O(n) re-initialization.
     pub fn subgraph_in(&self, verts: &[usize], local: &mut Vec<usize>) -> Graph {
+        self.subgraph_in_with(verts, local, &mut Vec::new())
+    }
+
+    /// [`Self::subgraph_in`] with a caller-owned induced-edge buffer as
+    /// well: the recursive dissection builds one induced subgraph per
+    /// tree level, so threading `reorder::Workspace`'s edge buffer
+    /// through removes the per-level edge allocation (the buffer only
+    /// ever grows to the largest level's edge count).
+    pub fn subgraph_in_with(
+        &self,
+        verts: &[usize],
+        local: &mut Vec<usize>,
+        edges: &mut Vec<(usize, usize)>,
+    ) -> Graph {
         let n = self.n_vertices();
         debug_assert!(local.iter().all(|&x| x == usize::MAX));
         if local.len() < n {
@@ -147,7 +161,7 @@ impl Graph {
         for (k, &v) in verts.iter().enumerate() {
             local[v] = k;
         }
-        let mut edges = Vec::new();
+        edges.clear();
         for (k, &v) in verts.iter().enumerate() {
             for &u in self.neighbors(v) {
                 let lu = local[u];
@@ -159,7 +173,7 @@ impl Graph {
         for &v in verts {
             local[v] = usize::MAX;
         }
-        Graph::from_edges(verts.len(), &edges)
+        Graph::from_edges(verts.len(), edges)
     }
 }
 

@@ -4,27 +4,53 @@
 //! eccentricity; the George–Liu pseudo-peripheral procedure below is the
 //! standard way to find one. ND's BFS-based bisection reuses the same
 //! level structure.
+//!
+//! A [`LevelStructure`] stores its levels **flat** — one vertex array in
+//! BFS order plus a level-pointer array (CSR-style) — instead of one
+//! `Vec` per level, and every traversal has an `*_into` variant that
+//! writes into caller-owned storage. A `reorder::Workspace` owns one
+//! structure (plus a spare inside [`BfsScratch`] for the
+//! pseudo-peripheral candidate BFS), so the repeated BFS sweeps of an
+//! RCM ordering touch the allocator only while a buffer grows past its
+//! high-water mark.
 
 use super::Graph;
 
 /// BFS level structure rooted at `start`, restricted to vertices where
-/// `mask[v]` is true (pass all-true for the whole graph).
-#[derive(Clone, Debug)]
+/// `mask[v]` is true (pass all-true for the whole graph). Flat storage:
+/// level `k` is `order[level_ptr[k]..level_ptr[k + 1]]`.
+#[derive(Clone, Debug, Default)]
 pub struct LevelStructure {
     /// Vertices in BFS order.
     pub order: Vec<usize>,
-    /// `levels[k]` = vertices at distance k (indices into nothing —
-    /// actual vertex ids).
-    pub levels: Vec<Vec<usize>>,
+    /// Level boundaries into `order` (`n_levels + 1` entries).
+    pub level_ptr: Vec<usize>,
 }
 
 impl LevelStructure {
+    pub fn n_levels(&self) -> usize {
+        self.level_ptr.len().saturating_sub(1)
+    }
+
+    /// Vertices at distance `k` from the root.
+    pub fn level(&self, k: usize) -> &[usize] {
+        &self.order[self.level_ptr[k]..self.level_ptr[k + 1]]
+    }
+
+    /// The deepest level (panics on an empty structure).
+    pub fn last_level(&self) -> &[usize] {
+        self.level(self.n_levels() - 1)
+    }
+
     pub fn eccentricity(&self) -> usize {
-        self.levels.len().saturating_sub(1)
+        self.n_levels().saturating_sub(1)
     }
 
     pub fn width(&self) -> usize {
-        self.levels.iter().map(|l| l.len()).max().unwrap_or(0)
+        (0..self.n_levels())
+            .map(|k| self.level(k).len())
+            .max()
+            .unwrap_or(0)
     }
 
     pub fn n_reached(&self) -> usize {
@@ -32,13 +58,16 @@ impl LevelStructure {
     }
 }
 
-/// Reusable BFS scratch: the visited bitmap is the one O(n) allocation a
-/// BFS needs; the pseudo-peripheral search re-BFSes several times per
+/// Reusable BFS scratch: the visited bitmap plus a spare
+/// [`LevelStructure`] for the pseudo-peripheral search's candidate BFS
+/// (it needs two structures alive at once — current best and
+/// challenger). The pseudo-peripheral search re-BFSes several times per
 /// component, and RCM restarts per component, so a `reorder::Workspace`
 /// carries one of these across all of them.
 #[derive(Clone, Debug, Default)]
 pub struct BfsScratch {
     visited: Vec<bool>,
+    spare: LevelStructure,
 }
 
 impl BfsScratch {
@@ -53,37 +82,56 @@ pub fn bfs_levels(g: &Graph, start: usize, mask: &[bool]) -> LevelStructure {
 }
 
 /// [`bfs_levels`] with caller-owned scratch (no per-call allocation of
-/// the visited bitmap).
+/// the visited bitmap; the returned structure is freshly allocated).
 pub fn bfs_levels_in(
     g: &Graph,
     start: usize,
     mask: &[bool],
     scratch: &mut BfsScratch,
 ) -> LevelStructure {
+    let mut out = LevelStructure::default();
+    bfs_levels_into(g, start, mask, scratch, &mut out);
+    out
+}
+
+/// [`bfs_levels`] writing into a caller-owned [`LevelStructure`] — the
+/// zero-allocation steady state: both the visited bitmap and the level
+/// storage are reused. The flat walk needs no frontier queues at all:
+/// the current level is a window of `out.order` and newly discovered
+/// vertices are appended behind it (same visit order as the classic
+/// two-queue formulation, bit-identically).
+pub fn bfs_levels_into(
+    g: &Graph,
+    start: usize,
+    mask: &[bool],
+    scratch: &mut BfsScratch,
+    out: &mut LevelStructure,
+) {
     debug_assert!(mask[start]);
     let n = g.n_vertices();
     scratch.visited.clear();
     scratch.visited.resize(n, false);
     let visited = &mut scratch.visited;
-    let mut order = Vec::new();
-    let mut levels = Vec::new();
-    let mut frontier = vec![start];
+    out.order.clear();
+    out.level_ptr.clear();
+    out.level_ptr.push(0);
+    out.order.push(start);
     visited[start] = true;
-    while !frontier.is_empty() {
-        order.extend_from_slice(&frontier);
-        let mut next = Vec::new();
-        for &v in &frontier {
+    let mut lo = 0usize;
+    while lo < out.order.len() {
+        let hi = out.order.len();
+        for idx in lo..hi {
+            let v = out.order[idx];
             for &u in g.neighbors(v) {
                 if mask[u] && !visited[u] {
                     visited[u] = true;
-                    next.push(u);
+                    out.order.push(u);
                 }
             }
         }
-        levels.push(frontier);
-        frontier = next;
+        out.level_ptr.push(hi);
+        lo = hi;
     }
-    LevelStructure { order, levels }
 }
 
 /// George–Liu pseudo-peripheral vertex: start anywhere, repeatedly BFS
@@ -100,24 +148,44 @@ pub fn pseudo_peripheral_in(
     mask: &[bool],
     scratch: &mut BfsScratch,
 ) -> (usize, LevelStructure) {
+    let mut ls = LevelStructure::default();
+    let v = pseudo_peripheral_into(g, start, mask, scratch, &mut ls);
+    (v, ls)
+}
+
+/// [`pseudo_peripheral`] writing the winning level structure into
+/// caller-owned storage; candidate BFS runs land in the scratch's spare
+/// structure and the two are swapped on improvement — no allocation at
+/// steady state. Returns the pseudo-peripheral vertex.
+pub fn pseudo_peripheral_into(
+    g: &Graph,
+    start: usize,
+    mask: &[bool],
+    scratch: &mut BfsScratch,
+    ls: &mut LevelStructure,
+) -> usize {
     let mut v = start;
-    let mut ls = bfs_levels_in(g, v, mask, scratch);
+    bfs_levels_into(g, v, mask, scratch, ls);
     loop {
-        let last = ls.levels.last().expect("non-empty BFS");
         // min-degree vertex in the last level
-        let &cand = last
+        let &cand = ls
+            .last_level()
             .iter()
             .min_by_key(|&&u| g.degree(u))
             .expect("non-empty level");
         if cand == v {
-            return (v, ls);
+            return v;
         }
-        let ls2 = bfs_levels_in(g, cand, mask, scratch);
-        if ls2.eccentricity() > ls.eccentricity() {
+        let mut spare = std::mem::take(&mut scratch.spare);
+        bfs_levels_into(g, cand, mask, scratch, &mut spare);
+        let improved = spare.eccentricity() > ls.eccentricity();
+        if improved {
             v = cand;
-            ls = ls2;
-        } else {
-            return (v, ls);
+            std::mem::swap(ls, &mut spare);
+        }
+        scratch.spare = spare;
+        if !improved {
+            return v;
         }
     }
 }
@@ -142,9 +210,14 @@ mod tests {
         let mask = vec![true; 5];
         let ls = bfs_levels(&g, 2, &mask);
         assert_eq!(ls.eccentricity(), 2);
-        assert_eq!(ls.levels[0], vec![2]);
-        assert_eq!(ls.levels[1].len(), 2);
+        assert_eq!(ls.level(0), &[2]);
+        assert_eq!(ls.level(1).len(), 2);
         assert_eq!(ls.n_reached(), 5);
+        assert_eq!(ls.width(), 2);
+        // flat invariants: levels tile `order` exactly
+        assert_eq!(*ls.level_ptr.first().unwrap(), 0);
+        assert_eq!(*ls.level_ptr.last().unwrap(), ls.order.len());
+        assert!(ls.level_ptr.windows(2).all(|w| w[0] < w[1]));
     }
 
     #[test]
@@ -183,10 +256,31 @@ mod tests {
             let a = bfs_levels(&g, start, &mask);
             let b = bfs_levels_in(&g, start, &mask, &mut scratch);
             assert_eq!(a.order, b.order);
-            assert_eq!(a.levels, b.levels);
+            assert_eq!(a.level_ptr, b.level_ptr);
             let (va, _) = pseudo_peripheral(&g, start, &mask);
             let (vb, _) = pseudo_peripheral_in(&g, start, &mask, &mut scratch);
             assert_eq!(va, vb);
+        }
+    }
+
+    #[test]
+    fn into_variants_reuse_storage_bit_identically() {
+        // one workspace-owned structure serves BFS after BFS: contents
+        // always equal a fresh run, buffers only ever grow
+        let g = path_graph(12);
+        let mask = vec![true; 12];
+        let mut scratch = BfsScratch::new();
+        let mut ls = LevelStructure::default();
+        for start in [0usize, 5, 11, 3, 7] {
+            bfs_levels_into(&g, start, &mask, &mut scratch, &mut ls);
+            let fresh = bfs_levels(&g, start, &mask);
+            assert_eq!(ls.order, fresh.order);
+            assert_eq!(ls.level_ptr, fresh.level_ptr);
+            let v = pseudo_peripheral_into(&g, start, &mask, &mut scratch, &mut ls);
+            let (v_fresh, ls_fresh) = pseudo_peripheral(&g, start, &mask);
+            assert_eq!(v, v_fresh);
+            assert_eq!(ls.order, ls_fresh.order);
+            assert_eq!(ls.level_ptr, ls_fresh.level_ptr);
         }
     }
 

@@ -26,13 +26,15 @@
 //! the labeled sweep, [`coordinator`] assembles the deployable objects
 //! — the synchronous `SelectionPipeline` and the cache-stacked
 //! `ServingEngine` (ordering cache + symbolic-plan cache + scratch
-//! pools; warm requests run numeric-only).
+//! pools; warm requests run numeric-only on per-worker front arenas —
+//! zero symbolic work *and* zero front allocations).
 //!
 //! **`ARCHITECTURE.md`** (repo root) carries the full map: module tree ↔
 //! paper pipeline, the `ServingEngine` request-lifecycle diagram with
-//! its three cache layers, and which paper table/figure each
-//! [`experiments`] module reproduces. `DESIGN.md` documents the
-//! substitutions (synthetic collection, LDLᵀ in place of MUMPS).
+//! its three cache layers, the numeric phase's arena/DAG-pipeline
+//! design, and which paper table/figure each [`experiments`] module
+//! reproduces. `DESIGN.md` documents the substitutions (synthetic
+//! collection, LDLᵀ in place of MUMPS).
 
 pub mod collection;
 pub mod coordinator;

@@ -55,7 +55,7 @@ fn order_leaf(
     out: &mut Vec<usize>,
     ws: &mut Workspace,
 ) {
-    let sub = g.subgraph_in(verts, &mut ws.nd_local);
+    let sub = g.subgraph_in_with(verts, &mut ws.nd_local, &mut ws.nd_edges);
     let p = leaf_order(&sub, ws);
     // subgraph vertex k is verts[k] — no separate id map needed
     for &local_old in &p.order() {
@@ -78,7 +78,9 @@ fn recurse(
         order_leaf(g, verts, leaf_order, out, ws);
         return;
     }
-    let sub = g.subgraph_in(verts, &mut ws.nd_local);
+    // the induced-edge buffer is workspace-owned and shared by every
+    // level of the recursion (cleared per call, reused across calls)
+    let sub = g.subgraph_in_with(verts, &mut ws.nd_local, &mut ws.nd_edges);
     let b = bisect(&sub, rng);
     let (sep, a, bb) = vertex_separator(&sub, &b.side);
     // Degenerate bisection (e.g. a clique where one side swallowed

@@ -10,7 +10,7 @@
 use super::engine::Reorderer;
 use super::workspace::Workspace;
 use super::{Permutation, ReorderAlgorithm};
-use crate::graph::traversal::pseudo_peripheral_in;
+use crate::graph::traversal::pseudo_peripheral_into;
 use crate::graph::Graph;
 
 /// Cuthill–McKee visit order over all components, written into
@@ -31,7 +31,8 @@ fn cm_order_in(g: &Graph, ws: &mut Workspace) {
         if ws.placed[seed] {
             continue;
         }
-        let (start, _) = pseudo_peripheral_in(g, seed, &ws.mask, &mut ws.bfs);
+        // level storage is workspace-owned: the search allocates nothing
+        let start = pseudo_peripheral_into(g, seed, &ws.mask, &mut ws.bfs, &mut ws.levels);
         // classic CM queue: visit in FIFO order, appending each vertex's
         // unvisited neighbors in ascending-degree order
         ws.queue.push_back(start);

@@ -1,12 +1,13 @@
 //! Reusable scratch memory for the reordering algorithms.
 //!
-//! Every ordering needs the same O(n) working set — BFS visit flags and
-//! queues (RCM), the quotient-graph elimination state (the min-degree
-//! family, plus the leaf orderings of ND and the hybrids), and the
-//! global→local map of recursive dissection. A [`Workspace`] owns all of
-//! it once; algorithms reset the buffers they use instead of allocating,
-//! so a sweep of many orderings (or many matrices) touches the allocator
-//! only when a buffer must grow. One workspace belongs to one worker
+//! Every ordering needs the same O(n) working set — BFS visit flags,
+//! queues, and flat level storage (RCM's pseudo-peripheral search), the
+//! quotient-graph elimination state (the min-degree family, plus the
+//! leaf orderings of ND and the hybrids), and the global→local map and
+//! induced-edge buffer of recursive dissection. A [`Workspace`] owns all
+//! of it once; algorithms reset the buffers they use instead of
+//! allocating, so a sweep of many orderings (or many matrices) touches
+//! the allocator only when a buffer must grow. One workspace belongs to one worker
 //! thread — `ReorderEngine::sweep` hands each pool worker its own.
 //!
 //! Reuse is observation-free by construction: every algorithm fully
@@ -27,7 +28,7 @@ use std::collections::VecDeque;
 use std::ops::{Deref, DerefMut};
 
 use super::mindeg::MinDegScratch;
-use crate::graph::traversal::BfsScratch;
+use crate::graph::traversal::{BfsScratch, LevelStructure};
 use crate::util::pool::{ObjectPool, PoolStats};
 
 /// Scratch buffers shared by all reordering algorithms. Create once per
@@ -45,14 +46,21 @@ pub struct Workspace {
     pub(crate) children: Vec<usize>,
     /// RCM: the visit order under construction.
     pub(crate) order: Vec<usize>,
-    /// BFS / pseudo-peripheral visited bitmap.
+    /// BFS / pseudo-peripheral visited bitmap (plus the candidate-BFS
+    /// spare level structure).
     pub(crate) bfs: BfsScratch,
+    /// RCM: workspace-owned level storage — every pseudo-peripheral BFS
+    /// writes its flat level structure here instead of allocating.
+    pub(crate) levels: LevelStructure,
     /// Quotient-graph minimum-degree engine state (also the leaf orderer
     /// of ND/SCOTCH/PORD — reused across every leaf of a dissection).
     pub(crate) mindeg: MinDegScratch,
     /// Dissection: global→local vertex map for induced subgraphs.
     /// Invariant: all `usize::MAX` between uses (`Graph::subgraph_in`).
     pub(crate) nd_local: Vec<usize>,
+    /// Dissection: reusable induced-subgraph edge buffer — one buffer
+    /// serves every level of the recursion (`Graph::subgraph_in_with`).
+    pub(crate) nd_edges: Vec<(usize, usize)>,
 }
 
 impl Workspace {

@@ -1,0 +1,282 @@
+//! Per-worker front/update arenas for the multifrontal numeric phase.
+//!
+//! The supernodal driver used to allocate one dense frontal matrix and
+//! one `m×m` update matrix **per supernode** — O(#fronts) heap round
+//! trips on the hottest path in the system. A [`FrontArena`] replaces
+//! all of them with three long-lived buffers per worker:
+//!
+//! * `front` — one dense panel buffer, sized once to the plan's peak
+//!   front ([`crate::solver::SupernodalPlan::peak_front`]);
+//! * `stack` — a bump stack of pending update matrices. A postorder walk
+//!   consumes updates in exactly LIFO order (a supernode's children are
+//!   always the most recently produced unconsumed updates — the
+//!   classical multifrontal stack), so "free" is a truncate and "alloc"
+//!   is a resize inside reserved capacity;
+//! * `map` — the global-row → front-row scatter map.
+//!
+//! Arenas live in a process-wide [`ObjectPool`]: workers check one out
+//! per task (RAII guard — panic unwind returns it), size it from the
+//! plan's precomputed peaks, and park it warm. Steady-state serving
+//! therefore factors with **zero heap allocation for fronts**: the only
+//! allocator traffic is the first request per (larger-than-ever) plan,
+//! observable through [`grow_events`] — the counter the benches and the
+//! zero-alloc property tests assert on.
+//!
+//! Updates that must cross a task boundary in the pipelined schedule
+//! (subtree roots and top-of-tree supernodes, see
+//! [`crate::solver::supernodal`]) cannot live in a worker-local arena;
+//! they travel in [`BoundaryBuf`]s — `Vec<f64>`s drawn from a second
+//! process-wide pool, returned when the parent consumes them.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+use crate::util::pool::{ObjectPool, PoolStats, PooledObject};
+
+/// Global count of arena/boundary backing-buffer growth events (a grow =
+/// an actual heap allocation on the numeric path). Flat between two
+/// factorizations ⇔ the second one was allocation-free for fronts.
+static GROW_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    /// Per-thread mirror of [`GROW_EVENTS`]: lets a test assert
+    /// "this factorization allocated nothing" without racing against
+    /// unrelated test threads bumping the process-wide counter.
+    static TL_GROW_EVENTS: Cell<u64> = Cell::new(0);
+}
+
+fn note_grow() {
+    GROW_EVENTS.fetch_add(1, Ordering::Relaxed);
+    TL_GROW_EVENTS.with(|c| c.set(c.get() + 1));
+}
+
+/// Cumulative front-allocation events (arena + boundary buffer growth)
+/// since process start. The serving bench derives its `warm_alloc_free`
+/// flag from deltas of this counter.
+pub fn grow_events() -> u64 {
+    GROW_EVENTS.load(Ordering::Relaxed)
+}
+
+/// [`grow_events`] restricted to the calling thread — the race-free
+/// handle the zero-alloc property tests take deltas of (a sequential
+/// factorization's growths all land on the caller's thread).
+pub fn thread_grow_events() -> u64 {
+    TL_GROW_EVENTS.with(|c| c.get())
+}
+
+/// Counter snapshot of the arena subsystem.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ArenaStats {
+    /// Arena-pool counters (checkouts/creates/reuses/idle).
+    pub arenas: PoolStats,
+    /// Boundary-buffer-pool counters.
+    pub boundary: PoolStats,
+    /// Backing-buffer growth events (see [`grow_events`]).
+    pub grows: u64,
+}
+
+struct Pools {
+    arenas: ObjectPool<FrontArena>,
+    boundary: ObjectPool<Vec<f64>>,
+}
+
+fn pools() -> &'static Pools {
+    static POOLS: OnceLock<Pools> = OnceLock::new();
+    POOLS.get_or_init(|| {
+        let idle = crate::util::pool::default_workers() + 1;
+        Pools {
+            arenas: ObjectPool::new(idle),
+            // cross-task updates: up to ~3 live per worker while a top
+            // front assembles its children
+            boundary: ObjectPool::new(4 * idle),
+        }
+    })
+}
+
+/// Check a warm arena out of the process-wide pool (RAII: returns on
+/// drop, panic unwind included). This is the DAG workers' checkout —
+/// their scoped threads are born per factorization, so thread-pinned
+/// storage would always be cold; the pool keeps their arenas warm across
+/// factorizations instead.
+pub fn checkout_arena() -> PooledObject<'static, FrontArena> {
+    pools().arenas.checkout_guard(FrontArena::new)
+}
+
+/// Run `f` on the calling thread's pinned arena. The sequential numeric
+/// path lives here: a long-lived serving or sweep thread re-uses one
+/// private arena with no pool traffic at all, and — because the arena is
+/// thread-private — a warm second factorization is *deterministically*
+/// allocation-free (what the zero-alloc property tests assert through
+/// [`thread_grow_events`]). Not re-entrant (the numeric phase never
+/// calls back into itself).
+pub fn with_serial_arena<R>(f: impl FnOnce(&mut FrontArena) -> R) -> R {
+    thread_local! {
+        static SERIAL_ARENA: std::cell::RefCell<FrontArena> =
+            std::cell::RefCell::new(FrontArena::new());
+    }
+    SERIAL_ARENA.with(|a| f(&mut a.borrow_mut()))
+}
+
+/// Check a boundary update buffer out, sized to `len` elements and
+/// zero-filled (harvest only writes the lower triangle; zeroing keeps
+/// the never-read upper slots deterministic across reuse, exactly like
+/// the arena stack's updates).
+pub fn checkout_boundary(len: usize) -> BoundaryBuf {
+    let mut buf = pools().boundary.checkout_guard(Vec::new);
+    if buf.capacity() < len {
+        note_grow();
+    }
+    buf.clear();
+    buf.resize(len, 0.0);
+    BoundaryBuf { buf }
+}
+
+/// Counters across both pools plus the growth tally.
+pub fn stats() -> ArenaStats {
+    let p = pools();
+    ArenaStats {
+        arenas: p.arenas.stats(),
+        boundary: p.boundary.stats(),
+        grows: grow_events(),
+    }
+}
+
+/// A pooled dense update matrix crossing a task boundary (column-major
+/// `m×m`, lower triangle filled). Returns to the boundary pool on drop.
+pub struct BoundaryBuf {
+    buf: PooledObject<'static, Vec<f64>>,
+}
+
+impl std::ops::Deref for BoundaryBuf {
+    type Target = [f64];
+
+    fn deref(&self) -> &[f64] {
+        &self.buf
+    }
+}
+
+impl std::ops::DerefMut for BoundaryBuf {
+    fn deref_mut(&mut self) -> &mut [f64] {
+        &mut self.buf
+    }
+}
+
+/// Per-worker scratch for a run of fronts: the dense panel buffer, the
+/// update bump stack, and the row scatter map (see the module docs).
+/// Create via [`checkout_arena`]; size with [`FrontArena::begin`] once
+/// per task.
+#[derive(Default)]
+pub struct FrontArena {
+    /// Global (postordered) row → local front row. Only entries of the
+    /// current front are ever read, so no reset between fronts.
+    pub(crate) map: Vec<usize>,
+    /// Dense frontal buffer; the active front is the `ld*ld` prefix.
+    pub(crate) front: Vec<f64>,
+    /// Bump stack of pending update matrices (LIFO by construction).
+    pub(crate) stack: Vec<f64>,
+    /// Reusable `(supernode, stack offset)` bookkeeping for the pending
+    /// stack — taken by the driver for the duration of a task.
+    pub(crate) pending: Vec<(usize, usize)>,
+}
+
+impl FrontArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Prepare for a task over an `n`-column matrix whose fronts need at
+    /// most `front_elems` dense elements and whose update stack peaks at
+    /// `stack_elems` elements (both precomputed by the symbolic plan).
+    /// Grows the backing buffers only when this plan is larger than
+    /// anything the arena has seen — each growth is a counted heap event;
+    /// a warm arena re-begins for free.
+    pub fn begin(&mut self, n: usize, front_elems: usize, stack_elems: usize) {
+        if self.map.len() < n {
+            note_grow();
+            self.map.resize(n, 0);
+        }
+        if self.front.len() < front_elems {
+            note_grow();
+            self.front.resize(front_elems, 0.0);
+        }
+        if self.stack.capacity() < stack_elems {
+            note_grow();
+            self.stack.reserve(stack_elems - self.stack.len());
+        }
+        self.stack.clear();
+    }
+
+    /// Push an uninitialized (zero-filled) update of `len` elements onto
+    /// the bump stack; returns its offset. Within the reserved capacity
+    /// this never touches the allocator (offsets — not pointers — index
+    /// the stack, so even an unexpected growth stays correct; it is
+    /// merely counted).
+    pub(crate) fn push_update(&mut self, len: usize) -> usize {
+        let off = self.stack.len();
+        if self.stack.capacity() < off + len {
+            note_grow();
+        }
+        self.stack.resize(off + len, 0.0);
+        off
+    }
+
+    /// Free every update at or above `off` (LIFO discipline).
+    pub(crate) fn truncate_updates(&mut self, off: usize) {
+        debug_assert!(off <= self.stack.len());
+        self.stack.truncate(off);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn begin_grows_once_then_stays_warm() {
+        let mut a = FrontArena::new();
+        let before = thread_grow_events();
+        a.begin(100, 64, 32);
+        assert!(thread_grow_events() > before, "first begin must grow");
+        let warm = thread_grow_events();
+        for _ in 0..5 {
+            a.begin(100, 64, 32);
+            a.begin(50, 16, 8); // smaller plans ride the same buffers
+        }
+        assert_eq!(thread_grow_events(), warm, "warm begins must not allocate");
+        a.begin(100, 65, 32); // larger front → one more growth
+        assert_eq!(thread_grow_events(), warm + 1);
+    }
+
+    #[test]
+    fn update_stack_is_lifo_and_alloc_free_within_capacity() {
+        let mut a = FrontArena::new();
+        a.begin(10, 4, 100);
+        let warm = thread_grow_events();
+        let o1 = a.push_update(30);
+        let o2 = a.push_update(40);
+        assert_eq!((o1, o2), (0, 30));
+        a.stack[o2] = 7.0;
+        a.truncate_updates(o2);
+        let o3 = a.push_update(20);
+        assert_eq!(o3, 30, "freed space is reused");
+        assert_eq!(a.stack[o3], 0.0, "updates start zeroed");
+        assert_eq!(thread_grow_events(), warm);
+    }
+
+    #[test]
+    fn boundary_buffers_recycle() {
+        // counters are process-global (other test threads may also be
+        // checking buffers out), so assert monotonically
+        let before = stats().boundary.checkouts;
+        {
+            let mut b = checkout_boundary(16);
+            b[0] = 1.0;
+        }
+        let b2 = checkout_boundary(8);
+        assert_eq!(b2.len(), 8);
+        let s = stats();
+        assert!(s.boundary.checkouts >= before + 2);
+        assert_eq!(s.boundary.checkouts, s.boundary.creates + s.boundary.reuses);
+    }
+}

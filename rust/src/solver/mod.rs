@@ -49,9 +49,18 @@
 //!   parent while the padding it introduces stays under the given
 //!   fraction of the exact entries — bigger panels, more BLAS-shaped
 //!   work, unchanged stored fill.
-//! * [`FactorMode::SupernodalParallel`] — same numerics, with
-//!   independent assembly subtrees scheduled across threads
-//!   (`util::pool`); bit-identical to the sequential supernodal factor.
+//! * [`FactorMode::SupernodalParallel`] — same numerics, scheduled as a
+//!   dependency-counted task DAG over the assembly tree
+//!   (`util::pool::parallel_dag`): independent subtrees in parallel
+//!   *and* a pipelined top of the tree, every front runnable the moment
+//!   its last child's update lands; bit-identical to the sequential
+//!   supernodal factor.
+//!
+//! Both supernodal paths draw every dense front and update matrix from
+//! per-worker bump arenas ([`arena`]) sized once per plan — the steady
+//! state numeric phase makes **zero heap allocations for fronts** — and
+//! the factor's structural arrays (`lp`/`li`/`post`) are `Arc`-shared
+//! with the plan instead of copied per request.
 //!
 //! [`SolverConfig::factor`] selects the path for every consumer
 //! (dataset sweep, selection pipeline, experiments, benches); the
@@ -69,6 +78,7 @@
 //! the measured regime (same rate model). DESIGN.md §Substitutions
 //! documents this.
 
+pub mod arena;
 pub mod etree;
 pub mod kernels;
 pub mod numeric;

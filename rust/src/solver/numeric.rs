@@ -19,17 +19,26 @@
 //! [`factorize_parts`] consume it. The same `Symbolic` can be replayed
 //! against any values with the matching pattern.
 
+use std::sync::Arc;
+
 use super::etree::{col_counts, etree, symbolic_cost, SymbolicCost, NONE};
 use crate::sparse::CsrMatrix;
 
 /// LDLᵀ factor in compressed-column form.
+///
+/// The structural arrays (`lp`, `li`, `post`) are `Arc`ed: they are pure
+/// functions of the pattern, so the supernodal path shares its plan's
+/// preallocated factor structure across every factorization instead of
+/// copying O(nnz(L)) per request — only the values (`lx`, `d`) are
+/// per-factorization storage. The scalar path wraps its freshly built
+/// arrays in `Arc`s at no extra cost.
 #[derive(Clone, Debug)]
 pub struct LdlFactor {
     pub n: usize,
     /// Column pointers of L (offdiagonal entries only), len n+1.
-    pub lp: Vec<usize>,
+    pub lp: Arc<Vec<usize>>,
     /// Row indices per column (ascending within a column).
-    pub li: Vec<usize>,
+    pub li: Arc<Vec<usize>>,
     /// Values per column.
     pub lx: Vec<f64>,
     /// Diagonal of D.
@@ -41,7 +50,7 @@ pub struct LdlFactor {
     /// at internal position `k` (an elimination-tree postorder — an
     /// equivalent reordering, so `fill()` is unchanged). [`Self::solve`]
     /// applies/undoes it transparently; `None` for the scalar path.
-    pub post: Option<Vec<usize>>,
+    pub post: Option<Arc<Vec<usize>>>,
 }
 
 /// Numeric factorization error.
@@ -182,8 +191,8 @@ pub fn factorize_parts(
 
     Ok(LdlFactor {
         n,
-        lp,
-        li,
+        lp: Arc::new(lp),
+        li: Arc::new(li),
         lx,
         d,
         flops,

@@ -198,6 +198,13 @@ impl SymbolicFactorization {
         self.snplan.as_ref()
     }
 
+    /// Peak dense frontal-matrix footprint in bytes of the multifrontal
+    /// numeric phase (the per-worker arena sizing; 0 for scalar or
+    /// capped plans). Reported as `peak_front_bytes` by `bench_solver`.
+    pub fn peak_front_bytes(&self) -> usize {
+        self.snplan.as_ref().map_or(0, |p| p.peak_front_bytes())
+    }
+
     /// ‖PA·x − b‖₂ over the plan's stored pattern and the refreshed
     /// values in `vals` (`x`, `b` in the `PA` numbering).
     fn residual(&self, vals: &[f64], x: &[f64], b: &[f64]) -> f64 {

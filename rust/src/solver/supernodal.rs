@@ -1,5 +1,5 @@
-//! Supernodal multifrontal LDLᵀ — the cache-blocked, parallel numeric
-//! phase.
+//! Supernodal multifrontal LDLᵀ — the cache-blocked, parallel,
+//! **zero-allocation** numeric phase.
 //!
 //! Consumes a [`SupernodalPlan`] (postorder relabeling + assembly tree,
 //! see [`super::supernode`]) and factors `Q·A·Qᵀ` front by front in
@@ -10,18 +10,50 @@
 //!   (extend-add), eliminates its pivot columns with the blocked kernels
 //!   in [`super::kernels`], scatters the exact-pattern entries into the
 //!   factor, and passes the trailing Schur complement up the tree;
-//! * in [`FactorMode::SupernodalParallel`], independent subtrees run on
-//!   worker threads (each task owns disjoint `&mut` column ranges of the
-//!   shared factor arrays — no locks on the output path), then the
-//!   sequential "top" of the tree consumes the subtree root updates.
+//! * all dense scratch comes from a per-worker [`FrontArena`]
+//!   ([`super::arena`]): one front buffer sized to the plan's
+//!   [`SupernodalPlan::peak_front`], and a bump **stack** of pending
+//!   updates — a postorder walk consumes children in exactly LIFO order
+//!   (the classical multifrontal stack), so alloc is a resize inside
+//!   reserved capacity and free is a truncate. Steady state, the numeric
+//!   phase performs **zero heap allocations for fronts** (growth events
+//!   are counted, see [`super::arena::grow_events`]);
+//! * in [`FactorMode::SupernodalParallel`], the assembly tree runs as a
+//!   dependency-counted **task DAG** (`util::pool::parallel_dag`):
+//!   independent subtrees are leaf tasks, and every supernode above the
+//!   subtree frontier is its own task that becomes runnable the moment
+//!   its last child's update lands — upper-tree fronts eliminate
+//!   *concurrently* with unrelated subtrees instead of waiting behind a
+//!   barrier. Updates crossing a task boundary travel in pooled
+//!   [`BoundaryBuf`]s through per-supernode slots:
+//!
+//! ```text
+//!   subtree tasks (DAG leaves)             pipelined top of the tree
+//!   ┌────────────────────────┐
+//!   │ T0: s0 s1 s2  (arena   │──BoundaryBuf──┐
+//!   │ T1: s3 s4      stack   │──────────────►[s8]──►[s9]──► root
+//!   │ T2: s5 s6 s7   LIFO)   │──────────────────────▲
+//!   └────────────────────────┘   a top supernode runs as soon as its
+//!        heaviest-first          last child's update lands — while
+//!                                other subtrees are still factoring
+//! ```
+//!
+//! The DAG schedule is **bit-identical** to the sequential walk: every
+//! parent extend-adds its children in fixed ascending child-index order
+//! regardless of completion order, each front runs the same kernels on
+//! the same assembled values, and tasks write disjoint `&mut` column
+//! ranges of the shared factor arrays (no locks on the output path).
+//! Even errors are interchangeable: the reported zero pivot is the
+//! earliest one in postorder — exactly the pivot the sequential walk
+//! would have hit first.
 //!
 //! The returned [`LdlFactor`] stores the factor of the *postordered*
 //! matrix together with the postorder itself (`LdlFactor::post`), which
-//! `solve` applies transparently. Because a postorder is an equivalent
-//! reordering and panels are scattered onto the exact symbolic pattern,
-//! `fill()` is identical to the scalar path, and the parallel schedule
-//! performs bit-identical arithmetic to the sequential one (same fronts,
-//! same assembly order — threads only change *when* disjoint fronts run).
+//! `solve` applies transparently; its structural arrays (`lp`/`li`/
+//! `post`) are `Arc`-shared with the plan, so a factorization copies no
+//! pattern data at all. Because a postorder is an equivalent reordering
+//! and panels are scattered onto the exact symbolic pattern, `fill()` is
+//! identical to the scalar path.
 //!
 //! This file is purely the **numeric** side of the symbolic/numeric
 //! split: the [`SupernodalPlan`] it consumes is pattern-pure and can be
@@ -30,6 +62,9 @@
 //! [`factorize_supernodal_gathered`] against a stream of value buffers.
 //! Inputs must be SPD-like (no pivoting — see [`super::numeric`]).
 
+use std::sync::Mutex;
+
+use super::arena::{self, BoundaryBuf, FrontArena};
 use super::etree::NONE;
 use super::kernels;
 use super::numeric::{FactorError, LdlFactor};
@@ -37,47 +72,60 @@ use super::supernode::{schedule, FactorConfig, FactorMode, SupernodalPlan};
 use crate::sparse::CsrMatrix;
 use crate::util::pool;
 
-/// Schur-complement contribution passed from a supernode to its assembly
-/// parent: dense column-major `m × m` block (lower triangle filled) over
-/// the producing supernode's boundary rows (`plan.rows[snode]`).
-struct Update {
-    snode: usize,
-    vals: Vec<f64>,
+/// Everything a front needs to assemble, shared by every task.
+struct Ctx<'a> {
+    /// Postordered matrix values (gathered through `plan.b_from`).
+    bx: &'a [f64],
+    plan: &'a SupernodalPlan,
+    cfg: &'a FactorConfig,
 }
 
-/// Per-worker scratch reused across the fronts of one task.
-struct Scratch {
-    /// Global row -> local front row. Only entries belonging to the
-    /// current front are ever read, so no per-front reset is needed.
-    map: Vec<usize>,
-    front: Vec<f64>,
-}
-
-impl Scratch {
-    fn new(n: usize) -> Self {
-        Scratch {
-            map: vec![0; n],
-            front: Vec::new(),
+/// Extend-add one child's update matrix (column-major `mc×mc`, lower
+/// triangle) into the front through the row scatter map. The iteration
+/// order is part of the bit-identity contract: column-major, each column
+/// from its diagonal down.
+fn extend_add(f: &mut [f64], ld: usize, map: &[usize], urows: &[usize], vals: &[f64]) {
+    let mc = urows.len();
+    debug_assert_eq!(vals.len(), mc * mc);
+    for q in 0..mc {
+        let jl = map[urows[q]];
+        debug_assert!(jl < ld);
+        let col = &vals[q * mc..(q + 1) * mc];
+        for p in q..mc {
+            f[jl * ld + map[urows[p]]] += col[p];
         }
     }
 }
 
-/// Assemble, eliminate, and scatter one supernode. `bx` holds the
-/// postordered matrix values (gathered through `plan.b_from`); `lx_s` /
-/// `d_s` are the supernode's slices of the factor arrays (columns
-/// `first[s]..first[s+1]`).
+/// Copy the trailing `m×m` Schur complement (the update matrix) out of
+/// an eliminated `ld×ld` front with `w` pivot columns. Lower triangle
+/// only — consumers never read above the diagonal.
+fn harvest(front: &[f64], ld: usize, w: usize, m: usize, dst: &mut [f64]) {
+    for q in 0..m {
+        let src = &front[(w + q) * ld + w + q..(w + q) * ld + ld];
+        dst[q * m + q..(q + 1) * m].copy_from_slice(src);
+    }
+}
+
+/// Assemble and eliminate one supernode in the arena's front buffer:
+/// gather its columns of `B`, extend-add the child updates **in
+/// ascending child-index order** (wherever they live — the worker-local
+/// stack or boundary buffers from other tasks), run the blocked kernels,
+/// and scatter the exact-pattern entries into the factor slices. The
+/// eliminated front (trailing Schur complement included) stays in
+/// `arena.front` for the caller to harvest.
 #[allow(clippy::too_many_arguments)]
-fn process_snode(
+fn eliminate_snode(
+    ctx: &Ctx<'_>,
     s: usize,
-    bx: &[f64],
-    plan: &SupernodalPlan,
-    cfg: &FactorConfig,
-    scratch: &mut Scratch,
-    child_updates: Vec<Update>,
+    arena: &mut FrontArena,
+    stack_children: &[(usize, usize)],
+    boundary_children: &[(usize, &[f64])],
     lx_s: &mut [f64],
     d_s: &mut [f64],
     flops: &mut f64,
-) -> Result<Option<Update>, FactorError> {
+) -> Result<(), FactorError> {
+    let plan = ctx.plan;
     let a0 = plan.first[s];
     let e = plan.first[s + 1];
     let w = e - a0;
@@ -85,15 +133,18 @@ fn process_snode(
     let m = rows.len();
     let ld = w + m;
 
+    let FrontArena {
+        map, front, stack, ..
+    } = arena;
+    debug_assert!(ld * ld <= front.len(), "front exceeds the arena sizing");
+    let f = &mut front[..ld * ld];
+    f.fill(0.0);
     for (k, j) in (a0..e).enumerate() {
-        scratch.map[j] = k;
+        map[j] = k;
     }
     for (k, &r) in rows.iter().enumerate() {
-        scratch.map[r] = w + k;
+        map[r] = w + k;
     }
-    scratch.front.clear();
-    scratch.front.resize(ld * ld, 0.0);
-    let f = &mut scratch.front[..];
 
     // assemble the supernode's columns of B: by symmetry, the lower part
     // of column j is row j's entries at or beyond the diagonal
@@ -102,31 +153,35 @@ fn process_snode(
         let (s0, s1) = (plan.b_indptr[j], plan.b_indptr[j + 1]);
         let idx = &plan.b_indices[s0..s1];
         let start = idx.partition_point(|&i| i < j);
-        for (&i, &v) in idx[start..].iter().zip(&bx[s0 + start..s1]) {
+        for (&i, &v) in idx[start..].iter().zip(&ctx.bx[s0 + start..s1]) {
             debug_assert!(
                 i < e || rows.binary_search(&i).is_ok(),
                 "entry ({i},{j}) outside the front"
             );
-            f[jl * ld + scratch.map[i]] += v;
+            f[jl * ld + map[i]] += v;
         }
     }
 
-    // extend-add the children's update matrices
-    for up in &child_updates {
-        let urows = &plan.rows[up.snode];
-        let mc = urows.len();
-        for q in 0..mc {
-            let jl = scratch.map[urows[q]];
-            debug_assert!(jl < ld);
-            let col = &up.vals[q * mc..(q + 1) * mc];
-            for p in q..mc {
-                f[jl * ld + scratch.map[urows[p]]] += col[p];
-            }
+    // extend-add the children ascending by supernode index regardless of
+    // which task produced them or when they completed — the fixed merge
+    // order that keeps the pipelined schedule bit-identical to serial
+    let (mut p, mut q) = (0usize, 0usize);
+    while p < stack_children.len() || q < boundary_children.len() {
+        let ps = stack_children.get(p).map_or(usize::MAX, |&(c, _)| c);
+        let qs = boundary_children.get(q).map_or(usize::MAX, |&(c, _)| c);
+        if ps < qs {
+            let (c, off) = stack_children[p];
+            let mc = plan.rows[c].len();
+            extend_add(f, ld, map, &plan.rows[c], &stack[off..off + mc * mc]);
+            p += 1;
+        } else {
+            let (c, vals) = boundary_children[q];
+            extend_add(f, ld, map, &plan.rows[c], vals);
+            q += 1;
         }
     }
-    drop(child_updates); // children's memory released before eliminating
 
-    kernels::factor_front(f, ld, w, cfg.panel_block.max(1))
+    kernels::factor_front(f, ld, w, ctx.cfg.panel_block.max(1))
         .map_err(|k| FactorError::ZeroPivot(plan.post[a0 + k]))?;
     for k in 0..w {
         let h = (ld - 1 - k) as f64;
@@ -140,61 +195,147 @@ fn process_snode(
         let jl = j - a0;
         d_s[jl] = f[jl * ld + jl];
         for (t, &i) in plan.li[plan.lp[j]..plan.lp[j + 1]].iter().enumerate() {
-            lx_s[plan.lp[j] - base + t] = f[jl * ld + scratch.map[i]];
+            lx_s[plan.lp[j] - base + t] = f[jl * ld + map[i]];
         }
     }
-
-    if m == 0 {
-        return Ok(None);
-    }
-    let mut vals = vec![0.0; m * m];
-    for q in 0..m {
-        let src = &f[(w + q) * ld + w + q..(w + q) * ld + ld];
-        vals[q * m + q..(q + 1) * m].copy_from_slice(src);
-    }
-    Ok(Some(Update { snode: s, vals }))
+    Ok(())
 }
 
-/// One parallel task: a complete assembly subtree plus the factor slices
-/// its supernodes write.
-struct SubtreeTask<'a> {
-    root: usize,
-    /// `(supernode, lx slice, d slice)` in ascending (postorder) order.
-    snodes: Vec<(usize, &'a mut [f64], &'a mut [f64])>,
-    est_flops: f64,
+/// Run a contiguous postorder span of supernodes on one arena — the
+/// whole forest (sequential mode) or one complete subtree (a DAG leaf
+/// task). In-span updates live on the arena's bump stack: a postorder
+/// walk consumes a supernode's children as exactly the top entries of
+/// the pending stack, so freeing them is a truncate. When `root` is
+/// set, that supernode's own update is harvested into a pooled
+/// [`BoundaryBuf`] (it must outlive this task) and returned.
+fn run_span(
+    ctx: &Ctx<'_>,
+    snodes: Vec<(usize, &mut [f64], &mut [f64])>,
+    root: Option<usize>,
+    arena: &mut FrontArena,
+    flops: &mut f64,
+) -> Result<Option<BoundaryBuf>, FactorError> {
+    let plan = ctx.plan;
+    // take the bookkeeping stack so it can be borrowed alongside `arena`
+    let mut pending = std::mem::take(&mut arena.pending);
+    pending.clear();
+    let mut out = None;
+    let mut result = Ok(());
+    for (s, lx_s, d_s) in snodes {
+        let nc = plan.children[s].len();
+        let base = pending.len() - nc; // the children sit on the stack top
+        debug_assert!(
+            pending[base..]
+                .iter()
+                .map(|&(c, _)| c)
+                .eq(plan.children[s].iter().copied()),
+            "postorder stack discipline violated"
+        );
+        if let Err(e) =
+            eliminate_snode(ctx, s, arena, &pending[base..], &[], lx_s, d_s, flops)
+        {
+            result = Err(e);
+            break;
+        }
+        if nc > 0 {
+            // children fully merged: pop them before emitting the update
+            let floor = pending[base].1;
+            pending.truncate(base);
+            arena.truncate_updates(floor);
+        }
+        let m = plan.rows[s].len();
+        if m == 0 {
+            continue; // assembly-forest root: nothing flows upward
+        }
+        let w = plan.first[s + 1] - plan.first[s];
+        let ld = w + m;
+        if root == Some(s) {
+            // the subtree's output crosses a task boundary
+            let mut up = arena::checkout_boundary(m * m);
+            harvest(&arena.front[..ld * ld], ld, w, m, &mut up);
+            out = Some(up);
+        } else {
+            let off = arena.push_update(m * m);
+            let (front, stack) = (&arena.front, &mut arena.stack);
+            harvest(&front[..ld * ld], ld, w, m, &mut stack[off..off + m * m]);
+            pending.push((s, off));
+        }
+    }
+    if result.is_ok() && root.is_none() {
+        debug_assert!(pending.is_empty(), "updates leaked past the forest walk");
+    }
+    arena.pending = pending;
+    result.map(|()| out)
 }
 
-/// Run one subtree sequentially; returns the root's update matrix.
-fn run_subtree(
-    task: SubtreeTask<'_>,
-    bx: &[f64],
-    plan: &SupernodalPlan,
-    cfg: &FactorConfig,
-) -> Result<(usize, Option<Update>, f64), FactorError> {
-    let mut scratch = Scratch::new(plan.n);
-    let mut pending: std::collections::HashMap<usize, Update> =
-        std::collections::HashMap::new();
+/// One node of the pipelined elimination DAG.
+enum DagTask<'a> {
+    /// A complete independent subtree (postorder span, arena-stacked
+    /// updates); `snodes` carries each member's factor slices.
+    Subtree {
+        root: usize,
+        snodes: Vec<(usize, &'a mut [f64], &'a mut [f64])>,
+    },
+    /// One supernode above the subtree frontier: runnable when its last
+    /// child's boundary update lands.
+    Top {
+        s: usize,
+        lx_s: &'a mut [f64],
+        d_s: &'a mut [f64],
+    },
+}
+
+/// Execute one DAG node: factor its fronts and publish the resulting
+/// update (if any) into the per-supernode boundary slot its parent
+/// reads. A task whose child failed upstream finds an empty slot and
+/// skips — the failure itself is already recorded by the failing task.
+fn run_dag_task(
+    ctx: &Ctx<'_>,
+    task: DagTask<'_>,
+    arena: &mut FrontArena,
+    slots: &[Mutex<Option<BoundaryBuf>>],
+) -> Result<f64, FactorError> {
+    let plan = ctx.plan;
     let mut flops = 0.0;
-    let root = task.root;
-    let mut root_up = None;
-    for (s, lx_s, d_s) in task.snodes {
-        let ups: Vec<Update> = plan.children[s]
-            .iter()
-            .filter_map(|c| pending.remove(c))
-            .collect();
-        let up = process_snode(
-            s, bx, plan, cfg, &mut scratch, ups, lx_s, d_s, &mut flops,
-        )?;
-        if s == root {
-            root_up = up;
-        } else if let Some(u) = up {
-            pending.insert(s, u);
+    match task {
+        DagTask::Subtree { root, snodes } => {
+            arena.begin(plan.n, plan.peak_front, plan.stack_peak[root]);
+            if let Some(up) = run_span(ctx, snodes, Some(root), arena, &mut flops)? {
+                *slots[root].lock().expect("update slot poisoned") = Some(up);
+            }
+        }
+        DagTask::Top { s, lx_s, d_s } => {
+            arena.begin(plan.n, plan.peak_front, 0);
+            // collect the children's updates in ascending child order —
+            // completion order is irrelevant, the DAG guarantees they
+            // all landed before this task became runnable
+            let mut kids: Vec<(usize, BoundaryBuf)> =
+                Vec::with_capacity(plan.children[s].len());
+            for &c in &plan.children[s] {
+                match slots[c].lock().expect("update slot poisoned").take() {
+                    Some(up) => kids.push((c, up)),
+                    None => return Ok(0.0), // child failed: skip silently
+                }
+            }
+            let refs: Vec<(usize, &[f64])> =
+                kids.iter().map(|(c, up)| (*c, &**up)).collect();
+            eliminate_snode(ctx, s, arena, &[], &refs, lx_s, d_s, &mut flops)?;
+            let m = plan.rows[s].len();
+            if m > 0 {
+                let w = plan.first[s + 1] - plan.first[s];
+                let ld = w + m;
+                let mut up = arena::checkout_boundary(m * m);
+                harvest(&arena.front[..ld * ld], ld, w, m, &mut up);
+                *slots[s].lock().expect("update slot poisoned") = Some(up);
+            }
+            // `kids` drops here: the consumed boundary buffers return to
+            // their pool for the next factorization
         }
     }
-    Ok((root, root_up, flops))
+    Ok(flops)
 }
 
-/// Supernodal multifrontal factorization. Sequential or subtree-parallel
+/// Supernodal multifrontal factorization. Sequential or DAG-pipelined
 /// per `cfg.mode`; both produce identical factors.
 pub fn factorize_supernodal(
     a: &CsrMatrix,
@@ -222,7 +363,11 @@ pub fn factorize_supernodal(
 /// ([`crate::solver::plan`]) uses: the cached
 /// [`crate::solver::SymbolicFactorization`] refreshes request values
 /// straight into `B` layout in a pooled buffer, skipping both the
-/// symmetrization and the per-call gather above.
+/// symmetrization and the per-call gather above. Steady state it
+/// allocates nothing for fronts (arena-backed) and copies no factor
+/// pattern (`Arc`-shared `lp`/`li`/`post`) — the only per-call heap
+/// traffic is the factor's own value arrays and O(#supernodes)
+/// scheduling bookkeeping.
 pub fn factorize_supernodal_gathered(
     bx: &[f64],
     plan: &SupernodalPlan,
@@ -239,6 +384,7 @@ pub fn factorize_supernodal_gathered(
     let mut lx = vec![0f64; nnz_l];
     let mut d = vec![0f64; n];
     let mut total_flops = 0.0;
+    let ctx = Ctx { bx, plan, cfg };
 
     let workers = if cfg.workers == 0 {
         pool::default_workers()
@@ -251,36 +397,68 @@ pub fn factorize_supernodal_gathered(
         && plan.total_flops() >= cfg.parallel_flop_min;
 
     if !parallel {
-        // sequential: walk all supernodes in postorder with one scratch
-        let mut scratch = Scratch::new(n);
-        let mut updates: Vec<Option<Update>> = (0..ns).map(|_| None).collect();
-        for s in 0..ns {
-            let ups: Vec<Update> = plan.children[s]
-                .iter()
-                .filter_map(|&c| updates[c].take())
-                .collect();
-            let (a0, e) = (plan.first[s], plan.first[s + 1]);
-            let (l0, l1) = (plan.lp[a0], plan.lp[e]);
-            let up = process_snode(
-                s,
-                &bx,
-                plan,
-                cfg,
-                &mut scratch,
-                ups,
-                &mut lx[l0..l1],
-                &mut d[a0..e],
-                &mut total_flops,
-            )?;
-            updates[s] = up;
+        // sequential: the whole forest as one postorder span on the
+        // calling thread's pinned arena
+        let mut snodes: Vec<(usize, &mut [f64], &mut [f64])> = Vec::with_capacity(ns);
+        {
+            let mut rest_lx: &mut [f64] = &mut lx;
+            let mut rest_d: &mut [f64] = &mut d;
+            for s in 0..ns {
+                let (a0, e) = (plan.first[s], plan.first[s + 1]);
+                let (head, tail) =
+                    std::mem::take(&mut rest_lx).split_at_mut(plan.lp[e] - plan.lp[a0]);
+                rest_lx = tail;
+                let (hd, td) = std::mem::take(&mut rest_d).split_at_mut(e - a0);
+                rest_d = td;
+                snodes.push((s, head, hd));
+            }
         }
+        let up = arena::with_serial_arena(|arena| {
+            arena.begin(n, plan.peak_front, plan.serial_stack_peak());
+            run_span(&ctx, snodes, None, arena, &mut total_flops)
+        })?;
+        debug_assert!(up.is_none(), "a full-forest walk emits no boundary update");
         return Ok(finish(plan, lx, d, total_flops));
     }
 
-    // --- parallel: split the factor into per-supernode slices, hand
-    // complete subtrees to workers, then finish the top sequentially
+    // --- pipelined: independent subtrees are DAG leaves, every
+    // supernode above the frontier is its own dependency-counted node
     let sch = schedule(plan, 2 * workers);
-    let n_tasks = sch.task_roots.len();
+    let n_sub = sch.task_roots.len();
+    // the executor pops its ready list from the back, so submit subtree
+    // tasks in ascending flop order — heaviest claimed first (LPT)
+    let mut order: Vec<usize> = (0..n_sub).collect();
+    order.sort_by(|&a, &b| {
+        plan.subtree_flops[sch.task_roots[a]]
+            .partial_cmp(&plan.subtree_flops[sch.task_roots[b]])
+            .unwrap()
+    });
+    let mut sub_index = vec![0usize; n_sub];
+    for (new, &old) in order.iter().enumerate() {
+        sub_index[old] = new;
+    }
+    let tops: Vec<usize> = (0..ns).filter(|&s| sch.task_of[s] == NONE).collect();
+    // producing DAG node per cross-task supernode (subtree roots + tops)
+    let mut dag_of = vec![NONE; ns];
+    for (old, &root) in sch.task_roots.iter().enumerate() {
+        dag_of[root] = sub_index[old];
+    }
+    for (j, &s) in tops.iter().enumerate() {
+        dag_of[s] = n_sub + j;
+    }
+    let n_dag = n_sub + tops.len();
+    let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n_dag];
+    let mut n_deps = vec![0usize; n_dag];
+    for (j, &s) in tops.iter().enumerate() {
+        for &c in &plan.children[s] {
+            debug_assert!(dag_of[c] != NONE, "top child is neither root nor top");
+            dependents[dag_of[c]].push(n_sub + j);
+            n_deps[n_sub + j] += 1;
+        }
+    }
+
+    // split the factor into per-supernode slices: every task owns the
+    // disjoint `&mut` ranges its supernodes write — no output locks
     let mut lx_parts: Vec<Option<&mut [f64]>> = Vec::with_capacity(ns);
     let mut d_parts: Vec<Option<&mut [f64]>> = Vec::with_capacity(ns);
     {
@@ -297,45 +475,56 @@ pub fn factorize_supernodal_gathered(
             rest_d = td;
         }
     }
-    let mut tasks: Vec<SubtreeTask<'_>> = sch
-        .task_roots
-        .iter()
-        .map(|&root| SubtreeTask {
-            root,
+    let mut tasks: Vec<DagTask<'_>> = Vec::with_capacity(n_dag);
+    for &old in &order {
+        tasks.push(DagTask::Subtree {
+            root: sch.task_roots[old],
             snodes: Vec::new(),
-            est_flops: plan.subtree_flops[root],
-        })
-        .collect();
+        });
+    }
     for s in 0..ns {
         let t = sch.task_of[s];
         if t != NONE {
-            tasks[t].snodes.push((
+            let DagTask::Subtree { snodes, .. } = &mut tasks[sub_index[t]] else {
+                unreachable!("subtree tasks precede tops")
+            };
+            snodes.push((
                 s,
                 lx_parts[s].take().expect("slice claimed twice"),
                 d_parts[s].take().expect("slice claimed twice"),
             ));
         }
     }
-    // longest-processing-time order: heaviest subtrees claimed first
-    tasks.sort_by(|a, b| b.est_flops.partial_cmp(&a.est_flops).unwrap());
+    for &s in &tops {
+        tasks.push(DagTask::Top {
+            s,
+            lx_s: lx_parts[s].take().expect("top slice claimed twice"),
+            d_s: d_parts[s].take().expect("top slice claimed twice"),
+        });
+    }
 
-    let mut updates: Vec<Option<Update>> = (0..ns).map(|_| None).collect();
-    let results = pool::parallel_consume(tasks, workers.min(n_tasks), |_, task| {
-        run_subtree(task, &bx, plan, cfg)
-    });
+    // cross-task updates flow through per-supernode slots
+    let slots: Vec<Mutex<Option<BoundaryBuf>>> = (0..ns).map(|_| Mutex::new(None)).collect();
+    let results = pool::parallel_dag(
+        tasks,
+        &dependents,
+        &n_deps,
+        workers.min(n_dag),
+        arena::checkout_arena,
+        |arena, _i, task| run_dag_task(&ctx, task, arena, &slots),
+    );
+    drop(lx_parts);
+    drop(d_parts);
+
     let mut first_err: Option<(usize, FactorError)> = None;
     for r in results {
         match r {
-            Ok((root, up, fl)) => {
-                updates[root] = up;
-                total_flops += fl;
-            }
+            Ok(fl) => total_flops += fl,
             Err(e) => {
-                // order failures by elimination (postorder) position: a
-                // subtree failure is independent of the other subtrees,
-                // so the earliest one is exactly what the sequential
-                // walk would have hit first — the modes stay
-                // interchangeable even in their errors
+                // order failures by elimination (postorder) position:
+                // the earliest one is exactly what the sequential walk
+                // would have hit first — the modes stay interchangeable
+                // even in their errors
                 let pos = match &e {
                     FactorError::ZeroPivot(k) => plan.pnew[*k],
                     _ => usize::MAX,
@@ -349,40 +538,13 @@ pub fn factorize_supernodal_gathered(
     if let Some((_, e)) = first_err {
         return Err(e);
     }
-
-    // sequential top: ascending order is a valid schedule (children
-    // always precede parents), subtree roots' updates are already in place
-    let mut scratch = Scratch::new(n);
-    for s in 0..ns {
-        if sch.task_of[s] != NONE {
-            continue;
-        }
-        let ups: Vec<Update> = plan.children[s]
-            .iter()
-            .filter_map(|&c| updates[c].take())
-            .collect();
-        let up = process_snode(
-            s,
-            &bx,
-            plan,
-            cfg,
-            &mut scratch,
-            ups,
-            lx_parts[s].take().expect("top slice claimed twice"),
-            d_parts[s].take().expect("top slice claimed twice"),
-            &mut total_flops,
-        )?;
-        updates[s] = up;
-    }
-    drop(lx_parts);
-    drop(d_parts);
     Ok(finish(plan, lx, d, total_flops))
 }
 
 fn finish(plan: &SupernodalPlan, lx: Vec<f64>, d: Vec<f64>, flops: f64) -> LdlFactor {
     LdlFactor {
         n: plan.n,
-        lp: plan.lp.clone(),
+        lp: plan.lp.clone(), // Arc clones: no pattern copy per request
         li: plan.li.clone(),
         lx,
         d,
@@ -470,6 +632,67 @@ mod tests {
     }
 
     #[test]
+    fn pipelined_is_bit_identical_on_adversarial_trees() {
+        // deep chains (path graphs → one long dependency spine) and wide
+        // flat trees (stars → one huge root front, many leaves) are the
+        // two extremes of the DAG schedule
+        let n = 240;
+        let mut path = CooMatrix::new(n, n);
+        let mut star = CooMatrix::new(n, n);
+        for i in 0..n {
+            path.push(i, i, 4.0);
+            star.push(i, i, 4.0);
+            if i + 1 < n {
+                path.push_sym(i, i + 1, -1.0);
+            }
+            if i > 0 {
+                star.push_sym(0, i, -1.0);
+            }
+        }
+        for raw in [path.to_csr(), star.to_csr()] {
+            let a = symmetrize_spd_like(&raw, 2.0);
+            let p = plan(&a, &serial_cfg());
+            let serial = factorize_supernodal(&a, &p, &serial_cfg()).unwrap();
+            let par = factorize_supernodal(&a, &p, &parallel_cfg()).unwrap();
+            assert_eq!(serial.lx, par.lx, "adversarial tree diverged");
+            assert_eq!(serial.d, par.d);
+        }
+    }
+
+    #[test]
+    fn steady_state_factorization_is_allocation_free_for_fronts() {
+        // first factorization sizes the thread-pinned arena; from then on
+        // the numeric phase must never touch the allocator for fronts —
+        // the thread-local grow counter is exact (no cross-test races)
+        let a = symmetrize_spd_like(&crate::collection::generators::grid2d(20, 15), 2.0);
+        let p = plan(&a, &serial_cfg());
+        let bx: Vec<f64> = p.b_from.iter().map(|&s| a.data[s]).collect();
+        let f1 = factorize_supernodal_gathered(&bx, &p, &serial_cfg()).unwrap();
+        let warm = arena::thread_grow_events();
+        let f2 = factorize_supernodal_gathered(&bx, &p, &serial_cfg()).unwrap();
+        assert_eq!(
+            arena::thread_grow_events(),
+            warm,
+            "warm factorization allocated front memory"
+        );
+        assert_eq!(f1.lx, f2.lx, "arena reuse must be observation-free");
+        assert_eq!(f1.d, f2.d);
+    }
+
+    #[test]
+    fn factor_shares_plan_pattern_without_copying() {
+        let a = symmetrize_spd_like(&crate::collection::generators::grid2d(9, 9), 2.0);
+        let p = plan(&a, &serial_cfg());
+        let f = factorize_supernodal(&a, &p, &serial_cfg()).unwrap();
+        assert!(
+            std::sync::Arc::ptr_eq(&f.lp, &p.lp)
+                && std::sync::Arc::ptr_eq(&f.li, &p.li)
+                && std::sync::Arc::ptr_eq(f.post.as_ref().unwrap(), &p.post),
+            "factor must share the plan's structural arrays, not copy them"
+        );
+    }
+
+    #[test]
     fn prop_supernodal_agrees_with_scalar() {
         prop::check("supernodal-vs-scalar", 12, |rng| {
             let n = rng.range(2, 90);
@@ -502,6 +725,26 @@ mod tests {
         let p = plan(&a, &serial_cfg());
         let err = factorize_supernodal(&a, &p, &serial_cfg()).unwrap_err();
         assert_eq!(err, FactorError::ZeroPivot(1));
+    }
+
+    #[test]
+    fn zero_pivot_agrees_between_serial_and_pipelined() {
+        // three disconnected chains, two of which start on a zero pivot
+        // (chain starts receive no updates, so the zero survives to
+        // elimination): both modes must report the same failing column —
+        // the earliest one in postorder
+        let mut coo = CooMatrix::new(60, 60);
+        for i in 0..60 {
+            coo.push(i, i, if i == 20 || i == 40 { 0.0 } else { 4.0 });
+            if i + 1 < 60 && (i + 1) % 20 != 0 {
+                coo.push_sym(i, i + 1, -1.0);
+            }
+        }
+        let a = coo.to_csr();
+        let p = plan(&a, &serial_cfg());
+        let es = factorize_supernodal(&a, &p, &serial_cfg()).unwrap_err();
+        let ep = factorize_supernodal(&a, &p, &parallel_cfg()).unwrap_err();
+        assert_eq!(es, ep, "modes must fail interchangeably");
     }
 
     #[test]

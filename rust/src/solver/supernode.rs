@@ -32,6 +32,8 @@
 //! [`crate::solver::plan`] caches exactly this object, together with the
 //! scalar symbolic and a value-refresh gather).
 
+use std::sync::Arc;
+
 use super::etree::{first_descendants, postorder, SymbolicCost, NONE};
 use super::numeric::{self, Symbolic};
 use crate::sparse::CsrMatrix;
@@ -110,7 +112,9 @@ impl FactorConfig {
 pub struct SupernodalPlan {
     pub n: usize,
     /// `post[k]` = original column sitting at postorder position `k`.
-    pub post: Vec<usize>,
+    /// `Arc`ed so every [`super::numeric::LdlFactor`] the plan produces
+    /// shares it instead of copying O(n) per factorization.
+    pub post: Arc<Vec<usize>>,
     /// `pnew[old]` = postorder position (inverse of `post`).
     pub pnew: Vec<usize>,
     /// Pattern of the postordered matrix `B = Q·A·Qᵀ` (CSR), plus the
@@ -132,15 +136,25 @@ pub struct SupernodalPlan {
     /// Assembly-tree children (ascending).
     pub children: Vec<Vec<usize>>,
     /// Exact off-diagonal structure of `L_B`: column pointers + row
-    /// indices (ascending per column).
-    pub lp: Vec<usize>,
-    pub li: Vec<usize>,
+    /// indices (ascending per column). `Arc`ed: the factor pattern is
+    /// pattern-pure, so every `LdlFactor` produced from this plan shares
+    /// these arrays instead of paying an O(nnz(L)) copy per request —
+    /// the last structural copy the warm serving path used to make.
+    pub lp: Arc<Vec<usize>>,
+    pub li: Arc<Vec<usize>>,
     /// Dense panel multiply-adds per supernode (includes padding).
     pub snode_flops: Vec<f64>,
     /// `snode_flops` aggregated over each subtree.
     pub subtree_flops: Vec<f64>,
     /// Explicit zeros introduced by amalgamation (diagnostics).
     pub padded: u64,
+    /// Dense elements (`ld²`) of the largest frontal matrix — sizes the
+    /// per-worker arena's front buffer once per task.
+    pub peak_front: usize,
+    /// Per supernode: peak update-stack elements of a postorder walk of
+    /// its subtree (the classical multifrontal stack bound, including the
+    /// supernode's own update) — sizes a subtree task's arena stack.
+    pub stack_peak: Vec<usize>,
 }
 
 impl SupernodalPlan {
@@ -157,6 +171,24 @@ impl SupernodalPlan {
 
     pub fn total_flops(&self) -> f64 {
         self.snode_flops.iter().sum()
+    }
+
+    /// Update-stack peak (elements) of a whole-forest postorder walk.
+    /// The stack drains completely between assembly-forest trees, so
+    /// this is the max of [`Self::stack_peak`] over the roots — what the
+    /// sequential driver sizes its arena with.
+    pub fn serial_stack_peak(&self) -> usize {
+        (0..self.n_supernodes())
+            .filter(|&s| self.sparent[s] == NONE)
+            .map(|s| self.stack_peak[s])
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Peak dense frontal-matrix footprint in bytes (`8 · peak_front`) —
+    /// the per-worker arena sizing, reported by `bench_solver`.
+    pub fn peak_front_bytes(&self) -> usize {
+        8 * self.peak_front
     }
 }
 
@@ -359,13 +391,18 @@ pub fn plan_with(a: &CsrMatrix, sym: &Symbolic, cfg: &FactorConfig) -> Supernoda
     let mut sparent = vec![NONE; ns];
     let mut children: Vec<Vec<usize>> = vec![Vec::new(); ns];
     let mut snode_flops = vec![0f64; ns];
+    let mut peak_front = 0usize;
+    let mut upd = vec![0usize; ns]; // update-matrix elements (m²)
     for (k, s) in merged.iter().enumerate() {
         if let Some(&r) = s.rows.first() {
             let p = snode_of_col[r];
             sparent[k] = p;
             children[p].push(k);
         }
-        let ld = (s.end - s.begin) + s.rows.len();
+        let m = s.rows.len();
+        let ld = (s.end - s.begin) + m;
+        peak_front = peak_front.max(ld * ld);
+        upd[k] = m * m;
         for t in 0..(s.end - s.begin) {
             let h = (ld - 1 - t) as f64;
             snode_flops[k] += h * (h + 3.0) / 2.0;
@@ -378,13 +415,28 @@ pub fn plan_with(a: &CsrMatrix, sym: &Symbolic, cfg: &FactorConfig) -> Supernoda
             subtree_flops[sparent[k]] += subtree_flops[k];
         }
     }
+    // update-stack peak per subtree: while child c_i's subtree runs, the
+    // updates of c_1..c_{i-1} sit beneath it; after the last child the
+    // whole child set is resident, then popped and replaced by this
+    // supernode's own update (children precede parents in index order,
+    // so one ascending pass sees every child before its parent)
+    let mut stack_peak = vec![0usize; ns];
+    for k in 0..ns {
+        let mut resident = 0usize;
+        let mut pk = 0usize;
+        for &c in &children[k] {
+            pk = pk.max(resident + stack_peak[c]);
+            resident += upd[c];
+        }
+        stack_peak[k] = pk.max(resident).max(upd[k]);
+    }
     for s in merged {
         rows.push(s.rows);
     }
 
     SupernodalPlan {
         n,
-        post,
+        post: Arc::new(post),
         pnew,
         b_indptr,
         b_indices,
@@ -394,11 +446,13 @@ pub fn plan_with(a: &CsrMatrix, sym: &Symbolic, cfg: &FactorConfig) -> Supernoda
         rows,
         sparent,
         children,
-        lp,
-        li,
+        lp: Arc::new(lp),
+        li: Arc::new(li),
         snode_flops,
         subtree_flops,
         padded: padded_total,
+        peak_front,
+        stack_peak,
     }
 }
 
@@ -513,6 +567,23 @@ mod tests {
                 }
             }
         }
+        // arena sizing: the recorded peaks bound every front and every
+        // child-update set (what FrontArena::begin trusts)
+        let mut max_ld2 = 0usize;
+        for s in 0..ns {
+            let w = p.first[s + 1] - p.first[s];
+            let m = p.rows[s].len();
+            max_ld2 = max_ld2.max((w + m) * (w + m));
+            let child_elems: usize =
+                p.children[s].iter().map(|&c| p.rows[c].len().pow(2)).sum();
+            assert!(p.stack_peak[s] >= m * m, "snode {s}: own update exceeds peak");
+            assert!(p.stack_peak[s] >= child_elems, "snode {s}: children exceed peak");
+            for &c in &p.children[s] {
+                assert!(p.stack_peak[s] >= p.stack_peak[c], "peak not monotone");
+            }
+        }
+        assert_eq!(p.peak_front, max_ld2);
+        assert_eq!(p.peak_front_bytes(), 8 * max_ld2);
         // exact structure totals match the scalar symbolic cost, and the
         // plan's own cost (computed on B) agrees — postorder is an
         // equivalent reordering

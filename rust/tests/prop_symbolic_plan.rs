@@ -8,6 +8,17 @@
 //! rows, dense rows, disconnected components), all 7 paper algorithms,
 //! all three factor modes ({Scalar, Supernodal, SupernodalParallel}),
 //! and under concurrent plan-cache hammering from `util::pool` workers.
+//!
+//! Two further lines from the zero-alloc multifrontal rebuild:
+//!
+//! * the **DAG-pipelined** schedule (SupernodalParallel: subtree tasks +
+//!   dependency-counted top of the tree) produces `lx`/`d` exactly equal
+//!   to the sequential supernodal walk, across all 7 algorithms on
+//!   adversarial assembly trees — path graphs (deep chains), stars
+//!   (wide flat trees), and random adversarial patterns;
+//! * a warm `factorize_with_plan` performs **zero heap allocations for
+//!   fronts**, asserted through the solver arena's thread-local growth
+//!   counter.
 
 use std::sync::Arc;
 
@@ -142,6 +153,85 @@ fn plan_reuse_is_bit_identical_across_algorithms_and_modes() {
             }
         }
     });
+}
+
+/// Path graph (tridiagonal): the assembly tree degenerates into one
+/// deep chain — maximal dependency depth, minimal parallelism.
+fn path_matrix(n: usize) -> CsrMatrix {
+    let mut m = CooMatrix::new(n, n);
+    for i in 0..n {
+        m.push(i, i, 4.0);
+        if i + 1 < n {
+            m.push_sym(i, i + 1, -1.0);
+        }
+    }
+    m.to_csr()
+}
+
+/// Star graph: one hub — the tree flattens into many leaves under one
+/// huge root front (the widest possible top of the tree).
+fn star_matrix(n: usize) -> CsrMatrix {
+    let mut m = CooMatrix::new(n, n);
+    for i in 0..n {
+        m.push(i, i, 4.0);
+        if i > 0 {
+            m.push_sym(0, i, -1.0);
+        }
+    }
+    m.to_csr()
+}
+
+#[test]
+fn dag_pipelined_schedule_is_bit_identical_across_adversarial_trees() {
+    let mut rng = Rng::new(0xD496);
+    let serial_cfg = all_mode_configs()[1]; // Supernodal (sequential walk)
+    let dag_cfg = all_mode_configs()[2]; // SupernodalParallel (task DAG)
+    let cases = [
+        ("path/deep-chain", path_matrix(150)),
+        ("star/wide-flat", star_matrix(150)),
+        ("adversarial", adversarial_matrix(&mut rng)),
+    ];
+    for (tag, raw) in &cases {
+        for alg in ReorderAlgorithm::PAPER_SET {
+            let seed = rng.next_u64();
+            let spd = smr::solver::prepare(raw, &serial_cfg);
+            let perm = Arc::new(alg.compute(&spd, seed));
+            let serial_plan = plan_solve(raw, perm.clone(), &serial_cfg);
+            let dag_plan = plan_solve(raw, perm, &dag_cfg);
+            let mut ws = NumericWorkspace::new();
+            let fs = factorize_with_plan(raw, &serial_plan, &mut ws).unwrap();
+            let fd = factorize_with_plan(raw, &dag_plan, &mut ws).unwrap();
+            assert_factors_identical(&fs, &fd, &format!("{tag} / {alg}"));
+            // and both equal the from-scratch reference
+            let reference = scratch_factor(raw, alg, seed, &serial_cfg);
+            assert_factors_identical(&reference, &fd, &format!("{tag} / {alg} vs scratch"));
+        }
+    }
+}
+
+#[test]
+fn steady_state_plan_replay_is_allocation_free_for_fronts() {
+    // the first replay sizes the thread-pinned arena; every later one
+    // must leave the allocator untouched for fronts (the thread-local
+    // counter is exact — concurrent test threads cannot perturb it)
+    let mut rng = Rng::new(0xA110C);
+    let cfg = all_mode_configs()[1]; // sequential supernodal
+    for raw in [path_matrix(120), star_matrix(120), adversarial_matrix(&mut rng)] {
+        let spd = smr::solver::prepare(&raw, &cfg);
+        let perm = Arc::new(ReorderAlgorithm::Amd.compute(&spd, 11));
+        let plan = plan_solve(&raw, perm, &cfg);
+        let mut ws = NumericWorkspace::new();
+        let f1 = factorize_with_plan(&raw, &plan, &mut ws).unwrap();
+        let warm = smr::solver::arena::thread_grow_events();
+        let f2 = factorize_with_plan(&raw, &plan, &mut ws).unwrap();
+        assert_eq!(
+            smr::solver::arena::thread_grow_events(),
+            warm,
+            "warm plan replay allocated front memory (n={})",
+            raw.nrows
+        );
+        assert_factors_identical(&f1, &f2, "arena reuse must be observation-free");
+    }
 }
 
 #[test]
