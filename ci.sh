@@ -31,9 +31,10 @@ cargo test -q --test integration_serving
 cargo test -q --lib util::pool::tests::dag
 
 # Bench-artifact schema gates: any bench JSON that has been produced
-# must parse and carry its schema (cold/warm + cache + arena counters
-# for serving; peak_front_bytes/allocs + replay lanes for the solver),
-# validated via util/json.rs by examples/check_bench.rs.
+# must parse and carry its schema (cold/warm + cache + arena counters +
+# batched burst records/coalescing counters for serving;
+# peak_front_bytes/allocs + replay/batched_warm/core_scaling lanes for
+# the solver), validated via util/json.rs by examples/check_bench.rs.
 bench_artifacts=()
 for f in BENCH_serving.json BENCH_solver.json; do
   [[ -f "$f" ]] && bench_artifacts+=("$f")

@@ -5,11 +5,16 @@
 //! Every argument must parse as a bench artifact: a JSON object with a
 //! non-empty `results` array of records. For `bench_serving` artifacts
 //! the serving schema is enforced too: per-record cold/warm latencies,
-//! the `warm_alloc_free` arena flag, and top-level cache hit/miss/evict
-//! plus front-arena counters. For `bench_solver` artifacts every record
-//! must carry the `peak_front_bytes` / `allocs` columns and the replay
-//! lanes (`planned_numeric`, `arena_numeric`, `pipelined`) must all be
-//! present. Exits non-zero (listing every violation) on malformed
+//! the `warm_alloc_free` arena flag, top-level cache hit/miss/evict
+//! plus front-arena counters, and the batched warm path (a non-empty
+//! `batched` burst array plus the engine's `batches` coalescing
+//! counters). For `bench_solver` artifacts every record must carry the
+//! `peak_front_bytes` / `allocs` columns, the replay lanes
+//! (`planned_numeric`, `arena_numeric`, `pipelined`) and the
+//! `batched_warm` lane (with its `batch_k` / `per_request_s` /
+//! `throughput_per_s` amortization columns) must all be present, and
+//! at least one `core_scaling_w*` lane must report the worker sweep.
+//! Exits non-zero (listing every violation) on malformed
 //! input, so a bench that wrote garbage fails CI instead of silently
 //! polluting the perf trajectory.
 
@@ -62,12 +67,21 @@ fn check_file(path: &str) -> Vec<String> {
             }
             if let Some(mode) = rec.get("mode").and_then(|m| m.as_str()) {
                 lanes.push(mode);
+                // batched lanes carry the multi-RHS amortization columns
+                if mode == "batched_warm" {
+                    for key in ["batch_k", "per_request_s", "throughput_per_s"] {
+                        check_num(rec, key, &mut errs, &ctx);
+                    }
+                }
             }
         }
-        for lane in ["planned_numeric", "arena_numeric", "pipelined"] {
+        for lane in ["planned_numeric", "arena_numeric", "pipelined", "batched_warm"] {
             if !lanes.contains(&lane) {
                 errs.push(format!("{path}: missing `{lane}` lane in results"));
             }
+        }
+        if !lanes.iter().any(|l| l.starts_with("core_scaling_w")) {
+            errs.push(format!("{path}: missing `core_scaling_w*` lanes in results"));
         }
         match v.get("fronts") {
             Some(fr) => {
@@ -120,6 +134,29 @@ fn check_file(path: &str) -> Vec<String> {
                 }
             }
             None => errs.push(format!("{path}: missing `workspaces` object")),
+        }
+        // batched warm path: burst records + engine coalescing counters
+        match v.get("batched").and_then(|b| b.as_arr()) {
+            Some(recs) if !recs.is_empty() => {
+                for (i, rec) in recs.iter().enumerate() {
+                    let ctx = format!("{path}: batched[{i}]");
+                    for key in ["batch_k", "batch_s", "per_request_s", "throughput_per_s"] {
+                        check_num(rec, key, &mut errs, &ctx);
+                    }
+                }
+            }
+            _ => errs.push(format!("{path}: missing non-empty `batched` array")),
+        }
+        match v.get("batches") {
+            Some(bt) => {
+                for key in ["batches", "coalesced", "window_timeouts"] {
+                    check_num(bt, key, &mut errs, &format!("{path}: batches"));
+                }
+                if bt.get("size_hist").and_then(|h| h.as_arr()).is_none() {
+                    errs.push(format!("{path}: batches: missing `size_hist` array"));
+                }
+            }
+            None => errs.push(format!("{path}: missing `batches` object")),
         }
         check_num(&v, "requests", &mut errs, path);
     }

@@ -9,8 +9,13 @@
 //! latency (factor + triangular solves — all a warm request does after
 //! prediction), plus the engine's symbolic-plan-cache and ordering-cache
 //! hit/miss/evict counters and workspace / numeric-scratch pool
-//! counters. `ci.sh` validates this artifact's schema (via
-//! `examples/check_bench`) whenever it is present.
+//! counters. A `batched` array records same-plan k-request bursts
+//! served through `serve_batch` (batch latency, per-request
+//! amortization, throughput), and a `batches` object snapshots the
+//! engine's coalescing counters (groups formed, requests coalesced,
+//! admission-window timeouts, group-size histogram). `ci.sh` validates
+//! this artifact's schema (via `examples/check_bench`) whenever it is
+//! present.
 
 use smr::collection::generate_mini_collection;
 use smr::coordinator::service::Backend;
@@ -112,6 +117,72 @@ fn main() {
         ]));
     }
 
+    // Batched warm path: same-pattern, value-distinct bursts through
+    // `serve_batch`, which coalesces each burst into ONE k-wide
+    // traversal of the shared plan. Records land in a separate
+    // top-level `batched` array (they carry batch columns, not the
+    // cold/warm pair) with per-request amortization against this
+    // pattern's single-request warm minimum.
+    section("serve_batch: same-plan k-request bursts");
+    let nm = &serve_coll[0];
+    let mut single_warm = f64::INFINITY;
+    {
+        let mut b = Bencher::coarse();
+        b.bench(&format!("{}/warm_single", nm.name), || {
+            let t = Timer::start();
+            let r = engine.serve(&nm.matrix).expect("warm request serves");
+            single_warm = single_warm.min(t.elapsed_s());
+            r
+        });
+    }
+    let variants: Vec<_> = (0..8)
+        .map(|l| {
+            let mut m = nm.matrix.clone();
+            for v in m.data.iter_mut() {
+                *v *= 1.0 + 0.0625 * l as f64;
+            }
+            m
+        })
+        .collect();
+    let mut batched_records = Vec::new();
+    for k in [2usize, 4, 8] {
+        let mats: Vec<_> = variants[..k].iter().collect();
+        // warm-up burst: sizes the k-wide front arenas once
+        engine.serve_batch(&mats).expect("batched requests serve");
+        let mut b = Bencher::coarse();
+        let m = b
+            .bench(&format!("{}/batched_k{k}", nm.name), || {
+                let rs = engine.serve_batch(&mats).expect("batched requests serve");
+                assert!(
+                    rs.iter().all(|r| r.plan_hit && r.batch_k == k),
+                    "burst must coalesce into one k-wide group"
+                );
+                rs
+            })
+            .clone();
+        let per_request_s = m.min_s / k as f64;
+        println!(
+            "    k={k}: {:.3} ms/batch = {:.3} ms/request ({:.1}x vs single warm)",
+            m.min_s * 1e3,
+            per_request_s * 1e3,
+            single_warm / per_request_s.max(1e-12),
+        );
+        batched_records.push(json::obj(vec![
+            ("name", json::s(&format!("{}/batched_k{k}", nm.name))),
+            ("n", json::num(nm.matrix.nrows as f64)),
+            ("nnz", json::num(nm.matrix.nnz() as f64)),
+            ("batch_k", json::num(k as f64)),
+            ("batch_s", json::num(m.min_s)),
+            ("per_request_s", json::num(per_request_s)),
+            ("throughput_per_s", json::num(k as f64 / m.min_s.max(1e-12))),
+            (
+                "speedup_vs_single",
+                json::num(single_warm / per_request_s.max(1e-12)),
+            ),
+        ]));
+    }
+    report.set("batched", json::arr(batched_records));
+
     // Global per-stage counters.
     let stats = engine.stats();
     section("serving stats");
@@ -135,6 +206,20 @@ fn main() {
         stats.numeric.creates,
         stats.service.batches,
         stats.service.mean_batch_size
+    );
+    let hist: Vec<String> = stats
+        .batches
+        .size_hist
+        .iter()
+        .enumerate()
+        .map(|(i, c)| format!("{}:{c}", i + 1))
+        .collect();
+    println!(
+        "solve batches: {} formed / {} requests coalesced / {} window timeouts | size hist {{{}}}",
+        stats.batches.batches,
+        stats.batches.coalesced,
+        stats.batches.window_timeouts,
+        hist.join(" "),
     );
     report.set(
         "plans",
@@ -192,6 +277,27 @@ fn main() {
                 json::num(stats.fronts.boundary.checkouts as f64),
             ),
             ("grows", json::num(stats.fronts.grows as f64)),
+        ]),
+    );
+    report.set(
+        "batches",
+        json::obj(vec![
+            ("batches", json::num(stats.batches.batches as f64)),
+            ("coalesced", json::num(stats.batches.coalesced as f64)),
+            (
+                "window_timeouts",
+                json::num(stats.batches.window_timeouts as f64),
+            ),
+            (
+                "size_hist",
+                json::arr(
+                    stats
+                        .batches
+                        .size_hist
+                        .iter()
+                        .map(|&c| json::num(c as f64)),
+                ),
+            ),
         ]),
     );
     report.set("requests", json::num(stats.requests as f64));

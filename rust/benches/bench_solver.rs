@@ -19,10 +19,24 @@
 //!   steady-state serving cost, expected `allocs == 0`;
 //! * `pipelined`      — the DAG-pipelined replay (subtree parallelism +
 //!   pipelined top of the tree) after warmup, also `allocs == 0`.
+//!
+//! Two lane families ride along per matrix:
+//!
+//! * `batched_warm` (k ∈ {1, 2, 4, 8}) — k same-pattern, value-distinct
+//!   requests factored by ONE k-wide traversal
+//!   (`factorize_with_plan_batch` on the pipelined plan). Each record
+//!   carries `batch_k`, `throughput_per_s` (requests per second) and
+//!   `per_request_s` (batch wall time / k); `speedup_vs_single` is the
+//!   per-request amortization against the single-request `pipelined`
+//!   lane — the number the batching tentpole claims ≥ 3× at k = 8.
+//! * `core_scaling_w{N}` — the pipelined replay pinned to explicit
+//!   worker counts (1, 2, 4, …, default), exposing how far the DAG
+//!   schedule scales before the top of the tree serializes.
 
 use smr::collection::generators as g;
 use smr::reorder::ReorderAlgorithm;
 use smr::solver::{self, arena, FactorConfig, FactorMode, SolverConfig};
+use smr::sparse::CsrMatrix;
 use smr::util::bench::{section, Bencher, JsonReport};
 use smr::util::json;
 use smr::util::pool;
@@ -174,6 +188,7 @@ fn main() {
                     ("peak_front_bytes", json::num(plan.peak_front_bytes() as f64)),
                     ("allocs", json::num(allocs as f64)),
                 ]));
+                m.min_s
             };
         // cold lane on a FRESH thread: its thread-pinned serial arena
         // has never seen any plan, so the alloc column genuinely counts
@@ -185,7 +200,85 @@ fn main() {
                 .expect("cold planned_numeric lane");
         });
         push_plan_lane(&mut b, "arena_numeric", &plan, &mut ws, 1);
-        push_plan_lane(&mut b, "pipelined", &pipe_plan, &mut ws, 3);
+        let pipelined_warm = push_plan_lane(&mut b, "pipelined", &pipe_plan, &mut ws, 3);
+
+        // core-count scaling: the pipelined numeric replay at explicit
+        // worker counts; the mode name encodes the count
+        let max_w = pool::default_workers().max(1);
+        let mut w = 1usize;
+        loop {
+            let scfg = SolverConfig {
+                factor: FactorConfig {
+                    workers: w,
+                    ..mode_cfg(FactorMode::SupernodalParallel)
+                },
+                ..cfg
+            };
+            let splan = solver::plan_solve(raw, std::sync::Arc::new(perm.clone()), &scfg);
+            push_plan_lane(&mut b, &format!("core_scaling_w{w}"), &splan, &mut ws, 2);
+            if w >= max_w {
+                break;
+            }
+            w = (w * 2).min(max_w);
+        }
+
+        // batched warm lanes: k same-pattern, value-distinct requests
+        // through one k-wide traversal of the pipelined plan. Warmed up
+        // first so the k-wide arena sizing (one counted growth per new
+        // (plan, k)) stays out of the timed window — steady-state
+        // batches are allocation-free for fronts like the single path.
+        let variants: Vec<CsrMatrix> = (0..8)
+            .map(|l| {
+                let mut m = raw.clone();
+                for v in m.data.iter_mut() {
+                    *v *= 1.0 + 0.0625 * l as f64;
+                }
+                m
+            })
+            .collect();
+        let mut wss: Vec<solver::NumericWorkspace> =
+            (0..8).map(|_| solver::NumericWorkspace::new()).collect();
+        for k in [1usize, 2, 4, 8] {
+            let mats: Vec<&CsrMatrix> = variants[..k].iter().collect();
+            for r in solver::factorize_with_plan_batch(&mats, &pipe_plan, &mut wss[..k]) {
+                r.unwrap();
+            }
+            let label = format!("{name}/factorize/batched_warm_k{k}");
+            let g0 = arena::grow_events();
+            let m = b
+                .bench(&label, || {
+                    for r in
+                        solver::factorize_with_plan_batch(&mats, &pipe_plan, &mut wss[..k])
+                    {
+                        r.unwrap();
+                    }
+                })
+                .clone();
+            let allocs = arena::grow_events() - g0;
+            let per_request_s = m.min_s / k as f64;
+            report.push(json::obj(vec![
+                ("name", json::s(&label)),
+                ("family", json::s(family)),
+                ("n", json::num(a.nrows as f64)),
+                ("nnz", json::num(a.nnz() as f64)),
+                ("fill", json::num(sym.cost.fill as f64)),
+                ("mode", json::s("batched_warm")),
+                ("batch_k", json::num(k as f64)),
+                ("wall_s", json::num(m.min_s)),
+                ("mean_s", json::num(m.mean_s)),
+                ("per_request_s", json::num(per_request_s)),
+                ("throughput_per_s", json::num(k as f64 / m.min_s.max(1e-12))),
+                (
+                    "speedup_vs_single",
+                    json::num(pipelined_warm / per_request_s.max(1e-12)),
+                ),
+                (
+                    "peak_front_bytes",
+                    json::num((pipe_plan.peak_front_bytes() * k) as f64),
+                ),
+                ("allocs", json::num(allocs as f64)),
+            ]));
+        }
 
         // solve cost rides along (shared by every mode)
         let an = solver::analyze_with(&pa, &mode_cfg(FactorMode::Supernodal));

@@ -49,5 +49,7 @@ pub mod trainer;
 
 pub use pipeline::{PipelineReport, SelectionPipeline};
 pub use service::{BatcherConfig, PredictionService, ServiceStats, ServiceStatsSnapshot};
-pub use serving::{ServingConfig, ServingEngine, ServingReport, ServingStats};
+pub use serving::{
+    BatchConfig, BatchStats, ServingConfig, ServingEngine, ServingReport, ServingStats,
+};
 pub use trainer::{train_forest, train_mlp, TrainedForest, TrainedMlp};

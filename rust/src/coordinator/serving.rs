@@ -47,10 +47,40 @@
 //!                   solve_with_plan (numeric only, pooled scratch)
 //! ```
 //!
+//! ## Batched warm path (same-plan request coalescing)
+//!
+//! Warm traffic is bursty and pattern-repetitive: the only per-request
+//! cost left is one full multifrontal traversal, and k concurrent
+//! requests sharing a plan pay it k times over the same symbolic
+//! structure. With [`BatchConfig::max_batch`] ≥ 2, warm requests enter a
+//! per-`PlanKey` **admission window** instead: the first request leads a
+//! group, concurrent same-key requests join it (until the group fills or
+//! the window lapses), and the leader factors every member's value set
+//! in **one** k-wide traversal ([`crate::solver::solve_refreshed_batch`]
+//! → lane-interleaved fronts, see [`crate::solver::supernodal`]):
+//!
+//! ```text
+//!   admission window (per PlanKey)      one traversal, k-wide fronts
+//!   req₀ ── lead ──┐
+//!   req₁ ── join ──┼─► [v₀ v₁ … vₖ] ──► solve_refreshed_batch ──► k reports
+//!   reqₖ ── join ──┘   value gather      (per-lane bit-identical)
+//! ```
+//!
+//! Every lane's factor, solve, residual — and even zero-pivot error — is
+//! bit-identical to the request served alone; batching only changes
+//! throughput. At `max_batch` = 1 (the default) the window is bypassed
+//! entirely and the single-request path runs unchanged (zero-alloc); the
+//! coalesced path pays one value-buffer handoff allocation per request.
+//! [`ServingEngine::serve_batch`] offers the same k-wide traversal for
+//! callers that already hold a burst in hand (deterministic grouping, no
+//! window). Group formation is counted in [`BatchStats`].
+//!
 //! See `ARCHITECTURE.md` for how this sits in the whole system.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -60,11 +90,36 @@ use crate::reorder::cache::{CacheConfig, CacheStats, OrderingCache};
 use crate::reorder::{MatrixAnalysis, Permutation, ReorderAlgorithm, WorkspacePool};
 use crate::solver::plan_cache::{PlanCache, PlanKey};
 use crate::solver::{
-    plan_solve_prepared, prepare, solve_with_plan, NumericWorkspace, SolveReport, SolverConfig,
+    plan_solve_prepared, prepare, solve_refreshed_batch, solve_with_plan, FactorError,
+    NumericWorkspace, SolveReport, SolverConfig, SymbolicFactorization,
 };
 use crate::sparse::CsrMatrix;
 use crate::util::pool::{ObjectPool, PoolStats};
 use crate::util::Timer;
+
+/// Admission policy for same-plan request coalescing (the batched warm
+/// path — see the module docs).
+#[derive(Clone, Copy, Debug)]
+pub struct BatchConfig {
+    /// Largest group one traversal factors. 1 (the default) disables
+    /// coalescing entirely — every request runs the single, zero-alloc
+    /// warm path. ≥ 2 sends warm plan-cache hits through the admission
+    /// window.
+    pub max_batch: usize,
+    /// How long a group's leader holds the window open for joiners
+    /// before factoring whatever arrived. Latency ceiling a coalesced
+    /// request can pay on top of its own work.
+    pub window: Duration,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig {
+            max_batch: 1,
+            window: Duration::from_micros(200),
+        }
+    }
+}
 
 /// Knobs for [`ServingEngine::spawn`].
 #[derive(Clone, Copy, Debug)]
@@ -76,6 +131,8 @@ pub struct ServingConfig {
     pub plan_cache: CacheConfig,
     /// Dynamic-batching policy for the prediction service.
     pub batcher: BatcherConfig,
+    /// Same-plan coalescing policy for the warm numeric path.
+    pub batch: BatchConfig,
     /// Solver configuration for the downstream direct solve.
     pub solver: SolverConfig,
     /// Seed every served ordering derives from (part of both cache keys).
@@ -90,6 +147,7 @@ impl Default for ServingConfig {
             cache: CacheConfig::default(),
             plan_cache: PlanCache::default_config(),
             batcher: BatcherConfig::default(),
+            batch: BatchConfig::default(),
             solver: SolverConfig::default(),
             reorder_seed: 0xDA7A, // same stream as SelectionPipeline
             max_idle_workspaces: crate::util::pool::default_workers() + 1,
@@ -111,6 +169,10 @@ pub struct ServingReport {
     /// Whether the solve plan came from the plan cache — the warm-path
     /// flag: a hit means this request did no symbolic work at all.
     pub plan_hit: bool,
+    /// How many same-plan requests shared this request's numeric
+    /// traversal (1 = served alone; ≥ 2 = coalesced, and
+    /// `solve.factor_s` is the traversal's wall time over `batch_k`).
+    pub batch_k: usize,
     /// The ordering itself (shared with the plan and ordering caches).
     pub permutation: Arc<Permutation>,
     /// The downstream numeric solve (its `reorder_s` mirrors the field
@@ -137,11 +199,32 @@ impl ServingReport {
     }
 }
 
+/// Counters of the same-plan coalescing layer. Only groups that pass
+/// through the admission window or [`ServingEngine::serve_batch`] are
+/// recorded — requests served on the plain single path (coalescing off,
+/// plan miss, capped plan) do not appear here.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchStats {
+    /// Groups of ≥ 2 requests factored in one traversal.
+    pub batches: u64,
+    /// Requests that rode another request's traversal (Σ (k−1) over
+    /// formed groups) — each one is a full DAG walk that never ran.
+    pub coalesced: u64,
+    /// Groups sealed by window expiry rather than by filling
+    /// `max_batch` (includes groups of 1: a leader nobody joined).
+    pub window_timeouts: u64,
+    /// Group-size histogram: slot `i` counts groups of size `i+1`;
+    /// the last slot counts every group of size ≥ 8.
+    pub size_hist: [u64; 8],
+}
+
 /// Per-stage counter snapshot of a running [`ServingEngine`].
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ServingStats {
     /// Requests served end to end.
     pub requests: u64,
+    /// Same-plan coalescing counters (batched warm path).
+    pub batches: BatchStats,
     /// Symbolic-plan-cache counters (hits/misses/evictions/entries).
     pub plans: CacheStats,
     /// Ordering-cache counters (consulted on plan misses only).
@@ -213,8 +296,63 @@ pub struct ServingEngine {
     workspaces: WorkspacePool,
     numeric: ObjectPool<NumericWorkspace>,
     solver: SolverConfig,
+    batch: BatchConfig,
+    /// Open admission groups by plan key. An entry exists exactly while
+    /// its leader holds the window open; joiners racing the removal of a
+    /// sealed group see `closed` and retry.
+    batch_slots: Mutex<HashMap<PlanKey, Arc<BatchSlot>>>,
     reorder_seed: u64,
     requests: AtomicU64,
+    batches: AtomicU64,
+    coalesced: AtomicU64,
+    window_timeouts: AtomicU64,
+    size_hist: [AtomicU64; 8],
+}
+
+/// One coalescing group: members hand their refreshed value buffers to
+/// the leader, who factors all of them in one traversal and posts the
+/// per-lane results back.
+#[derive(Default)]
+struct BatchSlot {
+    state: Mutex<SlotState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct SlotState {
+    /// Refreshed value buffers, lane 0 = the leader (guaranteed: the
+    /// slot is created with it, before the key is published).
+    vals: Vec<Vec<f64>>,
+    /// Per-lane outcomes, same order as `vals`; filled by the leader.
+    results: Vec<Result<SolveReport, FactorError>>,
+    /// No more joiners: the group filled or its window lapsed.
+    closed: bool,
+    /// `results` is valid; members may collect and leave.
+    done: bool,
+}
+
+impl BatchSlot {
+    fn with_leader(vals: Vec<f64>) -> BatchSlot {
+        BatchSlot {
+            state: Mutex::new(SlotState {
+                vals: vec![vals],
+                ..SlotState::default()
+            }),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+/// The prediction + plan-routing half of a request (everything up to —
+/// but not including — the numeric solve).
+struct Routed {
+    algorithm: ReorderAlgorithm,
+    feature_s: f64,
+    predict_s: f64,
+    reorder_s: f64,
+    plan_hit: bool,
+    plan: Arc<SymbolicFactorization>,
+    key: PlanKey,
 }
 
 impl ServingEngine {
@@ -235,8 +373,14 @@ impl ServingEngine {
             workspaces: WorkspacePool::new(max_idle),
             numeric: ObjectPool::new(max_idle),
             solver: cfg.solver,
+            batch: cfg.batch,
+            batch_slots: Mutex::new(HashMap::new()),
             reorder_seed: cfg.reorder_seed,
             requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            window_timeouts: AtomicU64::new(0),
+            size_hist: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
 
@@ -251,15 +395,13 @@ impl ServingEngine {
         &self.plans
     }
 
-    /// Serve one request end to end: extract features off the raw
-    /// pattern (degree-only, no graph), predict through the batcher,
-    /// fetch-or-plan the symbolic factorization — the miss path prepares
-    /// the matrix once, shares the analysis between the ordering cache
-    /// and the plan, and runs the ordering on a pooled workspace — then
-    /// replay the plan numerically on pooled scratch.
-    pub fn serve(&self, a: &CsrMatrix) -> Result<ServingReport> {
-        self.requests.fetch_add(1, Ordering::Relaxed);
-
+    /// The prediction + plan-routing half of a request: extract features
+    /// off the raw pattern (degree-only, no graph), predict through the
+    /// batcher, fetch-or-plan the symbolic factorization — the miss path
+    /// prepares the matrix once, shares the analysis between the
+    /// ordering cache and the plan, and runs the ordering on a pooled
+    /// workspace.
+    fn route(&self, a: &CsrMatrix) -> Result<Routed> {
         let t_f = Timer::start();
         let feats = features::extract(a);
         let feature_s = t_f.elapsed_s();
@@ -281,29 +423,246 @@ impl ServingEngine {
             plan_solve_prepared(a, &spd, perm, &self.solver)
         });
         let reorder_s = t_r.elapsed_s();
-
-        // RAII checkout: the scratch returns to the pool on every exit
-        // path, panic unwind included
-        let mut scratch = self.numeric.checkout_guard(NumericWorkspace::new);
-        let mut solve =
-            solve_with_plan(a, &plan, &self.solver, &mut scratch).map_err(anyhow::Error::msg)?;
-        solve.reorder_s = reorder_s;
-
-        Ok(ServingReport {
+        Ok(Routed {
             algorithm,
             feature_s,
             predict_s,
             reorder_s,
             plan_hit,
-            permutation: plan.perm.clone(),
-            solve,
+            plan,
+            key,
         })
+    }
+
+    fn report(r: Routed, mut solve: SolveReport, batch_k: usize) -> ServingReport {
+        solve.reorder_s = r.reorder_s;
+        ServingReport {
+            algorithm: r.algorithm,
+            feature_s: r.feature_s,
+            predict_s: r.predict_s,
+            reorder_s: r.reorder_s,
+            plan_hit: r.plan_hit,
+            batch_k,
+            permutation: r.plan.perm.clone(),
+            solve,
+        }
+    }
+
+    /// Serve one request end to end: [`route`](Self::route), then replay
+    /// the plan numerically on pooled scratch. With coalescing enabled
+    /// ([`BatchConfig::max_batch`] ≥ 2), a warm uncapped request enters
+    /// the per-plan admission window and may share one k-wide traversal
+    /// with concurrent same-plan requests — with results bit-identical
+    /// to being served alone (see the module docs).
+    pub fn serve(&self, a: &CsrMatrix) -> Result<ServingReport> {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let r = self.route(a)?;
+        let coalesce = self.batch.max_batch >= 2 && r.plan_hit && !r.plan.capped;
+        let (solve, batch_k) = if coalesce {
+            self.serve_coalesced(a, &r.plan, r.key)
+                .map_err(anyhow::Error::msg)?
+        } else {
+            // RAII checkout: the scratch returns to the pool on every
+            // exit path, panic unwind included
+            let mut scratch = self.numeric.checkout_guard(NumericWorkspace::new);
+            let solve = solve_with_plan(a, &r.plan, &self.solver, &mut scratch)
+                .map_err(anyhow::Error::msg)?;
+            (solve, 1)
+        };
+        Ok(Self::report(r, solve, batch_k))
+    }
+
+    /// Serve a burst of requests the caller already holds, coalescing
+    /// same-plan members into one k-wide traversal each (deterministic
+    /// grouping — no admission window). Reports come back in request
+    /// order; any lane failure fails the whole call. Groups are counted
+    /// in [`BatchStats`] (never as window timeouts).
+    pub fn serve_batch(&self, mats: &[&CsrMatrix]) -> Result<Vec<ServingReport>> {
+        self.requests.fetch_add(mats.len() as u64, Ordering::Relaxed);
+        let routed: Vec<Routed> = mats.iter().map(|a| self.route(a)).collect::<Result<_>>()?;
+
+        // group by plan key, preserving first-appearance order
+        let mut group_of: HashMap<PlanKey, usize> = HashMap::new();
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        for (i, r) in routed.iter().enumerate() {
+            let g = *group_of.entry(r.key).or_insert_with(|| {
+                groups.push(Vec::new());
+                groups.len() - 1
+            });
+            groups[g].push(i);
+        }
+
+        let mut solves: Vec<Option<(SolveReport, usize)>> = mats.iter().map(|_| None).collect();
+        for members in &groups {
+            let plan = &routed[members[0]].plan;
+            let k = members.len();
+            if k == 1 || plan.capped {
+                for &i in members {
+                    let mut scratch = self.numeric.checkout_guard(NumericWorkspace::new);
+                    let s = solve_with_plan(mats[i], plan, &self.solver, &mut scratch)
+                        .map_err(anyhow::Error::msg)?;
+                    solves[i] = Some((s, 1));
+                    self.record_group(1, false);
+                }
+                continue;
+            }
+            // refresh every member into its own pooled workspace, then
+            // hand all value sets to one traversal
+            let scratches: Vec<_> = members
+                .iter()
+                .map(|&i| {
+                    let mut ws = self.numeric.checkout_guard(NumericWorkspace::new);
+                    plan.refresh_values(mats[i], &mut ws);
+                    ws
+                })
+                .collect();
+            let valss: Vec<&[f64]> = scratches.iter().map(|ws| ws.vals.as_slice()).collect();
+            let results = solve_refreshed_batch(plan, &self.solver, &valss);
+            self.record_group(k, false);
+            for (&i, r) in members.iter().zip(results) {
+                solves[i] = Some((r.map_err(anyhow::Error::msg)?, k));
+            }
+        }
+
+        Ok(routed
+            .into_iter()
+            .zip(solves)
+            .map(|(r, s)| {
+                let (solve, batch_k) = s.expect("every group member was solved");
+                Self::report(r, solve, batch_k)
+            })
+            .collect())
+    }
+
+    /// The admission window: lead a new group for `key` or join the open
+    /// one, and return this request's own solve plus the group size.
+    /// Values travel by ownership (the one per-request allocation this
+    /// path pays), results travel back as `Clone`s of the per-lane
+    /// reports — all bit-identical to single-request serving.
+    fn serve_coalesced(
+        &self,
+        a: &CsrMatrix,
+        plan: &Arc<SymbolicFactorization>,
+        key: PlanKey,
+    ) -> Result<(SolveReport, usize), FactorError> {
+        // refresh into pooled scratch, then take the buffer so it can
+        // cross to the leader's thread
+        let mut vals = Some({
+            let mut scratch = self.numeric.checkout_guard(NumericWorkspace::new);
+            plan.refresh_values(a, &mut scratch);
+            std::mem::take(&mut scratch.vals)
+        });
+        loop {
+            let (slot, lead) = {
+                let mut map = self.batch_slots.lock().expect("batch slot map poisoned");
+                match map.get(&key) {
+                    Some(slot) => (slot.clone(), false),
+                    None => {
+                        // publish the group with the leader's lane
+                        // already aboard, so lane 0 is always the leader
+                        let slot = Arc::new(BatchSlot::with_leader(
+                            vals.take().expect("leader still owns its values"),
+                        ));
+                        map.insert(key, slot.clone());
+                        (slot, true)
+                    }
+                }
+            };
+            if lead {
+                return self.lead_group(&slot, &key, plan);
+            }
+            let mut st = slot.state.lock().expect("batch slot poisoned");
+            if st.closed {
+                // sealed group: its map entry is about to vanish — yield
+                // through the removal window, then join or lead the next
+                drop(st);
+                std::thread::yield_now();
+                continue;
+            }
+            let idx = st.vals.len();
+            st.vals.push(vals.take().expect("joiner still owns its values"));
+            if st.vals.len() >= self.batch.max_batch {
+                st.closed = true;
+                slot.cv.notify_all(); // wake the leader: the group is full
+            }
+            let st = slot
+                .cv
+                .wait_while(st, |st| !st.done)
+                .expect("batch slot poisoned");
+            let k = st.results.len();
+            return st.results[idx].clone().map(|solve| (solve, k));
+        }
+    }
+
+    /// Leader's side of one group: hold the window open until the group
+    /// fills or the window lapses, unpublish the key, run the one k-wide
+    /// traversal, post per-lane results, wake the joiners.
+    fn lead_group(
+        &self,
+        slot: &BatchSlot,
+        key: &PlanKey,
+        plan: &SymbolicFactorization,
+    ) -> Result<(SolveReport, usize), FactorError> {
+        let deadline = Instant::now() + self.batch.window;
+        let mut st = slot.state.lock().expect("batch slot poisoned");
+        let mut timed_out = false;
+        while !st.closed {
+            let now = Instant::now();
+            if now >= deadline {
+                st.closed = true;
+                timed_out = true;
+                break;
+            }
+            let (guard, _) = slot
+                .cv
+                .wait_timeout(st, deadline - now)
+                .expect("batch slot poisoned");
+            st = guard;
+        }
+        let batch = std::mem::take(&mut st.vals);
+        drop(st);
+        // unpublish the sealed group so the next same-key request starts
+        // a fresh one (joiners racing this removal see `closed` above)
+        self.batch_slots
+            .lock()
+            .expect("batch slot map poisoned")
+            .remove(key);
+
+        let k = batch.len();
+        self.record_group(k, timed_out);
+        let valss: Vec<&[f64]> = batch.iter().map(|v| v.as_slice()).collect();
+        let results = solve_refreshed_batch(plan, &self.solver, &valss);
+
+        let mut st = slot.state.lock().expect("batch slot poisoned");
+        st.results = results;
+        st.done = true;
+        let own = st.results[0].clone(); // lane 0: the leader
+        drop(st);
+        slot.cv.notify_all();
+        own.map(|solve| (solve, k))
+    }
+
+    fn record_group(&self, k: usize, timed_out: bool) {
+        self.size_hist[k.min(8) - 1].fetch_add(1, Ordering::Relaxed);
+        if k >= 2 {
+            self.batches.fetch_add(1, Ordering::Relaxed);
+            self.coalesced.fetch_add((k - 1) as u64, Ordering::Relaxed);
+        }
+        if timed_out {
+            self.window_timeouts.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// Per-stage counters across the engine's lifetime.
     pub fn stats(&self) -> ServingStats {
         ServingStats {
             requests: self.requests.load(Ordering::Relaxed),
+            batches: BatchStats {
+                batches: self.batches.load(Ordering::Relaxed),
+                coalesced: self.coalesced.load(Ordering::Relaxed),
+                window_timeouts: self.window_timeouts.load(Ordering::Relaxed),
+                size_hist: std::array::from_fn(|i| self.size_hist[i].load(Ordering::Relaxed)),
+            },
             plans: self.plans.stats(),
             cache: self.cache.stats(),
             workspaces: self.workspaces.stats(),
@@ -422,6 +781,131 @@ mod tests {
         assert!(!ra.plan_hit && !rb.plan_hit);
         assert_eq!(ra.permutation.len(), 36);
         assert_eq!(rb.permutation.len(), 35);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn single_path_reports_batch_of_one() {
+        // default config: coalescing off, every report says batch_k = 1
+        // and the batch counters never move
+        let engine = ServingEngine::spawn(forest_backend(), ServingConfig::default()).unwrap();
+        let a = mesh(7, 7);
+        assert_eq!(engine.serve(&a).unwrap().batch_k, 1);
+        assert_eq!(engine.serve(&a).unwrap().batch_k, 1);
+        let s = engine.stats();
+        assert_eq!(s.batches.batches, 0);
+        assert_eq!(s.batches.size_hist.iter().sum::<u64>(), 0);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn serve_batch_coalesces_same_pattern_requests() {
+        let engine = ServingEngine::spawn(forest_backend(), ServingConfig::default()).unwrap();
+        let a = mesh(9, 7);
+        let b = mesh(6, 8);
+        // same pattern, different numerics, interleaved with another
+        // pattern: grouping must respect the plan key and request order
+        let mut a2 = a.clone();
+        for v in a2.data.iter_mut() {
+            *v *= 2.5;
+        }
+        let mut a3 = a.clone();
+        for v in a3.data.iter_mut() {
+            *v *= -0.5;
+        }
+        let mats: Vec<&CsrMatrix> = vec![&a, &b, &a2, &a3, &b];
+        let reports = engine.serve_batch(&mats).unwrap();
+        assert_eq!(reports.len(), 5);
+        assert_eq!(
+            reports.iter().map(|r| r.batch_k).collect::<Vec<_>>(),
+            [3, 2, 3, 3, 2],
+        );
+        // each coalesced lane must match its own single-request serve
+        // bit-identically (warm singles replay the same cached plans)
+        for (i, &m) in mats.iter().enumerate() {
+            let single = engine.serve(m).unwrap();
+            assert!(single.plan_hit);
+            assert_eq!(reports[i].algorithm, single.algorithm);
+            assert_eq!(reports[i].solve.fill, single.solve.fill);
+            assert_eq!(
+                reports[i].solve.residual, single.solve.residual,
+                "request {i} diverged from its single-request solve"
+            );
+        }
+        let s = engine.stats();
+        assert_eq!(s.batches.batches, 2, "one group per repeated pattern");
+        assert_eq!(s.batches.coalesced, 3, "2 + 1 requests rode along");
+        assert_eq!(s.batches.size_hist[2], 1, "one group of three");
+        assert_eq!(s.batches.size_hist[1], 1, "one group of two");
+        assert_eq!(s.batches.window_timeouts, 0, "no window involved");
+        assert_eq!(s.requests, 10);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn concurrent_warm_requests_coalesce_through_the_window() {
+        let cfg = ServingConfig {
+            batch: BatchConfig {
+                max_batch: 2,
+                // generous: the group must fill (2 concurrent requests)
+                // long before the window lapses
+                window: Duration::from_secs(5),
+            },
+            ..ServingConfig::default()
+        };
+        let engine = ServingEngine::spawn(forest_backend(), cfg).unwrap();
+        let a = mesh(10, 8);
+        // cold request computes and caches the plan on the single path
+        let cold = engine.serve(&a).unwrap();
+        assert!(!cold.plan_hit);
+        assert_eq!(cold.batch_k, 1);
+
+        let mut b = a.clone();
+        for v in b.data.iter_mut() {
+            *v *= 1.75;
+        }
+        let (ra, rb) = std::thread::scope(|s| {
+            let ta = s.spawn(|| engine.serve(&a).unwrap());
+            let tb = s.spawn(|| engine.serve(&b).unwrap());
+            (ta.join().unwrap(), tb.join().unwrap())
+        });
+        assert!(ra.plan_hit && rb.plan_hit);
+        assert_eq!((ra.batch_k, rb.batch_k), (2, 2), "the pair must coalesce");
+        // bit-identity: a coalesced lane equals the request served alone
+        // (the full per-lane contract is held by the solver-level tests;
+        // here the `a` lane must reproduce the cold request's numbers)
+        assert_eq!(ra.solve.residual, cold.solve.residual);
+        assert_eq!(ra.solve.fill, cold.solve.fill);
+        assert_eq!(rb.solve.fill, cold.solve.fill);
+        assert!(rb.solve.residual < 1e-6);
+
+        let s = engine.stats();
+        assert_eq!(s.batches.batches, 1);
+        assert_eq!(s.batches.coalesced, 1);
+        assert_eq!(s.batches.size_hist[1], 1);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn lonely_leader_times_out_and_serves_itself() {
+        let cfg = ServingConfig {
+            batch: BatchConfig {
+                max_batch: 4,
+                window: Duration::from_micros(50),
+            },
+            ..ServingConfig::default()
+        };
+        let engine = ServingEngine::spawn(forest_backend(), cfg).unwrap();
+        let a = mesh(8, 6);
+        let cold = engine.serve(&a).unwrap();
+        let warm = engine.serve(&a).unwrap(); // leads a group nobody joins
+        assert!(warm.plan_hit);
+        assert_eq!(warm.batch_k, 1);
+        assert_eq!(warm.solve.residual, cold.solve.residual);
+        let s = engine.stats();
+        assert_eq!(s.batches.window_timeouts, 1);
+        assert_eq!(s.batches.size_hist[0], 1, "the k=1 group is recorded");
+        assert_eq!(s.batches.batches, 0, "a group of one is not a batch");
         engine.shutdown();
     }
 }

@@ -27,6 +27,14 @@
 //! [`crate::solver::supernodal`]) cannot live in a worker-local arena;
 //! they travel in [`BoundaryBuf`]s — `Vec<f64>`s drawn from a second
 //! process-wide pool, returned when the parent consumes them.
+//!
+//! The batched multi-RHS traversal needs no arena API of its own: its
+//! fronts are lane-interleaved (`K` values per pattern slot), so callers
+//! simply `begin` with `peak_front · K` / `stack_peak · K` elements and
+//! checkout `m·m·K`-element boundary buffers. The first batch at a new
+//! (plan, K) therefore grows the warm buffers once — a counted event —
+//! and subsequent same-width batches are allocation-free like the
+//! single-lane path.
 
 use std::cell::Cell;
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -1,4 +1,5 @@
-//! Dense panel kernels for the supernodal factorization.
+//! Dense panel kernels for the supernodal factorization — single-RHS
+//! and lane-batched (multi-RHS) variants.
 //!
 //! A frontal matrix is a column-major dense buffer of leading dimension
 //! `ld`; only its lower triangle is ever read or written. The supernodal
@@ -11,23 +12,34 @@
 //! 3. [`rank_update`]  — blocked rank-`nb` update of the trailing
 //!    submatrix, `F22 -= L21 · D1 · L21ᵀ`.
 //!
-//! All inner loops are column-contiguous axpy operations over slice pairs
-//! (no index arithmetic in the hot loop), which is what lets the compiler
-//! vectorize them — the cache-blocked replacement for the scalar
-//! up-looking kernel's per-entry gather/scatter.
-
-/// `col_j[i0..i1] -= w * col_t[i0..i1]` for two columns of the same
-/// column-major buffer. Requires `t < j` so the borrow can be split.
-#[inline]
-fn axpy_cols(f: &mut [f64], ld: usize, t: usize, j: usize, i0: usize, i1: usize, w: f64) {
-    debug_assert!(t < j);
-    let (head, tail) = f.split_at_mut(j * ld);
-    let src = &head[t * ld + i0..t * ld + i1];
-    let dst = &mut tail[i0..i1];
-    for (x, &s) in dst.iter_mut().zip(src) {
-        *x -= s * w;
-    }
-}
+//! All three consume pivot columns **four at a time**: each destination
+//! element is loaded once and updated with four fused axpy terms over
+//! equal-length slices — no index arithmetic in the hot loop, so bounds
+//! checks hoist, the inner loop SIMD-vectorizes, and destination traffic
+//! drops 4×. The arithmetic is performed in exactly the per-element
+//! order of the one-column-at-a-time scalar reference
+//! (`((x − s₀w₀) − s₁w₁) − …`, ascending pivot index), so every result
+//! value equals the reference's under `f64` equality: a quad is skipped
+//! only when all four weights vanish, so the lone divergence from
+//! skipping zero weights *individually* is the sign of an exact zero.
+//! The `#[cfg(test)]` scalar references below hold that line for every
+//! kernel.
+//!
+//! ## Batched (multi-RHS) variants
+//!
+//! [`factor_block_k`] / [`solve_panel_k`] / [`rank_update_k`] /
+//! [`factor_front_k`] are the same kernels over a **lane-interleaved**
+//! front holding `K` independent value sets on one symbolic pattern:
+//! element `(i, j)` of lane `l` lives at `f[(j*ld + i)*K + l]`. Each
+//! lane performs exactly the operations of its single-lane counterpart,
+//! in the same order — the per-lane results are value-identical under
+//! `f64` equality (the shared skip rule is "all lanes' weights vanish";
+//! amalgamation-padding zeros are pattern-level, hence shared by every
+//! lane, so the skip still fires where it matters). What batching buys
+//! is arithmetic density: every loaded index/weight/bound is reused `K`
+//! times, and the `K` lanes of one element are contiguous — a unit-stride
+//! SIMD vector. The driver monomorphizes `K ∈ {2, 4, 8}`
+//! (`solver::supernodal`).
 
 /// Dense LDLᵀ of the `nb × nb` diagonal block at `(k0, k0)`.
 ///
@@ -35,23 +47,58 @@ fn axpy_cols(f: &mut [f64], ld: usize, t: usize, j: usize, i0: usize, i1: usize,
 /// (already scaled by `1/d`) and `D1` on the diagonal. Rows below the
 /// block are untouched. Returns `Err(k)` (block-relative column) on a
 /// numerically vanishing pivot.
+///
+/// Up-looking within the block: column `k` first absorbs every finished
+/// pivot `t < k` (four at a time, see the module docs), then checks and
+/// scales its own pivot — the same operations in the same per-element
+/// order as the classical right-looking form, restructured so the hot
+/// loop is the shared quad-axpy shape.
 pub fn factor_block(f: &mut [f64], ld: usize, k0: usize, nb: usize) -> Result<(), usize> {
     for k in 0..nb {
         let ck = k0 + k;
-        let d = f[ck * ld + ck];
+        let len = k0 + nb - ck;
+        let (head, tail) = f.split_at_mut(ck * ld);
+        let dst = &mut tail[ck..ck + len];
+        let mut t = 0;
+        while t + 4 <= k {
+            let c = [k0 + t, k0 + t + 1, k0 + t + 2, k0 + t + 3];
+            // w_q = L11(k, t+q) · d_{t+q}
+            let w = [
+                head[c[0] * ld + ck] * head[c[0] * ld + c[0]],
+                head[c[1] * ld + ck] * head[c[1] * ld + c[1]],
+                head[c[2] * ld + ck] * head[c[2] * ld + c[2]],
+                head[c[3] * ld + ck] * head[c[3] * ld + c[3]],
+            ];
+            if w.iter().any(|&x| x != 0.0) {
+                let s0 = &head[c[0] * ld + ck..c[0] * ld + ck + len];
+                let s1 = &head[c[1] * ld + ck..c[1] * ld + ck + len];
+                let s2 = &head[c[2] * ld + ck..c[2] * ld + ck + len];
+                let s3 = &head[c[3] * ld + ck..c[3] * ld + ck + len];
+                for i in 0..len {
+                    dst[i] = (((dst[i] - s0[i] * w[0]) - s1[i] * w[1]) - s2[i] * w[2])
+                        - s3[i] * w[3];
+                }
+            }
+            t += 4;
+        }
+        while t < k {
+            let ct = k0 + t;
+            let wq = head[ct * ld + ck] * head[ct * ld + ct];
+            if wq != 0.0 {
+                let src = &head[ct * ld + ck..ct * ld + ck + len];
+                for i in 0..len {
+                    dst[i] -= src[i] * wq;
+                }
+            }
+            t += 1;
+        }
+        let d = dst[0];
         if d.abs() < 1e-300 {
             return Err(k);
         }
         let inv = 1.0 / d;
-        for x in &mut f[ck * ld + ck + 1..ck * ld + k0 + nb] {
+        for x in &mut dst[1..] {
             *x *= inv;
-        }
-        for j in (k + 1)..nb {
-            let cj = k0 + j;
-            let w = f[ck * ld + cj] * d; // L(j,k) * d_k
-            if w != 0.0 {
-                axpy_cols(f, ld, ck, cj, cj, k0 + nb, w);
-            }
         }
     }
     Ok(())
@@ -59,19 +106,48 @@ pub fn factor_block(f: &mut [f64], ld: usize, k0: usize, nb: usize) -> Result<()
 
 /// Panel triangular solve: rows `[r0, r0+rn)` of the block's columns
 /// become `L21 = A21 · L11⁻ᵀ · D1⁻¹`. Must run after [`factor_block`]
-/// on the same block (it reads `L11` and `D1` in place).
+/// on the same block (it reads `L11` and `D1` in place). Pivot columns
+/// are folded four at a time, exactly like [`rank_update`].
 pub fn solve_panel(f: &mut [f64], ld: usize, k0: usize, nb: usize, r0: usize, rn: usize) {
     for k in 0..nb {
         let ck = k0 + k;
-        for t in 0..k {
-            let ct = k0 + t;
-            let w = f[ct * ld + ck] * f[ct * ld + ct]; // L11(k,t) * d_t
-            if w != 0.0 {
-                axpy_cols(f, ld, ct, ck, r0, r0 + rn, w);
+        let (head, tail) = f.split_at_mut(ck * ld);
+        let inv = 1.0 / tail[ck];
+        let dst = &mut tail[r0..r0 + rn];
+        let mut t = 0;
+        while t + 4 <= k {
+            let c = [k0 + t, k0 + t + 1, k0 + t + 2, k0 + t + 3];
+            // w_q = L11(k, t+q) · d_{t+q}
+            let w = [
+                head[c[0] * ld + ck] * head[c[0] * ld + c[0]],
+                head[c[1] * ld + ck] * head[c[1] * ld + c[1]],
+                head[c[2] * ld + ck] * head[c[2] * ld + c[2]],
+                head[c[3] * ld + ck] * head[c[3] * ld + c[3]],
+            ];
+            if w.iter().any(|&x| x != 0.0) {
+                let s0 = &head[c[0] * ld + r0..c[0] * ld + r0 + rn];
+                let s1 = &head[c[1] * ld + r0..c[1] * ld + r0 + rn];
+                let s2 = &head[c[2] * ld + r0..c[2] * ld + r0 + rn];
+                let s3 = &head[c[3] * ld + r0..c[3] * ld + r0 + rn];
+                for i in 0..rn {
+                    dst[i] = (((dst[i] - s0[i] * w[0]) - s1[i] * w[1]) - s2[i] * w[2])
+                        - s3[i] * w[3];
+                }
             }
+            t += 4;
         }
-        let inv = 1.0 / f[ck * ld + ck];
-        for x in &mut f[ck * ld + r0..ck * ld + r0 + rn] {
+        while t < k {
+            let ct = k0 + t;
+            let wq = head[ct * ld + ck] * head[ct * ld + ct];
+            if wq != 0.0 {
+                let src = &head[ct * ld + r0..ct * ld + r0 + rn];
+                for i in 0..rn {
+                    dst[i] -= src[i] * wq;
+                }
+            }
+            t += 1;
+        }
+        for x in dst.iter_mut() {
             *x *= inv;
         }
     }
@@ -80,23 +156,9 @@ pub fn solve_panel(f: &mut [f64], ld: usize, k0: usize, nb: usize, r0: usize, rn
 /// Blocked rank-`nb` update of the trailing submatrix: for every column
 /// `j ∈ [r0, ld)`, `F(j.., j) -= Σ_t L21(j.., t) · d_t · L21(j, t)`.
 /// Lower triangle only. Must run after [`solve_panel`] (reads the scaled
-/// panel in place).
-///
-/// This is the flop-dominant kernel of the whole factorization (the
-/// trailing update is where ~all of an LDLᵀ's multiply-adds live), so it
-/// is written for the autovectorizer: pivot columns are consumed four at
-/// a time, each destination element loaded once and updated with four
-/// fused axpy terms over equal-length slices (no index arithmetic in the
-/// hot loop → bounds checks hoist, the inner loop SIMD-vectorizes, and
-/// the `dst` traffic drops 4×). The arithmetic is performed in exactly
-/// the per-element order of the one-column-at-a-time reference
-/// (`((x − s₀w₀) − s₁w₁) − …`, ascending `t`), so every result value
-/// equals the reference's under `f64` equality (a quad is skipped only
-/// when all four weights vanish, so the lone divergence from skipping
-/// zero weights *individually* is the sign of an exact zero). All
-/// supernodal paths share this one kernel, which is what makes the
-/// plan/DAG/serial factors bit-identical to each other; the
-/// `#[cfg(test)]` scalar reference below holds the per-element line.
+/// panel in place). This is the flop-dominant kernel of the whole
+/// factorization — the quad-axpy shape (module docs) was built for it
+/// and the other kernels inherited it.
 pub fn rank_update(f: &mut [f64], ld: usize, k0: usize, nb: usize, r0: usize) {
     for j in r0..ld {
         // columns t < j always, so the pivot block sits wholly in `head`
@@ -159,6 +221,248 @@ pub fn factor_front(f: &mut [f64], ld: usize, ns: usize, nb: usize) -> Result<()
     Ok(())
 }
 
+// ---------------------------------------------------------------------
+// Lane-batched (multi-RHS) kernels over the interleaved front layout:
+// element (i, j) of lane l at f[(j*ld + i)*K + l]. See the module docs.
+// ---------------------------------------------------------------------
+
+/// [`factor_block`] over `K` interleaved lanes. Returns
+/// `Err((lane, k))` — the lowest failing lane at the earliest vanishing
+/// pivot — and leaves the front in an unspecified state: the batched
+/// driver aborts and the caller re-runs every lane through the
+/// single-lane path (which reproduces each lane's exact error).
+pub fn factor_block_k<const K: usize>(
+    f: &mut [f64],
+    ld: usize,
+    k0: usize,
+    nb: usize,
+) -> Result<(), (usize, usize)> {
+    for k in 0..nb {
+        let ck = k0 + k;
+        let len = k0 + nb - ck;
+        let (head, tail) = f.split_at_mut(ck * ld * K);
+        let dst = &mut tail[ck * K..(ck + len) * K];
+        let mut t = 0;
+        while t + 4 <= k {
+            let c = [k0 + t, k0 + t + 1, k0 + t + 2, k0 + t + 3];
+            let (w, any) = quad_weights_k::<K>(head, ld, c, ck);
+            if any {
+                let s0 = &head[(c[0] * ld + ck) * K..(c[0] * ld + ck + len) * K];
+                let s1 = &head[(c[1] * ld + ck) * K..(c[1] * ld + ck + len) * K];
+                let s2 = &head[(c[2] * ld + ck) * K..(c[2] * ld + ck + len) * K];
+                let s3 = &head[(c[3] * ld + ck) * K..(c[3] * ld + ck + len) * K];
+                quad_axpy_k::<K>(dst, s0, s1, s2, s3, &w);
+            }
+            t += 4;
+        }
+        while t < k {
+            let ct = k0 + t;
+            let (w, any) = lane_weights_k::<K>(head, ld, ct, ck);
+            if any {
+                let src = &head[(ct * ld + ck) * K..(ct * ld + ck + len) * K];
+                single_axpy_k::<K>(dst, src, &w);
+            }
+            t += 1;
+        }
+        let mut inv = [0.0f64; K];
+        for (l, iv) in inv.iter_mut().enumerate() {
+            let d = dst[l];
+            if d.abs() < 1e-300 {
+                return Err((l, k));
+            }
+            *iv = 1.0 / d;
+        }
+        for row in dst.chunks_exact_mut(K).skip(1) {
+            for l in 0..K {
+                row[l] *= inv[l];
+            }
+        }
+    }
+    Ok(())
+}
+
+/// [`solve_panel`] over `K` interleaved lanes.
+pub fn solve_panel_k<const K: usize>(
+    f: &mut [f64],
+    ld: usize,
+    k0: usize,
+    nb: usize,
+    r0: usize,
+    rn: usize,
+) {
+    for k in 0..nb {
+        let ck = k0 + k;
+        let (head, tail) = f.split_at_mut(ck * ld * K);
+        let mut inv = [0.0f64; K];
+        for (l, iv) in inv.iter_mut().enumerate() {
+            *iv = 1.0 / tail[ck * K + l];
+        }
+        let dst = &mut tail[r0 * K..(r0 + rn) * K];
+        let mut t = 0;
+        while t + 4 <= k {
+            let c = [k0 + t, k0 + t + 1, k0 + t + 2, k0 + t + 3];
+            let (w, any) = quad_weights_k::<K>(head, ld, c, ck);
+            if any {
+                let s0 = &head[(c[0] * ld + r0) * K..(c[0] * ld + r0 + rn) * K];
+                let s1 = &head[(c[1] * ld + r0) * K..(c[1] * ld + r0 + rn) * K];
+                let s2 = &head[(c[2] * ld + r0) * K..(c[2] * ld + r0 + rn) * K];
+                let s3 = &head[(c[3] * ld + r0) * K..(c[3] * ld + r0 + rn) * K];
+                quad_axpy_k::<K>(dst, s0, s1, s2, s3, &w);
+            }
+            t += 4;
+        }
+        while t < k {
+            let ct = k0 + t;
+            let (w, any) = lane_weights_k::<K>(head, ld, ct, ck);
+            if any {
+                let src = &head[(ct * ld + r0) * K..(ct * ld + r0 + rn) * K];
+                single_axpy_k::<K>(dst, src, &w);
+            }
+            t += 1;
+        }
+        for row in dst.chunks_exact_mut(K) {
+            for l in 0..K {
+                row[l] *= inv[l];
+            }
+        }
+    }
+}
+
+/// [`rank_update`] over `K` interleaved lanes — the kernel batching
+/// exists for: every loaded destination element carries `K` lanes, so
+/// the memory-bound trailing update becomes compute-dense.
+pub fn rank_update_k<const K: usize>(f: &mut [f64], ld: usize, k0: usize, nb: usize, r0: usize) {
+    for j in r0..ld {
+        let (head, tail) = f.split_at_mut(j * ld * K);
+        let len = ld - j;
+        let dst = &mut tail[j * K..(j + len) * K];
+        let mut t = 0;
+        while t + 4 <= nb {
+            let c = [k0 + t, k0 + t + 1, k0 + t + 2, k0 + t + 3];
+            let (w, any) = quad_weights_k::<K>(head, ld, c, j);
+            if any {
+                let s0 = &head[(c[0] * ld + j) * K..(c[0] * ld + j + len) * K];
+                let s1 = &head[(c[1] * ld + j) * K..(c[1] * ld + j + len) * K];
+                let s2 = &head[(c[2] * ld + j) * K..(c[2] * ld + j + len) * K];
+                let s3 = &head[(c[3] * ld + j) * K..(c[3] * ld + j + len) * K];
+                quad_axpy_k::<K>(dst, s0, s1, s2, s3, &w);
+            }
+            t += 4;
+        }
+        while t < nb {
+            let ct = k0 + t;
+            let (w, any) = lane_weights_k::<K>(head, ld, ct, j);
+            if any {
+                let src = &head[(ct * ld + j) * K..(ct * ld + j + len) * K];
+                single_axpy_k::<K>(dst, src, &w);
+            }
+            t += 1;
+        }
+    }
+}
+
+/// [`factor_front`] over `K` interleaved lanes. `Err((lane, k))` is the
+/// front-relative pivot column of the lowest failing lane at the
+/// earliest failure; the caller falls back to per-lane single-RHS
+/// factorization for exact per-lane error attribution.
+pub fn factor_front_k<const K: usize>(
+    f: &mut [f64],
+    ld: usize,
+    ns: usize,
+    nb: usize,
+) -> Result<(), (usize, usize)> {
+    debug_assert!(f.len() >= ld * ld * K && ns <= ld && nb >= 1);
+    let mut k0 = 0;
+    while k0 < ns {
+        let b = nb.min(ns - k0);
+        factor_block_k::<K>(f, ld, k0, b).map_err(|(l, k)| (l, k0 + k))?;
+        let r0 = k0 + b;
+        if r0 < ld {
+            solve_panel_k::<K>(f, ld, k0, b, r0, ld - r0);
+            rank_update_k::<K>(f, ld, k0, b, r0);
+        }
+        k0 += b;
+    }
+    Ok(())
+}
+
+/// Per-lane weights of one quad of pivot columns `c` against row `row`:
+/// `w[q][l] = L(row, c_q)[l] · d_{c_q}[l]`. Returns the weights and
+/// whether any is nonzero (the shared skip condition — see module docs).
+#[inline]
+fn quad_weights_k<const K: usize>(
+    head: &[f64],
+    ld: usize,
+    c: [usize; 4],
+    row: usize,
+) -> ([[f64; K]; 4], bool) {
+    let mut w = [[0.0f64; K]; 4];
+    let mut any = false;
+    for (q, wq) in w.iter_mut().enumerate() {
+        let lrow = (c[q] * ld + row) * K;
+        let diag = (c[q] * ld + c[q]) * K;
+        for l in 0..K {
+            wq[l] = head[lrow + l] * head[diag + l];
+            any |= wq[l] != 0.0;
+        }
+    }
+    (w, any)
+}
+
+/// Per-lane weights of one pivot column `ct` against row `row`.
+#[inline]
+fn lane_weights_k<const K: usize>(
+    head: &[f64],
+    ld: usize,
+    ct: usize,
+    row: usize,
+) -> ([f64; K], bool) {
+    let lrow = (ct * ld + row) * K;
+    let diag = (ct * ld + ct) * K;
+    let mut w = [0.0f64; K];
+    let mut any = false;
+    for (l, wl) in w.iter_mut().enumerate() {
+        *wl = head[lrow + l] * head[diag + l];
+        any |= *wl != 0.0;
+    }
+    (w, any)
+}
+
+/// `dst -= s0·w0 + s1·w1 + s2·w2 + s3·w3`, lane-wise, in the exact
+/// `(((x − s₀w₀) − s₁w₁) − s₂w₂) − s₃w₃` order of the scalar reference.
+#[inline]
+fn quad_axpy_k<const K: usize>(
+    dst: &mut [f64],
+    s0: &[f64],
+    s1: &[f64],
+    s2: &[f64],
+    s3: &[f64],
+    w: &[[f64; K]; 4],
+) {
+    for ((((d, a0), a1), a2), a3) in dst
+        .chunks_exact_mut(K)
+        .zip(s0.chunks_exact(K))
+        .zip(s1.chunks_exact(K))
+        .zip(s2.chunks_exact(K))
+        .zip(s3.chunks_exact(K))
+    {
+        for l in 0..K {
+            d[l] = (((d[l] - a0[l] * w[0][l]) - a1[l] * w[1][l]) - a2[l] * w[2][l])
+                - a3[l] * w[3][l];
+        }
+    }
+}
+
+/// `dst -= src·w`, lane-wise.
+#[inline]
+fn single_axpy_k<const K: usize>(dst: &mut [f64], src: &[f64], w: &[f64; K]) {
+    for (d, s) in dst.chunks_exact_mut(K).zip(src.chunks_exact(K)) {
+        for l in 0..K {
+            d[l] -= s[l] * w[l];
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -179,20 +483,25 @@ mod tests {
         }
     }
 
-    /// Deterministic diagonally-dominant dense test matrix (lower part).
-    fn test_matrix(ld: usize) -> Vec<f64> {
+    /// Deterministic diagonally-dominant dense test matrix (lower part),
+    /// `lane` perturbs the values so batched lanes are distinct.
+    fn test_matrix_lane(ld: usize, lane: usize) -> Vec<f64> {
         let mut f = vec![0.0; ld * ld];
         for j in 0..ld {
             for i in j..ld {
                 let v = if i == j {
-                    2.0 * ld as f64 + j as f64
+                    2.0 * ld as f64 + j as f64 + lane as f64
                 } else {
-                    ((i * 7 + j * 3) % 11) as f64 / 11.0 - 0.5
+                    ((i * 7 + j * 3 + lane * 5) % 11) as f64 / 11.0 - 0.5
                 };
                 f[j * ld + i] = v;
             }
         }
         f
+    }
+
+    fn test_matrix(ld: usize) -> Vec<f64> {
+        test_matrix_lane(ld, 0)
     }
 
     fn assert_lower_close(a: &[f64], b: &[f64], ld: usize) {
@@ -203,6 +512,67 @@ mod tests {
                     (x - y).abs() < 1e-10 * (1.0 + y.abs()),
                     "({i},{j}): {x} vs {y}"
                 );
+            }
+        }
+    }
+
+    fn assert_lower_identical(a: &[f64], b: &[f64], ld: usize, ctx: &str) {
+        for j in 0..ld {
+            for i in j..ld {
+                assert!(
+                    a[j * ld + i] == b[j * ld + i],
+                    "{ctx} at ({i},{j}): {} vs {}",
+                    a[j * ld + i],
+                    b[j * ld + i]
+                );
+            }
+        }
+    }
+
+    /// Scalar reference for [`factor_block`]: the classical
+    /// right-looking form — scale the pivot column, then push its
+    /// updates into every later block column, one pivot at a time.
+    fn ref_factor_block(f: &mut [f64], ld: usize, k0: usize, nb: usize) -> Result<(), usize> {
+        for k in 0..nb {
+            let ck = k0 + k;
+            let d = f[ck * ld + ck];
+            if d.abs() < 1e-300 {
+                return Err(k);
+            }
+            let inv = 1.0 / d;
+            for x in &mut f[ck * ld + ck + 1..ck * ld + k0 + nb] {
+                *x *= inv;
+            }
+            for j in (k + 1)..nb {
+                let cj = k0 + j;
+                let w = f[ck * ld + cj] * d; // L(j,k) * d_k
+                if w != 0.0 {
+                    for i in cj..k0 + nb {
+                        f[cj * ld + i] -= f[ck * ld + i] * w;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Scalar reference for [`solve_panel`]: one pivot column at a time,
+    /// sequential axpy, then the diagonal scale.
+    fn ref_solve_panel(f: &mut [f64], ld: usize, k0: usize, nb: usize, r0: usize, rn: usize) {
+        for k in 0..nb {
+            let ck = k0 + k;
+            for t in 0..k {
+                let ct = k0 + t;
+                let w = f[ct * ld + ck] * f[ct * ld + ct]; // L11(k,t) * d_t
+                if w != 0.0 {
+                    for i in r0..r0 + rn {
+                        f[ck * ld + i] -= f[ct * ld + i] * w;
+                    }
+                }
+            }
+            let inv = 1.0 / f[ck * ld + ck];
+            for x in &mut f[ck * ld + r0..ck * ld + r0 + rn] {
+                *x *= inv;
             }
         }
     }
@@ -224,45 +594,159 @@ mod tests {
         }
     }
 
+    /// The unroll-remainder shapes every parity test sweeps
+    /// (`nb % 4 ∈ {0,1,2,3}`, varying `ld` and `k0`).
+    const SHAPES: [(usize, usize, usize); 7] = [
+        (12, 0, 4),
+        (13, 0, 5),
+        (15, 2, 6),
+        (11, 1, 7),
+        (9, 0, 8),
+        (7, 0, 1),
+        (10, 3, 3),
+    ];
+
+    /// Plant exact-zero panel columns (amalgamation-padding shape) so
+    /// some pivot weights vanish without a whole quad vanishing.
+    fn plant_zero_columns(f: &mut [f64], ld: usize, k0: usize, nb: usize, r0: usize) {
+        for t in 0..nb {
+            if t % 3 == 1 {
+                for i in r0..ld {
+                    f[(k0 + t) * ld + i] = 0.0;
+                }
+            }
+        }
+    }
+
     #[test]
-    fn rank_update_matches_scalar_reference_exactly() {
-        // every remainder shape of the unroll-by-4 (nb % 4 ∈ {0,1,2,3}),
-        // including zero pivot weights from amalgamation padding
-        for &(ld, k0, nb) in &[
-            (12usize, 0usize, 4usize),
-            (13, 0, 5),
-            (15, 2, 6),
-            (11, 1, 7),
-            (9, 0, 8),
-            (7, 0, 1),
-            (10, 3, 3),
-        ] {
-            let r0 = k0 + nb;
+    fn factor_block_matches_scalar_reference_exactly() {
+        for &(ld, k0, nb) in &SHAPES {
             let mut fast = test_matrix(ld);
-            // plant exact zeros in the panel (padded columns): weights
-            // vanish for some t but not a whole quad
+            // exact zeros inside the block: weights vanish for some
+            // (t, j) pairs, exercising the quad skip against the
+            // reference's individual skip
             for t in 0..nb {
                 if t % 3 == 1 {
-                    for i in r0..ld {
+                    for i in (k0 + t + 1)..(k0 + nb) {
                         fast[(k0 + t) * ld + i] = 0.0;
                     }
                 }
             }
             let mut reference = fast.clone();
+            assert_eq!(
+                factor_block(&mut fast, ld, k0, nb),
+                ref_factor_block(&mut reference, ld, k0, nb),
+            );
+            assert_lower_identical(&fast, &reference, ld, &format!("(ld={ld},k0={k0},nb={nb})"));
+        }
+    }
+
+    #[test]
+    fn solve_panel_matches_scalar_reference_exactly() {
+        for &(ld, k0, nb) in &SHAPES {
+            let r0 = k0 + nb;
+            let mut fast = test_matrix(ld);
+            plant_zero_columns(&mut fast, ld, k0, nb, r0);
+            // both copies share the factored block (same kernel), so the
+            // comparison isolates the panel solve
+            factor_block(&mut fast, ld, k0, nb).unwrap();
+            let mut reference = fast.clone();
+            solve_panel(&mut fast, ld, k0, nb, r0, ld - r0);
+            ref_solve_panel(&mut reference, ld, k0, nb, r0, ld - r0);
+            assert_lower_identical(&fast, &reference, ld, &format!("(ld={ld},k0={k0},nb={nb})"));
+        }
+    }
+
+    #[test]
+    fn rank_update_matches_scalar_reference_exactly() {
+        // every remainder shape of the unroll-by-4 (nb % 4 ∈ {0,1,2,3}),
+        // including zero pivot weights from amalgamation padding
+        for &(ld, k0, nb) in &SHAPES {
+            let r0 = k0 + nb;
+            let mut fast = test_matrix(ld);
+            plant_zero_columns(&mut fast, ld, k0, nb, r0);
+            let mut reference = fast.clone();
             rank_update(&mut fast, ld, k0, nb, r0);
             ref_rank_update(&mut reference, ld, k0, nb, r0);
-            for j in 0..ld {
-                for i in j..ld {
-                    assert!(
-                        fast[j * ld + i] == reference[j * ld + i],
-                        "(ld={ld},k0={k0},nb={nb}) at ({i},{j}): \
-                         {} vs {}",
-                        fast[j * ld + i],
-                        reference[j * ld + i]
-                    );
+            assert_lower_identical(&fast, &reference, ld, &format!("(ld={ld},k0={k0},nb={nb})"));
+        }
+    }
+
+    /// Interleave `K` single-lane fronts into the batched layout.
+    fn interleave<const K: usize>(lanes: &[Vec<f64>]) -> Vec<f64> {
+        assert_eq!(lanes.len(), K);
+        let len = lanes[0].len();
+        let mut out = vec![0.0; len * K];
+        for (l, lane) in lanes.iter().enumerate() {
+            for (i, &v) in lane.iter().enumerate() {
+                out[i * K + l] = v;
+            }
+        }
+        out
+    }
+
+    /// Every lane of the batched front factorization must be
+    /// value-identical to the single-lane kernel run on that lane alone
+    /// — including pattern-level zero columns (shared by all lanes) and
+    /// value-level zeros in a single lane (shared-skip divergence is
+    /// confined to signs of exact zeros, invisible under `==`).
+    fn check_front_lanes_identical<const K: usize>() {
+        for &(ld, k0, nb) in &SHAPES {
+            let ns = (k0 + nb).min(ld);
+            let mut lanes: Vec<Vec<f64>> = (0..K).map(|l| test_matrix_lane(ld, l)).collect();
+            for lane in lanes.iter_mut() {
+                // pattern-level zeros: same rows in every lane
+                plant_zero_columns(lane, ld, 0, ns, ns);
+            }
+            // value-level zeros in lane 0 only: the other lanes keep the
+            // quad active, so lane 0 rides the shared-skip path (start
+            // past flat index 0 — that's the (0,0) pivot)
+            for i in (ns / 2).max(1)..ld {
+                lanes[0][i] = 0.0;
+            }
+            let mut batched = interleave::<K>(&lanes);
+            assert_eq!(factor_front_k::<K>(&mut batched, ld, ns, 3), Ok(()));
+            for (l, lane) in lanes.iter_mut().enumerate() {
+                factor_front(lane, ld, ns, 3).unwrap();
+                for j in 0..ld {
+                    for i in j..ld {
+                        let got = batched[(j * ld + i) * K + l];
+                        assert!(
+                            got == lane[j * ld + i],
+                            "K={K} lane {l} (ld={ld},ns={ns}) at ({i},{j}): \
+                             {got} vs {}",
+                            lane[j * ld + i]
+                        );
+                    }
                 }
             }
         }
+    }
+
+    #[test]
+    fn batched_front_lanes_match_single_lane_exactly() {
+        check_front_lanes_identical::<2>();
+        check_front_lanes_identical::<4>();
+        check_front_lanes_identical::<8>();
+    }
+
+    #[test]
+    fn batched_zero_pivot_reports_lane_and_column() {
+        let ld = 6;
+        let mut lanes: Vec<Vec<f64>> = (0..4).map(|l| test_matrix_lane(ld, l)).collect();
+        // lane 2: make pivot column 3 vanish (no sub-entries either, so
+        // no earlier update can refill it)
+        for j in 0..ld {
+            for i in j..ld {
+                if i == 3 || j == 3 {
+                    lanes[2][j * ld + i] = 0.0;
+                }
+            }
+        }
+        let mut batched = interleave::<4>(&lanes);
+        assert_eq!(factor_front_k::<4>(&mut batched, ld, ld, 2), Err((2, 3)));
+        // the single-lane path agrees on the failing column for that lane
+        assert_eq!(factor_front(&mut lanes[2], ld, ld, 2), Err(3));
     }
 
     #[test]

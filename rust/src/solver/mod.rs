@@ -97,12 +97,13 @@ use crate::util::Timer;
 
 pub use numeric::{analyze, factorize, FactorError, LdlFactor, Symbolic};
 pub use plan::{
-    factorize_with_plan, plan_solve, plan_solve_prepared, solve_with_plan, NumericWorkspace,
-    SymbolicFactorization,
+    factorize_refreshed, factorize_refreshed_batch, factorize_with_plan,
+    factorize_with_plan_batch, plan_solve, plan_solve_prepared, solve_refreshed_batch,
+    solve_with_plan, solve_with_plan_batch, NumericWorkspace, SymbolicFactorization,
 };
 pub use plan_cache::{PlanCache, PlanKey};
 pub use supernode::{FactorConfig, FactorMode, SupernodalPlan};
-pub use supernodal::factorize_supernodal;
+pub use supernodal::{factorize_supernodal, factorize_supernodal_gathered_batch};
 
 /// Solver configuration.
 #[derive(Clone, Copy, Debug)]

@@ -38,6 +38,18 @@
 //! [`crate::solver::plan_cache::PlanCache`]; the serving engine's warm
 //! path goes predicted label → cached plan → [`solve_with_plan`] with
 //! zero symbolic work.
+//!
+//! When *several* requests share one plan, the batched entries
+//! ([`factorize_with_plan_batch`] / [`solve_with_plan_batch`], plus the
+//! value-level [`solve_refreshed_batch`] the serving admission layer
+//! uses) refresh each lane and hand all value sets to **one**
+//! multifrontal traversal over lane-interleaved fronts
+//! ([`crate::solver::supernodal::factorize_supernodal_gathered_batch`]).
+//! Every lane's factor, solve, and even zero-pivot error is bit-identical
+//! to its own single-request call — batching changes throughput, never
+//! results. Scalar plans simply loop (the scalar kernel has no batched
+//! form); capped plans return the same per-lane estimate the single path
+//! would.
 
 use std::sync::Arc;
 
@@ -205,6 +217,20 @@ impl SymbolicFactorization {
         self.snplan.as_ref().map_or(0, |p| p.peak_front_bytes())
     }
 
+    /// Refresh `ws` with this plan's kernel-layout values of `a` — the
+    /// pure value-gather half of [`factorize_with_plan`], exposed so the
+    /// serving admission layer can refresh each batch member into its
+    /// own buffer before the shared traversal.
+    pub fn refresh_values(&self, a: &CsrMatrix, ws: &mut NumericWorkspace) {
+        assert!(!self.capped, "capped plans carry no numeric structure");
+        assert_eq!(a.nrows, self.n, "plan built for a different order");
+        assert_eq!(a.nnz(), self.raw_nnz, "plan built for a different pattern");
+        self.vals
+            .as_ref()
+            .expect("uncapped plans carry a value map")
+            .refresh(a, &mut ws.vals);
+    }
+
     /// ‖PA·x − b‖₂ over the plan's stored pattern and the refreshed
     /// values in `vals` (`x`, `b` in the `PA` numbering).
     fn residual(&self, vals: &[f64], x: &[f64], b: &[f64]) -> f64 {
@@ -353,22 +379,65 @@ pub fn factorize_with_plan(
     plan: &SymbolicFactorization,
     ws: &mut NumericWorkspace,
 ) -> Result<LdlFactor, FactorError> {
+    plan.refresh_values(a, ws);
+    factorize_refreshed(plan, &ws.vals)
+}
+
+/// The kernel-dispatch half of [`factorize_with_plan`]: factor values
+/// already refreshed into the plan's kernel layout. This is the
+/// single-lane form of [`factorize_refreshed_batch`].
+pub fn factorize_refreshed(
+    plan: &SymbolicFactorization,
+    vals: &[f64],
+) -> Result<LdlFactor, FactorError> {
     assert!(!plan.capped, "capped plans carry no numeric structure");
-    assert_eq!(a.nrows, plan.n, "plan built for a different order");
-    assert_eq!(a.nnz(), plan.raw_nnz, "plan built for a different pattern");
-    let vals = plan.vals.as_ref().expect("uncapped plans carry a value map");
-    vals.refresh(a, &mut ws.vals);
     match (&plan.sym, &plan.snplan) {
         (Some(sym), _) => {
             let (indptr, indices) = plan
                 .pa_pattern
                 .as_ref()
                 .expect("scalar plans keep the permuted pattern");
-            numeric::factorize_parts(plan.n, indptr, indices, &ws.vals, sym)
+            numeric::factorize_parts(plan.n, indptr, indices, vals, sym)
         }
-        (None, Some(sn)) => supernodal::factorize_supernodal_gathered(&ws.vals, sn, &plan.factor),
+        (None, Some(sn)) => supernodal::factorize_supernodal_gathered(vals, sn, &plan.factor),
         (None, None) => unreachable!("plan carries neither path"),
     }
+}
+
+/// Factor `k` refreshed value sets sharing one plan in a single batched
+/// traversal (supernodal plans; scalar plans loop — the scalar kernel
+/// has no batched form). Each lane's result — factor or error — is
+/// bit-identical to its own [`factorize_refreshed`] call; see
+/// [`crate::solver::supernodal::factorize_supernodal_gathered_batch`]
+/// for the contract.
+pub fn factorize_refreshed_batch(
+    plan: &SymbolicFactorization,
+    valss: &[&[f64]],
+) -> Vec<Result<LdlFactor, FactorError>> {
+    assert!(!plan.capped, "capped plans carry no numeric structure");
+    match &plan.snplan {
+        Some(sn) => supernodal::factorize_supernodal_gathered_batch(valss, sn, &plan.factor),
+        None => valss
+            .iter()
+            .map(|vals| factorize_refreshed(plan, vals))
+            .collect(),
+    }
+}
+
+/// Batched [`factorize_with_plan`]: refresh each matrix into its own
+/// workspace, then factor all of them in one traversal. `mats[i]` pairs
+/// with `wss[i]`; every matrix must share the plan's pattern.
+pub fn factorize_with_plan_batch(
+    mats: &[&CsrMatrix],
+    plan: &SymbolicFactorization,
+    wss: &mut [NumericWorkspace],
+) -> Vec<Result<LdlFactor, FactorError>> {
+    assert_eq!(mats.len(), wss.len(), "one workspace per batched matrix");
+    for (a, ws) in mats.iter().zip(wss.iter_mut()) {
+        plan.refresh_values(a, ws);
+    }
+    let valss: Vec<&[f64]> = wss.iter().map(|w| w.vals.as_slice()).collect();
+    factorize_refreshed_batch(plan, &valss)
 }
 
 /// The plan-consuming counterpart of `solve_ordered`: numeric factorize
@@ -430,6 +499,108 @@ pub fn solve_with_plan(
         estimated: false,
         residual,
     })
+}
+
+/// Batched [`solve_with_plan`] on values already refreshed into the
+/// plan's kernel layout — the entry the serving admission layer calls
+/// after gathering a coalesced group's value buffers. One traversal
+/// factors every lane; each lane then runs its own triangular solve and
+/// residual against the same RHS stream the single path draws, so every
+/// per-lane number except the timings is bit-identical to that lane's
+/// own [`solve_with_plan`]. `factor_s` is the batch's wall time divided
+/// by `k` — the amortized per-request cost that makes batching visible
+/// in the report.
+pub fn solve_refreshed_batch(
+    plan: &SymbolicFactorization,
+    cfg: &SolverConfig,
+    valss: &[&[f64]],
+) -> Vec<Result<SolveReport, FactorError>> {
+    let k = valss.len();
+    if k == 0 {
+        return Vec::new();
+    }
+    let t_f = Timer::start();
+    let mut factors = factorize_refreshed_batch(plan, valss);
+    let mut factor_s = t_f.elapsed_s() / k as f64;
+
+    // same RHS stream as `solve_ordered` / `solve_with_plan`, per lane
+    let n = plan.n;
+    let mut rng = Rng::new(cfg.seed);
+    let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mut xs: Vec<Option<Vec<f64>>> = vec![None; k];
+    let mut solve_s = vec![f64::INFINITY; k];
+    let mut time_solves = |factors: &[Result<LdlFactor, FactorError>],
+                           xs: &mut Vec<Option<Vec<f64>>>,
+                           solve_s: &mut Vec<f64>| {
+        for (l, f) in factors.iter().enumerate() {
+            if let Ok(f) = f {
+                let t_s = Timer::start();
+                xs[l] = Some(f.solve(&b));
+                solve_s[l] = solve_s[l].min(t_s.elapsed_s());
+            }
+        }
+    };
+    time_solves(&factors, &mut xs, &mut solve_s);
+    for _ in 1..cfg.measure_repeats.max(1) {
+        let t_f = Timer::start();
+        factors = factorize_refreshed_batch(plan, valss);
+        factor_s = factor_s.min(t_f.elapsed_s() / k as f64);
+        time_solves(&factors, &mut xs, &mut solve_s);
+    }
+
+    factors
+        .into_iter()
+        .enumerate()
+        .map(|(l, r)| {
+            r.map(|f| {
+                let x = xs[l].as_ref().expect("factored lanes were solved");
+                SolveReport {
+                    reorder_s: 0.0,
+                    analyze_s: 0.0,
+                    factor_s,
+                    solve_s: solve_s[l],
+                    fill: f.fill(),
+                    flops: f.flops,
+                    max_col: plan.cost.max_col,
+                    estimated: false,
+                    residual: plan.residual(valss[l], x, &b),
+                }
+            })
+        })
+        .collect()
+}
+
+/// Batched [`solve_with_plan`]: refresh every matrix, factor all of them
+/// in one traversal, solve and report per lane. Capped plans return the
+/// same rate-model estimate the single path produces, once per lane.
+pub fn solve_with_plan_batch(
+    mats: &[&CsrMatrix],
+    plan: &SymbolicFactorization,
+    cfg: &SolverConfig,
+    wss: &mut [NumericWorkspace],
+) -> Vec<Result<SolveReport, FactorError>> {
+    assert_eq!(mats.len(), wss.len(), "one workspace per batched matrix");
+    if plan.capped {
+        let rate = calibrated_flop_rate();
+        let cost = plan.cost;
+        let estimate = SolveReport {
+            reorder_s: 0.0,
+            analyze_s: 0.0,
+            factor_s: cost.flops / rate,
+            solve_s: 4.0 * cost.fill as f64 / rate,
+            fill: cost.fill,
+            flops: cost.flops,
+            max_col: cost.max_col,
+            estimated: true,
+            residual: 0.0,
+        };
+        return mats.iter().map(|_| Ok(estimate)).collect();
+    }
+    for (a, ws) in mats.iter().zip(wss.iter_mut()) {
+        plan.refresh_values(a, ws);
+    }
+    let valss: Vec<&[f64]> = wss.iter().map(|w| w.vals.as_slice()).collect();
+    solve_refreshed_batch(plan, cfg, &valss)
 }
 
 #[cfg(test)]
@@ -578,6 +749,86 @@ mod tests {
         let reference = factorize_with(&pa2, &an2, &cfg.factor).unwrap();
         assert_eq!(f.lx, reference.lx);
         assert_eq!(f.d, reference.d);
+    }
+
+    #[test]
+    fn batched_plan_factor_matches_single_requests_per_lane() {
+        // k = 3 (chunked 2 + 1) across every factor mode: each lane of
+        // the batch must equal its own single-request factorization
+        let raw = mesh(9, 8);
+        for mode in [
+            FactorMode::Scalar,
+            FactorMode::Supernodal,
+            FactorMode::SupernodalParallel,
+        ] {
+            let cfg = mode_cfg(mode);
+            let spd = prepare(&raw, &cfg);
+            let perm = Arc::new(ReorderAlgorithm::Amd.compute(&spd, 3));
+            let plan = plan_solve(&raw, perm, &cfg);
+            let mats: Vec<CsrMatrix> = (0..3)
+                .map(|l| {
+                    let mut m = raw.clone();
+                    for v in m.data.iter_mut() {
+                        *v *= 1.0 + 0.5 * l as f64;
+                    }
+                    m
+                })
+                .collect();
+            let refs: Vec<&CsrMatrix> = mats.iter().collect();
+            let mut wss: Vec<NumericWorkspace> =
+                (0..3).map(|_| NumericWorkspace::new()).collect();
+            let batch = factorize_with_plan_batch(&refs, &plan, &mut wss);
+            for (l, got) in batch.into_iter().enumerate() {
+                let got = got.unwrap();
+                let mut ws = NumericWorkspace::new();
+                let single = factorize_with_plan(&mats[l], &plan, &mut ws).unwrap();
+                assert_eq!(got.lx, single.lx, "{mode:?} lane {l}");
+                assert_eq!(got.d, single.d, "{mode:?} lane {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_solve_reports_match_single_requests() {
+        let raw = mesh(8, 8);
+        let cfg = SolverConfig::default();
+        let spd = prepare(&raw, &cfg);
+        let perm = Arc::new(ReorderAlgorithm::Rcm.compute(&spd, 2));
+        let plan = plan_solve(&raw, perm, &cfg);
+        let refs: Vec<&CsrMatrix> = vec![&raw; 4];
+        let mut wss: Vec<NumericWorkspace> =
+            (0..4).map(|_| NumericWorkspace::new()).collect();
+        let reports = solve_with_plan_batch(&refs, &plan, &cfg, &mut wss);
+        let mut ws = NumericWorkspace::new();
+        let single = solve_with_plan(&raw, &plan, &cfg, &mut ws).unwrap();
+        assert_eq!(reports.len(), 4);
+        for r in reports {
+            let r = r.unwrap();
+            assert!(!r.estimated);
+            assert_eq!(r.fill, single.fill);
+            assert_eq!(r.flops, single.flops);
+            assert_eq!(r.residual, single.residual, "lanes must solve identically");
+            assert_eq!(r.analyze_s, 0.0);
+        }
+    }
+
+    #[test]
+    fn capped_plan_batches_like_singles() {
+        let raw = mesh(10, 10);
+        let cfg = SolverConfig {
+            flop_cap: 10.0,
+            ..SolverConfig::default()
+        };
+        let plan = plan_solve(&raw, Arc::new(Permutation::identity(raw.nrows)), &cfg);
+        assert!(plan.capped);
+        let refs: Vec<&CsrMatrix> = vec![&raw; 2];
+        let mut wss: Vec<NumericWorkspace> =
+            (0..2).map(|_| NumericWorkspace::new()).collect();
+        for r in solve_with_plan_batch(&refs, &plan, &cfg, &mut wss) {
+            let r = r.unwrap();
+            assert!(r.estimated);
+            assert_eq!(r.fill, plan.cost.fill);
+        }
     }
 
     #[test]

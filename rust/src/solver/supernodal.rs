@@ -61,6 +61,41 @@
 //! [`crate::solver::SymbolicFactorization`] and replayed through
 //! [`factorize_supernodal_gathered`] against a stream of value buffers.
 //! Inputs must be SPD-like (no pivoting — see [`super::numeric`]).
+//!
+//! ## Batched multi-RHS traversal
+//!
+//! When several requests share one plan (same `PatternKey`, hence the
+//! same symbolic factorization — the shape serving traffic has, see
+//! [`crate::coordinator::serving`]), the per-request DAG traversal is
+//! memory-bound: every front entry is loaded, updated once, stored.
+//! [`factorize_supernodal_gathered_batch`] factors `k` value sets in
+//! **one** traversal over **lane-interleaved** fronts (element `(i, j)`
+//! of lane `l` at `f[(j*ld + i)*K + l]`, arenas sized `peak_front · K`):
+//! assembly, extend-add, the `_k` kernels ([`super::kernels`]), and the
+//! factor scatter all walk the shared pattern once and touch `K`
+//! contiguous lanes per element — each loaded index, weight, and bounds
+//! check is amortized `K`-fold and the lane axis is a unit-stride SIMD
+//! vector. The batched request lifecycle:
+//!
+//! ```text
+//!   admission window (serving)      one traversal, k-wide fronts
+//!   req₀ ┐ same                     ┌─────────────────────────────┐
+//!   req₁ ├ Pattern ─► [v₀ v₁ … vₖ] ─► assemble·extend-add·factor_k │
+//!   reqₖ ┘ Key        (lane gather) │  per-lane scatter ─► k LdlFactors
+//!                                   └─────────────────────────────┘
+//! ```
+//!
+//! **Per-lane bit-identity** is a hard contract: the batch preserves the
+//! exact DAG schedule, extend-add order, and per-element arithmetic
+//! order of the single-request path, so every lane's factor equals its
+//! single-request [`factorize_supernodal_gathered`] result under `f64`
+//! equality (divergence is confined to signs of exact zeros — the same
+//! line the kernels' quad-skip already holds, see [`super::kernels`]).
+//! Arbitrary `k` is chunked greedily into monomorphized `K ∈ {8, 4, 2}`
+//! sweeps plus a single-lane remainder. A vanishing pivot in *any* lane
+//! aborts its chunk, which is then replayed lane-by-lane through the
+//! single-request path — so even zero-pivot error selection is exactly
+//! per-lane identical.
 
 use std::sync::Mutex;
 
@@ -553,6 +588,532 @@ fn finish(plan: &SupernodalPlan, lx: Vec<f64>, d: Vec<f64>, flops: f64) -> LdlFa
     }
 }
 
+// ---------------------------------------------------------------------
+// Batched multi-RHS traversal (see the module docs): the same walk over
+// lane-interleaved fronts, factoring K value sets at once.
+// ---------------------------------------------------------------------
+
+/// Per-supernode factor output slices, one pair per lane.
+type LaneSlices<'a> = Vec<&'a mut [f64]>;
+
+/// Shared state of one batched traversal.
+struct CtxK<'a, const K: usize> {
+    /// One postordered value buffer per lane.
+    bxs: [&'a [f64]; K],
+    plan: &'a SupernodalPlan,
+    cfg: &'a FactorConfig,
+}
+
+/// [`extend_add`] over `K` interleaved lanes: same scatter map, same
+/// column-major diagonal-down order, `K` contiguous values per slot.
+fn extend_add_k<const K: usize>(
+    f: &mut [f64],
+    ld: usize,
+    map: &[usize],
+    urows: &[usize],
+    vals: &[f64],
+) {
+    let mc = urows.len();
+    debug_assert_eq!(vals.len(), mc * mc * K);
+    for q in 0..mc {
+        let jl = map[urows[q]];
+        debug_assert!(jl < ld);
+        let col = &vals[q * mc * K..(q + 1) * mc * K];
+        for p in q..mc {
+            let dst = (jl * ld + map[urows[p]]) * K;
+            let src = p * K;
+            for l in 0..K {
+                f[dst + l] += col[src + l];
+            }
+        }
+    }
+}
+
+/// [`harvest`] over `K` interleaved lanes — the update matrix stays
+/// interleaved (`mc×mc×K`) so the parent's extend-add is lane-contiguous.
+fn harvest_k<const K: usize>(front: &[f64], ld: usize, w: usize, m: usize, dst: &mut [f64]) {
+    for q in 0..m {
+        let src = &front[((w + q) * ld + w + q) * K..((w + q) * ld + ld) * K];
+        dst[(q * m + q) * K..(q + 1) * m * K].copy_from_slice(src);
+    }
+}
+
+/// [`eliminate_snode`] over `K` interleaved lanes. The front buffer is
+/// `ld×ld×K`; assembly and extend-add walk the shared pattern once,
+/// adding `K` lane values per slot; the `_k` kernels eliminate all lanes
+/// together; the scatter fans each lane out to its own factor slices.
+/// A vanishing pivot in any lane aborts the whole batch (the dispatcher
+/// replays lanes singly — see the module docs), so the error here only
+/// signals *that* a pivot vanished, not which lane's.
+#[allow(clippy::too_many_arguments)]
+fn eliminate_snode_k<const K: usize>(
+    ctx: &CtxK<'_, K>,
+    s: usize,
+    arena: &mut FrontArena,
+    stack_children: &[(usize, usize)],
+    boundary_children: &[(usize, &[f64])],
+    lx_s: &mut LaneSlices<'_>,
+    d_s: &mut LaneSlices<'_>,
+    flops: &mut f64,
+) -> Result<(), FactorError> {
+    let plan = ctx.plan;
+    let a0 = plan.first[s];
+    let e = plan.first[s + 1];
+    let w = e - a0;
+    let rows = &plan.rows[s];
+    let m = rows.len();
+    let ld = w + m;
+
+    let FrontArena {
+        map, front, stack, ..
+    } = arena;
+    debug_assert!(ld * ld * K <= front.len(), "front exceeds the arena sizing");
+    let f = &mut front[..ld * ld * K];
+    f.fill(0.0);
+    for (k, j) in (a0..e).enumerate() {
+        map[j] = k;
+    }
+    for (k, &r) in rows.iter().enumerate() {
+        map[r] = w + k;
+    }
+
+    // assemble every lane's columns of B in one pattern walk
+    for j in a0..e {
+        let jl = j - a0;
+        let (s0, s1) = (plan.b_indptr[j], plan.b_indptr[j + 1]);
+        let idx = &plan.b_indices[s0..s1];
+        let start = idx.partition_point(|&i| i < j);
+        for (off, &i) in idx[start..].iter().enumerate() {
+            debug_assert!(
+                i < e || rows.binary_search(&i).is_ok(),
+                "entry ({i},{j}) outside the front"
+            );
+            let dst = (jl * ld + map[i]) * K;
+            let src = s0 + start + off;
+            for l in 0..K {
+                f[dst + l] += ctx.bxs[l][src];
+            }
+        }
+    }
+
+    // children ascending by supernode index — the single path's fixed
+    // merge order, hence per-lane bit-identity
+    let (mut p, mut q) = (0usize, 0usize);
+    while p < stack_children.len() || q < boundary_children.len() {
+        let ps = stack_children.get(p).map_or(usize::MAX, |&(c, _)| c);
+        let qs = boundary_children.get(q).map_or(usize::MAX, |&(c, _)| c);
+        if ps < qs {
+            let (c, off) = stack_children[p];
+            let mc = plan.rows[c].len();
+            extend_add_k::<K>(f, ld, map, &plan.rows[c], &stack[off..off + mc * mc * K]);
+            p += 1;
+        } else {
+            let (c, vals) = boundary_children[q];
+            extend_add_k::<K>(f, ld, map, &plan.rows[c], vals);
+            q += 1;
+        }
+    }
+
+    kernels::factor_front_k::<K>(f, ld, w, ctx.cfg.panel_block.max(1))
+        .map_err(|(_l, k)| FactorError::ZeroPivot(plan.post[a0 + k]))?;
+    // structural flops are identical in every lane: count them once and
+    // stamp the same value into each lane's factor (matching the single
+    // path exactly)
+    for k in 0..w {
+        let h = (ld - 1 - k) as f64;
+        *flops += h * (h + 3.0) / 2.0;
+    }
+
+    let base = plan.lp[a0];
+    for j in a0..e {
+        let jl = j - a0;
+        let diag = (jl * ld + jl) * K;
+        for (l, dl) in d_s.iter_mut().enumerate() {
+            dl[jl] = f[diag + l];
+        }
+        for (t, &i) in plan.li[plan.lp[j]..plan.lp[j + 1]].iter().enumerate() {
+            let src = (jl * ld + map[i]) * K;
+            let off = plan.lp[j] - base + t;
+            for (l, ll) in lx_s.iter_mut().enumerate() {
+                ll[off] = f[src + l];
+            }
+        }
+    }
+    Ok(())
+}
+
+/// [`run_span`] over `K` interleaved lanes: identical LIFO stack
+/// discipline, with every update matrix `K`-wide.
+fn run_span_k<const K: usize>(
+    ctx: &CtxK<'_, K>,
+    snodes: Vec<(usize, LaneSlices<'_>, LaneSlices<'_>)>,
+    root: Option<usize>,
+    arena: &mut FrontArena,
+    flops: &mut f64,
+) -> Result<Option<BoundaryBuf>, FactorError> {
+    let plan = ctx.plan;
+    let mut pending = std::mem::take(&mut arena.pending);
+    pending.clear();
+    let mut out = None;
+    let mut result = Ok(());
+    for (s, mut lx_s, mut d_s) in snodes {
+        let nc = plan.children[s].len();
+        let base = pending.len() - nc;
+        debug_assert!(
+            pending[base..]
+                .iter()
+                .map(|&(c, _)| c)
+                .eq(plan.children[s].iter().copied()),
+            "postorder stack discipline violated"
+        );
+        if let Err(e) = eliminate_snode_k::<K>(
+            ctx,
+            s,
+            arena,
+            &pending[base..],
+            &[],
+            &mut lx_s,
+            &mut d_s,
+            flops,
+        ) {
+            result = Err(e);
+            break;
+        }
+        if nc > 0 {
+            let floor = pending[base].1;
+            pending.truncate(base);
+            arena.truncate_updates(floor);
+        }
+        let m = plan.rows[s].len();
+        if m == 0 {
+            continue;
+        }
+        let w = plan.first[s + 1] - plan.first[s];
+        let ld = w + m;
+        if root == Some(s) {
+            let mut up = arena::checkout_boundary(m * m * K);
+            harvest_k::<K>(&arena.front[..ld * ld * K], ld, w, m, &mut up);
+            out = Some(up);
+        } else {
+            let off = arena.push_update(m * m * K);
+            let (front, stack) = (&arena.front, &mut arena.stack);
+            harvest_k::<K>(
+                &front[..ld * ld * K],
+                ld,
+                w,
+                m,
+                &mut stack[off..off + m * m * K],
+            );
+            pending.push((s, off));
+        }
+    }
+    if result.is_ok() && root.is_none() {
+        debug_assert!(pending.is_empty(), "updates leaked past the forest walk");
+    }
+    arena.pending = pending;
+    result.map(|()| out)
+}
+
+/// One node of the batched elimination DAG — [`DagTask`] with per-lane
+/// factor slices.
+enum DagTaskK<'a> {
+    Subtree {
+        root: usize,
+        snodes: Vec<(usize, LaneSlices<'a>, LaneSlices<'a>)>,
+    },
+    Top {
+        s: usize,
+        lx_s: LaneSlices<'a>,
+        d_s: LaneSlices<'a>,
+    },
+}
+
+/// [`run_dag_task`] over `K` interleaved lanes: arenas and boundary
+/// buffers scale by `K`, the schedule does not change.
+fn run_dag_task_k<const K: usize>(
+    ctx: &CtxK<'_, K>,
+    task: DagTaskK<'_>,
+    arena: &mut FrontArena,
+    slots: &[Mutex<Option<BoundaryBuf>>],
+) -> Result<f64, FactorError> {
+    let plan = ctx.plan;
+    let mut flops = 0.0;
+    match task {
+        DagTaskK::Subtree { root, snodes } => {
+            arena.begin(plan.n, plan.peak_front * K, plan.stack_peak[root] * K);
+            if let Some(up) = run_span_k::<K>(ctx, snodes, Some(root), arena, &mut flops)? {
+                *slots[root].lock().expect("update slot poisoned") = Some(up);
+            }
+        }
+        DagTaskK::Top {
+            s,
+            mut lx_s,
+            mut d_s,
+        } => {
+            arena.begin(plan.n, plan.peak_front * K, 0);
+            let mut kids: Vec<(usize, BoundaryBuf)> =
+                Vec::with_capacity(plan.children[s].len());
+            for &c in &plan.children[s] {
+                match slots[c].lock().expect("update slot poisoned").take() {
+                    Some(up) => kids.push((c, up)),
+                    None => return Ok(0.0), // child failed: skip silently
+                }
+            }
+            let refs: Vec<(usize, &[f64])> =
+                kids.iter().map(|(c, up)| (*c, &**up)).collect();
+            eliminate_snode_k::<K>(ctx, s, arena, &[], &refs, &mut lx_s, &mut d_s, &mut flops)?;
+            let m = plan.rows[s].len();
+            if m > 0 {
+                let w = plan.first[s + 1] - plan.first[s];
+                let ld = w + m;
+                let mut up = arena::checkout_boundary(m * m * K);
+                harvest_k::<K>(&arena.front[..ld * ld * K], ld, w, m, &mut up);
+                *slots[s].lock().expect("update slot poisoned") = Some(up);
+            }
+        }
+    }
+    Ok(flops)
+}
+
+/// Split each lane's factor arrays into per-supernode slices, grouped by
+/// supernode: `out[s]` holds lane 0's slice, lane 1's, … in order.
+fn lane_parts<'a, const K: usize>(
+    plan: &SupernodalPlan,
+    lanes: &'a mut [Vec<f64>; K],
+    width: impl Fn(usize) -> usize,
+) -> Vec<LaneSlices<'a>> {
+    let ns = plan.n_supernodes();
+    let mut parts: Vec<LaneSlices<'a>> = (0..ns).map(|_| Vec::with_capacity(K)).collect();
+    for lane in lanes.iter_mut() {
+        let mut rest: &mut [f64] = lane;
+        for (s, slot) in parts.iter_mut().enumerate() {
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(width(s));
+            slot.push(head);
+            rest = tail;
+        }
+    }
+    parts
+}
+
+/// One monomorphized `K`-lane sweep: the exact schedule of
+/// [`factorize_supernodal_gathered`] (sequential span or pipelined DAG)
+/// over interleaved fronts. `Err` means some lane hit a vanishing pivot
+/// — the caller replays the chunk lane-by-lane.
+fn gathered_batch_k<const K: usize>(
+    bxs: &[&[f64]],
+    plan: &SupernodalPlan,
+    cfg: &FactorConfig,
+) -> Result<Vec<LdlFactor>, FactorError> {
+    assert_eq!(bxs.len(), K);
+    for bx in bxs {
+        assert_eq!(
+            bx.len(),
+            plan.b_from.len(),
+            "value buffer does not match the plan's pattern"
+        );
+    }
+    let n = plan.n;
+    let ns = plan.n_supernodes();
+    let nnz_l = plan.lp[n];
+    let mut lxs: [Vec<f64>; K] = std::array::from_fn(|_| vec![0f64; nnz_l]);
+    let mut ds: [Vec<f64>; K] = std::array::from_fn(|_| vec![0f64; n]);
+    let mut total_flops = 0.0;
+    let ctx = CtxK::<K> {
+        bxs: std::array::from_fn(|l| bxs[l]),
+        plan,
+        cfg,
+    };
+
+    let workers = if cfg.workers == 0 {
+        pool::default_workers()
+    } else {
+        cfg.workers
+    };
+    let parallel = cfg.mode == FactorMode::SupernodalParallel
+        && workers > 1
+        && ns > 1
+        && plan.total_flops() * K as f64 >= cfg.parallel_flop_min;
+
+    let mut lx_parts = lane_parts::<K>(plan, &mut lxs, |s| {
+        plan.lp[plan.first[s + 1]] - plan.lp[plan.first[s]]
+    });
+    let mut d_parts = lane_parts::<K>(plan, &mut ds, |s| plan.first[s + 1] - plan.first[s]);
+
+    if !parallel {
+        let mut snodes: Vec<(usize, LaneSlices<'_>, LaneSlices<'_>)> = Vec::with_capacity(ns);
+        for s in 0..ns {
+            snodes.push((
+                s,
+                std::mem::take(&mut lx_parts[s]),
+                std::mem::take(&mut d_parts[s]),
+            ));
+        }
+        let up = arena::with_serial_arena(|arena| {
+            arena.begin(n, plan.peak_front * K, plan.serial_stack_peak() * K);
+            run_span_k::<K>(&ctx, snodes, None, arena, &mut total_flops)
+        })?;
+        debug_assert!(up.is_none(), "a full-forest walk emits no boundary update");
+        drop(lx_parts);
+        drop(d_parts);
+        return Ok(finish_batch(plan, lxs, ds, total_flops));
+    }
+
+    // pipelined: same DAG construction as the single path
+    let sch = schedule(plan, 2 * workers);
+    let n_sub = sch.task_roots.len();
+    let mut order: Vec<usize> = (0..n_sub).collect();
+    order.sort_by(|&a, &b| {
+        plan.subtree_flops[sch.task_roots[a]]
+            .partial_cmp(&plan.subtree_flops[sch.task_roots[b]])
+            .unwrap()
+    });
+    let mut sub_index = vec![0usize; n_sub];
+    for (new, &old) in order.iter().enumerate() {
+        sub_index[old] = new;
+    }
+    let tops: Vec<usize> = (0..ns).filter(|&s| sch.task_of[s] == NONE).collect();
+    let mut dag_of = vec![NONE; ns];
+    for (old, &root) in sch.task_roots.iter().enumerate() {
+        dag_of[root] = sub_index[old];
+    }
+    for (j, &s) in tops.iter().enumerate() {
+        dag_of[s] = n_sub + j;
+    }
+    let n_dag = n_sub + tops.len();
+    let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n_dag];
+    let mut n_deps = vec![0usize; n_dag];
+    for (j, &s) in tops.iter().enumerate() {
+        for &c in &plan.children[s] {
+            debug_assert!(dag_of[c] != NONE, "top child is neither root nor top");
+            dependents[dag_of[c]].push(n_sub + j);
+            n_deps[n_sub + j] += 1;
+        }
+    }
+
+    let mut tasks: Vec<DagTaskK<'_>> = Vec::with_capacity(n_dag);
+    for &old in &order {
+        tasks.push(DagTaskK::Subtree {
+            root: sch.task_roots[old],
+            snodes: Vec::new(),
+        });
+    }
+    for s in 0..ns {
+        let t = sch.task_of[s];
+        if t != NONE {
+            let DagTaskK::Subtree { snodes, .. } = &mut tasks[sub_index[t]] else {
+                unreachable!("subtree tasks precede tops")
+            };
+            snodes.push((
+                s,
+                std::mem::take(&mut lx_parts[s]),
+                std::mem::take(&mut d_parts[s]),
+            ));
+        }
+    }
+    for &s in &tops {
+        tasks.push(DagTaskK::Top {
+            s,
+            lx_s: std::mem::take(&mut lx_parts[s]),
+            d_s: std::mem::take(&mut d_parts[s]),
+        });
+    }
+
+    let slots: Vec<Mutex<Option<BoundaryBuf>>> = (0..ns).map(|_| Mutex::new(None)).collect();
+    let results = pool::parallel_dag(
+        tasks,
+        &dependents,
+        &n_deps,
+        workers.min(n_dag),
+        arena::checkout_arena,
+        |arena, _i, task| run_dag_task_k::<K>(&ctx, task, arena, &slots),
+    );
+    drop(lx_parts);
+    drop(d_parts);
+
+    let mut first_err: Option<(usize, FactorError)> = None;
+    for r in results {
+        match r {
+            Ok(fl) => total_flops += fl,
+            Err(e) => {
+                let pos = match &e {
+                    FactorError::ZeroPivot(k) => plan.pnew[*k],
+                    _ => usize::MAX,
+                };
+                if first_err.as_ref().map_or(true, |(p, _)| pos < *p) {
+                    first_err = Some((pos, e));
+                }
+            }
+        }
+    }
+    if let Some((_, e)) = first_err {
+        return Err(e);
+    }
+    Ok(finish_batch(plan, lxs, ds, total_flops))
+}
+
+fn finish_batch<const K: usize>(
+    plan: &SupernodalPlan,
+    lxs: [Vec<f64>; K],
+    ds: [Vec<f64>; K],
+    flops: f64,
+) -> Vec<LdlFactor> {
+    lxs.into_iter()
+        .zip(ds)
+        .map(|(lx, d)| finish(plan, lx, d, flops))
+        .collect()
+}
+
+/// Factor `k = bxs.len()` value sets sharing one plan in as few
+/// traversals as possible: greedy chunks of monomorphized `K ∈ {8, 4, 2}`
+/// lanes, single-lane remainder. Returns one result per lane, in order.
+///
+/// **Per-lane bit-identity contract**: each `Ok` factor equals (under
+/// `f64` equality) the lane's own [`factorize_supernodal_gathered`]
+/// result, and each `Err` is exactly the error that lane would report
+/// alone — a chunk that hits a vanishing pivot in any lane is replayed
+/// lane-by-lane through the single-request path. See the module docs.
+pub fn factorize_supernodal_gathered_batch(
+    bxs: &[&[f64]],
+    plan: &SupernodalPlan,
+    cfg: &FactorConfig,
+) -> Vec<Result<LdlFactor, FactorError>> {
+    let k = bxs.len();
+    let mut out = Vec::with_capacity(k);
+    let mut i = 0;
+    while i < k {
+        let took = match k - i {
+            rem if rem >= 8 => batch_chunk::<8>(&bxs[i..i + 8], plan, cfg, &mut out),
+            rem if rem >= 4 => batch_chunk::<4>(&bxs[i..i + 4], plan, cfg, &mut out),
+            rem if rem >= 2 => batch_chunk::<2>(&bxs[i..i + 2], plan, cfg, &mut out),
+            _ => {
+                out.push(factorize_supernodal_gathered(bxs[i], plan, cfg));
+                1
+            }
+        };
+        i += took;
+    }
+    out
+}
+
+/// Run one `K`-lane chunk, replaying it lane-by-lane on a batch abort
+/// (vanishing pivot in any lane) so per-lane results are exact.
+fn batch_chunk<const K: usize>(
+    bxs: &[&[f64]],
+    plan: &SupernodalPlan,
+    cfg: &FactorConfig,
+    out: &mut Vec<Result<LdlFactor, FactorError>>,
+) -> usize {
+    match gathered_batch_k::<K>(bxs, plan, cfg) {
+        Ok(fs) => out.extend(fs.into_iter().map(Ok)),
+        Err(_) => {
+            for &bx in bxs {
+                out.push(factorize_supernodal_gathered(bx, plan, cfg));
+            }
+        }
+    }
+    K
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -765,6 +1326,103 @@ mod tests {
         let b = vec![1.0; a.nrows];
         let x = f.solve(&b);
         assert!(residual_norm(&a, &x, &b) < 1e-8);
+    }
+
+    /// Gather a matrix's values into the plan's postordered layout.
+    fn gather(a: &CsrMatrix, p: &SupernodalPlan) -> Vec<f64> {
+        p.b_from.iter().map(|&s| a.data[s]).collect()
+    }
+
+    #[test]
+    fn batched_lanes_are_bit_identical_to_single_requests() {
+        // k = 9 exercises the 8-lane chunk plus the single-lane
+        // remainder; k = 5 exercises 4 + 1; k = 3 exercises 2 + 1
+        let mut rng = Rng::new(99);
+        let a = random_spd(&mut rng, 220, 0.04);
+        let p = plan(&a, &serial_cfg());
+        let bx = gather(&a, &p);
+        for cfg in [serial_cfg(), parallel_cfg()] {
+            for k in [3usize, 5, 9] {
+                let lanes: Vec<Vec<f64>> = (0..k)
+                    .map(|l| bx.iter().map(|v| v * (1.0 + 0.125 * l as f64)).collect())
+                    .collect();
+                let refs: Vec<&[f64]> = lanes.iter().map(|v| v.as_slice()).collect();
+                let batch = factorize_supernodal_gathered_batch(&refs, &p, &cfg);
+                assert_eq!(batch.len(), k);
+                for (l, got) in batch.into_iter().enumerate() {
+                    let got = got.unwrap();
+                    let single =
+                        factorize_supernodal_gathered(&lanes[l], &p, &cfg).unwrap();
+                    assert_eq!(got.lx, single.lx, "lane {l} of k={k} diverged");
+                    assert_eq!(got.d, single.d, "lane {l} of k={k} diverged");
+                    assert_eq!(got.fill(), single.fill());
+                    assert_eq!(got.flops, single.flops);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_zero_pivot_errors_match_single_requests_per_lane() {
+        // two value sets on one pattern: the bad one carries an explicit
+        // zero at (1,1), which survives to elimination (no updates reach
+        // a chain start). The failing chunk must replay lane-by-lane:
+        // good lanes succeed bit-identically, bad lanes report exactly
+        // their single-request error.
+        let build = |d1: f64| {
+            let mut coo = CooMatrix::new(3, 3);
+            coo.push(0, 0, 2.0);
+            coo.push(1, 1, d1);
+            coo.push(2, 2, 2.0);
+            coo.to_csr()
+        };
+        let ok = build(2.0);
+        let bad = build(0.0);
+        let p = plan(&ok, &serial_cfg());
+        let cfg = serial_cfg();
+        let (bx_ok, bx_bad) = (gather(&ok, &p), gather(&bad, &p));
+        let refs: Vec<&[f64]> = vec![&bx_ok, &bx_bad, &bx_ok, &bx_bad];
+        let results = factorize_supernodal_gathered_batch(&refs, &p, &cfg);
+        let single_ok = factorize_supernodal_gathered(&bx_ok, &p, &cfg).unwrap();
+        let single_bad = factorize_supernodal_gathered(&bx_bad, &p, &cfg).unwrap_err();
+        assert_eq!(single_bad, FactorError::ZeroPivot(1));
+        for (l, r) in results.into_iter().enumerate() {
+            if l % 2 == 0 {
+                let f = r.unwrap();
+                assert_eq!(f.lx, single_ok.lx);
+                assert_eq!(f.d, single_ok.d);
+            } else {
+                assert_eq!(r.unwrap_err(), single_bad, "lane {l} error diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_warm_traversals_are_allocation_free_for_fronts() {
+        // the first batched pass grows the arena to K-wide sizing; warm
+        // batches of the same width must never touch the allocator for
+        // fronts (the serving steady state)
+        let a = symmetrize_spd_like(&crate::collection::generators::grid2d(18, 12), 2.0);
+        let p = plan(&a, &serial_cfg());
+        let bx = gather(&a, &p);
+        let lanes: Vec<Vec<f64>> = (0..4)
+            .map(|l| bx.iter().map(|v| v * (1.0 + 0.25 * l as f64)).collect())
+            .collect();
+        let refs: Vec<&[f64]> = lanes.iter().map(|v| v.as_slice()).collect();
+        let cfg = serial_cfg();
+        let first = factorize_supernodal_gathered_batch(&refs, &p, &cfg);
+        let warm = arena::thread_grow_events();
+        let second = factorize_supernodal_gathered_batch(&refs, &p, &cfg);
+        assert_eq!(
+            arena::thread_grow_events(),
+            warm,
+            "warm batched factorization allocated front memory"
+        );
+        for (f1, f2) in first.iter().zip(&second) {
+            let (f1, f2) = (f1.as_ref().unwrap(), f2.as_ref().unwrap());
+            assert_eq!(f1.lx, f2.lx);
+            assert_eq!(f1.d, f2.d);
+        }
     }
 
     #[test]

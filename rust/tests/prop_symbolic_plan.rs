@@ -18,13 +18,19 @@
 //!   (wide flat trees), and random adversarial patterns;
 //! * a warm `factorize_with_plan` performs **zero heap allocations for
 //!   fronts**, asserted through the solver arena's thread-local growth
-//!   counter.
+//!   counter;
+//! * the **batched multi-RHS** traversal (`factorize_with_plan_batch` /
+//!   `factorize_refreshed_batch`): for each of the 7 paper algorithms,
+//!   every lane of a k=4 batch is bit-identical to its single-request
+//!   factorization — values, pattern, fill, flops, and zero-pivot error
+//!   selection alike — under both the serial and DAG schedules.
 
 use std::sync::Arc;
 
 use smr::reorder::ReorderAlgorithm;
 use smr::solver::{
-    analyze_with, factorize_with, factorize_with_plan, plan_solve, solve_ordered, solve_with_plan,
+    analyze_with, factorize_refreshed, factorize_refreshed_batch, factorize_with,
+    factorize_with_plan, factorize_with_plan_batch, plan_solve, solve_ordered, solve_with_plan,
     FactorConfig, FactorMode, LdlFactor, NumericWorkspace, PlanCache, PlanKey, SolverConfig,
 };
 use smr::sparse::{CooMatrix, CsrMatrix};
@@ -205,6 +211,108 @@ fn dag_pipelined_schedule_is_bit_identical_across_adversarial_trees() {
             // and both equal the from-scratch reference
             let reference = scratch_factor(raw, alg, seed, &serial_cfg);
             assert_factors_identical(&reference, &fd, &format!("{tag} / {alg} vs scratch"));
+        }
+    }
+}
+
+#[test]
+fn batched_lanes_are_bit_identical_across_algorithms_and_schedules() {
+    // the multi-RHS tentpole's acceptance property: for every paper
+    // algorithm, each lane of a k=4 batched factorization equals its
+    // single-request `factorize_with_plan` result bit-for-bit — under
+    // both the sequential supernodal walk and the DAG-pipelined
+    // schedule (the batch's one traversal must not perturb any lane)
+    let mut rng = Rng::new(0xBA7C4);
+    let raw = adversarial_matrix(&mut rng);
+    let seed = rng.next_u64();
+    let variants: Vec<CsrMatrix> = (0..4)
+        .map(|l| {
+            let mut m = raw.clone();
+            for v in m.data.iter_mut() {
+                *v *= 1.0 + 0.25 * l as f64;
+            }
+            m
+        })
+        .collect();
+    let serial_cfg = all_mode_configs()[1];
+    let dag_cfg = all_mode_configs()[2];
+    for alg in ReorderAlgorithm::PAPER_SET {
+        for cfg in [&serial_cfg, &dag_cfg] {
+            let ctx = format!("{alg} / {:?} (n={})", cfg.factor.mode, raw.nrows);
+            let spd = smr::solver::prepare(&raw, cfg);
+            let perm = Arc::new(alg.compute(&spd, seed));
+            let plan = plan_solve(&raw, perm, cfg);
+            let mats: Vec<&CsrMatrix> = variants.iter().collect();
+            let mut wss: Vec<NumericWorkspace> =
+                (0..4).map(|_| NumericWorkspace::new()).collect();
+            let batch = factorize_with_plan_batch(&mats, &plan, &mut wss);
+            assert_eq!(batch.len(), 4, "{ctx}: one result per lane");
+            for (l, (m, r)) in variants.iter().zip(&batch).enumerate() {
+                let f = r.as_ref().expect("scaled SPD lanes factorize");
+                let mut ws = NumericWorkspace::new();
+                let single = factorize_with_plan(m, &plan, &mut ws).unwrap();
+                assert_factors_identical(&single, f, &format!("{ctx} lane {l}"));
+                assert_eq!(single.flops, f.flops, "{ctx} lane {l}: flops diverged");
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_zero_pivot_selection_matches_single_requests_per_lane() {
+    // `prepare` forces a dominant diagonal, so a vanishing pivot can
+    // only be planted below the refresh: rebuild the plan's refreshed
+    // value layout externally (gather the permuted prepared matrix
+    // through `b_from`) and numerically annihilate one postordered
+    // row/column per bad lane — pattern intact, so elimination meets an
+    // exact 0.0 pivot wherever the assembly tree puts that vertex. Each
+    // lane of the batch must then report exactly what its single-request
+    // `factorize_refreshed` reports: the good lanes full factors, the
+    // bad lanes each their own lane-local `ZeroPivot` column.
+    let raw = path_matrix(90);
+    let serial_cfg = all_mode_configs()[1];
+    let dag_cfg = all_mode_configs()[2];
+    for cfg in [&serial_cfg, &dag_cfg] {
+        let ctx = format!("{:?}", cfg.factor.mode);
+        let spd = smr::solver::prepare(&raw, cfg);
+        let perm = Arc::new(ReorderAlgorithm::Amd.compute(&spd, 7));
+        let plan = plan_solve(&raw, perm, cfg);
+        let sn = plan.supernodal().expect("supernodal modes carry a plan");
+        let pa = plan.perm.apply(&spd);
+        let base: Vec<f64> = sn.b_from.iter().map(|&s| pa.data[s]).collect();
+        let kill = |v: usize| {
+            let mut vals = base.clone();
+            for k in 0..raw.nrows {
+                for t in sn.b_indptr[k]..sn.b_indptr[k + 1] {
+                    if k == v || sn.b_indices[t] == v {
+                        vals[t] = 0.0;
+                    }
+                }
+            }
+            vals
+        };
+        let scaled: Vec<f64> = base.iter().map(|v| v * 2.0).collect();
+        let lanes = [base.clone(), kill(30), scaled, kill(60)];
+        let valss: Vec<&[f64]> = lanes.iter().map(|v| v.as_slice()).collect();
+        let batch = factorize_refreshed_batch(&plan, &valss);
+        assert_eq!(batch.len(), 4, "{ctx}: one outcome per lane");
+        for (l, r) in batch.iter().enumerate() {
+            match (r, factorize_refreshed(&plan, &lanes[l])) {
+                (Ok(fb), Ok(fs)) => {
+                    assert_factors_identical(&fs, fb, &format!("{ctx} lane {l}"))
+                }
+                (Err(eb), Err(es)) => {
+                    assert_eq!(*eb, es, "{ctx} lane {l}: error selection diverged")
+                }
+                _ => panic!("{ctx} lane {l}: batched/single outcome class diverged"),
+            }
+        }
+        assert!(batch[0].is_ok() && batch[2].is_ok(), "{ctx}: good lanes factor");
+        match (&batch[1], &batch[3]) {
+            (Err(e1), Err(e3)) => {
+                assert_ne!(e1, e3, "{ctx}: bad lanes must report their own columns")
+            }
+            _ => panic!("{ctx}: annihilated lanes must fail"),
         }
     }
 }
