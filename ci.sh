@@ -23,6 +23,16 @@ cargo test -q
 cargo test -q --test prop_ordering_cache
 cargo test -q --test prop_symbolic_plan
 cargo test -q --test integration_serving
+cargo test -q --test prop_router
+
+# Traffic-tier invariants that live in unit tests: cold-miss stampedes
+# coalesce onto one leader (in-flight dedup), the admission window
+# never sleeps on singleton traffic, and the latency histograms keep
+# exact power-of-two bucket edges and monotone quantiles.
+cargo test -q --lib util::cache
+cargo test -q --lib util::hist
+cargo test -q --lib coordinator::serving::tests::cold_stampede
+cargo test -q --lib coordinator::serving::tests::singleton_warm
 
 # The parallel_dag stress tests (counters drain, no task before its
 # children, panic safety returns pooled arenas) back the supernodal
@@ -32,11 +42,13 @@ cargo test -q --lib util::pool::tests::dag
 
 # Bench-artifact schema gates: any bench JSON that has been produced
 # must parse and carry its schema (cold/warm + cache + arena counters +
-# batched burst records/coalescing counters for serving;
-# peak_front_bytes/allocs + replay/batched_warm/core_scaling lanes for
-# the solver), validated via util/json.rs by examples/check_bench.rs.
+# batched burst records/coalescing counters + dedup counters + latency
+# quantiles for serving; peak_front_bytes/allocs +
+# replay/batched_warm/core_scaling lanes for the solver; throughput +
+# tail latency + dedup + per-replica occupancy for the router),
+# validated via util/json.rs by examples/check_bench.rs.
 bench_artifacts=()
-for f in BENCH_serving.json BENCH_solver.json; do
+for f in BENCH_serving.json BENCH_solver.json BENCH_router.json; do
   [[ -f "$f" ]] && bench_artifacts+=("$f")
 done
 if [[ ${#bench_artifacts[@]} -gt 0 ]]; then

@@ -8,7 +8,11 @@
 //! the `warm_alloc_free` arena flag, top-level cache hit/miss/evict
 //! plus front-arena counters, and the batched warm path (a non-empty
 //! `batched` burst array plus the engine's `batches` coalescing
-//! counters). For `bench_solver` artifacts every record must carry the
+//! counters, the plan/ordering caches' in-flight dedup counters, and
+//! the per-stage `latency` quantiles). For `bench_router` artifacts
+//! every lane must report throughput, p50/p99/p999 tail latency, fleet
+//! dedup counters, and a per-replica occupancy array, with both
+//! closed- and open-loop lanes present. For `bench_solver` artifacts every record must carry the
 //! `peak_front_bytes` / `allocs` columns, the replay lanes
 //! (`planned_numeric`, `arena_numeric`, `pipelined`) and the
 //! `batched_warm` lane (with its `batch_k` / `per_request_s` /
@@ -110,10 +114,13 @@ fn check_file(path: &str) -> Vec<String> {
             }
             None => errs.push(format!("{path}: missing `fronts` object")),
         }
-        // symbolic-plan cache counters (the warm path's cache layer)
+        // symbolic-plan cache counters (the warm path's cache layer),
+        // including the in-flight dedup pair (leaders / coalesced)
         match v.get("plans") {
             Some(plans) => {
-                for key in ["hits", "misses", "evictions", "inserts", "hit_rate"] {
+                for key in [
+                    "hits", "misses", "evictions", "inserts", "hit_rate", "leaders", "coalesced",
+                ] {
                     check_num(plans, key, &mut errs, &format!("{path}: plans"));
                 }
             }
@@ -121,11 +128,22 @@ fn check_file(path: &str) -> Vec<String> {
         }
         match v.get("cache") {
             Some(cache) => {
-                for key in ["hits", "misses", "evictions", "inserts", "hit_rate"] {
+                for key in [
+                    "hits", "misses", "evictions", "inserts", "hit_rate", "leaders", "coalesced",
+                ] {
                     check_num(cache, key, &mut errs, &format!("{path}: cache"));
                 }
             }
             None => errs.push(format!("{path}: missing `cache` object")),
+        }
+        // per-stage latency histograms folded into the stat block
+        match v.get("latency") {
+            Some(lat) => {
+                for key in ["count", "p50_s", "p99_s", "p999_s"] {
+                    check_num(lat, key, &mut errs, &format!("{path}: latency"));
+                }
+            }
+            None => errs.push(format!("{path}: missing `latency` object")),
         }
         match v.get("workspaces") {
             Some(ws) => {
@@ -159,6 +177,55 @@ fn check_file(path: &str) -> Vec<String> {
             None => errs.push(format!("{path}: missing `batches` object")),
         }
         check_num(&v, "requests", &mut errs, path);
+    }
+
+    // router-specific schema: every lane carries throughput + tail
+    // latency + the fleet dedup counters, plus a non-empty per-replica
+    // array with admission-gate occupancy high-water marks; both loop
+    // modes must be present
+    if v.get("bench").and_then(|b| b.as_str()) == Some("bench_router") {
+        let mut modes: Vec<&str> = Vec::new();
+        for (i, rec) in results.iter().enumerate() {
+            let ctx = format!("{path}: results[{i}]");
+            for key in [
+                "replicas",
+                "requests",
+                "ok",
+                "rejected",
+                "throughput_per_s",
+                "p50_s",
+                "p99_s",
+                "p999_s",
+                "plan_hit_rate",
+                "leaders",
+                "coalesced",
+            ] {
+                check_num(rec, key, &mut errs, &ctx);
+            }
+            match rec.get("mode").and_then(|m| m.as_str()) {
+                Some(mode) => modes.push(mode),
+                None => errs.push(format!("{ctx}: missing string `mode`")),
+            }
+            match rec.get("per_replica").and_then(|r| r.as_arr()) {
+                Some(reps) if !reps.is_empty() => {
+                    for (j, rep) in reps.iter().enumerate() {
+                        let rctx = format!("{ctx}: per_replica[{j}]");
+                        for key in ["replica", "requests", "occupancy_hwm"] {
+                            check_num(rep, key, &mut errs, &rctx);
+                        }
+                    }
+                }
+                _ => errs.push(format!("{ctx}: missing non-empty `per_replica` array")),
+            }
+        }
+        for mode in ["closed", "open"] {
+            if !modes.contains(&mode) {
+                errs.push(format!("{path}: missing `{mode}`-loop lanes in results"));
+            }
+        }
+        for key in ["patterns", "zipf_s", "trace_len", "workers"] {
+            check_num(&v, key, &mut errs, path);
+        }
     }
     errs
 }

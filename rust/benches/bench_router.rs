@@ -1,0 +1,280 @@
+//! Traffic-replay benchmark for the shard-routed serving tier: Zipf
+//! arrivals over a deterministic pattern population, replayed against
+//! 1/2/4-replica [`ShardRouter`] fleets in closed- and open-loop modes.
+//!
+//! Run with `cargo bench --bench bench_router`. Writes
+//! `BENCH_router.json` (override with `BENCH_OUT`): one record per
+//! `(mode, replica count)` lane with throughput, fleet plan hit rate,
+//! in-flight dedup counters (leaders vs coalesced — symbolic work saved
+//! on cold stampedes), p50/p99/p999 end-to-end latency from the lane's
+//! own log-bucketed histogram, and per-replica request counts plus
+//! admission-gate occupancy high-water marks. `ci.sh` schema-gates the
+//! artifact via `examples/check_bench` whenever it is present.
+//!
+//! * **Closed loop**: W worker threads pull the next trace entry as soon
+//!   as their previous request completes — measures capacity (offered
+//!   load adapts to service rate).
+//! * **Open loop**: arrivals are scheduled at a fixed rate (70% of the
+//!   measured closed-loop capacity) regardless of completions, and each
+//!   request's latency is charged from its *scheduled* arrival — the
+//!   coordinated-omission-free view of tail latency.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use smr::collection::generate_mini_collection;
+use smr::collection::generators::pattern_population;
+use smr::coordinator::service::Backend;
+use smr::coordinator::{OverloadPolicy, RouterConfig, ShardRouter};
+use smr::dataset::{build_dataset, SweepConfig};
+use smr::ml::forest::{ForestParams, RandomForest};
+use smr::ml::normalize::{Method, Normalizer};
+use smr::ml::Classifier;
+use smr::reorder::ReorderAlgorithm;
+use smr::sparse::CsrMatrix;
+use smr::util::bench::{section, JsonReport};
+use smr::util::hist::LatencyHist;
+use smr::util::json;
+use smr::util::rng::{Rng, Zipf};
+use smr::util::Timer;
+
+const PATTERNS: usize = 24;
+const ZIPF_S: f64 = 1.1;
+const TRACE_LEN: usize = 400;
+const WORKERS: usize = 4;
+
+fn trained_backend() -> Backend {
+    let train_coll = generate_mini_collection(5, 2);
+    let ds = build_dataset(
+        &train_coll,
+        &ReorderAlgorithm::LABEL_SET,
+        &SweepConfig::default(),
+    );
+    let normalizer = Normalizer::fit(Method::Standard, &ds.features());
+    let mut forest = RandomForest::new(
+        ForestParams {
+            n_estimators: 30,
+            ..Default::default()
+        },
+        5,
+    );
+    forest.fit(&normalizer.transform(&ds.features()), &ds.labels(), 4);
+    Backend::Forest { normalizer, forest }
+}
+
+/// One lane's outcome, ready to serialize.
+struct LaneResult {
+    requests: u64,
+    ok: u64,
+    rejected: u64,
+    elapsed_s: f64,
+    latency: smr::util::hist::HistSnapshot,
+}
+
+/// Closed loop: workers race down the shared trace index, each charging
+/// latency from its own dispatch instant.
+fn run_closed(router: &ShardRouter, trace: &[usize], pop: &[CsrMatrix]) -> LaneResult {
+    let next = AtomicUsize::new(0);
+    let hist = LatencyHist::new();
+    let ok = AtomicUsize::new(0);
+    let rejected = AtomicUsize::new(0);
+    let t = Timer::start();
+    std::thread::scope(|scope| {
+        for _ in 0..WORKERS {
+            let (next, hist, ok, rejected) = (&next, &hist, &ok, &rejected);
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= trace.len() {
+                    break;
+                }
+                let t_req = Timer::start();
+                match router.serve(&pop[trace[i]]) {
+                    Ok(_) => {
+                        hist.record_s(t_req.elapsed_s());
+                        ok.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(_) => {
+                        rejected.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+    LaneResult {
+        requests: trace.len() as u64,
+        ok: ok.load(Ordering::Relaxed) as u64,
+        rejected: rejected.load(Ordering::Relaxed) as u64,
+        elapsed_s: t.elapsed_s(),
+        latency: hist.snapshot(),
+    }
+}
+
+/// Open loop: request `i` is *due* at `start + i/rate`; workers sleep
+/// until the due time and charge latency from it, so queueing delay
+/// behind a slow request is visible in the tail (no coordinated
+/// omission).
+fn run_open(router: &ShardRouter, trace: &[usize], pop: &[CsrMatrix], rate: f64) -> LaneResult {
+    let next = AtomicUsize::new(0);
+    let hist = LatencyHist::new();
+    let ok = AtomicUsize::new(0);
+    let rejected = AtomicUsize::new(0);
+    let start = Instant::now();
+    let interval_s = 1.0 / rate.max(1.0);
+    std::thread::scope(|scope| {
+        for _ in 0..WORKERS {
+            let (next, hist, ok, rejected) = (&next, &hist, &ok, &rejected);
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= trace.len() {
+                    break;
+                }
+                let due = Duration::from_secs_f64(i as f64 * interval_s);
+                let now = start.elapsed();
+                if due > now {
+                    std::thread::sleep(due - now);
+                }
+                match router.serve(&pop[trace[i]]) {
+                    Ok(_) => {
+                        hist.record_s((start.elapsed() - due).as_secs_f64());
+                        ok.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(_) => {
+                        rejected.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+    LaneResult {
+        requests: trace.len() as u64,
+        ok: ok.load(Ordering::Relaxed) as u64,
+        rejected: rejected.load(Ordering::Relaxed) as u64,
+        elapsed_s: start.elapsed().as_secs_f64(),
+        latency: hist.snapshot(),
+    }
+}
+
+fn lane_record(
+    name: &str,
+    mode: &str,
+    replicas: usize,
+    lane: &LaneResult,
+    router: &ShardRouter,
+) -> smr::util::json::Json {
+    let s = router.stats();
+    let per_replica: Vec<_> = s
+        .replicas
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            json::obj(vec![
+                ("replica", json::num(i as f64)),
+                ("requests", json::num(r.requests as f64)),
+                ("spill_in", json::num(r.spill_in as f64)),
+                ("occupancy_hwm", json::num(r.gate.high_water as f64)),
+            ])
+        })
+        .collect();
+    println!(
+        "    {name}: {:.1} req/s | p50 {:.3} ms p99 {:.3} ms p999 {:.3} ms | \
+         hit rate {:.1}% | leaders {} coalesced {} | rejected {}",
+        lane.ok as f64 / lane.elapsed_s.max(1e-12),
+        lane.latency.p50() * 1e3,
+        lane.latency.p99() * 1e3,
+        lane.latency.p999() * 1e3,
+        100.0 * s.plan_hit_rate(),
+        s.plan_leaders(),
+        s.plan_coalesced(),
+        lane.rejected,
+    );
+    json::obj(vec![
+        ("name", json::s(name)),
+        ("mode", json::s(mode)),
+        ("replicas", json::num(replicas as f64)),
+        ("requests", json::num(lane.requests as f64)),
+        ("ok", json::num(lane.ok as f64)),
+        ("rejected", json::num(lane.rejected as f64)),
+        ("elapsed_s", json::num(lane.elapsed_s)),
+        (
+            "throughput_per_s",
+            json::num(lane.ok as f64 / lane.elapsed_s.max(1e-12)),
+        ),
+        ("p50_s", json::num(lane.latency.p50())),
+        ("p99_s", json::num(lane.latency.p99())),
+        ("p999_s", json::num(lane.latency.p999())),
+        ("mean_s", json::num(lane.latency.mean_s())),
+        ("plan_hit_rate", json::num(s.plan_hit_rate())),
+        ("leaders", json::num(s.plan_leaders() as f64)),
+        ("coalesced", json::num(s.plan_coalesced() as f64)),
+        ("spilled", json::num(s.spilled as f64)),
+        ("per_replica", json::arr(per_replica)),
+    ])
+}
+
+fn main() {
+    section("setup: sweep + train forest backend");
+    let backend = trained_backend();
+
+    section(&format!(
+        "setup: {PATTERNS}-pattern population, Zipf(s={ZIPF_S}) trace of {TRACE_LEN}"
+    ));
+    let pop = pattern_population(PATTERNS, 0xD1CE);
+    let zipf = Zipf::new(PATTERNS, ZIPF_S);
+    let mut rng = Rng::new(0x7AFF);
+    let trace: Vec<usize> = (0..TRACE_LEN).map(|_| zipf.sample(&mut rng)).collect();
+
+    let mut report = JsonReport::new();
+    report.set("bench", json::s("bench_router"));
+    report.set("patterns", json::num(PATTERNS as f64));
+    report.set("zipf_s", json::num(ZIPF_S));
+    report.set("trace_len", json::num(TRACE_LEN as f64));
+    report.set("workers", json::num(WORKERS as f64));
+
+    for replicas in [1usize, 2, 4] {
+        section(&format!("replay: {replicas} replica(s)"));
+        let router = ShardRouter::spawn(
+            RouterConfig {
+                replicas,
+                queue_depth: 16,
+                policy: OverloadPolicy::Block,
+                ..Default::default()
+            },
+            |_| backend.clone(),
+        )
+        .expect("router spawns");
+
+        // closed loop first: cold caches, measures capacity
+        let closed = run_closed(&router, &trace, &pop);
+        report.push(lane_record(
+            &format!("closed_r{replicas}"),
+            "closed",
+            replicas,
+            &closed,
+            &router,
+        ));
+
+        // open loop on the now-warm fleet at 70% of measured capacity
+        let capacity = closed.ok as f64 / closed.elapsed_s.max(1e-12);
+        let rate = (0.7 * capacity).max(1.0);
+        let open = run_open(&router, &trace, &pop, rate);
+        let mut rec = lane_record(
+            &format!("open_r{replicas}"),
+            "open",
+            replicas,
+            &open,
+            &router,
+        );
+        if let smr::util::json::Json::Obj(ref mut map) = rec {
+            map.insert("offered_rate_per_s".to_string(), json::num(rate));
+        }
+        report.push(rec);
+
+        router.shutdown();
+    }
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_router.json".into());
+    match report.write(&out) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\nfailed to write {out}: {e}"),
+    }
+}

@@ -230,6 +230,8 @@ fn main() {
             ("evictions", json::num(stats.plans.evictions as f64)),
             ("entries", json::num(stats.plans.entries as f64)),
             ("hit_rate", json::num(stats.plans.hit_rate())),
+            ("leaders", json::num(stats.plans.leaders as f64)),
+            ("coalesced", json::num(stats.plans.coalesced as f64)),
         ]),
     );
     report.set(
@@ -241,6 +243,27 @@ fn main() {
             ("evictions", json::num(stats.cache.evictions as f64)),
             ("entries", json::num(stats.cache.entries as f64)),
             ("hit_rate", json::num(stats.cache.hit_rate())),
+            ("leaders", json::num(stats.cache.leaders as f64)),
+            ("coalesced", json::num(stats.cache.coalesced as f64)),
+        ]),
+    );
+    println!(
+        "latency (e2e): p50 {:.3} ms  p99 {:.3} ms  p999 {:.3} ms over {} requests",
+        stats.latency.e2e.p50() * 1e3,
+        stats.latency.e2e.p99() * 1e3,
+        stats.latency.e2e.p999() * 1e3,
+        stats.latency.e2e.count,
+    );
+    report.set(
+        "latency",
+        json::obj(vec![
+            ("count", json::num(stats.latency.e2e.count as f64)),
+            ("p50_s", json::num(stats.latency.e2e.p50())),
+            ("p99_s", json::num(stats.latency.e2e.p99())),
+            ("p999_s", json::num(stats.latency.e2e.p999())),
+            ("predict_p99_s", json::num(stats.latency.predict.p99())),
+            ("plan_p99_s", json::num(stats.latency.plan.p99())),
+            ("numeric_p99_s", json::num(stats.latency.numeric.p99())),
         ]),
     );
     report.set(

@@ -258,9 +258,50 @@ pub fn stretched_grid(nx: usize, ny: usize, skip: usize, rng: &mut Rng) -> CsrMa
     coo.to_csr()
 }
 
+/// Deterministic population of `count` structurally-distinct patterns —
+/// the key universe for serving-tier traffic replay
+/// (`benches/bench_router.rs` samples ranks of this population through a
+/// [`crate::util::rng::Zipf`] law). Cycles the generator families above
+/// with index-dependent sizes, so every entry carries a distinct
+/// [`crate::sparse::PatternKey`] (asserted by a test below) and the
+/// whole population is a pure function of `seed`.
+pub fn pattern_population(count: usize, seed: u64) -> Vec<CsrMatrix> {
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|i| {
+            let step = i / 6; // grows sizes each time a family recurs
+            match i % 6 {
+                0 => grid2d(8 + step, 7 + step),
+                1 => banded(60 + 10 * step, 3 + step % 4, &mut rng),
+                2 => scrambled_banded(50 + 10 * step, 4, &mut rng),
+                3 => block_chain(4 + step, 8, 2, &mut rng),
+                4 => circuit(70 + 10 * step, 2, &mut rng),
+                _ => random_sym(40 + 10 * step, 4.0, &mut rng),
+            }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn pattern_population_keys_are_distinct_and_deterministic() {
+        use crate::sparse::PatternKey;
+        let pop = pattern_population(24, 42);
+        assert_eq!(pop.len(), 24);
+        let keys: Vec<PatternKey> = pop.iter().map(PatternKey::of).collect();
+        let mut uniq = keys.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), keys.len(), "population must have distinct patterns");
+        let again: Vec<PatternKey> = pattern_population(24, 42)
+            .iter()
+            .map(PatternKey::of)
+            .collect();
+        assert_eq!(keys, again, "population must be a pure function of its seed");
+    }
 
     #[test]
     fn grid2d_shape_and_symmetry() {

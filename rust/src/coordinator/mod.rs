@@ -10,6 +10,10 @@
 //! * [`serving`] — the full serving engine around that front: matrix →
 //!   features → batched predict → reorder → solve, with a pattern-keyed
 //!   ordering cache and a pooled-workspace miss path.
+//! * [`router`] — the traffic tier above N serving engines: rendezvous
+//!   shard routing (a pattern's plans live on exactly one replica),
+//!   bounded per-replica admission with reject/spill/block overload
+//!   policies, and fleet-wide stat folding.
 //! * [`trainer`] — end-to-end training orchestration: dataset → grid
 //!   search over the classical models (and the AOT MLP variants) →
 //!   fitted predictor.
@@ -43,11 +47,15 @@
 //!   requests touch the allocator only for the factor output itself.
 
 pub mod pipeline;
+pub mod router;
 pub mod service;
 pub mod serving;
 pub mod trainer;
 
 pub use pipeline::{PipelineReport, SelectionPipeline};
+pub use router::{
+    OverloadPolicy, RouterConfig, RouterError, RouterReport, RouterStats, ShardRouter,
+};
 pub use service::{BatcherConfig, PredictionService, ServiceStats, ServiceStatsSnapshot};
 pub use serving::{
     BatchConfig, BatchStats, ServingConfig, ServingEngine, ServingReport, ServingStats,

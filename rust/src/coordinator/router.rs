@@ -1,0 +1,437 @@
+//! Traffic tier above [`ServingEngine`]: shard-routed multi-replica
+//! serving with bounded admission and overload policies.
+//!
+//! One engine owns one pair of caches (orderings + symbolic plans). Run
+//! N engines behind a naive load balancer and every replica re-derives
+//! every hot pattern's plan — N cold misses per pattern, N copies of
+//! each O(nnz(L)) plan resident, and a fleet-wide hit rate that *drops*
+//! as the fleet grows. [`ShardRouter`] fixes the economics by making
+//! placement a pure function of the request's structure:
+//!
+//! * **Shard routing.** A request's [`PatternKey`] picks its replica by
+//!   rendezvous (highest-random-weight) hashing —
+//!   [`route`] = argmax over replicas of
+//!   [`PatternKey::shard_weight`]. The same pattern always lands on the
+//!   same replica (its *home*), so each plan is computed once and
+//!   resides exactly once; growing the fleet from N to N+1 replicas
+//!   only moves the keys whose new weight wins — every moved key moves
+//!   *to* the new replica, nothing reshuffles between old ones
+//!   (property-tested in `tests/prop_router.rs`).
+//! * **Bounded admission.** Each replica fronts its engine with an
+//!   [`AdmissionGate`] of `queue_depth` seats, held for the request's
+//!   full service time. The gate is the backpressure boundary; what
+//!   happens when it is full is the [`OverloadPolicy`]: fail fast
+//!   (`Reject`), run on the next-preferred replica at the cost of a
+//!   duplicate cold path there (`Spill`), or park the caller until a
+//!   seat frees (`Block`).
+//! * **Observability.** The router stamps every response with where it
+//!   ran and why ([`RouterReport`]), tracks queue-wait in a log-bucketed
+//!   histogram, and [`RouterStats`] folds per-replica engine stats into
+//!   fleet-wide aggregates (dedup counters, merged end-to-end latency)
+//!   that `benches/bench_router.rs` replays Zipf traffic against.
+//!
+//! The request lifecycle is: `serve(a)` → fingerprint → home replica →
+//! gate (policy) → `ServingEngine::serve` (prediction batching, plan
+//! cache with in-flight dedup, coalesced numeric path) → release seat.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::Result;
+
+use super::service::Backend;
+use super::serving::{ServingConfig, ServingEngine, ServingReport, ServingStats};
+use crate::sparse::{CsrMatrix, PatternKey};
+use crate::util::hist::{HistSnapshot, LatencyHist};
+use crate::util::pool::{AdmissionGate, GateStats};
+use crate::util::Timer;
+
+/// What a full replica does with the next request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OverloadPolicy {
+    /// Fail fast: the caller gets [`RouterError::Overloaded`] and
+    /// retries (or sheds) at its own layer. Lowest tail latency under
+    /// overload; requires a retrying client.
+    Reject,
+    /// Try the remaining replicas in this key's preference order. Keeps
+    /// the request in-process at the cost of cold-path duplication on
+    /// the spill target (its caches don't hold this pattern's plans).
+    Spill,
+    /// Park the caller until the home replica frees a seat. Simplest
+    /// for closed-loop clients; under overload latency grows without
+    /// bound while throughput stays pinned at capacity.
+    Block,
+}
+
+/// Knobs for [`ShardRouter::spawn`].
+#[derive(Clone, Copy, Debug)]
+pub struct RouterConfig {
+    /// Replica engines to stand up (≥ 1; clamped).
+    pub replicas: usize,
+    /// Admission seats per replica — the in-service concurrency bound.
+    pub queue_depth: usize,
+    /// What a full gate does with the next request.
+    pub policy: OverloadPolicy,
+    /// Per-replica engine configuration (each replica gets its own
+    /// caches, pools, and prediction service from this).
+    pub serving: ServingConfig,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            replicas: 2,
+            queue_depth: 16,
+            policy: OverloadPolicy::Block,
+            serving: ServingConfig::default(),
+        }
+    }
+}
+
+/// Routing failure modes. `Overloaded` is the backpressure signal
+/// (admission denied under `Reject`/`Spill`); `Engine` wraps the
+/// understack's own errors.
+#[derive(Debug)]
+pub enum RouterError {
+    /// Admission denied: the named replica's gate (and, under `Spill`,
+    /// every other replica's too) was full.
+    Overloaded { replica: usize },
+    /// The serving engine itself failed.
+    Engine(anyhow::Error),
+}
+
+impl std::fmt::Display for RouterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouterError::Overloaded { replica } => {
+                write!(f, "admission denied: replica {replica} is at capacity")
+            }
+            RouterError::Engine(e) => write!(f, "serving engine failed: {e:#}"),
+        }
+    }
+}
+
+impl std::error::Error for RouterError {}
+
+/// Rendezvous choice: the replica whose [`PatternKey::shard_weight`] is
+/// largest for this key. Pure function of `(key, replicas)` — exposed
+/// standalone so placement can be property-tested (and precomputed by
+/// clients) without standing engines up.
+pub fn route(key: &PatternKey, replicas: usize) -> usize {
+    assert!(replicas > 0, "route over an empty fleet");
+    (0..replicas)
+        .max_by_key(|&r| key.shard_weight(r as u64))
+        .expect("replicas > 0")
+}
+
+/// Full preference order of replicas for `key` (descending weight):
+/// `preference(..)[0] == route(..)`, and `Spill` walks the rest in
+/// order, so a given pattern always spills to the same fallback — its
+/// duplicated plans concentrate on one secondary replica instead of
+/// smearing across the fleet.
+pub fn preference(key: &PatternKey, replicas: usize) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..replicas).collect();
+    order.sort_by_key(|&r| std::cmp::Reverse(key.shard_weight(r as u64)));
+    order
+}
+
+/// One replica: an engine plus its admission gate and placement
+/// counters.
+struct Replica {
+    engine: ServingEngine,
+    gate: AdmissionGate,
+    /// Requests this replica served (home + spill-in).
+    requests: AtomicU64,
+    /// Requests served here that belonged to another replica.
+    spill_in: AtomicU64,
+}
+
+/// Where one request ran and what it cost on the way in.
+#[derive(Clone, Debug)]
+pub struct RouterReport {
+    /// Replica that served the request.
+    pub replica: usize,
+    /// Replica the key hashes to. `replica != home` ⟺ `spilled`.
+    pub home: usize,
+    /// Whether the home gate was full and the request ran elsewhere.
+    pub spilled: bool,
+    /// Time spent between arrival and admission (≈ 0 except under
+    /// `Block` on a saturated replica).
+    pub queue_wait_s: f64,
+    /// The engine's own per-stage report.
+    pub report: ServingReport,
+}
+
+/// Per-replica slice of [`RouterStats`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReplicaStats {
+    /// Requests this replica served.
+    pub requests: u64,
+    /// Of those, how many spilled in from an overloaded home.
+    pub spill_in: u64,
+    /// Admission-gate counters (occupancy high-water is the
+    /// capacity-planning signal).
+    pub gate: GateStats,
+    /// The replica engine's full stat block.
+    pub serving: ServingStats,
+}
+
+/// Fleet-wide counter snapshot of a [`ShardRouter`].
+#[derive(Clone, Debug, Default)]
+pub struct RouterStats {
+    /// Requests that entered `serve` (admitted or not).
+    pub requests: u64,
+    /// Requests denied admission everywhere policy allowed.
+    pub rejected: u64,
+    /// Requests served off their home replica.
+    pub spilled: u64,
+    /// Arrival → admission wait distribution.
+    pub queue_wait: HistSnapshot,
+    /// One slice per replica, in replica order.
+    pub replicas: Vec<ReplicaStats>,
+}
+
+impl RouterStats {
+    /// Requests actually served, fleet-wide.
+    pub fn served(&self) -> u64 {
+        self.replicas.iter().map(|r| r.serving.requests).sum()
+    }
+
+    /// Plan-cache hits across the fleet.
+    pub fn plan_hits(&self) -> u64 {
+        self.replicas.iter().map(|r| r.serving.plans.hits).sum()
+    }
+
+    /// Plan-cache misses across the fleet. With shard routing and no
+    /// spills this equals the number of *distinct patterns* (each plan
+    /// is computed on exactly one replica, once).
+    pub fn plan_misses(&self) -> u64 {
+        self.replicas.iter().map(|r| r.serving.plans.misses).sum()
+    }
+
+    /// Fleet plan hit rate over all plan lookups.
+    pub fn plan_hit_rate(&self) -> f64 {
+        let lookups = self.plan_hits() + self.plan_misses();
+        if lookups == 0 {
+            0.0
+        } else {
+            self.plan_hits() as f64 / lookups as f64
+        }
+    }
+
+    /// Cold-path computations that actually ran (in-flight dedup
+    /// leaders) — the denominator of the stampede-savings story.
+    pub fn plan_leaders(&self) -> u64 {
+        self.replicas.iter().map(|r| r.serving.plans.leaders).sum()
+    }
+
+    /// Misses that adopted a concurrent leader's computation instead of
+    /// running their own — symbolic work the dedup layer saved.
+    pub fn plan_coalesced(&self) -> u64 {
+        self.replicas.iter().map(|r| r.serving.plans.coalesced).sum()
+    }
+
+    /// End-to-end latency distribution merged across replicas.
+    pub fn e2e_latency(&self) -> HistSnapshot {
+        self.replicas
+            .iter()
+            .fold(HistSnapshot::default(), |acc, r| {
+                acc.merge(&r.serving.latency.e2e)
+            })
+    }
+}
+
+/// The traffic tier: N replica [`ServingEngine`]s behind rendezvous
+/// routing and bounded admission. See the module docs for the design;
+/// `ARCHITECTURE.md` has the lifecycle diagram.
+pub struct ShardRouter {
+    replicas: Vec<Replica>,
+    policy: OverloadPolicy,
+    requests: AtomicU64,
+    rejected: AtomicU64,
+    spilled: AtomicU64,
+    queue_wait: LatencyHist,
+}
+
+impl ShardRouter {
+    /// Stand the fleet up. `make_backend(i)` supplies replica `i`'s
+    /// model backend — typically one trained [`Backend`] cloned N times
+    /// (it derives `Clone` for exactly this), but per-replica backends
+    /// (e.g. canarying a retrained model on one shard) drop out for
+    /// free.
+    pub fn spawn(
+        cfg: RouterConfig,
+        mut make_backend: impl FnMut(usize) -> Backend,
+    ) -> Result<ShardRouter> {
+        let n = cfg.replicas.max(1);
+        let mut replicas = Vec::with_capacity(n);
+        for i in 0..n {
+            replicas.push(Replica {
+                engine: ServingEngine::spawn(make_backend(i), cfg.serving)?,
+                gate: AdmissionGate::new(cfg.queue_depth),
+                requests: AtomicU64::new(0),
+                spill_in: AtomicU64::new(0),
+            });
+        }
+        Ok(ShardRouter {
+            replicas,
+            policy: cfg.policy,
+            requests: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            spilled: AtomicU64::new(0),
+            queue_wait: LatencyHist::new(),
+        })
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn policy(&self) -> OverloadPolicy {
+        self.policy
+    }
+
+    /// This fleet's home replica for a key.
+    pub fn home_of(&self, key: &PatternKey) -> usize {
+        route(key, self.replicas.len())
+    }
+
+    /// Serve one request: fingerprint → home → admission (per policy)
+    /// → engine. The gate seat is held for the whole service time, so
+    /// `queue_depth` bounds each replica's in-service concurrency, not
+    /// just a queue length.
+    pub fn serve(&self, a: &CsrMatrix) -> Result<RouterReport, RouterError> {
+        let key = PatternKey::of(a);
+        let home = self.home_of(&key);
+        self.requests.fetch_add(1, Ordering::Relaxed);
+
+        let t_q = Timer::start();
+        let (idx, pass) = match self.policy {
+            OverloadPolicy::Block => (home, self.replicas[home].gate.enter()),
+            OverloadPolicy::Reject => match self.replicas[home].gate.try_enter() {
+                Some(p) => (home, p),
+                None => {
+                    self.rejected.fetch_add(1, Ordering::Relaxed);
+                    return Err(RouterError::Overloaded { replica: home });
+                }
+            },
+            OverloadPolicy::Spill => {
+                let mut admitted = None;
+                for r in preference(&key, self.replicas.len()) {
+                    if let Some(p) = self.replicas[r].gate.try_enter() {
+                        admitted = Some((r, p));
+                        break;
+                    }
+                }
+                match admitted {
+                    Some(pair) => pair,
+                    None => {
+                        self.rejected.fetch_add(1, Ordering::Relaxed);
+                        return Err(RouterError::Overloaded { replica: home });
+                    }
+                }
+            }
+        };
+        let queue_wait_s = t_q.elapsed_s();
+        self.queue_wait.record_s(queue_wait_s);
+
+        let spilled = idx != home;
+        let replica = &self.replicas[idx];
+        replica.requests.fetch_add(1, Ordering::Relaxed);
+        if spilled {
+            self.spilled.fetch_add(1, Ordering::Relaxed);
+            replica.spill_in.fetch_add(1, Ordering::Relaxed);
+        }
+        let report = replica.engine.serve(a).map_err(RouterError::Engine)?;
+        drop(pass); // seat released only after the engine finished
+        Ok(RouterReport {
+            replica: idx,
+            home,
+            spilled,
+            queue_wait_s,
+            report,
+        })
+    }
+
+    pub fn stats(&self) -> RouterStats {
+        RouterStats {
+            requests: self.requests.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            spilled: self.spilled.load(Ordering::Relaxed),
+            queue_wait: self.queue_wait.snapshot(),
+            replicas: self
+                .replicas
+                .iter()
+                .map(|r| ReplicaStats {
+                    requests: r.requests.load(Ordering::Relaxed),
+                    spill_in: r.spill_in.load(Ordering::Relaxed),
+                    gate: r.gate.stats(),
+                    serving: r.engine.stats(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Shut every replica's prediction runtime down and join them.
+    pub fn shutdown(self) {
+        for r in self.replicas {
+            r.engine.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(hash: u64) -> PatternKey {
+        PatternKey {
+            n: 100,
+            nnz: 500,
+            hash,
+        }
+    }
+
+    #[test]
+    fn route_is_stable_and_in_bounds() {
+        for h in 0..200u64 {
+            let k = key(h.wrapping_mul(0x9E3779B97F4A7C15));
+            for n in 1..6 {
+                let r = route(&k, n);
+                assert!(r < n);
+                assert_eq!(r, route(&k, n), "same key, same fleet, same replica");
+            }
+        }
+    }
+
+    #[test]
+    fn preference_leads_with_route_and_permutes_all_replicas() {
+        for h in 0..50u64 {
+            let k = key(h ^ 0xABCD_EF01);
+            let pref = preference(&k, 5);
+            assert_eq!(pref[0], route(&k, 5));
+            let mut sorted = pref.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 2, 3, 4]);
+        }
+    }
+
+    #[test]
+    fn growing_the_fleet_only_moves_keys_to_the_new_replica() {
+        for n in 1..6usize {
+            let mut moved = 0;
+            for h in 0..400u64 {
+                let k = key(h.wrapping_mul(0xD1B54A32D192ED03));
+                let before = route(&k, n);
+                let after = route(&k, n + 1);
+                if after != before {
+                    assert_eq!(after, n, "a moved key must land on the new replica");
+                    moved += 1;
+                }
+            }
+            // expected churn is ~ 1/(n+1) of keys; it must be neither
+            // zero (new replica unused) nor total (full reshuffle)
+            assert!(moved > 0, "fleet {n}->{} moved no keys", n + 1);
+            assert!(moved < 400, "fleet {n}->{} reshuffled everything", n + 1);
+        }
+    }
+}

@@ -89,6 +89,9 @@ pub struct ServiceStatsSnapshot {
 }
 
 /// Model backend the runtime thread instantiates *on its own thread*.
+/// `Clone` so a router can stamp one trained backend out across N
+/// replica engines (`coordinator::router`).
+#[derive(Clone)]
 pub enum Backend {
     /// AOT MLP: artifacts directory + trained model.
     Mlp { artifacts_dir: std::path::PathBuf, model: MlpModel },

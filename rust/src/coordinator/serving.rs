@@ -86,7 +86,7 @@ use anyhow::Result;
 
 use super::service::{Backend, BatcherConfig, PredictionService, ServiceStatsSnapshot};
 use crate::features;
-use crate::reorder::cache::{CacheConfig, CacheStats, OrderingCache};
+use crate::reorder::cache::{CacheConfig, CacheStats, Fetch, OrderingCache};
 use crate::reorder::{MatrixAnalysis, Permutation, ReorderAlgorithm, WorkspacePool};
 use crate::solver::plan_cache::{PlanCache, PlanKey};
 use crate::solver::{
@@ -94,6 +94,7 @@ use crate::solver::{
     NumericWorkspace, SolveReport, SolverConfig, SymbolicFactorization,
 };
 use crate::sparse::CsrMatrix;
+use crate::util::hist::{HistSnapshot, LatencyHist};
 use crate::util::pool::{ObjectPool, PoolStats};
 use crate::util::Timer;
 
@@ -169,6 +170,11 @@ pub struct ServingReport {
     /// Whether the solve plan came from the plan cache — the warm-path
     /// flag: a hit means this request did no symbolic work at all.
     pub plan_hit: bool,
+    /// Cold-path stampede dedup: this request missed, but adopted a
+    /// concurrent leader's in-flight plan computation instead of
+    /// running its own (`plan_hit` is false; the symbolic work still
+    /// happened exactly once, on the leader).
+    pub plan_coalesced: bool,
     /// How many same-plan requests shared this request's numeric
     /// traversal (1 = served alone; ≥ 2 = coalesced, and
     /// `solve.factor_s` is the traversal's wall time over `batch_k`).
@@ -213,6 +219,10 @@ pub struct BatchStats {
     /// Groups sealed by window expiry rather than by filling
     /// `max_batch` (includes groups of 1: a leader nobody joined).
     pub window_timeouts: u64,
+    /// Lonely-leader early exits: the leader observed no other request
+    /// in flight at admission and sealed immediately instead of
+    /// sleeping out the window (counted inside `window_timeouts` too).
+    pub lonely_bails: u64,
     /// Group-size histogram: slot `i` counts groups of size `i+1`;
     /// the last slot counts every group of size ≥ 8.
     pub size_hist: [u64; 8],
@@ -240,6 +250,59 @@ pub struct ServingStats {
     pub fronts: crate::solver::arena::ArenaStats,
     /// Prediction-service counters (requests/batches/mean batch).
     pub service: ServiceStatsSnapshot,
+    /// Per-stage latency distributions (p50/p99/p999 via
+    /// [`HistSnapshot::quantile`]) over every request served so far.
+    pub latency: StageLatencies,
+}
+
+/// Per-stage latency snapshots: one log-bucketed histogram per request
+/// stage, recorded on every `serve`/`serve_batch` report. Mergeable
+/// across engines (element-wise), so a router can fold replica
+/// snapshots into fleet-wide tails.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageLatencies {
+    /// Feature extraction (degree-only pass).
+    pub feature: HistSnapshot,
+    /// Batched classifier round trip.
+    pub predict: HistSnapshot,
+    /// Ordering + symbolic planning (≈0 on plan hits; dominated by the
+    /// leader's analysis on cold misses, by the park time on coalesced
+    /// ones).
+    pub plan: HistSnapshot,
+    /// Numeric factor + triangular solves.
+    pub numeric: HistSnapshot,
+    /// Full request latency (`ServingReport::end_to_end_s`).
+    pub e2e: HistSnapshot,
+}
+
+/// Recording side of [`StageLatencies`] (lock-free, engine-internal).
+#[derive(Default)]
+struct StageHists {
+    feature: LatencyHist,
+    predict: LatencyHist,
+    plan: LatencyHist,
+    numeric: LatencyHist,
+    e2e: LatencyHist,
+}
+
+impl StageHists {
+    fn observe(&self, r: &ServingReport) {
+        self.feature.record_s(r.feature_s);
+        self.predict.record_s(r.predict_s);
+        self.plan.record_s(r.reorder_s);
+        self.numeric.record_s(r.numeric_s());
+        self.e2e.record_s(r.end_to_end_s());
+    }
+
+    fn snapshot(&self) -> StageLatencies {
+        StageLatencies {
+            feature: self.feature.snapshot(),
+            predict: self.predict.snapshot(),
+            plan: self.plan.snapshot(),
+            numeric: self.numeric.snapshot(),
+            e2e: self.e2e.snapshot(),
+        }
+    }
 }
 
 /// The deployable serving object: spawn once, [`ServingEngine::serve`]
@@ -303,10 +366,36 @@ pub struct ServingEngine {
     batch_slots: Mutex<HashMap<PlanKey, Arc<BatchSlot>>>,
     reorder_seed: u64,
     requests: AtomicU64,
+    /// Requests currently inside `serve`/`serve_batch` (any stage).
+    /// The admission window's lonely-leader bail reads this: when the
+    /// leader is the only request in flight, no joiner can arrive and
+    /// the window would be a pure sleep.
+    in_flight: AtomicU64,
     batches: AtomicU64,
     coalesced: AtomicU64,
     window_timeouts: AtomicU64,
+    lonely_bails: AtomicU64,
     size_hist: [AtomicU64; 8],
+    hists: StageHists,
+}
+
+/// RAII decrement for [`ServingEngine::in_flight`] (panic-safe).
+struct InFlight<'a> {
+    counter: &'a AtomicU64,
+    n: u64,
+}
+
+impl<'a> InFlight<'a> {
+    fn enter(counter: &'a AtomicU64, n: u64) -> InFlight<'a> {
+        counter.fetch_add(n, Ordering::Relaxed);
+        InFlight { counter, n }
+    }
+}
+
+impl Drop for InFlight<'_> {
+    fn drop(&mut self) {
+        self.counter.fetch_sub(self.n, Ordering::Relaxed);
+    }
 }
 
 /// One coalescing group: members hand their refreshed value buffers to
@@ -351,6 +440,7 @@ struct Routed {
     predict_s: f64,
     reorder_s: f64,
     plan_hit: bool,
+    plan_coalesced: bool,
     plan: Arc<SymbolicFactorization>,
     key: PlanKey,
 }
@@ -377,10 +467,13 @@ impl ServingEngine {
             batch_slots: Mutex::new(HashMap::new()),
             reorder_seed: cfg.reorder_seed,
             requests: AtomicU64::new(0),
+            in_flight: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             coalesced: AtomicU64::new(0),
             window_timeouts: AtomicU64::new(0),
+            lonely_bails: AtomicU64::new(0),
             size_hist: std::array::from_fn(|_| AtomicU64::new(0)),
+            hists: StageHists::default(),
         }
     }
 
@@ -412,7 +505,7 @@ impl ServingEngine {
 
         let t_r = Timer::start();
         let key = PlanKey::of(a, algorithm, self.reorder_seed, &self.solver);
-        let (plan, plan_hit) = self.plans.get_or_compute(key, || {
+        let (plan, fetch) = self.plans.get_or_compute(key, || {
             // cold path: one symmetrization feeds the analysis, the
             // ordering, and the symbolic plan
             let spd = prepare(a, &self.solver);
@@ -428,7 +521,8 @@ impl ServingEngine {
             feature_s,
             predict_s,
             reorder_s,
-            plan_hit,
+            plan_hit: fetch.is_hit(),
+            plan_coalesced: fetch == Fetch::Coalesced,
             plan,
             key,
         })
@@ -442,6 +536,7 @@ impl ServingEngine {
             predict_s: r.predict_s,
             reorder_s: r.reorder_s,
             plan_hit: r.plan_hit,
+            plan_coalesced: r.plan_coalesced,
             batch_k,
             permutation: r.plan.perm.clone(),
             solve,
@@ -456,6 +551,7 @@ impl ServingEngine {
     /// to being served alone (see the module docs).
     pub fn serve(&self, a: &CsrMatrix) -> Result<ServingReport> {
         self.requests.fetch_add(1, Ordering::Relaxed);
+        let _presence = InFlight::enter(&self.in_flight, 1);
         let r = self.route(a)?;
         let coalesce = self.batch.max_batch >= 2 && r.plan_hit && !r.plan.capped;
         let (solve, batch_k) = if coalesce {
@@ -469,7 +565,9 @@ impl ServingEngine {
                 .map_err(anyhow::Error::msg)?;
             (solve, 1)
         };
-        Ok(Self::report(r, solve, batch_k))
+        let report = Self::report(r, solve, batch_k);
+        self.hists.observe(&report);
+        Ok(report)
     }
 
     /// Serve a burst of requests the caller already holds, coalescing
@@ -479,6 +577,7 @@ impl ServingEngine {
     /// in [`BatchStats`] (never as window timeouts).
     pub fn serve_batch(&self, mats: &[&CsrMatrix]) -> Result<Vec<ServingReport>> {
         self.requests.fetch_add(mats.len() as u64, Ordering::Relaxed);
+        let _presence = InFlight::enter(&self.in_flight, mats.len() as u64);
         let routed: Vec<Routed> = mats.iter().map(|a| self.route(a)).collect::<Result<_>>()?;
 
         // group by plan key, preserving first-appearance order
@@ -529,7 +628,9 @@ impl ServingEngine {
             .zip(solves)
             .map(|(r, s)| {
                 let (solve, batch_k) = s.expect("every group member was solved");
-                Self::report(r, solve, batch_k)
+                let report = Self::report(r, solve, batch_k);
+                self.hists.observe(&report);
+                report
             })
             .collect())
     }
@@ -604,9 +705,22 @@ impl ServingEngine {
         plan: &SymbolicFactorization,
     ) -> Result<(SolveReport, usize), FactorError> {
         let deadline = Instant::now() + self.batch.window;
+        // poll slice: long enough to keep wakeups rare against the
+        // default 200 µs window, short enough that a leader notices the
+        // engine going quiet instead of sleeping out a long window
+        let poll = (self.batch.window / 8).max(Duration::from_micros(50));
         let mut st = slot.state.lock().expect("batch slot poisoned");
         let mut timed_out = false;
         while !st.closed {
+            // lonely-leader bail: this leader is the only request in
+            // flight anywhere in the engine, so no joiner can arrive —
+            // sealing now saves the whole window on singleton traffic
+            if self.in_flight.load(Ordering::Relaxed) <= 1 {
+                st.closed = true;
+                timed_out = true;
+                self.lonely_bails.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
             let now = Instant::now();
             if now >= deadline {
                 st.closed = true;
@@ -615,7 +729,7 @@ impl ServingEngine {
             }
             let (guard, _) = slot
                 .cv
-                .wait_timeout(st, deadline - now)
+                .wait_timeout(st, (deadline - now).min(poll))
                 .expect("batch slot poisoned");
             st = guard;
         }
@@ -661,6 +775,7 @@ impl ServingEngine {
                 batches: self.batches.load(Ordering::Relaxed),
                 coalesced: self.coalesced.load(Ordering::Relaxed),
                 window_timeouts: self.window_timeouts.load(Ordering::Relaxed),
+                lonely_bails: self.lonely_bails.load(Ordering::Relaxed),
                 size_hist: std::array::from_fn(|i| self.size_hist[i].load(Ordering::Relaxed)),
             },
             plans: self.plans.stats(),
@@ -669,6 +784,7 @@ impl ServingEngine {
             numeric: self.numeric.stats(),
             fronts: crate::solver::arena::stats(),
             service: self.service.stats.snapshot(),
+            latency: self.hists.snapshot(),
         }
     }
 
@@ -864,9 +980,19 @@ mod tests {
         for v in b.data.iter_mut() {
             *v *= 1.75;
         }
+        // the barrier makes both requests enter the engine together, so
+        // the leader always sees its peer in flight (the lonely-leader
+        // bail must never fire here) and the pair coalesces
+        let barrier = std::sync::Barrier::new(2);
         let (ra, rb) = std::thread::scope(|s| {
-            let ta = s.spawn(|| engine.serve(&a).unwrap());
-            let tb = s.spawn(|| engine.serve(&b).unwrap());
+            let ta = s.spawn(|| {
+                barrier.wait();
+                engine.serve(&a).unwrap()
+            });
+            let tb = s.spawn(|| {
+                barrier.wait();
+                engine.serve(&b).unwrap()
+            });
             (ta.join().unwrap(), tb.join().unwrap())
         });
         assert!(ra.plan_hit && rb.plan_hit);
@@ -906,6 +1032,101 @@ mod tests {
         assert_eq!(s.batches.window_timeouts, 1);
         assert_eq!(s.batches.size_hist[0], 1, "the k=1 group is recorded");
         assert_eq!(s.batches.batches, 0, "a group of one is not a batch");
+        engine.shutdown();
+    }
+
+    #[test]
+    fn singleton_warm_traffic_never_sleeps_the_window() {
+        // regression: the lonely-leader window used to sleep its full
+        // duration on every singleton warm request. With the in-flight
+        // bail, a multi-second window must cost microseconds when the
+        // leader is alone in the engine.
+        let cfg = ServingConfig {
+            batch: BatchConfig {
+                max_batch: 8,
+                window: Duration::from_secs(5),
+            },
+            ..ServingConfig::default()
+        };
+        let engine = ServingEngine::spawn(forest_backend(), cfg).unwrap();
+        let a = mesh(9, 7);
+        engine.serve(&a).unwrap(); // cold: plans + caches
+        let t = Timer::start();
+        let warm = engine.serve(&a).unwrap();
+        let elapsed = t.elapsed_s();
+        assert!(warm.plan_hit);
+        assert_eq!(warm.batch_k, 1);
+        assert!(
+            elapsed < 2.5,
+            "singleton warm request slept the admission window ({elapsed:.3}s)"
+        );
+        let s = engine.stats();
+        assert!(s.batches.lonely_bails >= 1, "the bail path must have fired");
+        assert_eq!(s.batches.window_timeouts, 1);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn per_stage_latency_histograms_track_requests() {
+        let engine = ServingEngine::spawn(forest_backend(), ServingConfig::default()).unwrap();
+        let a = mesh(8, 7);
+        for _ in 0..5 {
+            engine.serve(&a).unwrap();
+        }
+        let s = engine.stats();
+        for (name, h) in [
+            ("feature", &s.latency.feature),
+            ("predict", &s.latency.predict),
+            ("plan", &s.latency.plan),
+            ("numeric", &s.latency.numeric),
+            ("e2e", &s.latency.e2e),
+        ] {
+            assert_eq!(h.count, 5, "{name}: every request must be observed");
+            assert!(h.p50() <= h.p99() && h.p99() <= h.p999(), "{name}");
+        }
+        // the end-to-end tail bounds every stage's tail from above
+        assert!(s.latency.e2e.p999() >= s.latency.numeric.p999());
+        assert!(s.latency.e2e.mean_s() > 0.0);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn cold_stampede_coalesces_to_one_symbolic_computation() {
+        // N concurrent requests for one never-seen pattern: the plan
+        // cache's in-flight dedup must run reorder+plan exactly once,
+        // with every caller adopting the same Arc'd plan
+        const THREADS: usize = 6;
+        let engine = ServingEngine::spawn(forest_backend(), ServingConfig::default()).unwrap();
+        let a = mesh(12, 9);
+        let barrier = std::sync::Barrier::new(THREADS);
+        let reports: Vec<ServingReport> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..THREADS)
+                .map(|_| {
+                    let (engine, a, barrier) = (&engine, &a, &barrier);
+                    s.spawn(move || {
+                        barrier.wait();
+                        engine.serve(a).unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+
+        for r in &reports {
+            assert!(Arc::ptr_eq(&r.permutation, &reports[0].permutation));
+            assert_eq!(r.solve.fill, reports[0].solve.fill);
+        }
+        let s = engine.stats();
+        assert_eq!(
+            s.plans.leaders, 1,
+            "stampede must run exactly one symbolic computation"
+        );
+        assert_eq!(s.plans.inserts, 1);
+        assert_eq!(s.plans.entries, 1);
+        // the ordering cache only ever saw the leader's compute
+        assert_eq!(s.cache.lookups(), 1);
+        let coalesced_reports = reports.iter().filter(|r| r.plan_coalesced).count();
+        assert_eq!(coalesced_reports as u64, s.plans.coalesced);
         engine.shutdown();
     }
 }

@@ -33,6 +33,7 @@ impl Default for ForestParams {
     }
 }
 
+#[derive(Clone)]
 pub struct RandomForest {
     pub params: ForestParams,
     trees: Vec<DecisionTree>,

@@ -71,6 +71,7 @@ impl Default for TreeParams {
     }
 }
 
+#[derive(Clone)]
 enum Node {
     Leaf {
         class: usize,
@@ -84,6 +85,7 @@ enum Node {
 }
 
 /// A fitted decision tree.
+#[derive(Clone)]
 pub struct DecisionTree {
     pub params: TreeParams,
     root: Option<Node>,

@@ -34,7 +34,7 @@ use super::{Permutation, ReorderAlgorithm};
 use crate::sparse::PatternKey;
 use crate::util::cache::ShardedCache;
 
-pub use crate::util::cache::{CacheConfig, CacheStats};
+pub use crate::util::cache::{CacheConfig, CacheStats, Fetch};
 
 /// Cache identity of one ordering: the structural fingerprint, which
 /// algorithm ran, and the seed its randomness derived from.
@@ -110,16 +110,16 @@ impl OrderingCache {
     }
 
     /// The serving primitive: one counted lookup; on miss, compute
-    /// *outside* the shard lock and insert. Returns the permutation and
-    /// whether this call was a hit. Two threads missing the same key
-    /// concurrently both compute (deterministically identical values);
-    /// the first insert wins and the loser adopts the resident `Arc`, so
-    /// every caller still observes one canonical permutation.
+    /// *outside* the shard lock and insert — with in-flight dedup:
+    /// concurrent misses for the same key elect one leader, every other
+    /// caller parks and adopts the leader's `Arc` ([`Fetch::Coalesced`]),
+    /// so a cold-path stampede costs one reordering, not k. Every caller
+    /// observes one canonical permutation either way.
     pub fn get_or_compute(
         &self,
         key: OrderingKey,
         compute: impl FnOnce() -> Permutation,
-    ) -> (Arc<Permutation>, bool) {
+    ) -> (Arc<Permutation>, Fetch) {
         self.inner.get_or_compute(key, compute)
     }
 
@@ -136,7 +136,7 @@ impl OrderingCache {
         algorithm: ReorderAlgorithm,
         seed: u64,
         pool: &WorkspacePool,
-    ) -> (Arc<Permutation>, bool) {
+    ) -> (Arc<Permutation>, Fetch) {
         let key = OrderingKey::for_analysis(analysis, algorithm, seed);
         self.get_or_compute(key, || {
             let mut ws = pool.checkout();
@@ -169,10 +169,10 @@ mod tests {
     fn miss_then_hit_round_trip() {
         let cache = OrderingCache::with_default_config();
         let k = key(0xABCD, 5, ReorderAlgorithm::Amd, 7);
-        let (p1, hit1) = cache.get_or_compute(k, || Permutation::identity(5));
-        assert!(!hit1);
-        let (p2, hit2) = cache.get_or_compute(k, || panic!("must not recompute"));
-        assert!(hit2);
+        let (p1, f1) = cache.get_or_compute(k, || Permutation::identity(5));
+        assert_eq!(f1, Fetch::Led);
+        let (p2, f2) = cache.get_or_compute(k, || panic!("must not recompute"));
+        assert!(f2.is_hit());
         assert!(Arc::ptr_eq(&p1, &p2));
         let s = cache.stats();
         assert_eq!((s.hits, s.misses, s.inserts), (1, 1, 1));
@@ -186,9 +186,9 @@ mod tests {
         let mut n_entries = 0;
         for alg in [ReorderAlgorithm::Amd, ReorderAlgorithm::Rcm] {
             for seed in [1u64, 2] {
-                let (_, hit) =
+                let (_, fetch) =
                     cache.get_or_compute(key(9, 4, alg, seed), || Permutation::identity(4));
-                assert!(!hit);
+                assert!(!fetch.is_hit());
                 n_entries += 1;
             }
         }

@@ -224,7 +224,9 @@ impl ReorderEngine {
             None => (Arc::new(reorderer(alg).order(ma.graph(), ws, seed)), false),
             Some(cache) => {
                 let key = OrderingKey::for_analysis(ma, alg, seed);
-                cache.get_or_compute(key, || reorderer(alg).order(ma.graph(), ws, seed))
+                let (perm, fetch) =
+                    cache.get_or_compute(key, || reorderer(alg).order(ma.graph(), ws, seed));
+                (perm, fetch.is_hit())
             }
         }
     }

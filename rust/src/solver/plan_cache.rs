@@ -27,7 +27,7 @@ use crate::reorder::ReorderAlgorithm;
 use crate::sparse::{CsrMatrix, PatternKey};
 use crate::util::cache::ShardedCache;
 
-pub use crate::util::cache::{CacheConfig, CacheStats};
+pub use crate::util::cache::{CacheConfig, CacheStats, Fetch};
 
 /// Cache identity of one solve plan. Build through [`PlanKey::of`] so
 /// the keying policy (raw-pattern fingerprint + config fingerprint)
@@ -115,14 +115,17 @@ impl PlanCache {
         self.inner.insert(key, plan)
     }
 
-    /// One counted lookup; on miss, plan *outside* the shard lock and
-    /// insert. Racing misses both compute identical plans (purity) and
-    /// converge on the first-inserted `Arc`.
+    /// One counted lookup; on miss, plan *outside* every lock and
+    /// insert — with in-flight dedup: concurrent misses for one key
+    /// elect a single leader that runs the (expensive) symbolic
+    /// analysis while every other caller parks on the slot and adopts
+    /// the leader's `Arc` ([`Fetch::Coalesced`]). A cold-path stampede
+    /// on one pattern therefore costs exactly one reorder+plan.
     pub fn get_or_compute(
         &self,
         key: PlanKey,
         compute: impl FnOnce() -> SymbolicFactorization,
-    ) -> (Arc<SymbolicFactorization>, bool) {
+    ) -> (Arc<SymbolicFactorization>, Fetch) {
         self.inner.get_or_compute(key, compute)
     }
 
@@ -164,10 +167,10 @@ mod tests {
         let cache = PlanCache::with_default_config();
         let key = PlanKey::of(&a, ReorderAlgorithm::Natural, 0, &cfg);
         let n = a.nrows;
-        let (plan, hit) = cache.get_or_compute(key, || {
+        let (plan, fetch) = cache.get_or_compute(key, || {
             plan_solve(&a, std::sync::Arc::new(Permutation::identity(n)), &cfg)
         });
-        assert!(!hit);
+        assert_eq!(fetch, Fetch::Led);
 
         // same pattern, different values: key matches, plan is reused
         let mut other = a.clone();
@@ -176,8 +179,8 @@ mod tests {
         }
         let key2 = PlanKey::of(&other, ReorderAlgorithm::Natural, 0, &cfg);
         assert_eq!(key, key2);
-        let (plan2, hit2) = cache.get_or_compute(key2, || unreachable!("must hit"));
-        assert!(hit2);
+        let (plan2, f2) = cache.get_or_compute(key2, || unreachable!("must hit"));
+        assert!(f2.is_hit());
         assert!(Arc::ptr_eq(&plan, &plan2));
         let mut ws = NumericWorkspace::new();
         let f = factorize_with_plan(&other, &plan2, &mut ws).unwrap();

@@ -56,6 +56,23 @@ impl PatternKey {
             hash: h,
         }
     }
+
+    /// Rendezvous (highest-random-weight) score of this pattern for one
+    /// shard: `coordinator::router::ShardRouter` routes a key to the
+    /// replica maximizing this weight. A splitmix64-style finalizer over
+    /// `(hash, n, nnz, shard)` makes the weights independent across
+    /// shards, which gives HRW its two properties the router tests pin
+    /// down: the same key always lands on the same replica, and growing
+    /// the fleet only ever moves keys *to* the new replica.
+    pub fn shard_weight(&self, shard: u64) -> u64 {
+        let mut z = self.hash
+            ^ (self.n as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ (self.nnz as u64).rotate_left(32)
+            ^ shard.wrapping_mul(0xD1B5_4A32_D192_ED03);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
 }
 
 /// Pattern of `A + Aᵀ` without the diagonal, as CSR-like adjacency
@@ -255,6 +272,18 @@ mod tests {
         m.push(1, 2, 3.0);
         m.push(2, 2, 4.0);
         m.to_csr()
+    }
+
+    #[test]
+    fn shard_weight_is_deterministic_and_shard_sensitive() {
+        let key = PatternKey::of(&asym());
+        for shard in 0..8u64 {
+            assert_eq!(key.shard_weight(shard), key.shard_weight(shard));
+        }
+        // weights must differ across shards (else HRW degenerates to
+        // replica 0 for every key)
+        let w: Vec<u64> = (0..8u64).map(|s| key.shard_weight(s)).collect();
+        assert!(w.windows(2).any(|p| p[0] != p[1]));
     }
 
     #[test]

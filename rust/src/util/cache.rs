@@ -16,13 +16,22 @@
 //!   global monotone tick; a full shard drops its stalest entry. Shard
 //!   capacities are floored so `shards * per_shard <= capacity` — total
 //!   residency never exceeds the configured bound.
-//! * **Racing misses are benign.** [`ShardedCache::get_or_compute`] runs
-//!   the compute *outside* the shard lock; two threads missing the same
-//!   key both compute (identical values, by purity), the first insert
-//!   wins, and the loser adopts the resident [`Arc`] — every caller
-//!   observes one canonical value.
-//! * **Counters.** Lock-free hit/miss/insert/evict atomics snapshotted
-//!   by [`ShardedCache::stats`]; `hits + misses == lookups` always.
+//! * **In-flight miss dedup.** [`ShardedCache::get_or_compute`] runs
+//!   the compute *outside* the shard lock, and concurrent misses for
+//!   the same key coalesce onto **one** computation: the first caller
+//!   to register an in-flight slot becomes the *leader* and computes;
+//!   every concurrent caller becomes a *waiter*, parks on the slot's
+//!   condvar, and adopts the leader's [`Arc`] when it lands. For the
+//!   serving path this is the cold-path stampede guard — k concurrent
+//!   requests missing on one pattern cost one reorder+plan, not k
+//!   (the thundering herd that motivated PR 6's `BatchSlot`, applied
+//!   one layer down). A leader whose compute panics fails its slot so
+//!   waiters retry and elect a new leader — no caller deadlocks on a
+//!   dead leader.
+//! * **Counters.** Lock-free hit/miss/insert/evict atomics plus the
+//!   dedup pair (`leaders` — computations actually run, `coalesced` —
+//!   calls that adopted an in-flight result) snapshotted by
+//!   [`ShardedCache::stats`]; `hits + misses == lookups` always.
 //!
 //! Values are handed out as `Arc<V>` so a hit is one atomic increment
 //! regardless of how large the cached artifact is.
@@ -30,7 +39,7 @@
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Sizing knobs for a [`ShardedCache`].
 #[derive(Clone, Copy, Debug)]
@@ -50,6 +59,31 @@ impl Default for CacheConfig {
     }
 }
 
+/// How a [`ShardedCache::get_or_compute`] call obtained its value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fetch {
+    /// The value was resident at lookup time.
+    Hit,
+    /// This caller registered the in-flight slot and ran the compute.
+    Led,
+    /// This caller parked on a concurrent leader's in-flight slot and
+    /// adopted its result — a deduplicated miss.
+    Coalesced,
+}
+
+impl Fetch {
+    /// Was the value already resident (the classic cache-hit notion)?
+    pub fn is_hit(self) -> bool {
+        matches!(self, Fetch::Hit)
+    }
+
+    /// Did this caller avoid running the computation itself? True for
+    /// hits *and* coalesced misses — everything except leading.
+    pub fn reused(self) -> bool {
+        !matches!(self, Fetch::Led)
+    }
+}
+
 /// Counter snapshot (one consistent read of the atomics).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CacheStats {
@@ -57,6 +91,14 @@ pub struct CacheStats {
     pub misses: u64,
     pub inserts: u64,
     pub evictions: u64,
+    /// `get_or_compute` calls that ran the computation (leadership
+    /// terms). Dedup guarantee: concurrent misses on one key produce
+    /// exactly one leader.
+    pub leaders: u64,
+    /// `get_or_compute` calls that parked on an in-flight slot and
+    /// adopted the leader's result instead of recomputing — the dedup
+    /// savings counter.
+    pub coalesced: u64,
     /// Resident entries at snapshot time.
     pub entries: usize,
 }
@@ -82,18 +124,76 @@ struct Entry<V> {
     last_used: u64,
 }
 
+/// One in-flight computation: the leader publishes here, waiters park
+/// on the condvar. Analogous to `coordinator::serving::BatchSlot`, one
+/// layer down the stack.
+struct InflightSlot<V> {
+    state: Mutex<InflightState<V>>,
+    cv: Condvar,
+}
+
+struct InflightState<V> {
+    result: Option<Arc<V>>,
+    /// Leader's compute panicked: waiters must retry (and one of them
+    /// becomes the next leader) instead of parking forever.
+    failed: bool,
+}
+
+impl<V> InflightSlot<V> {
+    fn new() -> Self {
+        InflightSlot {
+            state: Mutex::new(InflightState {
+                result: None,
+                failed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+/// Panic guard held while the leader computes: if the compute unwinds,
+/// fail the slot (waking waiters into a retry) and unpublish the key so
+/// a new leader can register. Disarmed on the success path.
+struct LeadGuard<'a, K: Hash + Eq + Copy, V> {
+    cache: &'a ShardedCache<K, V>,
+    slot: &'a InflightSlot<V>,
+    key: K,
+    armed: bool,
+}
+
+impl<K: Hash + Eq + Copy, V> Drop for LeadGuard<'_, K, V> {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        if let Ok(mut st) = self.slot.state.lock() {
+            st.failed = true;
+        }
+        self.slot.cv.notify_all();
+        if let Ok(mut map) = self.cache.inflight.lock() {
+            map.remove(&self.key);
+        }
+    }
+}
+
 /// Bounded, sharded `K → Arc<V>` map with LRU-ish eviction and lock-free
 /// counters. See the module docs for the design; see
 /// `reorder::cache::OrderingCache` and `solver::plan_cache::PlanCache`
 /// for the two serving-path instantiations.
 pub struct ShardedCache<K, V> {
     shards: Vec<Mutex<HashMap<K, Entry<V>>>>,
+    /// Keys with a computation currently in flight (leader registered,
+    /// result not yet published). Held only for registration/removal —
+    /// never across a compute.
+    inflight: Mutex<HashMap<K, Arc<InflightSlot<V>>>>,
     per_shard: usize,
     tick: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
     inserts: AtomicU64,
     evictions: AtomicU64,
+    leaders: AtomicU64,
+    coalesced: AtomicU64,
 }
 
 impl<K: Hash + Eq + Copy, V> ShardedCache<K, V> {
@@ -105,12 +205,15 @@ impl<K: Hash + Eq + Copy, V> ShardedCache<K, V> {
         let per_shard = (capacity / shards).max(1);
         ShardedCache {
             shards: (0..shards).map(|_| Mutex::new(HashMap::new())).collect(),
+            inflight: Mutex::new(HashMap::new()),
             per_shard,
             tick: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             inserts: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            leaders: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
         }
     }
 
@@ -190,15 +293,86 @@ impl<K: Hash + Eq + Copy, V> ShardedCache<K, V> {
         value
     }
 
+    /// Uncounted, recency-neutral lookup. Used by a freshly-registered
+    /// leader to re-check residency: a prior leader may have completed
+    /// (insert + slot removal) between this caller's counted miss and
+    /// its registration, and that race must not recompute — or skew the
+    /// hit/miss counters with a second counted lookup per call.
+    fn peek(&self, key: &K) -> Option<Arc<V>> {
+        let shard = self.shard(key).lock().expect("cache shard poisoned");
+        shard.get(key).map(|e| e.value.clone())
+    }
+
     /// The serving primitive: one counted lookup; on miss, compute
-    /// *outside* the shard lock and insert. Returns the value and
-    /// whether this call was a hit.
-    pub fn get_or_compute(&self, key: K, compute: impl FnOnce() -> V) -> (Arc<V>, bool) {
-        if let Some(v) = self.get(&key) {
-            return (v, true);
+    /// *outside* every lock and insert — with **in-flight dedup**:
+    /// concurrent misses for the same key elect one leader, everyone
+    /// else parks on the slot and adopts the leader's `Arc`. Returns
+    /// the value and how it was obtained ([`Fetch`]).
+    pub fn get_or_compute(&self, key: K, compute: impl FnOnce() -> V) -> (Arc<V>, Fetch) {
+        let mut compute = Some(compute);
+        loop {
+            if let Some(v) = self.get(&key) {
+                return (v, Fetch::Hit);
+            }
+            // register as leader or join the in-flight slot as waiter
+            let (slot, lead) = {
+                let mut inflight = self.inflight.lock().expect("inflight map poisoned");
+                match inflight.get(&key) {
+                    Some(s) => (s.clone(), false),
+                    None => {
+                        let s = Arc::new(InflightSlot::new());
+                        inflight.insert(key, s.clone());
+                        (s, true)
+                    }
+                }
+            };
+            if lead {
+                let mut guard = LeadGuard {
+                    cache: self,
+                    slot: &slot,
+                    key,
+                    armed: true,
+                };
+                let (value, fetch) = match self.peek(&key) {
+                    // a prior leader finished between our miss and our
+                    // registration — adopt, don't recompute; `leaders`
+                    // stays an exact count of computations run
+                    Some(v) => (v, Fetch::Hit),
+                    None => {
+                        self.leaders.fetch_add(1, Ordering::Relaxed);
+                        let v = self.insert(
+                            key,
+                            Arc::new((compute.take().expect("a caller leads at most once"))()),
+                        );
+                        (v, Fetch::Led)
+                    }
+                };
+                {
+                    let mut st = slot.state.lock().expect("inflight slot poisoned");
+                    st.result = Some(value.clone());
+                }
+                slot.cv.notify_all();
+                guard.armed = false;
+                self.inflight
+                    .lock()
+                    .expect("inflight map poisoned")
+                    .remove(&key);
+                return (value, fetch);
+            }
+            // waiter: park until the leader publishes or fails
+            self.coalesced.fetch_add(1, Ordering::Relaxed);
+            let st = slot.state.lock().expect("inflight slot poisoned");
+            let st = slot
+                .cv
+                .wait_while(st, |s| s.result.is_none() && !s.failed)
+                .expect("inflight slot poisoned");
+            if let Some(v) = &st.result {
+                return (v.clone(), Fetch::Coalesced);
+            }
+            // leader panicked: retry — we may hit (another leader won),
+            // coalesce again, or lead with our own still-unused compute
+            drop(st);
         }
-        let value = self.insert(key, Arc::new(compute()));
-        (value, false)
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -207,6 +381,8 @@ impl<K: Hash + Eq + Copy, V> ShardedCache<K, V> {
             misses: self.misses.load(Ordering::Relaxed),
             inserts: self.inserts.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
+            leaders: self.leaders.load(Ordering::Relaxed),
+            coalesced: self.coalesced.load(Ordering::Relaxed),
             entries: self.len(),
         }
     }
@@ -219,14 +395,111 @@ mod tests {
     #[test]
     fn miss_then_hit_round_trip() {
         let cache: ShardedCache<u64, String> = ShardedCache::new(CacheConfig::default());
-        let (v1, hit1) = cache.get_or_compute(7, || "seven".to_string());
-        assert!(!hit1);
-        let (v2, hit2) = cache.get_or_compute(7, || panic!("must not recompute"));
-        assert!(hit2);
+        let (v1, f1) = cache.get_or_compute(7, || "seven".to_string());
+        assert_eq!(f1, Fetch::Led);
+        assert!(!f1.is_hit() && !f1.reused());
+        let (v2, f2) = cache.get_or_compute(7, || panic!("must not recompute"));
+        assert_eq!(f2, Fetch::Hit);
+        assert!(f2.is_hit() && f2.reused());
         assert!(Arc::ptr_eq(&v1, &v2));
         let s = cache.stats();
         assert_eq!((s.hits, s.misses, s.inserts), (1, 1, 1));
+        assert_eq!((s.leaders, s.coalesced), (1, 0));
         assert_eq!(s.lookups(), 2);
+        assert_eq!(s.entries, 1);
+    }
+
+    #[test]
+    fn concurrent_misses_coalesce_onto_one_leader() {
+        use std::sync::atomic::AtomicUsize;
+        use std::sync::Barrier;
+
+        const THREADS: usize = 8;
+        let cache: ShardedCache<u64, u64> = ShardedCache::new(CacheConfig::default());
+        let computes = AtomicUsize::new(0);
+        let barrier = Barrier::new(THREADS);
+        let results: Vec<(Arc<u64>, Fetch)> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..THREADS)
+                .map(|_| {
+                    let (cache, computes, barrier) = (&cache, &computes, &barrier);
+                    s.spawn(move || {
+                        barrier.wait();
+                        cache.get_or_compute(42, || {
+                            computes.fetch_add(1, Ordering::SeqCst);
+                            // widen the stampede window so every peer
+                            // reaches the slot before the leader lands
+                            std::thread::sleep(std::time::Duration::from_millis(30));
+                            4242
+                        })
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+
+        assert_eq!(
+            computes.load(Ordering::SeqCst),
+            1,
+            "stampede must run the compute exactly once"
+        );
+        for (v, _) in &results {
+            assert!(Arc::ptr_eq(v, &results[0].0), "all callers share one Arc");
+            assert_eq!(**v, 4242);
+        }
+        let led = results.iter().filter(|(_, f)| *f == Fetch::Led).count();
+        assert_eq!(led, 1, "exactly one leadership term");
+        let s = cache.stats();
+        assert_eq!(s.leaders, 1, "dedup counter proves one computation");
+        // everyone else either parked on the slot or arrived late enough
+        // to hit; with the barrier, coalescing dominates
+        assert!(s.coalesced >= 1, "stampede produced no waiters");
+        assert!(s.coalesced <= (THREADS - 1) as u64);
+        assert_eq!(s.inserts, 1);
+        assert_eq!(s.lookups(), THREADS as u64);
+    }
+
+    #[test]
+    fn failed_leader_wakes_waiters_who_retry() {
+        use std::sync::atomic::AtomicUsize;
+        use std::sync::Barrier;
+
+        const THREADS: usize = 6;
+        let cache: ShardedCache<u64, u64> = ShardedCache::new(CacheConfig::default());
+        let attempts = AtomicUsize::new(0);
+        let barrier = Barrier::new(THREADS);
+        let outcomes: Vec<Result<u64, ()>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..THREADS)
+                .map(|_| {
+                    let (cache, attempts, barrier) = (&cache, &attempts, &barrier);
+                    s.spawn(move || {
+                        barrier.wait();
+                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            let (v, _) = cache.get_or_compute(5, || {
+                                // the FIRST leader dies mid-compute; the
+                                // retry leader succeeds
+                                if attempts.fetch_add(1, Ordering::SeqCst) == 0 {
+                                    std::thread::sleep(std::time::Duration::from_millis(10));
+                                    panic!("leader dies");
+                                }
+                                99
+                            });
+                            *v
+                        }))
+                        .map_err(|_| ())
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+
+        let ok: Vec<_> = outcomes.iter().filter_map(|r| r.as_ref().ok()).collect();
+        let panicked = outcomes.iter().filter(|r| r.is_err()).count();
+        assert_eq!(panicked, 1, "only the doomed first leader unwinds");
+        assert_eq!(ok.len(), THREADS - 1);
+        assert!(ok.iter().all(|&&v| v == 99), "survivors all see the retry value");
+        let s = cache.stats();
+        assert_eq!(s.leaders, 2, "two leadership terms: the panic and the retry");
+        assert_eq!(s.inserts, 1);
         assert_eq!(s.entries, 1);
     }
 

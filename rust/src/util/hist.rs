@@ -1,0 +1,403 @@
+//! Log-bucketed latency histograms for per-stage tail tracking.
+//!
+//! `LatencyHist` is the lock-free recording side: a fixed table of
+//! atomic counters that threads bump on every observation, sized so a
+//! `record_s` on the serving hot path costs one subtraction, one
+//! `leading_zeros`, and one relaxed `fetch_add`. `HistSnapshot` is the
+//! reading side: a plain-old-data copy (`Copy`, mergeable, comparable)
+//! that quantile queries run against, so stats readers never contend
+//! with recorders.
+//!
+//! # Bucketing
+//!
+//! Observations are nanoseconds (`u64`). The layout is HDR-style
+//! log-linear: each power-of-two octave `[2^o, 2^(o+1))` is split into
+//! 8 linear sub-buckets of width `2^(o-3)`, and values below 8 ns get
+//! identity buckets. Consequences the unit tests pin down exactly:
+//!
+//! * every power of two starts a bucket — `bucket_of(2^k)` is the
+//!   first sub-bucket of octave `k`, and `2^k - 1` lands in the bucket
+//!   before it (boundaries are exact, never smeared);
+//! * relative error of a quantile estimate is bounded by the
+//!   sub-bucket width: at most 1/8 ≈ 12.5% of the value;
+//! * `quantile` reports the *upper* edge of the covering bucket, so
+//!   estimates are conservative and monotone in `q` by construction.
+//!
+//! With [`N_BUCKETS`] = 304 the table spans 8 identity buckets plus
+//! octaves 3..=39, i.e. up to ~2^40 ns ≈ 18 minutes; anything larger
+//! saturates into the last bucket rather than wrapping. The whole
+//! table is 304 × 8 B ≈ 2.4 KiB per histogram — cheap enough to keep
+//! one per pipeline stage per engine replica.
+//!
+//! Merging snapshots is element-wise addition, so it is associative
+//! and commutative (property-tested below): per-replica histograms can
+//! be folded into fleet-wide tails in any order.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of buckets: 8 identity buckets (< 8 ns) + 8 linear
+/// sub-buckets for each octave `2^3 ..= 2^39`.
+pub const N_BUCKETS: usize = 8 + 8 * 37;
+
+/// Bucket index for a nanosecond observation (saturating at the top).
+#[inline]
+fn bucket_of(ns: u64) -> usize {
+    if ns < 8 {
+        return ns as usize;
+    }
+    // floor(log2(ns)) >= 3 here; sub-bucket = the 3 bits below the MSB
+    let octave = 63 - ns.leading_zeros() as usize;
+    let sub = ((ns >> (octave - 3)) & 7) as usize;
+    let idx = 8 + (octave - 3) * 8 + sub;
+    idx.min(N_BUCKETS - 1)
+}
+
+/// Inclusive lower edge of a bucket, in nanoseconds.
+#[inline]
+fn bucket_floor(idx: usize) -> u64 {
+    if idx < 8 {
+        return idx as u64;
+    }
+    let octave = (idx - 8) / 8 + 3;
+    let sub = ((idx - 8) % 8) as u64;
+    (1u64 << octave) + (sub << (octave - 3))
+}
+
+/// Exclusive upper edge of a bucket, in nanoseconds (saturating).
+#[inline]
+fn bucket_ceil(idx: usize) -> u64 {
+    if idx + 1 >= N_BUCKETS {
+        u64::MAX
+    } else {
+        bucket_floor(idx + 1)
+    }
+}
+
+/// Lock-free recording side: one atomic counter per bucket.
+///
+/// Shared by reference across recorder threads; `snapshot` produces a
+/// consistent-enough [`HistSnapshot`] (individual bucket loads are
+/// relaxed — a snapshot taken mid-record may be off by in-flight
+/// observations, which is fine for latency reporting).
+#[derive(Debug)]
+pub struct LatencyHist {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        LatencyHist::new()
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> LatencyHist {
+        LatencyHist {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation given in nanoseconds.
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Record one observation given in seconds (negative / non-finite
+    /// clamp to zero, absurdly large saturates — never panics).
+    pub fn record_s(&self, seconds: f64) {
+        let ns = if seconds.is_finite() && seconds > 0.0 {
+            let v = seconds * 1e9;
+            if v >= u64::MAX as f64 {
+                u64::MAX
+            } else {
+                v as u64
+            }
+        } else {
+            0
+        };
+        self.record_ns(ns);
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut snap = HistSnapshot::default();
+        for (i, b) in self.buckets.iter().enumerate() {
+            snap.buckets[i] = b.load(Ordering::Relaxed);
+        }
+        snap.count = self.count.load(Ordering::Relaxed);
+        snap.sum_ns = self.sum_ns.load(Ordering::Relaxed);
+        snap
+    }
+}
+
+/// Plain-data copy of a [`LatencyHist`]: quantile queries, merging,
+/// and equality live here.
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; N_BUCKETS],
+    pub count: u64,
+    pub sum_ns: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        HistSnapshot {
+            buckets: [0u64; N_BUCKETS],
+            count: 0,
+            sum_ns: 0,
+        }
+    }
+}
+
+impl std::fmt::Debug for HistSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("HistSnapshot")
+            .field("count", &self.count)
+            .field("mean_s", &self.mean_s())
+            .field("p50_s", &self.p50())
+            .field("p99_s", &self.p99())
+            .field("p999_s", &self.p999())
+            .finish()
+    }
+}
+
+impl HistSnapshot {
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Element-wise sum — associative and commutative, so per-replica
+    /// snapshots fold into fleet-wide tails in any order.
+    pub fn merge(&self, other: &HistSnapshot) -> HistSnapshot {
+        let mut out = *self;
+        for (o, b) in out.buckets.iter_mut().zip(other.buckets.iter()) {
+            *o += b;
+        }
+        out.count += other.count;
+        out.sum_ns = out.sum_ns.saturating_add(other.sum_ns);
+        out
+    }
+
+    /// Conservative quantile estimate in **seconds**: the upper edge of
+    /// the first bucket whose cumulative count reaches `ceil(q·count)`.
+    /// Monotone in `q`; returns 0.0 on an empty histogram.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (idx, &b) in self.buckets.iter().enumerate() {
+            cum += b;
+            if cum >= target {
+                let ceil_ns = bucket_ceil(idx);
+                // the saturated top bucket has no finite upper edge;
+                // report its floor instead of +inf
+                let ns = if ceil_ns == u64::MAX { bucket_floor(idx) } else { ceil_ns };
+                return ns as f64 / 1e9;
+            }
+        }
+        // unreachable: cum == count >= target by the end
+        bucket_floor(N_BUCKETS - 1) as f64 / 1e9
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    pub fn p999(&self) -> f64 {
+        self.quantile(0.999)
+    }
+
+    /// Exact mean in seconds (the sum is exact, not bucketed).
+    pub fn mean_s(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64 / 1e9
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identity_buckets_below_eight() {
+        for ns in 0..8u64 {
+            assert_eq!(bucket_of(ns), ns as usize);
+            assert_eq!(bucket_floor(ns as usize), ns);
+        }
+    }
+
+    #[test]
+    fn power_of_two_boundaries_are_exact() {
+        for k in 3..=39u32 {
+            let v = 1u64 << k;
+            let b = bucket_of(v);
+            // a power of two starts its bucket exactly...
+            assert_eq!(bucket_floor(b), v, "2^{k} must start a bucket");
+            // ...and the value just below it lands in the previous one
+            assert_eq!(bucket_of(v - 1), b - 1, "2^{k}-1 must fall one bucket earlier");
+            assert_eq!(bucket_ceil(b - 1), v, "2^{k} must be the ceiling of the prior bucket");
+        }
+    }
+
+    #[test]
+    fn floor_roundtrips_through_bucket_of() {
+        for idx in 0..N_BUCKETS {
+            assert_eq!(bucket_of(bucket_floor(idx)), idx, "bucket {idx}");
+        }
+    }
+
+    #[test]
+    fn buckets_are_contiguous_and_monotone() {
+        let mut prev = bucket_of(0);
+        assert_eq!(prev, 0);
+        // sweep a log-spread of values: bucket index never decreases and
+        // never jumps by more than 1 between adjacent sampled values
+        let mut v = 1u64;
+        while v < 1u64 << 41 {
+            for off in [0u64, 1, 2, 3] {
+                let b = bucket_of(v + off);
+                assert!(b >= prev, "bucket regressed at {}", v + off);
+                prev = b;
+            }
+            v = v.wrapping_mul(2);
+        }
+        assert_eq!(bucket_of(u64::MAX), N_BUCKETS - 1, "top saturates");
+    }
+
+    #[test]
+    fn relative_error_is_bounded_by_an_eighth() {
+        let mut rng = Rng::new(0x4157);
+        for _ in 0..2000 {
+            // log-uniform over ~9 decades
+            let ns = (10f64.powf(rng.range_f64(0.0, 9.0))) as u64;
+            let idx = bucket_of(ns);
+            let lo = bucket_floor(idx);
+            let hi = bucket_ceil(idx);
+            assert!(lo <= ns && ns < hi, "{ns} outside [{lo}, {hi})");
+            if ns >= 8 {
+                // width / value <= 1/8
+                assert!(
+                    (hi - lo) as f64 <= ns as f64 / 8.0 + 1.0,
+                    "bucket too wide at {ns}: [{lo}, {hi})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        let fill = |seed: u64, n: usize| {
+            let h = LatencyHist::new();
+            let mut rng = Rng::new(seed);
+            for _ in 0..n {
+                h.record_ns((10f64.powf(rng.range_f64(0.0, 8.0))) as u64);
+            }
+            h.snapshot()
+        };
+        let (a, b, c) = (fill(1, 500), fill(2, 300), fill(3, 700));
+        assert_eq!(a.merge(&b).merge(&c), a.merge(&b.merge(&c)), "associative");
+        assert_eq!(a.merge(&b), b.merge(&a), "commutative");
+        assert_eq!(a.merge(&b).count, a.count + b.count);
+        assert_eq!(a.merge(&HistSnapshot::default()), a, "identity");
+    }
+
+    #[test]
+    fn quantiles_are_monotone_under_random_fills() {
+        let mut rng = Rng::new(0xDEAD);
+        for round in 0..20 {
+            let h = LatencyHist::new();
+            let n = 100 + rng.below(5000);
+            for _ in 0..n {
+                h.record_ns((10f64.powf(rng.range_f64(0.0, 7.0))) as u64);
+            }
+            let s = h.snapshot();
+            assert_eq!(s.count, n as u64);
+            let mut prev = 0.0f64;
+            for q in [0.0, 0.1, 0.25, 0.5, 0.9, 0.99, 0.999, 1.0] {
+                let v = s.quantile(q);
+                assert!(v >= prev, "round {round}: quantile({q}) = {v} < {prev}");
+                prev = v;
+            }
+            assert!(s.p50() <= s.p99() && s.p99() <= s.p999());
+        }
+    }
+
+    #[test]
+    fn constant_fill_brackets_the_value() {
+        let h = LatencyHist::new();
+        let v_ns = 12_345u64;
+        for _ in 0..1000 {
+            h.record_ns(v_ns);
+        }
+        let s = h.snapshot();
+        let v_s = v_ns as f64 / 1e9;
+        for q in [0.5, 0.99, 0.999] {
+            let est = s.quantile(q);
+            assert!(
+                est >= v_s && est <= v_s * 1.13,
+                "quantile({q}) = {est} outside [{v_s}, {}]",
+                v_s * 1.13
+            );
+        }
+        assert!((s.mean_s() - v_s).abs() < 1e-12, "mean is exact");
+    }
+
+    #[test]
+    fn degenerate_inputs_never_panic() {
+        let h = LatencyHist::new();
+        h.record_s(0.0);
+        h.record_s(-1.0);
+        h.record_s(f64::NAN);
+        h.record_s(f64::INFINITY);
+        h.record_s(1e30);
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        assert!(s.quantile(0.5).is_finite());
+        assert!(s.quantile(1.0).is_finite());
+    }
+
+    #[test]
+    fn empty_snapshot_reports_zeroes() {
+        let s = LatencyHist::new().snapshot();
+        assert!(s.is_empty());
+        assert_eq!(s.p50(), 0.0);
+        assert_eq!(s.p999(), 0.0);
+        assert_eq!(s.mean_s(), 0.0);
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        let h = LatencyHist::new();
+        let threads = 4;
+        let per = 2500;
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let h = &h;
+                s.spawn(move || {
+                    for i in 0..per {
+                        h.record_ns((t * per + i) as u64);
+                    }
+                });
+            }
+        });
+        let s = h.snapshot();
+        assert_eq!(s.count, (threads * per) as u64);
+        assert_eq!(s.buckets.iter().sum::<u64>(), s.count);
+    }
+}

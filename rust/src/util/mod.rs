@@ -6,11 +6,13 @@
 //! JSON reader/writer ([`json`]), descriptive statistics ([`stats`]), a
 //! fixed-width table printer ([`table`]), a micro-benchmark harness used
 //! by `cargo bench` ([`bench`]), a scoped thread-pool `parallel_map`
-//! ([`pool`]), a generic bounded sharded cache ([`cache`]), and
+//! ([`pool`]), a generic bounded sharded cache with in-flight miss
+//! dedup ([`cache`]), log-bucketed latency histograms ([`hist`]), and
 //! randomized property-test helpers ([`prop`]).
 
 pub mod bench;
 pub mod cache;
+pub mod hist;
 pub mod json;
 pub mod pool;
 pub mod prop;

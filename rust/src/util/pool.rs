@@ -1,6 +1,8 @@
 //! Scoped-thread `parallel_map` — the dataset sweep's worker pool —
 //! plus [`ObjectPool`], the free-list that backs serving-path scratch
-//! reuse, and [`parallel_dag`], the dependency-counted task executor the
+//! reuse, [`AdmissionGate`], the bounded-occupancy backpressure
+//! primitive under the shard router's per-replica queues, and
+//! [`parallel_dag`], the dependency-counted task executor the
 //! supernodal solver pipelines its assembly tree over.
 //!
 //! The dataset build runs `|collection| x |algorithms|` reorder+factorize
@@ -126,6 +128,127 @@ impl<T> Drop for PooledObject<'_, T> {
         if let Some(obj) = self.obj.take() {
             self.pool.give_back(obj);
         }
+    }
+}
+
+/// Counter snapshot of an [`AdmissionGate`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GateStats {
+    /// Requests admitted (both paths).
+    pub admitted: u64,
+    /// `try_enter` calls bounced off a full gate.
+    pub rejected: u64,
+    /// `enter` calls that had to park before a seat freed up.
+    pub blocked: u64,
+    /// Requests currently inside the gate.
+    pub active: usize,
+    /// Largest concurrent occupancy ever observed — the signal that
+    /// tells a capacity planner whether the bound is ever reached.
+    pub high_water: usize,
+}
+
+/// A bounded admission gate: at most `capacity` holders at a time —
+/// the backpressure primitive under `coordinator::router`'s per-replica
+/// queues. [`AdmissionGate::try_enter`] implements reject/shed policies
+/// (fail fast when full), [`AdmissionGate::enter`] implements blocking
+/// backpressure (park until a seat frees). Both return an RAII
+/// [`GatePass`] that releases the seat on drop — panic unwind included,
+/// so a crashed request can never leak capacity.
+pub struct AdmissionGate {
+    capacity: usize,
+    state: Mutex<GateState>,
+    cv: Condvar,
+    admitted: AtomicU64,
+    rejected: AtomicU64,
+    blocked: AtomicU64,
+}
+
+struct GateState {
+    active: usize,
+    high_water: usize,
+}
+
+impl AdmissionGate {
+    pub fn new(capacity: usize) -> AdmissionGate {
+        AdmissionGate {
+            capacity: capacity.max(1),
+            state: Mutex::new(GateState {
+                active: 0,
+                high_water: 0,
+            }),
+            cv: Condvar::new(),
+            admitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            blocked: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Admit without waiting, or `None` when the gate is full (counted
+    /// as a rejection — the caller sheds or spills the request).
+    pub fn try_enter(&self) -> Option<GatePass<'_>> {
+        let mut st = self.state.lock().expect("admission gate poisoned");
+        if st.active >= self.capacity {
+            drop(st);
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        st.active += 1;
+        st.high_water = st.high_water.max(st.active);
+        drop(st);
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        Some(GatePass { gate: self })
+    }
+
+    /// Admit, parking until a seat frees when the gate is full — the
+    /// blocking-backpressure policy: overload slows callers down instead
+    /// of failing them.
+    pub fn enter(&self) -> GatePass<'_> {
+        let mut st = self.state.lock().expect("admission gate poisoned");
+        if st.active >= self.capacity {
+            self.blocked.fetch_add(1, Ordering::Relaxed);
+            st = self
+                .cv
+                .wait_while(st, |s| s.active >= self.capacity)
+                .expect("admission gate poisoned");
+        }
+        st.active += 1;
+        st.high_water = st.high_water.max(st.active);
+        drop(st);
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        GatePass { gate: self }
+    }
+
+    fn leave(&self) {
+        let mut st = self.state.lock().expect("admission gate poisoned");
+        st.active = st.active.saturating_sub(1);
+        drop(st);
+        self.cv.notify_one();
+    }
+
+    pub fn stats(&self) -> GateStats {
+        let st = self.state.lock().expect("admission gate poisoned");
+        GateStats {
+            admitted: self.admitted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            blocked: self.blocked.load(Ordering::Relaxed),
+            active: st.active,
+            high_water: st.high_water,
+        }
+    }
+}
+
+/// One admitted seat in an [`AdmissionGate`]; released on drop.
+pub struct GatePass<'a> {
+    gate: &'a AdmissionGate,
+}
+
+impl Drop for GatePass<'_> {
+    fn drop(&mut self) {
+        self.gate.leave();
     }
 }
 
@@ -729,5 +852,77 @@ mod tests {
         assert_eq!(s.checkouts, 200);
         assert_eq!(s.creates + s.reuses, s.checkouts);
         assert!(s.creates <= 8 + s.idle as u64); // never more live than workers allow
+    }
+
+    #[test]
+    fn gate_try_enter_bounces_off_a_full_gate() {
+        let gate = AdmissionGate::new(2);
+        assert_eq!(gate.capacity(), 2);
+        let a = gate.try_enter().expect("seat 1");
+        let b = gate.try_enter().expect("seat 2");
+        assert!(gate.try_enter().is_none());
+        assert!(gate.try_enter().is_none());
+        let s = gate.stats();
+        assert_eq!((s.admitted, s.rejected), (2, 2));
+        assert_eq!((s.active, s.high_water), (2, 2));
+        drop(a);
+        let c = gate.try_enter().expect("freed seat is reusable");
+        drop(b);
+        drop(c);
+        let s = gate.stats();
+        assert_eq!(s.active, 0);
+        assert_eq!(s.high_water, 2);
+        assert_eq!((s.admitted, s.rejected, s.blocked), (3, 2, 0));
+    }
+
+    #[test]
+    fn gate_capacity_is_clamped_to_one() {
+        let gate = AdmissionGate::new(0);
+        assert_eq!(gate.capacity(), 1);
+        let pass = gate.try_enter().expect("one seat exists");
+        assert!(gate.try_enter().is_none());
+        drop(pass);
+        assert!(gate.try_enter().is_some());
+    }
+
+    #[test]
+    fn gate_blocking_enter_waits_for_a_seat() {
+        let gate = AdmissionGate::new(1);
+        let pass = gate.enter();
+        let release = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        std::thread::scope(|scope| {
+            let waiter = {
+                let release = std::sync::Arc::clone(&release);
+                let gate = &gate;
+                scope.spawn(move || {
+                    let _pass = gate.enter(); // parks until `pass` drops
+                    assert!(
+                        release.load(Ordering::SeqCst),
+                        "blocking enter admitted before the seat was freed"
+                    );
+                })
+            };
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            release.store(true, Ordering::SeqCst);
+            drop(pass);
+            waiter.join().expect("waiter panicked");
+        });
+        let s = gate.stats();
+        assert_eq!(s.admitted, 2);
+        assert_eq!(s.blocked, 1);
+        assert_eq!(s.active, 0);
+        assert_eq!(s.high_water, 1);
+    }
+
+    #[test]
+    fn gate_pass_releases_on_panic_unwind() {
+        let gate = AdmissionGate::new(1);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _pass = gate.enter();
+            panic!("request crashed while holding a seat");
+        }));
+        assert!(r.is_err());
+        assert_eq!(gate.stats().active, 0, "unwind must release the seat");
+        assert!(gate.try_enter().is_some());
     }
 }

@@ -112,6 +112,60 @@ impl Rng {
     }
 }
 
+/// Zipf-distributed sampler over ranks `0..n`: rank `k` is drawn with
+/// probability proportional to `1 / (k+1)^s`. Serving traffic to a plan
+/// cache is heavily skewed in practice — a few structural patterns
+/// dominate — and the router's traffic-replay bench
+/// (`benches/bench_router.rs`) uses this to synthesize that skew
+/// deterministically. The normalized CDF is precomputed once, so a draw
+/// is one uniform plus one binary search.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    /// `n` ranks, exponent `s` (s = 0 is uniform; larger s is more
+    /// head-heavy; the classical web-traffic fit is s ≈ 1).
+    pub fn new(n: usize, s: f64) -> Zipf {
+        assert!(n > 0, "Zipf over an empty population");
+        assert!(s.is_finite() && s >= 0.0, "Zipf exponent must be finite and >= 0");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 0..n {
+            acc += 1.0 / ((k + 1) as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        // guard against fp round-down leaving the last bucket unreachable
+        *cdf.last_mut().expect("n > 0") = 1.0;
+        Zipf { cdf }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // n > 0 by construction
+    }
+
+    /// Draw one rank in `[0, n)`.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        match self
+            .cdf
+            .binary_search_by(|c| c.partial_cmp(&u).expect("cdf is finite"))
+        {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -193,5 +247,53 @@ mod tests {
         let mut b = base.fork(2);
         let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
         assert!(same < 2);
+    }
+
+    #[test]
+    fn zipf_is_deterministic_and_in_range() {
+        let z = Zipf::new(24, 1.1);
+        assert_eq!(z.len(), 24);
+        let mut a = Rng::new(77);
+        let mut b = Rng::new(77);
+        for _ in 0..500 {
+            let ra = z.sample(&mut a);
+            assert_eq!(ra, z.sample(&mut b));
+            assert!(ra < 24);
+        }
+    }
+
+    #[test]
+    fn zipf_head_is_heavier_than_tail() {
+        let z = Zipf::new(50, 1.1);
+        let mut rng = Rng::new(3);
+        let mut counts = [0usize; 50];
+        for _ in 0..20_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        // rank 0 dominates rank 49 by a wide margin, and the top 5
+        // ranks together outweigh the bottom 45 — the skew the router
+        // bench relies on for realistic cache-hit rates
+        assert!(counts[0] > 10 * counts[49].max(1));
+        let head: usize = counts[..5].iter().sum();
+        let tail: usize = counts[5..].iter().sum();
+        assert!(head > tail, "head {head} vs tail {tail}");
+        // every rank is still reachable in expectation-heavy sampling
+        assert!(counts[0] > counts[10], "monotone-ish head");
+    }
+
+    #[test]
+    fn zipf_exponent_zero_is_roughly_uniform() {
+        let z = Zipf::new(8, 0.0);
+        let mut rng = Rng::new(9);
+        let mut counts = [0usize; 8];
+        for _ in 0..16_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        for (k, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64 - 2000.0).abs() < 300.0,
+                "rank {k} count {c} far from uniform"
+            );
+        }
     }
 }

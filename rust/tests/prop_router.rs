@@ -1,0 +1,331 @@
+//! Traffic-tier properties: rendezvous routing (stability, bounded
+//! churn), fleet-wide plan dedup under shard routing, and admission
+//! backpressure under every overload policy.
+//!
+//! Routing properties run on pure functions (no engines). The serving
+//! tests stand a small fleet up on the pure-Rust forest backend, so this
+//! suite — like `integration_serving.rs` — always runs without AOT
+//! artifacts.
+
+use std::sync::{Arc, Barrier};
+
+use smr::collection::generators::pattern_population;
+use smr::collection::generate_mini_collection;
+use smr::coordinator::router::{preference, route, RouterError};
+use smr::coordinator::service::Backend;
+use smr::coordinator::{OverloadPolicy, RouterConfig, ShardRouter};
+use smr::dataset::{build_dataset, SweepConfig};
+use smr::ml::forest::{ForestParams, RandomForest};
+use smr::ml::normalize::{Method, Normalizer};
+use smr::ml::Classifier;
+use smr::reorder::ReorderAlgorithm;
+use smr::sparse::PatternKey;
+use smr::util::rng::Rng;
+
+/// Forest backend fitted on a small labeled sweep (same recipe as
+/// `integration_serving.rs`): deterministic, artifact-free. Trained once
+/// and cloned per replica — which is exactly how `ShardRouter::spawn`
+/// is meant to be fed.
+fn trained_backend() -> Backend {
+    let coll = generate_mini_collection(3, 1);
+    let ds = build_dataset(&coll, &ReorderAlgorithm::LABEL_SET, &SweepConfig::default());
+    let normalizer = Normalizer::fit(Method::Standard, &ds.features());
+    let mut forest = RandomForest::new(
+        ForestParams {
+            n_estimators: 20,
+            ..Default::default()
+        },
+        7,
+    );
+    forest.fit(&normalizer.transform(&ds.features()), &ds.labels(), 4);
+    Backend::Forest { normalizer, forest }
+}
+
+fn random_key(rng: &mut Rng) -> PatternKey {
+    PatternKey {
+        n: rng.range(4, 5000),
+        nnz: rng.range(4, 50_000),
+        hash: rng.next_u64(),
+    }
+}
+
+#[test]
+fn same_key_always_routes_to_the_same_replica() {
+    let mut rng = Rng::new(0xB0B);
+    for _ in 0..200 {
+        let k = random_key(&mut rng);
+        for n in 1..8usize {
+            let first = route(&k, n);
+            assert!(first < n);
+            for _ in 0..5 {
+                assert_eq!(route(&k, n), first);
+            }
+        }
+    }
+}
+
+#[test]
+fn rebalancing_is_monotone_when_replicas_are_added() {
+    // HRW's defining property: going n -> n+1, a key either stays put
+    // or moves to the NEW replica; no key moves between old replicas.
+    let mut rng = Rng::new(0xCAFE);
+    let keys: Vec<PatternKey> = (0..300).map(|_| random_key(&mut rng)).collect();
+    for n in 1..7usize {
+        let mut moved = 0usize;
+        for k in &keys {
+            let before = route(k, n);
+            let after = route(k, n + 1);
+            if after != before {
+                assert_eq!(
+                    after, n,
+                    "key moved between old replicas on {} -> {} growth",
+                    n,
+                    n + 1
+                );
+                moved += 1;
+            }
+        }
+        assert!(moved > 0, "new replica {} received no keys", n);
+        assert!(moved < keys.len(), "growth to {} reshuffled every key", n + 1);
+    }
+}
+
+#[test]
+fn replicas_all_receive_a_fair_share_of_keys() {
+    let mut rng = Rng::new(0x5EED);
+    let n = 4usize;
+    let mut counts = vec![0usize; n];
+    let total = 2000;
+    for _ in 0..total {
+        counts[route(&random_key(&mut rng), n)] += 1;
+    }
+    let expected = total / n;
+    for (r, &c) in counts.iter().enumerate() {
+        assert!(
+            c > expected / 2 && c < expected * 2,
+            "replica {r} got {c} of {total} keys (expected ~{expected})"
+        );
+    }
+}
+
+#[test]
+fn preference_order_is_a_permutation_led_by_the_home() {
+    let mut rng = Rng::new(0xFEED);
+    for _ in 0..100 {
+        let k = random_key(&mut rng);
+        let pref = preference(&k, 6);
+        assert_eq!(pref[0], route(&k, 6));
+        let mut sorted = pref.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..6).collect::<Vec<_>>());
+    }
+}
+
+#[test]
+fn shard_routing_dedups_plans_fleet_wide() {
+    let backend = trained_backend();
+    let router = ShardRouter::spawn(
+        RouterConfig {
+            replicas: 3,
+            queue_depth: 8,
+            policy: OverloadPolicy::Block,
+            ..Default::default()
+        },
+        |_| backend.clone(),
+    )
+    .unwrap();
+
+    let population = pattern_population(9, 0xD1CE);
+    // two passes over the population: pass 1 is cold, pass 2 must be
+    // all plan hits on the same replicas
+    let mut homes = Vec::new();
+    for m in &population {
+        let r = router.serve(m).unwrap();
+        assert!(!r.spilled, "Block policy never spills");
+        assert_eq!(r.replica, r.home);
+        homes.push(r.replica);
+    }
+    for (m, &home) in population.iter().zip(&homes) {
+        let r = router.serve(m).unwrap();
+        assert_eq!(r.replica, home, "same pattern moved replicas");
+        assert!(r.report.plan_hit, "second serve of a pattern must be warm");
+    }
+
+    let s = router.stats();
+    assert_eq!(s.requests, 2 * population.len() as u64);
+    assert_eq!(s.served(), s.requests);
+    assert_eq!((s.rejected, s.spilled), (0, 0));
+    // fleet-wide dedup: every pattern planned exactly once, anywhere
+    assert_eq!(s.plan_misses(), population.len() as u64);
+    assert_eq!(s.plan_hits(), population.len() as u64);
+    assert_eq!(s.plan_leaders(), population.len() as u64);
+    assert!((s.plan_hit_rate() - 0.5).abs() < 1e-12);
+    // per-replica requests sum to the total, and the merged latency
+    // histogram saw every request
+    let per_replica: u64 = s.replicas.iter().map(|r| r.requests).sum();
+    assert_eq!(per_replica, s.requests);
+    assert_eq!(s.e2e_latency().count, s.requests);
+    router.shutdown();
+}
+
+#[test]
+fn reject_policy_sheds_load_beyond_queue_depth() {
+    let backend = trained_backend();
+    let router = Arc::new(
+        ShardRouter::spawn(
+            RouterConfig {
+                replicas: 1,
+                queue_depth: 1,
+                policy: OverloadPolicy::Reject,
+                ..Default::default()
+            },
+            |_| backend.clone(),
+        )
+        .unwrap(),
+    );
+
+    // 8 threads race one single-seat replica with the SAME pattern:
+    // every outcome is either a served report or a clean Overloaded
+    let matrix = Arc::new(smr::collection::generators::grid2d(12, 9));
+    const THREADS: usize = 8;
+    let barrier = Arc::new(Barrier::new(THREADS));
+    let mut handles = Vec::new();
+    for _ in 0..THREADS {
+        let (router, matrix, barrier) =
+            (Arc::clone(&router), Arc::clone(&matrix), Arc::clone(&barrier));
+        handles.push(std::thread::spawn(move || {
+            barrier.wait();
+            router.serve(&*matrix)
+        }));
+    }
+    let mut ok = 0u64;
+    let mut overloaded = 0u64;
+    for h in handles {
+        match h.join().unwrap() {
+            Ok(r) => {
+                assert_eq!(r.replica, 0);
+                ok += 1;
+            }
+            Err(RouterError::Overloaded { replica }) => {
+                assert_eq!(replica, 0);
+                overloaded += 1;
+            }
+            Err(e) => panic!("unexpected engine error: {e}"),
+        }
+    }
+    assert_eq!(ok + overloaded, THREADS as u64);
+    assert!(ok >= 1, "at least the seat holder must be served");
+    assert!(overloaded >= 1, "a single seat cannot admit 8 racers");
+    let s = router.stats();
+    assert_eq!(s.rejected, overloaded);
+    assert_eq!(s.served(), ok);
+    assert_eq!(s.replicas[0].gate.high_water, 1, "seat bound was never exceeded");
+    match Arc::try_unwrap(router) {
+        Ok(r) => r.shutdown(),
+        Err(_) => panic!("router still shared"),
+    }
+}
+
+#[test]
+fn block_policy_serves_everyone_without_rejections() {
+    let backend = trained_backend();
+    let router = Arc::new(
+        ShardRouter::spawn(
+            RouterConfig {
+                replicas: 1,
+                queue_depth: 1,
+                policy: OverloadPolicy::Block,
+                ..Default::default()
+            },
+            |_| backend.clone(),
+        )
+        .unwrap(),
+    );
+
+    let matrix = Arc::new(smr::collection::generators::grid2d(10, 8));
+    const THREADS: usize = 4;
+    let barrier = Arc::new(Barrier::new(THREADS));
+    let mut handles = Vec::new();
+    for _ in 0..THREADS {
+        let (router, matrix, barrier) =
+            (Arc::clone(&router), Arc::clone(&matrix), Arc::clone(&barrier));
+        handles.push(std::thread::spawn(move || {
+            barrier.wait();
+            router.serve(&*matrix).unwrap()
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let s = router.stats();
+    assert_eq!(s.served(), THREADS as u64);
+    assert_eq!(s.rejected, 0, "Block never sheds");
+    assert_eq!(s.replicas[0].gate.high_water, 1, "one seat, one request at a time");
+    assert!(
+        s.replicas[0].gate.blocked >= 1,
+        "racers behind a single seat must have parked"
+    );
+    // same pattern everywhere: exactly one cold plan computation
+    assert_eq!(s.plan_leaders(), 1);
+    match Arc::try_unwrap(router) {
+        Ok(r) => r.shutdown(),
+        Err(_) => panic!("router still shared"),
+    }
+}
+
+#[test]
+fn spill_policy_overflows_to_the_next_preferred_replica() {
+    let backend = trained_backend();
+    let router = ShardRouter::spawn(
+        RouterConfig {
+            replicas: 2,
+            queue_depth: 1,
+            policy: OverloadPolicy::Spill,
+            ..Default::default()
+        },
+        |_| backend.clone(),
+    )
+    .unwrap();
+
+    // occupy the home replica's only seat by serving from a thread that
+    // holds the seat while we race a second request in
+    let matrix = Arc::new(smr::collection::generators::grid2d(14, 11));
+    let home = route(&PatternKey::of(&*matrix), 2);
+    let barrier = Arc::new(Barrier::new(2));
+    std::thread::scope(|scope| {
+        let router = &router;
+        let first = {
+            let (matrix, barrier) = (Arc::clone(&matrix), Arc::clone(&barrier));
+            scope.spawn(move || {
+                barrier.wait();
+                router.serve(&*matrix).unwrap()
+            })
+        };
+        barrier.wait();
+        // keep retrying until we observe one spill: the race window is
+        // the first thread's full service time, so a handful of
+        // attempts is plenty — and every attempt must serve (never
+        // reject: the other replica's seat is free)
+        let mut spilled_seen = false;
+        for _ in 0..200 {
+            let r = router.serve(&*matrix).unwrap();
+            assert_eq!(r.home, home);
+            if r.spilled {
+                assert_ne!(r.replica, home, "spill must leave the home replica");
+                spilled_seen = true;
+                break;
+            }
+        }
+        let first = first.join().unwrap();
+        assert_eq!(first.home, home);
+        if spilled_seen {
+            let s = router.stats();
+            assert!(s.spilled >= 1);
+            assert_eq!(
+                s.replicas[1 - home].spill_in, s.spilled,
+                "all spills land on the only other replica"
+            );
+        }
+    });
+    router.shutdown();
+}
