@@ -25,12 +25,22 @@ cargo test -q --test prop_symbolic_plan
 cargo test -q --test integration_serving
 cargo test -q --test prop_router
 
+# Online-learning-loop suites: deterministic bandit replay (fixed seed
+# => bit-identical decisions), regret vs the always-AMD baseline,
+# lossless 8-thread feedback ingestion, and the exploration gate
+# (explore only on plan-cache-cold requests) checked end to end.
+cargo test -q --test prop_online_selector
+cargo test -q --test integration_online_serving
+
 # Traffic-tier invariants that live in unit tests: cold-miss stampedes
 # coalesce onto one leader (in-flight dedup), the admission window
 # never sleeps on singleton traffic, and the latency histograms keep
 # exact power-of-two bucket edges and monotone quantiles.
 cargo test -q --lib util::cache
 cargo test -q --lib util::hist
+cargo test -q --lib util::queue
+cargo test -q --lib ml::online
+cargo test -q --lib coordinator::learner
 cargo test -q --lib coordinator::serving::tests::cold_stampede
 cargo test -q --lib coordinator::serving::tests::singleton_warm
 
@@ -45,10 +55,11 @@ cargo test -q --lib util::pool::tests::dag
 # batched burst records/coalescing counters + dedup counters + latency
 # quantiles for serving; peak_front_bytes/allocs +
 # replay/batched_warm/core_scaling lanes for the solver; throughput +
-# tail latency + dedup + per-replica occupancy for the router),
+# tail latency + dedup + per-replica occupancy for the router; regret
+# curve + picks + baselines + learner counters for the online loop),
 # validated via util/json.rs by examples/check_bench.rs.
 bench_artifacts=()
-for f in BENCH_serving.json BENCH_solver.json BENCH_router.json; do
+for f in BENCH_serving.json BENCH_solver.json BENCH_router.json BENCH_online.json; do
   [[ -f "$f" ]] && bench_artifacts+=("$f")
 done
 if [[ ${#bench_artifacts[@]} -gt 0 ]]; then

@@ -12,7 +12,10 @@
 //! the per-stage `latency` quantiles). For `bench_router` artifacts
 //! every lane must report throughput, p50/p99/p999 tail latency, fleet
 //! dedup counters, and a per-replica occupancy array, with both
-//! closed- and open-loop lanes present. For `bench_solver` artifacts every record must carry the
+//! closed- and open-loop lanes present. For `bench_online` artifacts
+//! the windowed regret curve (>= 2 windows), per-algorithm pick
+//! histogram, fixed-policy baselines, learner counter block, and the
+//! `regret_improved` flag are all required. For `bench_solver` artifacts every record must carry the
 //! `peak_front_bytes` / `allocs` columns, the replay lanes
 //! (`planned_numeric`, `arena_numeric`, `pipelined`) and the
 //! `batched_warm` lane (with its `batch_k` / `per_request_s` /
@@ -226,6 +229,81 @@ fn check_file(path: &str) -> Vec<String> {
         for key in ["patterns", "zipf_s", "trace_len", "workers"] {
             check_num(&v, key, &mut errs, path);
         }
+    }
+    // online-learning schema: a windowed regret curve (>= 2 windows so
+    // first-vs-final regret is meaningful), the pick histogram, the
+    // fixed-policy baselines, the learner counter block, and the
+    // headline `regret_improved` flag
+    if v.get("bench").and_then(|b| b.as_str()) == Some("bench_online") {
+        if results.len() < 2 {
+            errs.push(format!(
+                "{path}: need >= 2 window records for a regret curve"
+            ));
+        }
+        for (i, rec) in results.iter().enumerate() {
+            let ctx = format!("{path}: results[{i}]");
+            for key in [
+                "window",
+                "requests",
+                "regret_s",
+                "regret_per_req_s",
+                "explored",
+                "exploited",
+            ] {
+                check_num(rec, key, &mut errs, &ctx);
+            }
+        }
+        match v.get("picks").and_then(|p| p.as_arr()) {
+            Some(picks) if !picks.is_empty() => {
+                for (i, p) in picks.iter().enumerate() {
+                    let pctx = format!("{path}: picks[{i}]");
+                    if p.get("algorithm").and_then(|a| a.as_str()).is_none() {
+                        errs.push(format!("{pctx}: missing string `algorithm`"));
+                    }
+                    check_num(p, "picked", &mut errs, &pctx);
+                }
+            }
+            _ => errs.push(format!("{path}: missing non-empty `picks` array")),
+        }
+        match v.get("baselines") {
+            Some(b) => {
+                for key in [
+                    "oracle_total_s",
+                    "amd_regret_s",
+                    "model_regret_s",
+                    "learner_regret_s",
+                ] {
+                    check_num(b, key, &mut errs, &format!("{path}: baselines"));
+                }
+            }
+            None => errs.push(format!("{path}: missing `baselines` object")),
+        }
+        match v.get("learner") {
+            Some(l) => {
+                for key in [
+                    "decisions",
+                    "explored",
+                    "observations",
+                    "updates",
+                    "dropped",
+                    "regret_s",
+                ] {
+                    check_num(l, key, &mut errs, &format!("{path}: learner"));
+                }
+            }
+            None => errs.push(format!("{path}: missing `learner` object")),
+        }
+        for key in [
+            "patterns",
+            "zipf_s",
+            "trace_len",
+            "window",
+            "first_window_regret_s",
+            "final_window_regret_s",
+        ] {
+            check_num(&v, key, &mut errs, path);
+        }
+        check_bool(&v, "regret_improved", &mut errs, path);
     }
     errs
 }

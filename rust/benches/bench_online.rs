@@ -1,0 +1,249 @@
+//! Online-learning replay benchmark: a learner-enabled [`ServingEngine`]
+//! replays a Zipf trace against ground-truth labels measured up front.
+//!
+//! Run with `cargo bench --bench bench_online`. Writes
+//! `BENCH_online.json` (override with `BENCH_OUT`): a windowed regret
+//! curve (regret = oracle-table cost of the arm the engine picked minus
+//! the oracle-best cost, charged per request), explored/exploited
+//! counts per window, the per-algorithm pick histogram, the learner's
+//! own counter block, and three fixed-policy baselines replayed over
+//! the *same* trace — always-AMD, the offline model's argmax, and the
+//! oracle itself. `ci.sh` schema-gates the artifact via
+//! `examples/check_bench` whenever it is present.
+//!
+//! The headline signal is `regret_improved`: the final window's regret
+//! must come in below the first window's (the learner pays its
+//! exploration/cold-start tax early and converges onto the measured-
+//! cheapest arms).
+
+use smr::collection::generate_mini_collection;
+use smr::collection::generators::pattern_population;
+use smr::coordinator::service::Backend;
+use smr::coordinator::{DrainMode, LearnerConfig, ServingConfig, ServingEngine};
+use smr::dataset::{build_dataset, SweepConfig};
+use smr::features;
+use smr::ml::forest::{ForestParams, RandomForest};
+use smr::ml::normalize::{Method, Normalizer};
+use smr::ml::online::{arm_index, OnlineConfig, ARMS, N_ARMS};
+use smr::ml::Classifier;
+use smr::reorder::ReorderAlgorithm;
+use smr::solver::{prepare, solve_ordered, SolverConfig};
+use smr::util::bench::{section, JsonReport};
+use smr::util::cache::CacheConfig;
+use smr::util::json;
+use smr::util::rng::{Rng, Zipf};
+use smr::util::Timer;
+
+const PATTERNS: usize = 18;
+const ZIPF_S: f64 = 1.1;
+const TRACE_LEN: usize = 600;
+const WINDOW: usize = 100;
+const REORDER_SEED: u64 = 0xDA7A;
+
+/// Offline predictor trained on a *small* sweep on purpose: its argmax
+/// is good but imperfect on the replay population, which is exactly the
+/// regime where the online loop has something to learn.
+fn trained_model() -> (Normalizer, RandomForest) {
+    let coll = generate_mini_collection(3, 1);
+    let ds = build_dataset(&coll, &ReorderAlgorithm::LABEL_SET, &SweepConfig::default());
+    let normalizer = Normalizer::fit(Method::Standard, &ds.features());
+    let mut forest = RandomForest::new(
+        ForestParams {
+            n_estimators: 20,
+            ..Default::default()
+        },
+        9,
+    );
+    forest.fit(&normalizer.transform(&ds.features()), &ds.labels(), 4);
+    (normalizer, forest)
+}
+
+fn main() {
+    section("setup: sweep + train offline forest");
+    let (normalizer, forest) = trained_model();
+    let backend = Backend::Forest {
+        normalizer: normalizer.clone(),
+        forest: forest.clone(),
+    };
+
+    section(&format!(
+        "oracle: measure all {N_ARMS} arms on {PATTERNS} patterns"
+    ));
+    let pop = pattern_population(PATTERNS, 0xD1CE);
+    let solver_cfg = SolverConfig::default();
+    // table[p][a] = measured reorder+analyze+factor+solve cost of arm a
+    // on pattern p; failures normalized to 2x the worst finite cost.
+    let mut table = vec![[0.0f64; N_ARMS]; PATTERNS];
+    for (p, m) in pop.iter().enumerate() {
+        let spd = prepare(m, &solver_cfg);
+        let mut worst = 0.0f64;
+        for (ai, arm) in ARMS.iter().enumerate() {
+            let t = Timer::start();
+            let perm = arm.compute(&spd, REORDER_SEED);
+            let reorder_s = t.elapsed_s();
+            let cost = match solve_ordered(&spd, &perm, &solver_cfg) {
+                Ok(rep) => reorder_s + rep.total_s(),
+                Err(_) => f64::INFINITY,
+            };
+            table[p][ai] = cost;
+            if cost.is_finite() {
+                worst = worst.max(cost);
+            }
+        }
+        for c in table[p].iter_mut() {
+            if !c.is_finite() {
+                *c = 2.0 * worst.max(1e-6);
+            }
+        }
+    }
+    let best: Vec<f64> = table
+        .iter()
+        .map(|row| row.iter().cloned().fold(f64::INFINITY, f64::min))
+        .collect();
+    // Fixed-policy arm choices for the baselines.
+    let amd_ix = arm_index(ReorderAlgorithm::Amd).expect("AMD is an arm");
+    let offline_ix: Vec<usize> = pop
+        .iter()
+        .map(|m| {
+            let f = features::extract(m);
+            let label = forest.predict(&normalizer.transform_row(&f));
+            arm_index(ReorderAlgorithm::from_label(label)).expect("labels are arms")
+        })
+        .collect();
+
+    section(&format!(
+        "replay: Zipf(s={ZIPF_S}) trace of {TRACE_LEN} through the learner-enabled engine"
+    ));
+    let engine = ServingEngine::spawn(
+        backend,
+        ServingConfig {
+            plan_cache: CacheConfig {
+                capacity: 256,
+                shards: 8,
+            },
+            reorder_seed: REORDER_SEED,
+            learner: Some(LearnerConfig {
+                online: OnlineConfig {
+                    epsilon: 0.15,
+                    ..OnlineConfig::default()
+                },
+                queue_capacity: 4096,
+                drain: DrainMode::Inband { every: 16 },
+            }),
+            ..ServingConfig::default()
+        },
+    )
+    .expect("engine spawns");
+
+    let zipf = Zipf::new(PATTERNS, ZIPF_S);
+    let mut rng = Rng::new(0x7AFF);
+    let trace: Vec<usize> = (0..TRACE_LEN).map(|_| zipf.sample(&mut rng)).collect();
+
+    let n_windows = TRACE_LEN.div_ceil(WINDOW);
+    let mut win_regret = vec![0.0f64; n_windows];
+    let mut win_requests = vec![0u64; n_windows];
+    let mut win_explored = vec![0u64; n_windows];
+    let mut picks = [0u64; N_ARMS];
+    let (mut learner_regret, mut amd_regret, mut model_regret, mut oracle_total) =
+        (0.0f64, 0.0, 0.0, 0.0);
+
+    for (t, &p) in trace.iter().enumerate() {
+        let r = engine.serve(&pop[p]).expect("replay serve");
+        let ai = arm_index(r.algorithm).expect("served arm is in ARMS");
+        let regret = table[p][ai] - best[p];
+        let w = t / WINDOW;
+        win_regret[w] += regret;
+        win_requests[w] += 1;
+        win_explored[w] += r.explored as u64;
+        picks[ai] += 1;
+        learner_regret += regret;
+        amd_regret += table[p][amd_ix] - best[p];
+        model_regret += table[p][offline_ix[p]] - best[p];
+        oracle_total += best[p];
+        engine.learner().expect("learner enabled").record_regret(regret);
+    }
+    engine.learner().expect("learner enabled").drain_now();
+
+    let mut report = JsonReport::new();
+    report.set("bench", json::s("bench_online"));
+    report.set("patterns", json::num(PATTERNS as f64));
+    report.set("zipf_s", json::num(ZIPF_S));
+    report.set("trace_len", json::num(TRACE_LEN as f64));
+    report.set("window", json::num(WINDOW as f64));
+
+    for w in 0..n_windows {
+        let reqs = win_requests[w].max(1) as f64;
+        println!(
+            "    window {w}: regret {:.4}s over {} reqs ({:.5}s/req) | explored {}",
+            win_regret[w],
+            win_requests[w],
+            win_regret[w] / reqs,
+            win_explored[w],
+        );
+        report.push(json::obj(vec![
+            ("name", json::s(&format!("window_{w}"))),
+            ("window", json::num(w as f64)),
+            ("requests", json::num(win_requests[w] as f64)),
+            ("regret_s", json::num(win_regret[w])),
+            ("regret_per_req_s", json::num(win_regret[w] / reqs)),
+            ("explored", json::num(win_explored[w] as f64)),
+            (
+                "exploited",
+                json::num((win_requests[w] - win_explored[w]) as f64),
+            ),
+        ]));
+    }
+
+    let s = engine.stats();
+    report.set(
+        "picks",
+        json::arr(ARMS.iter().enumerate().map(|(ai, arm)| {
+            json::obj(vec![
+                ("algorithm", json::s(arm.name())),
+                ("picked", json::num(picks[ai] as f64)),
+            ])
+        })),
+    );
+    report.set(
+        "baselines",
+        json::obj(vec![
+            ("oracle_total_s", json::num(oracle_total)),
+            ("amd_regret_s", json::num(amd_regret)),
+            ("model_regret_s", json::num(model_regret)),
+            ("learner_regret_s", json::num(learner_regret)),
+        ]),
+    );
+    report.set(
+        "learner",
+        json::obj(vec![
+            ("decisions", json::num(s.learner.decisions as f64)),
+            ("explored", json::num(s.learner.explored as f64)),
+            ("observations", json::num(s.learner.observations as f64)),
+            ("updates", json::num(s.learner.updates as f64)),
+            ("dropped", json::num(s.learner.dropped as f64)),
+            ("regret_s", json::num(s.learner.regret_s)),
+        ]),
+    );
+    let first = win_regret[0];
+    let last = win_regret[n_windows - 1];
+    report.set("first_window_regret_s", json::num(first));
+    report.set("final_window_regret_s", json::num(last));
+    report.set("regret_improved", json::b(last < first));
+
+    println!(
+        "\n    regret: learner {learner_regret:.4}s | always-AMD {amd_regret:.4}s | \
+         offline model {model_regret:.4}s | oracle total {oracle_total:.4}s"
+    );
+    println!(
+        "    first window {first:.4}s -> final window {last:.4}s (improved: {})",
+        last < first
+    );
+
+    engine.shutdown();
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_online.json".into());
+    match report.write(&out) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\nfailed to write {out}: {e}"),
+    }
+}

@@ -1,0 +1,400 @@
+//! Serving-side online learning tier: the feedback loop between
+//! measured request costs and the next algorithm selection.
+//!
+//! The [`Learner`] owns three things:
+//!
+//! 1. an [`OnlineSelector`] — the seeded contextual bandit from
+//!    [`crate::ml::online`] that scores the 7 reordering algorithms
+//!    against the request's feature vector;
+//! 2. a bounded lock-free [`BoundedQueue`] of [`Observation`]s — the
+//!    serving threads' fire-and-forget feedback channel (full queue ⇒
+//!    the observation is shed and counted, never blocked on);
+//! 3. an updater that drains the queue into the selector's arm models,
+//!    either **in-band** (serving threads drain every N-th offer — no
+//!    extra thread, bounded added work per request) or on a
+//!    **dedicated thread** (the hot path never updates models at all).
+//!
+//! # Exploration gating
+//!
+//! The serving engine consults the learner in two tiers:
+//!
+//! * If the greedy pick's plan is **warm** in the plan cache, it is
+//!   served as-is — no rng draw, no exploration, zero added plan work.
+//! * Only when the greedy pick is plan-cache-**cold** does the engine
+//!   call [`Learner::decide`], which may substitute an exploration arm.
+//!   A cold request pays full symbolic analysis regardless of which
+//!   algorithm runs, so trying a sweep candidate there is nearly free —
+//!   the ROADMAP's gating rule.
+//!
+//! # Offline→online handoff
+//!
+//! The offline model keeps making every initial prediction; the
+//! selector treats that prediction as a width-scaled prior bonus, so an
+//! untrained learner reproduces the offline argmax exactly and measured
+//! evidence takes over per-context as confidence accumulates (see
+//! `crate::ml::online`). `TrainedForest::backend` packages offline
+//! training output into the serving backend that feeds this loop.
+//!
+//! # Regret accounting
+//!
+//! [`LearnerStats::regret_s`] accumulates only through
+//! [`Learner::record_regret`]: replay harnesses (the bench, the tests)
+//! know the oracle-best cost per request and charge the difference;
+//! production traffic has no oracle, so the engine itself never adds
+//! regret.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::features::N_FEATURES;
+use crate::ml::online::{Decision, OnlineConfig, OnlineSelector};
+use crate::reorder::ReorderAlgorithm;
+use crate::util::queue::BoundedQueue;
+
+/// How drained observations reach the arm models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DrainMode {
+    /// Serving threads drain the queue after every `every`-th accepted
+    /// offer. No extra thread; a request occasionally pays one bounded
+    /// O(backlog · d²) drain, never on the warm path's lock-held
+    /// sections.
+    Inband { every: u64 },
+    /// A dedicated updater thread drains on `interval` (and whenever a
+    /// full queue unparks it). The serving threads only ever push.
+    Thread { interval: Duration },
+}
+
+/// Configuration for the serving engine's online learning loop.
+#[derive(Clone, Copy, Debug)]
+pub struct LearnerConfig {
+    /// Bandit knobs (ε, LinUCB α, ridge λ, offline prior, seed).
+    pub online: OnlineConfig,
+    /// Feedback queue capacity (rounded up to a power of two). A full
+    /// queue sheds observations rather than blocking a request.
+    pub queue_capacity: usize,
+    /// Updater placement.
+    pub drain: DrainMode,
+}
+
+impl Default for LearnerConfig {
+    fn default() -> Self {
+        LearnerConfig {
+            online: OnlineConfig::default(),
+            queue_capacity: 1024,
+            drain: DrainMode::Inband { every: 32 },
+        }
+    }
+}
+
+/// One completed request's feedback: what ran, on what context, and
+/// what it actually cost (reorder + factor + solve seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct Observation {
+    pub features: [f64; N_FEATURES],
+    pub algorithm: ReorderAlgorithm,
+    pub measured_s: f64,
+}
+
+/// Counter snapshot of the learning loop, mergeable across replicas for
+/// the router's fleet fold.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LearnerStats {
+    /// True when the engine has a learner at all (a default/zero value
+    /// in `ServingStats` means pure offline serving).
+    pub enabled: bool,
+    /// Cold-path `decide` calls.
+    pub decisions: u64,
+    /// How many of those explored.
+    pub explored: u64,
+    /// Observations accepted into the feedback queue.
+    pub observations: u64,
+    /// Observations shed because the queue was full.
+    pub dropped: u64,
+    /// Observations folded into arm models.
+    pub updates: u64,
+    /// Drain rounds that applied at least one observation.
+    pub drains: u64,
+    /// Accumulated replay regret ([`Learner::record_regret`]).
+    pub regret_s: f64,
+}
+
+impl LearnerStats {
+    /// Element-wise sum (fleet fold across replicas).
+    pub fn merge(&self, other: &LearnerStats) -> LearnerStats {
+        LearnerStats {
+            enabled: self.enabled || other.enabled,
+            decisions: self.decisions + other.decisions,
+            explored: self.explored + other.explored,
+            observations: self.observations + other.observations,
+            dropped: self.dropped + other.dropped,
+            updates: self.updates + other.updates,
+            drains: self.drains + other.drains,
+            regret_s: self.regret_s + other.regret_s,
+        }
+    }
+}
+
+struct LearnerCore {
+    selector: OnlineSelector,
+    queue: BoundedQueue<Observation>,
+    accepted: AtomicU64,
+    dropped: AtomicU64,
+    drains: AtomicU64,
+    /// Single drainer at a time; contenders skip instead of waiting, so
+    /// the in-band cadence hook can never block a serving thread.
+    drain_mutex: Mutex<()>,
+    stop: AtomicBool,
+}
+
+impl LearnerCore {
+    fn drain(&self) -> u64 {
+        let Ok(_guard) = self.drain_mutex.try_lock() else {
+            return 0;
+        };
+        let mut applied = 0u64;
+        while let Some(obs) = self.queue.pop() {
+            self.selector
+                .observe(&obs.features, obs.algorithm, obs.measured_s);
+            applied += 1;
+        }
+        if applied > 0 {
+            self.drains.fetch_add(1, Ordering::Relaxed);
+        }
+        applied
+    }
+}
+
+/// The engine-owned learning loop: selector + feedback queue + updater.
+/// See the module docs for the gating and handoff rules.
+pub struct Learner {
+    core: Arc<LearnerCore>,
+    drain: DrainMode,
+    updater: Option<JoinHandle<()>>,
+}
+
+impl Learner {
+    /// Build the loop (and its updater thread under
+    /// [`DrainMode::Thread`]).
+    pub fn spawn(cfg: LearnerConfig) -> Learner {
+        let core = Arc::new(LearnerCore {
+            selector: OnlineSelector::new(cfg.online),
+            queue: BoundedQueue::new(cfg.queue_capacity),
+            accepted: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            drains: AtomicU64::new(0),
+            drain_mutex: Mutex::new(()),
+            stop: AtomicBool::new(false),
+        });
+        let updater = match cfg.drain {
+            DrainMode::Thread { interval } => {
+                let core = Arc::clone(&core);
+                Some(
+                    std::thread::Builder::new()
+                        .name("smr-learner".into())
+                        .spawn(move || {
+                            while !core.stop.load(Ordering::Acquire) {
+                                core.drain();
+                                std::thread::park_timeout(interval);
+                            }
+                            // final sweep so shutdown loses nothing
+                            core.drain();
+                        })
+                        .expect("spawn learner updater thread"),
+                )
+            }
+            DrainMode::Inband { .. } => None,
+        };
+        Learner {
+            core,
+            drain: cfg.drain,
+            updater,
+        }
+    }
+
+    /// The warm-path pick: pure exploitation, no rng draw.
+    pub fn greedy(
+        &self,
+        features: &[f64; N_FEATURES],
+        offline: ReorderAlgorithm,
+    ) -> ReorderAlgorithm {
+        self.core.selector.greedy(features, offline)
+    }
+
+    /// The cold-path pick: ε-greedy over the optimistic score.
+    pub fn decide(&self, features: &[f64; N_FEATURES], offline: ReorderAlgorithm) -> Decision {
+        self.core.selector.decide(features, offline)
+    }
+
+    /// Fire-and-forget feedback from a completed request. Never blocks:
+    /// a full queue sheds (counted), and the in-band cadence drain is
+    /// skipped if another thread already holds the drain lock.
+    pub fn offer(&self, obs: Observation) {
+        if self.core.queue.push(obs).is_ok() {
+            let n = self.core.accepted.fetch_add(1, Ordering::Relaxed) + 1;
+            if let DrainMode::Inband { every } = self.drain {
+                if every > 0 && n % every == 0 {
+                    self.core.drain();
+                }
+            }
+        } else {
+            self.core.dropped.fetch_add(1, Ordering::Relaxed);
+            // a full queue means the updater fell behind — nudge it
+            if let Some(h) = &self.updater {
+                h.thread().unpark();
+            }
+        }
+    }
+
+    /// Drain everything queued right now into the arm models; returns
+    /// how many observations were applied. Replay harnesses call this
+    /// to reach quiescence before asserting on counters.
+    pub fn drain_now(&self) -> u64 {
+        self.core.drain()
+    }
+
+    /// Charge replay regret (see module docs — harness-only).
+    pub fn record_regret(&self, regret_s: f64) {
+        self.core.selector.record_regret(regret_s);
+    }
+
+    /// Direct access to the bandit (arm inspection in tests/benches).
+    pub fn selector(&self) -> &OnlineSelector {
+        &self.core.selector
+    }
+
+    pub fn stats(&self) -> LearnerStats {
+        let snap = self.core.selector.snapshot();
+        LearnerStats {
+            enabled: true,
+            decisions: snap.decisions,
+            explored: snap.explored,
+            observations: self.core.accepted.load(Ordering::Relaxed),
+            dropped: self.core.dropped.load(Ordering::Relaxed),
+            updates: snap.updates,
+            drains: self.core.drains.load(Ordering::Relaxed),
+            regret_s: snap.regret_s,
+        }
+    }
+
+    fn stop_updater(&mut self) {
+        self.core.stop.store(true, Ordering::Release);
+        if let Some(handle) = self.updater.take() {
+            handle.thread().unpark();
+            let _ = handle.join();
+        }
+    }
+
+    /// Stop the updater thread (if any) after a final drain.
+    pub fn shutdown(mut self) {
+        self.stop_updater();
+    }
+}
+
+impl Drop for Learner {
+    fn drop(&mut self) {
+        self.stop_updater();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::online::ARMS;
+    use std::time::Instant;
+
+    fn obs(i: u64) -> Observation {
+        Observation {
+            features: [i as f64 + 1.0; N_FEATURES],
+            algorithm: ARMS[(i % ARMS.len() as u64) as usize],
+            measured_s: 1e-3 * (1 + i % 5) as f64,
+        }
+    }
+
+    #[test]
+    fn inband_cadence_drains_every_nth_offer() {
+        let l = Learner::spawn(LearnerConfig {
+            queue_capacity: 256,
+            drain: DrainMode::Inband { every: 10 },
+            ..Default::default()
+        });
+        for i in 0..9 {
+            l.offer(obs(i));
+        }
+        assert_eq!(l.stats().updates, 0, "below the cadence: no drain yet");
+        l.offer(obs(9));
+        let s = l.stats();
+        assert_eq!(s.updates, 10, "10th offer drains the backlog");
+        assert_eq!(s.observations, 10);
+        assert_eq!(s.dropped, 0);
+        assert_eq!(s.drains, 1);
+        l.shutdown();
+    }
+
+    #[test]
+    fn overflow_sheds_and_counts_instead_of_blocking() {
+        let l = Learner::spawn(LearnerConfig {
+            queue_capacity: 8,
+            drain: DrainMode::Inband { every: u64::MAX },
+            ..Default::default()
+        });
+        for i in 0..20 {
+            l.offer(obs(i));
+        }
+        let s = l.stats();
+        assert_eq!(s.observations, 8);
+        assert_eq!(s.dropped, 12);
+        assert_eq!(l.drain_now(), 8);
+        assert_eq!(l.stats().updates, 8);
+    }
+
+    #[test]
+    fn thread_mode_applies_in_the_background_and_joins_on_shutdown() {
+        let l = Learner::spawn(LearnerConfig {
+            queue_capacity: 256,
+            drain: DrainMode::Thread {
+                interval: Duration::from_millis(1),
+            },
+            ..Default::default()
+        });
+        for i in 0..100 {
+            l.offer(obs(i));
+        }
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while l.stats().updates < 100 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let s = l.stats();
+        assert_eq!(s.updates, 100, "updater thread must drain all offers");
+        assert_eq!(s.observations, 100);
+        l.shutdown(); // must join, not hang
+    }
+
+    #[test]
+    fn stats_merge_sums_fleetwide() {
+        let a = LearnerStats {
+            enabled: true,
+            decisions: 3,
+            explored: 1,
+            observations: 10,
+            dropped: 2,
+            updates: 8,
+            drains: 4,
+            regret_s: 0.25,
+        };
+        let b = LearnerStats {
+            decisions: 7,
+            observations: 5,
+            updates: 5,
+            ..Default::default()
+        };
+        let m = a.merge(&b);
+        assert!(m.enabled);
+        assert_eq!(m.decisions, 10);
+        assert_eq!(m.observations, 15);
+        assert_eq!(m.updates, 13);
+        assert_eq!(m.dropped, 2);
+        assert!((m.regret_s - 0.25).abs() < 1e-12);
+    }
+}

@@ -14,9 +14,16 @@
 //!   shard routing (a pattern's plans live on exactly one replica),
 //!   bounded per-replica admission with reject/spill/block overload
 //!   policies, and fleet-wide stat folding.
+//! * [`learner`] — the online learning loop inside the serving engine:
+//!   a seeded contextual bandit (`ml::online`) warm-started from the
+//!   offline model, fed measured per-request costs through a bounded
+//!   lock-free feedback queue, with ε exploration gated to
+//!   plan-cache-cold requests.
 //! * [`trainer`] — end-to-end training orchestration: dataset → grid
 //!   search over the classical models (and the AOT MLP variants) →
-//!   fitted predictor.
+//!   fitted predictor. `TrainedForest::backend` is the offline→online
+//!   handoff: it packages the fitted predictor as the serving backend
+//!   whose argmax seeds the learner's prior.
 //!
 //! ## Serving architecture
 //!
@@ -46,12 +53,14 @@
 //!   live in pooled `solver::NumericWorkspace` buffers. Steady-state
 //!   requests touch the allocator only for the factor output itself.
 
+pub mod learner;
 pub mod pipeline;
 pub mod router;
 pub mod service;
 pub mod serving;
 pub mod trainer;
 
+pub use learner::{DrainMode, Learner, LearnerConfig, LearnerStats, Observation};
 pub use pipeline::{PipelineReport, SelectionPipeline};
 pub use router::{
     OverloadPolicy, RouterConfig, RouterError, RouterReport, RouterStats, ShardRouter,

@@ -38,6 +38,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::Result;
 
+use super::learner::LearnerStats;
 use super::service::Backend;
 use super::serving::{ServingConfig, ServingEngine, ServingReport, ServingStats};
 use crate::sparse::{CsrMatrix, PatternKey};
@@ -238,6 +239,19 @@ impl RouterStats {
                 acc.merge(&r.serving.latency.e2e)
             })
     }
+
+    /// Fleet-wide online-learner fold: per-replica `LearnerStats`
+    /// summed. Each replica's bandit learns from its own shard's
+    /// traffic (shard routing keeps a pattern's observations on one
+    /// replica, so per-replica models see coherent contexts); this fold
+    /// is the fleet observability view, not a shared model.
+    pub fn learner(&self) -> LearnerStats {
+        self.replicas
+            .iter()
+            .fold(LearnerStats::default(), |acc, r| {
+                acc.merge(&r.serving.learner)
+            })
+    }
 }
 
 /// The traffic tier: N replica [`ServingEngine`]s behind rendezvous
@@ -293,6 +307,15 @@ impl ShardRouter {
     /// This fleet's home replica for a key.
     pub fn home_of(&self, key: &PatternKey) -> usize {
         route(key, self.replicas.len())
+    }
+
+    /// Replica `i`'s admission gate — operational introspection
+    /// (occupancy, rejection counters) and deterministic overload
+    /// testing: a held `GatePass` occupies a seat exactly like an
+    /// in-flight request, so tests can saturate a replica without
+    /// racing real traffic.
+    pub fn gate(&self, replica: usize) -> &AdmissionGate {
+        &self.replicas[replica].gate
     }
 
     /// Serve one request: fingerprint → home → admission (per policy)

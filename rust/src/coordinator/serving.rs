@@ -84,6 +84,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use super::learner::{Learner, LearnerConfig, LearnerStats, Observation};
 use super::service::{Backend, BatcherConfig, PredictionService, ServiceStatsSnapshot};
 use crate::features;
 use crate::reorder::cache::{CacheConfig, CacheStats, Fetch, OrderingCache};
@@ -140,6 +141,12 @@ pub struct ServingConfig {
     pub reorder_seed: u64,
     /// Warm reorder workspaces kept parked between requests.
     pub max_idle_workspaces: usize,
+    /// Online learning loop (`None` = pure offline serving, the
+    /// default): a seeded contextual bandit that can override the
+    /// offline model's pick and learns from every request's measured
+    /// reorder+factor+solve time. Exploration is gated to
+    /// plan-cache-cold requests — see [`super::learner`].
+    pub learner: Option<LearnerConfig>,
 }
 
 impl Default for ServingConfig {
@@ -152,6 +159,7 @@ impl Default for ServingConfig {
             solver: SolverConfig::default(),
             reorder_seed: 0xDA7A, // same stream as SelectionPipeline
             max_idle_workspaces: crate::util::pool::default_workers() + 1,
+            learner: None,
         }
     }
 }
@@ -179,6 +187,10 @@ pub struct ServingReport {
     /// traversal (1 = served alone; ≥ 2 = coalesced, and
     /// `solve.factor_s` is the traversal's wall time over `batch_k`).
     pub batch_k: usize,
+    /// The online learner's ε branch picked this algorithm (always
+    /// false without a learner, and only ever true on plan-cache-cold
+    /// requests — the exploration gate).
+    pub explored: bool,
     /// The ordering itself (shared with the plan and ordering caches).
     pub permutation: Arc<Permutation>,
     /// The downstream numeric solve (its `reorder_s` mirrors the field
@@ -250,6 +262,9 @@ pub struct ServingStats {
     pub fronts: crate::solver::arena::ArenaStats,
     /// Prediction-service counters (requests/batches/mean batch).
     pub service: ServiceStatsSnapshot,
+    /// Online-learning-loop counters (all-zero default when the engine
+    /// runs without a learner; `enabled` distinguishes).
+    pub learner: LearnerStats,
     /// Per-stage latency distributions (p50/p99/p999 via
     /// [`HistSnapshot::quantile`]) over every request served so far.
     pub latency: StageLatencies,
@@ -364,6 +379,8 @@ pub struct ServingEngine {
     /// its leader holds the window open; joiners racing the removal of a
     /// sealed group see `closed` and retry.
     batch_slots: Mutex<HashMap<PlanKey, Arc<BatchSlot>>>,
+    /// The online learning loop (`None` = pure offline serving).
+    learner: Option<Learner>,
     reorder_seed: u64,
     requests: AtomicU64,
     /// Requests currently inside `serve`/`serve_batch` (any stage).
@@ -436,11 +453,13 @@ impl BatchSlot {
 /// but not including — the numeric solve).
 struct Routed {
     algorithm: ReorderAlgorithm,
+    feats: [f64; features::N_FEATURES],
     feature_s: f64,
     predict_s: f64,
     reorder_s: f64,
     plan_hit: bool,
     plan_coalesced: bool,
+    explored: bool,
     plan: Arc<SymbolicFactorization>,
     key: PlanKey,
 }
@@ -465,6 +484,7 @@ impl ServingEngine {
             solver: cfg.solver,
             batch: cfg.batch,
             batch_slots: Mutex::new(HashMap::new()),
+            learner: cfg.learner.map(Learner::spawn),
             reorder_seed: cfg.reorder_seed,
             requests: AtomicU64::new(0),
             in_flight: AtomicU64::new(0),
@@ -500,7 +520,25 @@ impl ServingEngine {
         let feature_s = t_f.elapsed_s();
 
         let t_p = Timer::start();
-        let algorithm = self.service.predict(&feats)?;
+        let offline = self.service.predict(&feats)?;
+        // Online override: the learner's greedy pick serves warm traffic
+        // as-is (no rng draw, no plan work when its plan is resident);
+        // only a plan-cache-cold greedy pick opens the ε exploration
+        // branch, where a sweep candidate costs one symbolic analysis
+        // the request was paying anyway. See `coordinator::learner`.
+        let (algorithm, explored) = match &self.learner {
+            Some(learner) => {
+                let greedy = learner.greedy(&feats, offline);
+                let greedy_key = PlanKey::of(a, greedy, self.reorder_seed, &self.solver);
+                if self.plans.contains(&greedy_key) {
+                    (greedy, false)
+                } else {
+                    let d = learner.decide(&feats, offline);
+                    (d.algorithm, d.explored)
+                }
+            }
+            None => (offline, false),
+        };
         let predict_s = t_p.elapsed_s();
 
         let t_r = Timer::start();
@@ -518,11 +556,13 @@ impl ServingEngine {
         let reorder_s = t_r.elapsed_s();
         Ok(Routed {
             algorithm,
+            feats,
             feature_s,
             predict_s,
             reorder_s,
             plan_hit: fetch.is_hit(),
             plan_coalesced: fetch == Fetch::Coalesced,
+            explored,
             plan,
             key,
         })
@@ -538,8 +578,23 @@ impl ServingEngine {
             plan_hit: r.plan_hit,
             plan_coalesced: r.plan_coalesced,
             batch_k,
+            explored: r.explored,
             permutation: r.plan.perm.clone(),
             solve,
+        }
+    }
+
+    /// Fire-and-forget feedback: one measured observation per completed
+    /// request into the learner's lock-free queue. The measured cost is
+    /// what selection should minimize — reorder (symbolic, ≈0 warm) +
+    /// factor + solve.
+    fn feedback(&self, feats: [f64; features::N_FEATURES], report: &ServingReport) {
+        if let Some(learner) = &self.learner {
+            learner.offer(Observation {
+                features: feats,
+                algorithm: report.algorithm,
+                measured_s: report.reorder_s + report.solve.factor_s + report.solve.solve_s,
+            });
         }
     }
 
@@ -565,8 +620,10 @@ impl ServingEngine {
                 .map_err(anyhow::Error::msg)?;
             (solve, 1)
         };
+        let feats = r.feats;
         let report = Self::report(r, solve, batch_k);
         self.hists.observe(&report);
+        self.feedback(feats, &report);
         Ok(report)
     }
 
@@ -628,8 +685,10 @@ impl ServingEngine {
             .zip(solves)
             .map(|(r, s)| {
                 let (solve, batch_k) = s.expect("every group member was solved");
+                let feats = r.feats;
                 let report = Self::report(r, solve, batch_k);
                 self.hists.observe(&report);
+                self.feedback(feats, &report);
                 report
             })
             .collect())
@@ -784,12 +843,27 @@ impl ServingEngine {
             numeric: self.numeric.stats(),
             fronts: crate::solver::arena::stats(),
             service: self.service.stats.snapshot(),
+            learner: self
+                .learner
+                .as_ref()
+                .map(|l| l.stats())
+                .unwrap_or_default(),
             latency: self.hists.snapshot(),
         }
     }
 
-    /// Shut the prediction service's runtime thread down and join it.
+    /// The online learner, when one is configured (replay harnesses use
+    /// this to force drains and charge oracle regret).
+    pub fn learner(&self) -> Option<&Learner> {
+        self.learner.as_ref()
+    }
+
+    /// Shut the prediction service's runtime thread down and join it
+    /// (and the learner's updater thread, when one exists).
     pub fn shutdown(self) {
+        if let Some(learner) = self.learner {
+            learner.shutdown();
+        }
         self.service.shutdown();
     }
 }

@@ -25,6 +25,20 @@ pub struct TrainedForest {
     pub grid: GridResult,
 }
 
+impl TrainedForest {
+    /// Offline→online handoff: package the fitted predictor as a
+    /// serving [`Backend`] (cloneable per replica). The backend's
+    /// argmax is exactly what the online learner treats as its prior
+    /// arm — offline training output flows into live serving through
+    /// this one seam, with no weight translation.
+    pub fn backend(&self) -> super::service::Backend {
+        super::service::Backend::Forest {
+            normalizer: self.normalizer.clone(),
+            forest: self.forest.clone(),
+        }
+    }
+}
+
 /// Grid-search + refit the Random Forest on the given training rows.
 pub fn train_forest(
     dataset: &Dataset,
@@ -193,6 +207,27 @@ mod tests {
         assert!(acc > 0.3, "test accuracy {acc}");
         assert!(tf.grid.best_cv_accuracy > 0.3);
         assert_eq!(tf.grid.all.len(), 16);
+    }
+
+    #[test]
+    fn backend_handoff_preserves_the_offline_argmax() {
+        let ds = mini();
+        let (tr, _) = ds.split(0.8, 3);
+        let tf = train_forest(&ds, &tr, Method::Standard, 1);
+        let backend = tf.backend();
+        match backend {
+            super::super::service::Backend::Forest { normalizer, forest } => {
+                // the handed-off pair must predict exactly what the
+                // trained pair predicts on every dataset row
+                for row in ds.features().iter() {
+                    assert_eq!(
+                        forest.predict(&normalizer.transform_row(row)),
+                        tf.forest.predict(&tf.normalizer.transform_row(row)),
+                    );
+                }
+            }
+            _ => panic!("forest handoff must produce a forest backend"),
+        }
     }
 
     #[test]

@@ -12,6 +12,11 @@
 //! ([`normalize`]), stratified k-fold cross-validation ([`kfold`]), and
 //! exhaustive grid search ([`gridsearch`]) scored by accuracy
 //! ([`metrics`]).
+//!
+//! Beyond the paper's offline training, [`online`] adds the incremental
+//! half: a seeded contextual bandit (per-arm Sherman–Morrison ridge
+//! regression, LinUCB/ε-greedy selection) that warm-starts from the
+//! offline model's argmax and learns from measured serving costs.
 
 pub mod forest;
 pub mod gridsearch;
@@ -21,6 +26,7 @@ pub mod logreg;
 pub mod metrics;
 pub mod naive_bayes;
 pub mod normalize;
+pub mod online;
 pub mod svm;
 pub mod tree;
 

@@ -1,0 +1,561 @@
+//! Online contextual bandit over the paper's reordering algorithms —
+//! the incremental half of the selection model.
+//!
+//! The offline classifiers in this crate learn from sweep labels; the
+//! serving engine measures true per-request reorder+factor+solve times,
+//! which *are* labels. [`OnlineSelector`] closes that loop: a contextual
+//! bandit over the 7-algorithm [`ARMS`] set with the serving feature
+//! vector as context, warm-started from the offline model and updated
+//! incrementally from measured costs.
+//!
+//! # Model
+//!
+//! Each arm (algorithm) owns a [`RidgeModel`]: an incremental ridge
+//! regression from context `z` to log-cost `y = ln(measured seconds)`,
+//! maintained in closed form via the Sherman–Morrison identity (the
+//! inverse design matrix `A⁻¹` is rank-1-updated per observation, so an
+//! update is O(d²) with d = [`CONTEXT_DIM`], no refit ever). The context
+//! is the serving feature vector passed through `ln(1+|f|)` plus a bias
+//! term — the raw features span many orders of magnitude (n, nnz,
+//! bandwidth), and log-compression keeps the linear model numerically
+//! tame. Log-cost targets make the regression scale-free; selection only
+//! compares costs, and `ln` is monotone, so the argmin is unchanged.
+//!
+//! # Selection
+//!
+//! Scores are **costs** — lower wins. For a context `z` with offline
+//! prediction `p`, arm `a` scores
+//!
+//! ```text
+//! score(a) = ŷ_a(z) − (optimism + prior·[a == p]) · width_a(z)
+//! ```
+//!
+//! where `width_a(z) = √(zᵀA_a⁻¹z)` is the LinUCB confidence width.
+//! Two regimes share this formula:
+//!
+//! * [`OnlineSelector::greedy`] uses `optimism = 0`: pure exploitation
+//!   plus the **offline prior** — the width-scaled bonus on the arm the
+//!   offline model picked. On a fresh selector every arm predicts 0 with
+//!   equal width, so the prior term alone decides and the greedy pick
+//!   **equals the offline argmax** — the offline→online handoff needs no
+//!   weight translation. As an arm accumulates data near `z` its width
+//!   shrinks and measured evidence takes over smoothly.
+//! * [`OnlineSelector::decide`] is the cold-path variant: with
+//!   probability ε it explores a uniformly random arm, otherwise it
+//!   scores with `optimism = alpha` (LinUCB: under-observed arms look
+//!   cheap, so cold traffic systematically tries them). The serving
+//!   engine only calls `decide` when the greedy pick's plan is
+//!   cache-cold — see `coordinator::learner` for the gating rule.
+//!
+//! # Determinism
+//!
+//! All randomness flows through one seeded [`Rng`] owned by the
+//! selector; a fixed seed and a fixed call sequence reproduce the exact
+//! decision sequence bit-for-bit (`tests/prop_online_selector.rs`).
+
+use crate::features::N_FEATURES;
+use crate::reorder::ReorderAlgorithm;
+use crate::util::rng::Rng;
+use std::sync::Mutex;
+
+/// The bandit's arms: the paper's full 7-algorithm comparison set.
+pub const ARMS: [ReorderAlgorithm; 7] = ReorderAlgorithm::PAPER_SET;
+
+/// Number of arms.
+pub const N_ARMS: usize = ARMS.len();
+
+/// Context dimension: a constant bias plus the log-compressed serving
+/// feature vector.
+pub const CONTEXT_DIM: usize = N_FEATURES + 1;
+
+/// Arm index of `algorithm` within [`ARMS`], if it is a paper arm.
+pub fn arm_index(algorithm: ReorderAlgorithm) -> Option<usize> {
+    ARMS.iter().position(|a| *a == algorithm)
+}
+
+/// Map a serving feature vector into bandit context space:
+/// `[1, ln(1+|f_0|), …, ln(1+|f_11|)]`.
+pub fn context(features: &[f64; N_FEATURES]) -> [f64; CONTEXT_DIM] {
+    let mut z = [0.0; CONTEXT_DIM];
+    z[0] = 1.0;
+    for (j, &f) in features.iter().enumerate() {
+        let v = if f.is_finite() { f.abs() } else { 0.0 };
+        z[j + 1] = (1.0 + v).ln();
+    }
+    z
+}
+
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// The incremental-model surface the selector needs from a per-arm
+/// regressor: predict a cost at a context, quantify how unsure that
+/// prediction is, and fold one labeled observation in — all without a
+/// refit.
+pub trait OnlineModel: Send {
+    /// Predicted target at context `z`.
+    fn predict(&self, z: &[f64]) -> f64;
+
+    /// Confidence width at `z` (large where the model has seen little
+    /// data, shrinking as observations accumulate nearby).
+    fn width(&self, z: &[f64]) -> f64;
+
+    /// Incorporate one `(context, target)` observation.
+    fn observe(&mut self, z: &[f64], y: f64);
+
+    /// Observations incorporated so far.
+    fn observations(&self) -> u64;
+}
+
+/// Incremental ridge regression via Sherman–Morrison: maintains
+/// `A⁻¹ = (λI + Σ z zᵀ)⁻¹` and `b = Σ y·z` directly, with
+/// `θ = A⁻¹ b` refreshed per update. O(d²) per observation, O(d²)
+/// memory, exact (up to float roundoff) — no iterative solver.
+#[derive(Clone, Debug)]
+pub struct RidgeModel {
+    d: usize,
+    /// `A⁻¹`, row-major d×d (symmetric by construction).
+    a_inv: Vec<f64>,
+    /// Accumulated response vector `Σ y·z`.
+    b: Vec<f64>,
+    /// Current coefficients `A⁻¹ b`.
+    theta: Vec<f64>,
+    obs: u64,
+}
+
+impl RidgeModel {
+    /// Fresh model of dimension `d` with ridge strength `lambda`
+    /// (`A⁻¹` starts at `(1/λ)I`, θ at zero).
+    pub fn new(d: usize, lambda: f64) -> RidgeModel {
+        let lambda = lambda.max(1e-9);
+        let mut a_inv = vec![0.0; d * d];
+        for i in 0..d {
+            a_inv[i * d + i] = 1.0 / lambda;
+        }
+        RidgeModel {
+            d,
+            a_inv,
+            b: vec![0.0; d],
+            theta: vec![0.0; d],
+            obs: 0,
+        }
+    }
+
+    /// `A⁻¹ · z`.
+    fn mat_vec(&self, z: &[f64]) -> Vec<f64> {
+        (0..self.d)
+            .map(|i| dot(&self.a_inv[i * self.d..(i + 1) * self.d], z))
+            .collect()
+    }
+}
+
+impl OnlineModel for RidgeModel {
+    fn predict(&self, z: &[f64]) -> f64 {
+        dot(&self.theta, z)
+    }
+
+    fn width(&self, z: &[f64]) -> f64 {
+        let az = self.mat_vec(z);
+        dot(z, &az).max(0.0).sqrt()
+    }
+
+    fn observe(&mut self, z: &[f64], y: f64) {
+        let az = self.mat_vec(z);
+        let denom = 1.0 + dot(z, &az);
+        // Sherman–Morrison: (A + zzᵀ)⁻¹ = A⁻¹ − (A⁻¹z)(A⁻¹z)ᵀ / (1 + zᵀA⁻¹z)
+        for i in 0..self.d {
+            let row = &mut self.a_inv[i * self.d..(i + 1) * self.d];
+            let ai = az[i] / denom;
+            for (j, r) in row.iter_mut().enumerate() {
+                *r -= ai * az[j];
+            }
+        }
+        for (bj, &zj) in self.b.iter_mut().zip(z) {
+            *bj += y * zj;
+        }
+        self.theta = self.mat_vec(&self.b.clone());
+        self.obs += 1;
+    }
+
+    fn observations(&self) -> u64 {
+        self.obs
+    }
+}
+
+/// Tuning knobs for [`OnlineSelector`].
+#[derive(Clone, Copy, Debug)]
+pub struct OnlineConfig {
+    /// ε-greedy exploration probability on [`OnlineSelector::decide`]
+    /// calls (the serving engine gates those to plan-cache-cold
+    /// requests, where trying a candidate is nearly free).
+    pub epsilon: f64,
+    /// LinUCB optimism on cold decisions: under-observed arms get a
+    /// `alpha · width` cost discount, directing cold traffic at them.
+    pub alpha: f64,
+    /// Ridge strength λ for each arm's [`RidgeModel`].
+    pub ridge: f64,
+    /// Offline-prior bonus: the offline model's pick gets a
+    /// `prior · width` discount, so an untrained selector reproduces
+    /// the offline argmax and measured evidence takes over only as
+    /// widths shrink.
+    pub prior: f64,
+    /// Seed for the selector's decision stream.
+    pub seed: u64,
+}
+
+impl Default for OnlineConfig {
+    fn default() -> Self {
+        OnlineConfig {
+            epsilon: 0.1,
+            alpha: 0.5,
+            ridge: 1.0,
+            prior: 1.0,
+            seed: 0x0BA4D17,
+        }
+    }
+}
+
+/// One selection outcome.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Decision {
+    /// The algorithm to run.
+    pub algorithm: ReorderAlgorithm,
+    /// True when this pick came from the ε exploration branch rather
+    /// than the scored argmin.
+    pub explored: bool,
+}
+
+/// Counter snapshot of an [`OnlineSelector`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SelectorSnapshot {
+    /// `decide` calls (cold-path selections).
+    pub decisions: u64,
+    /// How many of those took the ε exploration branch.
+    pub explored: u64,
+    /// Observations folded into arm models.
+    pub updates: u64,
+    /// Accumulated regret in seconds ([`OnlineSelector::record_regret`]).
+    pub regret_s: f64,
+}
+
+struct SelectorState {
+    arms: Vec<RidgeModel>,
+    rng: Rng,
+    decisions: u64,
+    explored: u64,
+    updates: u64,
+    regret_s: f64,
+}
+
+/// Seeded, replayable contextual bandit over [`ARMS`]. Interior
+/// mutability behind one mutex: selection and update are both O(arms·d²)
+/// on tiny dense state, far off the serving hot path's critical
+/// sections. See the module docs for the scoring rule.
+pub struct OnlineSelector {
+    cfg: OnlineConfig,
+    state: Mutex<SelectorState>,
+}
+
+impl OnlineSelector {
+    pub fn new(cfg: OnlineConfig) -> OnlineSelector {
+        OnlineSelector {
+            cfg,
+            state: Mutex::new(SelectorState {
+                arms: (0..N_ARMS)
+                    .map(|_| RidgeModel::new(CONTEXT_DIM, cfg.ridge))
+                    .collect(),
+                rng: Rng::new(cfg.seed),
+                decisions: 0,
+                explored: 0,
+                updates: 0,
+                regret_s: 0.0,
+            }),
+        }
+    }
+
+    pub fn config(&self) -> OnlineConfig {
+        self.cfg
+    }
+
+    /// Scored argmin over arms; ties break toward the lower arm index,
+    /// so scoring is fully deterministic.
+    fn argmin(
+        arms: &[RidgeModel],
+        z: &[f64],
+        offline_arm: Option<usize>,
+        optimism: f64,
+        prior: f64,
+    ) -> usize {
+        let mut best = 0;
+        let mut best_score = f64::INFINITY;
+        for (k, arm) in arms.iter().enumerate() {
+            let w = arm.width(z);
+            let mut score = arm.predict(z) - optimism * w;
+            if Some(k) == offline_arm {
+                score -= prior * w;
+            }
+            if score < best_score {
+                best = k;
+                best_score = score;
+            }
+        }
+        best
+    }
+
+    /// Pure exploitation: no rng draw, no optimism — the pick the warm
+    /// path should serve. Equals `offline`'s argmax on a fresh selector.
+    pub fn greedy(
+        &self,
+        features: &[f64; N_FEATURES],
+        offline: ReorderAlgorithm,
+    ) -> ReorderAlgorithm {
+        let z = context(features);
+        let st = self.state.lock().expect("selector poisoned");
+        ARMS[Self::argmin(&st.arms, &z, arm_index(offline), 0.0, self.cfg.prior)]
+    }
+
+    /// Cold-path selection: ε-greedy over the optimistic (LinUCB)
+    /// score. Draws from the selector's seeded rng, so the decision
+    /// sequence is a pure function of the seed and the call sequence.
+    pub fn decide(&self, features: &[f64; N_FEATURES], offline: ReorderAlgorithm) -> Decision {
+        let z = context(features);
+        let mut st = self.state.lock().expect("selector poisoned");
+        st.decisions += 1;
+        if self.cfg.epsilon > 0.0 && st.rng.chance(self.cfg.epsilon) {
+            st.explored += 1;
+            let k = st.rng.below(N_ARMS);
+            return Decision {
+                algorithm: ARMS[k],
+                explored: true,
+            };
+        }
+        let k = Self::argmin(
+            &st.arms,
+            &z,
+            arm_index(offline),
+            self.cfg.alpha,
+            self.cfg.prior,
+        );
+        Decision {
+            algorithm: ARMS[k],
+            explored: false,
+        }
+    }
+
+    /// Fold one measured observation into `algorithm`'s arm model.
+    /// Targets are log-seconds (clamped away from zero); non-paper
+    /// algorithms are ignored.
+    pub fn observe(
+        &self,
+        features: &[f64; N_FEATURES],
+        algorithm: ReorderAlgorithm,
+        measured_s: f64,
+    ) {
+        let Some(k) = arm_index(algorithm) else {
+            return;
+        };
+        if !measured_s.is_finite() {
+            return;
+        }
+        let z = context(features);
+        let y = measured_s.max(1e-9).ln();
+        let mut st = self.state.lock().expect("selector poisoned");
+        st.arms[k].observe(&z, y);
+        st.updates += 1;
+    }
+
+    /// Accumulate externally computed regret (replay harnesses know the
+    /// oracle-best cost per request; production traffic does not, so
+    /// the serving engine never calls this itself).
+    pub fn record_regret(&self, regret_s: f64) {
+        if !regret_s.is_finite() {
+            return;
+        }
+        let mut st = self.state.lock().expect("selector poisoned");
+        st.regret_s += regret_s.max(0.0);
+    }
+
+    pub fn snapshot(&self) -> SelectorSnapshot {
+        let st = self.state.lock().expect("selector poisoned");
+        SelectorSnapshot {
+            decisions: st.decisions,
+            explored: st.explored,
+            updates: st.updates,
+            regret_s: st.regret_s,
+        }
+    }
+
+    /// Per-arm observation counts, in [`ARMS`] order.
+    pub fn arm_observations(&self) -> [u64; N_ARMS] {
+        let st = self.state.lock().expect("selector poisoned");
+        let mut out = [0u64; N_ARMS];
+        for (o, arm) in out.iter_mut().zip(&st.arms) {
+            *o = arm.observations();
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feats(rng: &mut Rng) -> [f64; N_FEATURES] {
+        let mut f = [0.0; N_FEATURES];
+        for v in f.iter_mut() {
+            *v = rng.range_f64(0.0, 1e5);
+        }
+        f
+    }
+
+    #[test]
+    fn ridge_recovers_a_linear_target() {
+        let mut m = RidgeModel::new(3, 1e-6);
+        let mut rng = Rng::new(11);
+        // y = 2 + 3·z1 − z2
+        for _ in 0..400 {
+            let z = [1.0, rng.range_f64(-2.0, 2.0), rng.range_f64(-2.0, 2.0)];
+            m.observe(&z, 2.0 + 3.0 * z[1] - z[2]);
+        }
+        let probe = [1.0, 0.5, -1.5];
+        let want = 2.0 + 3.0 * 0.5 + 1.5;
+        assert!(
+            (m.predict(&probe) - want).abs() < 1e-3,
+            "predict {} want {want}",
+            m.predict(&probe)
+        );
+        assert_eq!(m.observations(), 400);
+    }
+
+    #[test]
+    fn sherman_morrison_matches_the_explicit_inverse() {
+        // build A = λI + Σ zzᵀ explicitly and check A · A⁻¹ ≈ I
+        let d = 4;
+        let lambda = 0.7;
+        let mut m = RidgeModel::new(d, lambda);
+        let mut rng = Rng::new(5);
+        let mut a = vec![0.0; d * d];
+        for i in 0..d {
+            a[i * d + i] = lambda;
+        }
+        for _ in 0..25 {
+            let z: Vec<f64> = (0..d).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            m.observe(&z, rng.normal());
+            for i in 0..d {
+                for j in 0..d {
+                    a[i * d + j] += z[i] * z[j];
+                }
+            }
+        }
+        for i in 0..d {
+            for j in 0..d {
+                let mut prod = 0.0;
+                for k in 0..d {
+                    prod += a[i * d + k] * m.a_inv[k * d + j];
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (prod - want).abs() < 1e-8,
+                    "(A·A⁻¹)[{i}][{j}] = {prod}, want {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn width_shrinks_with_observations() {
+        let mut m = RidgeModel::new(CONTEXT_DIM, 1.0);
+        let z = context(&[100.0; N_FEATURES]);
+        let before = m.width(&z);
+        for _ in 0..10 {
+            m.observe(&z, -3.0);
+        }
+        let after = m.width(&z);
+        assert!(
+            after < before * 0.5,
+            "width should collapse on repeated contexts: {before} -> {after}"
+        );
+    }
+
+    #[test]
+    fn fresh_selector_greedy_equals_the_offline_pick() {
+        let sel = OnlineSelector::new(OnlineConfig::default());
+        let mut rng = Rng::new(21);
+        for _ in 0..50 {
+            let f = feats(&mut rng);
+            for &offline in ARMS.iter() {
+                assert_eq!(sel.greedy(&f, offline), offline);
+            }
+        }
+    }
+
+    #[test]
+    fn evidence_overrides_the_offline_prior() {
+        let sel = OnlineSelector::new(OnlineConfig {
+            epsilon: 0.0,
+            ..Default::default()
+        });
+        let mut rng = Rng::new(31);
+        let f = feats(&mut rng);
+        let offline = ARMS[1];
+        let cheap = ARMS[4];
+        // hammer in evidence: `cheap` is 100× faster than the offline
+        // pick at this context
+        for _ in 0..60 {
+            sel.observe(&f, cheap, 1e-4);
+            sel.observe(&f, offline, 1e-2);
+        }
+        assert_eq!(
+            sel.greedy(&f, offline),
+            cheap,
+            "measured costs must beat the offline prior once widths shrink"
+        );
+        let d = sel.decide(&f, offline);
+        assert!(!d.explored);
+        assert_eq!(d.algorithm, cheap);
+    }
+
+    #[test]
+    fn decision_stream_is_seed_deterministic() {
+        let cfg = OnlineConfig {
+            epsilon: 0.4,
+            ..Default::default()
+        };
+        let run = || {
+            let sel = OnlineSelector::new(cfg);
+            let mut rng = Rng::new(77);
+            (0..100)
+                .map(|i| {
+                    let f = feats(&mut rng);
+                    let d = sel.decide(&f, ARMS[i % N_ARMS]);
+                    sel.observe(&f, d.algorithm, 1e-3 * (1 + i % 7) as f64);
+                    d
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run(), "same seed must replay bit-identically");
+    }
+
+    #[test]
+    fn snapshot_counters_track_calls() {
+        let sel = OnlineSelector::new(OnlineConfig {
+            epsilon: 1.0,
+            ..Default::default()
+        });
+        let f = [10.0; N_FEATURES];
+        for _ in 0..5 {
+            let d = sel.decide(&f, ARMS[0]);
+            assert!(d.explored, "epsilon=1 must always explore");
+        }
+        sel.observe(&f, ARMS[2], 0.01);
+        sel.record_regret(0.5);
+        sel.record_regret(-1.0); // clamped to 0
+        let s = sel.snapshot();
+        assert_eq!(s.decisions, 5);
+        assert_eq!(s.explored, 5);
+        assert_eq!(s.updates, 1);
+        assert!((s.regret_s - 0.5).abs() < 1e-12);
+        assert_eq!(sel.arm_observations()[2], 1);
+    }
+}

@@ -106,6 +106,13 @@ impl PlanCache {
         self.inner.get(key)
     }
 
+    /// Uncounted residency probe (no hit/miss accounting, no recency
+    /// stamp) — the warm/cold question the online learner's exploration
+    /// gate asks on every request.
+    pub fn contains(&self, key: &PlanKey) -> bool {
+        self.inner.contains(key)
+    }
+
     /// Idempotent insert (see `util::cache`): the resident entry wins.
     pub fn insert(
         &self,

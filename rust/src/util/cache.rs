@@ -303,6 +303,16 @@ impl<K: Hash + Eq + Copy, V> ShardedCache<K, V> {
         shard.get(key).map(|e| e.value.clone())
     }
 
+    /// Uncounted residency probe: no hit/miss accounting, no recency
+    /// stamp, no value clone. The serving engine's exploration gate asks
+    /// "is this key warm?" on every request, and that question must not
+    /// skew the cache counters the serving stats report (momentary under
+    /// concurrency, like every uncounted read).
+    pub fn contains(&self, key: &K) -> bool {
+        let shard = self.shard(key).lock().expect("cache shard poisoned");
+        shard.contains_key(key)
+    }
+
     /// The serving primitive: one counted lookup; on miss, compute
     /// *outside* every lock and insert — with **in-flight dedup**:
     /// concurrent misses for the same key elect one leader, everyone

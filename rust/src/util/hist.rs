@@ -382,6 +382,46 @@ mod tests {
     }
 
     #[test]
+    fn empty_snapshot_quantiles_are_zero_across_the_whole_range() {
+        let s = LatencyHist::new().snapshot();
+        for q in [0.0, 1e-9, 0.25, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            assert_eq!(s.quantile(q), 0.0, "quantile({q}) on empty");
+        }
+        // out-of-range q must clamp, not panic, and still report 0
+        assert_eq!(s.quantile(-3.0), 0.0);
+        assert_eq!(s.quantile(17.0), 0.0);
+        // merging empties stays empty
+        let m = s.merge(&HistSnapshot::default());
+        assert!(m.is_empty());
+        assert_eq!(m.quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn single_sample_quantiles_all_collapse_to_its_bucket() {
+        let h = LatencyHist::new();
+        let v_ns = 12_345u64;
+        h.record_ns(v_ns);
+        let s = h.snapshot();
+        assert_eq!(s.count, 1);
+        assert!(!s.is_empty());
+        let v_s = v_ns as f64 / 1e9;
+        // with one sample, every quantile (including q=0, which clamps
+        // its target to the first sample) must report the same bucket
+        // edge, bracketing the recorded value within bucket resolution
+        let expect = s.quantile(0.5);
+        for q in [0.0, 1e-6, 0.25, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            let est = s.quantile(q);
+            assert_eq!(est, expect, "quantile({q}) differs on single sample");
+            assert!(
+                est >= v_s && est <= v_s * 1.13,
+                "quantile({q}) = {est} outside [{v_s}, {}]",
+                v_s * 1.13
+            );
+        }
+        assert!((s.mean_s() - v_s).abs() < 1e-12, "single-sample mean is exact");
+    }
+
+    #[test]
     fn concurrent_recording_loses_nothing() {
         let h = LatencyHist::new();
         let threads = 4;

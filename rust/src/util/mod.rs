@@ -7,8 +7,9 @@
 //! fixed-width table printer ([`table`]), a micro-benchmark harness used
 //! by `cargo bench` ([`bench`]), a scoped thread-pool `parallel_map`
 //! ([`pool`]), a generic bounded sharded cache with in-flight miss
-//! dedup ([`cache`]), log-bucketed latency histograms ([`hist`]), and
-//! randomized property-test helpers ([`prop`]).
+//! dedup ([`cache`]), log-bucketed latency histograms ([`hist`]), a
+//! bounded lock-free MPMC queue ([`queue`]), and randomized
+//! property-test helpers ([`prop`]).
 
 pub mod bench;
 pub mod cache;
@@ -16,6 +17,7 @@ pub mod hist;
 pub mod json;
 pub mod pool;
 pub mod prop;
+pub mod queue;
 pub mod rng;
 pub mod stats;
 pub mod table;

@@ -1,0 +1,329 @@
+//! Bounded lock-free MPMC queue (Vyukov's array queue) — the feedback
+//! channel between the serving hot path and the online learner.
+//!
+//! The serving engine emits one observation per completed request from
+//! arbitrarily many threads; the learner drains them on a cadence (or a
+//! dedicated updater thread). The channel between them must never make
+//! a request wait, so it is:
+//!
+//! * **Lock-free.** Producers and consumers synchronize through one
+//!   per-slot sequence number (acquire/release) plus a CAS on their
+//!   position counter — no mutex, no condvar, no parking on the
+//!   producer side ever.
+//! * **Bounded, shedding.** Capacity is fixed at construction (rounded
+//!   up to a power of two). A full queue **rejects** the push instead of
+//!   blocking or growing: feedback observations are advisory — dropping
+//!   one under burst load costs a little learning signal, whereas
+//!   blocking would put the updater's backlog on the request's critical
+//!   path. Drops are counted so the loss is visible
+//!   ([`BoundedQueue::stats`]).
+//! * **Conservation-countable.** `pushed`, `dropped`, and `popped` are
+//!   lock-free counters with the invariant that after any quiescent
+//!   drain `pushed == popped` (and every rejected offer is in
+//!   `dropped`) — the property `tests/prop_online_selector.rs` hammers
+//!   with 8 concurrent producers.
+//!
+//! The algorithm is Dmitry Vyukov's bounded MPMC queue: slot `i` carries
+//! a sequence number that equals the ticket of the producer allowed to
+//! write it (then ticket+1 when readable, then ticket+capacity when
+//! writable again). Both sides CAS their position counter to claim a
+//! ticket and touch only their own slot afterwards.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// One slot: the sequence number gates which side may touch `value`.
+struct Slot<T> {
+    seq: AtomicUsize,
+    value: UnsafeCell<MaybeUninit<T>>,
+}
+
+/// Counter snapshot of a [`BoundedQueue`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct QueueStats {
+    /// Values successfully enqueued.
+    pub pushed: u64,
+    /// Offers rejected because the queue was full (shed, not blocked).
+    pub dropped: u64,
+    /// Values successfully dequeued.
+    pub popped: u64,
+}
+
+/// Bounded lock-free multi-producer/multi-consumer queue. See the
+/// module docs for the design and the shedding contract.
+pub struct BoundedQueue<T> {
+    slots: Box<[Slot<T>]>,
+    mask: usize,
+    /// Consumer ticket counter.
+    head: AtomicUsize,
+    /// Producer ticket counter.
+    tail: AtomicUsize,
+    pushed: AtomicU64,
+    dropped: AtomicU64,
+    popped: AtomicU64,
+}
+
+// Safety: values cross threads by ownership (written by exactly one
+// producer, read by exactly one consumer, with the slot's acquire/release
+// sequence number ordering the handoff), so `T: Send` suffices.
+unsafe impl<T: Send> Send for BoundedQueue<T> {}
+unsafe impl<T: Send> Sync for BoundedQueue<T> {}
+
+impl<T> BoundedQueue<T> {
+    /// Build a queue of at least `capacity` slots (rounded up to the
+    /// next power of two, minimum 2).
+    pub fn new(capacity: usize) -> BoundedQueue<T> {
+        let cap = capacity.max(2).next_power_of_two();
+        let slots: Box<[Slot<T>]> = (0..cap)
+            .map(|i| Slot {
+                seq: AtomicUsize::new(i),
+                value: UnsafeCell::new(MaybeUninit::uninit()),
+            })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        BoundedQueue {
+            slots,
+            mask: cap - 1,
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+            pushed: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            popped: AtomicU64::new(0),
+        }
+    }
+
+    /// Effective capacity (power of two ≥ the requested one).
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Enqueue without ever blocking. `Err(v)` hands the value back when
+    /// the queue is full (the offer is counted in `dropped`).
+    pub fn push(&self, v: T) -> Result<(), T> {
+        let mut pos = self.tail.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let dif = seq as isize - pos as isize;
+            if dif == 0 {
+                // our ticket: claim it, then we own the slot exclusively
+                match self.tail.compare_exchange_weak(
+                    pos,
+                    pos.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        unsafe { (*slot.value.get()).write(v) };
+                        slot.seq.store(pos.wrapping_add(1), Ordering::Release);
+                        self.pushed.fetch_add(1, Ordering::Relaxed);
+                        return Ok(());
+                    }
+                    Err(current) => pos = current,
+                }
+            } else if dif < 0 {
+                // the slot still holds a value a full lap behind us:
+                // the queue is full — shed
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+                return Err(v);
+            } else {
+                // another producer claimed this ticket; chase the tail
+                pos = self.tail.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Dequeue without ever blocking. `None` means empty *right now*
+    /// (a concurrent producer may land a value immediately after).
+    pub fn pop(&self) -> Option<T> {
+        let mut pos = self.head.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let dif = seq as isize - pos.wrapping_add(1) as isize;
+            if dif == 0 {
+                match self.head.compare_exchange_weak(
+                    pos,
+                    pos.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        let v = unsafe { (*slot.value.get()).assume_init_read() };
+                        // mark the slot writable one lap later
+                        slot.seq
+                            .store(pos.wrapping_add(self.mask).wrapping_add(1), Ordering::Release);
+                        self.popped.fetch_add(1, Ordering::Relaxed);
+                        return Some(v);
+                    }
+                    Err(current) => pos = current,
+                }
+            } else if dif < 0 {
+                return None;
+            } else {
+                pos = self.head.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Momentary occupancy (exact only when quiescent).
+    pub fn len(&self) -> usize {
+        let tail = self.tail.load(Ordering::Relaxed);
+        let head = self.head.load(Ordering::Relaxed);
+        tail.wrapping_sub(head).min(self.capacity())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> QueueStats {
+        QueueStats {
+            pushed: self.pushed.load(Ordering::Relaxed),
+            dropped: self.dropped.load(Ordering::Relaxed),
+            popped: self.popped.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl<T> Drop for BoundedQueue<T> {
+    fn drop(&mut self) {
+        // release any values still in flight
+        while self.pop().is_some() {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64 as TestCounter;
+    use std::sync::{Arc, Barrier};
+
+    #[test]
+    fn fifo_order_single_thread() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(8);
+        for i in 0..8u32 {
+            q.push(i).unwrap();
+        }
+        for i in 0..8u32 {
+            assert_eq!(q.pop(), Some(i));
+        }
+        assert_eq!(q.pop(), None);
+        let s = q.stats();
+        assert_eq!((s.pushed, s.dropped, s.popped), (8, 0, 8));
+    }
+
+    #[test]
+    fn full_queue_sheds_and_counts() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(4);
+        assert_eq!(q.capacity(), 4);
+        for i in 0..4u32 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.push(99), Err(99), "full queue must hand the value back");
+        assert_eq!(q.stats().dropped, 1);
+        // freeing one seat re-admits exactly one value
+        assert_eq!(q.pop(), Some(0));
+        q.push(4).unwrap();
+        assert_eq!(q.push(100), Err(100));
+        assert_eq!(q.stats().dropped, 2);
+    }
+
+    #[test]
+    fn capacity_rounds_up_and_clamps() {
+        assert_eq!(BoundedQueue::<u8>::new(0).capacity(), 2);
+        assert_eq!(BoundedQueue::<u8>::new(5).capacity(), 8);
+        assert_eq!(BoundedQueue::<u8>::new(64).capacity(), 64);
+    }
+
+    #[test]
+    fn wraparound_reuses_slots_correctly() {
+        let q: BoundedQueue<usize> = BoundedQueue::new(4);
+        // many laps over a tiny ring: sequence numbers must keep
+        // gating the slots correctly far past the first lap
+        for lap in 0..100usize {
+            for i in 0..4 {
+                q.push(lap * 4 + i).unwrap();
+            }
+            for i in 0..4 {
+                assert_eq!(q.pop(), Some(lap * 4 + i));
+            }
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn eight_producers_lose_nothing_against_a_concurrent_consumer() {
+        const PRODUCERS: usize = 8;
+        const PER: u64 = 2000;
+        let q: Arc<BoundedQueue<u64>> = Arc::new(BoundedQueue::new(1024));
+        let barrier = Arc::new(Barrier::new(PRODUCERS + 1));
+        let consumed_sum = Arc::new(TestCounter::new(0));
+        let consumed_n = Arc::new(TestCounter::new(0));
+        let mut handles = Vec::new();
+        for p in 0..PRODUCERS as u64 {
+            let (q, barrier) = (Arc::clone(&q), Arc::clone(&barrier));
+            handles.push(std::thread::spawn(move || {
+                barrier.wait();
+                let mut accepted = 0u64;
+                for i in 0..PER {
+                    if q.push(p * PER + i).is_ok() {
+                        accepted += 1;
+                    }
+                }
+                accepted
+            }));
+        }
+        let consumer = {
+            let (q, barrier, sum, n) = (
+                Arc::clone(&q),
+                Arc::clone(&barrier),
+                Arc::clone(&consumed_sum),
+                Arc::clone(&consumed_n),
+            );
+            std::thread::spawn(move || {
+                barrier.wait();
+                // drain until every producer's values are accounted for;
+                // the producers finish in bounded time, so spinning on
+                // the shared counters terminates
+                loop {
+                    while let Some(v) = q.pop() {
+                        sum.fetch_add(v, Ordering::Relaxed);
+                        n.fetch_add(1, Ordering::Relaxed);
+                    }
+                    let s = q.stats();
+                    if s.pushed == n.load(Ordering::Relaxed)
+                        && s.pushed + s.dropped == PRODUCERS as u64 * PER
+                    {
+                        break;
+                    }
+                    std::thread::yield_now();
+                }
+            })
+        };
+        let accepted: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        consumer.join().unwrap();
+        let s = q.stats();
+        // conservation: every offer was either accepted or counted as
+        // dropped, and every accepted value came out exactly once
+        assert_eq!(accepted, s.pushed);
+        assert_eq!(s.pushed + s.dropped, PRODUCERS as u64 * PER);
+        assert_eq!(s.popped, s.pushed);
+        assert_eq!(consumed_n.load(Ordering::Relaxed), s.pushed);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn dropping_a_nonempty_queue_releases_values() {
+        let payload = Arc::new(7u64);
+        {
+            let q: BoundedQueue<Arc<u64>> = BoundedQueue::new(8);
+            for _ in 0..5 {
+                q.push(Arc::clone(&payload)).unwrap();
+            }
+            assert_eq!(Arc::strong_count(&payload), 6);
+        }
+        assert_eq!(Arc::strong_count(&payload), 1, "queue drop leaked values");
+    }
+}

@@ -1,0 +1,216 @@
+//! End-to-end online-learning-loop tests on a real learner-enabled
+//! `ServingEngine` (pure-Rust forest backend, no AOT artifacts):
+//! Zipf-trace replay with the exploration gate checked per request,
+//! learner/serving counter reconciliation, warm-path non-interference,
+//! and the fleet-wide learner fold through `ShardRouter`.
+
+use std::time::Duration;
+
+use smr::collection::generate_mini_collection;
+use smr::collection::generators::pattern_population;
+use smr::coordinator::service::Backend;
+use smr::coordinator::{
+    DrainMode, LearnerConfig, OverloadPolicy, RouterConfig, ServingConfig, ServingEngine,
+    ShardRouter,
+};
+use smr::dataset::{build_dataset, SweepConfig};
+use smr::ml::forest::{ForestParams, RandomForest};
+use smr::ml::normalize::{Method, Normalizer};
+use smr::ml::online::OnlineConfig;
+use smr::reorder::ReorderAlgorithm;
+use smr::util::cache::CacheConfig;
+use smr::util::rng::{Rng, Zipf};
+
+/// Forest backend fitted on a small labeled sweep (same recipe as
+/// `integration_serving.rs`): deterministic, artifact-free.
+fn trained_backend() -> Backend {
+    let coll = generate_mini_collection(3, 1);
+    let ds = build_dataset(&coll, &ReorderAlgorithm::LABEL_SET, &SweepConfig::default());
+    let normalizer = Normalizer::fit(Method::Standard, &ds.features());
+    let mut forest = RandomForest::new(
+        ForestParams {
+            n_estimators: 20,
+            ..Default::default()
+        },
+        7,
+    );
+    forest.fit(&normalizer.transform(&ds.features()), &ds.labels(), 4);
+    Backend::Forest { normalizer, forest }
+}
+
+fn learner_cfg(epsilon: f64, drain: DrainMode) -> LearnerConfig {
+    LearnerConfig {
+        online: OnlineConfig {
+            epsilon,
+            ..OnlineConfig::default()
+        },
+        queue_capacity: 4096,
+        drain,
+    }
+}
+
+#[test]
+fn zipf_replay_explores_only_on_plan_cache_cold_requests() {
+    // High epsilon so the trace carries plenty of exploration, and a
+    // plan cache large enough (10 patterns x 7 arms < 256) that warm
+    // entries are never evicted — every explored request must therefore
+    // be one whose greedy pick had no resident plan yet.
+    let cfg = ServingConfig {
+        plan_cache: CacheConfig {
+            capacity: 256,
+            shards: 8,
+        },
+        learner: Some(learner_cfg(0.35, DrainMode::Inband { every: 16 })),
+        ..ServingConfig::default()
+    };
+    let engine = ServingEngine::spawn(trained_backend(), cfg).unwrap();
+    let pop = pattern_population(10, 0x21CE);
+    let zipf = Zipf::new(pop.len(), 1.1);
+    let mut rng = Rng::new(0x7AFF);
+
+    let mut explored_reports = 0u64;
+    for _ in 0..150 {
+        let r = engine.serve(&pop[zipf.sample(&mut rng)]).unwrap();
+        if r.explored {
+            explored_reports += 1;
+            assert!(
+                !r.plan_hit,
+                "exploration leaked onto a warm (plan-cache-hit) request"
+            );
+        }
+    }
+
+    let s = engine.stats();
+    assert_eq!(s.requests, 150);
+    assert!(s.learner.enabled);
+    // Feedback intake conserves requests: everything served was either
+    // queued or counted as shed (nothing shed here — capacity 4096).
+    assert_eq!(s.learner.observations + s.learner.dropped, s.requests);
+    assert_eq!(s.learner.dropped, 0);
+    // The per-report explored flags and the selector's own ledger agree.
+    assert_eq!(s.learner.explored, explored_reports);
+    assert!(
+        explored_reports > 0,
+        "epsilon 0.35 over 150 requests must explore at least once"
+    );
+    // decide() runs only on cold-gated requests, never more than once
+    // per request.
+    assert!(s.learner.decisions <= s.requests);
+    assert!(s.learner.explored <= s.learner.decisions);
+
+    // After a manual flush the model-update ledger closes exactly.
+    engine.learner().expect("learner enabled").drain_now();
+    let s = engine.stats();
+    assert_eq!(s.learner.updates, s.learner.observations);
+    engine.shutdown();
+}
+
+#[test]
+fn warm_path_feedback_hook_adds_no_blocking_work() {
+    // epsilon 0 and an in-band cadence that never fires: the warm loop
+    // must stay plan-hit and unexplored, and the learner must show zero
+    // drains and zero model updates afterwards — i.e. the only thing a
+    // warm request did for the learner was a lock-free queue push.
+    let cfg = ServingConfig {
+        learner: Some(learner_cfg(0.0, DrainMode::Inband { every: u64::MAX })),
+        ..ServingConfig::default()
+    };
+    let engine = ServingEngine::spawn(trained_backend(), cfg).unwrap();
+    let pop = pattern_population(1, 0x5EED);
+    let m = &pop[0];
+
+    let cold = engine.serve(m).unwrap();
+    assert!(!cold.plan_hit);
+
+    const WARM: usize = 40;
+    let mut warm_e2e = 0.0;
+    for _ in 0..WARM {
+        let r = engine.serve(m).unwrap();
+        assert!(r.plan_hit, "structural repeat must stay on the warm path");
+        assert!(!r.explored, "epsilon 0 must never explore");
+        warm_e2e += r.end_to_end_s();
+    }
+
+    let s = engine.stats();
+    assert_eq!(s.requests, (WARM + 1) as u64);
+    assert_eq!(s.learner.observations, (WARM + 1) as u64);
+    assert_eq!(s.learner.dropped, 0);
+    assert_eq!(s.learner.drains, 0, "no drain may run on this cadence");
+    assert_eq!(s.learner.updates, 0, "no model update ran in-band");
+    // Generous ceiling: warm serves of a tiny mesh are sub-millisecond;
+    // a blocking feedback hook (drain, model update, lock convoy) would
+    // blow straight through this.
+    assert!(
+        warm_e2e / WARM as f64 < 0.25,
+        "warm request mean latency {:.4}s suggests the feedback hook blocks",
+        warm_e2e / WARM as f64
+    );
+
+    // The backlog is still there, applied only on explicit demand.
+    assert_eq!(
+        engine.learner().expect("learner enabled").drain_now(),
+        (WARM + 1) as u64
+    );
+    engine.shutdown();
+}
+
+#[test]
+fn router_folds_learner_counters_fleet_wide() {
+    let cfg = RouterConfig {
+        replicas: 2,
+        queue_depth: 8,
+        policy: OverloadPolicy::Block,
+        serving: ServingConfig {
+            plan_cache: CacheConfig {
+                capacity: 256,
+                shards: 8,
+            },
+            learner: Some(LearnerConfig {
+                online: OnlineConfig {
+                    epsilon: 0.25,
+                    ..OnlineConfig::default()
+                },
+                drain: DrainMode::Thread {
+                    interval: Duration::from_millis(1),
+                },
+                ..LearnerConfig::default()
+            }),
+            ..ServingConfig::default()
+        },
+    };
+    let backend = trained_backend();
+    let router = ShardRouter::spawn(cfg, |_| backend.clone()).unwrap();
+    let pop = pattern_population(6, 0xF1EE7);
+
+    for round in 0..3 {
+        for m in &pop {
+            router.serve(m).unwrap_or_else(|e| {
+                panic!("round {round}: blocked-policy serve failed: {e:?}")
+            });
+        }
+    }
+
+    let s = router.stats();
+    assert_eq!(s.served(), 18);
+    let fleet = s.learner();
+    assert!(fleet.enabled, "learner-enabled fleet must fold as enabled");
+    // Every replica offers one observation per request it served; the
+    // fold sums exactly the per-replica ledgers.
+    assert_eq!(fleet.observations + fleet.dropped, s.served());
+    let by_hand = s
+        .replicas
+        .iter()
+        .map(|r| r.serving.learner.observations)
+        .sum::<u64>();
+    assert_eq!(fleet.observations, by_hand);
+    // Shard routing sends each pattern to one home replica, so both
+    // replicas only learn from their own shard's traffic.
+    for (i, r) in s.replicas.iter().enumerate() {
+        assert_eq!(
+            r.serving.learner.observations + r.serving.learner.dropped,
+            r.serving.requests,
+            "replica {i} learner intake out of step with its requests"
+        );
+    }
+    router.shutdown();
+}

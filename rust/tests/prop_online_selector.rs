@@ -1,0 +1,340 @@
+//! Online-selector properties: deterministic replay, offline-prior
+//! consistency, regret versus a fixed-arm baseline, and lossless
+//! concurrent feedback ingestion.
+//!
+//! The first three drive `ml::online::OnlineSelector` directly on
+//! synthetic cost surfaces (no solver in the loop, so the properties
+//! are exact). The last stands a real learner-enabled `ServingEngine`
+//! up and hammers it from eight threads to prove the feedback path
+//! neither loses observations nor deadlocks against `serve` /
+//! `serve_batch`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use smr::collection::generate_mini_collection;
+use smr::collection::generators::pattern_population;
+use smr::coordinator::service::Backend;
+use smr::coordinator::{DrainMode, Learner, LearnerConfig, ServingConfig, ServingEngine};
+use smr::dataset::{build_dataset, SweepConfig};
+use smr::features::N_FEATURES;
+use smr::ml::forest::{ForestParams, RandomForest};
+use smr::ml::normalize::{Method, Normalizer};
+use smr::ml::online::{arm_index, Decision, OnlineConfig, OnlineSelector, ARMS, N_ARMS};
+use smr::reorder::ReorderAlgorithm;
+use smr::util::cache::CacheConfig;
+use smr::util::rng::Rng;
+
+/// Deterministic synthetic context: one feature dimension dialed up so
+/// contexts are far apart after the selector's `ln(1+|f|)` transform.
+fn one_hot_features(hot: usize, scale: f64) -> [f64; N_FEATURES] {
+    let mut f = [1.0; N_FEATURES];
+    f[hot % N_FEATURES] = scale;
+    f
+}
+
+fn random_features(rng: &mut Rng) -> [f64; N_FEATURES] {
+    let mut f = [0.0; N_FEATURES];
+    for v in f.iter_mut() {
+        *v = rng.range_f64(0.0, 1e4);
+    }
+    f
+}
+
+/// Synthetic per-(step, arm) cost: deterministic, positive, arm-dependent.
+fn synthetic_cost(step: usize, arm: ReorderAlgorithm) -> f64 {
+    let ix = arm_index(arm).expect("decided arm must be in ARMS") as f64;
+    1e-4 * (1.0 + ix) * (1.0 + (step % 5) as f64)
+}
+
+/// Replay a fixed decide/observe trace and return the decision stream.
+fn replay(seed: u64, steps: usize) -> Vec<Decision> {
+    let sel = OnlineSelector::new(OnlineConfig {
+        epsilon: 0.3,
+        seed,
+        ..OnlineConfig::default()
+    });
+    let mut feat_rng = Rng::new(0xFEA7); // shared across replays on purpose
+    let mut out = Vec::with_capacity(steps);
+    for step in 0..steps {
+        let f = random_features(&mut feat_rng);
+        let offline = ARMS[step % N_ARMS];
+        let d = sel.decide(&f, offline);
+        sel.observe(&f, d.algorithm, synthetic_cost(step, d.algorithm));
+        out.push(d);
+    }
+    out
+}
+
+#[test]
+fn fixed_seed_replays_a_bit_identical_decision_stream() {
+    let a = replay(0xD00D, 400);
+    let b = replay(0xD00D, 400);
+    assert_eq!(a, b, "same seed must reproduce the exact decision stream");
+    assert!(
+        a.iter().any(|d| d.explored),
+        "with epsilon 0.3 over 400 steps some decision must explore"
+    );
+
+    let c = replay(0xBEEF, 400);
+    assert_ne!(
+        a, c,
+        "a different seed should steer at least one decision differently"
+    );
+}
+
+#[test]
+fn zero_epsilon_fresh_selector_matches_the_offline_argmax_everywhere() {
+    // No observations yet: the offline-prior bonus is the only thing
+    // separating the arms, so a non-exploring selector must reproduce
+    // the offline model's argmax on every context, for every possible
+    // offline pick.
+    let sel = OnlineSelector::new(OnlineConfig {
+        epsilon: 0.0,
+        ..OnlineConfig::default()
+    });
+    let mut rng = Rng::new(0x0FF);
+    for _ in 0..100 {
+        let f = random_features(&mut rng);
+        for &offline in ARMS.iter() {
+            let d = sel.decide(&f, offline);
+            assert!(!d.explored, "epsilon 0 must never explore");
+            assert_eq!(
+                d.algorithm, offline,
+                "fresh selector diverged from the offline prior"
+            );
+        }
+    }
+}
+
+#[test]
+fn converged_zero_epsilon_selector_agrees_with_a_consistent_offline_model() {
+    // When measured costs agree with the offline model (its argmax is
+    // genuinely cheapest on every context), the converged selector must
+    // keep picking exactly what the offline model picks.
+    let sel = OnlineSelector::new(OnlineConfig {
+        epsilon: 0.0,
+        ..OnlineConfig::default()
+    });
+    let contexts: Vec<([f64; N_FEATURES], ReorderAlgorithm)> = (0..8)
+        .map(|c| (one_hot_features(c, 200.0), ARMS[c % N_ARMS]))
+        .collect();
+    // Converge: every arm observed on every context, best arm cheapest.
+    for _ in 0..30 {
+        for (f, best) in &contexts {
+            for &arm in ARMS.iter() {
+                let cost = if arm == *best { 1e-4 } else { 5e-3 };
+                sel.observe(f, arm, cost);
+            }
+        }
+    }
+    for (f, best) in &contexts {
+        let d = sel.decide(f, *best);
+        assert!(!d.explored);
+        assert_eq!(
+            d.algorithm, *best,
+            "converged selector contradicted a consistent offline model"
+        );
+    }
+}
+
+#[test]
+fn learner_regret_beats_always_amd_on_a_two_regime_trace() {
+    // Regime A: AMD genuinely cheapest (the offline model is right).
+    // Regime B: AMD is 40x worse than SCOTCH (the offline model is
+    // stale). A static always-AMD policy pays full price in regime B;
+    // the learner must discover SCOTCH and pay strictly less overall.
+    let fa = one_hot_features(0, 50.0);
+    let fb = one_hot_features(1, 5e4);
+    let cost = |regime_b: bool, arm: ReorderAlgorithm| -> f64 {
+        if regime_b {
+            match arm {
+                ReorderAlgorithm::Amd => 0.080,
+                ReorderAlgorithm::Scotch => 0.002,
+                _ => 0.040,
+            }
+        } else if arm == ReorderAlgorithm::Amd {
+            0.001
+        } else {
+            0.004
+        }
+    };
+
+    let sel = OnlineSelector::new(OnlineConfig {
+        epsilon: 0.1,
+        ..OnlineConfig::default()
+    });
+    let mut learner_regret = 0.0;
+    let mut amd_regret = 0.0;
+    for step in 0..800 {
+        let regime_b = step % 2 == 1;
+        let f = if regime_b { fb } else { fa };
+        let best = if regime_b { 0.002 } else { 0.001 };
+        // the stale offline model always says AMD
+        let d = sel.decide(&f, ReorderAlgorithm::Amd);
+        let c = cost(regime_b, d.algorithm);
+        sel.observe(&f, d.algorithm, c);
+        let r = c - best;
+        sel.record_regret(r);
+        learner_regret += r;
+        amd_regret += cost(regime_b, ReorderAlgorithm::Amd) - best;
+    }
+
+    assert!(amd_regret > 10.0, "baseline sanity: {amd_regret}");
+    assert!(
+        learner_regret < amd_regret * 0.5,
+        "learner regret {learner_regret:.3}s not materially below always-AMD {amd_regret:.3}s"
+    );
+    let snap = sel.snapshot();
+    assert_eq!(snap.decisions, 800);
+    assert!(
+        (snap.regret_s - learner_regret).abs() < 1e-9,
+        "regret accumulator {} diverged from the replay's ledger {learner_regret}",
+        snap.regret_s
+    );
+}
+
+#[test]
+fn eight_ingestion_threads_lose_no_observations() {
+    // Counter conservation through the lock-free feedback queue: with
+    // capacity above the total offered volume, every offer from all 8
+    // threads must be accepted and then applied by a single drain.
+    let learner = Learner::spawn(LearnerConfig {
+        queue_capacity: 8192,
+        drain: DrainMode::Inband { every: u64::MAX },
+        ..LearnerConfig::default()
+    });
+    const THREADS: usize = 8;
+    const PER_THREAD: usize = 500;
+    let barrier = Barrier::new(THREADS);
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let learner = &learner;
+            let barrier = &barrier;
+            s.spawn(move || {
+                let mut rng = Rng::new(0xAB5 + t as u64);
+                barrier.wait();
+                for i in 0..PER_THREAD {
+                    let obs = smr::coordinator::Observation {
+                        features: random_features(&mut rng),
+                        algorithm: ARMS[(t + i) % N_ARMS],
+                        measured_s: 1e-4 * (1 + i % 7) as f64,
+                    };
+                    learner.offer(obs);
+                }
+            });
+        }
+    });
+
+    let total = (THREADS * PER_THREAD) as u64;
+    let before = learner.stats();
+    assert_eq!(before.observations, total, "accepted-counter conservation");
+    assert_eq!(before.dropped, 0, "queue was sized to shed nothing");
+    assert_eq!(before.updates, 0, "cadence u64::MAX must never drain in-band");
+
+    let drained = learner.drain_now();
+    assert_eq!(drained, total, "one drain must apply the whole backlog");
+    let after = learner.stats();
+    assert_eq!(after.updates, total, "every observation reaches the model");
+    assert!(after.drains >= 1);
+    learner.shutdown();
+}
+
+/// Forest backend fitted on a small labeled sweep (same recipe as
+/// `prop_router.rs`): deterministic, artifact-free.
+fn trained_backend() -> Backend {
+    let coll = generate_mini_collection(3, 1);
+    let ds = build_dataset(&coll, &ReorderAlgorithm::LABEL_SET, &SweepConfig::default());
+    let normalizer = Normalizer::fit(Method::Standard, &ds.features());
+    let mut forest = RandomForest::new(
+        ForestParams {
+            n_estimators: 20,
+            ..Default::default()
+        },
+        7,
+    );
+    forest.fit(&normalizer.transform(&ds.features()), &ds.labels(), 4);
+    Backend::Forest { normalizer, forest }
+}
+
+#[test]
+fn concurrent_serving_never_deadlocks_the_feedback_loop() {
+    // 6 request threads (4 serve + 2 serve_batch) race the dedicated
+    // updater thread and each other's in-queue offers. The property is
+    // that the run completes (no deadlock between the selector mutex,
+    // the drain mutex, and the serving hot path) and that the learner's
+    // intake ledger reconciles exactly with the engine's request count.
+    let cfg = ServingConfig {
+        plan_cache: CacheConfig {
+            capacity: 256,
+            shards: 8,
+        },
+        learner: Some(LearnerConfig {
+            online: OnlineConfig {
+                epsilon: 0.2,
+                ..OnlineConfig::default()
+            },
+            drain: DrainMode::Thread {
+                interval: Duration::from_millis(1),
+            },
+            ..LearnerConfig::default()
+        }),
+        ..ServingConfig::default()
+    };
+    let engine = Arc::new(ServingEngine::spawn(trained_backend(), cfg).unwrap());
+    let pop = Arc::new(pattern_population(3, 0x60D));
+    let served = Arc::new(AtomicU64::new(0));
+    let barrier = Arc::new(Barrier::new(6));
+
+    let mut handles = Vec::new();
+    for t in 0..4usize {
+        let (engine, pop, served, barrier) =
+            (engine.clone(), pop.clone(), served.clone(), barrier.clone());
+        handles.push(std::thread::spawn(move || {
+            barrier.wait();
+            for i in 0..25 {
+                engine.serve(&pop[(t + i) % pop.len()]).unwrap();
+                served.fetch_add(1, Ordering::Relaxed);
+            }
+        }));
+    }
+    for t in 0..2usize {
+        let (engine, pop, served, barrier) =
+            (engine.clone(), pop.clone(), served.clone(), barrier.clone());
+        handles.push(std::thread::spawn(move || {
+            barrier.wait();
+            for i in 0..10 {
+                let batch: Vec<&smr::sparse::CsrMatrix> =
+                    (0..3).map(|j| &pop[(t + i + j) % pop.len()]).collect();
+                let reports = engine.serve_batch(&batch).unwrap();
+                served.fetch_add(reports.len() as u64, Ordering::Relaxed);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("request thread panicked");
+    }
+
+    let total = served.load(Ordering::Relaxed);
+    assert_eq!(total, 4 * 25 + 2 * 10 * 3);
+    let s = engine.stats();
+    assert_eq!(s.requests, total);
+    assert!(s.learner.enabled);
+    assert_eq!(
+        s.learner.observations + s.learner.dropped,
+        total,
+        "every served request must offer exactly one observation"
+    );
+
+    // Flush whatever the background updater has not applied yet, then
+    // the model-update ledger must close too.
+    engine.learner().expect("learner enabled").drain_now();
+    let s = engine.stats();
+    assert_eq!(s.learner.updates, s.learner.observations);
+
+    match Arc::try_unwrap(engine) {
+        Ok(e) => e.shutdown(),
+        Err(_) => panic!("request threads still hold the engine"),
+    }
+}

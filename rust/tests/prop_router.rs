@@ -274,6 +274,70 @@ fn block_policy_serves_everyone_without_rejections() {
 }
 
 #[test]
+fn spill_exhaustion_rejects_when_every_replica_is_full() {
+    // PR-7 coverage gap: the Spill policy's terminal case. Saturate
+    // EVERY replica's gate deterministically (held GatePasses occupy
+    // seats exactly like in-flight requests — no racing threads), then
+    // prove the walk down the preference order ends in a clean
+    // `Overloaded{home}` with consistent counters, and that freeing the
+    // seats restores normal home-replica service.
+    let backend = trained_backend();
+    let router = ShardRouter::spawn(
+        RouterConfig {
+            replicas: 2,
+            queue_depth: 1,
+            policy: OverloadPolicy::Spill,
+            ..Default::default()
+        },
+        |_| backend.clone(),
+    )
+    .unwrap();
+
+    let matrix = smr::collection::generators::grid2d(9, 7);
+    let home = route(&PatternKey::of(&matrix), 2);
+
+    let seat0 = router.gate(0).try_enter().expect("replica 0 seat free");
+    let seat1 = router.gate(1).try_enter().expect("replica 1 seat free");
+    match router.serve(&matrix) {
+        Err(RouterError::Overloaded { replica }) => {
+            assert_eq!(replica, home, "Overloaded names the home replica");
+        }
+        Ok(r) => panic!("served on replica {} with every gate full", r.replica),
+        Err(e) => panic!("unexpected error: {e}"),
+    }
+
+    let s = router.stats();
+    assert_eq!(s.requests, 1);
+    assert_eq!(s.rejected, 1);
+    assert_eq!(s.spilled, 0, "a fully-rejected request never counts as spilled");
+    assert_eq!(s.served(), 0, "no engine saw the request");
+    for (i, r) in s.replicas.iter().enumerate() {
+        assert_eq!(r.requests, 0, "replica {i} admitted something");
+        // the walk knocked on every gate exactly once (plus our two
+        // manual seats were admitted)
+        assert_eq!(r.gate.rejected, 1, "replica {i} gate rejection count");
+        assert_eq!(r.gate.admitted, 1, "replica {i} counts the held seat");
+        assert_eq!(r.gate.active, 1, "held seat still occupies replica {i}");
+        assert_eq!(r.gate.high_water, 1);
+    }
+
+    drop(seat0);
+    drop(seat1);
+    // seats freed: the same request now serves at home, unspilled
+    let r = router.serve(&matrix).unwrap();
+    assert_eq!(r.replica, home);
+    assert!(!r.spilled);
+    let s = router.stats();
+    assert_eq!(s.requests, 2);
+    assert_eq!(s.rejected, 1);
+    assert_eq!(s.served(), 1);
+    for r in &s.replicas {
+        assert_eq!(r.gate.active, 0, "all seats released");
+    }
+    router.shutdown();
+}
+
+#[test]
 fn spill_policy_overflows_to_the_next_preferred_replica() {
     let backend = trained_backend();
     let router = ShardRouter::spawn(
