@@ -25,6 +25,13 @@ cargo test -q --test prop_symbolic_plan
 cargo test -q --test integration_serving
 cargo test -q --test prop_router
 
+# Incremental-replanning suites: the pattern-diff round-trip under
+# adversarial edit scripts, repaired-vs-scratch bit-identity across the
+# paper's algorithm set, and the drifting-trace serving ledger
+# (exact hit -> near-match repair -> cold miss, counters reconciled).
+cargo test -q --test prop_pattern_diff
+cargo test -q --test integration_replan_serving
+
 # Online-learning-loop suites: deterministic bandit replay (fixed seed
 # => bit-identical decisions), regret vs the always-AMD baseline,
 # lossless 8-thread feedback ingestion, and the exploration gate
@@ -56,10 +63,14 @@ cargo test -q --lib util::pool::tests::dag
 # quantiles for serving; peak_front_bytes/allocs +
 # replay/batched_warm/core_scaling lanes for the solver; throughput +
 # tail latency + dedup + per-replica occupancy for the router; regret
-# curve + picks + baselines + learner counters for the online loop),
-# validated via util/json.rs by examples/check_bench.rs.
+# curve + picks + baselines + learner counters for the online loop;
+# repair-vs-cold latency records + drifting-trace repair counters for
+# the replanning bench), validated via util/json.rs by
+# examples/check_bench.rs. Each artifact is gated by its own bench's
+# schema independently, so one bench's absence never blocks another.
 bench_artifacts=()
-for f in BENCH_serving.json BENCH_solver.json BENCH_router.json BENCH_online.json; do
+for f in BENCH_serving.json BENCH_solver.json BENCH_router.json BENCH_online.json \
+         BENCH_replan.json; do
   [[ -f "$f" ]] && bench_artifacts+=("$f")
 done
 if [[ ${#bench_artifacts[@]} -gt 0 ]]; then

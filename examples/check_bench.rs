@@ -3,27 +3,38 @@
 //! Usage: `cargo run --release --example check_bench -- BENCH_serving.json ...`
 //!
 //! Every argument must parse as a bench artifact: a JSON object with a
-//! non-empty `results` array of records. For `bench_serving` artifacts
-//! the serving schema is enforced too: per-record cold/warm latencies,
-//! the `warm_alloc_free` arena flag, top-level cache hit/miss/evict
-//! plus front-arena counters, and the batched warm path (a non-empty
-//! `batched` burst array plus the engine's `batches` coalescing
-//! counters, the plan/ordering caches' in-flight dedup counters, and
-//! the per-stage `latency` quantiles). For `bench_router` artifacts
-//! every lane must report throughput, p50/p99/p999 tail latency, fleet
-//! dedup counters, and a per-replica occupancy array, with both
-//! closed- and open-loop lanes present. For `bench_online` artifacts
-//! the windowed regret curve (>= 2 windows), per-algorithm pick
-//! histogram, fixed-policy baselines, learner counter block, and the
-//! `regret_improved` flag are all required. For `bench_solver` artifacts every record must carry the
-//! `peak_front_bytes` / `allocs` columns, the replay lanes
-//! (`planned_numeric`, `arena_numeric`, `pipelined`) and the
-//! `batched_warm` lane (with its `batch_k` / `per_request_s` /
-//! `throughput_per_s` amortization columns) must all be present, and
-//! at least one `core_scaling_w*` lane must report the worker sweep.
-//! Exits non-zero (listing every violation) on malformed
-//! input, so a bench that wrote garbage fails CI instead of silently
-//! polluting the perf trajectory.
+//! non-empty `results` array of records. The `bench` tag dispatches to
+//! one per-bench checker — each bench's schema is validated
+//! independently, so adding or tightening one bench's schema can never
+//! break another artifact's gate:
+//!
+//! * `bench_solver` — per-record arena columns (`peak_front_bytes`,
+//!   `allocs`), the numeric-replay lanes (`planned_numeric`,
+//!   `arena_numeric`, `pipelined`, `batched_warm` with its amortization
+//!   columns), and at least one `core_scaling_w*` lane;
+//! * `bench_serving` — per-record cold/warm latencies and the
+//!   `warm_alloc_free` arena flag, plus the cache/pool/latency/batching
+//!   stat sections;
+//! * `bench_router` — per-lane throughput + tail latency + fleet dedup
+//!   counters, per-replica occupancy, both loop modes;
+//! * `bench_online` — windowed regret curve (>= 2 windows), pick
+//!   histogram, fixed-policy baselines, learner counters, and the
+//!   `regret_improved` flag;
+//! * `bench_replan` — per-drift-size repair-vs-cold latency records and
+//!   the `serving` drifting-trace counter block (`repairs`,
+//!   `repair_fallbacks`, hits/misses, `repair_rate`) proving the repair
+//!   tier resolved drift without silent fallback.
+//!
+//! **Optional sections.** A bench's stat sections beyond the per-record
+//! schema (`fronts`, `batched`, `latency`, …) are gated through a
+//! top-level `sections` string array when the artifact carries one: a
+//! declared section must be present (and valid), an undeclared one is
+//! validated only if present — so a bench run that legitimately skips an
+//! optional lane no longer hard-fails the whole artifact. Artifacts
+//! without a `sections` field keep the legacy-strict behavior (every
+//! section their bench defines is required). Exits non-zero (listing
+//! every violation) on malformed input, so a bench that wrote garbage
+//! fails CI instead of silently polluting the perf trajectory.
 
 use smr::util::json::{self, Json};
 
@@ -39,6 +50,330 @@ fn check_bool(obj: &Json, key: &str, errs: &mut Vec<String>, ctx: &str) {
     if obj.get(key).and_then(|v| v.as_bool()).is_none() {
         errs.push(format!("{ctx}: missing boolean `{key}`"));
     }
+}
+
+/// The artifact's declared optional sections (top-level `sections`
+/// string array). `None` = legacy artifact: every section its bench
+/// defines is required.
+struct Sections {
+    declared: Option<Vec<String>>,
+}
+
+impl Sections {
+    fn of(v: &Json) -> Sections {
+        Sections {
+            declared: v.get("sections").and_then(|s| s.as_arr()).map(|arr| {
+                arr.iter()
+                    .filter_map(|s| s.as_str().map(str::to_string))
+                    .collect()
+            }),
+        }
+    }
+
+    /// Is `name` required to be present? Declared sections and every
+    /// section of a legacy (no `sections` field) artifact are.
+    fn requires(&self, name: &str) -> bool {
+        match &self.declared {
+            None => true,
+            Some(d) => d.iter().any(|s| s == name),
+        }
+    }
+}
+
+/// Validate a stat-object section: all `keys` numeric when the section
+/// is present; its absence is an error only when the artifact requires
+/// it (see [`Sections`]).
+fn check_section(
+    v: &Json,
+    sections: &Sections,
+    name: &str,
+    keys: &[&str],
+    errs: &mut Vec<String>,
+    path: &str,
+) {
+    match v.get(name) {
+        Some(sec) => {
+            for key in keys {
+                check_num(sec, key, errs, &format!("{path}: {name}"));
+            }
+        }
+        None if sections.requires(name) => errs.push(format!("{path}: missing `{name}` object")),
+        None => {}
+    }
+}
+
+/// Solver schema: arena columns on every record, and the numeric-replay
+/// lanes all present.
+fn check_solver(path: &str, v: &Json, results: &[Json], errs: &mut Vec<String>) {
+    let sections = Sections::of(v);
+    let mut lanes: Vec<&str> = Vec::new();
+    for (i, rec) in results.iter().enumerate() {
+        let ctx = format!("{path}: results[{i}]");
+        for key in ["n", "nnz", "wall_s", "peak_front_bytes", "allocs"] {
+            check_num(rec, key, errs, &ctx);
+        }
+        if let Some(mode) = rec.get("mode").and_then(|m| m.as_str()) {
+            lanes.push(mode);
+            // batched lanes carry the multi-RHS amortization columns
+            if mode == "batched_warm" {
+                for key in ["batch_k", "per_request_s", "throughput_per_s"] {
+                    check_num(rec, key, errs, &ctx);
+                }
+            }
+        }
+    }
+    for lane in ["planned_numeric", "arena_numeric", "pipelined", "batched_warm"] {
+        if !lanes.contains(&lane) {
+            errs.push(format!("{path}: missing `{lane}` lane in results"));
+        }
+    }
+    if !lanes.iter().any(|l| l.starts_with("core_scaling_w")) {
+        errs.push(format!("{path}: missing `core_scaling_w*` lanes in results"));
+    }
+    check_section(
+        v,
+        &sections,
+        "fronts",
+        &["checkouts", "creates", "reuses", "grows"],
+        errs,
+        path,
+    );
+}
+
+/// Serving schema: per-record cold/warm latencies + arena flag, cache
+/// and pool stat sections, the batched warm path, latency quantiles.
+fn check_serving(path: &str, v: &Json, results: &[Json], errs: &mut Vec<String>) {
+    let sections = Sections::of(v);
+    for (i, rec) in results.iter().enumerate() {
+        let ctx = format!("{path}: results[{i}]");
+        for key in ["n", "nnz", "cold_s", "warm_s", "speedup", "numeric_only_s"] {
+            check_num(rec, key, errs, &ctx);
+        }
+        check_bool(rec, "warm_alloc_free", errs, &ctx);
+    }
+    check_section(
+        v,
+        &sections,
+        "fronts",
+        &["checkouts", "creates", "reuses", "grows"],
+        errs,
+        path,
+    );
+    // symbolic-plan cache counters (the warm path's cache layer),
+    // including the in-flight dedup pair (leaders / coalesced)
+    let cache_keys = [
+        "hits", "misses", "evictions", "inserts", "hit_rate", "leaders", "coalesced",
+    ];
+    check_section(v, &sections, "plans", &cache_keys, errs, path);
+    check_section(v, &sections, "cache", &cache_keys, errs, path);
+    // per-stage latency histograms folded into the stat block
+    check_section(
+        v,
+        &sections,
+        "latency",
+        &["count", "p50_s", "p99_s", "p999_s"],
+        errs,
+        path,
+    );
+    check_section(
+        v,
+        &sections,
+        "workspaces",
+        &["checkouts", "creates", "reuses"],
+        errs,
+        path,
+    );
+    // batched warm path: burst records + engine coalescing counters
+    match v.get("batched").and_then(|b| b.as_arr()) {
+        Some(recs) if !recs.is_empty() => {
+            for (i, rec) in recs.iter().enumerate() {
+                let ctx = format!("{path}: batched[{i}]");
+                for key in ["batch_k", "batch_s", "per_request_s", "throughput_per_s"] {
+                    check_num(rec, key, errs, &ctx);
+                }
+            }
+        }
+        Some(_) => errs.push(format!("{path}: empty `batched` array")),
+        None if sections.requires("batched") => {
+            errs.push(format!("{path}: missing non-empty `batched` array"))
+        }
+        None => {}
+    }
+    match v.get("batches") {
+        Some(bt) => {
+            for key in ["batches", "coalesced", "window_timeouts"] {
+                check_num(bt, key, errs, &format!("{path}: batches"));
+            }
+            if bt.get("size_hist").and_then(|h| h.as_arr()).is_none() {
+                errs.push(format!("{path}: batches: missing `size_hist` array"));
+            }
+        }
+        None if sections.requires("batches") => {
+            errs.push(format!("{path}: missing `batches` object"))
+        }
+        None => {}
+    }
+    check_num(v, "requests", errs, path);
+}
+
+/// Router schema: every lane carries throughput + tail latency + fleet
+/// dedup counters, plus a non-empty per-replica array with occupancy
+/// high-water marks; both loop modes must be present.
+fn check_router(path: &str, v: &Json, results: &[Json], errs: &mut Vec<String>) {
+    let mut modes: Vec<&str> = Vec::new();
+    for (i, rec) in results.iter().enumerate() {
+        let ctx = format!("{path}: results[{i}]");
+        for key in [
+            "replicas",
+            "requests",
+            "ok",
+            "rejected",
+            "throughput_per_s",
+            "p50_s",
+            "p99_s",
+            "p999_s",
+            "plan_hit_rate",
+            "leaders",
+            "coalesced",
+        ] {
+            check_num(rec, key, errs, &ctx);
+        }
+        match rec.get("mode").and_then(|m| m.as_str()) {
+            Some(mode) => modes.push(mode),
+            None => errs.push(format!("{ctx}: missing string `mode`")),
+        }
+        match rec.get("per_replica").and_then(|r| r.as_arr()) {
+            Some(reps) if !reps.is_empty() => {
+                for (j, rep) in reps.iter().enumerate() {
+                    let rctx = format!("{ctx}: per_replica[{j}]");
+                    for key in ["replica", "requests", "occupancy_hwm"] {
+                        check_num(rep, key, errs, &rctx);
+                    }
+                }
+            }
+            _ => errs.push(format!("{ctx}: missing non-empty `per_replica` array")),
+        }
+    }
+    for mode in ["closed", "open"] {
+        if !modes.contains(&mode) {
+            errs.push(format!("{path}: missing `{mode}`-loop lanes in results"));
+        }
+    }
+    for key in ["patterns", "zipf_s", "trace_len", "workers"] {
+        check_num(v, key, errs, path);
+    }
+}
+
+/// Online-learning schema: a windowed regret curve (>= 2 windows so
+/// first-vs-final regret is meaningful), the pick histogram, the
+/// fixed-policy baselines, the learner counter block, and the headline
+/// `regret_improved` flag.
+fn check_online(path: &str, v: &Json, results: &[Json], errs: &mut Vec<String>) {
+    let sections = Sections::of(v);
+    if results.len() < 2 {
+        errs.push(format!(
+            "{path}: need >= 2 window records for a regret curve"
+        ));
+    }
+    for (i, rec) in results.iter().enumerate() {
+        let ctx = format!("{path}: results[{i}]");
+        for key in [
+            "window",
+            "requests",
+            "regret_s",
+            "regret_per_req_s",
+            "explored",
+            "exploited",
+        ] {
+            check_num(rec, key, errs, &ctx);
+        }
+    }
+    match v.get("picks").and_then(|p| p.as_arr()) {
+        Some(picks) if !picks.is_empty() => {
+            for (i, p) in picks.iter().enumerate() {
+                let pctx = format!("{path}: picks[{i}]");
+                if p.get("algorithm").and_then(|a| a.as_str()).is_none() {
+                    errs.push(format!("{pctx}: missing string `algorithm`"));
+                }
+                check_num(p, "picked", errs, &pctx);
+            }
+        }
+        _ => errs.push(format!("{path}: missing non-empty `picks` array")),
+    }
+    check_section(
+        v,
+        &sections,
+        "baselines",
+        &[
+            "oracle_total_s",
+            "amd_regret_s",
+            "model_regret_s",
+            "learner_regret_s",
+        ],
+        errs,
+        path,
+    );
+    check_section(
+        v,
+        &sections,
+        "learner",
+        &[
+            "decisions",
+            "explored",
+            "observations",
+            "updates",
+            "dropped",
+            "regret_s",
+        ],
+        errs,
+        path,
+    );
+    for key in [
+        "patterns",
+        "zipf_s",
+        "trace_len",
+        "window",
+        "first_window_regret_s",
+        "final_window_regret_s",
+    ] {
+        check_num(v, key, errs, path);
+    }
+    check_bool(v, "regret_improved", errs, path);
+}
+
+/// Incremental-replanning schema: one record per drift size comparing
+/// cold re-analysis to plan repair, plus the drifting-trace serving
+/// counters — `repairs` / `repair_fallbacks` are the "no silent
+/// fallback" ledger the repair tier is accepted on.
+fn check_replan(path: &str, v: &Json, results: &[Json], errs: &mut Vec<String>) {
+    let sections = Sections::of(v);
+    for (i, rec) in results.iter().enumerate() {
+        let ctx = format!("{path}: results[{i}]");
+        for key in ["drift_edges", "cold_s", "repair_s", "speedup"] {
+            check_num(rec, key, errs, &ctx);
+        }
+    }
+    for key in ["n", "nnz"] {
+        check_num(v, key, errs, path);
+    }
+    check_section(
+        v,
+        &sections,
+        "serving",
+        &[
+            "requests",
+            "drift_steps",
+            "repairs",
+            "repair_fallbacks",
+            "hits",
+            "misses",
+            "repair_rate",
+            "cold_serve_s",
+            "repair_serve_s",
+        ],
+        errs,
+        path,
+    );
 }
 
 fn check_file(path: &str) -> Vec<String> {
@@ -57,253 +392,22 @@ fn check_file(path: &str) -> Vec<String> {
     if results.is_empty() {
         errs.push(format!("{path}: empty `results`"));
     }
-    for (i, rec) in results.iter().enumerate() {
-        if rec.get("name").and_then(|n| n.as_str()).is_none() {
-            errs.push(format!("{path}: results[{i}]: missing string `name`"));
-        }
-    }
 
-    // solver-specific schema: arena columns on every record, and the
-    // three numeric-replay lanes all present
-    if v.get("bench").and_then(|b| b.as_str()) == Some("bench_solver") {
-        let mut lanes: Vec<&str> = Vec::new();
-        for (i, rec) in results.iter().enumerate() {
-            let ctx = format!("{path}: results[{i}]");
-            for key in ["n", "nnz", "wall_s", "peak_front_bytes", "allocs"] {
-                check_num(rec, key, &mut errs, &ctx);
-            }
-            if let Some(mode) = rec.get("mode").and_then(|m| m.as_str()) {
-                lanes.push(mode);
-                // batched lanes carry the multi-RHS amortization columns
-                if mode == "batched_warm" {
-                    for key in ["batch_k", "per_request_s", "throughput_per_s"] {
-                        check_num(rec, key, &mut errs, &ctx);
-                    }
+    // per-bench dispatch: each artifact is gated by its own schema only
+    match v.get("bench").and_then(|b| b.as_str()) {
+        Some("bench_solver") => check_solver(path, &v, results, &mut errs),
+        Some("bench_serving") => check_serving(path, &v, results, &mut errs),
+        Some("bench_router") => check_router(path, &v, results, &mut errs),
+        Some("bench_online") => check_online(path, &v, results, &mut errs),
+        Some("bench_replan") => check_replan(path, &v, results, &mut errs),
+        _ => {
+            // untagged/other artifacts: the generic record contract
+            for (i, rec) in results.iter().enumerate() {
+                if rec.get("name").and_then(|n| n.as_str()).is_none() {
+                    errs.push(format!("{path}: results[{i}]: missing string `name`"));
                 }
             }
         }
-        for lane in ["planned_numeric", "arena_numeric", "pipelined", "batched_warm"] {
-            if !lanes.contains(&lane) {
-                errs.push(format!("{path}: missing `{lane}` lane in results"));
-            }
-        }
-        if !lanes.iter().any(|l| l.starts_with("core_scaling_w")) {
-            errs.push(format!("{path}: missing `core_scaling_w*` lanes in results"));
-        }
-        match v.get("fronts") {
-            Some(fr) => {
-                for key in ["checkouts", "creates", "reuses", "grows"] {
-                    check_num(fr, key, &mut errs, &format!("{path}: fronts"));
-                }
-            }
-            None => errs.push(format!("{path}: missing `fronts` object")),
-        }
-    }
-
-    // serving-specific schema
-    if v.get("bench").and_then(|b| b.as_str()) == Some("bench_serving") {
-        for (i, rec) in results.iter().enumerate() {
-            let ctx = format!("{path}: results[{i}]");
-            for key in ["n", "nnz", "cold_s", "warm_s", "speedup", "numeric_only_s"] {
-                check_num(rec, key, &mut errs, &ctx);
-            }
-            check_bool(rec, "warm_alloc_free", &mut errs, &ctx);
-        }
-        match v.get("fronts") {
-            Some(fr) => {
-                for key in ["checkouts", "creates", "reuses", "grows"] {
-                    check_num(fr, key, &mut errs, &format!("{path}: fronts"));
-                }
-            }
-            None => errs.push(format!("{path}: missing `fronts` object")),
-        }
-        // symbolic-plan cache counters (the warm path's cache layer),
-        // including the in-flight dedup pair (leaders / coalesced)
-        match v.get("plans") {
-            Some(plans) => {
-                for key in [
-                    "hits", "misses", "evictions", "inserts", "hit_rate", "leaders", "coalesced",
-                ] {
-                    check_num(plans, key, &mut errs, &format!("{path}: plans"));
-                }
-            }
-            None => errs.push(format!("{path}: missing `plans` object")),
-        }
-        match v.get("cache") {
-            Some(cache) => {
-                for key in [
-                    "hits", "misses", "evictions", "inserts", "hit_rate", "leaders", "coalesced",
-                ] {
-                    check_num(cache, key, &mut errs, &format!("{path}: cache"));
-                }
-            }
-            None => errs.push(format!("{path}: missing `cache` object")),
-        }
-        // per-stage latency histograms folded into the stat block
-        match v.get("latency") {
-            Some(lat) => {
-                for key in ["count", "p50_s", "p99_s", "p999_s"] {
-                    check_num(lat, key, &mut errs, &format!("{path}: latency"));
-                }
-            }
-            None => errs.push(format!("{path}: missing `latency` object")),
-        }
-        match v.get("workspaces") {
-            Some(ws) => {
-                for key in ["checkouts", "creates", "reuses"] {
-                    check_num(ws, key, &mut errs, &format!("{path}: workspaces"));
-                }
-            }
-            None => errs.push(format!("{path}: missing `workspaces` object")),
-        }
-        // batched warm path: burst records + engine coalescing counters
-        match v.get("batched").and_then(|b| b.as_arr()) {
-            Some(recs) if !recs.is_empty() => {
-                for (i, rec) in recs.iter().enumerate() {
-                    let ctx = format!("{path}: batched[{i}]");
-                    for key in ["batch_k", "batch_s", "per_request_s", "throughput_per_s"] {
-                        check_num(rec, key, &mut errs, &ctx);
-                    }
-                }
-            }
-            _ => errs.push(format!("{path}: missing non-empty `batched` array")),
-        }
-        match v.get("batches") {
-            Some(bt) => {
-                for key in ["batches", "coalesced", "window_timeouts"] {
-                    check_num(bt, key, &mut errs, &format!("{path}: batches"));
-                }
-                if bt.get("size_hist").and_then(|h| h.as_arr()).is_none() {
-                    errs.push(format!("{path}: batches: missing `size_hist` array"));
-                }
-            }
-            None => errs.push(format!("{path}: missing `batches` object")),
-        }
-        check_num(&v, "requests", &mut errs, path);
-    }
-
-    // router-specific schema: every lane carries throughput + tail
-    // latency + the fleet dedup counters, plus a non-empty per-replica
-    // array with admission-gate occupancy high-water marks; both loop
-    // modes must be present
-    if v.get("bench").and_then(|b| b.as_str()) == Some("bench_router") {
-        let mut modes: Vec<&str> = Vec::new();
-        for (i, rec) in results.iter().enumerate() {
-            let ctx = format!("{path}: results[{i}]");
-            for key in [
-                "replicas",
-                "requests",
-                "ok",
-                "rejected",
-                "throughput_per_s",
-                "p50_s",
-                "p99_s",
-                "p999_s",
-                "plan_hit_rate",
-                "leaders",
-                "coalesced",
-            ] {
-                check_num(rec, key, &mut errs, &ctx);
-            }
-            match rec.get("mode").and_then(|m| m.as_str()) {
-                Some(mode) => modes.push(mode),
-                None => errs.push(format!("{ctx}: missing string `mode`")),
-            }
-            match rec.get("per_replica").and_then(|r| r.as_arr()) {
-                Some(reps) if !reps.is_empty() => {
-                    for (j, rep) in reps.iter().enumerate() {
-                        let rctx = format!("{ctx}: per_replica[{j}]");
-                        for key in ["replica", "requests", "occupancy_hwm"] {
-                            check_num(rep, key, &mut errs, &rctx);
-                        }
-                    }
-                }
-                _ => errs.push(format!("{ctx}: missing non-empty `per_replica` array")),
-            }
-        }
-        for mode in ["closed", "open"] {
-            if !modes.contains(&mode) {
-                errs.push(format!("{path}: missing `{mode}`-loop lanes in results"));
-            }
-        }
-        for key in ["patterns", "zipf_s", "trace_len", "workers"] {
-            check_num(&v, key, &mut errs, path);
-        }
-    }
-    // online-learning schema: a windowed regret curve (>= 2 windows so
-    // first-vs-final regret is meaningful), the pick histogram, the
-    // fixed-policy baselines, the learner counter block, and the
-    // headline `regret_improved` flag
-    if v.get("bench").and_then(|b| b.as_str()) == Some("bench_online") {
-        if results.len() < 2 {
-            errs.push(format!(
-                "{path}: need >= 2 window records for a regret curve"
-            ));
-        }
-        for (i, rec) in results.iter().enumerate() {
-            let ctx = format!("{path}: results[{i}]");
-            for key in [
-                "window",
-                "requests",
-                "regret_s",
-                "regret_per_req_s",
-                "explored",
-                "exploited",
-            ] {
-                check_num(rec, key, &mut errs, &ctx);
-            }
-        }
-        match v.get("picks").and_then(|p| p.as_arr()) {
-            Some(picks) if !picks.is_empty() => {
-                for (i, p) in picks.iter().enumerate() {
-                    let pctx = format!("{path}: picks[{i}]");
-                    if p.get("algorithm").and_then(|a| a.as_str()).is_none() {
-                        errs.push(format!("{pctx}: missing string `algorithm`"));
-                    }
-                    check_num(p, "picked", &mut errs, &pctx);
-                }
-            }
-            _ => errs.push(format!("{path}: missing non-empty `picks` array")),
-        }
-        match v.get("baselines") {
-            Some(b) => {
-                for key in [
-                    "oracle_total_s",
-                    "amd_regret_s",
-                    "model_regret_s",
-                    "learner_regret_s",
-                ] {
-                    check_num(b, key, &mut errs, &format!("{path}: baselines"));
-                }
-            }
-            None => errs.push(format!("{path}: missing `baselines` object")),
-        }
-        match v.get("learner") {
-            Some(l) => {
-                for key in [
-                    "decisions",
-                    "explored",
-                    "observations",
-                    "updates",
-                    "dropped",
-                    "regret_s",
-                ] {
-                    check_num(l, key, &mut errs, &format!("{path}: learner"));
-                }
-            }
-            None => errs.push(format!("{path}: missing `learner` object")),
-        }
-        for key in [
-            "patterns",
-            "zipf_s",
-            "trace_len",
-            "window",
-            "first_window_regret_s",
-            "final_window_regret_s",
-        ] {
-            check_num(&v, key, &mut errs, path);
-        }
-        check_bool(&v, "regret_improved", &mut errs, path);
     }
     errs
 }

@@ -1,0 +1,198 @@
+//! Incremental-replanning benchmark: plan **repair** latency vs cold
+//! symbolic re-analysis across drift sizes, plus a drifting-pattern
+//! serving trace with the three-tier lookup counters.
+//!
+//! Run with `cargo bench --bench bench_replan`. Writes a
+//! machine-readable `BENCH_replan.json` (override with `BENCH_OUT`):
+//! one record per drift size with the cold re-analysis latency, the
+//! repair latency (diff + repair, the whole near-match tier cost), and
+//! the speedup; plus a `serving` object with the engine's repair
+//! counters over a Newton-like drifting trace — `repairs`,
+//! `repair_fallbacks`, hits/misses, and the repair rate over drift
+//! steps, proving the tier resolved the drift (no silent fallback).
+//! `ci.sh` validates this artifact's schema (via `examples/check_bench`)
+//! whenever it is present.
+
+use std::sync::Arc;
+
+use smr::collection::generate_mini_collection;
+use smr::collection::generators::grid2d;
+use smr::coordinator::service::Backend;
+use smr::coordinator::{ServingConfig, ServingEngine};
+use smr::dataset::{build_dataset, SweepConfig};
+use smr::ml::forest::{ForestParams, RandomForest};
+use smr::ml::normalize::{Method, Normalizer};
+use smr::ml::Classifier;
+use smr::reorder::ReorderAlgorithm;
+use smr::solver::{plan_solve, prepare, RepairConfig, SolverConfig};
+use smr::sparse::{CooMatrix, CsrMatrix};
+use smr::util::bench::{section, Bencher, JsonReport};
+use smr::util::json;
+use smr::util::Timer;
+
+/// Drift `a` by `k` new entries among the first two grid rows — leaf
+/// vertices under the natural ordering (eliminated long before the top
+/// of the tree), so every drift size stays on the repairable side of
+/// the separator gate.
+fn drifted_by(a: &CsrMatrix, nx: usize, k: usize) -> CsrMatrix {
+    let mut coo = CooMatrix::new(a.nrows, a.ncols);
+    for r in 0..a.nrows {
+        for (t, &c) in a.row_indices(r).iter().enumerate() {
+            coo.push(r, c, a.row_data(r)[t]);
+        }
+    }
+    let per_row = nx - 4; // columns 2.. of a row, skipping stencil edges
+    assert!(k <= 2 * per_row, "drift size exceeds the safe edit region");
+    for e in 0..k {
+        let (row, j) = (e / per_row, e % per_row);
+        coo.push(row * nx, row * nx + 2 + j, -0.125);
+    }
+    coo.to_csr()
+}
+
+fn main() {
+    let mut report = JsonReport::new();
+    report.set("bench", json::s("bench_replan"));
+
+    // ── micro lane: repair vs cold re-analysis per drift size ──────────
+    // Natural ordering keeps the lane deterministic and ML-free: the
+    // donor's frozen permutation is the identity, and the contest is
+    // purely symbolic work (full re-analysis) vs incremental repair.
+    let (nx, ny) = (40, 40);
+    let base = grid2d(nx, ny);
+    let cfg = SolverConfig::default();
+    let rcfg = RepairConfig::default();
+    section(&format!(
+        "setup: donor plan (n={}, nnz={})",
+        base.nrows,
+        base.nnz()
+    ));
+    let spd = prepare(&base, &cfg);
+    let perm = Arc::new(ReorderAlgorithm::Natural.compute(&spd, 0));
+    let donor = plan_solve(&base, perm.clone(), &cfg);
+    report.set("n", json::num(base.nrows as f64));
+    report.set("nnz", json::num(base.nnz() as f64));
+
+    for &drift in &[1usize, 4, 16, 64] {
+        section(&format!("drift size {drift}"));
+        let drifted = drifted_by(&base, nx, drift);
+
+        // cold re-analysis: what a plan-cache miss costs without the
+        // repair tier (symmetrize + reorder + full symbolic analysis)
+        let mut b = Bencher::coarse();
+        let cold = b
+            .bench(&format!("drift{drift}/cold"), || {
+                let spd = prepare(&drifted, &cfg);
+                let perm = Arc::new(ReorderAlgorithm::Natural.compute(&spd, 0));
+                plan_solve(&drifted, perm, &cfg)
+            })
+            .clone();
+
+        // repair: the whole near-match tier cost — structural diff plus
+        // incremental plan repair under the donor's frozen permutation
+        let repair = b
+            .bench(&format!("drift{drift}/repair"), || {
+                let diff = donor.diff_against(&drifted).expect("same order");
+                donor
+                    .repair(&drifted, &diff, &cfg, &rcfg)
+                    .expect("in-budget drift repairs")
+            })
+            .clone();
+
+        let speedup = cold.min_s / repair.min_s.max(1e-12);
+        println!(
+            "    cold {:.3} ms -> repair {:.3} ms ({speedup:.1}x)",
+            cold.min_s * 1e3,
+            repair.min_s * 1e3,
+        );
+        report.push(json::obj(vec![
+            ("drift_edges", json::num(drift as f64)),
+            ("cold_s", json::num(cold.min_s)),
+            ("repair_s", json::num(repair.min_s)),
+            ("speedup", json::num(speedup)),
+        ]));
+    }
+
+    // ── serving lane: a drifting trace through the full engine ─────────
+    section("setup: sweep + train forest backend");
+    let train_coll = generate_mini_collection(5, 2);
+    let ds = build_dataset(
+        &train_coll,
+        &ReorderAlgorithm::LABEL_SET,
+        &SweepConfig::default(),
+    );
+    let normalizer = Normalizer::fit(Method::Standard, &ds.features());
+    let mut forest = RandomForest::new(
+        ForestParams {
+            n_estimators: 30,
+            ..Default::default()
+        },
+        5,
+    );
+    forest.fit(&normalizer.transform(&ds.features()), &ds.labels(), 4);
+    let engine = ServingEngine::spawn(
+        Backend::Forest { normalizer, forest },
+        ServingConfig {
+            repair: Some(RepairConfig::default()),
+            ..ServingConfig::default()
+        },
+    )
+    .expect("serving engine spawns");
+
+    section("serving: drifting-pattern trace");
+    let steps = 12;
+    let trace: Vec<CsrMatrix> = (0..=steps).map(|k| drifted_by(&base, nx, k)).collect();
+    let t = Timer::start();
+    let cold = engine.serve(&trace[0]).expect("base request serves");
+    let cold_serve_s = t.elapsed_s();
+    let mut repair_serve_s = f64::INFINITY;
+    let mut repaired_steps = 0u64;
+    for m in &trace[1..] {
+        let t = Timer::start();
+        let r = engine.serve(m).expect("drift step serves");
+        let e = t.elapsed_s();
+        if r.repaired {
+            repaired_steps += 1;
+            repair_serve_s = repair_serve_s.min(e);
+        }
+    }
+    let stats = engine.stats();
+    let repair_rate = repaired_steps as f64 / steps as f64;
+    if repair_serve_s.is_infinite() {
+        repair_serve_s = 0.0; // no step repaired: keep the artifact finite
+    }
+    println!(
+        "    cold serve {:.3} ms | best repaired serve {:.3} ms | {} of {} drift steps repaired \
+         ({} fallbacks)",
+        cold_serve_s * 1e3,
+        repair_serve_s * 1e3,
+        repaired_steps,
+        steps,
+        stats.plans.repair_fallbacks,
+    );
+    assert!(!cold.plan_hit, "first request must be cold");
+    report.set(
+        "serving",
+        json::obj(vec![
+            ("requests", json::num(stats.requests as f64)),
+            ("drift_steps", json::num(steps as f64)),
+            ("repairs", json::num(stats.plans.repairs as f64)),
+            (
+                "repair_fallbacks",
+                json::num(stats.plans.repair_fallbacks as f64),
+            ),
+            ("hits", json::num(stats.plans.hits as f64)),
+            ("misses", json::num(stats.plans.misses as f64)),
+            ("repair_rate", json::num(repair_rate)),
+            ("cold_serve_s", json::num(cold_serve_s)),
+            ("repair_serve_s", json::num(repair_serve_s)),
+        ]),
+    );
+    engine.shutdown();
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_replan.json".into());
+    match report.write(&out) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\nfailed to write {out}: {e}"),
+    }
+}

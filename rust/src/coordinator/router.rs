@@ -231,6 +231,23 @@ impl RouterStats {
         self.replicas.iter().map(|r| r.serving.plans.coalesced).sum()
     }
 
+    /// Plan misses resolved by repairing a resident near-match plan
+    /// (drifted pattern, donor's frozen permutation) instead of
+    /// re-planning cold — fleet-wide.
+    pub fn plan_repairs(&self) -> u64 {
+        self.replicas.iter().map(|r| r.serving.plans.repairs).sum()
+    }
+
+    /// Misses where a repair donor existed but repair was refused
+    /// (drift over budget, separator touched, config mismatch) — the
+    /// fleet's "no silent fallback" counter.
+    pub fn plan_repair_fallbacks(&self) -> u64 {
+        self.replicas
+            .iter()
+            .map(|r| r.serving.plans.repair_fallbacks)
+            .sum()
+    }
+
     /// End-to-end latency distribution merged across replicas.
     pub fn e2e_latency(&self) -> HistSnapshot {
         self.replicas

@@ -38,6 +38,8 @@
 //!            ┌ features (degree-only, no graph build)
 //!            ├ predict (batched service)            — every request
 //!            ├ PlanCache lookup ──────────── hit ─┐
+//!            ├ near-match repair (drifted  ─ rep ─┤  [ServingConfig::repair]
+//!            │   pattern, donor's frozen perm)    │
 //!  cold only │                                    │
 //!            ├ prepare (symmetrize)                │
 //!            ├ MatrixAnalysis (adjacency graph)    │
@@ -46,6 +48,24 @@
 //!                                                  ▼
 //!                   solve_with_plan (numeric only, pooled scratch)
 //! ```
+//!
+//! ## Incremental replanning for drifting patterns
+//!
+//! With [`ServingConfig::repair`] set, a plan-cache miss consults the
+//! cache's near-match tier before paying the cold path: a recently
+//! planned pattern in the same `(n, algorithm, seed, config)` family is
+//! structurally diffed against the incoming matrix and, when the drift
+//! is small ([`RepairConfig`]), its plan is **repaired** under the
+//! donor's frozen permutation — skipping the reorderer, the adjacency
+//! analysis, *and the symmetrization of values* (the repair path builds
+//! the symmetrized pattern without touching numerics). A repaired plan
+//! is bit-identical to planning the drifted matrix from scratch under
+//! that permutation (`tests/prop_symbolic_plan.rs` holds the line).
+//! Refused repairs fall back to the cold path and are counted
+//! (`repair_fallbacks`), so drift silently outgrowing the budget is
+//! visible in [`ServingStats`]; [`ServingReport::repaired`] flags
+//! individual requests. Default is `None`: drifted patterns are plain
+//! cold misses, exactly as before.
 //!
 //! ## Batched warm path (same-plan request coalescing)
 //!
@@ -92,7 +112,7 @@ use crate::reorder::{MatrixAnalysis, Permutation, ReorderAlgorithm, WorkspacePoo
 use crate::solver::plan_cache::{PlanCache, PlanKey};
 use crate::solver::{
     plan_solve_prepared, prepare, solve_refreshed_batch, solve_with_plan, FactorError,
-    NumericWorkspace, SolveReport, SolverConfig, SymbolicFactorization,
+    NumericWorkspace, RepairConfig, SolveReport, SolverConfig, SymbolicFactorization,
 };
 use crate::sparse::CsrMatrix;
 use crate::util::hist::{HistSnapshot, LatencyHist};
@@ -139,6 +159,12 @@ pub struct ServingConfig {
     pub solver: SolverConfig,
     /// Seed every served ordering derives from (part of both cache keys).
     pub reorder_seed: u64,
+    /// Near-match plan repair for drifting patterns (`None` = off, the
+    /// default: a drifted pattern is a plain cold miss). When set, plan
+    /// misses try to repair a resident same-family plan within these
+    /// drift bounds before re-planning from scratch — see the module
+    /// docs and [`crate::solver::SymbolicFactorization::repair`].
+    pub repair: Option<RepairConfig>,
     /// Warm reorder workspaces kept parked between requests.
     pub max_idle_workspaces: usize,
     /// Online learning loop (`None` = pure offline serving, the
@@ -158,6 +184,7 @@ impl Default for ServingConfig {
             batch: BatchConfig::default(),
             solver: SolverConfig::default(),
             reorder_seed: 0xDA7A, // same stream as SelectionPipeline
+            repair: None,
             max_idle_workspaces: crate::util::pool::default_workers() + 1,
             learner: None,
         }
@@ -183,6 +210,12 @@ pub struct ServingReport {
     /// running its own (`plan_hit` is false; the symbolic work still
     /// happened exactly once, on the leader).
     pub plan_coalesced: bool,
+    /// This request's plan-cache miss was resolved by *repairing* a
+    /// resident near-match plan for a drifted pattern instead of
+    /// re-planning cold (`plan_hit` is false; no reordering, adjacency
+    /// analysis, or value symmetrization ran). Always false unless
+    /// [`ServingConfig::repair`] is set.
+    pub repaired: bool,
     /// How many same-plan requests shared this request's numeric
     /// traversal (1 = served alone; ≥ 2 = coalesced, and
     /// `solve.factor_s` is the traversal's wall time over `batch_k`).
@@ -375,6 +408,7 @@ pub struct ServingEngine {
     numeric: ObjectPool<NumericWorkspace>,
     solver: SolverConfig,
     batch: BatchConfig,
+    repair: Option<RepairConfig>,
     /// Open admission groups by plan key. An entry exists exactly while
     /// its leader holds the window open; joiners racing the removal of a
     /// sealed group see `closed` and retry.
@@ -459,6 +493,7 @@ struct Routed {
     reorder_s: f64,
     plan_hit: bool,
     plan_coalesced: bool,
+    repaired: bool,
     explored: bool,
     plan: Arc<SymbolicFactorization>,
     key: PlanKey,
@@ -483,6 +518,7 @@ impl ServingEngine {
             numeric: ObjectPool::new(max_idle),
             solver: cfg.solver,
             batch: cfg.batch,
+            repair: cfg.repair,
             batch_slots: Mutex::new(HashMap::new()),
             learner: cfg.learner.map(Learner::spawn),
             reorder_seed: cfg.reorder_seed,
@@ -543,7 +579,7 @@ impl ServingEngine {
 
         let t_r = Timer::start();
         let key = PlanKey::of(a, algorithm, self.reorder_seed, &self.solver);
-        let (plan, fetch) = self.plans.get_or_compute(key, || {
+        let cold = || {
             // cold path: one symmetrization feeds the analysis, the
             // ordering, and the symbolic plan
             let spd = prepare(a, &self.solver);
@@ -552,7 +588,15 @@ impl ServingEngine {
                 self.cache
                     .fetch_or_order(&analysis, algorithm, self.reorder_seed, &self.workspaces);
             plan_solve_prepared(a, &spd, perm, &self.solver)
-        });
+        };
+        let (plan, fetch, repaired) = match &self.repair {
+            // three-tier lookup: exact hit → near-match repair → cold
+            Some(rcfg) => self.plans.get_repair_or_compute(key, a, &self.solver, rcfg, cold),
+            None => {
+                let (plan, fetch) = self.plans.get_or_compute(key, cold);
+                (plan, fetch, false)
+            }
+        };
         let reorder_s = t_r.elapsed_s();
         Ok(Routed {
             algorithm,
@@ -562,6 +606,7 @@ impl ServingEngine {
             reorder_s,
             plan_hit: fetch.is_hit(),
             plan_coalesced: fetch == Fetch::Coalesced,
+            repaired,
             explored,
             plan,
             key,
@@ -577,6 +622,7 @@ impl ServingEngine {
             reorder_s: r.reorder_s,
             plan_hit: r.plan_hit,
             plan_coalesced: r.plan_coalesced,
+            repaired: r.repaired,
             batch_k,
             explored: r.explored,
             permutation: r.plan.perm.clone(),
@@ -959,6 +1005,56 @@ mod tests {
         assert!(warm.plan_hit, "structurally identical request missed");
         assert_eq!(warm.solve.fill, cold.solve.fill);
         assert!(warm.solve.residual < 1e-6);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn drifted_pattern_is_repaired_when_enabled() {
+        let cfg = ServingConfig {
+            repair: Some(RepairConfig::default()),
+            ..ServingConfig::default()
+        };
+        let engine = ServingEngine::spawn(forest_backend(), cfg).unwrap();
+        let a = mesh(10, 9);
+        let cold = engine.serve(&a).unwrap();
+        assert!(!cold.plan_hit && !cold.repaired);
+        let lookups_after_cold = engine.stats().cache.lookups();
+
+        // one-edge drift between two corner vertices (low degree under
+        // every ordering → leaf supernodes, far from any separator)
+        let mut coo = CooMatrix::new(a.nrows, a.ncols);
+        for r in 0..a.nrows {
+            for (k, &c) in a.row_indices(r).iter().enumerate() {
+                coo.push(r, c, a.row_data(r)[k]);
+            }
+        }
+        coo.push(0, 9, -0.25);
+        let drifted = coo.to_csr();
+
+        let rep = engine.serve(&drifted).unwrap();
+        assert_eq!(
+            rep.algorithm, cold.algorithm,
+            "one-edge drift flipped the prediction"
+        );
+        assert!(!rep.plan_hit);
+        assert!(rep.repaired, "in-budget drift must repair, not re-plan");
+        assert!(
+            Arc::ptr_eq(&rep.permutation, &cold.permutation),
+            "repair must keep the donor's frozen permutation"
+        );
+        assert!(rep.solve.residual < 1e-6);
+
+        let s = engine.stats();
+        assert_eq!(s.plans.repairs, 1);
+        assert_eq!(s.plans.repair_fallbacks, 0);
+        // a repaired request skips symmetrization and reordering
+        // entirely: the ordering cache never hears about it
+        assert_eq!(s.cache.lookups(), lookups_after_cold);
+
+        // replaying the drifted pattern is now a plain exact hit
+        let warm = engine.serve(&drifted).unwrap();
+        assert!(warm.plan_hit && !warm.repaired);
+        assert_eq!(warm.solve.fill, rep.solve.fill);
         engine.shutdown();
     }
 

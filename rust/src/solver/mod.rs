@@ -24,6 +24,11 @@
 //!   `(pattern, ordering, config)`, and replay requests through the
 //!   numeric-only [`factorize_with_plan`] / [`solve_with_plan`]. The
 //!   serving engine's warm path runs entirely on this side of the split.
+//!   Plans for *drifted* patterns (a few entries inserted/deleted) can be
+//!   built by [`SymbolicFactorization::repair`] from a near-match donor
+//!   under the donor's frozen permutation — bit-identical to from-scratch
+//!   planning, gated by [`RepairConfig`]; the plan cache's near-match
+//!   tier drives it (`plan_cache` module docs).
 //!
 //! ## Invariants
 //!
@@ -99,7 +104,8 @@ pub use numeric::{analyze, factorize, FactorError, LdlFactor, Symbolic};
 pub use plan::{
     factorize_refreshed, factorize_refreshed_batch, factorize_with_plan,
     factorize_with_plan_batch, plan_solve, plan_solve_prepared, solve_refreshed_batch,
-    solve_with_plan, solve_with_plan_batch, NumericWorkspace, SymbolicFactorization,
+    solve_with_plan, solve_with_plan_batch, NumericWorkspace, RepairConfig,
+    SymbolicFactorization,
 };
 pub use plan_cache::{PlanCache, PlanKey};
 pub use supernode::{FactorConfig, FactorMode, SupernodalPlan};

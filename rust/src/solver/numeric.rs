@@ -73,7 +73,11 @@ impl std::fmt::Display for FactorError {
 
 impl std::error::Error for FactorError {}
 
-/// Symbolic analysis result the numeric phase consumes.
+/// Symbolic analysis result the numeric phase consumes. `Clone` because
+/// [`crate::solver::plan`] retains it inside every uncapped plan (the
+/// etree/counts are the certificates the incremental repair path
+/// compares against) and hands clones to repaired descendants.
+#[derive(Clone, Debug)]
 pub struct Symbolic {
     pub parent: Vec<usize>,
     pub counts: Vec<usize>,

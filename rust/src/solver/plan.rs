@@ -39,6 +39,24 @@
 //! path goes predicted label → cached plan → [`solve_with_plan`] with
 //! zero symbolic work.
 //!
+//! **Incremental repair.** When a pattern *drifts* (a Newton step or
+//! adaptive mesh adds/removes a handful of entries), the exact key
+//! misses but the old plan is almost right. Every uncapped plan retains
+//! its raw base pattern, its scalar symbolic, and its `spd → kernel`
+//! slot map, and [`SymbolicFactorization::repair`] turns those into a
+//! new plan for the drifted matrix **under the frozen permutation** —
+//! skipping the reorderer, the adjacency-graph build, and the numeric
+//! symmetrization that dominate a cold miss. Bit-identity with
+//! from-scratch planning under the same permutation is by construction,
+//! not by incremental surgery: planning is value-pure, so repair feeds
+//! the same planning code a zero-valued carrier of the drifted spd
+//! *pattern* ([`crate::sparse::spd_pattern`]) and lets exact-equality
+//! certificates (`supernode::plan_with_reuse`, and a symmetrized-pattern
+//! fingerprint fast path that reuses every symbolic artifact verbatim)
+//! recover the sharing. Past the [`RepairConfig`] drift threshold — or
+//! when any edit touches a separator-grade supernode — `repair` returns
+//! `None` and the caller falls back to a cold analysis.
+//!
 //! When *several* requests share one plan, the batched entries
 //! ([`factorize_with_plan_batch`] / [`solve_with_plan_batch`], plus the
 //! value-level [`solve_refreshed_batch`] the serving admission layer
@@ -59,7 +77,7 @@ use super::supernode::{self, FactorConfig, FactorMode, SupernodalPlan};
 use super::supernodal;
 use super::{calibrated_flop_rate, prepare, SolveReport, SolverConfig};
 use crate::reorder::Permutation;
-use crate::sparse::CsrMatrix;
+use crate::sparse::{pattern_diff_parts, spd_pattern, CsrMatrix, PatternDiff, PatternKey};
 use crate::util::rng::Rng;
 use crate::util::Timer;
 
@@ -189,7 +207,9 @@ pub struct SymbolicFactorization {
     /// carries no numeric structures and [`solve_with_plan`] returns the
     /// rate-model estimate, exactly like `solve_ordered`.
     pub capped: bool,
-    /// Scalar path: etree parents + column counts of `PA`.
+    /// Etree parents + column counts of `PA` — consumed by the scalar
+    /// kernel, and retained on the supernodal path too as the repair
+    /// path's reusable symbolic (`None` only when `capped`).
     sym: Option<Symbolic>,
     /// Scalar path: pattern of `PA` (`indptr`, `indices`).
     pa_pattern: Option<(Vec<usize>, Vec<usize>)>,
@@ -197,6 +217,47 @@ pub struct SymbolicFactorization {
     snplan: Option<SupernodalPlan>,
     /// Value-refresh program (`None` only when `capped`).
     vals: Option<ValueMap>,
+    /// Raw base pattern the plan was built from (`None` when `capped`):
+    /// what the near-match tier diffs an incoming matrix against, and
+    /// what chained repairs re-diff from.
+    raw_pattern: Option<(Vec<usize>, Vec<usize>)>,
+    /// Fingerprint of the prepared (symmetrized) pattern — the repair
+    /// fast path's certificate that a drift left the spd structure, and
+    /// therefore every symbolic artifact, unchanged.
+    spd_key: PatternKey,
+    /// `spd slot → kernel slot` map (`None` when `capped`): rebuilding
+    /// only the value map on the fast path needs it.
+    s2t: Option<Vec<usize>>,
+    /// [`SolverConfig::plan_fingerprint`] the plan was built under —
+    /// repair refuses donors planned with different knobs.
+    config_fp: u64,
+}
+
+/// Drift thresholds for [`SymbolicFactorization::repair`]. Defaults are
+/// deliberately conservative: repair exists to absorb the
+/// few-entries-per-step drift of factorization-in-loop workloads, not to
+/// chase structurally different matrices with a stale permutation.
+#[derive(Clone, Copy, Debug)]
+pub struct RepairConfig {
+    /// Repair is attempted only while `|diff| ≤ max_drift · nnz`
+    /// (against the larger of the donor's and the incoming nnz). Past
+    /// it, fill quality under the frozen permutation is unvouched — fall
+    /// back to a cold reorder.
+    pub max_drift: f64,
+    /// Supernodal gate: an edit endpoint landing in a supernode whose
+    /// subtree carries at least this fraction of total flops (a
+    /// separator-grade node — its structure feeds most of the
+    /// elimination) forces fallback.
+    pub separator_flops: f64,
+}
+
+impl Default for RepairConfig {
+    fn default() -> Self {
+        RepairConfig {
+            max_drift: 0.05,
+            separator_flops: 0.5,
+        }
+    }
 }
 
 impl SymbolicFactorization {
@@ -208,6 +269,134 @@ impl SymbolicFactorization {
     /// multifrontally.
     pub fn supernodal(&self) -> Option<&SupernodalPlan> {
         self.snplan.as_ref()
+    }
+
+    /// The raw base pattern this plan was built from (`None` for capped
+    /// plans, which retain no repair state).
+    pub fn raw_pattern(&self) -> Option<(&[usize], &[usize])> {
+        self.raw_pattern
+            .as_ref()
+            .map(|(p, i)| (p.as_slice(), i.as_slice()))
+    }
+
+    /// The [`SolverConfig::plan_fingerprint`] this plan was built under.
+    pub fn config_fingerprint(&self) -> u64 {
+        self.config_fp
+    }
+
+    /// Structural diff from this plan's base pattern to `a` — the
+    /// near-match tier's drift measurement. `None` when the plan keeps
+    /// no base pattern (capped) or the orders differ.
+    pub fn diff_against(&self, a: &CsrMatrix) -> Option<PatternDiff> {
+        if a.nrows != self.n || a.ncols != self.n {
+            return None;
+        }
+        let (indptr, indices) = self.raw_pattern.as_ref()?;
+        Some(pattern_diff_parts(
+            self.n, indptr, indices, &a.indptr, &a.indices,
+        ))
+    }
+
+    /// Incremental replanning: build a plan for the drifted matrix `a`
+    /// (at structural distance `diff` from this plan's base pattern)
+    /// **under this plan's frozen permutation**, skipping everything a
+    /// cold miss pays before planning — reordering, the adjacency-graph
+    /// build, and numeric symmetrization ([`crate::sparse::spd_pattern`]
+    /// derives the prepared *structure* without touching values, which
+    /// suffices because planning is value-pure). Returns `None` when the
+    /// repair is refused: the donor is capped or was planned under
+    /// different knobs, the drift exceeds [`RepairConfig::max_drift`],
+    /// an edit touches a separator-grade supernode
+    /// ([`RepairConfig::separator_flops`]), or the drifted cost crosses
+    /// the flop cap (serving estimates off a stale permutation would be
+    /// worse than a cold reorder).
+    ///
+    /// The result is bit-identical to `plan_solve(a, self.perm, cfg)` —
+    /// factor values, permutation, fill, and value-refresh gather — by
+    /// construction: both run the same value-pure planning code on the
+    /// same structure (`tests/prop_symbolic_plan.rs` holds that line
+    /// across all seven algorithms, three factor modes, and chained
+    /// repairs). When the drift leaves the symmetrized pattern itself
+    /// unchanged (edits that only toggle one-sided storage of surviving
+    /// edges), a fingerprint fast path reuses every symbolic artifact
+    /// verbatim and rebuilds only the value map's raw-slot sources.
+    pub fn repair(
+        &self,
+        a: &CsrMatrix,
+        diff: &PatternDiff,
+        cfg: &SolverConfig,
+        rcfg: &RepairConfig,
+    ) -> Option<SymbolicFactorization> {
+        if self.capped || a.nrows != self.n || a.ncols != self.n || diff.n != self.n {
+            return None;
+        }
+        if cfg.plan_fingerprint() != self.config_fp {
+            return None;
+        }
+        let budget = rcfg.max_drift * self.raw_nnz.max(a.nnz()) as f64;
+        if diff.len() as f64 > budget {
+            return None;
+        }
+        if let Some(sn) = &self.snplan {
+            // separator gate: map each edit endpoint through the frozen
+            // permutation and the postorder into the old plan's supernode
+            // partition; a hit on a subtree carrying most of the flops
+            // means the edit perturbs the top of the elimination
+            let total = sn.total_flops().max(1.0);
+            let p = self.perm.as_slice();
+            for (r, c) in diff.edges() {
+                for v in [r, c] {
+                    let s = sn.snode_of(sn.pnew[p[v]]);
+                    if sn.subtree_flops[s] >= rcfg.separator_flops * total {
+                        return None;
+                    }
+                }
+            }
+        }
+
+        // pattern-only symmetrization: a zero-valued carrier of the
+        // drifted spd structure plans bit-identically to the fully
+        // symmetrized matrix (planning never reads values)
+        let (indptr, indices) = spd_pattern(a);
+        let nnz_spd = indices.len();
+        let spd = CsrMatrix {
+            nrows: self.n,
+            ncols: self.n,
+            indptr,
+            indices,
+            data: vec![0.0; nnz_spd],
+        };
+
+        let repaired = if self.spd_key == PatternKey::of(&spd) {
+            // fast path: the drift only toggled one-sided storage of
+            // edges whose symmetrized union survives, so the prepared
+            // pattern — and with it every symbolic artifact — is
+            // unchanged. Only the value map's raw-slot sources moved.
+            let s2t = self.s2t.as_ref().expect("uncapped plans keep s2t");
+            let vals = ValueMap::build(a, &spd, s2t, cfg.diag_boost);
+            SymbolicFactorization {
+                n: self.n,
+                raw_nnz: a.nnz(),
+                perm: self.perm.clone(),
+                factor: self.factor,
+                cost: self.cost,
+                capped: false,
+                sym: self.sym.clone(),
+                pa_pattern: self.pa_pattern.clone(),
+                snplan: self.snplan.clone(),
+                vals: Some(vals),
+                raw_pattern: Some((a.indptr.clone(), a.indices.clone())),
+                spd_key: self.spd_key,
+                s2t: Some(s2t.clone()),
+                config_fp: self.config_fp,
+            }
+        } else {
+            plan_prepared_reusing(a, &spd, self.perm.clone(), cfg, Some(self))
+        };
+        if repaired.capped {
+            return None;
+        }
+        Some(repaired)
     }
 
     /// Peak dense frontal-matrix footprint in bytes of the multifrontal
@@ -285,10 +474,29 @@ pub fn plan_solve_prepared(
     perm: Arc<Permutation>,
     cfg: &SolverConfig,
 ) -> SymbolicFactorization {
+    plan_prepared_reusing(a, spd, perm, cfg, None)
+}
+
+/// The shared planning body: [`plan_solve_prepared`] with an optional
+/// donor plan whose `Arc`ed structures are adopted when the fresh
+/// computation reproduces them bit-for-bit (see
+/// `supernode::plan_with_reuse`). The repair path passes the drifted
+/// pattern's donor; the cold path passes `None`. Everything symbolic is
+/// always computed fresh — reuse is a sharing optimization, never a
+/// correctness shortcut.
+fn plan_prepared_reusing(
+    a: &CsrMatrix,
+    spd: &CsrMatrix,
+    perm: Arc<Permutation>,
+    cfg: &SolverConfig,
+    donor: Option<&SymbolicFactorization>,
+) -> SymbolicFactorization {
     assert_eq!(a.nrows, a.ncols, "plans need a square matrix");
     assert_eq!(spd.nrows, a.nrows, "prepared matrix shape mismatch");
     assert_eq!(perm.len(), a.nrows, "permutation length mismatch");
     let n = a.nrows;
+    let spd_key = PatternKey::of(spd);
+    let config_fp = cfg.plan_fingerprint();
     let pa = perm.apply(spd);
     // scalar symbolic first (O(n + nnz) space): the flop-cap guard must
     // decide before the supernodal plan allocates the O(nnz(L)) exact
@@ -307,6 +515,10 @@ pub fn plan_solve_prepared(
             pa_pattern: None,
             snplan: None,
             vals: None,
+            raw_pattern: None,
+            spd_key,
+            s2t: None,
+            config_fp,
         };
     }
 
@@ -323,6 +535,7 @@ pub fn plan_solve_prepared(
             s2pa[k] = pa.indptr[nr] + pos;
         }
     }
+    let raw_pattern = Some((a.indptr.clone(), a.indices.clone()));
 
     match cfg.factor.mode {
         FactorMode::Scalar => {
@@ -338,10 +551,19 @@ pub fn plan_solve_prepared(
                 pa_pattern: Some((pa.indptr, pa.indices)),
                 snplan: None,
                 vals: Some(vals),
+                raw_pattern,
+                spd_key,
+                s2t: Some(s2pa),
+                config_fp,
             }
         }
         FactorMode::Supernodal | FactorMode::SupernodalParallel => {
-            let snplan = supernode::plan_with(&pa, &sym, &cfg.factor);
+            let snplan = supernode::plan_with_reuse(
+                &pa,
+                &sym,
+                &cfg.factor,
+                donor.and_then(|d| d.snplan.as_ref()),
+            );
             // compose with the postorder gather: target layout becomes B
             let mut pa2b = vec![0usize; pa.nnz()];
             for (kb, &ks) in snplan.b_from.iter().enumerate() {
@@ -358,10 +580,14 @@ pub fn plan_solve_prepared(
                 factor: cfg.factor,
                 cost,
                 capped: false,
-                sym: None,
+                sym: Some(sym),
                 pa_pattern: None,
                 snplan: Some(snplan),
                 vals: Some(vals),
+                raw_pattern,
+                spd_key,
+                s2t: Some(s2pa),
+                config_fp,
             }
         }
     }
@@ -391,15 +617,17 @@ pub fn factorize_refreshed(
     vals: &[f64],
 ) -> Result<LdlFactor, FactorError> {
     assert!(!plan.capped, "capped plans carry no numeric structure");
-    match (&plan.sym, &plan.snplan) {
-        (Some(sym), _) => {
+    // dispatch on the kernel structure: supernodal plans also retain the
+    // scalar symbolic (repair state), so `snplan` decides the path
+    match (&plan.snplan, &plan.sym) {
+        (Some(sn), _) => supernodal::factorize_supernodal_gathered(vals, sn, &plan.factor),
+        (None, Some(sym)) => {
             let (indptr, indices) = plan
                 .pa_pattern
                 .as_ref()
                 .expect("scalar plans keep the permuted pattern");
             numeric::factorize_parts(plan.n, indptr, indices, vals, sym)
         }
-        (None, Some(sn)) => supernodal::factorize_supernodal_gathered(vals, sn, &plan.factor),
         (None, None) => unreachable!("plan carries neither path"),
     }
 }
@@ -845,5 +1073,121 @@ mod tests {
             let r = solve_with_plan(&raw, &plan, &cfg, &mut ws).unwrap();
             assert_eq!(r.fill, n as u64);
         }
+    }
+
+    /// `a` with one extra stored entry at `(i, j)`.
+    fn with_extra_entry(a: &CsrMatrix, i: usize, j: usize, v: f64) -> CsrMatrix {
+        let mut coo = CooMatrix::new(a.nrows, a.ncols);
+        for r in 0..a.nrows {
+            for (k, &c) in a.row_indices(r).iter().enumerate() {
+                coo.push(r, c, a.row_data(r)[k]);
+            }
+        }
+        coo.push(i, j, v);
+        coo.to_csr()
+    }
+
+    #[test]
+    fn repair_matches_scratch_plan_under_frozen_perm() {
+        let raw = mesh(9, 8);
+        for mode in [
+            FactorMode::Scalar,
+            FactorMode::Supernodal,
+            FactorMode::SupernodalParallel,
+        ] {
+            let cfg = mode_cfg(mode);
+            let spd = prepare(&raw, &cfg);
+            let perm = Arc::new(ReorderAlgorithm::Amd.compute(&spd, 3));
+            let donor = plan_solve(&raw, perm.clone(), &cfg);
+            let drifted = with_extra_entry(&raw, 0, 5, -0.25);
+            let diff = donor.diff_against(&drifted).unwrap();
+            assert_eq!(diff.len(), 1, "one inserted coordinate");
+            let rep = donor
+                .repair(&drifted, &diff, &cfg, &RepairConfig::default())
+                .expect("small drift must repair");
+            assert!(Arc::ptr_eq(&rep.perm, &donor.perm), "ordering not frozen");
+
+            let scratch = plan_solve(&drifted, perm.clone(), &cfg);
+            assert_eq!(rep.cost, scratch.cost, "{mode:?}: symbolic cost diverged");
+            let (mut ws_r, mut ws_s) = (NumericWorkspace::new(), NumericWorkspace::new());
+            let fr = factorize_with_plan(&drifted, &rep, &mut ws_r).unwrap();
+            let fs = factorize_with_plan(&drifted, &scratch, &mut ws_s).unwrap();
+            assert_eq!(ws_r.vals, ws_s.vals, "{mode:?}: value refresh diverged");
+            assert_eq!(fr.lx, fs.lx, "{mode:?}");
+            assert_eq!(fr.d, fs.d, "{mode:?}");
+            assert_eq!(fr.fill(), fs.fill(), "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn repair_fast_path_reuses_symbolic_arcs_when_spd_pattern_survives() {
+        // (1,3) is stored one-sided in `lopsided()`: adding (3,1) changes
+        // the raw pattern but not the symmetrized union, so the repair
+        // fast path must adopt the donor's symbolic structures verbatim
+        let raw = lopsided();
+        let cfg = mode_cfg(FactorMode::Supernodal);
+        let spd = prepare(&raw, &cfg);
+        let perm = Arc::new(ReorderAlgorithm::Amd.compute(&spd, 3));
+        let donor = plan_solve(&raw, perm.clone(), &cfg);
+        let drifted = with_extra_entry(&raw, 3, 1, 9.0);
+        let diff = donor.diff_against(&drifted).unwrap();
+        assert_eq!(diff.len(), 1);
+        let rcfg = RepairConfig {
+            max_drift: 0.5, // the tiny fixture needs a loose budget
+            ..RepairConfig::default()
+        };
+        let rep = donor.repair(&drifted, &diff, &cfg, &rcfg).unwrap();
+        let (dsn, rsn) = (donor.supernodal().unwrap(), rep.supernodal().unwrap());
+        assert!(Arc::ptr_eq(&dsn.post, &rsn.post), "postorder not shared");
+        assert!(Arc::ptr_eq(&dsn.lp, &rsn.lp), "factor pointers not shared");
+        assert!(Arc::ptr_eq(&dsn.li, &rsn.li), "factor pattern not shared");
+
+        let scratch = plan_solve(&drifted, perm, &cfg);
+        let (mut ws_r, mut ws_s) = (NumericWorkspace::new(), NumericWorkspace::new());
+        let fr = factorize_with_plan(&drifted, &rep, &mut ws_r).unwrap();
+        let fs = factorize_with_plan(&drifted, &scratch, &mut ws_s).unwrap();
+        assert_eq!(ws_r.vals, ws_s.vals);
+        assert_eq!(fr.lx, fs.lx);
+        assert_eq!(fr.d, fs.d);
+    }
+
+    #[test]
+    fn repair_refuses_oversize_drift_config_mismatch_and_capped_donors() {
+        let raw = mesh(9, 8);
+        let cfg = SolverConfig::default();
+        let spd = prepare(&raw, &cfg);
+        let perm = Arc::new(ReorderAlgorithm::Amd.compute(&spd, 3));
+        let donor = plan_solve(&raw, perm.clone(), &cfg);
+        let drifted = with_extra_entry(&raw, 0, 5, -0.25);
+        let diff = donor.diff_against(&drifted).unwrap();
+
+        // zero drift budget: any edit is past the threshold
+        let strict = RepairConfig {
+            max_drift: 0.0,
+            ..RepairConfig::default()
+        };
+        assert!(donor.repair(&drifted, &diff, &cfg, &strict).is_none());
+
+        // planned under different knobs
+        let other_cfg = SolverConfig {
+            diag_boost: 3.0,
+            ..SolverConfig::default()
+        };
+        assert!(donor
+            .repair(&drifted, &diff, &other_cfg, &RepairConfig::default())
+            .is_none());
+
+        // capped donors retain no repair state
+        let capped_cfg = SolverConfig {
+            flop_cap: 10.0,
+            ..SolverConfig::default()
+        };
+        let capped = plan_solve(&raw, perm, &capped_cfg);
+        assert!(capped.capped);
+        assert!(capped.raw_pattern().is_none());
+        assert!(capped.diff_against(&drifted).is_none());
+        assert!(capped
+            .repair(&drifted, &diff, &capped_cfg, &RepairConfig::default())
+            .is_none());
     }
 }

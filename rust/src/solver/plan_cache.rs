@@ -18,10 +18,29 @@
 //! the shared [`ShardedCache`]; the default capacity is smaller than the
 //! ordering cache's because a plan holds the O(nnz(L)) factor pattern,
 //! not an O(n) permutation.
+//!
+//! **The near-match repair tier.** A drifting pattern (Newton steps,
+//! adaptive meshes) misses the exact key on every step even though a
+//! near-identical plan is resident. [`PlanCache::get_repair_or_compute`]
+//! therefore runs a three-tier lookup — **exact hit → near-match repair
+//! → cold miss**: on a miss, the elected leader consults a small MRU
+//! index of recently planned keys sharing this key's
+//! `(n, algorithm, seed, config)` family ([`NearKey`]), diffs the
+//! incoming pattern against each resident donor's base pattern
+//! ([`SymbolicFactorization::diff_against`]), and asks the closest donor
+//! to [`SymbolicFactorization::repair`] itself before falling back to
+//! the cold compute. Repairs and refused repairs are counted
+//! (`repairs` / `repair_fallbacks` in [`CacheStats`]) so a silent slide
+//! back to cold planning is visible in the serving stats. The tier
+//! lives entirely inside the leader's compute closure, so the in-flight
+//! dedup story is unchanged: a stampede on a drifted pattern costs one
+//! repair (or one cold plan), never k.
 
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
-use super::plan::SymbolicFactorization;
+use super::plan::{RepairConfig, SymbolicFactorization};
 use super::SolverConfig;
 use crate::reorder::ReorderAlgorithm;
 use crate::sparse::{CsrMatrix, PatternKey};
@@ -60,16 +79,58 @@ impl PlanKey {
     }
 }
 
+/// The plan-family identity used by the near-match repair tier: every
+/// field of [`PlanKey`] *except* the exact pattern fingerprint, plus the
+/// matrix order. Two keys in one family describe "the same problem with
+/// a (possibly) drifted pattern" — only same-family residents are
+/// considered as repair donors, because a repaired plan must keep the
+/// donor's permutation, algorithm, seed, and planning knobs to stay
+/// bit-identical with a from-scratch plan under that permutation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct NearKey {
+    n: usize,
+    algorithm: ReorderAlgorithm,
+    seed: u64,
+    config: u64,
+}
+
+impl NearKey {
+    fn of(key: &PlanKey) -> NearKey {
+        NearKey {
+            n: key.pattern.n,
+            algorithm: key.algorithm,
+            seed: key.seed,
+            config: key.config,
+        }
+    }
+}
+
+/// Per-family MRU ring depth of the near-match index. Drifting
+/// workloads revisit the last few steps' patterns; deeper history only
+/// adds donors whose drift is larger (and therefore never the best
+/// candidate).
+const NEAR_RING: usize = 3;
+
 /// Bounded, sharded plan cache (a [`ShardedCache`] instantiation — see
-/// the module docs for keying, `util::cache` for mechanics).
+/// the module docs for keying, `util::cache` for mechanics) plus the
+/// near-match repair tier (module docs).
 pub struct PlanCache {
     inner: ShardedCache<PlanKey, SymbolicFactorization>,
+    /// `family → MRU ring of recently planned keys` (≤ [`NEAR_RING`]
+    /// each). Keys may outlive their cache entry after eviction; stale
+    /// ones resolve to nothing at donor-lookup time and are harmless.
+    near: Mutex<HashMap<NearKey, Vec<PlanKey>>>,
+    repairs: AtomicU64,
+    repair_fallbacks: AtomicU64,
 }
 
 impl PlanCache {
     pub fn new(cfg: CacheConfig) -> Self {
         PlanCache {
             inner: ShardedCache::new(cfg),
+            near: Mutex::new(HashMap::new()),
+            repairs: AtomicU64::new(0),
+            repair_fallbacks: AtomicU64::new(0),
         }
     }
 
@@ -114,12 +175,16 @@ impl PlanCache {
     }
 
     /// Idempotent insert (see `util::cache`): the resident entry wins.
+    /// Inserted keys join the near-match index so they can serve as
+    /// repair donors.
     pub fn insert(
         &self,
         key: PlanKey,
         plan: Arc<SymbolicFactorization>,
     ) -> Arc<SymbolicFactorization> {
-        self.inner.insert(key, plan)
+        let resident = self.inner.insert(key, plan);
+        self.register_near(key);
+        resident
     }
 
     /// One counted lookup; on miss, plan *outside* every lock and
@@ -133,11 +198,114 @@ impl PlanCache {
         key: PlanKey,
         compute: impl FnOnce() -> SymbolicFactorization,
     ) -> (Arc<SymbolicFactorization>, Fetch) {
-        self.inner.get_or_compute(key, compute)
+        let (plan, fetch) = self.inner.get_or_compute(key, compute);
+        if fetch == Fetch::Led {
+            self.register_near(key);
+        }
+        (plan, fetch)
+    }
+
+    /// Three-tier lookup: **exact hit → near-match repair → cold miss**
+    /// (module docs). Same dedup contract as [`Self::get_or_compute`] —
+    /// the repair attempt runs inside the elected leader's compute
+    /// closure, so a stampede on a drifted pattern costs one repair (or
+    /// one cold plan). Returns the plan, the fetch outcome, and whether
+    /// *this call's* leader resolved the miss by repairing a near-match
+    /// (always `false` for hits, coalesced waiters, and cold computes).
+    ///
+    /// `a` must be the matrix `key` was derived from; `cfg` the solver
+    /// config behind `key.config`. Repair eligibility and the
+    /// bit-identity contract are [`SymbolicFactorization::repair`]'s.
+    pub fn get_repair_or_compute(
+        &self,
+        key: PlanKey,
+        a: &CsrMatrix,
+        cfg: &SolverConfig,
+        rcfg: &RepairConfig,
+        compute: impl FnOnce() -> SymbolicFactorization,
+    ) -> (Arc<SymbolicFactorization>, Fetch, bool) {
+        let mut repaired = false;
+        let (plan, fetch) = self.inner.get_or_compute(key, || {
+            match self.try_repair(&key, a, cfg, rcfg) {
+                Some(plan) => {
+                    repaired = true;
+                    plan
+                }
+                None => compute(),
+            }
+        });
+        if fetch == Fetch::Led {
+            self.register_near(key);
+        }
+        (plan, fetch, repaired)
+    }
+
+    /// The near-match tier body (leader-only): resolve this key's
+    /// family ring to resident donors, diff each donor's base pattern
+    /// against `a`, and ask the structurally closest one to repair.
+    /// Counts one repair on success; one fallback if at least one
+    /// diffable donor existed but repair was refused (the "no silent
+    /// fallback" counter). An empty/cold family counts nothing — that
+    /// is a genuine cold miss, not a failed repair.
+    fn try_repair(
+        &self,
+        key: &PlanKey,
+        a: &CsrMatrix,
+        cfg: &SolverConfig,
+        rcfg: &RepairConfig,
+    ) -> Option<SymbolicFactorization> {
+        let ring: Vec<PlanKey> = {
+            let near = self.near.lock().unwrap();
+            match near.get(&NearKey::of(key)) {
+                Some(ring) => ring.clone(),
+                None => return None,
+            }
+        };
+        let mut best: Option<(Arc<SymbolicFactorization>, crate::sparse::PatternDiff)> = None;
+        for ck in ring {
+            if ck == *key {
+                continue; // racing leader already planned it; peek below would hit anyway
+            }
+            // peek: uncounted + recency-neutral — a donor probe must not
+            // distort hit/miss stats or keep stale donors artificially warm
+            let Some(donor) = self.inner.peek(&ck) else {
+                continue; // evicted since registration
+            };
+            let Some(diff) = donor.diff_against(a) else {
+                continue; // capped donor (no retained pattern) or order mismatch
+            };
+            if best.as_ref().map_or(true, |(_, b)| diff.len() < b.len()) {
+                best = Some((donor, diff));
+            }
+        }
+        let (donor, diff) = best?;
+        match donor.repair(a, &diff, cfg, rcfg) {
+            Some(plan) => {
+                self.repairs.fetch_add(1, Ordering::Relaxed);
+                Some(plan)
+            }
+            None => {
+                self.repair_fallbacks.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// MRU-register `key` in its family ring (dedup, front-insert,
+    /// truncate to [`NEAR_RING`]).
+    fn register_near(&self, key: PlanKey) {
+        let mut near = self.near.lock().unwrap();
+        let ring = near.entry(NearKey::of(&key)).or_default();
+        ring.retain(|k| *k != key);
+        ring.insert(0, key);
+        ring.truncate(NEAR_RING);
     }
 
     pub fn stats(&self) -> CacheStats {
-        self.inner.stats()
+        let mut s = self.inner.stats();
+        s.repairs = self.repairs.load(Ordering::Relaxed);
+        s.repair_fallbacks = self.repair_fallbacks.load(Ordering::Relaxed);
+        s
     }
 }
 
@@ -194,5 +362,67 @@ mod tests {
         assert_eq!(f.fill(), plan.cost.fill);
         let s = cache.stats();
         assert_eq!((s.hits, s.misses), (1, 1));
+    }
+
+    fn with_extra(a: &CsrMatrix, i: usize, j: usize, v: f64) -> CsrMatrix {
+        let mut coo = crate::sparse::CooMatrix::new(a.nrows, a.ncols);
+        for r in 0..a.nrows {
+            for (k, &c) in a.row_indices(r).iter().enumerate() {
+                coo.push(r, c, a.row_data(r)[k]);
+            }
+        }
+        coo.push(i, j, v);
+        coo.to_csr()
+    }
+
+    #[test]
+    fn repair_tier_repairs_near_matches_and_counts_fallbacks() {
+        let a = mesh(7, 6);
+        let cfg = SolverConfig::default();
+        let rcfg = RepairConfig::default();
+        let cache = PlanCache::with_default_config();
+        let perm = Arc::new(Permutation::identity(a.nrows));
+
+        // cold miss: plans from scratch and registers the family ring
+        let key = PlanKey::of(&a, ReorderAlgorithm::Natural, 0, &cfg);
+        let (_, fetch, repaired) = cache.get_repair_or_compute(key, &a, &cfg, &rcfg, || {
+            plan_solve(&a, perm.clone(), &cfg)
+        });
+        assert_eq!((fetch, repaired), (Fetch::Led, false));
+
+        // one-edge drift: the near-match tier must repair, not cold-plan
+        let drifted = with_extra(&a, 0, 5, -0.125);
+        let key2 = PlanKey::of(&drifted, ReorderAlgorithm::Natural, 0, &cfg);
+        assert_ne!(key, key2);
+        let (plan2, f2, r2) = cache.get_repair_or_compute(key2, &drifted, &cfg, &rcfg, || {
+            unreachable!("drift within budget must repair, not cold-plan")
+        });
+        assert_eq!((f2, r2), (Fetch::Led, true));
+        let scratch = plan_solve(&drifted, perm.clone(), &cfg);
+        assert_eq!(plan2.cost, scratch.cost);
+
+        // replaying the drifted key is a plain exact hit, no repair
+        let (plan3, f3, r3) =
+            cache.get_repair_or_compute(key2, &drifted, &cfg, &rcfg, || unreachable!("must hit"));
+        assert!(f3.is_hit() && !r3);
+        assert!(Arc::ptr_eq(&plan2, &plan3));
+
+        // zero drift budget: donors exist but repair refuses → counted
+        // fallback, cold compute runs
+        let strict = RepairConfig {
+            max_drift: 0.0,
+            ..RepairConfig::default()
+        };
+        let drifted2 = with_extra(&a, 1, 4, 0.25);
+        let key3 = PlanKey::of(&drifted2, ReorderAlgorithm::Natural, 0, &cfg);
+        let (_, f4, r4) = cache.get_repair_or_compute(key3, &drifted2, &cfg, &strict, || {
+            plan_solve(&drifted2, perm.clone(), &cfg)
+        });
+        assert_eq!((f4, r4), (Fetch::Led, false));
+
+        let s = cache.stats();
+        assert_eq!(s.repairs, 1);
+        assert_eq!(s.repair_fallbacks, 1);
+        assert_eq!((s.hits, s.misses), (1, 3));
     }
 }

@@ -202,6 +202,25 @@ pub fn plan(a: &CsrMatrix, cfg: &FactorConfig) -> SupernodalPlan {
 /// a postorder is a topological relabeling, so nothing symbolic needs
 /// recomputing on the permuted pattern.
 pub fn plan_with(a: &CsrMatrix, sym: &Symbolic, cfg: &FactorConfig) -> SupernodalPlan {
+    plan_with_reuse(a, sym, cfg, None)
+}
+
+/// [`plan_with`] with structure sharing against a predecessor plan — the
+/// incremental-replanning entry (`solver::plan`'s repair path hands the
+/// drifted pattern's donor plan in). The analysis itself is always run
+/// fresh (that is what makes repair bit-identical to from-scratch
+/// planning by construction); what `prev` buys is **exact-equality
+/// certificates** for the `Arc`ed structural arrays: when the freshly
+/// computed postorder (or factor structure) equals the donor's, the
+/// donor's `Arc` is adopted instead of allocating a new one, so every
+/// factor the repaired plan family produces keeps sharing one postorder
+/// and one `lp`/`li` across pattern drift that leaves them unchanged.
+pub fn plan_with_reuse(
+    a: &CsrMatrix,
+    sym: &Symbolic,
+    cfg: &FactorConfig,
+    prev: Option<&SupernodalPlan>,
+) -> SupernodalPlan {
     let n = a.nrows;
     assert_eq!(a.nrows, a.ncols, "plan needs a square matrix");
 
@@ -434,9 +453,21 @@ pub fn plan_with(a: &CsrMatrix, sym: &Symbolic, cfg: &FactorConfig) -> Supernoda
         rows.push(s.rows);
     }
 
+    // exact-equality certificates: adopt the donor's Arcs when the fresh
+    // arrays match bit-for-bit, so a repaired plan family keeps sharing
+    // one postorder / factor structure across drift that preserves them
+    let post = match prev {
+        Some(p) if *p.post == post => p.post.clone(),
+        _ => Arc::new(post),
+    };
+    let (lp, li) = match prev {
+        Some(p) if *p.lp == lp && *p.li == li => (p.lp.clone(), p.li.clone()),
+        _ => (Arc::new(lp), Arc::new(li)),
+    };
+
     SupernodalPlan {
         n,
-        post: Arc::new(post),
+        post,
         pnew,
         b_indptr,
         b_indices,
@@ -446,8 +477,8 @@ pub fn plan_with(a: &CsrMatrix, sym: &Symbolic, cfg: &FactorConfig) -> Supernoda
         rows,
         sparent,
         children,
-        lp: Arc::new(lp),
-        li: Arc::new(li),
+        lp,
+        li,
         snode_flops,
         subtree_flops,
         padded: padded_total,

@@ -13,4 +13,6 @@ pub mod pattern;
 
 pub use coo::CooMatrix;
 pub use csr::CsrMatrix;
-pub use pattern::PatternKey;
+pub use pattern::{
+    apply_diff, pattern_diff, pattern_diff_parts, spd_pattern, PatternDiff, PatternKey,
+};

@@ -75,6 +75,174 @@ impl PatternKey {
     }
 }
 
+/// Structural delta between two same-order CSR patterns: the stored
+/// coordinates present in exactly one of the two. Rows and columns refer
+/// to the *raw* pattern (no symmetrization); both edge lists are sorted
+/// by `(row, col)`. Produced by [`pattern_diff`] on a `PatternKey`
+/// near-miss, replayed by [`apply_diff`], and consumed by
+/// `solver::plan`'s incremental repair, whose drift threshold is
+/// measured against [`PatternDiff::len`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PatternDiff {
+    /// Matrix order both patterns share.
+    pub n: usize,
+    /// Coordinates stored in `new` but not in `old`.
+    pub inserted: Vec<(usize, usize)>,
+    /// Coordinates stored in `old` but not in `new`.
+    pub deleted: Vec<(usize, usize)>,
+}
+
+impl PatternDiff {
+    /// Total edit size `|inserted| + |deleted|` — the drift magnitude.
+    pub fn len(&self) -> usize {
+        self.inserted.len() + self.deleted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inserted.is_empty() && self.deleted.is_empty()
+    }
+
+    /// Every edit, insertions first — the separator gate in
+    /// `solver::plan::SymbolicFactorization::repair` walks this.
+    pub fn edges(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.inserted.iter().chain(self.deleted.iter()).copied()
+    }
+}
+
+/// Structural diff of two same-order CSR patterns in O(nnz): a per-row
+/// merge of the sorted, duplicate-free column lists (`CooMatrix::to_csr`
+/// guarantees that invariant — duplicates are summed on conversion).
+/// Returns `None` when the orders differ, where no edge-level edit
+/// script exists and callers must treat the pair as a cold miss.
+/// `pattern_diff(a, a)` is empty and [`apply_diff`] inverts the diff
+/// exactly; `tests/prop_pattern_diff.rs` pins both down under
+/// adversarial edit scripts.
+pub fn pattern_diff(old: &CsrMatrix, new: &CsrMatrix) -> Option<PatternDiff> {
+    if old.nrows != new.nrows || old.ncols != new.ncols {
+        return None;
+    }
+    Some(pattern_diff_parts(
+        old.nrows,
+        &old.indptr,
+        &old.indices,
+        &new.indptr,
+        &new.indices,
+    ))
+}
+
+/// [`pattern_diff`] on raw CSR `(indptr, indices)` structures — the form
+/// a cached `solver::SymbolicFactorization` retains its base pattern in,
+/// so the near-match tier can diff an incoming matrix against a resident
+/// plan without materializing a second matrix. Both patterns must be of
+/// order `n`.
+pub fn pattern_diff_parts(
+    n: usize,
+    old_indptr: &[usize],
+    old_indices: &[usize],
+    new_indptr: &[usize],
+    new_indices: &[usize],
+) -> PatternDiff {
+    assert_eq!(old_indptr.len(), n + 1, "old pattern is not order {n}");
+    assert_eq!(new_indptr.len(), n + 1, "new pattern is not order {n}");
+    let mut inserted = Vec::new();
+    let mut deleted = Vec::new();
+    for r in 0..n {
+        let ra = &old_indices[old_indptr[r]..old_indptr[r + 1]];
+        let rb = &new_indices[new_indptr[r]..new_indptr[r + 1]];
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < ra.len() || j < rb.len() {
+            let ca = ra.get(i).copied().unwrap_or(usize::MAX);
+            let cb = rb.get(j).copied().unwrap_or(usize::MAX);
+            if ca == cb {
+                i += 1;
+                j += 1;
+            } else if ca < cb {
+                deleted.push((r, ca));
+                i += 1;
+            } else {
+                inserted.push((r, cb));
+                j += 1;
+            }
+        }
+    }
+    PatternDiff {
+        n,
+        inserted,
+        deleted,
+    }
+}
+
+/// Replay a [`PatternDiff`] against the pattern it was computed *from*:
+/// `apply_diff(old, &pattern_diff(old, new)?)` reproduces `new`'s
+/// `(indptr, indices)` exactly. Pure structure — callers re-attach
+/// values. Panics when the diff does not describe `a` (an insert
+/// collides with a stored coordinate, or a delete names an absent one);
+/// a diff is only meaningful against its own base pattern.
+pub fn apply_diff(a: &CsrMatrix, diff: &PatternDiff) -> (Vec<usize>, Vec<usize>) {
+    assert_eq!(a.nrows, diff.n, "diff is for a different matrix order");
+    assert_eq!(a.nrows, a.ncols, "pattern ops need a square matrix");
+    let mut ins = diff.inserted.clone();
+    ins.sort_unstable();
+    let mut del = diff.deleted.clone();
+    del.sort_unstable();
+    let mut indptr = vec![0usize; diff.n + 1];
+    let mut indices =
+        Vec::with_capacity((a.nnz() + ins.len()).saturating_sub(del.len()));
+    let (mut ii, mut dd) = (0usize, 0usize);
+    for r in 0..diff.n {
+        for &c in a.row_indices(r) {
+            if dd < del.len() && del[dd] == (r, c) {
+                dd += 1;
+                continue;
+            }
+            while ii < ins.len() && ins[ii].0 == r && ins[ii].1 < c {
+                indices.push(ins[ii].1);
+                ii += 1;
+            }
+            assert!(
+                !(ii < ins.len() && ins[ii] == (r, c)),
+                "insert ({r}, {c}) collides with a stored entry"
+            );
+            indices.push(c);
+        }
+        while ii < ins.len() && ins[ii].0 == r {
+            indices.push(ins[ii].1);
+            ii += 1;
+        }
+        indptr[r + 1] = indices.len();
+    }
+    assert!(
+        dd == del.len() && ii == ins.len(),
+        "diff does not describe this pattern"
+    );
+    (indptr, indices)
+}
+
+/// Pattern of [`symmetrize_spd_like`]'s output **without touching
+/// values**: `A ∪ Aᵀ` plus a full diagonal, rows sorted. Structurally
+/// bit-identical to `symmetrize_spd_like(a, _)` by construction (the
+/// union dedups exactly like the value merge, and the diagonal insert
+/// mirrors the structural-diagonal insert) — asserted by this module's
+/// tests and re-proven by the plan-repair property suite. This is what
+/// lets `solver::plan`'s repair path skip numeric symmetrization: plans
+/// are value-pure, so a zero-valued matrix carrying this pattern plans
+/// identically to the fully symmetrized one.
+pub fn spd_pattern(a: &CsrMatrix) -> (Vec<usize>, Vec<usize>) {
+    let (adj_ptr, adj) = symmetrized_pattern(a);
+    let n = a.nrows;
+    let mut indptr = vec![0usize; n + 1];
+    let mut indices = Vec::with_capacity(adj.len() + n);
+    for r in 0..n {
+        let row = &adj[adj_ptr[r]..adj_ptr[r + 1]];
+        let at = row.partition_point(|&c| c < r);
+        indices.extend_from_slice(&row[..at]);
+        indices.push(r);
+        indices.extend_from_slice(&row[at..]);
+        indptr[r + 1] = indices.len();
+    }
+    (indptr, indices)
+}
+
 /// Pattern of `A + Aᵀ` without the diagonal, as CSR-like adjacency
 /// (indptr + indices). This is the adjacency-graph form every reordering
 /// algorithm consumes.
@@ -428,5 +596,62 @@ mod tests {
         let m = CooMatrix::identity(5).to_csr();
         assert_eq!(bandwidth(&m), 0);
         assert_eq!(profile(&m), 0);
+    }
+
+    #[test]
+    fn pattern_diff_of_identical_is_empty() {
+        let a = asym();
+        let d = pattern_diff(&a, &a).unwrap();
+        assert!(d.is_empty());
+        assert_eq!(d.len(), 0);
+        let (indptr, indices) = apply_diff(&a, &d);
+        assert_eq!((indptr, indices), (a.indptr.clone(), a.indices.clone()));
+    }
+
+    #[test]
+    fn pattern_diff_round_trips_a_sample_edit() {
+        let a = asym();
+        // move (0,1) to (1,0) and add (2,0)
+        let mut m = CooMatrix::new(3, 3);
+        m.push(0, 0, 1.0);
+        m.push(1, 0, 2.0);
+        m.push(1, 2, 3.0);
+        m.push(2, 0, 5.0);
+        m.push(2, 2, 4.0);
+        let b = m.to_csr();
+        let d = pattern_diff(&a, &b).unwrap();
+        assert_eq!(d.inserted, vec![(1, 0), (2, 0)]);
+        assert_eq!(d.deleted, vec![(0, 1)]);
+        assert_eq!(d.len(), 3);
+        assert_eq!(apply_diff(&a, &d), (b.indptr.clone(), b.indices.clone()));
+        // the reverse diff undoes it
+        let back = pattern_diff(&b, &a).unwrap();
+        assert_eq!(apply_diff(&b, &back), (a.indptr.clone(), a.indices.clone()));
+    }
+
+    #[test]
+    fn pattern_diff_rejects_order_mismatch() {
+        let a = asym();
+        let b = CooMatrix::identity(4).to_csr();
+        assert!(pattern_diff(&a, &b).is_none());
+    }
+
+    #[test]
+    fn spd_pattern_matches_symmetrize_structure() {
+        use crate::util::prop;
+        prop::check("spd-pattern-structure", 10, |rng| {
+            let n = rng.range(1, 50);
+            let mut m = CooMatrix::new(n, n);
+            for _ in 0..(3 * n) {
+                let i = rng.below(n);
+                let j = rng.below(n);
+                m.push(i, j, 1.0 + (i + j) as f64);
+            }
+            let a = m.to_csr();
+            let spd = symmetrize_spd_like(&a, 2.0);
+            let (indptr, indices) = spd_pattern(&a);
+            assert_eq!(indptr, spd.indptr, "indptr diverged at n={n}");
+            assert_eq!(indices, spd.indices, "indices diverged at n={n}");
+        });
     }
 }

@@ -99,6 +99,15 @@ pub struct CacheStats {
     /// adopted the leader's result instead of recomputing — the dedup
     /// savings counter.
     pub coalesced: u64,
+    /// Leadership terms resolved by *repairing* a resident near-match
+    /// instead of computing cold. Only the plan cache's repair tier
+    /// (`solver::plan_cache`) bumps this; the generic cache reports 0.
+    pub repairs: u64,
+    /// Leadership terms where a near-match candidate existed but its
+    /// repair was refused (drift threshold, separator touch, config
+    /// mismatch) and the computation ran cold — the "no silent
+    /// fallback" counter. Generic caches report 0.
+    pub repair_fallbacks: u64,
     /// Resident entries at snapshot time.
     pub entries: usize,
 }
@@ -297,8 +306,11 @@ impl<K: Hash + Eq + Copy, V> ShardedCache<K, V> {
     /// leader to re-check residency: a prior leader may have completed
     /// (insert + slot removal) between this caller's counted miss and
     /// its registration, and that race must not recompute — or skew the
-    /// hit/miss counters with a second counted lookup per call.
-    fn peek(&self, key: &K) -> Option<Arc<V>> {
+    /// hit/miss counters with a second counted lookup per call. Public
+    /// for the same reason `contains` is: the plan cache's near-match
+    /// repair tier resolves donor candidates without perturbing the
+    /// counters or the recency order the hit/miss story is told in.
+    pub fn peek(&self, key: &K) -> Option<Arc<V>> {
         let shard = self.shard(key).lock().expect("cache shard poisoned");
         shard.get(key).map(|e| e.value.clone())
     }
@@ -393,6 +405,8 @@ impl<K: Hash + Eq + Copy, V> ShardedCache<K, V> {
             evictions: self.evictions.load(Ordering::Relaxed),
             leaders: self.leaders.load(Ordering::Relaxed),
             coalesced: self.coalesced.load(Ordering::Relaxed),
+            repairs: 0,
+            repair_fallbacks: 0,
             entries: self.len(),
         }
     }

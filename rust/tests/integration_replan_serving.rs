@@ -1,0 +1,208 @@
+//! End-to-end incremental replanning: a Newton-like *drifting-pattern*
+//! trace served through a `ServingEngine` with the near-match repair
+//! tier enabled (`ServingConfig::repair`).
+//!
+//! The contract: every request resolves through exactly one of the
+//! three lookup tiers — **exact plan hit**, **near-match repair**, or
+//! **cold miss** — and the counters reconcile with the request count
+//! (`hits + misses == requests`, `repairs + fallbacks ≤ misses`, no
+//! silent fallback). Repaired requests skip symmetrization and
+//! reordering entirely (the ordering cache never hears from them), keep
+//! the donor's frozen permutation, and solve their own values
+//! accurately. A concurrent client hammer over the drifted patterns
+//! must stay deadlock-free with the ledger still exact.
+
+use std::sync::Arc;
+
+use smr::collection::generate_mini_collection;
+use smr::collection::generators::grid2d;
+use smr::coordinator::service::Backend;
+use smr::coordinator::{ServingConfig, ServingEngine};
+use smr::dataset::{build_dataset, SweepConfig};
+use smr::ml::forest::{ForestParams, RandomForest};
+use smr::ml::normalize::{Method, Normalizer};
+use smr::ml::Classifier;
+use smr::reorder::ReorderAlgorithm;
+use smr::solver::RepairConfig;
+use smr::sparse::{CooMatrix, CsrMatrix};
+
+/// Forest backend fitted on a small labeled sweep (the same
+/// deterministic pure-Rust stack `integration_serving.rs` uses).
+fn trained_backend() -> Backend {
+    let coll = generate_mini_collection(3, 1);
+    let ds = build_dataset(&coll, &ReorderAlgorithm::LABEL_SET, &SweepConfig::default());
+    let normalizer = Normalizer::fit(Method::Standard, &ds.features());
+    let mut forest = RandomForest::new(
+        ForestParams {
+            n_estimators: 20,
+            ..Default::default()
+        },
+        7,
+    );
+    forest.fit(&normalizer.transform(&ds.features()), &ds.labels(), 4);
+    Backend::Forest { normalizer, forest }
+}
+
+fn with_extra(a: &CsrMatrix, i: usize, j: usize, v: f64) -> CsrMatrix {
+    let mut coo = CooMatrix::new(a.nrows, a.ncols);
+    for r in 0..a.nrows {
+        for (t, &c) in a.row_indices(r).iter().enumerate() {
+            coo.push(r, c, a.row_data(r)[t]);
+        }
+    }
+    coo.push(i, j, v);
+    coo.to_csr()
+}
+
+/// The drifting trace: a grid whose pattern gains one boundary-vertex
+/// entry per step (low-degree endpoints under every ordering → leaf
+/// supernodes, far from any separator — each step stays repairable).
+fn drifting_trace(steps: usize) -> Vec<CsrMatrix> {
+    let mut trace = vec![grid2d(12, 11)];
+    for step in 0..steps {
+        trace.push(with_extra(trace.last().unwrap(), 0, 2 + step, -0.125));
+    }
+    trace
+}
+
+fn repair_config() -> ServingConfig {
+    ServingConfig {
+        repair: Some(RepairConfig::default()),
+        ..ServingConfig::default()
+    }
+}
+
+#[test]
+fn drifting_pattern_trace_is_served_by_repair() {
+    let engine = ServingEngine::spawn(trained_backend(), repair_config()).unwrap();
+    let trace = drifting_trace(5);
+
+    let reports: Vec<_> = trace.iter().map(|m| engine.serve(m).unwrap()).collect();
+    assert!(!reports[0].plan_hit && !reports[0].repaired);
+    for (step, r) in reports.iter().enumerate().skip(1) {
+        assert_eq!(
+            r.algorithm, reports[0].algorithm,
+            "step {step}: one-edge drift flipped the prediction"
+        );
+        assert!(!r.plan_hit, "step {step}: a drifted pattern cannot be an exact hit");
+        assert!(r.repaired, "step {step}: in-budget drift must repair, not re-plan");
+        assert_eq!(
+            r.permutation, reports[0].permutation,
+            "step {step}: repair must keep the donor's frozen permutation"
+        );
+        assert_eq!(
+            r.solve.analyze_s, 0.0,
+            "step {step}: repaired request paid symbolic time"
+        );
+        assert!(!r.solve.estimated, "step {step}");
+        assert!(r.solve.residual < 1e-6, "step {step}: residual {}", r.solve.residual);
+    }
+    // fill grows monotonically along this trace's added edges — the
+    // repaired plans are real re-plans, not stale replays
+    for (step, w) in reports.windows(2).enumerate() {
+        assert!(
+            w[1].solve.fill >= w[0].solve.fill,
+            "step {step}: fill shrank under an edge insertion"
+        );
+    }
+
+    // replaying the whole trace: every pattern is now resident, so each
+    // request is an exact hit — tier one of the lookup
+    for (step, m) in trace.iter().enumerate() {
+        let r = engine.serve(m).unwrap();
+        assert!(r.plan_hit && !r.repaired, "replay step {step} must be an exact hit");
+    }
+
+    let s = engine.stats();
+    let n = trace.len() as u64;
+    assert_eq!(s.requests, 2 * n);
+    // the three-tier ledger reconciles with the request count: every
+    // request is exactly one of {exact hit, repaired miss, cold miss}
+    assert_eq!(s.plans.hits + s.plans.misses, s.requests);
+    assert_eq!(s.plans.hits, n, "one exact hit per replayed pattern");
+    assert_eq!(s.plans.misses, n, "one miss per first-seen pattern");
+    assert_eq!(s.plans.repairs, n - 1, "every drift step must repair");
+    assert_eq!(s.plans.repair_fallbacks, 0, "no silent fallback");
+    // repaired requests skip symmetrization and reordering: the
+    // ordering cache only ever hears from true cold misses
+    assert_eq!(s.cache.lookups(), s.plans.misses - s.plans.repairs);
+    assert_eq!(s.cache.lookups(), 1);
+    engine.shutdown();
+}
+
+#[test]
+fn over_budget_drift_falls_back_cold_and_is_counted() {
+    // a zero drift budget turns every would-be repair into a counted
+    // fallback: the request is still served (cold), and the fallback
+    // counter proves the repair tier was consulted and refused
+    let cfg = ServingConfig {
+        repair: Some(RepairConfig {
+            max_drift: 0.0,
+            ..RepairConfig::default()
+        }),
+        ..ServingConfig::default()
+    };
+    let engine = ServingEngine::spawn(trained_backend(), cfg).unwrap();
+    let trace = drifting_trace(1);
+    let cold = engine.serve(&trace[0]).unwrap();
+    let drifted = engine.serve(&trace[1]).unwrap();
+    assert_eq!(drifted.algorithm, cold.algorithm, "prediction flipped");
+    assert!(!drifted.plan_hit && !drifted.repaired);
+    assert!(drifted.solve.residual < 1e-6);
+
+    let s = engine.stats();
+    assert_eq!(s.plans.repairs, 0);
+    assert_eq!(s.plans.repair_fallbacks, 1, "the refused repair must be visible");
+    assert_eq!(s.plans.misses, 2);
+    // both requests went cold, so both reached the ordering cache
+    assert_eq!(s.cache.lookups(), 2);
+    engine.shutdown();
+}
+
+#[test]
+fn concurrent_clients_hammering_drifted_patterns_stay_consistent() {
+    // deadlock-freedom + ledger exactness under concurrency: the repair
+    // tier runs inside the plan cache's leader election, so a stampede
+    // on a drifted pattern must cost one repair total, and concurrent
+    // mixed-pattern clients must neither deadlock nor skew the counters
+    let engine = Arc::new(ServingEngine::spawn(trained_backend(), repair_config()).unwrap());
+    let trace = Arc::new(drifting_trace(4));
+
+    // single-threaded baseline populates every pattern: 1 cold miss for
+    // the base, one repair per drift step
+    let baseline: Vec<_> = trace.iter().map(|m| engine.serve(m).unwrap()).collect();
+    assert!(baseline.iter().skip(1).all(|r| r.repaired));
+
+    let mut handles = Vec::new();
+    for t in 0..6 {
+        let engine = engine.clone();
+        let trace = trace.clone();
+        handles.push(std::thread::spawn(move || {
+            (0..trace.len())
+                .map(|k| {
+                    let step = (k + t) % trace.len();
+                    (step, engine.serve(&trace[step]).unwrap())
+                })
+                .collect::<Vec<_>>()
+        }));
+    }
+    for h in handles {
+        for (step, r) in h.join().unwrap() {
+            // every concurrent request lands on a resident plan
+            assert!(r.plan_hit && !r.repaired, "step {step}");
+            assert_eq!(r.permutation, baseline[step].permutation, "step {step}");
+            assert_eq!(r.solve.fill, baseline[step].solve.fill, "step {step}");
+        }
+    }
+
+    let s = engine.stats();
+    let n = trace.len() as u64;
+    let total = 7 * n; // baseline + 6 client threads
+    assert_eq!(s.requests, total);
+    assert_eq!(s.plans.hits + s.plans.misses, total);
+    assert_eq!(s.plans.misses, n, "each pattern misses exactly once");
+    assert_eq!(s.plans.hits, total - n);
+    assert_eq!(s.plans.repairs, n - 1);
+    assert_eq!(s.plans.repair_fallbacks, 0);
+    assert_eq!(s.cache.lookups(), 1, "only the base pattern went cold");
+}

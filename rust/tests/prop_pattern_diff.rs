@@ -1,0 +1,186 @@
+//! Property tests for the structural pattern diff behind incremental
+//! plan repair (`sparse::pattern::{pattern_diff, apply_diff}`).
+//!
+//! The contract: `pattern_diff(old, new)` is an exact structural edit
+//! script — applying it to `old` reproduces `new`'s pattern bit-for-bit
+//! (`indptr` and `indices`, values never enter), `diff(a, a)` is empty,
+//! and the reverse diff undoes the forward one. Held under adversarial
+//! edit scripts: duplicate COO entries (value-only edits the diff must
+//! see through), rows emptied entirely, a new dense row, and growth of
+//! a disconnected component in previously-untouched rows.
+
+use smr::sparse::{apply_diff, pattern_diff, CooMatrix, CsrMatrix};
+use smr::util::prop;
+use smr::util::rng::Rng;
+
+/// Random block-structured pattern: several disconnected blocks with
+/// random entries and duplicates, a partial diagonal, and (crucially
+/// for the edit scripts below) the last block left entirely empty.
+fn base_matrix(rng: &mut Rng) -> CsrMatrix {
+    let n_blocks = rng.range(2, 4);
+    let block = rng.range(4, 16);
+    let n = (n_blocks + 1) * block; // one extra, untouched block of rows
+    let mut m = CooMatrix::new(n, n);
+    for b in 0..n_blocks {
+        let lo = b * block;
+        for _ in 0..(3 * block) {
+            let i = lo + rng.below(block);
+            let j = lo + rng.below(block);
+            m.push(i, j, rng.range_f64(-2.0, 2.0));
+            if rng.chance(0.3) {
+                m.push(i, j, 1.0); // duplicate (summed by to_csr)
+            }
+        }
+        for d in 0..rng.range(1, block + 1) {
+            m.push(lo + d, lo + d, 4.0);
+        }
+    }
+    m.to_csr()
+}
+
+fn entries_of(a: &CsrMatrix) -> Vec<(usize, usize, f64)> {
+    let mut out = Vec::new();
+    for r in 0..a.nrows {
+        for (t, &c) in a.row_indices(r).iter().enumerate() {
+            out.push((r, c, a.row_data(r)[t]));
+        }
+    }
+    out
+}
+
+fn from_entries(n: usize, entries: Vec<(usize, usize, f64)>) -> CsrMatrix {
+    let mut m = CooMatrix::new(n, n);
+    for (i, j, v) in entries {
+        m.push(i, j, v);
+    }
+    m.to_csr()
+}
+
+/// Assert the full diff contract between `old` and `new`: forward
+/// round-trip, reverse round-trip, and edge/len bookkeeping.
+fn assert_diff_round_trips(old: &CsrMatrix, new: &CsrMatrix, ctx: &str) {
+    let diff = pattern_diff(old, new).expect("same order");
+    assert_eq!(
+        diff.len(),
+        diff.inserted.len() + diff.deleted.len(),
+        "{ctx}: len bookkeeping"
+    );
+    assert_eq!(diff.edges().count(), diff.len(), "{ctx}: edges bookkeeping");
+    let (indptr, indices) = apply_diff(old, &diff);
+    assert_eq!(indptr, new.indptr, "{ctx}: forward indptr diverged");
+    assert_eq!(indices, new.indices, "{ctx}: forward indices diverged");
+
+    // the reverse diff is the exact inverse edit script
+    let rev = pattern_diff(new, old).expect("same order");
+    assert_eq!(rev.len(), diff.len(), "{ctx}: reverse diff size diverged");
+    let (indptr, indices) = apply_diff(new, &rev);
+    assert_eq!(indptr, old.indptr, "{ctx}: reverse indptr diverged");
+    assert_eq!(indices, old.indices, "{ctx}: reverse indices diverged");
+}
+
+#[test]
+fn diff_of_a_matrix_with_itself_is_empty() {
+    prop::check("pattern-diff-empty", 8, |rng| {
+        let a = base_matrix(rng);
+        let diff = pattern_diff(&a, &a).expect("same order");
+        assert!(diff.is_empty(), "self-diff must be empty");
+        assert_eq!(diff.len(), 0);
+        let (indptr, indices) = apply_diff(&a, &diff);
+        assert_eq!((indptr, indices), (a.indptr.clone(), a.indices.clone()));
+
+        // duplicate-entry storage is a value edit, not a pattern edit:
+        // re-pushing existing coordinates must not perturb the diff
+        let mut doubled = entries_of(&a);
+        let extra: Vec<_> = doubled.iter().take(5).map(|&(i, j, _)| (i, j, 1.5)).collect();
+        doubled.extend(extra);
+        let b = from_entries(a.nrows, doubled);
+        assert!(
+            pattern_diff(&a, &b).expect("same order").is_empty(),
+            "duplicate entries changed the pattern"
+        );
+    });
+}
+
+#[test]
+fn diff_round_trips_random_edit_scripts() {
+    prop::check("pattern-diff-round-trip", 8, |rng| {
+        let a = base_matrix(rng);
+        let n = a.nrows;
+        let mut entries = entries_of(&a);
+        for _ in 0..rng.range(1, 12) {
+            if rng.chance(0.4) && !entries.is_empty() {
+                entries.swap_remove(rng.below(entries.len()));
+            } else {
+                entries.push((rng.below(n), rng.below(n), rng.range_f64(-1.0, 1.0)));
+            }
+        }
+        let b = from_entries(n, entries);
+        assert_diff_round_trips(&a, &b, &format!("random edits (n={n})"));
+    });
+}
+
+#[test]
+fn diff_round_trips_adversarial_edit_scripts() {
+    prop::check("pattern-diff-adversarial", 6, |rng| {
+        let a = base_matrix(rng);
+        let n = a.nrows;
+
+        // emptied rows: strip every entry of a few occupied rows
+        let mut victims = Vec::new();
+        for r in 0..n {
+            if a.row_indices(r).len() > 0 && victims.len() < 3 && rng.chance(0.5) {
+                victims.push(r);
+            }
+        }
+        let emptied = from_entries(
+            n,
+            entries_of(&a)
+                .into_iter()
+                .filter(|&(i, _, _)| !victims.contains(&i))
+                .collect(),
+        );
+        assert_diff_round_trips(&a, &emptied, "emptied rows");
+
+        // a new dense row (plus its duplicates — still one pattern edit
+        // per column)
+        let r = rng.below(n);
+        let mut dense = entries_of(&a);
+        for c in 0..n {
+            dense.push((r, c, 0.5));
+            if rng.chance(0.2) {
+                dense.push((r, c, 0.25));
+            }
+        }
+        let densed = from_entries(n, dense);
+        assert_diff_round_trips(&a, &densed, "new dense row");
+
+        // disconnected component growth: the base's last `block` rows
+        // are untouched; grow a fresh component there
+        let lo = n - (n / 4).max(2);
+        let mut grown = entries_of(&a);
+        for i in lo..n {
+            grown.push((i, i, 4.0));
+            if i + 1 < n {
+                grown.push((i, i + 1, -1.0));
+                grown.push((i + 1, i, -1.0));
+            }
+        }
+        let grown = from_entries(n, grown);
+        assert_diff_round_trips(&a, &grown, "disconnected component growth");
+    });
+}
+
+#[test]
+fn diff_rejects_order_mismatch() {
+    let mut rng = Rng::new(0xD1FF);
+    let a = base_matrix(&mut rng);
+    let smaller = from_entries(
+        a.nrows - 1,
+        entries_of(&a)
+            .into_iter()
+            .filter(|&(i, j, _)| i < a.nrows - 1 && j < a.nrows - 1)
+            .collect(),
+    );
+    assert!(pattern_diff(&a, &smaller).is_none());
+    assert!(pattern_diff(&smaller, &a).is_none());
+}

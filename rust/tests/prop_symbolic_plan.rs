@@ -23,7 +23,14 @@
 //!   `factorize_refreshed_batch`): for each of the 7 paper algorithms,
 //!   every lane of a k=4 batch is bit-identical to its single-request
 //!   factorization — values, pattern, fill, flops, and zero-pivot error
-//!   selection alike — under both the serial and DAG schedules.
+//!   selection alike — under both the serial and DAG schedules;
+//! * **incremental plan repair** (`SymbolicFactorization::repair`): a
+//!   plan repaired for a drifted pattern equals planning the drifted
+//!   matrix from scratch under the donor's frozen permutation — cost,
+//!   factor pattern, values, pivots, and solves, bit-for-bit — across
+//!   all 7 algorithms × 3 modes, including *chains* of repairs across
+//!   successive edits; and the quality gates (drift budget, separator
+//!   edits) refuse exactly when they should.
 
 use std::sync::Arc;
 
@@ -31,7 +38,8 @@ use smr::reorder::ReorderAlgorithm;
 use smr::solver::{
     analyze_with, factorize_refreshed, factorize_refreshed_batch, factorize_with,
     factorize_with_plan, factorize_with_plan_batch, plan_solve, solve_ordered, solve_with_plan,
-    FactorConfig, FactorMode, LdlFactor, NumericWorkspace, PlanCache, PlanKey, SolverConfig,
+    FactorConfig, FactorMode, LdlFactor, NumericWorkspace, PlanCache, PlanKey, RepairConfig,
+    SolverConfig,
 };
 use smr::sparse::{CooMatrix, CsrMatrix};
 use smr::util::pool::parallel_map;
@@ -363,6 +371,165 @@ fn capped_plans_estimate_identically() {
         assert_eq!(r.flops, reference.flops, "{alg}");
         assert_eq!(r.residual, 0.0, "{alg}");
     }
+}
+
+/// Apply `k` random structural edits (insert a random entry / delete a
+/// random off-diagonal entry) to `raw` — the drifting-pattern workload
+/// the incremental-repair tentpole serves.
+fn drift_pattern(rng: &mut Rng, raw: &CsrMatrix, k: usize) -> CsrMatrix {
+    let n = raw.nrows;
+    let mut entries: Vec<(usize, usize, f64)> = Vec::new();
+    for r in 0..n {
+        for (t, &c) in raw.row_indices(r).iter().enumerate() {
+            entries.push((r, c, raw.row_data(r)[t]));
+        }
+    }
+    for _ in 0..k {
+        if rng.chance(0.5) && entries.iter().any(|&(r, c, _)| r != c) {
+            loop {
+                let t = rng.below(entries.len());
+                if entries[t].0 != entries[t].1 {
+                    entries.swap_remove(t);
+                    break;
+                }
+            }
+        } else {
+            // may land on an existing entry (a duplicate, summed by
+            // to_csr — a value-only edit the diff must see through)
+            entries.push((rng.below(n), rng.below(n), rng.range_f64(-1.0, 1.0)));
+        }
+    }
+    let mut m = CooMatrix::new(n, n);
+    for (i, j, v) in entries {
+        m.push(i, j, v);
+    }
+    m.to_csr()
+}
+
+/// Accept-everything gate: infinite drift budget, and a separator
+/// threshold no subtree can reach (`x >= inf` and `x >= NaN` are both
+/// false) — isolates the bit-identity property from the quality gates.
+fn permissive_repair() -> RepairConfig {
+    RepairConfig {
+        max_drift: f64::INFINITY,
+        separator_flops: f64::INFINITY,
+    }
+}
+
+#[test]
+fn repaired_plans_are_bit_identical_to_scratch_across_algorithms_and_modes() {
+    // the tentpole's acceptance property: for every paper algorithm and
+    // every factor mode, repairing a donor plan for a drifted pattern
+    // equals planning the drifted matrix from scratch under the donor's
+    // frozen permutation — cost, factor pattern, factor values, pivots,
+    // and solve results, all bit-for-bit
+    prop::check("plan-repair-bit-identity", 4, |rng| {
+        let raw = adversarial_matrix(rng);
+        let seed = rng.next_u64();
+        let drifted = drift_pattern(rng, &raw, rng.range(1, 4));
+        for alg in ReorderAlgorithm::PAPER_SET {
+            for cfg in all_mode_configs() {
+                let ctx = format!("{alg} / {:?} (n={})", cfg.factor.mode, raw.nrows);
+                let spd = smr::solver::prepare(&raw, &cfg);
+                let perm = Arc::new(alg.compute(&spd, seed));
+                let donor = plan_solve(&raw, perm.clone(), &cfg);
+                let diff = donor.diff_against(&drifted).expect("same order");
+                let repaired = donor
+                    .repair(&drifted, &diff, &cfg, &permissive_repair())
+                    .expect("permissive gate accepts every uncapped repair");
+                assert!(
+                    Arc::ptr_eq(&repaired.perm, &donor.perm),
+                    "{ctx}: repair must keep the donor's frozen permutation"
+                );
+
+                let scratch = plan_solve(&drifted, perm.clone(), &cfg);
+                assert_eq!(repaired.cost, scratch.cost, "{ctx}: symbolic cost diverged");
+                let mut ws = NumericWorkspace::new();
+                let fr = factorize_with_plan(&drifted, &repaired, &mut ws).unwrap();
+                let fs = factorize_with_plan(&drifted, &scratch, &mut ws).unwrap();
+                assert_factors_identical(&fs, &fr, &ctx);
+
+                let mut r = Rng::new(seed ^ 0x5E9);
+                let b: Vec<f64> = (0..drifted.nrows).map(|_| r.normal()).collect();
+                assert_eq!(fs.solve(&b), fr.solve(&b), "{ctx}: solve diverged");
+            }
+        }
+    });
+}
+
+#[test]
+fn chained_repairs_track_successive_edits_bit_identically() {
+    // a Newton-like trace: each step's pattern drifts a little from the
+    // last, and each step's plan is repaired from the *previous repair*
+    // — errors would compound; bit-identity must hold at every link
+    let mut rng = Rng::new(0xC4A1);
+    let raw = adversarial_matrix(&mut rng);
+    let cfg = all_mode_configs()[2]; // DAG-parallel supernodal: hardest path
+    let spd = smr::solver::prepare(&raw, &cfg);
+    let perm = Arc::new(ReorderAlgorithm::Amd.compute(&spd, 0x11));
+    let mut plan = plan_solve(&raw, perm.clone(), &cfg);
+    let mut current = raw;
+    for step in 0..5 {
+        let next = drift_pattern(&mut rng, &current, 2);
+        let diff = plan.diff_against(&next).expect("same order");
+        plan = plan
+            .repair(&next, &diff, &cfg, &permissive_repair())
+            .expect("permissive gate accepts every uncapped repair");
+        let scratch = plan_solve(&next, perm.clone(), &cfg);
+        assert_eq!(plan.cost, scratch.cost, "step {step}: symbolic cost diverged");
+        let mut ws = NumericWorkspace::new();
+        let fr = factorize_with_plan(&next, &plan, &mut ws).unwrap();
+        let fs = factorize_with_plan(&next, &scratch, &mut ws).unwrap();
+        assert_factors_identical(&fs, &fr, &format!("chained repair step {step}"));
+        current = next;
+    }
+}
+
+#[test]
+fn repair_refuses_past_the_drift_threshold_and_on_separators() {
+    let cfg = all_mode_configs()[1]; // sequential supernodal
+    // drift threshold: path → star is a near-total rewrite of the
+    // pattern (~4n edits on ~3n entries), far past the default 5% budget
+    let (path, star) = (path_matrix(100), star_matrix(100));
+    let spd = smr::solver::prepare(&path, &cfg);
+    let perm = Arc::new(ReorderAlgorithm::Natural.compute(&spd, 0));
+    let donor = plan_solve(&path, perm.clone(), &cfg);
+    let diff = donor.diff_against(&star).expect("same order");
+    let budget = RepairConfig::default().max_drift * path.nnz().max(star.nnz()) as f64;
+    assert!(
+        diff.len() as f64 > budget,
+        "fixture must overflow the default budget ({} edits vs {budget})",
+        diff.len()
+    );
+    assert!(
+        donor.repair(&star, &diff, &cfg, &RepairConfig::default()).is_none(),
+        "oversize drift must be refused"
+    );
+
+    // separator gate: under the natural ordering a path's etree is one
+    // chain, so vertex n-1 lives in the root supernode — whose subtree
+    // is the whole factorization. An edit touching it must be refused
+    // even with an infinite drift budget.
+    let near_root = {
+        let n = path.nrows;
+        let mut m = CooMatrix::new(n, n);
+        for r in 0..n {
+            for (t, &c) in path.row_indices(r).iter().enumerate() {
+                m.push(r, c, path.row_data(r)[t]);
+            }
+        }
+        m.push(n - 1, 0, -0.5);
+        m.to_csr()
+    };
+    let diff = donor.diff_against(&near_root).expect("same order");
+    let rcfg = RepairConfig {
+        max_drift: f64::INFINITY,
+        ..RepairConfig::default()
+    };
+    assert!(
+        donor.repair(&near_root, &diff, &cfg, &rcfg).is_none(),
+        "an edit touching the root supernode must be refused"
+    );
 }
 
 #[test]
