@@ -39,6 +39,14 @@ cargo test -q --test integration_replan_serving
 cargo test -q --test prop_online_selector
 cargo test -q --test integration_online_serving
 
+# Fault-tolerance suites: seeded fault-schedule/deadline/backoff/
+# quarantine properties, and the end-to-end acceptance replay (injected
+# numeric failures served entirely by the fallback chain with an exact
+# fault ledger, panic containment behind a live admission gate, typed
+# stage-attributed deadline expiry, quarantine trip/TTL-readmit).
+cargo test -q --test prop_faults
+cargo test -q --test integration_fault_serving
+
 # Traffic-tier invariants that live in unit tests: cold-miss stampedes
 # coalesce onto one leader (in-flight dedup), the admission window
 # never sleeps on singleton traffic, and the latency histograms keep
@@ -65,12 +73,14 @@ cargo test -q --lib util::pool::tests::dag
 # tail latency + dedup + per-replica occupancy for the router; regret
 # curve + picks + baselines + learner counters for the online loop;
 # repair-vs-cold latency records + drifting-trace repair counters for
-# the replanning bench), validated via util/json.rs by
+# the replanning bench; per-fault-rate goodput/fallback/tail-latency
+# lanes with a zero-error ledger for the fault-injection bench),
+# validated via util/json.rs by
 # examples/check_bench.rs. Each artifact is gated by its own bench's
 # schema independently, so one bench's absence never blocks another.
 bench_artifacts=()
 for f in BENCH_serving.json BENCH_solver.json BENCH_router.json BENCH_online.json \
-         BENCH_replan.json; do
+         BENCH_replan.json BENCH_faults.json; do
   [[ -f "$f" ]] && bench_artifacts+=("$f")
 done
 if [[ ${#bench_artifacts[@]} -gt 0 ]]; then

@@ -23,7 +23,11 @@
 //! * `bench_replan` — per-drift-size repair-vs-cold latency records and
 //!   the `serving` drifting-trace counter block (`repairs`,
 //!   `repair_fallbacks`, hits/misses, `repair_rate`) proving the repair
-//!   tier resolved drift without silent fallback.
+//!   tier resolved drift without silent fallback;
+//! * `bench_faults` — one record per injected-fault-rate lane (a
+//!   fault-free baseline plus escalating rates) carrying goodput,
+//!   fallback rate, tail latency, and the exact fault ledger
+//!   (injected / fired / fallbacks / quarantine counters, zero errors).
 //!
 //! **Optional sections.** A bench's stat sections beyond the per-record
 //! schema (`fronts`, `batched`, `latency`, …) are gated through a
@@ -376,6 +380,57 @@ fn check_replan(path: &str, v: &Json, results: &[Json], errs: &mut Vec<String>) 
     );
 }
 
+/// Fault-injection schema: per-lane goodput + tail latency + the fault
+/// ledger, a fault-free baseline lane, and the headline invariant that
+/// no lane let a request error out.
+fn check_faults(path: &str, v: &Json, results: &[Json], errs: &mut Vec<String>) {
+    let mut has_baseline = false;
+    let mut has_faulted = false;
+    for (i, rec) in results.iter().enumerate() {
+        let ctx = format!("{path}: results[{i}]");
+        for key in [
+            "fault_rate",
+            "requests",
+            "served",
+            "errors",
+            "injected",
+            "faults_fired",
+            "fallbacks",
+            "quarantined",
+            "quarantine_skips",
+            "deadline_expired",
+            "goodput_per_s",
+            "fallback_rate",
+            "p50_s",
+            "p99_s",
+            "p999_s",
+        ] {
+            check_num(rec, key, errs, &ctx);
+        }
+        if let Some(errors) = rec.get("errors").and_then(|e| e.as_f64()) {
+            if errors != 0.0 {
+                errs.push(format!(
+                    "{ctx}: {errors} requests errored out — graceful degradation failed"
+                ));
+            }
+        }
+        match rec.get("fault_rate").and_then(|r| r.as_f64()) {
+            Some(r) if r == 0.0 => has_baseline = true,
+            Some(r) if r > 0.0 => has_faulted = true,
+            _ => {}
+        }
+    }
+    if !has_baseline {
+        errs.push(format!("{path}: missing a fault-free baseline lane"));
+    }
+    if !has_faulted {
+        errs.push(format!("{path}: missing injected-fault lanes"));
+    }
+    for key in ["patterns", "zipf_s", "trace_len", "baseline_p999_s"] {
+        check_num(v, key, errs, path);
+    }
+}
+
 fn check_file(path: &str) -> Vec<String> {
     let mut errs = Vec::new();
     let text = match std::fs::read_to_string(path) {
@@ -400,6 +455,7 @@ fn check_file(path: &str) -> Vec<String> {
         Some("bench_router") => check_router(path, &v, results, &mut errs),
         Some("bench_online") => check_online(path, &v, results, &mut errs),
         Some("bench_replan") => check_replan(path, &v, results, &mut errs),
+        Some("bench_faults") => check_faults(path, &v, results, &mut errs),
         _ => {
             // untagged/other artifacts: the generic record contract
             for (i, rec) in results.iter().enumerate() {

@@ -1,0 +1,217 @@
+//! Fault-injection benchmark for the serving engine: the identical
+//! Zipf replay run fault-free and under 1% / 5% / 10% injected numeric
+//! failures, measuring what graceful degradation actually costs.
+//!
+//! Run with `cargo bench --bench bench_faults`. Writes
+//! `BENCH_faults.json` (override with `BENCH_OUT`): one record per
+//! fault-rate lane with goodput, fallback rate, the exact fault ledger
+//! (injected / fired / fallbacks / quarantine trips and skips), and
+//! p50/p99/p999 end-to-end latency — the tail tells how much a faulted
+//! request's extra chain attempt costs the whole distribution. `ci.sh`
+//! schema-gates the artifact via `examples/check_bench` whenever it is
+//! present.
+//!
+//! Requests are served sequentially so the engine-wide request index is
+//! the trace index — the fault schedule is exact and the run is fully
+//! reproducible (seeded population, trace, and Bernoulli fault draw).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use smr::collection::generate_mini_collection;
+use smr::collection::generators::pattern_population;
+use smr::coordinator::service::Backend;
+use smr::coordinator::{ServingConfig, ServingEngine};
+use smr::dataset::{build_dataset, SweepConfig};
+use smr::ml::forest::{ForestParams, RandomForest};
+use smr::ml::normalize::{Method, Normalizer};
+use smr::ml::Classifier;
+use smr::reorder::ReorderAlgorithm;
+use smr::solver::QuarantineConfig;
+use smr::util::bench::{section, JsonReport};
+use smr::util::deadline::Stage;
+use smr::util::faults::{Fault, FaultPlan};
+use smr::util::json;
+use smr::util::rng::{Rng, Zipf};
+use smr::util::Timer;
+
+const PATTERNS: usize = 24;
+const ZIPF_S: f64 = 1.1;
+const TRACE_LEN: usize = 400;
+
+fn trained_backend() -> Backend {
+    let train_coll = generate_mini_collection(5, 2);
+    let ds = build_dataset(
+        &train_coll,
+        &ReorderAlgorithm::LABEL_SET,
+        &SweepConfig::default(),
+    );
+    let normalizer = Normalizer::fit(Method::Standard, &ds.features());
+    let mut forest = RandomForest::new(
+        ForestParams {
+            n_estimators: 30,
+            ..Default::default()
+        },
+        5,
+    );
+    forest.fit(&normalizer.transform(&ds.features()), &ds.labels(), 4);
+    Backend::Forest { normalizer, forest }
+}
+
+struct LaneResult {
+    served: u64,
+    errors: u64,
+    elapsed_s: f64,
+    stats: smr::coordinator::ServingStats,
+}
+
+/// Replay the trace sequentially against a fresh engine carrying the
+/// given fault schedule.
+fn run_lane(
+    backend: &Backend,
+    trace: &[usize],
+    pop: &[smr::sparse::CsrMatrix],
+    faults: Option<Arc<FaultPlan>>,
+) -> LaneResult {
+    let engine = ServingEngine::spawn(
+        backend.clone(),
+        ServingConfig {
+            // defaults except a trip-able quarantine with a TTL longer
+            // than the run, so tombstones stay visible in the counters
+            quarantine: QuarantineConfig {
+                strikes: 3,
+                ttl: Duration::from_secs(600),
+            },
+            faults,
+            ..ServingConfig::default()
+        },
+    )
+    .expect("engine spawns");
+    let mut served = 0u64;
+    let mut errors = 0u64;
+    let t = Timer::start();
+    for &p in trace {
+        match engine.serve(&pop[p]) {
+            Ok(_) => served += 1,
+            Err(_) => errors += 1,
+        }
+    }
+    let elapsed_s = t.elapsed_s();
+    let stats = engine.stats();
+    engine.shutdown();
+    LaneResult {
+        served,
+        errors,
+        elapsed_s,
+        stats,
+    }
+}
+
+fn lane_record(name: &str, rate: f64, injected: usize, lane: &LaneResult) -> json::Json {
+    let s = &lane.stats;
+    let e2e = &s.latency.e2e;
+    println!(
+        "    {name}: goodput {:.1} req/s | errors {} | injected {injected} fired {} \
+         fallbacks {} | quarantined {} skips {} | p50 {:.3} ms p99 {:.3} ms p999 {:.3} ms",
+        lane.served as f64 / lane.elapsed_s.max(1e-12),
+        lane.errors,
+        s.faults_fired,
+        s.fallbacks,
+        s.plans.quarantined,
+        s.plans.quarantine_skips,
+        e2e.p50() * 1e3,
+        e2e.p99() * 1e3,
+        e2e.p999() * 1e3,
+    );
+    json::obj(vec![
+        ("name", json::s(name)),
+        ("fault_rate", json::num(rate)),
+        ("requests", json::num(s.requests as f64)),
+        ("served", json::num(lane.served as f64)),
+        ("errors", json::num(lane.errors as f64)),
+        ("injected", json::num(injected as f64)),
+        ("faults_fired", json::num(s.faults_fired as f64)),
+        ("fallbacks", json::num(s.fallbacks as f64)),
+        ("quarantined", json::num(s.plans.quarantined as f64)),
+        (
+            "quarantine_skips",
+            json::num(s.plans.quarantine_skips as f64),
+        ),
+        (
+            "deadline_expired",
+            json::num(s.deadline_expired_total() as f64),
+        ),
+        ("elapsed_s", json::num(lane.elapsed_s)),
+        (
+            "goodput_per_s",
+            json::num(lane.served as f64 / lane.elapsed_s.max(1e-12)),
+        ),
+        (
+            "fallback_rate",
+            json::num(s.fallbacks as f64 / (s.requests as f64).max(1.0)),
+        ),
+        ("p50_s", json::num(e2e.p50())),
+        ("p99_s", json::num(e2e.p99())),
+        ("p999_s", json::num(e2e.p999())),
+        ("mean_s", json::num(e2e.mean_s())),
+    ])
+}
+
+fn main() {
+    section("setup: sweep + train forest backend");
+    let backend = trained_backend();
+
+    section(&format!(
+        "setup: {PATTERNS}-pattern population, Zipf(s={ZIPF_S}) trace of {TRACE_LEN}"
+    ));
+    let pop = pattern_population(PATTERNS, 0xD1CE);
+    let zipf = Zipf::new(PATTERNS, ZIPF_S);
+    let mut rng = Rng::new(0x7AFF);
+    let trace: Vec<usize> = (0..TRACE_LEN).map(|_| zipf.sample(&mut rng)).collect();
+
+    let mut report = JsonReport::new();
+    report.set("bench", json::s("bench_faults"));
+    report.set("patterns", json::num(PATTERNS as f64));
+    report.set("zipf_s", json::num(ZIPF_S));
+    report.set("trace_len", json::num(TRACE_LEN as f64));
+
+    section("replay: fault-free baseline");
+    let baseline = run_lane(&backend, &trace, &pop, None);
+    report.set("baseline_p999_s", json::num(baseline.stats.latency.e2e.p999()));
+    report.set(
+        "baseline_goodput_per_s",
+        json::num(baseline.served as f64 / baseline.elapsed_s.max(1e-12)),
+    );
+    report.push(lane_record("faults_0pct", 0.0, 0, &baseline));
+
+    for (tag, rate) in [("faults_1pct", 0.01), ("faults_5pct", 0.05), ("faults_10pct", 0.10)] {
+        section(&format!("replay: {:.0}% injected numeric failures", rate * 100.0));
+        let plan = Arc::new(FaultPlan::bernoulli(
+            0xFA_17,
+            TRACE_LEN as u64,
+            rate,
+            Stage::Numeric,
+            Fault::FailNumeric,
+        ));
+        let injected = plan.len();
+        let lane = run_lane(&backend, &trace, &pop, Some(plan));
+        // graceful degradation is the product: nothing errors out, and
+        // the ledger closes — every fired fault is exactly one fallback
+        assert_eq!(lane.errors, 0, "{tag}: a faulted request errored out");
+        assert_eq!(
+            lane.stats.fallbacks, lane.stats.faults_fired,
+            "{tag}: fired faults and fallback hops must reconcile"
+        );
+        assert!(
+            lane.stats.faults_fired <= injected as u64,
+            "{tag}: fired more faults than scheduled"
+        );
+        report.push(lane_record(tag, rate, injected, &lane));
+    }
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_faults.json".into());
+    match report.write(&out) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\nfailed to write {out}: {e}"),
+    }
+}

@@ -13,7 +13,11 @@
 //!
 //! * **Closed loop**: W worker threads pull the next trace entry as soon
 //!   as their previous request completes — measures capacity (offered
-//!   load adapts to service rate).
+//!   load adapts to service rate). Each worker is the "retrying client"
+//!   the `Reject` policy presumes: on `Overloaded` it sleeps a seeded
+//!   jittered-exponential delay (`util::backoff::Backoff`) and retries
+//!   the same request, resetting on success — a `reject_r2` lane with a
+//!   shallow gate exercises exactly that loop.
 //! * **Open loop**: arrivals are scheduled at a fixed rate (70% of the
 //!   measured closed-loop capacity) regardless of completions, and each
 //!   request's latency is charged from its *scheduled* arrival — the
@@ -25,13 +29,14 @@ use std::time::{Duration, Instant};
 use smr::collection::generate_mini_collection;
 use smr::collection::generators::pattern_population;
 use smr::coordinator::service::Backend;
-use smr::coordinator::{OverloadPolicy, RouterConfig, ShardRouter};
+use smr::coordinator::{OverloadPolicy, RouterConfig, RouterError, ShardRouter};
 use smr::dataset::{build_dataset, SweepConfig};
 use smr::ml::forest::{ForestParams, RandomForest};
 use smr::ml::normalize::{Method, Normalizer};
 use smr::ml::Classifier;
 use smr::reorder::ReorderAlgorithm;
 use smr::sparse::CsrMatrix;
+use smr::util::backoff::{Backoff, BackoffConfig};
 use smr::util::bench::{section, JsonReport};
 use smr::util::hist::LatencyHist;
 use smr::util::json;
@@ -42,6 +47,8 @@ const PATTERNS: usize = 24;
 const ZIPF_S: f64 = 1.1;
 const TRACE_LEN: usize = 400;
 const WORKERS: usize = 4;
+/// Retry budget per request before the closed-loop client sheds it.
+const MAX_RETRIES: u32 = 12;
 
 fn trained_backend() -> Backend {
     let train_coll = generate_mini_collection(5, 2);
@@ -67,34 +74,57 @@ struct LaneResult {
     requests: u64,
     ok: u64,
     rejected: u64,
+    /// Overload retries the closed-loop client absorbed via backoff
+    /// (always 0 in open-loop lanes: scheduled arrivals don't retry).
+    retries: u64,
     elapsed_s: f64,
     latency: smr::util::hist::HistSnapshot,
 }
 
 /// Closed loop: workers race down the shared trace index, each charging
-/// latency from its own dispatch instant.
+/// latency from its own dispatch instant. Each worker carries its own
+/// seeded [`Backoff`]: `Overloaded` sleeps a jittered-exponential delay
+/// and retries the same request (latency still charged from first
+/// dispatch — retries are not coordinated omission), success resets the
+/// schedule, and after [`MAX_RETRIES`] the request is shed.
 fn run_closed(router: &ShardRouter, trace: &[usize], pop: &[CsrMatrix]) -> LaneResult {
     let next = AtomicUsize::new(0);
     let hist = LatencyHist::new();
     let ok = AtomicUsize::new(0);
     let rejected = AtomicUsize::new(0);
+    let retries = AtomicUsize::new(0);
     let t = Timer::start();
     std::thread::scope(|scope| {
-        for _ in 0..WORKERS {
-            let (next, hist, ok, rejected) = (&next, &hist, &ok, &rejected);
-            scope.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= trace.len() {
-                    break;
-                }
-                let t_req = Timer::start();
-                match router.serve(&pop[trace[i]]) {
-                    Ok(_) => {
-                        hist.record_s(t_req.elapsed_s());
-                        ok.fetch_add(1, Ordering::Relaxed);
+        for w in 0..WORKERS {
+            let (next, hist, ok, rejected, retries) = (&next, &hist, &ok, &rejected, &retries);
+            scope.spawn(move || {
+                let mut backoff = Backoff::new(BackoffConfig::default(), 0xB0FF ^ w as u64);
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= trace.len() {
+                        break;
                     }
-                    Err(_) => {
-                        rejected.fetch_add(1, Ordering::Relaxed);
+                    let t_req = Timer::start();
+                    loop {
+                        match router.serve(&pop[trace[i]]) {
+                            Ok(_) => {
+                                hist.record_s(t_req.elapsed_s());
+                                ok.fetch_add(1, Ordering::Relaxed);
+                                backoff.reset();
+                                break;
+                            }
+                            Err(RouterError::Overloaded { .. })
+                                if backoff.attempt() < MAX_RETRIES =>
+                            {
+                                retries.fetch_add(1, Ordering::Relaxed);
+                                std::thread::sleep(backoff.next_delay());
+                            }
+                            Err(_) => {
+                                rejected.fetch_add(1, Ordering::Relaxed);
+                                backoff.reset();
+                                break;
+                            }
+                        }
                     }
                 }
             });
@@ -104,6 +134,7 @@ fn run_closed(router: &ShardRouter, trace: &[usize], pop: &[CsrMatrix]) -> LaneR
         requests: trace.len() as u64,
         ok: ok.load(Ordering::Relaxed) as u64,
         rejected: rejected.load(Ordering::Relaxed) as u64,
+        retries: retries.load(Ordering::Relaxed) as u64,
         elapsed_s: t.elapsed_s(),
         latency: hist.snapshot(),
     }
@@ -149,6 +180,7 @@ fn run_open(router: &ShardRouter, trace: &[usize], pop: &[CsrMatrix], rate: f64)
         requests: trace.len() as u64,
         ok: ok.load(Ordering::Relaxed) as u64,
         rejected: rejected.load(Ordering::Relaxed) as u64,
+        retries: 0,
         elapsed_s: start.elapsed().as_secs_f64(),
         latency: hist.snapshot(),
     }
@@ -177,7 +209,7 @@ fn lane_record(
         .collect();
     println!(
         "    {name}: {:.1} req/s | p50 {:.3} ms p99 {:.3} ms p999 {:.3} ms | \
-         hit rate {:.1}% | leaders {} coalesced {} | rejected {}",
+         hit rate {:.1}% | leaders {} coalesced {} | rejected {} retries {}",
         lane.ok as f64 / lane.elapsed_s.max(1e-12),
         lane.latency.p50() * 1e3,
         lane.latency.p99() * 1e3,
@@ -186,6 +218,7 @@ fn lane_record(
         s.plan_leaders(),
         s.plan_coalesced(),
         lane.rejected,
+        lane.retries,
     );
     json::obj(vec![
         ("name", json::s(name)),
@@ -194,6 +227,7 @@ fn lane_record(
         ("requests", json::num(lane.requests as f64)),
         ("ok", json::num(lane.ok as f64)),
         ("rejected", json::num(lane.rejected as f64)),
+        ("retries", json::num(lane.retries as f64)),
         ("elapsed_s", json::num(lane.elapsed_s)),
         (
             "throughput_per_s",
@@ -271,6 +305,24 @@ fn main() {
 
         router.shutdown();
     }
+
+    // Reject policy with a shallow gate: the backpressure shape the
+    // retrying client exists for. W workers over 2 seats guarantees
+    // rejections; backoff absorbs them without lockstep retry storms.
+    section("replay: 2 replicas, Reject policy, shallow gate (backoff client)");
+    let router = ShardRouter::spawn(
+        RouterConfig {
+            replicas: 2,
+            queue_depth: 2,
+            policy: OverloadPolicy::Reject,
+            ..Default::default()
+        },
+        |_| backend.clone(),
+    )
+    .expect("router spawns");
+    let reject = run_closed(&router, &trace, &pop);
+    report.push(lane_record("reject_r2", "closed", 2, &reject, &router));
+    router.shutdown();
 
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_router.json".into());
     match report.write(&out) {

@@ -227,6 +227,17 @@ impl Learner {
         self.core.selector.decide(features, offline)
     }
 
+    /// All arms ranked best-first by current belief — the serving
+    /// engine's fallback-chain preference order when `features`'
+    /// selected algorithm fails (see `OnlineSelector::ranked`).
+    pub fn ranked(
+        &self,
+        features: &[f64; N_FEATURES],
+        offline: ReorderAlgorithm,
+    ) -> Vec<ReorderAlgorithm> {
+        self.core.selector.ranked(features, offline)
+    }
+
     /// Fire-and-forget feedback from a completed request. Never blocks:
     /// a full queue sheds (counted), and the in-band cadence drain is
     /// skipped if another thread already holds the drain lock.

@@ -67,6 +67,7 @@ pub use router::{
 };
 pub use service::{BatcherConfig, PredictionService, ServiceStats, ServiceStatsSnapshot};
 pub use serving::{
-    BatchConfig, BatchStats, ServingConfig, ServingEngine, ServingReport, ServingStats,
+    BatchConfig, BatchStats, FallbackCause, FallbackEvent, ServeError, ServingConfig,
+    ServingEngine, ServingReport, ServingStats,
 };
 pub use trainer::{train_forest, train_mlp, TrainedForest, TrainedMlp};

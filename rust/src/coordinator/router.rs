@@ -33,6 +33,15 @@
 //! The request lifecycle is: `serve(a)` → fingerprint → home replica →
 //! gate (policy) → `ServingEngine::serve` (prediction batching, plan
 //! cache with in-flight dedup, coalesced numeric path) → release seat.
+//!
+//! **Deadlines.** [`ShardRouter::serve_with_deadline`] threads a
+//! [`Deadline`] through the whole path: under `Block` the admission
+//! park becomes `AdmissionGate::enter_until` — the caller gives up at
+//! the deadline instead of parking forever behind a saturated replica
+//! ([`RouterError::DeadlineExpired`] at [`Stage::Admission`]) — and the
+//! engine checks the same budget before its plan and numeric stages.
+//! `requests == served + rejected + deadline-expired` reconciles
+//! fleet-wide via [`RouterStats::deadline_expired_total`].
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -40,8 +49,9 @@ use anyhow::Result;
 
 use super::learner::LearnerStats;
 use super::service::Backend;
-use super::serving::{ServingConfig, ServingEngine, ServingReport, ServingStats};
+use super::serving::{ServeError, ServingConfig, ServingEngine, ServingReport, ServingStats};
 use crate::sparse::{CsrMatrix, PatternKey};
+use crate::util::deadline::{Deadline, Stage};
 use crate::util::hist::{HistSnapshot, LatencyHist};
 use crate::util::pool::{AdmissionGate, GateStats};
 use crate::util::Timer;
@@ -51,7 +61,11 @@ use crate::util::Timer;
 pub enum OverloadPolicy {
     /// Fail fast: the caller gets [`RouterError::Overloaded`] and
     /// retries (or sheds) at its own layer. Lowest tail latency under
-    /// overload; requires a retrying client.
+    /// overload; requires a retrying client — pair it with
+    /// [`crate::util::backoff::Backoff`] (seeded-jitter exponential
+    /// delays) so a rejected fleet of closed-loop clients doesn't
+    /// retry in lockstep; `benches/bench_router.rs` wires exactly that
+    /// loop.
     Reject,
     /// Try the remaining replicas in this key's preference order. Keeps
     /// the request in-process at the cost of cold-path duplication on
@@ -64,7 +78,7 @@ pub enum OverloadPolicy {
 }
 
 /// Knobs for [`ShardRouter::spawn`].
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct RouterConfig {
     /// Replica engines to stand up (≥ 1; clamped).
     pub replicas: usize,
@@ -96,6 +110,11 @@ pub enum RouterError {
     /// Admission denied: the named replica's gate (and, under `Spill`,
     /// every other replica's too) was full.
     Overloaded { replica: usize },
+    /// The request's [`Deadline`] lapsed — at [`Stage::Admission`] the
+    /// caller gave up parked outside the named replica's full gate;
+    /// later stages are the engine's own typed expiry surfaced through
+    /// the router.
+    DeadlineExpired { replica: usize, stage: Stage },
     /// The serving engine itself failed.
     Engine(anyhow::Error),
 }
@@ -105,6 +124,9 @@ impl std::fmt::Display for RouterError {
         match self {
             RouterError::Overloaded { replica } => {
                 write!(f, "admission denied: replica {replica} is at capacity")
+            }
+            RouterError::DeadlineExpired { replica, stage } => {
+                write!(f, "deadline expired at {stage} stage on replica {replica}")
             }
             RouterError::Engine(e) => write!(f, "serving engine failed: {e:#}"),
         }
@@ -183,6 +205,11 @@ pub struct RouterStats {
     pub requests: u64,
     /// Requests denied admission everywhere policy allowed.
     pub rejected: u64,
+    /// Requests whose deadline lapsed while parked at a `Block` gate
+    /// (admission-stage expiries only; plan/numeric expiries live in
+    /// the per-replica engine stats — see
+    /// [`RouterStats::deadline_expired_total`]).
+    pub deadline_expired: u64,
     /// Requests served off their home replica.
     pub spilled: u64,
     /// Arrival → admission wait distribution.
@@ -195,6 +222,26 @@ impl RouterStats {
     /// Requests actually served, fleet-wide.
     pub fn served(&self) -> u64 {
         self.replicas.iter().map(|r| r.serving.requests).sum()
+    }
+
+    /// Deadline expiries across every stage and layer: admission-stage
+    /// give-ups counted by the router plus each replica engine's
+    /// plan/numeric-stage expiries. With a `Block` policy,
+    /// `e2e-served + rejected + deadline_expired_total` accounts for
+    /// every admitted-or-not request.
+    pub fn deadline_expired_total(&self) -> u64 {
+        self.deadline_expired
+            + self
+                .replicas
+                .iter()
+                .map(|r| r.serving.deadline_expired_total())
+                .sum::<u64>()
+    }
+
+    /// Fallback-chain hops (failed attempts recovered on a later arm)
+    /// across the fleet.
+    pub fn fallbacks(&self) -> u64 {
+        self.replicas.iter().map(|r| r.serving.fallbacks).sum()
     }
 
     /// Plan-cache hits across the fleet.
@@ -279,6 +326,7 @@ pub struct ShardRouter {
     policy: OverloadPolicy,
     requests: AtomicU64,
     rejected: AtomicU64,
+    deadline_expired: AtomicU64,
     spilled: AtomicU64,
     queue_wait: LatencyHist,
 }
@@ -297,7 +345,7 @@ impl ShardRouter {
         let mut replicas = Vec::with_capacity(n);
         for i in 0..n {
             replicas.push(Replica {
-                engine: ServingEngine::spawn(make_backend(i), cfg.serving)?,
+                engine: ServingEngine::spawn(make_backend(i), cfg.serving.clone())?,
                 gate: AdmissionGate::new(cfg.queue_depth),
                 requests: AtomicU64::new(0),
                 spill_in: AtomicU64::new(0),
@@ -308,6 +356,7 @@ impl ShardRouter {
             policy: cfg.policy,
             requests: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            deadline_expired: AtomicU64::new(0),
             spilled: AtomicU64::new(0),
             queue_wait: LatencyHist::new(),
         })
@@ -340,13 +389,43 @@ impl ShardRouter {
     /// `queue_depth` bounds each replica's in-service concurrency, not
     /// just a queue length.
     pub fn serve(&self, a: &CsrMatrix) -> Result<RouterReport, RouterError> {
+        self.serve_with_deadline(a, None)
+    }
+
+    /// [`Self::serve`] with a latency budget. Under `Block` the
+    /// admission park is bounded by the deadline
+    /// ([`AdmissionGate::enter_until`]); a give-up is a typed
+    /// [`RouterError::DeadlineExpired`] at [`Stage::Admission`] and a
+    /// router-level counter bump. Once admitted the same budget is
+    /// re-checked by the engine before its plan and numeric stages, and
+    /// those expiries surface here with their stage attribution intact.
+    pub fn serve_with_deadline(
+        &self,
+        a: &CsrMatrix,
+        deadline: Option<Deadline>,
+    ) -> Result<RouterReport, RouterError> {
         let key = PatternKey::of(a);
         let home = self.home_of(&key);
         self.requests.fetch_add(1, Ordering::Relaxed);
 
         let t_q = Timer::start();
         let (idx, pass) = match self.policy {
-            OverloadPolicy::Block => (home, self.replicas[home].gate.enter()),
+            OverloadPolicy::Block => {
+                let pass = match deadline {
+                    Some(dl) => match self.replicas[home].gate.enter_until(dl.instant()) {
+                        Some(p) => p,
+                        None => {
+                            self.deadline_expired.fetch_add(1, Ordering::Relaxed);
+                            return Err(RouterError::DeadlineExpired {
+                                replica: home,
+                                stage: Stage::Admission,
+                            });
+                        }
+                    },
+                    None => self.replicas[home].gate.enter(),
+                };
+                (home, pass)
+            }
             OverloadPolicy::Reject => match self.replicas[home].gate.try_enter() {
                 Some(p) => (home, p),
                 None => {
@@ -381,7 +460,21 @@ impl ShardRouter {
             self.spilled.fetch_add(1, Ordering::Relaxed);
             replica.spill_in.fetch_add(1, Ordering::Relaxed);
         }
-        let report = replica.engine.serve(a).map_err(RouterError::Engine)?;
+        let report = match replica.engine.serve_with_deadline(a, deadline) {
+            Ok(r) => r,
+            // The engine already counted its own expiry (per stage);
+            // re-type it so router callers see one error enum, without
+            // double-counting at this layer.
+            Err(e) => {
+                return Err(match e.downcast_ref::<ServeError>() {
+                    Some(ServeError::DeadlineExpired { stage }) => RouterError::DeadlineExpired {
+                        replica: idx,
+                        stage: *stage,
+                    },
+                    _ => RouterError::Engine(e),
+                })
+            }
+        };
         drop(pass); // seat released only after the engine finished
         Ok(RouterReport {
             replica: idx,
@@ -396,6 +489,7 @@ impl ShardRouter {
         RouterStats {
             requests: self.requests.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
             spilled: self.spilled.load(Ordering::Relaxed),
             queue_wait: self.queue_wait.snapshot(),
             replicas: self

@@ -95,9 +95,41 @@
 //! callers that already hold a burst in hand (deterministic grouping, no
 //! window). Group formation is counted in [`BatchStats`].
 //!
+//! ## Failure domains & graceful degradation
+//!
+//! Serving survives three failure classes without erroring a request
+//! out (see `ARCHITECTURE.md` for the full failure-domain map):
+//!
+//! * **Deadline expiry.** [`ServingEngine::serve_with_deadline`]
+//!   carries a [`Deadline`] through the request and checks it before
+//!   each unbounded stage; an expired budget returns the typed
+//!   [`ServeError::DeadlineExpired`] with the [`Stage`] that observed
+//!   it and counts into `deadline_expired` —
+//!   `served + expired == requests` always reconciles.
+//! * **Compute failure.** A reorderer panic (contained by
+//!   `catch_unwind`; every pool/gate/cache guard is RAII and
+//!   panic-safe) or a numeric failure ([`FactorError`], e.g. a zero
+//!   pivot under the selected ordering) fails the *attempt*, not the
+//!   request: the engine walks a deterministic **fallback chain** —
+//!   selected algorithm first, then the bandit's ranked preference
+//!   order (or `PAPER_SET` order without a learner), AMD held as the
+//!   last resort — recording a [`FallbackEvent`] per hop and feeding
+//!   the failure to the learner as a worst-case-cost observation.
+//! * **Poisoned plans.** A `(pattern, algorithm)` that keeps failing is
+//!   tombstoned by the plan cache's quarantine circuit breaker
+//!   ([`QuarantineConfig`]); later requests route straight to their
+//!   fallback chain without re-paying the failure, until the TTL lapses
+//!   and the key is re-admitted.
+//!
+//! Fault-tolerance tests drive all three deterministically through
+//! [`ServingConfig::faults`] (a seeded [`FaultPlan`]; default `None`,
+//! zero cost when disabled) — see `util::faults` and
+//! `tests/integration_fault_serving.rs`.
+//!
 //! See `ARCHITECTURE.md` for how this sits in the whole system.
 
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -109,15 +141,23 @@ use super::service::{Backend, BatcherConfig, PredictionService, ServiceStatsSnap
 use crate::features;
 use crate::reorder::cache::{CacheConfig, CacheStats, Fetch, OrderingCache};
 use crate::reorder::{MatrixAnalysis, Permutation, ReorderAlgorithm, WorkspacePool};
-use crate::solver::plan_cache::{PlanCache, PlanKey};
+use crate::solver::plan_cache::{PlanCache, PlanKey, QuarantineConfig};
 use crate::solver::{
     plan_solve_prepared, prepare, solve_refreshed_batch, solve_with_plan, FactorError,
     NumericWorkspace, RepairConfig, SolveReport, SolverConfig, SymbolicFactorization,
 };
 use crate::sparse::CsrMatrix;
+use crate::util::deadline::{Deadline, Stage};
+use crate::util::faults::{Fault, FaultPlan};
 use crate::util::hist::{HistSnapshot, LatencyHist};
 use crate::util::pool::{ObjectPool, PoolStats};
 use crate::util::Timer;
+
+/// The bandit penalty charged for a failed attempt (a panicking
+/// reorderer or a numeric failure), in "measured seconds": orders of
+/// magnitude above any real solve, so a failing arm's model drifts
+/// toward worst-case cost and the greedy pick routes around it.
+const FAILURE_COST_S: f64 = 1.0;
 
 /// Admission policy for same-plan request coalescing (the batched warm
 /// path — see the module docs).
@@ -143,8 +183,73 @@ impl Default for BatchConfig {
     }
 }
 
+/// Typed serving failures, wrapped in `anyhow::Error` on the request
+/// path (downcast with `err.downcast_ref::<ServeError>()`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request's [`Deadline`] passed before `stage` could start;
+    /// no further work ran. Counted per stage in
+    /// [`ServingStats::deadline_expired`].
+    DeadlineExpired {
+        /// The stage that observed the expiry (checkpoints run *before*
+        /// each stage, so this stage did not run).
+        stage: Stage,
+    },
+    /// The matrix failed admission validation (empty, non-square, or
+    /// non-finite values) — rejected before any pipeline stage, and not
+    /// counted as a request.
+    InvalidInput(String),
+    /// Every algorithm in the fallback chain failed or was quarantined.
+    /// With AMD as the always-present last resort this is only
+    /// reachable when the *matrix itself* defeats every ordering.
+    Exhausted {
+        /// Chain length walked before giving up.
+        attempts: usize,
+    },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::DeadlineExpired { stage } => {
+                write!(f, "deadline expired before the {stage} stage")
+            }
+            ServeError::InvalidInput(why) => write!(f, "invalid input matrix: {why}"),
+            ServeError::Exhausted { attempts } => {
+                write!(f, "all {attempts} fallback-chain attempts failed")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Why one fallback hop happened.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FallbackCause {
+    /// The attempt's compute panicked (contained by `catch_unwind`).
+    Panic,
+    /// The numeric factorization failed ([`FactorError`]) under the
+    /// attempted ordering.
+    Numeric,
+    /// The `(pattern, algorithm)` was quarantine-tombstoned — skipped
+    /// without attempting (counted as a `quarantine_skip`, not a
+    /// `fallbacks` event, in the stats).
+    Quarantined,
+}
+
+/// One hop down a request's fallback chain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FallbackEvent {
+    /// The algorithm that failed (or was quarantined).
+    pub from: ReorderAlgorithm,
+    /// The next algorithm the chain moved to.
+    pub to: ReorderAlgorithm,
+    pub cause: FallbackCause,
+}
+
 /// Knobs for [`ServingEngine::spawn`].
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ServingConfig {
     /// Ordering-cache sizing (cold-path permutation memoization).
     pub cache: CacheConfig,
@@ -173,6 +278,16 @@ pub struct ServingConfig {
     /// reorder+factor+solve time. Exploration is gated to
     /// plan-cache-cold requests — see [`super::learner`].
     pub learner: Option<LearnerConfig>,
+    /// Quarantine circuit breaker for repeatedly failing
+    /// `(pattern, algorithm)` plan keys (see the module docs'
+    /// failure-domain section and [`QuarantineConfig`]).
+    pub quarantine: QuarantineConfig,
+    /// Deterministic fault injection for fault-tolerance tests and
+    /// benches (`None` = off, the default: the request path never
+    /// consults a schedule). Faults key on the engine-wide request
+    /// index, so injected runs should serve sequentially for an exact
+    /// ledger — see `util::faults`.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl Default for ServingConfig {
@@ -187,6 +302,8 @@ impl Default for ServingConfig {
             repair: None,
             max_idle_workspaces: crate::util::pool::default_workers() + 1,
             learner: None,
+            quarantine: QuarantineConfig::default(),
+            faults: None,
         }
     }
 }
@@ -224,6 +341,12 @@ pub struct ServingReport {
     /// false without a learner, and only ever true on plan-cache-cold
     /// requests — the exploration gate).
     pub explored: bool,
+    /// The fallback-chain hops this request took before being served
+    /// (empty on the untroubled path — which is every request unless a
+    /// compute failed or its key was quarantined). `algorithm` above is
+    /// the arm that finally served; `fallbacks[0].from` is the original
+    /// selection.
+    pub fallbacks: Vec<FallbackEvent>,
     /// The ordering itself (shared with the plan and ordering caches).
     pub permutation: Arc<Permutation>,
     /// The downstream numeric solve (its `reorder_s` mirrors the field
@@ -261,12 +384,14 @@ pub struct BatchStats {
     /// Requests that rode another request's traversal (Σ (k−1) over
     /// formed groups) — each one is a full DAG walk that never ran.
     pub coalesced: u64,
-    /// Groups sealed by window expiry rather than by filling
-    /// `max_batch` (includes groups of 1: a leader nobody joined).
+    /// Groups sealed by *genuine* window expiry — the leader slept the
+    /// window out and factored whatever had joined (includes groups of
+    /// 1 whose joiners never came). Disjoint from `lonely_bails`.
     pub window_timeouts: u64,
     /// Lonely-leader early exits: the leader observed no other request
     /// in flight at admission and sealed immediately instead of
-    /// sleeping out the window (counted inside `window_timeouts` too).
+    /// sleeping out the window. Disjoint from `window_timeouts` — a
+    /// bail never sleeps, an expiry always did.
     pub lonely_bails: u64,
     /// Group-size histogram: slot `i` counts groups of size `i+1`;
     /// the last slot counts every group of size ≥ 8.
@@ -301,6 +426,29 @@ pub struct ServingStats {
     /// Per-stage latency distributions (p50/p99/p999 via
     /// [`HistSnapshot::quantile`]) over every request served so far.
     pub latency: StageLatencies,
+    /// Failed-attempt fallback hops (cause `Panic` or `Numeric`) across
+    /// all requests. Quarantine redirects are *not* counted here — they
+    /// appear as `plans.quarantine_skips`, so
+    /// `fallbacks + plans.quarantine_skips` is the total
+    /// degraded-routing ledger.
+    pub fallbacks: u64,
+    /// Requests refused at a deadline checkpoint, indexed by
+    /// [`Stage::index`] (admission expiries live in the router's
+    /// stats — the engine only sees plan/numeric checkpoints).
+    /// `requests == served + Σ deadline_expired` reconciles.
+    pub deadline_expired: [u64; 3],
+    /// Injected faults that actually executed (a scheduled fault on a
+    /// request that never reached its site — e.g. a plan-stage panic on
+    /// a warm hit, or a quarantine skip — does not count). Always 0
+    /// without [`ServingConfig::faults`].
+    pub faults_fired: u64,
+}
+
+impl ServingStats {
+    /// Total deadline-expired requests across stages.
+    pub fn deadline_expired_total(&self) -> u64 {
+        self.deadline_expired.iter().sum()
+    }
 }
 
 /// Per-stage latency snapshots: one log-bucketed histogram per request
@@ -415,6 +563,8 @@ pub struct ServingEngine {
     batch_slots: Mutex<HashMap<PlanKey, Arc<BatchSlot>>>,
     /// The online learning loop (`None` = pure offline serving).
     learner: Option<Learner>,
+    /// Deterministic fault schedule (`None` = off; see `util::faults`).
+    faults: Option<Arc<FaultPlan>>,
     reorder_seed: u64,
     requests: AtomicU64,
     /// Requests currently inside `serve`/`serve_batch` (any stage).
@@ -427,6 +577,9 @@ pub struct ServingEngine {
     window_timeouts: AtomicU64,
     lonely_bails: AtomicU64,
     size_hist: [AtomicU64; 8],
+    fallbacks: AtomicU64,
+    deadline_expired: [AtomicU64; 3],
+    faults_fired: AtomicU64,
     hists: StageHists,
 }
 
@@ -483,6 +636,36 @@ impl BatchSlot {
     }
 }
 
+/// The selection half of a request: features extracted, algorithm
+/// chosen (offline model + online override), nothing planned yet.
+struct Selected {
+    algorithm: ReorderAlgorithm,
+    feats: [f64; features::N_FEATURES],
+    feature_s: f64,
+    predict_s: f64,
+    explored: bool,
+}
+
+/// One fallback-chain attempt's successful outcome.
+struct AttemptServe {
+    reorder_s: f64,
+    plan_hit: bool,
+    plan_coalesced: bool,
+    repaired: bool,
+    plan: Arc<SymbolicFactorization>,
+    solve: SolveReport,
+    batch_k: usize,
+}
+
+/// Why one fallback-chain attempt did not serve.
+enum AttemptError {
+    /// The deadline passed at a stage checkpoint — the whole request
+    /// gives up (no fallback can beat the clock).
+    Deadline(Stage),
+    /// The attempt's compute failed; the chain moves on.
+    Failed(FallbackCause),
+}
+
 /// The prediction + plan-routing half of a request (everything up to —
 /// but not including — the numeric solve).
 struct Routed {
@@ -513,7 +696,7 @@ impl ServingEngine {
         ServingEngine {
             service,
             cache: Arc::new(OrderingCache::new(cfg.cache)),
-            plans: Arc::new(PlanCache::new(cfg.plan_cache)),
+            plans: Arc::new(PlanCache::with_quarantine(cfg.plan_cache, cfg.quarantine)),
             workspaces: WorkspacePool::new(max_idle),
             numeric: ObjectPool::new(max_idle),
             solver: cfg.solver,
@@ -521,6 +704,7 @@ impl ServingEngine {
             repair: cfg.repair,
             batch_slots: Mutex::new(HashMap::new()),
             learner: cfg.learner.map(Learner::spawn),
+            faults: cfg.faults,
             reorder_seed: cfg.reorder_seed,
             requests: AtomicU64::new(0),
             in_flight: AtomicU64::new(0),
@@ -529,6 +713,9 @@ impl ServingEngine {
             window_timeouts: AtomicU64::new(0),
             lonely_bails: AtomicU64::new(0),
             size_hist: std::array::from_fn(|_| AtomicU64::new(0)),
+            fallbacks: AtomicU64::new(0),
+            deadline_expired: std::array::from_fn(|_| AtomicU64::new(0)),
+            faults_fired: AtomicU64::new(0),
             hists: StageHists::default(),
         }
     }
@@ -544,13 +731,10 @@ impl ServingEngine {
         &self.plans
     }
 
-    /// The prediction + plan-routing half of a request: extract features
-    /// off the raw pattern (degree-only, no graph), predict through the
-    /// batcher, fetch-or-plan the symbolic factorization — the miss path
-    /// prepares the matrix once, shares the analysis between the
-    /// ordering cache and the plan, and runs the ordering on a pooled
-    /// workspace.
-    fn route(&self, a: &CsrMatrix) -> Result<Routed> {
+    /// The selection half of a request: extract features off the raw
+    /// pattern (degree-only, no graph) and predict through the batcher,
+    /// with the online learner's override gate on top.
+    fn select(&self, a: &CsrMatrix) -> Result<Selected> {
         let t_f = Timer::start();
         let feats = features::extract(a);
         let feature_s = t_f.elapsed_s();
@@ -576,10 +760,35 @@ impl ServingEngine {
             None => (offline, false),
         };
         let predict_s = t_p.elapsed_s();
+        Ok(Selected {
+            algorithm,
+            feats,
+            feature_s,
+            predict_s,
+            explored,
+        })
+    }
 
+    /// The plan half of a request: fetch-or-plan the symbolic
+    /// factorization for `(a, algorithm)` — the miss path prepares the
+    /// matrix once, shares the analysis between the ordering cache and
+    /// the plan, and runs the ordering on a pooled workspace.
+    /// `plan_fault` (injection only) fires *inside* the cold compute
+    /// closure, so it unwinds through the cache's leader guard exactly
+    /// like a real reorderer panic; a warm hit never reaches it.
+    fn plan_for(
+        &self,
+        a: &CsrMatrix,
+        algorithm: ReorderAlgorithm,
+        key: PlanKey,
+        plan_fault: Option<Fault>,
+    ) -> (Arc<SymbolicFactorization>, Fetch, bool, f64) {
         let t_r = Timer::start();
-        let key = PlanKey::of(a, algorithm, self.reorder_seed, &self.solver);
         let cold = || {
+            if let Some(Fault::PanicAt) = plan_fault {
+                self.faults_fired.fetch_add(1, Ordering::Relaxed);
+                panic!("injected fault: reorderer panic at the plan stage");
+            }
             // cold path: one symmetrization feeds the analysis, the
             // ordering, and the symbolic plan
             let spd = prepare(a, &self.solver);
@@ -597,17 +806,25 @@ impl ServingEngine {
                 (plan, fetch, false)
             }
         };
-        let reorder_s = t_r.elapsed_s();
+        (plan, fetch, repaired, t_r.elapsed_s())
+    }
+
+    /// Selection + planning in one step — the fault-free routing used
+    /// by [`Self::serve_batch`].
+    fn route(&self, a: &CsrMatrix) -> Result<Routed> {
+        let sel = self.select(a)?;
+        let key = PlanKey::of(a, sel.algorithm, self.reorder_seed, &self.solver);
+        let (plan, fetch, repaired, reorder_s) = self.plan_for(a, sel.algorithm, key, None);
         Ok(Routed {
-            algorithm,
-            feats,
-            feature_s,
-            predict_s,
+            algorithm: sel.algorithm,
+            feats: sel.feats,
+            feature_s: sel.feature_s,
+            predict_s: sel.predict_s,
             reorder_s,
             plan_hit: fetch.is_hit(),
             plan_coalesced: fetch == Fetch::Coalesced,
             repaired,
-            explored,
+            explored: sel.explored,
             plan,
             key,
         })
@@ -625,6 +842,7 @@ impl ServingEngine {
             repaired: r.repaired,
             batch_k,
             explored: r.explored,
+            fallbacks: Vec::new(),
             permutation: r.plan.perm.clone(),
             solve,
         }
@@ -644,33 +862,249 @@ impl ServingEngine {
         }
     }
 
-    /// Serve one request end to end: [`route`](Self::route), then replay
-    /// the plan numerically on pooled scratch. With coalescing enabled
+    /// Admission validation: reject matrices no pipeline stage can
+    /// serve (typed [`ServeError::InvalidInput`]) *before* counting the
+    /// request or touching any cache. NaN values matter specifically:
+    /// the factorization's zero-pivot check (`d == 0.0`) is false for
+    /// NaN, so an unvalidated NaN matrix would "succeed" into garbage.
+    fn validate(a: &CsrMatrix) -> Result<()> {
+        let reject = |why: String| Err(anyhow::Error::new(ServeError::InvalidInput(why)));
+        if a.nrows == 0 || a.ncols == 0 {
+            return reject(format!("empty matrix ({}x{})", a.nrows, a.ncols));
+        }
+        if a.nrows != a.ncols {
+            return reject(format!("non-square matrix ({}x{})", a.nrows, a.ncols));
+        }
+        if !a.data.iter().all(|v| v.is_finite()) {
+            return reject("non-finite (NaN/inf) values".to_string());
+        }
+        Ok(())
+    }
+
+    /// Count one deadline expiry at `stage` and build its typed error.
+    fn expire(&self, stage: Stage) -> anyhow::Error {
+        self.deadline_expired[stage.index()].fetch_add(1, Ordering::Relaxed);
+        anyhow::Error::new(ServeError::DeadlineExpired { stage })
+    }
+
+    /// The deterministic per-request fallback preference order: the
+    /// selected algorithm first, then the bandit's current ranking
+    /// (or [`ReorderAlgorithm::PAPER_SET`] order without a learner),
+    /// with AMD held back as the unconditional last resort — the
+    /// paper's most robust general-purpose ordering.
+    fn fallback_chain(&self, sel: &Selected) -> Vec<ReorderAlgorithm> {
+        let ranked = match &self.learner {
+            Some(learner) => learner.ranked(&sel.feats, sel.algorithm),
+            None => ReorderAlgorithm::PAPER_SET.to_vec(),
+        };
+        let mut chain = vec![sel.algorithm];
+        for algorithm in ranked {
+            if algorithm != sel.algorithm && algorithm != ReorderAlgorithm::Amd {
+                chain.push(algorithm);
+            }
+        }
+        if sel.algorithm != ReorderAlgorithm::Amd {
+            chain.push(ReorderAlgorithm::Amd);
+        }
+        chain
+    }
+
+    /// One fallback-chain attempt: plan + numeric for a single
+    /// algorithm, with deadline checkpoints before each stage and the
+    /// whole compute contained by `catch_unwind` — a panicking
+    /// reorderer or kernel fails the *attempt*, never the engine
+    /// (every pool/gate/cache guard is RAII and panic-safe, and cache
+    /// computes run outside shard locks, so nothing is poisoned).
+    #[allow(clippy::too_many_arguments)]
+    fn attempt(
+        &self,
+        a: &CsrMatrix,
+        algorithm: ReorderAlgorithm,
+        key: PlanKey,
+        deadline: Option<Deadline>,
+        plan_fault: Option<Fault>,
+        numeric_fault: Option<Fault>,
+    ) -> Result<AttemptServe, AttemptError> {
+        // injected stall before the plan stage (deadline-expiry tests)
+        if let Some(Fault::Delay(d)) = plan_fault {
+            self.faults_fired.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(d);
+        }
+        if let Some(dl) = deadline {
+            if let Err(stage) = dl.check(Stage::Plan) {
+                return Err(AttemptError::Deadline(stage));
+            }
+        }
+        let planned = catch_unwind(AssertUnwindSafe(|| {
+            self.plan_for(a, algorithm, key, plan_fault)
+        }));
+        let (plan, fetch, repaired, reorder_s) = match planned {
+            Ok(p) => p,
+            Err(_) => return Err(AttemptError::Failed(FallbackCause::Panic)),
+        };
+
+        // injected stall before the numeric stage
+        if let Some(Fault::Delay(d)) = numeric_fault {
+            self.faults_fired.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(d);
+        }
+        if let Some(dl) = deadline {
+            if let Err(stage) = dl.check(Stage::Numeric) {
+                return Err(AttemptError::Deadline(stage));
+            }
+        }
+        // a numeric-faulted request bypasses the admission window: an
+        // injected leader failure must never take innocent joiners down
+        let coalesce =
+            self.batch.max_batch >= 2 && fetch.is_hit() && !plan.capped && numeric_fault.is_none();
+        let numeric = catch_unwind(AssertUnwindSafe(
+            || -> Result<(SolveReport, usize), FactorError> {
+                match numeric_fault {
+                    Some(Fault::PanicAt) => {
+                        self.faults_fired.fetch_add(1, Ordering::Relaxed);
+                        panic!("injected fault: kernel panic at the numeric stage");
+                    }
+                    Some(Fault::FailNumeric) => {
+                        self.faults_fired.fetch_add(1, Ordering::Relaxed);
+                        // synthetic "ordering broke the factorization"
+                        return Err(FactorError::ZeroPivot(usize::MAX));
+                    }
+                    _ => {}
+                }
+                if coalesce {
+                    self.serve_coalesced(a, &plan, key)
+                } else {
+                    // RAII checkout: the scratch returns to the pool on
+                    // every exit path, panic unwind included
+                    let mut scratch = self.numeric.checkout_guard(NumericWorkspace::new);
+                    solve_with_plan(a, &plan, &self.solver, &mut scratch).map(|s| (s, 1))
+                }
+            },
+        ));
+        match numeric {
+            Ok(Ok((solve, batch_k))) => Ok(AttemptServe {
+                reorder_s,
+                plan_hit: fetch.is_hit(),
+                plan_coalesced: fetch == Fetch::Coalesced,
+                repaired,
+                plan,
+                solve,
+                batch_k,
+            }),
+            Ok(Err(_)) => Err(AttemptError::Failed(FallbackCause::Numeric)),
+            Err(_) => Err(AttemptError::Failed(FallbackCause::Panic)),
+        }
+    }
+
+    /// Serve one request end to end: select, then replay the plan
+    /// numerically on pooled scratch. With coalescing enabled
     /// ([`BatchConfig::max_batch`] ≥ 2), a warm uncapped request enters
     /// the per-plan admission window and may share one k-wide traversal
     /// with concurrent same-plan requests — with results bit-identical
-    /// to being served alone (see the module docs).
+    /// to being served alone (see the module docs). Equivalent to
+    /// [`Self::serve_with_deadline`] with no deadline.
     pub fn serve(&self, a: &CsrMatrix) -> Result<ServingReport> {
-        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.serve_with_deadline(a, None)
+    }
+
+    /// [`Self::serve`] under a completion budget, with the fallback
+    /// chain underneath (module docs, "Failure domains"): the selected
+    /// algorithm is attempted first; a panicking or numerically-failing
+    /// attempt strikes its plan key (quarantine), penalizes its bandit
+    /// arm, and falls through to the next algorithm in the chain. The
+    /// deadline is checked before each unbounded stage; expiry returns
+    /// the typed [`ServeError::DeadlineExpired`] and counts into
+    /// [`ServingStats::deadline_expired`], so
+    /// `served + expired == requests` always reconciles.
+    pub fn serve_with_deadline(
+        &self,
+        a: &CsrMatrix,
+        deadline: Option<Deadline>,
+    ) -> Result<ServingReport> {
+        Self::validate(a)?;
+        let idx = self.requests.fetch_add(1, Ordering::Relaxed);
         let _presence = InFlight::enter(&self.in_flight, 1);
-        let r = self.route(a)?;
-        let coalesce = self.batch.max_batch >= 2 && r.plan_hit && !r.plan.capped;
-        let (solve, batch_k) = if coalesce {
-            self.serve_coalesced(a, &r.plan, r.key)
-                .map_err(anyhow::Error::msg)?
-        } else {
-            // RAII checkout: the scratch returns to the pool on every
-            // exit path, panic unwind included
-            let mut scratch = self.numeric.checkout_guard(NumericWorkspace::new);
-            let solve = solve_with_plan(a, &r.plan, &self.solver, &mut scratch)
-                .map_err(anyhow::Error::msg)?;
-            (solve, 1)
+        if let Some(dl) = deadline {
+            if let Err(stage) = dl.check(Stage::Plan) {
+                return Err(self.expire(stage));
+            }
+        }
+        let sel = self.select(a)?;
+        // faults attach to the request's *first* attempt only —
+        // fallback attempts run clean (see `util::faults`)
+        let (plan_fault, numeric_fault) = match &self.faults {
+            Some(f) => (f.at(idx, Stage::Plan), f.at(idx, Stage::Numeric)),
+            None => (None, None),
         };
-        let feats = r.feats;
-        let report = Self::report(r, solve, batch_k);
-        self.hists.observe(&report);
-        self.feedback(feats, &report);
-        Ok(report)
+        let chain = self.fallback_chain(&sel);
+        let mut fallbacks: Vec<FallbackEvent> = Vec::new();
+        for (i, &algorithm) in chain.iter().enumerate() {
+            let key = PlanKey::of(a, algorithm, self.reorder_seed, &self.solver);
+            if self.plans.quarantined(&key) {
+                // tombstoned: route around it without attempting (the
+                // cache counted the skip); not a `fallbacks` event
+                if let Some(&to) = chain.get(i + 1) {
+                    fallbacks.push(FallbackEvent {
+                        from: algorithm,
+                        to,
+                        cause: FallbackCause::Quarantined,
+                    });
+                }
+                continue;
+            }
+            let (pf, nf) = if i == 0 {
+                (plan_fault, numeric_fault)
+            } else {
+                (None, None)
+            };
+            match self.attempt(a, algorithm, key, deadline, pf, nf) {
+                Ok(att) => {
+                    let routed = Routed {
+                        algorithm,
+                        feats: sel.feats,
+                        feature_s: sel.feature_s,
+                        predict_s: sel.predict_s,
+                        reorder_s: att.reorder_s,
+                        plan_hit: att.plan_hit,
+                        plan_coalesced: att.plan_coalesced,
+                        repaired: att.repaired,
+                        explored: sel.explored,
+                        plan: att.plan,
+                        key,
+                    };
+                    let feats = routed.feats;
+                    let mut report = Self::report(routed, att.solve, att.batch_k);
+                    report.fallbacks = fallbacks;
+                    self.hists.observe(&report);
+                    self.feedback(feats, &report);
+                    return Ok(report);
+                }
+                Err(AttemptError::Deadline(stage)) => return Err(self.expire(stage)),
+                Err(AttemptError::Failed(cause)) => {
+                    // strike the poisoned key and teach the bandit that
+                    // this arm is catastrophically expensive here
+                    self.plans.report_failure(&key);
+                    if let Some(learner) = &self.learner {
+                        learner.offer(Observation {
+                            features: sel.feats,
+                            algorithm,
+                            measured_s: FAILURE_COST_S,
+                        });
+                    }
+                    if let Some(&to) = chain.get(i + 1) {
+                        self.fallbacks.fetch_add(1, Ordering::Relaxed);
+                        fallbacks.push(FallbackEvent {
+                            from: algorithm,
+                            to,
+                            cause,
+                        });
+                    }
+                }
+            }
+        }
+        Err(anyhow::Error::new(ServeError::Exhausted {
+            attempts: chain.len(),
+        }))
     }
 
     /// Serve a burst of requests the caller already holds, coalescing
@@ -679,6 +1113,9 @@ impl ServingEngine {
     /// order; any lane failure fails the whole call. Groups are counted
     /// in [`BatchStats`] (never as window timeouts).
     pub fn serve_batch(&self, mats: &[&CsrMatrix]) -> Result<Vec<ServingReport>> {
+        for a in mats {
+            Self::validate(a)?;
+        }
         self.requests.fetch_add(mats.len() as u64, Ordering::Relaxed);
         let _presence = InFlight::enter(&self.in_flight, mats.len() as u64);
         let routed: Vec<Routed> = mats.iter().map(|a| self.route(a)).collect::<Result<_>>()?;
@@ -819,10 +1256,11 @@ impl ServingEngine {
         while !st.closed {
             // lonely-leader bail: this leader is the only request in
             // flight anywhere in the engine, so no joiner can arrive —
-            // sealing now saves the whole window on singleton traffic
+            // sealing now saves the whole window on singleton traffic.
+            // Counted as a bail, NOT a window timeout: the window never
+            // actually elapsed.
             if self.in_flight.load(Ordering::Relaxed) <= 1 {
                 st.closed = true;
-                timed_out = true;
                 self.lonely_bails.fetch_add(1, Ordering::Relaxed);
                 break;
             }
@@ -895,6 +1333,11 @@ impl ServingEngine {
                 .map(|l| l.stats())
                 .unwrap_or_default(),
             latency: self.hists.snapshot(),
+            fallbacks: self.fallbacks.load(Ordering::Relaxed),
+            deadline_expired: std::array::from_fn(|i| {
+                self.deadline_expired[i].load(Ordering::Relaxed)
+            }),
+            faults_fired: self.faults_fired.load(Ordering::Relaxed),
         }
     }
 
@@ -983,7 +1426,7 @@ mod tests {
     #[test]
     fn served_ordering_is_bit_identical_to_fresh_compute() {
         let cfg = ServingConfig::default();
-        let engine = ServingEngine::spawn(forest_backend(), cfg).unwrap();
+        let engine = ServingEngine::spawn(forest_backend(), cfg.clone()).unwrap();
         let a = mesh(8, 8);
         let r = engine.serve(&a).unwrap();
         let spd = prepare(&a, &cfg.solver);
@@ -1183,7 +1626,7 @@ mod tests {
     }
 
     #[test]
-    fn lonely_leader_times_out_and_serves_itself() {
+    fn lonely_leader_bails_and_serves_itself() {
         let cfg = ServingConfig {
             batch: BatchConfig {
                 max_batch: 4,
@@ -1199,7 +1642,10 @@ mod tests {
         assert_eq!(warm.batch_k, 1);
         assert_eq!(warm.solve.residual, cold.solve.residual);
         let s = engine.stats();
-        assert_eq!(s.batches.window_timeouts, 1);
+        // the singleton leader takes the lonely-bail path, and the two
+        // counters are disjoint: no window actually elapsed
+        assert_eq!(s.batches.lonely_bails, 1);
+        assert_eq!(s.batches.window_timeouts, 0, "a bail is not an expiry");
         assert_eq!(s.batches.size_hist[0], 1, "the k=1 group is recorded");
         assert_eq!(s.batches.batches, 0, "a group of one is not a batch");
         engine.shutdown();
@@ -1232,7 +1678,10 @@ mod tests {
         );
         let s = engine.stats();
         assert!(s.batches.lonely_bails >= 1, "the bail path must have fired");
-        assert_eq!(s.batches.window_timeouts, 1);
+        assert_eq!(
+            s.batches.window_timeouts, 0,
+            "a lonely bail must not masquerade as a window expiry"
+        );
         engine.shutdown();
     }
 
@@ -1297,6 +1746,180 @@ mod tests {
         assert_eq!(s.cache.lookups(), 1);
         let coalesced_reports = reports.iter().filter(|r| r.plan_coalesced).count();
         assert_eq!(coalesced_reports as u64, s.plans.coalesced);
+        engine.shutdown();
+    }
+
+    fn downcast(err: &anyhow::Error) -> &ServeError {
+        err.downcast_ref::<ServeError>()
+            .expect("serving failures must carry a typed ServeError")
+    }
+
+    #[test]
+    fn malformed_inputs_get_typed_errors_before_admission() {
+        let engine = ServingEngine::spawn(forest_backend(), ServingConfig::default()).unwrap();
+
+        let empty = CooMatrix::new(0, 0).to_csr();
+        let err = engine.serve(&empty).unwrap_err();
+        assert!(matches!(downcast(&err), ServeError::InvalidInput(_)));
+
+        let mut coo = CooMatrix::new(3, 4);
+        coo.push(0, 0, 1.0);
+        let rect = coo.to_csr();
+        let err = engine.serve(&rect).unwrap_err();
+        assert!(matches!(downcast(&err), ServeError::InvalidInput(_)));
+
+        // NaN slips past the factorization's `d == 0.0` pivot check, so
+        // it must be rejected at the door
+        let mut nan = mesh(5, 5);
+        nan.data[0] = f64::NAN;
+        let err = engine.serve(&nan).unwrap_err();
+        assert!(matches!(downcast(&err), ServeError::InvalidInput(_)));
+
+        let s = engine.stats();
+        assert_eq!(s.requests, 0, "rejected inputs are not requests");
+        assert_eq!(s.plans.lookups(), 0, "no cache was consulted");
+        engine.shutdown();
+    }
+
+    #[test]
+    fn deadline_expiry_is_typed_counted_and_reconciled() {
+        let engine = ServingEngine::spawn(forest_backend(), ServingConfig::default()).unwrap();
+        let a = mesh(7, 6);
+        // a generous budget serves normally
+        let d = Deadline::within(Duration::from_secs(60));
+        assert!(engine.serve_with_deadline(&a, Some(d)).is_ok());
+        // a zero budget expires at the first checkpoint (plan stage)
+        let err = engine
+            .serve_with_deadline(&a, Some(Deadline::within(Duration::ZERO)))
+            .unwrap_err();
+        assert_eq!(
+            *downcast(&err),
+            ServeError::DeadlineExpired { stage: Stage::Plan }
+        );
+        let s = engine.stats();
+        assert_eq!(s.deadline_expired[Stage::Plan.index()], 1);
+        assert_eq!(s.deadline_expired_total(), 1);
+        // the ledger: every counted request either served or expired
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.latency.e2e.count + s.deadline_expired_total(), s.requests);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn failed_numeric_attempt_falls_back_and_matches_direct_compute() {
+        let cfg = ServingConfig {
+            faults: Some(Arc::new(FaultPlan::new().inject(
+                0,
+                Stage::Numeric,
+                Fault::FailNumeric,
+            ))),
+            ..ServingConfig::default()
+        };
+        let engine = ServingEngine::spawn(forest_backend(), cfg.clone()).unwrap();
+        let a = mesh(9, 8);
+        let r = engine.serve(&a).unwrap();
+        assert_eq!(r.fallbacks.len(), 1, "one injected failure, one hop");
+        assert_eq!(r.fallbacks[0].cause, FallbackCause::Numeric);
+        assert_eq!(r.fallbacks[0].to, r.algorithm, "the next arm served");
+        assert_ne!(r.fallbacks[0].from, r.algorithm);
+        assert!(r.solve.residual < 1e-6);
+
+        // bit-identity: the fallback-served result must equal computing
+        // directly under the fallback algorithm from scratch
+        let spd = prepare(&a, &cfg.solver);
+        let perm = r.algorithm.compute(&spd, cfg.reorder_seed);
+        assert_eq!(*r.permutation, perm);
+        let plan = plan_solve_prepared(&a, &spd, Arc::new(perm), &cfg.solver);
+        let mut ws = NumericWorkspace::new();
+        let direct = solve_with_plan(&a, &plan, &cfg.solver, &mut ws).unwrap();
+        assert_eq!(r.solve.fill, direct.fill);
+        assert_eq!(r.solve.residual, direct.residual);
+
+        // the fault was indexed to request 0 only: a replay runs clean
+        // and hits the fallback arm's now-resident plan
+        let clean = engine.serve(&a).unwrap();
+        assert!(clean.fallbacks.is_empty());
+        let s = engine.stats();
+        assert_eq!(s.fallbacks, 1);
+        assert_eq!(s.faults_fired, 1);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn reorderer_panic_is_contained_and_falls_back() {
+        let cfg = ServingConfig {
+            faults: Some(Arc::new(FaultPlan::new().inject(
+                0,
+                Stage::Plan,
+                Fault::PanicAt,
+            ))),
+            ..ServingConfig::default()
+        };
+        let engine = ServingEngine::spawn(forest_backend(), cfg).unwrap();
+        let a = mesh(8, 7);
+        // the cold leader's plan compute panics; the unwind passes
+        // through the cache's leader guard and the request recovers on
+        // the next arm
+        let r = engine.serve(&a).unwrap();
+        assert_eq!(r.fallbacks.len(), 1);
+        assert_eq!(r.fallbacks[0].cause, FallbackCause::Panic);
+        assert!(r.solve.residual < 1e-6);
+
+        // nothing is poisoned: the same pattern keeps serving. The
+        // selected arm's plan never landed (its compute panicked), so
+        // the clean replay plans it cold and only then turns warm.
+        let again = engine.serve(&a).unwrap();
+        assert!(again.fallbacks.is_empty());
+        assert!(!again.plan_hit, "the panicked compute must not have cached");
+        let warm = engine.serve(&a).unwrap();
+        assert!(warm.plan_hit);
+        let s = engine.stats();
+        assert_eq!(s.fallbacks, 1);
+        assert_eq!(s.faults_fired, 1);
+        assert_eq!(s.plans.lookups(), s.plans.hits + s.plans.misses);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn quarantined_key_routes_straight_to_fallback() {
+        let cfg = ServingConfig {
+            // one strike trips; a long TTL keeps the tombstone active
+            // for the whole test
+            quarantine: QuarantineConfig {
+                strikes: 1,
+                ttl: Duration::from_secs(30),
+            },
+            faults: Some(Arc::new(FaultPlan::new().inject(
+                0,
+                Stage::Numeric,
+                Fault::FailNumeric,
+            ))),
+            ..ServingConfig::default()
+        };
+        let engine = ServingEngine::spawn(forest_backend(), cfg).unwrap();
+        let a = mesh(10, 7);
+
+        // request 0: the selected arm fails, strikes out, and the
+        // fallback serves
+        let first = engine.serve(&a).unwrap();
+        assert_eq!(first.fallbacks.len(), 1);
+        let poisoned = first.fallbacks[0].from;
+
+        // request 1 (clean): selection picks the same arm, but its key
+        // is tombstoned — the chain skips it without attempting, and
+        // the fallback arm's plan is already warm
+        let second = engine.serve(&a).unwrap();
+        assert_eq!(second.algorithm, first.algorithm);
+        assert_eq!(second.fallbacks.len(), 1);
+        assert_eq!(second.fallbacks[0].cause, FallbackCause::Quarantined);
+        assert_eq!(second.fallbacks[0].from, poisoned);
+        assert!(second.plan_hit, "the fallback arm's plan must be warm");
+
+        let s = engine.stats();
+        assert_eq!(s.plans.quarantined, 1, "one trip event");
+        assert_eq!(s.plans.quarantine_skips, 1, "request 1 skipped the key");
+        assert_eq!(s.fallbacks, 1, "a skip is not a failed-attempt hop");
+        assert_eq!(s.faults_fired, 1);
         engine.shutdown();
     }
 }

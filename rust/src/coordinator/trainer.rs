@@ -215,18 +215,16 @@ mod tests {
         let (tr, _) = ds.split(0.8, 3);
         let tf = train_forest(&ds, &tr, Method::Standard, 1);
         let backend = tf.backend();
-        match backend {
-            super::super::service::Backend::Forest { normalizer, forest } => {
-                // the handed-off pair must predict exactly what the
-                // trained pair predicts on every dataset row
-                for row in ds.features().iter() {
-                    assert_eq!(
-                        forest.predict(&normalizer.transform_row(row)),
-                        tf.forest.predict(&tf.normalizer.transform_row(row)),
-                    );
-                }
-            }
-            _ => panic!("forest handoff must produce a forest backend"),
+        let super::super::service::Backend::Forest { normalizer, forest } = backend else {
+            unreachable!("TrainedForest::backend returned a non-forest variant");
+        };
+        // the handed-off pair must predict exactly what the trained
+        // pair predicts on every dataset row
+        for row in ds.features().iter() {
+            assert_eq!(
+                forest.predict(&normalizer.transform_row(row)),
+                tf.forest.predict(&tf.normalizer.transform_row(row)),
+            );
         }
     }
 

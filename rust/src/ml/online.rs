@@ -315,6 +315,44 @@ impl OnlineSelector {
         ARMS[Self::argmin(&st.arms, &z, arm_index(offline), 0.0, self.cfg.prior)]
     }
 
+    /// All arms ranked best-first by the greedy score (the
+    /// [`Self::greedy`] rule applied to the whole arm set): predict
+    /// minus the offline-prior width bonus, no optimism, no rng. The
+    /// serving engine's fallback chain walks this order when the
+    /// selected algorithm's compute fails — "next-best by current
+    /// belief" is exactly the cheapest expected recovery. Ties break
+    /// toward the lower arm index, so the ranking is deterministic; on
+    /// a fresh selector it starts with `offline` (the handoff
+    /// guarantee) followed by the remaining arms in [`ARMS`] order.
+    pub fn ranked(
+        &self,
+        features: &[f64; N_FEATURES],
+        offline: ReorderAlgorithm,
+    ) -> Vec<ReorderAlgorithm> {
+        let z = context(features);
+        let offline_arm = arm_index(offline);
+        let st = self.state.lock().expect("selector poisoned");
+        let mut scored: Vec<(f64, usize)> = st
+            .arms
+            .iter()
+            .enumerate()
+            .map(|(k, arm)| {
+                let w = arm.width(&z);
+                let mut score = arm.predict(&z);
+                if Some(k) == offline_arm {
+                    score -= self.cfg.prior * w;
+                }
+                (score, k)
+            })
+            .collect();
+        scored.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.1.cmp(&b.1))
+        });
+        scored.into_iter().map(|(_, k)| ARMS[k]).collect()
+    }
+
     /// Cold-path selection: ε-greedy over the optimistic (LinUCB)
     /// score. Draws from the selector's seeded rng, so the decision
     /// sequence is a pure function of the seed and the call sequence.
@@ -514,6 +552,41 @@ mod tests {
         let d = sel.decide(&f, offline);
         assert!(!d.explored);
         assert_eq!(d.algorithm, cheap);
+    }
+
+    #[test]
+    fn ranked_is_a_full_deterministic_preference_order() {
+        let sel = OnlineSelector::new(OnlineConfig::default());
+        let mut rng = Rng::new(41);
+        let f = feats(&mut rng);
+        let offline = ARMS[3];
+        // fresh selector: offline first (the handoff guarantee), then
+        // the remaining arms in ARMS order (the deterministic tie-break)
+        let order = sel.ranked(&f, offline);
+        assert_eq!(order.len(), N_ARMS);
+        assert_eq!(order[0], offline);
+        let rest: Vec<_> = ARMS.iter().copied().filter(|a| *a != offline).collect();
+        assert_eq!(&order[1..], &rest[..]);
+        assert_eq!(order, sel.ranked(&f, offline), "ranking must replay");
+        // every arm appears exactly once — it is a permutation of ARMS
+        let mut sorted = order.clone();
+        sorted.sort_by_key(|a| arm_index(*a));
+        assert_eq!(sorted, ARMS.to_vec());
+        // the head of the ranking is the greedy pick, always
+        assert_eq!(order[0], sel.greedy(&f, offline));
+
+        // evidence reorders: make ARMS[5] clearly cheapest here
+        for _ in 0..60 {
+            sel.observe(&f, ARMS[5], 1e-4);
+            sel.observe(&f, offline, 1e-1);
+        }
+        let order = sel.ranked(&f, offline);
+        assert_eq!(order[0], ARMS[5], "measured evidence must lead");
+        assert_eq!(order[0], sel.greedy(&f, offline));
+        assert!(
+            order.iter().position(|a| *a == offline).unwrap() > 0,
+            "a measured-slow offline pick must lose its head slot"
+        );
     }
 
     #[test]

@@ -107,7 +107,7 @@ pub use plan::{
     solve_with_plan, solve_with_plan_batch, NumericWorkspace, RepairConfig,
     SymbolicFactorization,
 };
-pub use plan_cache::{PlanCache, PlanKey};
+pub use plan_cache::{PlanCache, PlanKey, QuarantineConfig};
 pub use supernode::{FactorConfig, FactorMode, SupernodalPlan};
 pub use supernodal::{factorize_supernodal, factorize_supernodal_gathered_batch};
 

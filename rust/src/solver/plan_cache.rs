@@ -35,10 +35,26 @@
 //! lives entirely inside the leader's compute closure, so the in-flight
 //! dedup story is unchanged: a stampede on a drifted pattern costs one
 //! repair (or one cold plan), never k.
+//!
+//! **The quarantine circuit breaker.** A `(pattern, algorithm)` whose
+//! downstream compute keeps failing (reorderer panic, zero pivot under
+//! that ordering) would otherwise be retried on every arrival — each
+//! retry paying the full failure cost before falling back. The serving
+//! engine therefore reports failed attempts via
+//! [`PlanCache::report_failure`]; once a key accrues
+//! [`QuarantineConfig::strikes`] failures it is tombstoned for
+//! [`QuarantineConfig::ttl`], and [`PlanCache::quarantined`] tells the
+//! engine to route *around* the key (straight to its fallback chain)
+//! without attempting the doomed compute. Expired tombstones are removed
+//! on the next probe — the key is re-admitted with a fresh strike
+//! budget, so a transient failure mode (bad value set, since-fixed
+//! input) does not blacklist a pattern forever. Trips and skips are
+//! counted (`quarantined` / `quarantine_skips` in [`CacheStats`]).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use super::plan::{RepairConfig, SymbolicFactorization};
 use super::SolverConfig;
@@ -105,6 +121,33 @@ impl NearKey {
     }
 }
 
+/// Circuit-breaker knobs for the quarantine tier (module docs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuarantineConfig {
+    /// Failures a key may accrue before it is tombstoned.
+    pub strikes: u32,
+    /// Tombstone lifetime; after this the key is re-admitted with a
+    /// fresh strike budget.
+    pub ttl: Duration,
+}
+
+impl Default for QuarantineConfig {
+    fn default() -> Self {
+        QuarantineConfig {
+            strikes: 3,
+            ttl: Duration::from_millis(250),
+        }
+    }
+}
+
+/// Failure ledger for one key: strikes accrued, and — once the budget
+/// is exhausted — the instant the tombstone lapses.
+#[derive(Clone, Copy, Debug)]
+struct Tombstone {
+    strikes: u32,
+    until: Option<Instant>,
+}
+
 /// Per-family MRU ring depth of the near-match index. Drifting
 /// workloads revisit the last few steps' patterns; deeper history only
 /// adds donors whose drift is larger (and therefore never the best
@@ -122,15 +165,32 @@ pub struct PlanCache {
     near: Mutex<HashMap<NearKey, Vec<PlanKey>>>,
     repairs: AtomicU64,
     repair_fallbacks: AtomicU64,
+    /// Quarantine circuit breaker (module docs): failure strikes and
+    /// active tombstones per key. Tiny — only keys that have actually
+    /// failed appear, and expired tombstones are reaped on probe.
+    quarantine: Mutex<HashMap<PlanKey, Tombstone>>,
+    quarantine_cfg: QuarantineConfig,
+    quarantined: AtomicU64,
+    quarantine_skips: AtomicU64,
 }
 
 impl PlanCache {
     pub fn new(cfg: CacheConfig) -> Self {
+        Self::with_quarantine(cfg, QuarantineConfig::default())
+    }
+
+    /// A cache with explicit circuit-breaker knobs (tests and the
+    /// serving engine's `ServingConfig::quarantine` override).
+    pub fn with_quarantine(cfg: CacheConfig, quarantine: QuarantineConfig) -> Self {
         PlanCache {
             inner: ShardedCache::new(cfg),
             near: Mutex::new(HashMap::new()),
             repairs: AtomicU64::new(0),
             repair_fallbacks: AtomicU64::new(0),
+            quarantine: Mutex::new(HashMap::new()),
+            quarantine_cfg: quarantine,
+            quarantined: AtomicU64::new(0),
+            quarantine_skips: AtomicU64::new(0),
         }
     }
 
@@ -301,10 +361,53 @@ impl PlanCache {
         ring.truncate(NEAR_RING);
     }
 
+    /// Record one failed compute attempt against `key` (reorderer
+    /// panic, numeric failure under that ordering). Returns `true` when
+    /// *this* strike exhausted the budget and tombstoned the key — the
+    /// trip edge, counted once per quarantine event.
+    pub fn report_failure(&self, key: &PlanKey) -> bool {
+        let mut q = self.quarantine.lock().expect("quarantine ledger poisoned");
+        let t = q.entry(*key).or_insert(Tombstone {
+            strikes: 0,
+            until: None,
+        });
+        t.strikes += 1;
+        if t.until.is_none() && t.strikes >= self.quarantine_cfg.strikes {
+            t.until = Some(Instant::now() + self.quarantine_cfg.ttl);
+            self.quarantined.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        false
+    }
+
+    /// Is `key` currently tombstoned? `true` counts one quarantine
+    /// skip (the caller is about to route around the key), so call this
+    /// once per routing decision. A lapsed tombstone is removed here —
+    /// the key re-enters with a fresh strike budget.
+    pub fn quarantined(&self, key: &PlanKey) -> bool {
+        let mut q = self.quarantine.lock().expect("quarantine ledger poisoned");
+        let Some(t) = q.get(key) else {
+            return false;
+        };
+        match t.until {
+            Some(until) if Instant::now() >= until => {
+                q.remove(key); // TTL lapsed: re-admit, clean slate
+                false
+            }
+            Some(_) => {
+                self.quarantine_skips.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            None => false, // strikes accrued but budget not exhausted
+        }
+    }
+
     pub fn stats(&self) -> CacheStats {
         let mut s = self.inner.stats();
         s.repairs = self.repairs.load(Ordering::Relaxed);
         s.repair_fallbacks = self.repair_fallbacks.load(Ordering::Relaxed);
+        s.quarantined = self.quarantined.load(Ordering::Relaxed);
+        s.quarantine_skips = self.quarantine_skips.load(Ordering::Relaxed);
         s
     }
 }
@@ -424,5 +527,53 @@ mod tests {
         assert_eq!(s.repairs, 1);
         assert_eq!(s.repair_fallbacks, 1);
         assert_eq!((s.hits, s.misses), (1, 3));
+    }
+
+    #[test]
+    fn quarantine_trips_after_k_strikes_and_ttl_readmits() {
+        let cache = PlanCache::with_quarantine(
+            PlanCache::default_config(),
+            QuarantineConfig {
+                strikes: 2,
+                ttl: Duration::from_millis(30),
+            },
+        );
+        let a = mesh(5, 5);
+        let key = PlanKey::of(&a, ReorderAlgorithm::Amd, 0, &SolverConfig::default());
+
+        // below the strike budget: the key is still admissible
+        assert!(!cache.report_failure(&key), "one strike must not trip");
+        assert!(!cache.quarantined(&key));
+        // second strike exhausts the budget — the trip edge fires once
+        assert!(cache.report_failure(&key), "strike budget exhausted");
+        assert!(cache.quarantined(&key), "tombstoned key must be skipped");
+        assert!(cache.quarantined(&key), "skip repeats while the TTL runs");
+
+        // TTL lapse: the tombstone is reaped and the key re-admitted
+        std::thread::sleep(Duration::from_millis(40));
+        assert!(!cache.quarantined(&key), "lapsed tombstone must re-admit");
+        // re-admission is a clean slate: one new strike must not trip
+        assert!(!cache.report_failure(&key), "strike budget must reset");
+        assert!(!cache.quarantined(&key));
+
+        let s = cache.stats();
+        assert_eq!(s.quarantined, 1, "one trip event");
+        assert_eq!(s.quarantine_skips, 2, "two counted skips before lapse");
+    }
+
+    #[test]
+    fn healthy_keys_never_touch_the_quarantine_ledger() {
+        let cache = PlanCache::with_default_config();
+        let a = mesh(4, 4);
+        let cfg = SolverConfig::default();
+        let key = PlanKey::of(&a, ReorderAlgorithm::Rcm, 0, &cfg);
+        let other = PlanKey::of(&a, ReorderAlgorithm::Nd, 0, &cfg);
+        assert!(!cache.quarantined(&key));
+        // strikes are per-key: failures against one key leave siblings
+        // of the same pattern admissible
+        cache.report_failure(&key);
+        assert!(!cache.quarantined(&other));
+        let s = cache.stats();
+        assert_eq!((s.quarantined, s.quarantine_skips), (0, 0));
     }
 }

@@ -1,0 +1,156 @@
+//! Seeded-jitter exponential backoff — the retry half of the router's
+//! `Reject` overload policy.
+//!
+//! `OverloadPolicy::Reject` fails fast and relies on the *client* to
+//! retry; this module is that client mechanism. A [`Backoff`] yields a
+//! delay per consecutive failure: exponential growth from `base` by
+//! `factor` (capped at `max`), scaled down by up to `jitter` of itself
+//! via a seeded [`Rng`] draw — the full-jitter-ish spread that keeps a
+//! herd of rejected clients from re-stampeding the gate in lockstep,
+//! while staying bit-reproducible for a fixed seed (deterministic
+//! benches and tests). [`Backoff::reset`] on success restarts the
+//! schedule.
+
+use std::time::Duration;
+
+use super::rng::Rng;
+
+/// Schedule knobs for [`Backoff`].
+#[derive(Clone, Copy, Debug)]
+pub struct BackoffConfig {
+    /// First-retry delay.
+    pub base: Duration,
+    /// Exponential growth per consecutive failure (≥ 1).
+    pub factor: f64,
+    /// Delay ceiling (pre-jitter).
+    pub max: Duration,
+    /// Jitter fraction in [0, 1]: each delay is scaled by a uniform
+    /// draw from `[1 − jitter, 1]`. 0 = fully deterministic schedule.
+    pub jitter: f64,
+}
+
+impl Default for BackoffConfig {
+    fn default() -> Self {
+        BackoffConfig {
+            base: Duration::from_micros(50),
+            factor: 2.0,
+            max: Duration::from_millis(5),
+            jitter: 0.5,
+        }
+    }
+}
+
+/// One client's retry state: consecutive-failure count plus the seeded
+/// jitter stream.
+#[derive(Clone, Debug)]
+pub struct Backoff {
+    cfg: BackoffConfig,
+    rng: Rng,
+    attempt: u32,
+}
+
+impl Backoff {
+    pub fn new(cfg: BackoffConfig, seed: u64) -> Backoff {
+        Backoff {
+            cfg,
+            rng: Rng::new(seed),
+            attempt: 0,
+        }
+    }
+
+    /// The delay to sleep before the next retry; advances the schedule.
+    pub fn next_delay(&mut self) -> Duration {
+        let factor = self.cfg.factor.max(1.0);
+        let raw = self.cfg.base.as_secs_f64() * factor.powi(self.attempt.min(63) as i32);
+        let capped = raw.min(self.cfg.max.as_secs_f64());
+        let jitter = self.cfg.jitter.clamp(0.0, 1.0);
+        let scale = 1.0 - jitter * self.rng.f64();
+        self.attempt = self.attempt.saturating_add(1);
+        Duration::from_secs_f64(capped * scale)
+    }
+
+    /// Consecutive failures so far (delays handed out since the last
+    /// reset).
+    pub fn attempt(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Success: restart the schedule at `base` (the jitter stream keeps
+    /// advancing — resets do not replay past draws).
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delays_grow_exponentially_up_to_the_cap() {
+        let mut b = Backoff::new(
+            BackoffConfig {
+                base: Duration::from_millis(1),
+                factor: 2.0,
+                max: Duration::from_millis(8),
+                jitter: 0.0, // deterministic: check the raw schedule
+            },
+            1,
+        );
+        let delays: Vec<f64> = (0..6).map(|_| b.next_delay().as_secs_f64()).collect();
+        assert!((delays[0] - 1e-3).abs() < 1e-9);
+        assert!((delays[1] - 2e-3).abs() < 1e-9);
+        assert!((delays[2] - 4e-3).abs() < 1e-9);
+        // capped from attempt 3 on
+        assert!((delays[3] - 8e-3).abs() < 1e-9);
+        assert!((delays[5] - 8e-3).abs() < 1e-9);
+        assert_eq!(b.attempt(), 6);
+    }
+
+    #[test]
+    fn jitter_spreads_but_never_exceeds_the_schedule() {
+        let cfg = BackoffConfig {
+            base: Duration::from_millis(4),
+            factor: 1.0, // flat schedule isolates the jitter term
+            max: Duration::from_millis(4),
+            jitter: 0.5,
+        };
+        let mut b = Backoff::new(cfg, 99);
+        let mut distinct = std::collections::HashSet::new();
+        for _ in 0..32 {
+            let d = b.next_delay().as_secs_f64();
+            assert!(d <= 4e-3 + 1e-12, "jitter must only shrink the delay");
+            assert!(d >= 2e-3 - 1e-12, "jitter floor is (1 - jitter) * delay");
+            distinct.insert((d * 1e9) as u64);
+        }
+        assert!(distinct.len() > 16, "jitter draws look constant");
+    }
+
+    #[test]
+    fn same_seed_replays_the_same_delays() {
+        let run = |seed| {
+            let mut b = Backoff::new(BackoffConfig::default(), seed);
+            (0..10).map(|_| b.next_delay()).collect::<Vec<_>>()
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8), "different seeds must differ");
+    }
+
+    #[test]
+    fn reset_restarts_the_schedule() {
+        let mut b = Backoff::new(
+            BackoffConfig {
+                jitter: 0.0,
+                ..BackoffConfig::default()
+            },
+            3,
+        );
+        let first = b.next_delay();
+        b.next_delay();
+        b.next_delay();
+        assert_eq!(b.attempt(), 3);
+        b.reset();
+        assert_eq!(b.attempt(), 0);
+        assert_eq!(b.next_delay(), first, "post-reset delay restarts at base");
+    }
+}

@@ -108,6 +108,13 @@ pub struct CacheStats {
     /// mismatch) and the computation ran cold — the "no silent
     /// fallback" counter. Generic caches report 0.
     pub repair_fallbacks: u64,
+    /// Keys tombstoned by the quarantine circuit breaker (strike budget
+    /// exhausted). Only the plan cache's quarantine tier
+    /// (`solver::plan_cache`) bumps this; the generic cache reports 0.
+    pub quarantined: u64,
+    /// Requests redirected away from a quarantined key before any
+    /// compute was attempted. Generic caches report 0.
+    pub quarantine_skips: u64,
     /// Resident entries at snapshot time.
     pub entries: usize,
 }
@@ -407,6 +414,8 @@ impl<K: Hash + Eq + Copy, V> ShardedCache<K, V> {
             coalesced: self.coalesced.load(Ordering::Relaxed),
             repairs: 0,
             repair_fallbacks: 0,
+            quarantined: 0,
+            quarantine_skips: 0,
             entries: self.len(),
         }
     }

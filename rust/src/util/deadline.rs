@@ -1,0 +1,161 @@
+//! Request deadline budgets — the serving stack's "give up on time"
+//! primitive.
+//!
+//! A [`Deadline`] is an absolute instant a request must finish by,
+//! fixed at arrival (`Deadline::within(budget)`) and carried by value
+//! through every layer: admission (`AdmissionGate::enter_until` gives
+//! up at the deadline instead of parking forever), symbolic planning,
+//! and numeric work. Each layer checks [`Deadline::check`] *before*
+//! starting its (unbounded) stage and attributes the expiry to itself
+//! via [`Stage`], so a blown budget reports *where* the time went, not
+//! just that it went.
+//!
+//! The checks are checkpoints, not preemption: a stage that has already
+//! started runs to completion (the solver has no cancellation points),
+//! so the effective overshoot is bounded by one stage's latency. That is
+//! the standard serving trade — cheap, allocation-free, and honest as
+//! long as expiry is *attributed* ([`Deadline::check`] returns the stage
+//! that observed it) and *counted* (`deadline_expired` in the serving /
+//! router stats; see `coordinator::serving`).
+//!
+//! Deadlines are plain `Copy` data over `std::time::Instant` — no
+//! clocks are read at construction beyond the one `Instant::now()`, and
+//! an expired deadline stays expired (monotonic clock).
+
+use std::time::{Duration, Instant};
+
+/// Which request stage observed a deadline expiry. Ordered as the
+/// request lifecycle runs: admission → symbolic planning → numeric.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Stage {
+    /// Waiting for (or checking) an admission seat at the router's
+    /// per-replica gate.
+    Admission,
+    /// Feature extraction, prediction, and symbolic planning (the plan
+    /// cache's cold path).
+    Plan,
+    /// Numeric factorization + triangular solves.
+    Numeric,
+}
+
+impl Stage {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Admission => "admission",
+            Stage::Plan => "plan",
+            Stage::Numeric => "numeric",
+        }
+    }
+
+    /// Stable index (0 = admission, 1 = plan, 2 = numeric) — used for
+    /// per-stage counter arrays.
+    pub fn index(&self) -> usize {
+        *self as usize
+    }
+
+    /// All stages, lifecycle order.
+    pub const ALL: [Stage; 3] = [Stage::Admission, Stage::Plan, Stage::Numeric];
+}
+
+impl std::fmt::Display for Stage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// An absolute completion deadline for one request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Deadline {
+    at: Instant,
+}
+
+impl Deadline {
+    /// Deadline `budget` from now.
+    pub fn within(budget: Duration) -> Deadline {
+        Deadline {
+            at: Instant::now() + budget,
+        }
+    }
+
+    /// Deadline at an absolute instant (e.g. propagated from an
+    /// upstream caller's own budget).
+    pub fn at(at: Instant) -> Deadline {
+        Deadline { at }
+    }
+
+    /// The absolute instant this deadline fires.
+    pub fn instant(&self) -> Instant {
+        self.at
+    }
+
+    /// Has the deadline passed?
+    pub fn expired(&self) -> bool {
+        Instant::now() >= self.at
+    }
+
+    /// Budget left (zero once expired — never negative).
+    pub fn remaining(&self) -> Duration {
+        self.at.saturating_duration_since(Instant::now())
+    }
+
+    /// Stage checkpoint: `Err(stage)` when the deadline has passed,
+    /// attributing the expiry to the stage about to (not) run.
+    pub fn check(&self, stage: Stage) -> Result<(), Stage> {
+        if self.expired() {
+            Err(stage)
+        } else {
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_deadline_is_live_and_checks_pass() {
+        let d = Deadline::within(Duration::from_secs(60));
+        assert!(!d.expired());
+        assert!(d.remaining() > Duration::from_secs(50));
+        for stage in Stage::ALL {
+            assert_eq!(d.check(stage), Ok(()));
+        }
+    }
+
+    #[test]
+    fn elapsed_deadline_expires_and_attributes_the_stage() {
+        let d = Deadline::at(Instant::now() - Duration::from_millis(1));
+        assert!(d.expired());
+        assert_eq!(d.remaining(), Duration::ZERO);
+        assert_eq!(d.check(Stage::Admission), Err(Stage::Admission));
+        assert_eq!(d.check(Stage::Plan), Err(Stage::Plan));
+        assert_eq!(d.check(Stage::Numeric), Err(Stage::Numeric));
+    }
+
+    #[test]
+    fn zero_budget_expires_immediately() {
+        let d = Deadline::within(Duration::ZERO);
+        assert!(d.expired(), "a zero budget can never admit work");
+    }
+
+    #[test]
+    fn stage_names_and_indices_are_stable() {
+        assert_eq!(Stage::Admission.name(), "admission");
+        assert_eq!(Stage::Plan.name(), "plan");
+        assert_eq!(Stage::Numeric.name(), "numeric");
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(s.index(), i);
+            assert_eq!(format!("{s}"), s.name());
+        }
+    }
+
+    #[test]
+    fn expiry_is_monotone() {
+        // an expired deadline never un-expires (monotonic clock)
+        let d = Deadline::at(Instant::now());
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(d.expired());
+        assert!(d.expired(), "expired() must be stable across calls");
+    }
+}

@@ -1,0 +1,150 @@
+//! Deterministic fault injection for the serving stack's
+//! fault-tolerance tests and benches.
+//!
+//! A [`FaultPlan`] maps `(request index, stage)` to a [`Fault`] —
+//! a fully explicit, seed-reproducible schedule of what breaks where.
+//! The serving engine consults it (when `ServingConfig::faults` is set;
+//! default `None`, zero cost when disabled) at the stage checkpoints of
+//! each request's **first** attempt:
+//!
+//! * [`Fault::PanicAt`] — the stage's compute panics (models a
+//!   reorderer/kernels bug). At [`Stage::Plan`] the panic fires *inside
+//!   the plan cache's cold compute closure*, so it unwinds through the
+//!   in-flight-dedup leader guard exactly like a real reorderer panic.
+//! * [`Fault::FailNumeric`] — the numeric factorization reports a
+//!   synthetic zero-pivot error (models a non-SPD/ill-conditioned value
+//!   set breaking the selected ordering).
+//! * [`Fault::Delay`] — the stage stalls for the given duration before
+//!   running (drives deadline-expiry tests without load generators).
+//!
+//! Faults apply to the *originally selected* algorithm only — fallback
+//! attempts run clean. That models the scenario under test ("the chosen
+//! arm is broken; does the stack degrade gracefully?") and keeps the
+//! ledger exact: each scheduled-and-reached fault produces exactly one
+//! fallback (or one quarantine skip, when the poisoned key is already
+//! tombstoned).
+//!
+//! Everything is deterministic: [`FaultPlan::bernoulli`] draws its
+//! request indices from a seeded [`Rng`], so a test or bench replays
+//! the identical fault schedule on every run.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use super::deadline::Stage;
+use super::rng::Rng;
+
+/// One injected fault (see the module docs for per-stage semantics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// The stage's compute panics.
+    PanicAt,
+    /// The numeric factorization fails with a synthetic zero-pivot.
+    FailNumeric,
+    /// The stage stalls for this long before running.
+    Delay(Duration),
+}
+
+/// A deterministic `(request index, stage) → Fault` schedule.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    faults: HashMap<(u64, Stage), Fault>,
+}
+
+impl FaultPlan {
+    /// An empty schedule (inject via [`Self::inject`]).
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Schedule `fault` for request `request` at `stage` (overwrites any
+    /// previous fault at that coordinate). Builder-style.
+    pub fn inject(mut self, request: u64, stage: Stage, fault: Fault) -> FaultPlan {
+        self.faults.insert((request, stage), fault);
+        self
+    }
+
+    /// Seeded Bernoulli schedule: each of the `requests` indices gets
+    /// `fault` at `stage` independently with probability `rate`. The
+    /// draw order is the index order, so a `(seed, requests, rate)`
+    /// triple always produces the identical schedule.
+    pub fn bernoulli(seed: u64, requests: u64, rate: f64, stage: Stage, fault: Fault) -> FaultPlan {
+        let mut rng = Rng::new(seed);
+        let mut plan = FaultPlan::new();
+        for i in 0..requests {
+            if rng.chance(rate) {
+                plan.faults.insert((i, stage), fault);
+            }
+        }
+        plan
+    }
+
+    /// The fault scheduled at `(request, stage)`, if any.
+    pub fn at(&self, request: u64, stage: Stage) -> Option<Fault> {
+        self.faults.get(&(request, stage)).copied()
+    }
+
+    /// Scheduled faults in total.
+    pub fn len(&self) -> usize {
+        self.faults.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Request indices with a fault scheduled at `stage`, ascending —
+    /// the test-side half of the fault ledger.
+    pub fn scheduled(&self, stage: Stage) -> Vec<u64> {
+        let mut idx: Vec<u64> = self
+            .faults
+            .keys()
+            .filter(|(_, s)| *s == stage)
+            .map(|(i, _)| *i)
+            .collect();
+        idx.sort_unstable();
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn explicit_injection_round_trips() {
+        let plan = FaultPlan::new()
+            .inject(3, Stage::Numeric, Fault::FailNumeric)
+            .inject(5, Stage::Plan, Fault::PanicAt)
+            .inject(5, Stage::Numeric, Fault::Delay(Duration::from_millis(2)));
+        assert_eq!(plan.len(), 3);
+        assert_eq!(plan.at(3, Stage::Numeric), Some(Fault::FailNumeric));
+        assert_eq!(plan.at(3, Stage::Plan), None, "stage is part of the key");
+        assert_eq!(plan.at(5, Stage::Plan), Some(Fault::PanicAt));
+        assert_eq!(plan.at(4, Stage::Numeric), None);
+        assert_eq!(plan.scheduled(Stage::Numeric), vec![3, 5]);
+        assert_eq!(plan.scheduled(Stage::Admission), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn bernoulli_is_seed_deterministic_and_rate_shaped() {
+        let a = FaultPlan::bernoulli(42, 1000, 0.05, Stage::Numeric, Fault::FailNumeric);
+        let b = FaultPlan::bernoulli(42, 1000, 0.05, Stage::Numeric, Fault::FailNumeric);
+        assert_eq!(a.scheduled(Stage::Numeric), b.scheduled(Stage::Numeric));
+        // ~5% of 1000 with generous slack (seeded, so this never flakes)
+        let n = a.len();
+        assert!((20..=100).contains(&n), "rate badly off: {n}/1000 faulted");
+        // a different seed produces a different schedule
+        let c = FaultPlan::bernoulli(43, 1000, 0.05, Stage::Numeric, Fault::FailNumeric);
+        assert_ne!(a.scheduled(Stage::Numeric), c.scheduled(Stage::Numeric));
+    }
+
+    #[test]
+    fn empty_and_zero_rate_plans_schedule_nothing() {
+        assert!(FaultPlan::new().is_empty());
+        let p = FaultPlan::bernoulli(7, 500, 0.0, Stage::Plan, Fault::PanicAt);
+        assert!(p.is_empty());
+        let full = FaultPlan::bernoulli(7, 10, 1.0, Stage::Plan, Fault::PanicAt);
+        assert_eq!(full.len(), 10, "rate 1.0 faults every request");
+    }
+}

@@ -8,11 +8,16 @@
 //! by `cargo bench` ([`bench`]), a scoped thread-pool `parallel_map`
 //! ([`pool`]), a generic bounded sharded cache with in-flight miss
 //! dedup ([`cache`]), log-bucketed latency histograms ([`hist`]), a
-//! bounded lock-free MPMC queue ([`queue`]), and randomized
-//! property-test helpers ([`prop`]).
+//! bounded lock-free MPMC queue ([`queue`]), randomized
+//! property-test helpers ([`prop`]), request deadline budgets
+//! ([`deadline`]), deterministic fault injection ([`faults`]), and
+//! seeded-jitter exponential backoff ([`backoff`]).
 
+pub mod backoff;
 pub mod bench;
 pub mod cache;
+pub mod deadline;
+pub mod faults;
 pub mod hist;
 pub mod json;
 pub mod pool;

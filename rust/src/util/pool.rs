@@ -16,6 +16,7 @@
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
+use std::time::Instant;
 
 /// Counter snapshot of an [`ObjectPool`].
 #[derive(Clone, Copy, Debug, Default)]
@@ -220,6 +221,36 @@ impl AdmissionGate {
         drop(st);
         self.admitted.fetch_add(1, Ordering::Relaxed);
         GatePass { gate: self }
+    }
+
+    /// [`Self::enter`] with a give-up point: park only until `deadline`,
+    /// returning `None` when no seat freed in time — the deadline-aware
+    /// `Block` admission path. A timed-out wait is counted as one
+    /// rejection (the caller sheds the request), a successful late
+    /// admission as one blocked + one admitted, exactly like `enter`.
+    pub fn enter_until(&self, deadline: Instant) -> Option<GatePass<'_>> {
+        let mut st = self.state.lock().expect("admission gate poisoned");
+        if st.active >= self.capacity {
+            self.blocked.fetch_add(1, Ordering::Relaxed);
+            while st.active >= self.capacity {
+                let now = Instant::now();
+                if now >= deadline {
+                    drop(st);
+                    self.rejected.fetch_add(1, Ordering::Relaxed);
+                    return None;
+                }
+                let (guard, _) = self
+                    .cv
+                    .wait_timeout(st, deadline - now)
+                    .expect("admission gate poisoned");
+                st = guard;
+            }
+        }
+        st.active += 1;
+        st.high_water = st.high_water.max(st.active);
+        drop(st);
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        Some(GatePass { gate: self })
     }
 
     fn leave(&self) {
@@ -912,6 +943,51 @@ mod tests {
         assert_eq!(s.blocked, 1);
         assert_eq!(s.active, 0);
         assert_eq!(s.high_water, 1);
+    }
+
+    #[test]
+    fn gate_enter_until_gives_up_at_the_deadline() {
+        let gate = AdmissionGate::new(1);
+        let held = gate.enter();
+        // a full gate with an elapsed/near deadline must give up, fast,
+        // instead of parking forever like `enter`
+        let t = std::time::Instant::now();
+        let denied = gate.enter_until(Instant::now() + std::time::Duration::from_millis(20));
+        assert!(denied.is_none(), "no seat can free while `held` lives");
+        assert!(
+            t.elapsed() < std::time::Duration::from_secs(2),
+            "timed admission must not park past its deadline"
+        );
+        let s = gate.stats();
+        assert_eq!((s.admitted, s.rejected, s.blocked), (1, 1, 1));
+        drop(held);
+        // with a free seat, the timed path admits immediately
+        let pass = gate
+            .enter_until(Instant::now() + std::time::Duration::from_millis(1))
+            .expect("free seat admits before the deadline");
+        drop(pass);
+        let s = gate.stats();
+        assert_eq!((s.admitted, s.rejected), (2, 1));
+        assert_eq!(s.active, 0);
+    }
+
+    #[test]
+    fn gate_enter_until_admits_when_a_seat_frees_in_time() {
+        let gate = AdmissionGate::new(1);
+        let pass = gate.enter();
+        std::thread::scope(|scope| {
+            let waiter = scope.spawn(|| {
+                gate.enter_until(Instant::now() + std::time::Duration::from_secs(10))
+                    .expect("seat frees well before the deadline")
+            });
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            drop(pass);
+            let late = waiter.join().expect("waiter panicked");
+            drop(late);
+        });
+        let s = gate.stats();
+        assert_eq!((s.admitted, s.rejected, s.blocked), (2, 0, 1));
+        assert_eq!(s.active, 0);
     }
 
     #[test]

@@ -1,0 +1,431 @@
+//! End-to-end fault-tolerance: the serving stack under a deterministic
+//! [`FaultPlan`] — injected numeric failures on a Zipf replay degrade
+//! to the fallback chain with *zero* caller-visible errors and an exact
+//! fault ledger; reorderer panics are contained without poisoning any
+//! gate, pool, or cache; deadline budgets expire typed, stage-attributed,
+//! and fully reconciled; the quarantine circuit breaker trips, reroutes,
+//! and re-admits after its TTL.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use smr::collection::generate_mini_collection;
+use smr::collection::generators::pattern_population;
+use smr::coordinator::service::Backend;
+use smr::coordinator::{
+    FallbackCause, OverloadPolicy, RouterConfig, RouterError, ServeError, ServingConfig,
+    ServingEngine, ShardRouter,
+};
+use smr::dataset::{build_dataset, SweepConfig};
+use smr::ml::forest::{ForestParams, RandomForest};
+use smr::ml::normalize::{Method, Normalizer};
+use smr::ml::Classifier;
+use smr::reorder::ReorderAlgorithm;
+use smr::solver::{prepare, QuarantineConfig};
+use smr::util::deadline::{Deadline, Stage};
+use smr::util::faults::{Fault, FaultPlan};
+use smr::util::rng::{Rng, Zipf};
+
+fn trained_backend() -> Backend {
+    let coll = generate_mini_collection(3, 1);
+    let ds = build_dataset(&coll, &ReorderAlgorithm::LABEL_SET, &SweepConfig::default());
+    let normalizer = Normalizer::fit(Method::Standard, &ds.features());
+    let mut forest = RandomForest::new(
+        ForestParams {
+            n_estimators: 20,
+            ..Default::default()
+        },
+        7,
+    );
+    forest.fit(&normalizer.transform(&ds.features()), &ds.labels(), 4);
+    Backend::Forest { normalizer, forest }
+}
+
+/// A quarantine that never trips — replay tests that want the exact
+/// `fired faults == fallbacks` ledger without tombstone rerouting.
+fn no_quarantine() -> QuarantineConfig {
+    QuarantineConfig {
+        strikes: u32::MAX,
+        ttl: Duration::from_secs(3600),
+    }
+}
+
+fn downcast(err: &anyhow::Error) -> &ServeError {
+    err.downcast_ref::<ServeError>()
+        .expect("serving errors must be typed ServeError")
+}
+
+/// The acceptance replay: 400 Zipf requests over 24 patterns with 5% of
+/// them hit by an injected numeric failure on their first attempt. Not
+/// one request may error out — every faulted request is served by the
+/// fallback chain — and the ledger must reconcile exactly: each
+/// scheduled fault fires once and produces exactly one fallback hop.
+#[test]
+fn zipf_replay_with_numeric_faults_serves_every_request() {
+    const REQUESTS: u64 = 400;
+    let plan = Arc::new(FaultPlan::bernoulli(
+        0xFA_17,
+        REQUESTS,
+        0.05,
+        Stage::Numeric,
+        Fault::FailNumeric,
+    ));
+    let scheduled = plan.scheduled(Stage::Numeric);
+    assert!(!scheduled.is_empty(), "a 5% rate over 400 must fault some");
+
+    let engine = ServingEngine::spawn(
+        trained_backend(),
+        ServingConfig {
+            quarantine: no_quarantine(),
+            faults: Some(plan.clone()),
+            ..ServingConfig::default()
+        },
+    )
+    .unwrap();
+
+    let pop = pattern_population(24, 0xD1CE);
+    let zipf = Zipf::new(24, 1.1);
+    let mut rng = Rng::new(0x7AFF);
+    let mut degraded = 0u64;
+    for i in 0..REQUESTS {
+        let m = &pop[zipf.sample(&mut rng)];
+        // zero caller-visible errors: faulted or not, the request serves
+        let r = engine.serve(m).expect("no request may error out");
+        if scheduled.binary_search(&i).is_ok() {
+            degraded += 1;
+            assert!(
+                !r.fallbacks.is_empty(),
+                "request {i}: scheduled fault produced no fallback hop"
+            );
+            assert_eq!(r.fallbacks[0].cause, FallbackCause::Numeric);
+            assert_eq!(
+                r.fallbacks.last().unwrap().to,
+                r.algorithm,
+                "request {i}: chain tail must be the serving arm"
+            );
+            assert_ne!(
+                r.fallbacks[0].from, r.algorithm,
+                "request {i}: the faulted arm cannot be the serving arm"
+            );
+        } else {
+            assert!(
+                r.fallbacks.is_empty(),
+                "request {i}: clean request took a fallback hop"
+            );
+        }
+    }
+
+    let s = engine.stats();
+    assert_eq!(s.requests, REQUESTS);
+    assert_eq!(s.latency.e2e.count, REQUESTS, "every request was served");
+    assert_eq!(s.deadline_expired_total(), 0);
+    // the exact ledger: every scheduled fault fired (numeric faults are
+    // unconditional — no warm path skips them), and each fired fault is
+    // exactly one fallback hop; quarantine never engaged
+    assert_eq!(s.faults_fired, scheduled.len() as u64);
+    assert_eq!(s.fallbacks, s.faults_fired);
+    assert_eq!(s.plans.quarantine_skips, 0);
+    assert_eq!(s.plans.quarantined, 0);
+    assert_eq!(
+        s.fallbacks + s.plans.quarantine_skips,
+        degraded,
+        "degraded-routing ledger must reconcile against injected faults"
+    );
+    engine.shutdown();
+}
+
+/// A fallback-served request is bit-identical to computing with the
+/// fallback arm directly: same permutation as an offline compute, and
+/// the *next* clean request of the pattern re-serves the original arm.
+#[test]
+fn fallback_serves_are_bit_identical_to_direct_computes() {
+    let plan = FaultPlan::new().inject(0, Stage::Numeric, Fault::FailNumeric);
+    let cfg = ServingConfig {
+        quarantine: no_quarantine(),
+        faults: Some(Arc::new(plan)),
+        ..ServingConfig::default()
+    };
+    let engine = ServingEngine::spawn(trained_backend(), cfg.clone()).unwrap();
+    let m = &pattern_population(1, 0xBEE)[0];
+
+    let faulted = engine.serve(m).unwrap();
+    assert!(!faulted.fallbacks.is_empty());
+    let spd = prepare(m, &cfg.solver);
+    assert_eq!(
+        *faulted.permutation,
+        faulted.algorithm.compute(&spd, cfg.reorder_seed),
+        "fallback ordering must match the arm's direct offline compute"
+    );
+
+    // the fault was first-attempt-only: the next request runs the
+    // originally selected arm clean and serves without a hop
+    let clean = engine.serve(m).unwrap();
+    assert!(clean.fallbacks.is_empty());
+    assert_eq!(clean.algorithm, faulted.fallbacks[0].from);
+    assert_eq!(
+        *clean.permutation,
+        clean.algorithm.compute(&spd, cfg.reorder_seed)
+    );
+    engine.shutdown();
+}
+
+/// Concurrency hammer with injected reorderer panics, behind a real
+/// admission gate: panics are contained per attempt, every request is
+/// served, and afterward the gate sits at occupancy zero with nothing
+/// poisoned — follow-up traffic and stats calls all work.
+#[test]
+fn panicking_reorderer_never_poisons_gate_pool_or_cache() {
+    const REQUESTS: usize = 64;
+    const THREADS: usize = 4;
+    let plan = Arc::new(FaultPlan::bernoulli(
+        0xBAD,
+        REQUESTS as u64,
+        0.15,
+        Stage::Plan,
+        Fault::PanicAt,
+    ));
+    assert!(!plan.is_empty());
+    let backend = trained_backend();
+    let router = ShardRouter::spawn(
+        RouterConfig {
+            replicas: 1,
+            queue_depth: 2,
+            policy: OverloadPolicy::Block,
+            serving: ServingConfig {
+                quarantine: no_quarantine(),
+                faults: Some(plan.clone()),
+                ..ServingConfig::default()
+            },
+        },
+        |_| backend.clone(),
+    )
+    .unwrap();
+
+    let pop = pattern_population(6, 0xF00D);
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..THREADS {
+            let (router, pop, next) = (&router, &pop, &next);
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= REQUESTS {
+                    break;
+                }
+                router
+                    .serve(&pop[i % pop.len()])
+                    .expect("panic containment: no request may error out");
+            });
+        }
+    });
+
+    let s = router.stats();
+    assert_eq!(s.requests, REQUESTS as u64);
+    assert_eq!(s.served(), REQUESTS as u64);
+    let gate = router.gate(0).stats();
+    assert_eq!(gate.active, 0, "a contained panic leaked a gate seat");
+    assert_eq!(gate.admitted, REQUESTS as u64);
+    assert!(gate.high_water <= 2, "queue_depth bound violated");
+
+    let serving = &s.replicas[0].serving;
+    // a plan-stage panic only fires on the cold path (warm hits never
+    // reach the compute closure), so fired ≤ scheduled; each fired
+    // panic is exactly one fallback hop
+    assert!(serving.faults_fired <= plan.len() as u64);
+    assert_eq!(serving.fallbacks, serving.faults_fired);
+    // cache ledger intact: every lookup resolved (a poisoned shard or a
+    // leaked leader guard would have hung or panicked the hammer)
+    assert!(serving.plans.hits + serving.plans.misses >= REQUESTS as u64);
+
+    // the stack still serves clean traffic afterwards
+    for m in &pop {
+        let r = router.serve(m).expect("post-hammer serve failed");
+        assert!(r.report.fallbacks.is_empty(), "faults outlived their plan");
+    }
+    assert_eq!(router.gate(0).stats().active, 0);
+    router.shutdown();
+}
+
+/// Deadline expiries are typed, attributed to the stage that observed
+/// them, counted per stage, and reconcile exactly: every request either
+/// served or expired.
+#[test]
+fn deadline_expiry_attributes_stages_and_reconciles() {
+    // request 0 stalls before the plan stage, request 1 before numeric
+    let plan = FaultPlan::new()
+        .inject(0, Stage::Plan, Fault::Delay(Duration::from_millis(60)))
+        .inject(1, Stage::Numeric, Fault::Delay(Duration::from_millis(60)));
+    let engine = ServingEngine::spawn(
+        trained_backend(),
+        ServingConfig {
+            faults: Some(Arc::new(plan)),
+            ..ServingConfig::default()
+        },
+    )
+    .unwrap();
+    let pop = pattern_population(2, 0x0DD);
+
+    let err = engine
+        .serve_with_deadline(&pop[0], Some(Deadline::within(Duration::from_millis(20))))
+        .unwrap_err();
+    assert_eq!(
+        *downcast(&err),
+        ServeError::DeadlineExpired { stage: Stage::Plan }
+    );
+
+    let err = engine
+        .serve_with_deadline(&pop[1], Some(Deadline::within(Duration::from_millis(30))))
+        .unwrap_err();
+    assert_eq!(
+        *downcast(&err),
+        ServeError::DeadlineExpired {
+            stage: Stage::Numeric
+        }
+    );
+
+    // a roomy budget serves normally
+    let ok = engine
+        .serve_with_deadline(&pop[0], Some(Deadline::within(Duration::from_secs(60))))
+        .unwrap();
+    assert!(ok.fallbacks.is_empty());
+
+    let s = engine.stats();
+    assert_eq!(s.deadline_expired[Stage::Admission.index()], 0);
+    assert_eq!(s.deadline_expired[Stage::Plan.index()], 1);
+    assert_eq!(s.deadline_expired[Stage::Numeric.index()], 1);
+    assert_eq!(
+        s.latency.e2e.count + s.deadline_expired_total(),
+        s.requests,
+        "every request must be either served or a counted expiry"
+    );
+    engine.shutdown();
+}
+
+/// Admission-stage deadlines at the router: a caller parked outside a
+/// saturated `Block` gate gives up at its deadline with a typed,
+/// replica- and stage-attributed error; engine-stage expiries surface
+/// through the router with their attribution intact.
+#[test]
+fn router_admission_deadline_gives_up_typed_and_counted() {
+    let backend = trained_backend();
+    let router = ShardRouter::spawn(
+        RouterConfig {
+            replicas: 1,
+            queue_depth: 1,
+            policy: OverloadPolicy::Block,
+            serving: ServingConfig::default(),
+        },
+        |_| backend.clone(),
+    )
+    .unwrap();
+    let m = &pattern_population(1, 0xCAFE)[0];
+
+    // saturate the only seat, then arrive with a small budget
+    let held = router.gate(0).try_enter().expect("gate starts empty");
+    let err = router
+        .serve_with_deadline(m, Some(Deadline::within(Duration::from_millis(25))))
+        .unwrap_err();
+    match err {
+        RouterError::DeadlineExpired { replica, stage } => {
+            assert_eq!(replica, 0);
+            assert_eq!(stage, Stage::Admission);
+        }
+        other => panic!("expected an admission expiry, got {other}"),
+    }
+    drop(held);
+
+    // free gate + already-lapsed budget: admission succeeds instantly,
+    // the engine's plan checkpoint observes the expiry
+    let err = router
+        .serve_with_deadline(m, Some(Deadline::within(Duration::ZERO)))
+        .unwrap_err();
+    match err {
+        RouterError::DeadlineExpired { replica, stage } => {
+            assert_eq!(replica, 0);
+            assert_eq!(stage, Stage::Plan);
+        }
+        other => panic!("expected a plan-stage expiry, got {other}"),
+    }
+
+    // and a roomy deadline serves
+    router
+        .serve_with_deadline(m, Some(Deadline::within(Duration::from_secs(60))))
+        .expect("roomy deadline must serve");
+
+    let s = router.stats();
+    assert_eq!(s.deadline_expired, 1, "router counts admission give-ups");
+    assert_eq!(
+        s.deadline_expired_total(),
+        2,
+        "admission + engine expiries fold fleet-wide"
+    );
+    assert_eq!(router.gate(0).stats().active, 0);
+    router.shutdown();
+}
+
+/// The circuit breaker end to end: a key whose compute keeps failing is
+/// tombstoned after `strikes` failures, rerouted around without
+/// attempting (exact skip ledger), and re-admitted with a clean slate
+/// once the TTL lapses.
+#[test]
+fn quarantine_trips_reroutes_and_readmits_after_ttl() {
+    const FAULTED: u64 = 8;
+    let plan = Arc::new(FaultPlan::bernoulli(
+        1,
+        FAULTED,
+        1.0,
+        Stage::Numeric,
+        Fault::FailNumeric,
+    ));
+    assert_eq!(plan.len() as u64, FAULTED);
+    let engine = ServingEngine::spawn(
+        trained_backend(),
+        ServingConfig {
+            quarantine: QuarantineConfig {
+                strikes: 2,
+                ttl: Duration::from_millis(200),
+            },
+            faults: Some(plan.clone()),
+            ..ServingConfig::default()
+        },
+    )
+    .unwrap();
+    let m = &pattern_population(1, 0x9A9A)[0];
+
+    let mut selected = None;
+    for i in 0..FAULTED {
+        let r = engine.serve(m).expect("degraded, never failed");
+        assert!(!r.fallbacks.is_empty(), "request {i} took no hop");
+        let cause = r.fallbacks[0].cause;
+        if i < 2 {
+            // below the strike threshold the arm is still attempted
+            assert_eq!(cause, FallbackCause::Numeric, "request {i}");
+        } else {
+            // tombstoned: rerouted without attempting, fault never fires
+            assert_eq!(cause, FallbackCause::Quarantined, "request {i}");
+            assert!(r.plan_hit, "request {i}: fallback arm should be warm");
+        }
+        selected = Some(r.fallbacks[0].from);
+    }
+
+    let s = engine.stats();
+    assert_eq!(s.faults_fired, 2, "faults only fire on attempted arms");
+    assert_eq!(s.fallbacks, 2, "quarantine skips are not fallback events");
+    assert_eq!(s.plans.quarantined, 1, "one tombstone trip");
+    assert_eq!(s.plans.quarantine_skips, FAULTED - 2);
+    assert_eq!(
+        s.fallbacks + s.plans.quarantine_skips,
+        FAULTED,
+        "degraded-routing ledger must equal the injected faults"
+    );
+
+    // TTL lapse: the key is re-admitted and (faults exhausted) the
+    // originally selected arm serves clean again
+    std::thread::sleep(Duration::from_millis(250));
+    let recovered = engine.serve(m).expect("recovered key must serve");
+    assert!(recovered.fallbacks.is_empty(), "still rerouting after TTL");
+    assert_eq!(Some(recovered.algorithm), selected);
+    let s = engine.stats();
+    assert_eq!(s.plans.quarantine_skips, FAULTED - 2, "no new skips");
+    engine.shutdown();
+}

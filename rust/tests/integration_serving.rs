@@ -113,7 +113,7 @@ fn repeated_requests_are_deterministic_and_warm() {
 #[test]
 fn served_orderings_match_offline_computes() {
     let cfg = ServingConfig::default();
-    let engine = ServingEngine::spawn(trained_backend(), cfg).unwrap();
+    let engine = ServingEngine::spawn(trained_backend(), cfg.clone()).unwrap();
     for nm in generate_mini_collection(13, 1) {
         let r = engine.serve(&nm.matrix).unwrap();
         // the serving path orders the *prepared* matrix with the

@@ -1,0 +1,215 @@
+//! Property tests for the fault-tolerance primitives: seeded
+//! [`FaultPlan`] schedules, [`Deadline`] stage checkpoints, jittered
+//! exponential [`Backoff`], and the plan cache's quarantine circuit
+//! breaker. Everything here is seed-deterministic — no property ever
+//! flakes.
+
+use std::time::{Duration, Instant};
+
+use smr::collection::generators::pattern_population;
+use smr::reorder::ReorderAlgorithm;
+use smr::solver::{PlanCache, PlanKey, QuarantineConfig, SolverConfig};
+use smr::util::backoff::{Backoff, BackoffConfig};
+use smr::util::deadline::{Deadline, Stage};
+use smr::util::faults::{Fault, FaultPlan};
+
+// ---------------------------------------------------------------- faults
+
+#[test]
+fn bernoulli_schedules_replay_identically_across_seeds_and_rates() {
+    for seed in [1u64, 0xBEEF, 0x5EED_5EED] {
+        for rate in [0.01, 0.05, 0.25, 0.75] {
+            let a = FaultPlan::bernoulli(seed, 800, rate, Stage::Numeric, Fault::FailNumeric);
+            let b = FaultPlan::bernoulli(seed, 800, rate, Stage::Numeric, Fault::FailNumeric);
+            assert_eq!(
+                a.scheduled(Stage::Numeric),
+                b.scheduled(Stage::Numeric),
+                "seed {seed} rate {rate}: schedule not reproducible"
+            );
+            // every scheduled index is a real request index
+            assert!(a.scheduled(Stage::Numeric).iter().all(|&i| i < 800));
+            // the hit count tracks the rate (±6σ of Binomial(800, rate))
+            let n = a.len() as f64;
+            let mean = 800.0 * rate;
+            let sigma = (800.0 * rate * (1.0 - rate)).sqrt();
+            assert!(
+                (n - mean).abs() <= 6.0 * sigma + 1.0,
+                "seed {seed} rate {rate}: {n} faults vs expected {mean:.0}"
+            );
+        }
+    }
+}
+
+#[test]
+fn scheduled_indices_are_sorted_and_stage_scoped() {
+    let plan = FaultPlan::bernoulli(99, 300, 0.2, Stage::Plan, Fault::PanicAt);
+    let idx = plan.scheduled(Stage::Plan);
+    assert!(idx.windows(2).all(|w| w[0] < w[1]), "ascending and unique");
+    assert_eq!(idx.len(), plan.len());
+    assert!(plan.scheduled(Stage::Numeric).is_empty());
+    assert!(plan.scheduled(Stage::Admission).is_empty());
+    for &i in &idx {
+        assert_eq!(plan.at(i, Stage::Plan), Some(Fault::PanicAt));
+        assert_eq!(plan.at(i, Stage::Numeric), None);
+    }
+}
+
+#[test]
+fn explicit_injection_overrides_and_composes_with_bernoulli_lookups() {
+    let plan = FaultPlan::new()
+        .inject(7, Stage::Numeric, Fault::FailNumeric)
+        .inject(7, Stage::Numeric, Fault::PanicAt) // overwrite wins
+        .inject(7, Stage::Plan, Fault::Delay(Duration::from_millis(1)));
+    assert_eq!(plan.len(), 2, "same coordinate overwrites, not appends");
+    assert_eq!(plan.at(7, Stage::Numeric), Some(Fault::PanicAt));
+    assert_eq!(
+        plan.at(7, Stage::Plan),
+        Some(Fault::Delay(Duration::from_millis(1)))
+    );
+}
+
+// -------------------------------------------------------------- deadline
+
+#[test]
+fn deadline_checkpoints_attribute_the_querying_stage() {
+    let lapsed = Deadline::within(Duration::ZERO);
+    for stage in Stage::ALL {
+        assert_eq!(lapsed.check(stage), Err(stage), "expiry names its stage");
+    }
+    let roomy = Deadline::within(Duration::from_secs(3600));
+    for stage in Stage::ALL {
+        assert_eq!(roomy.check(stage), Ok(()));
+    }
+    assert!(lapsed.expired());
+    assert!(!roomy.expired());
+    assert!(roomy.remaining() <= Duration::from_secs(3600));
+    assert_eq!(lapsed.remaining(), Duration::ZERO, "remaining saturates");
+}
+
+#[test]
+fn stage_indices_are_dense_and_distinct() {
+    let mut seen = [false; 3];
+    for stage in Stage::ALL {
+        let i = stage.index();
+        assert!(i < 3);
+        assert!(!seen[i], "duplicate index {i}");
+        seen[i] = true;
+    }
+    assert!(seen.iter().all(|&s| s));
+    // an absolute-instant deadline agrees with the duration constructor
+    let at = Instant::now() + Duration::from_millis(50);
+    assert!(!Deadline::at(at).expired());
+}
+
+// --------------------------------------------------------------- backoff
+
+#[test]
+fn backoff_delays_replay_per_seed_and_respect_the_envelope() {
+    let cfg = BackoffConfig::default();
+    let mut a = Backoff::new(cfg, 0xACE);
+    let mut b = Backoff::new(cfg, 0xACE);
+    let mut c = Backoff::new(cfg, 0xACE + 1);
+    let mut c_diverged = false;
+    for k in 0..12u32 {
+        let d = a.next_delay();
+        assert_eq!(d, b.next_delay(), "attempt {k}: same seed, same delay");
+        if d != c.next_delay() {
+            c_diverged = true;
+        }
+        // the jittered delay stays inside [(1-jitter)·ideal, ideal]
+        let ideal = cfg
+            .max
+            .min(Duration::from_secs_f64(
+                cfg.base.as_secs_f64() * cfg.factor.powi(k as i32),
+            ));
+        let floor = ideal.as_secs_f64() * (1.0 - cfg.jitter);
+        let secs = d.as_secs_f64();
+        assert!(
+            secs <= ideal.as_secs_f64() + 1e-9,
+            "attempt {k}: {d:?} above ideal {ideal:?}"
+        );
+        assert!(
+            secs >= floor - 1e-9,
+            "attempt {k}: {d:?} below jitter floor {floor}"
+        );
+        assert!(secs <= cfg.max.as_secs_f64() + 1e-9, "attempt {k}: cap violated");
+    }
+    assert!(c_diverged, "different seeds never jittered apart");
+}
+
+#[test]
+fn backoff_reset_restores_the_schedule_head() {
+    let cfg = BackoffConfig {
+        jitter: 0.0, // deterministic delays: schedule position is visible
+        ..BackoffConfig::default()
+    };
+    let mut bo = Backoff::new(cfg, 9);
+    let first = bo.next_delay();
+    let second = bo.next_delay();
+    assert!(second > first, "exponential growth with jitter off");
+    assert_eq!(bo.attempt(), 2);
+    bo.reset();
+    assert_eq!(bo.attempt(), 0);
+    assert_eq!(bo.next_delay(), first, "reset restarts at the base delay");
+}
+
+// ------------------------------------------------------------ quarantine
+
+fn keys_for(algorithms: &[ReorderAlgorithm]) -> Vec<PlanKey> {
+    let pop = pattern_population(1, 0xFA17);
+    let solver = SolverConfig::default();
+    algorithms
+        .iter()
+        .map(|&alg| PlanKey::of(&pop[0], alg, 0xDA7A, &solver))
+        .collect()
+}
+
+#[test]
+fn quarantine_trips_on_exactly_the_kth_strike_for_any_k() {
+    for strikes in 1..=5u32 {
+        let cache = PlanCache::with_quarantine(
+            PlanCache::default_config(),
+            QuarantineConfig {
+                strikes,
+                ttl: Duration::from_secs(3600),
+            },
+        );
+        let key = keys_for(&[ReorderAlgorithm::Rcm])[0];
+        for s in 1..strikes {
+            assert!(!cache.report_failure(&key), "tripped early at strike {s}");
+            assert!(!cache.quarantined(&key), "tombstoned below threshold");
+        }
+        assert!(cache.report_failure(&key), "strike {strikes} must trip");
+        assert!(cache.quarantined(&key));
+        let st = cache.stats();
+        assert_eq!(st.quarantined, 1);
+        assert_eq!(st.quarantine_skips, 1, "one skip per quarantined() check");
+    }
+}
+
+#[test]
+fn quarantine_ledger_isolates_keys_and_ttl_readmits_with_a_clean_slate() {
+    let cache = PlanCache::with_quarantine(
+        PlanCache::default_config(),
+        QuarantineConfig {
+            strikes: 2,
+            ttl: Duration::from_millis(25),
+        },
+    );
+    let keys = keys_for(&[ReorderAlgorithm::Rcm, ReorderAlgorithm::Nd]);
+    // two strikes on keys[0]; keys[1] stays clean throughout
+    cache.report_failure(&keys[0]);
+    assert!(cache.report_failure(&keys[0]));
+    assert!(cache.quarantined(&keys[0]));
+    assert!(!cache.quarantined(&keys[1]), "sibling key tombstoned");
+    // TTL lapse: the key is re-admitted with a fresh strike budget
+    std::thread::sleep(Duration::from_millis(40));
+    assert!(!cache.quarantined(&keys[0]), "TTL lapse must re-admit");
+    assert!(
+        !cache.report_failure(&keys[0]),
+        "post-lapse strike budget must restart from zero"
+    );
+    let st = cache.stats();
+    assert_eq!(st.quarantined, 1);
+    assert_eq!(st.quarantine_skips, 1, "only the pre-lapse check skipped");
+}
